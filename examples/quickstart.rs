@@ -1,0 +1,53 @@
+//! Quickstart: the paper's pipeline in ~40 lines.
+//!
+//! Build a redundant ground set, run Algorithm 1 (submodular
+//! sparsification) to prune it, and lazy-greedy-maximize on the reduced set;
+//! compare against lazy greedy on the full set.
+//!
+//! Run: `cargo run --release --example quickstart`
+
+use submodular_ss::algorithms::{lazy_greedy, sparsify, CpuBackend, SsParams};
+use submodular_ss::submodular::{FeatureBased, SubmodularFn};
+use submodular_ss::util::rng::Rng;
+use submodular_ss::util::vecmath::FeatureMatrix;
+
+fn main() {
+    // A ground set with redundancy: 2000 items around 15 cluster centers.
+    let (n, d, clusters, k) = (2000usize, 64usize, 15usize, 20usize);
+    let mut rng = Rng::new(42);
+    let centers: Vec<Vec<f32>> = (0..clusters)
+        .map(|_| (0..d).map(|_| if rng.bool(0.3) { rng.f32() * 2.0 } else { 0.0 }).collect())
+        .collect();
+    let mut feats = FeatureMatrix::zeros(n, d);
+    for i in 0..n {
+        let c = &centers[i % clusters];
+        for j in 0..d {
+            feats.row_mut(i)[j] = (c[j] + 0.05 * rng.f32()).max(0.0);
+        }
+    }
+
+    // The paper's objective: f(S) = sum_j sqrt(c_j(S)).
+    let f = FeatureBased::sqrt(feats);
+    let all: Vec<usize> = (0..f.n()).collect();
+
+    // Baseline: lazy greedy on the full ground set.
+    let full = lazy_greedy(&f, &all, k);
+    println!("lazy greedy on |V| = {n}: f(S) = {:.3} ({} oracle calls, {:.3}s)",
+        full.value, full.oracle_calls, full.wall_s);
+
+    // Submodular sparsification (Algorithm 1), then greedy on V'.
+    let backend = CpuBackend::new(&f);
+    let ss = sparsify(&backend, &SsParams::default().with_seed(7));
+    println!(
+        "SS pruned {n} -> |V'| = {} in {} rounds ({} divergence evals, {:.3}s)",
+        ss.kept.len(), ss.rounds, ss.divergence_evals, ss.wall_s
+    );
+
+    let reduced = lazy_greedy(&f, &ss.kept, k);
+    println!("lazy greedy on V': f(S') = {:.3} ({} oracle calls, {:.3}s)",
+        reduced.value, reduced.oracle_calls, reduced.wall_s);
+    println!("relative utility f(S')/f(S) = {:.4}", reduced.value / full.value);
+
+    assert!(reduced.value / full.value > 0.9, "SS should preserve ≥90% utility here");
+    println!("quickstart OK");
+}

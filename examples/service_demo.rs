@@ -1,0 +1,103 @@
+//! **End-to-end driver** (DESIGN.md §5, EXPERIMENTS.md §E2E): the full
+//! three-layer stack on a realistic serving workload.
+//!
+//! * Layer 1/2: the AOT-compiled Pallas kernels (edge weights, singleton
+//!   complements, utility) loaded from `artifacts/` — built once by
+//!   `make artifacts`, Python not involved here.
+//! * Layer 3: the summarization service — bounded request queue, worker
+//!   threads, SS leader sharding divergence tiles through the shared PJRT
+//!   executor, lazy-greedy on the reduced set.
+//!
+//! A stream of daily-news summarization requests (varying n) is pushed
+//! through the service twice — CPU backend, then PJRT backend — and the
+//! demo reports per-request relative utility plus latency/throughput
+//! percentiles. Falls back to CPU-only if artifacts are missing.
+//!
+//! Run: `make artifacts && cargo run --release --example service_demo`
+
+
+use submodular_ss::algorithms::{lazy_greedy, SsParams};
+use submodular_ss::coordinator::{ServiceConfig, SummarizationService, SummarizeRequest};
+use submodular_ss::data::{CorpusParams, NewsGenerator};
+use submodular_ss::runtime;
+use submodular_ss::submodular::{FeatureBased, SubmodularFn};
+use submodular_ss::util::stats::{Samples, Timer};
+
+fn main() {
+    let requests = 10usize;
+    let seed = 11u64;
+    let generator = NewsGenerator::new(CorpusParams::default(), seed);
+
+    // pre-generate the workload (sizes 400..1600) and full-greedy references
+    println!("generating {requests} summarization requests...");
+    let days: Vec<_> = (0..requests)
+        .map(|i| generator.day(400 + (i * 133) % 1200, 0, seed + i as u64))
+        .collect();
+    let references: Vec<f64> = days
+        .iter()
+        .map(|d| {
+            let f = FeatureBased::sqrt(d.feats.clone());
+            let all: Vec<usize> = (0..f.n()).collect();
+            lazy_greedy(&f, &all, d.k).value
+        })
+        .collect();
+
+    let pjrt = match runtime::start_default(1) {
+        Ok((svc, rt)) => {
+            std::mem::forget(svc);
+            Some(rt)
+        }
+        Err(e) => {
+            eprintln!("PJRT unavailable ({e}); running CPU-only. Run `make artifacts` first.");
+            None
+        }
+    };
+
+    for (label, use_pjrt) in [("CPU backend", false), ("PJRT backend", true)] {
+        if use_pjrt && pjrt.is_none() {
+            continue;
+        }
+        println!("\n=== {label} ===");
+        let svc = SummarizationService::start(
+            ServiceConfig { workers: 2, queue_depth: 16, compute_threads: 2 },
+            pjrt.clone(),
+        );
+        let wall = Timer::new();
+        let tickets: Vec<_> = days
+            .iter()
+            .enumerate()
+            .map(|(i, day)| {
+                svc.submit(SummarizeRequest {
+                    feats: day.feats.clone(),
+                    k: day.k,
+                    params: SsParams::default().with_seed(seed + i as u64),
+                    use_pjrt,
+                })
+            })
+            .collect();
+        let mut latencies = Samples::new();
+        let mut rels = Samples::new();
+        for (i, t) in tickets.into_iter().enumerate() {
+            let r = t.wait().expect("request failed");
+            let rel = r.value / references[i];
+            latencies.push(r.latency_s);
+            rels.push(rel);
+            println!(
+                "req {i:>2}: n={:>5} |V'|={:>4} rel-utility={:.4} latency={:.3}s",
+                r.n, r.reduced, rel, r.latency_s
+            );
+        }
+        let total = wall.elapsed_s();
+        println!(
+            "throughput {:.2} req/s | latency p50 {:.3}s p95 {:.3}s | rel-utility median {:.4} min {:.4}",
+            requests as f64 / total,
+            latencies.percentile(50.0),
+            latencies.percentile(95.0),
+            rels.median(),
+            rels.percentile(0.0),
+        );
+        println!("{}", svc.metrics_json());
+        assert!(rels.percentile(0.0) > 0.85, "E2E quality floor violated");
+    }
+    println!("\nservice_demo OK — full stack (Pallas kernels via PJRT under a Rust coordinator) validated");
+}

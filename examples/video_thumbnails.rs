@@ -1,0 +1,57 @@
+//! Video thumbnailing — the paper's §4.3 workload on the SumMe-like
+//! synthetic substrate: select 15% of frames as a summary with each method,
+//! score F1/recall against the voted ground-truth reference and the 15
+//! simulated user summaries.
+//!
+//! Run: `cargo run --release --example video_thumbnails [-- <frames> <seed>]`
+
+use submodular_ss::data::video::{frame_f1_tol, reference_by_score, VideoParams};
+use submodular_ss::eval::video_eval::MATCH_TOL;
+use submodular_ss::eval::video_eval::run_video;
+
+fn main() {
+    let mut args = std::env::args().skip(1);
+    let frames: usize = args.next().and_then(|a| a.parse().ok()).unwrap_or(2500);
+    let seed: u64 = args.next().and_then(|a| a.parse().ok()).unwrap_or(3);
+
+    let rec = run_video("synthetic clip", frames, &VideoParams::default(), seed);
+    println!(
+        "video: {} frames, {} shots; k = 15% = {} frames",
+        frames,
+        rec.video.boundaries.len(),
+        (frames as f64 * 0.15) as usize
+    );
+
+    let reference = reference_by_score(&rec.video, 0.15);
+    println!("\nvs ground-truth-score reference (top 15% voted frames):");
+    println!("{:<12} {:>8} {:>8} {:>9} {:>9} {:>10}", "method", "F1", "recall", "rel_f", "time(s)", "workset");
+    for m in &rec.results {
+        let (f1, recall) = frame_f1_tol(&m.set, &reference, MATCH_TOL);
+        println!(
+            "{:<12} {:>8.3} {:>8.3} {:>9.4} {:>9.3} {:>10}",
+            m.method, f1, recall, m.rel_utility, m.time_s, m.working_set
+        );
+    }
+
+    println!("\nvs individual user summaries (avg over 15 users):");
+    for m in &rec.results {
+        let mut f1_sum = 0.0;
+        let mut rec_sum = 0.0;
+        for user in &rec.video.user_selections {
+            let (f1, r) = frame_f1_tol(&m.set, user, MATCH_TOL);
+            f1_sum += f1;
+            rec_sum += r;
+        }
+        let u = rec.video.user_selections.len() as f64;
+        println!("{:<12} avg F1 {:.3}  avg recall {:.3}", m.method, f1_sum / u, rec_sum / u);
+    }
+
+    let ss = &rec.results[2];
+    println!(
+        "\npaper shape check: SS pruned {} -> {} frames ({:.0}%), rel utility {:.4}",
+        frames,
+        ss.working_set,
+        100.0 * ss.working_set as f64 / frames as f64,
+        ss.rel_utility
+    );
+}

@@ -1,0 +1,5 @@
+"""Build-time compile path: JAX/Pallas authoring + AOT lowering to HLO text.
+
+Never imported at runtime; `make artifacts` runs `python -m compile.aot`
+once and the Rust binary is self-contained afterwards.
+"""

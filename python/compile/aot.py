@@ -1,0 +1,97 @@
+"""AOT lowering: JAX/Pallas graphs -> HLO text artifacts for the Rust runtime.
+
+Interchange format is HLO *text*, not a serialized HloModuleProto: jax >= 0.5
+emits protos with 64-bit instruction ids which the xla crate's bundled
+xla_extension 0.5.1 rejects (``proto.id() <= INT_MAX``). The text parser
+reassigns ids and round-trips cleanly (see /opt/xla-example/README.md).
+
+Usage:
+    python -m compile.aot --out-dir ../artifacts [--p 32 --b 256 --d 256]
+
+Emits one ``<name>.hlo.txt`` per artifact plus ``manifest.json`` describing
+shapes, so the Rust runtime can validate its padding contract at load time.
+Runs a numeric self-check of every graph against the pure-jnp oracle before
+writing anything.
+"""
+
+import argparse
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax._src.lib import xla_client as xc
+
+from . import model
+from .kernels import ref
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO -> XlaComputation -> HLO text (the 0.5.1-safe path)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def self_check(p, b, d, rtol=1e-5, atol=1e-5):
+    """Run every graph on random data and compare to the oracle."""
+    rng = np.random.default_rng(0)
+    u = jnp.asarray(rng.uniform(0, 3, (p, d)), jnp.float32)
+    v = jnp.asarray(rng.uniform(0, 3, (b, d)), jnp.float32)
+    s = jnp.asarray(rng.uniform(0, 1, (p,)), jnp.float32)
+    cov = jnp.asarray(rng.uniform(0, 5, (d,)), jnp.float32)
+    total = jnp.sum(v, axis=0) + cov  # ensure total >= any row
+    mask = jnp.asarray(rng.integers(0, 2, (b,)), jnp.float32)
+
+    checks = {
+        "edge_weights": (model.edge_weights_graph(u, s, v)[0], ref.edge_weights_ref(u, s, v)),
+        "marginal_gains": (model.marginal_gains_graph(cov, v)[0], ref.marginal_gains_ref(cov, v)),
+        "singleton": (model.singleton_graph(total, v)[0], ref.singleton_complement_ref(total, v)),
+        "ss_round": (model.ss_round_graph(u, s, v)[0], ref.edge_weights_ref(u, s, v)),
+        "utility": (
+            model.utility_graph(v, mask)[0],
+            jnp.sum(jnp.sqrt(jnp.sum(v * mask[:, None], axis=0)), keepdims=True),
+        ),
+    }
+    for name, (got, want) in checks.items():
+        np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=rtol, atol=atol)
+        print(f"  self-check {name}: OK ({np.asarray(got).shape})")
+
+
+def main():
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out-dir", default="../artifacts")
+    ap.add_argument("--p", type=int, default=32, help="probes per tile")
+    ap.add_argument("--b", type=int, default=256, help="items per tile")
+    ap.add_argument("--d", type=int, default=256, help="feature dims")
+    ap.add_argument("--skip-check", action="store_true")
+    args = ap.parse_args()
+
+    if not args.skip_check:
+        print("running numeric self-checks (pallas interpret vs jnp oracle)...")
+        self_check(args.p, args.b, args.d)
+
+    os.makedirs(args.out_dir, exist_ok=True)
+    manifest = {"p": args.p, "b": args.b, "d": args.d, "dtype": "f32", "artifacts": {}}
+    for name, fn, example in model.artifact_specs(args.p, args.b, args.d):
+        lowered = jax.jit(fn).lower(*example)
+        text = to_hlo_text(lowered)
+        path = os.path.join(args.out_dir, f"{name}.hlo.txt")
+        with open(path, "w") as f:
+            f.write(text)
+        manifest["artifacts"][name] = {
+            "file": f"{name}.hlo.txt",
+            "inputs": [list(a.shape) for a in example],
+            "chars": len(text),
+        }
+        print(f"wrote {path} ({len(text)} chars)")
+    with open(os.path.join(args.out_dir, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=2)
+    print(f"wrote {os.path.join(args.out_dir, 'manifest.json')}")
+
+
+if __name__ == "__main__":
+    main()

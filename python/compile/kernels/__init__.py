@@ -1,0 +1,15 @@
+"""Layer-1 Pallas kernels for the SS pipeline hot loops.
+
+Three kernels cover everything the Rust coordinator dispatches to PJRT:
+
+* edge_weight    -- w_{U,v} divergences (Algorithm 1, line 9)
+* marginal_gain  -- f(v|S) batches (greedy steps)
+* singleton      -- f(v|V\\v) precompute (used in every edge weight)
+
+`ref` holds the pure-jnp oracles the kernels are tested against.
+"""
+
+from . import ref  # noqa: F401
+from .edge_weight import edge_weights, P, B, D, BLOCK_B  # noqa: F401
+from .marginal_gain import marginal_gains  # noqa: F401
+from .singleton import singleton_complement  # noqa: F401

@@ -1,0 +1,89 @@
+"""Layer-1 Pallas kernel: submodularity-graph divergences w_{U,v}.
+
+This is the hot spot of Algorithm 1 (Submodular Sparsification): each round
+computes, for every remaining item v, the divergence
+
+    w_{U,v} = min_{u in U} [ f(v|u) - f(u|V\\u) ]
+
+against the freshly sampled probe set U. For the paper's feature-based
+objective f(S) = sum_d g(c_d(S)) the pairwise gain is
+
+    f(v|u) = sum_d [ g(u_d + v_d) - g(u_d) ],
+
+so the whole round is a (B x P x D) broadcast-reduce followed by a min over
+the probe axis — structurally a "soft distance matrix" kernel.
+
+TPU mapping (see DESIGN.md §Hardware-Adaptation): the grid walks item blocks
+of shape (BLOCK_B, D); the probe tile (P, D) and singleton vector (P,) use a
+constant index_map so Pallas keeps them resident in VMEM across the whole
+grid — the analogue of staging into CUDA shared memory. The (BLOCK_B, P, D)
+intermediate lives in registers/VMEM of one grid step; the min over P never
+leaves the block. There is no matmul, so the kernel is VPU-bound; BLOCK_B is
+chosen so the block footprint stays ~1 MB (far under the ~16 MB VMEM budget):
+    P*D + BLOCK_B*D + BLOCK_B*P + BLOCK_B  f32 words.
+
+interpret=True everywhere: the CPU PJRT plugin cannot execute Mosaic
+custom-calls; numerics are validated through this path and real-TPU perf is
+estimated analytically in DESIGN.md.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from .ref import CONCAVE
+
+# Default tile geometry; aot.py compiles artifacts at these shapes and the
+# Rust runtime pads up to them. Chosen for VMEM fit + lane alignment (128).
+P = 32  # probes per tile
+B = 256  # items per call
+D = 256  # feature dims (datasets are feature-hashed to D)
+BLOCK_B = 128  # items per grid step
+
+
+def _edge_weight_kernel(u_ref, s_ref, v_ref, o_ref, *, g):
+    """One grid step: divergences for a (BLOCK_B, D) item block."""
+    gfun = CONCAVE[g]
+    u = u_ref[...]  # (P, D) probe tile, VMEM-resident across grid
+    s = s_ref[...]  # (P,)  f(u|V\u) per probe
+    v = v_ref[...]  # (BLOCK_B, D) item block for this step
+    # (BLOCK_B, P, D) broadcast; reduce D -> pairwise gains f(v|u).
+    pair = gfun(v[:, None, :] + u[None, :, :]) - gfun(u)[None, :, :]
+    gains = jnp.sum(pair, axis=-1)  # (BLOCK_B, P)
+    w = gains - s[None, :]  # w_{uv} = f(v|u) - f(u|V\u)
+    o_ref[...] = jnp.min(w, axis=1)  # divergence w_{U,v}
+
+
+@functools.partial(jax.jit, static_argnames=("g", "block_b"))
+def edge_weights(u_feat, u_sing, v_feat, g="sqrt", block_b=None):
+    """Divergences w_{U,v} for a padded item batch.
+
+    u_feat: (P, D), u_sing: (P,), v_feat: (B, D) with B % block_b == 0.
+    Padding contract (the Rust runtime relies on this):
+      * pad probe rows with zeros and their u_sing with -1e30 → the padded
+        lane's weight is ≈ +1e30 and never wins the min;
+      * pad feature dims with zeros → g(0+x) - g(0) contributes g(x) for
+        g=sqrt only when x>0, so items must also be zero-padded there (they
+        are: both sides share the same hashed feature space);
+      * pad item rows arbitrarily → caller discards those outputs.
+    """
+    b, d = v_feat.shape
+    p = u_feat.shape[0]
+    if block_b is None:  # largest default block that tiles B exactly
+        block_b = BLOCK_B if b % BLOCK_B == 0 else b
+    assert b % block_b == 0, f"B={b} must be a multiple of block_b={block_b}"
+    grid = (b // block_b,)
+    return pl.pallas_call(
+        functools.partial(_edge_weight_kernel, g=g),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((p, d), lambda i: (0, 0)),  # probes: resident
+            pl.BlockSpec((p,), lambda i: (0,)),  # singletons: resident
+            pl.BlockSpec((block_b, d), lambda i: (i, 0)),  # item block
+        ],
+        out_specs=pl.BlockSpec((block_b,), lambda i: (i,)),
+        out_shape=jax.ShapeDtypeStruct((b,), v_feat.dtype),
+        interpret=True,
+    )(u_feat, u_sing, v_feat)

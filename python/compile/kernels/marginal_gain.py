@@ -1,0 +1,55 @@
+"""Layer-1 Pallas kernel: batched marginal gains f(v|S).
+
+Each greedy step needs f(v|S) = sum_d [ g(c_d + v_d) - g(c_d) ] for every
+candidate v, where c = c(S) is the solution's accumulated feature mass. This
+is the per-step hot loop of the (lazy) greedy algorithm when run in
+"accelerated" mode through the PJRT runtime.
+
+The grid walks (BLOCK_B, D) item blocks; the coverage vector (D,) is
+VMEM-resident across the grid (constant index_map). The per-block footprint
+is BLOCK_B*D + D + BLOCK_B f32 words — trivially VMEM-fit; the kernel is
+bandwidth-bound on the item stream, which is exactly the structure a TPU
+wants (stream HBM → VMEM blocks, VPU element-wise + lane reduction).
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from .ref import CONCAVE
+from .edge_weight import B, D, BLOCK_B  # shared tile geometry
+
+
+def _marginal_gain_kernel(c_ref, v_ref, o_ref, *, g):
+    gfun = CONCAVE[g]
+    c = c_ref[...]  # (D,) coverage c(S), resident
+    v = v_ref[...]  # (BLOCK_B, D) candidates
+    o_ref[...] = jnp.sum(gfun(c[None, :] + v) - gfun(c)[None, :], axis=-1)
+
+
+@functools.partial(jax.jit, static_argnames=("g", "block_b"))
+def marginal_gains(cov, v_feat, g="sqrt", block_b=None):
+    """f(v|S) for every row of ``v_feat`` (B, D); ``cov`` is c(S) of shape (D,).
+
+    B must be a multiple of ``block_b``; padded item rows produce garbage the
+    caller discards (zero rows produce gain 0, which is also safe for argmax
+    because real gains are >= 0 and ties resolve to real indices first in the
+    Rust runtime).
+    """
+    b, d = v_feat.shape
+    if block_b is None:  # largest default block that tiles B exactly
+        block_b = BLOCK_B if b % BLOCK_B == 0 else b
+    assert b % block_b == 0, f"B={b} must be a multiple of block_b={block_b}"
+    return pl.pallas_call(
+        functools.partial(_marginal_gain_kernel, g=g),
+        grid=(b // block_b,),
+        in_specs=[
+            pl.BlockSpec((d,), lambda i: (0,)),
+            pl.BlockSpec((block_b, d), lambda i: (i, 0)),
+        ],
+        out_specs=pl.BlockSpec((block_b,), lambda i: (i,)),
+        out_shape=jax.ShapeDtypeStruct((b,), v_feat.dtype),
+        interpret=True,
+    )(cov, v_feat)

@@ -1,0 +1,66 @@
+"""Pure-jnp oracle for the Layer-1 Pallas kernels.
+
+All three hot-loop computations of the SS pipeline are defined here in plain
+jax.numpy, with no Pallas, no tiling and no padding tricks. The Pallas
+kernels in this package must agree with these to float32 tolerance; pytest +
+hypothesis enforce that at build time (python/tests/test_kernel.py).
+
+Objective: the paper's feature-based submodular function
+
+    f(S) = sum_j g(c_j(S)),   c_j(S) = sum_{v in S} w_{vj},  g concave.
+
+The paper uses g = sqrt; log1p is provided as an extension (the analysis only
+needs concavity + normalization g(0) = 0).
+"""
+
+import jax.numpy as jnp
+
+# Concave scalarizers g. Each maps non-negative modular mass to utility.
+CONCAVE = {
+    "sqrt": jnp.sqrt,
+    "log1p": jnp.log1p,
+}
+
+
+def feature_utility(feats, g="sqrt"):
+    """f(S) for a stacked feature matrix ``feats`` of shape (|S|, D)."""
+    return jnp.sum(CONCAVE[g](jnp.sum(feats, axis=0)))
+
+
+def marginal_gains_ref(cov, v_feat, g="sqrt"):
+    """f(v|S) for every row v of ``v_feat`` given coverage ``cov = c(S)``.
+
+    cov: (D,) non-negative accumulated feature mass of the current solution.
+    v_feat: (B, D) candidate features.
+    returns: (B,) gains  sum_d [ g(cov_d + v_d) - g(cov_d) ].
+    """
+    gfun = CONCAVE[g]
+    return jnp.sum(gfun(cov[None, :] + v_feat) - gfun(cov)[None, :], axis=-1)
+
+
+def singleton_complement_ref(total, v_feat, g="sqrt"):
+    """f(v | V \\ v) for every row v, given ``total = c(V)``.
+
+    By definition f(v|V\\v) = f(V) - f(V\\v) = sum_d [ g(t_d) - g(t_d - v_d) ].
+    The subtraction is clamped at 0 to absorb float round-off when v's mass
+    nearly equals the total in some dimension.
+    """
+    gfun = CONCAVE[g]
+    rem = jnp.maximum(total[None, :] - v_feat, 0.0)
+    return jnp.sum(gfun(total)[None, :] - gfun(rem), axis=-1)
+
+
+def edge_weights_ref(u_feat, u_sing, v_feat, g="sqrt"):
+    """Submodularity-graph divergences w_{U,v} = min_u [ f(v|u) - f(u|V\\u) ].
+
+    u_feat: (P, D) probe features, u_sing: (P,) precomputed f(u|V\\u),
+    v_feat: (B, D) remaining items. Returns (B,) divergences.
+
+    f(v|u) = sum_d [ g(u_d + v_d) - g(u_d) ]  (marginal gain of v on {u}).
+    """
+    gfun = CONCAVE[g]
+    # (B, P, D) broadcast-reduce; the Pallas kernel tiles this.
+    pair = gfun(v_feat[:, None, :] + u_feat[None, :, :]) - gfun(u_feat)[None, :, :]
+    gains = jnp.sum(pair, axis=-1)  # (B, P) = f(v|u)
+    w = gains - u_sing[None, :]  # (B, P) = w_{uv}
+    return jnp.min(w, axis=1)

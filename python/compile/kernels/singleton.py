@@ -1,0 +1,51 @@
+"""Layer-1 Pallas kernel: singleton-complement gains f(v|V\\v).
+
+SS precomputes f(u|V\\u) once, in linear time, before the pruning rounds
+(Algorithm 1 line 9 uses it inside every edge weight). For the feature-based
+objective:
+
+    f(v|V\\v) = f(V) - f(V\\v) = sum_d [ g(t_d) - g(t_d - v_d) ],
+
+with t = c(V) the total feature mass. Same grid structure as the marginal
+gain kernel: (BLOCK_B, D) item blocks streamed against a VMEM-resident (D,)
+total vector. The subtraction is clamped at zero: in exact arithmetic
+t_d - v_d >= 0, but the Rust runtime accumulates t in f32 so round-off can
+push it a ULP under zero which would NaN under sqrt.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from .ref import CONCAVE
+from .edge_weight import B, D, BLOCK_B  # shared tile geometry
+
+
+def _singleton_kernel(t_ref, v_ref, o_ref, *, g):
+    gfun = CONCAVE[g]
+    t = t_ref[...]  # (D,) total mass c(V), resident
+    v = v_ref[...]  # (BLOCK_B, D)
+    rem = jnp.maximum(t[None, :] - v, 0.0)
+    o_ref[...] = jnp.sum(gfun(t)[None, :] - gfun(rem), axis=-1)
+
+
+@functools.partial(jax.jit, static_argnames=("g", "block_b"))
+def singleton_complement(total, v_feat, g="sqrt", block_b=None):
+    """f(v|V\\v) for every row of ``v_feat`` (B, D); ``total`` = c(V), (D,)."""
+    b, d = v_feat.shape
+    if block_b is None:  # largest default block that tiles B exactly
+        block_b = BLOCK_B if b % BLOCK_B == 0 else b
+    assert b % block_b == 0, f"B={b} must be a multiple of block_b={block_b}"
+    return pl.pallas_call(
+        functools.partial(_singleton_kernel, g=g),
+        grid=(b // block_b,),
+        in_specs=[
+            pl.BlockSpec((d,), lambda i: (0,)),
+            pl.BlockSpec((block_b, d), lambda i: (i, 0)),
+        ],
+        out_specs=pl.BlockSpec((block_b,), lambda i: (i,)),
+        out_shape=jax.ShapeDtypeStruct((b,), v_feat.dtype),
+        interpret=True,
+    )(total, v_feat)

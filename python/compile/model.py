@@ -1,0 +1,68 @@
+"""Layer-2 JAX compute graphs for the SS pipeline.
+
+Each public function here is a jit-able graph that the AOT step
+(``python -m compile.aot``) lowers to HLO text for the Rust runtime. The
+graphs call the Layer-1 Pallas kernels, so kernel and surrounding glue lower
+into one HLO module per artifact.
+
+Artifacts (all float32, shapes fixed at AOT time; Rust pads up):
+
+* ``edge_weights``      (P,D),(P,),(B,D) -> (B,)   divergences w_{U,v}
+* ``marginal_gains``    (D,),(B,D)       -> (B,)   f(v|S) batch
+* ``singleton``         (D,),(B,D)       -> (B,)   f(v|V\\v) batch
+* ``ss_round``          (P,D),(P,),(B,D) -> (B,),(1,)  fused round: divergences
+                         plus the block-min (used by the coordinator to cheap-
+                         check degenerate rounds without a second pass)
+* ``utility``           (B,D),(B,)       -> (1,)   masked f(S) evaluation
+
+The fused ``ss_round`` exists for dispatch amortization (DESIGN.md §Perf):
+one PJRT call per item tile per round instead of two.
+"""
+
+import jax
+import jax.numpy as jnp
+
+from .kernels import edge_weights, marginal_gains, singleton_complement
+from .kernels.ref import CONCAVE
+
+
+def edge_weights_graph(u_feat, u_sing, v_feat):
+    """Divergence graph — thin wrapper so the artifact is a 1-tuple."""
+    return (edge_weights(u_feat, u_sing, v_feat),)
+
+
+def marginal_gains_graph(cov, v_feat):
+    return (marginal_gains(cov, v_feat),)
+
+
+def singleton_graph(total, v_feat):
+    return (singleton_complement(total, v_feat),)
+
+
+def ss_round_graph(u_feat, u_sing, v_feat):
+    """Fused SS round step: divergences + their block minimum."""
+    w = edge_weights(u_feat, u_sing, v_feat)
+    return (w, jnp.min(w, keepdims=True))
+
+
+def utility_graph(v_feat, mask, g="sqrt"):
+    """Masked objective evaluation f({v : mask_v = 1}).
+
+    Used by the service to score final summaries on-device. mask is f32
+    (0.0/1.0) so the whole graph stays in one dtype.
+    """
+    cov = jnp.sum(v_feat * mask[:, None], axis=0)
+    return (jnp.sum(CONCAVE[g](cov), keepdims=True),)
+
+
+# (name, fn, example-arg builder) — consumed by aot.py and tests.
+def artifact_specs(p, b, d):
+    f32 = jnp.float32
+    s = jax.ShapeDtypeStruct
+    return [
+        ("edge_weights", edge_weights_graph, (s((p, d), f32), s((p,), f32), s((b, d), f32))),
+        ("marginal_gains", marginal_gains_graph, (s((d,), f32), s((b, d), f32))),
+        ("singleton", singleton_graph, (s((d,), f32), s((b, d), f32))),
+        ("ss_round", ss_round_graph, (s((p, d), f32), s((p,), f32), s((b, d), f32))),
+        ("utility", utility_graph, (s((b, d), f32), s((b,), f32))),
+    ]

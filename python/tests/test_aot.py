@@ -1,0 +1,55 @@
+"""AOT emission tests: HLO text is parseable-looking, manifest is coherent.
+
+These run the same lowering path as `make artifacts` at a small geometry so
+they are fast, and additionally validate the real artifacts/ directory when
+it exists (post-`make artifacts` in CI order).
+"""
+
+import json
+import os
+
+import jax
+
+from compile import aot, model
+
+ART = os.path.join(os.path.dirname(__file__), "..", "..", "artifacts")
+
+
+def test_to_hlo_text_emits_entry_computation():
+    specs = model.artifact_specs(4, 8, 16)
+    for name, fn, example in specs:
+        text = aot.to_hlo_text(jax.jit(fn).lower(*example))
+        assert "HloModule" in text, name
+        assert "ENTRY" in text, name
+        # f32 I/O as the runtime expects
+        assert "f32[" in text, name
+
+
+def test_self_check_small_geometry():
+    aot.self_check(4, 8, 16)
+
+
+def test_manifest_matches_artifacts_on_disk():
+    if not os.path.exists(os.path.join(ART, "manifest.json")):
+        import pytest
+
+        pytest.skip("artifacts/ not built yet (run `make artifacts`)")
+    with open(os.path.join(ART, "manifest.json")) as f:
+        manifest = json.load(f)
+    assert manifest["dtype"] == "f32"
+    assert set(manifest["artifacts"]) == {
+        "edge_weights",
+        "marginal_gains",
+        "singleton",
+        "ss_round",
+        "utility",
+    }
+    p, b, d = manifest["p"], manifest["b"], manifest["d"]
+    assert manifest["artifacts"]["edge_weights"]["inputs"] == [[p, d], [p], [b, d]]
+    for meta in manifest["artifacts"].values():
+        path = os.path.join(ART, meta["file"])
+        assert os.path.exists(path)
+        with open(path) as f:
+            text = f.read()
+        assert len(text) == meta["chars"]
+        assert text.startswith("HloModule")

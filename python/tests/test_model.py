@@ -1,0 +1,65 @@
+"""Layer-2 graph tests: shapes, fusion outputs, artifact spec consistency."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from compile import model
+from compile.kernels import ref
+
+P, B, D = 8, 16, 32  # small geometry for graph tests
+
+
+def _data(seed=0):
+    rng = np.random.default_rng(seed)
+    u = jnp.asarray(rng.uniform(0, 3, (P, D)), jnp.float32)
+    v = jnp.asarray(rng.uniform(0, 3, (B, D)), jnp.float32)
+    s = jnp.asarray(rng.uniform(0, 1, (P,)), jnp.float32)
+    return u, s, v
+
+
+def test_ss_round_fuses_min():
+    u, s, v = _data()
+    w, wmin = model.ss_round_graph(u, s, v)
+    assert w.shape == (B,) and wmin.shape == (1,)
+    np.testing.assert_allclose(float(wmin[0]), float(jnp.min(w)), rtol=1e-6)
+    np.testing.assert_allclose(
+        np.asarray(w), np.asarray(ref.edge_weights_ref(u, s, v)), rtol=1e-4, atol=1e-4
+    )
+
+
+@settings(max_examples=20, deadline=None)
+@given(st.integers(0, 2**32 - 1))
+def test_utility_graph_matches_masked_oracle(seed):
+    rng = np.random.default_rng(seed)
+    v = jnp.asarray(rng.uniform(0, 3, (B, D)), jnp.float32)
+    mask = jnp.asarray(rng.integers(0, 2, (B,)), jnp.float32)
+    (got,) = model.utility_graph(v, mask)
+    rows = np.asarray(v)[np.asarray(mask) > 0.5]
+    want = np.sum(np.sqrt(np.sum(rows, axis=0))) if rows.size else 0.0
+    np.testing.assert_allclose(float(got[0]), float(want), rtol=1e-5, atol=1e-5)
+
+
+def test_utility_empty_mask_is_zero():
+    """f(empty) = 0 — normalization the paper's bounds require."""
+    v = jnp.ones((B, D), jnp.float32)
+    (got,) = model.utility_graph(v, jnp.zeros((B,), jnp.float32))
+    assert float(got[0]) == 0.0
+
+
+def test_artifact_specs_shapes():
+    specs = model.artifact_specs(4, 8, 16)
+    names = [n for n, _, _ in specs]
+    assert names == ["edge_weights", "marginal_gains", "singleton", "ss_round", "utility"]
+    for name, fn, example in specs:
+        out = jax.eval_shape(fn, *example)
+        assert isinstance(out, tuple) and len(out) >= 1
+        assert out[0].shape[0] == 8 or name == "utility"
+
+
+def test_all_graphs_lower_to_stablehlo():
+    """Every artifact graph must lower (the AOT precondition)."""
+    for name, fn, example in model.artifact_specs(4, 8, 16):
+        ir = jax.jit(fn).lower(*example).compiler_ir("stablehlo")
+        assert "func.func" in str(ir), name

@@ -1,0 +1,15 @@
+//! Ablations: §3.4 improvements (importance sampling, Wei-prune pre-pass,
+//! bidirectional-greedy post-reduction) and the c-sweep tradeoff.
+
+use submodular_ss::bench::full_scale;
+use submodular_ss::eval::ablation;
+
+fn main() {
+    let n = if full_scale() { 6000 } else { 1200 };
+    let v = ablation::ablation_variants(n, 10);
+    v.print();
+    v.save("ablation_variants.json");
+    let c = ablation::ablation_c_sweep(n, 10);
+    c.print();
+    c.save("ablation_c_sweep.json");
+}

@@ -1,0 +1,17 @@
+//! Reproduces paper Figure 1: utility f(S) and time vs data size n for lazy
+//! greedy, sieve-streaming (50k memory) and SS+lazy-greedy.
+//! CI scale by default; SS_FULL=1 runs the paper's n ∈ [2000, 20000].
+
+use submodular_ss::bench::full_scale;
+use submodular_ss::eval::news;
+
+fn main() {
+    let sizes: Vec<usize> = if full_scale() {
+        vec![2000, 4000, 8000, 12000, 16000, 20000]
+    } else {
+        vec![500, 1000, 2000, 4000]
+    };
+    let t = news::fig1(&sizes, 1);
+    t.print();
+    t.save("fig1.json");
+}

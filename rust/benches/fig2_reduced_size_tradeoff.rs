@@ -1,0 +1,12 @@
+//! Reproduces paper Figure 2: relative utility and SS time against |V'|,
+//! swept via r ∈ {2,4,…,20} with c = 8 (the paper's exact sweep).
+
+use submodular_ss::bench::full_scale;
+use submodular_ss::eval::news;
+
+fn main() {
+    let n = if full_scale() { 10000 } else { 1500 };
+    let t = news::fig2(n, 2);
+    t.print();
+    t.save("fig2.json");
+}

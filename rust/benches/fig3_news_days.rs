@@ -1,0 +1,14 @@
+//! Reproduces paper Figure 3: distribution of relative utility, ROUGE-2 and
+//! F1 across a stream of news days (paper: 3823 NYT days; here a synthetic
+//! stream — 20 days CI / 200 days SS_FULL).
+
+use submodular_ss::bench::full_scale;
+use submodular_ss::eval::news;
+
+fn main() {
+    let (days, hi) = if full_scale() { (200, 8000) } else { (20, 1500) };
+    let records = news::run_days(days, 300, hi, 3);
+    let t = news::fig3(&records);
+    t.print();
+    t.save("fig3.json");
+}

@@ -1,0 +1,13 @@
+//! Reproduces paper Figure 4: per-day (n, time) scatter with relative
+//! utility annotation, across the news stream.
+
+use submodular_ss::bench::full_scale;
+use submodular_ss::eval::news;
+
+fn main() {
+    let (days, hi) = if full_scale() { (200, 8000) } else { (15, 2000) };
+    let records = news::run_days(days, 300, hi, 4);
+    let t = news::fig4(&records);
+    t.print();
+    t.save("fig4.json");
+}

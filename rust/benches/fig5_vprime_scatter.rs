@@ -1,0 +1,12 @@
+//! Reproduces paper Figure 5: SS relative utility against (n, |V'|) per day.
+
+use submodular_ss::bench::full_scale;
+use submodular_ss::eval::news;
+
+fn main() {
+    let (days, hi) = if full_scale() { (200, 8000) } else { (15, 2000) };
+    let records = news::run_days(days, 300, hi, 5);
+    let t = news::fig5(&records);
+    t.print();
+    t.save("fig5.json");
+}

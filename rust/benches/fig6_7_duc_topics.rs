@@ -1,0 +1,15 @@
+//! Reproduces paper Figures 6 and 7: DUC-like topic-set summarization stats
+//! against 400-word (Fig 6) and 200-word (Fig 7) references (paper: 60 sets).
+
+use submodular_ss::bench::full_scale;
+use submodular_ss::eval::duc;
+
+fn main() {
+    let (sets, n) = if full_scale() { (60, 800) } else { (8, 250) };
+    let f6 = duc::fig67(sets, n, 400, 6);
+    f6.print();
+    f6.save("fig6.json");
+    let f7 = duc::fig67(sets, n, 200, 6);
+    f7.print();
+    f7.save("fig7.json");
+}

@@ -1,0 +1,23 @@
+//! Reproduces paper Figures 8–11: video-summary F1/recall against
+//! ground-truth-score references of varying size (8/9) and against the 15
+//! per-user summaries (10/11), plus the "first 15% frames" control.
+
+use submodular_ss::bench::full_scale;
+use submodular_ss::data::video::{summe_suite, VideoParams};
+use submodular_ss::eval::video_eval;
+
+fn main() {
+    let params = VideoParams::default();
+    let suite: Vec<(String, usize)> = summe_suite(&params, 0)
+        .into_iter()
+        .take(if full_scale() { 25 } else { 4 })
+        .map(|(n, f)| (n, if full_scale() { f } else { f / 4 }))
+        .collect();
+    let (_t2, records) = video_eval::table2(&suite, &params, 9);
+    let f89 = video_eval::fig89(&records);
+    f89.print();
+    f89.save("fig8_9.json");
+    let f1011 = video_eval::fig1011(&records);
+    f1011.print();
+    f1011.save("fig10_11.json");
+}

@@ -1,0 +1,69 @@
+//! Perf micro-bench: the SS hot loop (divergence batches) across backends —
+//! single-thread CPU, sharded CPU, PJRT tiles. The §Perf numbers in
+//! EXPERIMENTS.md come from this target.
+
+use std::sync::Arc;
+
+use submodular_ss::algorithms::{CpuBackend, DivergenceBackend};
+use submodular_ss::bench::{bench, full_scale};
+use submodular_ss::coordinator::{Compute, Metrics, ShardedBackend};
+use submodular_ss::runtime;
+use submodular_ss::submodular::FeatureBased;
+use submodular_ss::util::pool::ThreadPool;
+use submodular_ss::util::rng::Rng;
+use submodular_ss::util::vecmath::FeatureMatrix;
+
+fn instance(n: usize, d: usize, seed: u64) -> Arc<FeatureBased> {
+    let mut rng = Rng::new(seed);
+    let mut m = FeatureMatrix::zeros(n, d);
+    for i in 0..n {
+        for j in 0..d {
+            m.row_mut(i)[j] = if rng.bool(0.3) { rng.f32() } else { 0.0 };
+        }
+    }
+    Arc::new(FeatureBased::sqrt(m))
+}
+
+fn main() {
+    let (n, d, probes) = if full_scale() { (8000, 256, 104) } else { (2000, 256, 88) };
+    let f = instance(n, d, 1);
+    let probe_idx: Vec<usize> = (0..probes).collect();
+    let items: Vec<usize> = (probes..n).collect();
+    let iters = if full_scale() { 5 } else { 3 };
+
+    let cpu = CpuBackend::new(f.as_ref());
+    let r_cpu = bench("cpu_reference", 1, iters, || cpu.divergences(&probe_idx, &items));
+
+    // perf-pass kernel: per-probe cached g(u) rows (see EXPERIMENTS.md §Perf)
+    let sing: Vec<f64> = probe_idx.iter().map(|&u| cpu.singletons()[u]).collect();
+    let r_blk = bench("cpu_blocked_kernel", 1, iters, || {
+        f.divergences_block(&probe_idx, &sing, &items)
+    });
+
+    let pool = Arc::new(ThreadPool::new(2, 16));
+    let metrics = Arc::new(Metrics::new());
+    let sharded = ShardedBackend::new(Arc::clone(&f), pool, Compute::Cpu, metrics).unwrap();
+    let r_sh = bench("sharded_cpu_2workers", 1, iters, || sharded.divergences(&probe_idx, &items));
+
+    println!(
+        "throughput: cpu {:.2} | blocked {:.2} | sharded {:.2} Mpair/s",
+        (probes * items.len()) as f64 / r_cpu.median_s / 1e6,
+        (probes * items.len()) as f64 / r_blk.median_s / 1e6,
+        (probes * items.len()) as f64 / r_sh.median_s / 1e6,
+    );
+
+    match runtime::start_default(1) {
+        Ok((_svc, rt)) => {
+            let backend = runtime::PjrtBackend::new(f.as_ref(), Arc::clone(&rt)).unwrap();
+            let r = bench("pjrt_tiled", 1, iters, || backend.divergences(&probe_idx, &items));
+            let stats = rt.stats();
+            println!(
+                "pjrt: {:.2} Mpair/s over {} tile calls ({} items)",
+                (probes * items.len()) as f64 / r.median_s / 1e6,
+                stats.edge_weight_calls,
+                stats.items_processed
+            );
+        }
+        Err(e) => println!("pjrt skipped: {e}"),
+    }
+}

@@ -1,0 +1,40 @@
+//! Perf micro-bench: greedy variants (naive, lazy, stochastic) + the full
+//! SS pipeline — oracle-call accounting and wall-clock.
+
+use submodular_ss::algorithms::{
+    greedy, lazy_greedy, sparsify, ss_then_greedy, stochastic_greedy, CpuBackend, SsParams,
+};
+use submodular_ss::bench::{bench, full_scale};
+use submodular_ss::submodular::FeatureBased;
+use submodular_ss::util::rng::Rng;
+use submodular_ss::util::vecmath::FeatureMatrix;
+
+fn main() {
+    let (n, d, k) = if full_scale() { (8000, 128, 40) } else { (2500, 64, 25) };
+    let mut rng = Rng::new(2);
+    let mut m = FeatureMatrix::zeros(n, d);
+    for i in 0..n {
+        for j in 0..d {
+            m.row_mut(i)[j] = if rng.bool(0.3) { rng.f32() } else { 0.0 };
+        }
+    }
+    let f = FeatureBased::sqrt(m);
+    let all: Vec<usize> = (0..n).collect();
+    let iters = 3;
+
+    bench("naive_greedy", 0, 1, || greedy(&f, &all, k));
+    bench("lazy_greedy", 1, iters, || lazy_greedy(&f, &all, k));
+    bench("stochastic_greedy_eps0.1", 1, iters, || stochastic_greedy(&f, &all, k, 0.1, 7));
+    let backend = CpuBackend::new(&f);
+    bench("ss_sparsify_only", 1, iters, || sparsify(&backend, &SsParams::default()));
+    bench("ss_plus_lazy_greedy", 1, iters, || ss_then_greedy(&f, &backend, k, &SsParams::default()));
+
+    // oracle-call accounting (single runs)
+    let g = greedy(&f, &all, k);
+    let lz = lazy_greedy(&f, &all, k);
+    let (ss, sol) = ss_then_greedy(&f, &backend, k, &SsParams::default());
+    println!(
+        "oracle calls: naive {} | lazy {} | ss {} divergence evals + {} gains (|V'|={})",
+        g.oracle_calls, lz.oracle_calls, ss.divergence_evals, sol.oracle_calls, ss.kept.len()
+    );
+}

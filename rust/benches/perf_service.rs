@@ -1,0 +1,45 @@
+//! Perf: summarization-service throughput/latency under a request burst —
+//! the L3 serving numbers for EXPERIMENTS.md §Perf.
+
+use submodular_ss::algorithms::SsParams;
+use submodular_ss::bench::full_scale;
+use submodular_ss::coordinator::{ServiceConfig, SummarizationService, SummarizeRequest};
+use submodular_ss::data::{CorpusParams, NewsGenerator};
+use submodular_ss::util::stats::{Samples, Timer};
+
+fn main() {
+    let (requests, n) = if full_scale() { (40, 2000) } else { (12, 600) };
+    let generator = NewsGenerator::new(CorpusParams::default(), 3);
+    let days: Vec<_> = (0..requests).map(|i| generator.day(n, 0, 100 + i as u64)).collect();
+
+    for workers in [1usize, 2, 4] {
+        let svc = SummarizationService::start(
+            ServiceConfig { workers, queue_depth: 64, compute_threads: 2 },
+            None,
+        );
+        let wall = Timer::new();
+        let tickets: Vec<_> = days
+            .iter()
+            .enumerate()
+            .map(|(i, d)| {
+                svc.submit(SummarizeRequest {
+                    feats: d.feats.clone(),
+                    k: d.k,
+                    params: SsParams::default().with_seed(i as u64),
+                    use_pjrt: false,
+                })
+            })
+            .collect();
+        let mut lat = Samples::new();
+        for t in tickets {
+            lat.push(t.wait().unwrap().latency_s);
+        }
+        let total = wall.elapsed_s();
+        println!(
+            "workers={workers}: {:.2} req/s | latency p50 {:.3}s p95 {:.3}s (n={n}, {requests} reqs)",
+            requests as f64 / total,
+            lat.percentile(50.0),
+            lat.percentile(95.0)
+        );
+    }
+}

@@ -1,0 +1,13 @@
+//! Reproduces paper Table 1: four DUC-like named topics × reference budgets
+//! {400, 200, 100, 50} words × {lazy greedy, sieve, SS}: ROUGE-2 and F1.
+//! Paper shape: SS ≈ lazy greedy cell-for-cell; sieve below both.
+
+use submodular_ss::bench::full_scale;
+use submodular_ss::eval::duc;
+
+fn main() {
+    let n = if full_scale() { 1000 } else { 300 };
+    let t = duc::table1(n, 7);
+    t.print();
+    t.save("table1.json");
+}

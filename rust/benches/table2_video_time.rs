@@ -1,0 +1,18 @@
+//! Reproduces paper Table 2: the 25 SumMe-like videos — #frames, |V'| and
+//! per-method CPU time. CI scale uses 5 videos at 1/4 frame counts.
+
+use submodular_ss::bench::full_scale;
+use submodular_ss::data::video::{summe_suite, VideoParams};
+use submodular_ss::eval::video_eval;
+
+fn main() {
+    let params = VideoParams::default();
+    let suite: Vec<(String, usize)> = summe_suite(&params, 0)
+        .into_iter()
+        .take(if full_scale() { 25 } else { 5 })
+        .map(|(n, f)| (n, if full_scale() { f } else { f / 4 }))
+        .collect();
+    let (t, _records) = video_eval::table2(&suite, &params, 8);
+    t.print();
+    t.save("table2.json");
+}

@@ -1,0 +1,85 @@
+//! PJRT-accelerated greedy: each step computes the whole marginal-gain
+//! vector through the AOT `marginal_gains` artifact (the Layer-1 Pallas
+//! batch kernel) and commits the argmax.
+//!
+//! This is the "greedy on the device" counterpart of the SS backend — on a
+//! TPU the `(B, D)` gain batches stream through VMEM at memory bandwidth,
+//! which is how the full pipeline (SS prune + greedy on V') stays on-device
+//! end to end. It trades lazy greedy's eval-count savings for batched
+//! regularity; on the CPU plugin it mainly serves as a correctness +
+//! integration path (perf notes in EXPERIMENTS.md §Perf).
+
+use std::sync::Arc;
+
+use anyhow::Result;
+
+use crate::runtime::TiledRuntime;
+use crate::submodular::FeatureBased;
+use crate::util::stats::Timer;
+use crate::util::vecmath::add_into;
+
+use super::Solution;
+
+pub fn accelerated_greedy(
+    f: &FeatureBased,
+    rt: &Arc<TiledRuntime>,
+    candidates: &[usize],
+    k: usize,
+) -> Result<Solution> {
+    let timer = Timer::new();
+    let mut cov = vec![0.0f32; f.d()];
+    let mut remaining: Vec<usize> = candidates.to_vec();
+    let mut set = Vec::new();
+    let mut value = 0.0f64;
+    let mut calls = 0u64;
+    for _ in 0..k.min(candidates.len()) {
+        if remaining.is_empty() {
+            break;
+        }
+        let gains = rt.marginal_gains(f.feats(), &cov, &remaining)?;
+        calls += remaining.len() as u64;
+        let (best_i, best_g) = gains
+            .iter()
+            .enumerate()
+            .max_by(|a, b| a.1.partial_cmp(b.1).unwrap().then(b.0.cmp(&a.0)))
+            .map(|(i, &g)| (i, g))
+            .unwrap();
+        if best_g <= 0.0 {
+            break;
+        }
+        let v = remaining.swap_remove(best_i);
+        // commit on the *CPU oracle* (f64) to avoid f32 drift accumulating
+        value += f.gain_over_cov(&cov, v);
+        add_into(&mut cov, f.feats().row(v));
+        set.push(v);
+    }
+    Ok(Solution { set, value, oracle_calls: calls, wall_s: timer.elapsed_s() })
+}
+
+#[cfg(test)]
+mod tests {
+    // Device-dependent tests live in rust/tests/pjrt_parity.rs (they need
+    // built artifacts). Here we only assert the module's CPU-side pieces.
+    use crate::submodular::{FeatureBased, SubmodularFn};
+    use crate::util::rng::Rng;
+    use crate::util::vecmath::FeatureMatrix;
+
+    #[test]
+    fn gain_over_cov_matches_state_gain() {
+        let mut rng = Rng::new(1);
+        let mut m = FeatureMatrix::zeros(20, 8);
+        for i in 0..20 {
+            for j in 0..8 {
+                m.row_mut(i)[j] = rng.f32();
+            }
+        }
+        let f = FeatureBased::sqrt(m);
+        let mut st = f.state();
+        let mut cov = vec![0.0f32; 8];
+        for &v in &[3usize, 7, 11] {
+            assert!((f.gain_over_cov(&cov, v) - st.gain(v)).abs() < 1e-9);
+            st.add(v);
+            crate::util::vecmath::add_into(&mut cov, f.feats().row(v));
+        }
+    }
+}

@@ -1,0 +1,73 @@
+//! Control baselines: uniform random selection and top-k by singleton value.
+//! Neither uses higher-order structure; the evaluation figures use them to
+//! show the submodular machinery is doing real work.
+
+use super::Solution;
+use crate::submodular::SubmodularFn;
+use crate::util::rng::Rng;
+use crate::util::select::top_k_desc;
+use crate::util::stats::Timer;
+
+pub fn random_subset(f: &dyn SubmodularFn, candidates: &[usize], k: usize, seed: u64) -> Solution {
+    let timer = Timer::new();
+    let mut rng = Rng::new(seed);
+    let k = k.min(candidates.len());
+    let set: Vec<usize> =
+        rng.sample_indices(candidates.len(), k).into_iter().map(|i| candidates[i]).collect();
+    let value = f.eval(&set);
+    Solution { set, value, oracle_calls: 1, wall_s: timer.elapsed_s() }
+}
+
+pub fn top_k_singleton(f: &dyn SubmodularFn, candidates: &[usize], k: usize) -> Solution {
+    let timer = Timer::new();
+    let keys: Vec<f32> = candidates.iter().map(|&v| f.singleton(v) as f32).collect();
+    let set: Vec<usize> =
+        top_k_desc(&keys, k.min(candidates.len())).into_iter().map(|i| candidates[i]).collect();
+    let value = f.eval(&set);
+    Solution {
+        set,
+        value,
+        oracle_calls: candidates.len() as u64 + 1,
+        wall_s: timer.elapsed_s(),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::greedy::greedy;
+    use super::*;
+    use crate::submodular::FeatureBased;
+    use crate::util::rng::Rng;
+    use crate::util::vecmath::FeatureMatrix;
+
+    fn feature_instance(n: usize, d: usize, seed: u64) -> FeatureBased {
+        let mut rng = Rng::new(seed);
+        let mut m = FeatureMatrix::zeros(n, d);
+        for i in 0..n {
+            for j in 0..d {
+                m.row_mut(i)[j] = if rng.bool(0.5) { rng.f32() } else { 0.0 };
+            }
+        }
+        FeatureBased::sqrt(m)
+    }
+
+    #[test]
+    fn baselines_bounded_by_greedy() {
+        let f = feature_instance(100, 6, 1);
+        let all: Vec<usize> = (0..100).collect();
+        let g = greedy(&f, &all, 10);
+        let r = random_subset(&f, &all, 10, 3);
+        let t = top_k_singleton(&f, &all, 10);
+        assert!(r.value <= g.value + 1e-9);
+        assert!(t.value <= g.value + 1e-9);
+        assert_eq!(r.set.len(), 10);
+        assert_eq!(t.set.len(), 10);
+    }
+
+    #[test]
+    fn random_deterministic_per_seed() {
+        let f = feature_instance(50, 4, 2);
+        let all: Vec<usize> = (0..50).collect();
+        assert_eq!(random_subset(&f, &all, 5, 7).set, random_subset(&f, &all, 5, 7).set);
+    }
+}

@@ -1,0 +1,136 @@
+//! Bi-directional ("double") greedy of Buchbinder, Feldman, Naor & Schwartz
+//! (FOCS 2012): tight randomized 1/2-approximation for *unconstrained*
+//! non-monotone submodular maximization.
+//!
+//! The paper needs it twice: (a) solving Eq. (9) exactly-ish is what SS
+//! replaces, so this is the "expensive alternative" ablation; (b) §3.4's
+//! third improvement runs it on the SS output `V'` to shrink the reduced
+//! set further. Requires removal support ([`SubmodularFn::bidir_state`]).
+
+use super::Solution;
+use crate::submodular::SubmodularFn;
+use crate::util::rng::Rng;
+use crate::util::stats::Timer;
+
+/// Randomized double greedy over `candidates`. `deterministic = true` uses
+/// the 1/3-approximate deterministic variant (no randomness, reproducible
+/// across seeds; useful in tests).
+pub fn bidirectional_greedy(
+    f: &dyn SubmodularFn,
+    candidates: &[usize],
+    seed: u64,
+    deterministic: bool,
+) -> Solution {
+    let timer = Timer::new();
+    let mut rng = Rng::new(seed);
+    let mut x = f
+        .bidir_state(&[])
+        .expect("bidirectional_greedy requires a bidir-capable objective");
+    let mut y = f.bidir_state(candidates).expect("bidir state");
+    let mut calls = 0u64;
+
+    for &v in candidates {
+        let a = x.gain_add(v); // f(X + v) − f(X)
+        let b = y.gain_remove(v); // f(Y − v) − f(Y)
+        calls += 2;
+        let take = if deterministic {
+            a >= b
+        } else {
+            let (ap, bp) = (a.max(0.0), b.max(0.0));
+            if ap + bp == 0.0 {
+                true // both zero: adding is value-neutral for X and Y
+            } else {
+                rng.f64() < ap / (ap + bp)
+            }
+        };
+        if take {
+            x.add(v);
+        } else {
+            y.remove(v);
+        }
+    }
+    let set = x.members();
+    debug_assert_eq!(set, y.members(), "X and Y must converge");
+    Solution { value: x.value(), set, oracle_calls: calls, wall_s: timer.elapsed_s() }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::submodular::{GraphCut, SparsificationObjective, SubmodularFn};
+    use crate::util::rng::Rng;
+
+    fn brute_force_unconstrained(f: &dyn SubmodularFn, m: usize) -> f64 {
+        let mut best = 0.0f64;
+        for mask in 0u32..(1 << m) {
+            let s: Vec<usize> = (0..m).filter(|&i| mask >> i & 1 == 1).collect();
+            best = best.max(f.eval(&s));
+        }
+        best
+    }
+
+    fn gc_instance(n: usize, seed: u64) -> GraphCut {
+        let mut rng = Rng::new(seed);
+        let mut sim = vec![0.0f32; n * n];
+        for i in 0..n {
+            for u in (i + 1)..n {
+                let s = rng.f32();
+                sim[i * n + u] = s;
+                sim[u * n + i] = s;
+            }
+        }
+        GraphCut::new(n, sim, 0.45)
+    }
+
+    #[test]
+    fn randomized_half_guarantee_in_expectation() {
+        // average over seeds ≥ 1/2·OPT (w/ slack for variance)
+        for inst_seed in 0..3 {
+            let f = gc_instance(12, inst_seed);
+            let all: Vec<usize> = (0..12).collect();
+            let opt = brute_force_unconstrained(&f, 12);
+            let avg: f64 = (0..40)
+                .map(|s| bidirectional_greedy(&f, &all, s, false).value)
+                .sum::<f64>()
+                / 40.0;
+            assert!(
+                avg >= 0.45 * opt,
+                "instance {inst_seed}: E[f] ≈ {avg} < 0.45·OPT ({opt})"
+            );
+        }
+    }
+
+    #[test]
+    fn deterministic_variant_reproducible_and_third_guarantee() {
+        for inst_seed in 0..3 {
+            let f = gc_instance(10, inst_seed + 10);
+            let all: Vec<usize> = (0..10).collect();
+            let a = bidirectional_greedy(&f, &all, 1, true);
+            let b = bidirectional_greedy(&f, &all, 999, true);
+            assert_eq!(a.set, b.set, "deterministic variant ignores the seed");
+            let opt = brute_force_unconstrained(&f, 10);
+            assert!(a.value >= opt / 3.0 - 1e-9, "1/3 guarantee: {} vs {opt}", a.value);
+        }
+    }
+
+    #[test]
+    fn works_on_sparsification_objective() {
+        // §3.4: double greedy on Eq. 9's h over a reduced set
+        let mut rng = Rng::new(5);
+        let n = 12;
+        let w: Vec<f64> = (0..n * n).map(|_| rng.f64() * 2.0 - 0.6).collect();
+        let h = SparsificationObjective::from_weights(n, 0.3, move |u, v| w[u * n + v]);
+        let all: Vec<usize> = (0..n).collect();
+        let s = bidirectional_greedy(&h, &all, 3, false);
+        assert!((s.value - h.eval(&s.set)).abs() < 1e-9);
+        assert!(s.value >= 0.0);
+    }
+
+    #[test]
+    fn candidate_subset_only() {
+        let f = gc_instance(10, 77);
+        let cands = vec![1, 4, 6];
+        let s = bidirectional_greedy(&f, &cands, 0, true);
+        assert!(s.set.iter().all(|v| cands.contains(v)));
+    }
+}

@@ -1,0 +1,220 @@
+//! Constrained maximization beyond cardinality: knapsack and partition
+//! matroid. The paper (§3.3 Remarks) notes SS applies *before any*
+//! constrained algorithm since Lemmas 1–3 only need submodularity +
+//! non-negativity; these maximizers let the ablation bench demonstrate
+//! that composition.
+
+use super::Solution;
+use crate::submodular::SubmodularFn;
+use crate::util::stats::Timer;
+
+/// Cost-benefit greedy for a knapsack constraint `Σ cost(v) ≤ budget`
+/// (Leskovec et al.'s CELF-style ratio rule + best-singleton fallback,
+/// giving the standard (1 − 1/√e)-ish practical guarantee).
+pub fn knapsack_greedy(
+    f: &dyn SubmodularFn,
+    candidates: &[usize],
+    costs: &[f64],
+    budget: f64,
+) -> Solution {
+    assert_eq!(costs.len(), f.n(), "costs are indexed by global element id");
+    let timer = Timer::new();
+    let mut calls = 0u64;
+
+    // ratio-greedy pass
+    let mut state = f.state();
+    let mut spent = 0.0;
+    let mut remaining: Vec<usize> =
+        candidates.iter().copied().filter(|&v| costs[v] <= budget).collect();
+    loop {
+        let mut best: Option<(usize, f64)> = None; // (position, ratio)
+        for (i, &v) in remaining.iter().enumerate() {
+            if spent + costs[v] > budget {
+                continue;
+            }
+            let g = state.gain(v);
+            calls += 1;
+            let ratio = g / costs[v].max(1e-12);
+            if g > 0.0 && best.map_or(true, |(_, r)| ratio > r) {
+                best = Some((i, ratio));
+            }
+        }
+        match best {
+            Some((i, _)) => {
+                let v = remaining.swap_remove(i);
+                spent += costs[v];
+                state.add(v);
+            }
+            None => break,
+        }
+    }
+
+    // best-feasible-singleton fallback (guards the ratio rule's worst case)
+    let mut best_single: Option<(usize, f64)> = None;
+    for &v in candidates {
+        if costs[v] <= budget {
+            let g = f.singleton(v);
+            calls += 1;
+            if best_single.map_or(true, |(_, bg)| g > bg) {
+                best_single = Some((v, g));
+            }
+        }
+    }
+    let ratio_sol =
+        Solution { set: state.set().to_vec(), value: state.value(), oracle_calls: 0, wall_s: 0.0 };
+    let result = match best_single {
+        Some((v, g)) if g > ratio_sol.value => {
+            Solution { set: vec![v], value: g, oracle_calls: calls, wall_s: timer.elapsed_s() }
+        }
+        _ => Solution { oracle_calls: calls, wall_s: timer.elapsed_s(), ..ratio_sol },
+    };
+    result
+}
+
+/// A partition matroid: elements are colored; at most `cap[color]` of each
+/// color may be selected.
+pub struct PartitionMatroid {
+    color: Vec<usize>,
+    cap: Vec<usize>,
+}
+
+impl PartitionMatroid {
+    pub fn new(color: Vec<usize>, cap: Vec<usize>) -> Self {
+        if let Some(&m) = color.iter().max() {
+            assert!(m < cap.len(), "color out of range");
+        }
+        Self { color, cap }
+    }
+
+    pub fn rank(&self) -> usize {
+        self.cap.iter().sum()
+    }
+
+    fn feasible_add(&self, used: &[usize], v: usize) -> bool {
+        used[self.color[v]] < self.cap[self.color[v]]
+    }
+}
+
+/// Greedy under a partition matroid (1/2-approximation for monotone f).
+pub fn matroid_greedy(
+    f: &dyn SubmodularFn,
+    candidates: &[usize],
+    matroid: &PartitionMatroid,
+) -> Solution {
+    let timer = Timer::new();
+    let mut state = f.state();
+    let mut used = vec![0usize; matroid.cap.len()];
+    let mut remaining: Vec<usize> = candidates.to_vec();
+    let mut calls = 0u64;
+    loop {
+        let mut best: Option<(usize, f64)> = None;
+        for (i, &v) in remaining.iter().enumerate() {
+            if !matroid.feasible_add(&used, v) {
+                continue;
+            }
+            let g = state.gain(v);
+            calls += 1;
+            if g > 0.0 && best.map_or(true, |(_, bg)| g > bg) {
+                best = Some((i, g));
+            }
+        }
+        match best {
+            Some((i, _)) => {
+                let v = remaining.swap_remove(i);
+                used[matroid.color[v]] += 1;
+                state.add(v);
+            }
+            None => break,
+        }
+    }
+    Solution { set: state.set().to_vec(), value: state.value(), oracle_calls: calls, wall_s: timer.elapsed_s() }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::{sparsify, CpuBackend, SsParams};
+    use super::*;
+    use crate::submodular::{FeatureBased, Modular};
+    use crate::util::rng::Rng;
+    use crate::util::vecmath::FeatureMatrix;
+
+    fn instance(n: usize, d: usize, seed: u64) -> FeatureBased {
+        let mut rng = Rng::new(seed);
+        let mut m = FeatureMatrix::zeros(n, d);
+        for i in 0..n {
+            for j in 0..d {
+                m.row_mut(i)[j] = if rng.bool(0.4) { rng.f32() } else { 0.0 };
+            }
+        }
+        FeatureBased::sqrt(m)
+    }
+
+    #[test]
+    fn knapsack_respects_budget() {
+        let f = instance(60, 6, 1);
+        let costs: Vec<f64> = (0..60).map(|i| 1.0 + (i % 5) as f64).collect();
+        let s = knapsack_greedy(&f, &(0..60).collect::<Vec<_>>(), &costs, 12.0);
+        let spent: f64 = s.set.iter().map(|&v| costs[v]).sum();
+        assert!(spent <= 12.0 + 1e-9, "spent {spent}");
+        assert!(s.value > 0.0);
+    }
+
+    #[test]
+    fn knapsack_unit_costs_equals_cardinality_greedy() {
+        // unit costs + budget k ≈ plain greedy (ratio rule = gain rule)
+        let f = instance(40, 5, 2);
+        let costs = vec![1.0; 40];
+        let all: Vec<usize> = (0..40).collect();
+        let ks = knapsack_greedy(&f, &all, &costs, 6.0);
+        let g = super::super::greedy::greedy(&f, &all, 6);
+        assert!((ks.value - g.value).abs() < 1e-9);
+    }
+
+    #[test]
+    fn knapsack_singleton_fallback_fires() {
+        // one huge expensive item vs many cheap tiny ones: ratio rule picks
+        // the cheap ones, fallback must consider the big one
+        let f = Modular::new(vec![100.0, 1.0, 1.0, 1.0]);
+        let costs = vec![10.0, 1.0, 1.0, 1.0];
+        let s = knapsack_greedy(&f, &[0, 1, 2, 3], &costs, 10.0);
+        assert_eq!(s.set, vec![0], "must take the single high-value item");
+        assert_eq!(s.value, 100.0);
+    }
+
+    #[test]
+    fn matroid_caps_respected() {
+        let f = instance(30, 5, 3);
+        let color: Vec<usize> = (0..30).map(|i| i % 3).collect();
+        let m = PartitionMatroid::new(color.clone(), vec![2, 1, 3]);
+        let s = matroid_greedy(&f, &(0..30).collect::<Vec<_>>(), &m);
+        let mut used = [0usize; 3];
+        for &v in &s.set {
+            used[color[v]] += 1;
+        }
+        assert!(used[0] <= 2 && used[1] <= 1 && used[2] <= 3, "{used:?}");
+        assert_eq!(s.set.len(), s.set.iter().collect::<std::collections::HashSet<_>>().len());
+    }
+
+    #[test]
+    fn ss_composes_with_constrained_maximizers() {
+        // §3.3: run SS first, then the constrained algorithm on V'
+        let f = instance(500, 8, 4);
+        let backend = CpuBackend::new(&f);
+        let vp = sparsify(&backend, &SsParams::default().with_seed(5)).kept;
+        let costs: Vec<f64> = (0..500).map(|i| 1.0 + (i % 4) as f64).collect();
+        let all: Vec<usize> = (0..500).collect();
+        let full = knapsack_greedy(&f, &all, &costs, 20.0);
+        let pruned = knapsack_greedy(&f, &vp, &costs, 20.0);
+        assert!(
+            pruned.value / full.value > 0.85,
+            "SS+knapsack rel-utility {}",
+            pruned.value / full.value
+        );
+        // matroid composition too
+        let color: Vec<usize> = (0..500).map(|i| i % 4).collect();
+        let m = PartitionMatroid::new(color, vec![3, 3, 3, 3]);
+        let full_m = matroid_greedy(&f, &all, &m);
+        let pruned_m = matroid_greedy(&f, &vp, &m);
+        assert!(pruned_m.value / full_m.value > 0.85);
+    }
+}

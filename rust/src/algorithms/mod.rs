@@ -1,0 +1,90 @@
+//! Submodular maximization algorithms: the paper's SS pruning plus every
+//! baseline its evaluation compares against.
+//!
+//! All maximizers share the same calling convention: a [`SubmodularFn`], a
+//! slice of candidate (global) indices forming the effective ground set,
+//! and a cardinality budget `k`; they return a [`Solution`] carrying the
+//! chosen set, its objective value and oracle-call accounting.
+//!
+//! * [`greedy`] — the textbook 1−1/e greedy (Nemhauser et al.).
+//! * [`lazy_greedy`] — Minoux's accelerated greedy; identical output,
+//!   priority-queue laziness (the paper's main quality baseline).
+//! * [`stochastic_greedy`] — "lazier than lazy greedy" (Mirzasoleiman et al.).
+//! * [`sieve_streaming`] — Badanidiyuru et al.'s 1/2−ε streaming algorithm
+//!   (the paper's low-memory baseline).
+//! * [`bidirectional_greedy`] — Buchbinder et al.'s randomized 1/2 double
+//!   greedy for unconstrained non-monotone maximization (used on Eq. 9's
+//!   sparsification objective, §3.4).
+//! * [`wei_prune`] — the f(v|V∖v)-based safe pruning of Wei et al. [27]
+//!   (§3.4's first improvement).
+//! * [`ss`] — the paper's contribution: submodular sparsification
+//!   (Algorithm 1) with uniform/importance sampling and optional
+//!   post-reduction.
+//! * [`baselines`] — random and top-k-singleton controls.
+
+pub mod accelerated_greedy;
+pub mod baselines;
+pub mod conditional_ss;
+pub mod constrained;
+pub mod bidirectional_greedy;
+pub mod greedy;
+pub mod lazy_greedy;
+pub mod sieve_streaming;
+pub mod ss;
+pub mod stochastic_greedy;
+pub mod wei_prune;
+
+pub use accelerated_greedy::accelerated_greedy;
+pub use baselines::{random_subset, top_k_singleton};
+pub use conditional_ss::{sparsify_conditional, ConditionalCpuBackend};
+pub use constrained::{knapsack_greedy, matroid_greedy, PartitionMatroid};
+pub use bidirectional_greedy::bidirectional_greedy;
+pub use greedy::greedy;
+pub use lazy_greedy::lazy_greedy;
+pub use sieve_streaming::{sieve_streaming, SieveParams};
+pub use ss::{sparsify, sparsify_candidates, ss_then_greedy, CpuBackend, DivergenceBackend, Sampling, SsParams, SsResult};
+pub use stochastic_greedy::stochastic_greedy;
+pub use wei_prune::wei_prune;
+
+use crate::submodular::SubmodularFn;
+
+/// Outcome of a maximization run.
+#[derive(Clone, Debug)]
+pub struct Solution {
+    /// Selected elements (global indices), in selection order.
+    pub set: Vec<usize>,
+    /// Objective value f(set).
+    pub value: f64,
+    /// Number of marginal-gain / objective oracle calls.
+    pub oracle_calls: u64,
+    /// Wall-clock seconds.
+    pub wall_s: f64,
+}
+
+impl Solution {
+    pub fn empty() -> Self {
+        Self { set: Vec::new(), value: 0.0, oracle_calls: 0, wall_s: 0.0 }
+    }
+}
+
+/// Exhaustive maximum over all subsets of size ≤ k — test oracle, n ≤ ~20.
+pub fn brute_force(f: &dyn SubmodularFn, candidates: &[usize], k: usize) -> Solution {
+    assert!(candidates.len() <= 22, "brute force blows up beyond ~22 elements");
+    let m = candidates.len();
+    let mut best = Solution::empty();
+    let mut calls = 0u64;
+    for mask in 0u32..(1 << m) {
+        if mask.count_ones() as usize > k {
+            continue;
+        }
+        let s: Vec<usize> =
+            (0..m).filter(|&i| mask >> i & 1 == 1).map(|i| candidates[i]).collect();
+        let v = f.eval(&s);
+        calls += 1;
+        if v > best.value {
+            best = Solution { set: s, value: v, oracle_calls: 0, wall_s: 0.0 };
+        }
+    }
+    best.oracle_calls = calls;
+    best
+}

@@ -1,0 +1,188 @@
+//! Sieve-streaming (Badanidiyuru et al., KDD 2014): one-pass streaming
+//! submodular maximization with a `1/2 − ε` guarantee.
+//!
+//! A grid of thresholds `τ = (1+ε)^i` brackets the unknown optimum; each
+//! threshold keeps an independent candidate set, adding a streamed element
+//! when its marginal gain is at least `(τ/2 − f(S_τ)) / (k − |S_τ|)`. The
+//! best thresholded set at the end wins. Memory is `O(k · #thresholds)` —
+//! the paper's news experiments run it with 50 thresholds ("trials"),
+//! i.e. a 50k-element memory, which [`SieveParams::paper_default`] mirrors.
+
+use super::Solution;
+use crate::submodular::{SolState, SubmodularFn};
+use crate::util::stats::Timer;
+
+#[derive(Clone, Debug)]
+pub struct SieveParams {
+    /// grid resolution ε (τ ratio = 1+ε)
+    pub eps: f64,
+    /// hard cap on live thresholds (the paper's "number of trials")
+    pub max_thresholds: usize,
+}
+
+impl SieveParams {
+    /// Paper configuration: 50 trials → memory 50·k.
+    pub fn paper_default() -> Self {
+        Self { eps: 0.08, max_thresholds: 50 }
+    }
+}
+
+struct Sieve<'a> {
+    state: Box<dyn SolState + 'a>,
+    tau: f64,
+}
+
+pub fn sieve_streaming(
+    f: &dyn SubmodularFn,
+    stream: &[usize],
+    k: usize,
+    params: &SieveParams,
+) -> Solution {
+    let timer = Timer::new();
+    let mut calls = 0u64;
+    let mut max_singleton = 0.0f64;
+    let mut sieves: Vec<Sieve> = Vec::new();
+    let ratio = 1.0 + params.eps;
+
+    // Peak memory accounting (elements resident across all sieves + the
+    // max-singleton tracker) — reported via oracle_calls? No: wall_s and a
+    // dedicated field would bloat Solution; expose via return set len and
+    // the bench harness's own instrumentation instead.
+    for &v in stream {
+        let sv = f.singleton(v);
+        calls += 1;
+        if sv > max_singleton {
+            max_singleton = sv;
+            // re-grid: thresholds must cover [m, 2km]
+            let lo = max_singleton;
+            let hi = 2.0 * k as f64 * max_singleton;
+            // keep existing sieves whose tau is still in range; spawn new taus
+            sieves.retain(|s| s.tau >= lo * 0.999 && s.tau <= hi * 1.001);
+            let mut tau = {
+                // smallest power of ratio >= lo
+                let e = (lo.ln() / ratio.ln()).ceil();
+                ratio.powf(e)
+            };
+            while tau <= hi && sieves.len() < params.max_thresholds {
+                let exists = sieves.iter().any(|s| (s.tau / tau - 1.0).abs() < 1e-9);
+                if !exists {
+                    sieves.push(Sieve { state: f.state(), tau });
+                }
+                tau *= ratio;
+            }
+        }
+        for s in &mut sieves {
+            if s.state.set().len() >= k {
+                continue;
+            }
+            let need =
+                (s.tau / 2.0 - s.state.value()) / (k - s.state.set().len()) as f64;
+            let g = s.state.gain(v);
+            calls += 1;
+            if g >= need && g > 0.0 {
+                s.state.add(v);
+            }
+        }
+    }
+
+    let best = sieves
+        .iter()
+        .max_by(|a, b| a.state.value().partial_cmp(&b.state.value()).unwrap());
+    match best {
+        Some(s) => Solution {
+            set: s.state.set().to_vec(),
+            value: s.state.value(),
+            oracle_calls: calls,
+            wall_s: timer.elapsed_s(),
+        },
+        None => Solution { set: vec![], value: 0.0, oracle_calls: calls, wall_s: timer.elapsed_s() },
+    }
+}
+
+/// Peak memory (in elements) a sieve configuration can hold — the number the
+/// paper quotes as "memory of 50k".
+pub fn sieve_memory_elements(k: usize, params: &SieveParams) -> usize {
+    params.max_thresholds * k
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::{brute_force, greedy::greedy};
+    use super::*;
+    use crate::submodular::FeatureBased;
+    use crate::util::rng::Rng;
+    use crate::util::vecmath::FeatureMatrix;
+
+    fn feature_instance(n: usize, d: usize, seed: u64) -> FeatureBased {
+        let mut rng = Rng::new(seed);
+        let mut m = FeatureMatrix::zeros(n, d);
+        for i in 0..n {
+            for j in 0..d {
+                m.row_mut(i)[j] = if rng.bool(0.5) { rng.f32() } else { 0.0 };
+            }
+        }
+        FeatureBased::sqrt(m)
+    }
+
+    #[test]
+    fn half_minus_eps_guarantee_vs_brute_force() {
+        for seed in 0..4 {
+            let f = feature_instance(14, 4, seed);
+            let all: Vec<usize> = (0..14).collect();
+            let k = 4;
+            let opt = brute_force(&f, &all, k);
+            let s = sieve_streaming(&f, &all, k, &SieveParams { eps: 0.05, max_thresholds: 200 });
+            let bound = (0.5 - 0.05) * opt.value;
+            assert!(
+                s.value >= bound - 1e-9,
+                "seed {seed}: sieve {sv} < bound {bound}",
+                sv = s.value
+            );
+        }
+    }
+
+    #[test]
+    fn worse_than_greedy_but_not_catastrophic() {
+        let f = feature_instance(200, 8, 9);
+        let all: Vec<usize> = (0..200).collect();
+        let g = greedy(&f, &all, 12);
+        let s = sieve_streaming(&f, &all, 12, &SieveParams::paper_default());
+        assert!(s.value <= g.value + 1e-9, "sieve cannot beat greedy here");
+        assert!(s.value >= 0.5 * g.value, "sieve {} vs greedy {}", s.value, g.value);
+    }
+
+    #[test]
+    fn budget_respected() {
+        let f = feature_instance(80, 5, 2);
+        let all: Vec<usize> = (0..80).collect();
+        let s = sieve_streaming(&f, &all, 7, &SieveParams::paper_default());
+        assert!(s.set.len() <= 7);
+        assert!((s.value - f.eval(&s.set)).abs() < 1e-6);
+    }
+
+    #[test]
+    fn threshold_cap_respected() {
+        // With a tiny cap the algorithm still runs and returns something sane.
+        let f = feature_instance(60, 4, 3);
+        let all: Vec<usize> = (0..60).collect();
+        let s = sieve_streaming(&f, &all, 5, &SieveParams { eps: 0.01, max_thresholds: 3 });
+        assert!(!s.set.is_empty());
+    }
+
+    #[test]
+    fn memory_accounting() {
+        assert_eq!(sieve_memory_elements(10, &SieveParams::paper_default()), 500);
+    }
+
+    #[test]
+    fn single_pass_order_sensitivity() {
+        // streaming is order-dependent; both orders must still satisfy bounds
+        let f = feature_instance(30, 4, 4);
+        let fwd: Vec<usize> = (0..30).collect();
+        let rev: Vec<usize> = (0..30).rev().collect();
+        let p = SieveParams::paper_default();
+        let a = sieve_streaming(&f, &fwd, 5, &p);
+        let b = sieve_streaming(&f, &rev, 5, &p);
+        assert!(a.value > 0.0 && b.value > 0.0);
+    }
+}

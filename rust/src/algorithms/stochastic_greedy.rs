@@ -1,0 +1,114 @@
+//! Stochastic greedy ("lazier than lazy greedy", Mirzasoleiman et al. 2015):
+//! each step evaluates gains only on a uniform sample of size
+//! `⌈(|candidates|/k)·ln(1/ε)⌉`, giving a `1 − 1/e − ε` expected guarantee
+//! with `O(n log 1/ε)` total evaluations. Related-work baseline + ablation
+//! partner for SS (sampling *per step* vs SS's sampling *per prune round*).
+
+use super::Solution;
+use crate::submodular::SubmodularFn;
+use crate::util::rng::Rng;
+use crate::util::stats::Timer;
+
+pub fn stochastic_greedy(
+    f: &dyn SubmodularFn,
+    candidates: &[usize],
+    k: usize,
+    eps: f64,
+    seed: u64,
+) -> Solution {
+    assert!(eps > 0.0 && eps < 1.0);
+    let timer = Timer::new();
+    let mut rng = Rng::new(seed);
+    let mut state = f.state();
+    let mut remaining: Vec<usize> = candidates.to_vec();
+    let mut calls = 0u64;
+    let k = k.min(remaining.len());
+    let sample_size =
+        (((candidates.len() as f64 / k.max(1) as f64) * (1.0 / eps).ln()).ceil() as usize).max(1);
+
+    for _ in 0..k {
+        if remaining.is_empty() {
+            break;
+        }
+        let m = sample_size.min(remaining.len());
+        let probe_pos = rng.sample_indices(remaining.len(), m);
+        let mut best_pos = usize::MAX;
+        let mut best_gain = f64::NEG_INFINITY;
+        for &p in &probe_pos {
+            let g = state.gain(remaining[p]);
+            calls += 1;
+            if g > best_gain {
+                best_gain = g;
+                best_pos = p;
+            }
+        }
+        if best_pos == usize::MAX || best_gain <= 0.0 {
+            break;
+        }
+        let v = remaining.swap_remove(best_pos);
+        state.add(v);
+    }
+    Solution { set: state.set().to_vec(), value: state.value(), oracle_calls: calls, wall_s: timer.elapsed_s() }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::greedy::greedy;
+    use super::*;
+    use crate::submodular::FeatureBased;
+    use crate::util::rng::Rng;
+    use crate::util::vecmath::FeatureMatrix;
+
+    fn feature_instance(n: usize, d: usize, seed: u64) -> FeatureBased {
+        let mut rng = Rng::new(seed);
+        let mut m = FeatureMatrix::zeros(n, d);
+        for i in 0..n {
+            for j in 0..d {
+                m.row_mut(i)[j] = if rng.bool(0.5) { rng.f32() } else { 0.0 };
+            }
+        }
+        FeatureBased::sqrt(m)
+    }
+
+    #[test]
+    fn near_greedy_quality() {
+        let f = feature_instance(150, 8, 1);
+        let all: Vec<usize> = (0..150).collect();
+        let g = greedy(&f, &all, 10);
+        let s = stochastic_greedy(&f, &all, 10, 0.1, 42);
+        assert_eq!(s.set.len(), 10);
+        assert!(
+            s.value >= 0.85 * g.value,
+            "stochastic {sv} too far below greedy {gv}",
+            sv = s.value,
+            gv = g.value
+        );
+    }
+
+    #[test]
+    fn far_fewer_oracle_calls() {
+        let f = feature_instance(400, 6, 2);
+        let all: Vec<usize> = (0..400).collect();
+        let g = greedy(&f, &all, 20);
+        let s = stochastic_greedy(&f, &all, 20, 0.1, 7);
+        assert!(s.oracle_calls < g.oracle_calls / 3);
+    }
+
+    #[test]
+    fn deterministic_given_seed() {
+        let f = feature_instance(60, 5, 3);
+        let all: Vec<usize> = (0..60).collect();
+        let a = stochastic_greedy(&f, &all, 8, 0.2, 9);
+        let b = stochastic_greedy(&f, &all, 8, 0.2, 9);
+        assert_eq!(a.set, b.set);
+    }
+
+    #[test]
+    fn eps_one_half_still_valid_solution() {
+        let f = feature_instance(40, 4, 4);
+        let all: Vec<usize> = (0..40).collect();
+        let s = stochastic_greedy(&f, &all, 5, 0.5, 1);
+        assert_eq!(s.set.len(), 5);
+        assert!((s.value - f.eval(&s.set)).abs() < 1e-6);
+    }
+}

@@ -1,0 +1,106 @@
+//! Safe pruning of Wei, Iyer & Bilmes (ICML 2014), cited as [27] in the
+//! paper and applied as §3.4's first improvement (a pre-pass before SS).
+//!
+//! Rationale: `f(v|V∖v) ≤ f(v|S)` for any `S ⊆ V∖v` (submodularity), so if
+//! the singleton value `f(u)` — an upper bound on u's gain at any point —
+//! is below the k-th largest lower bound `f(v|V∖v)`, element u can never be
+//! selected by greedy and is *safe* to remove (greedy output unchanged).
+
+use crate::submodular::SubmodularFn;
+use crate::util::select::top_k_desc;
+
+/// Returns the surviving candidate indices (a subset of `candidates`),
+/// preserving order. `sing` may be passed in when already computed (the SS
+/// pipeline shares it); otherwise it is computed here.
+pub fn wei_prune(
+    f: &dyn SubmodularFn,
+    candidates: &[usize],
+    k: usize,
+    sing: Option<&[f64]>,
+) -> Vec<usize> {
+    if candidates.len() <= k {
+        return candidates.to_vec();
+    }
+    let owned;
+    let sing = match sing {
+        Some(s) => s,
+        None => {
+            owned = f.singleton_complements();
+            &owned
+        }
+    };
+    // k-th largest f(v|V\v) among candidates
+    let keys: Vec<f32> = candidates.iter().map(|&v| sing[v] as f32).collect();
+    let top = top_k_desc(&keys, k);
+    let threshold = top.iter().map(|&i| keys[i]).fold(f32::INFINITY, f32::min) as f64;
+    candidates
+        .iter()
+        .copied()
+        .filter(|&u| f.singleton(u) >= threshold)
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::greedy::greedy;
+    use super::*;
+    use crate::submodular::FeatureBased;
+    use crate::util::prop::check_seeded;
+    use crate::util::rng::Rng;
+    use crate::util::vecmath::FeatureMatrix;
+
+    fn feature_instance(n: usize, d: usize, seed: u64) -> FeatureBased {
+        let mut rng = Rng::new(seed);
+        let mut m = FeatureMatrix::zeros(n, d);
+        for i in 0..n {
+            for j in 0..d {
+                m.row_mut(i)[j] = if rng.bool(0.4) { rng.f32() } else { 0.0 };
+            }
+        }
+        FeatureBased::sqrt(m)
+    }
+
+    #[test]
+    fn pruning_is_safe_for_greedy() {
+        // Wei et al.'s guarantee: greedy output is *unchanged* by the prune.
+        check_seeded(700, 20, |g| {
+            let n = g.usize_in(8, 40);
+            let k = g.usize_in(1, 6);
+            let f = feature_instance(n, 5, g.usize_in(0, 1 << 30) as u64);
+            let all: Vec<usize> = (0..n).collect();
+            let pruned = wei_prune(&f, &all, k, None);
+            assert!(pruned.len() >= k.min(n));
+            let a = greedy(&f, &all, k);
+            let b = greedy(&f, &pruned, k);
+            assert!(
+                (a.value - b.value).abs() < 1e-9,
+                "greedy value changed after safe prune: {} vs {} (n={n}, k={k})",
+                a.value,
+                b.value
+            );
+        });
+    }
+
+    #[test]
+    fn keeps_everything_when_k_ge_n() {
+        let f = feature_instance(6, 3, 1);
+        let all: Vec<usize> = (0..6).collect();
+        assert_eq!(wei_prune(&f, &all, 6, None), all);
+        assert_eq!(wei_prune(&f, &all, 10, None), all);
+    }
+
+    #[test]
+    fn prunes_dominated_duplicates() {
+        // near-duplicate heavy items + weak items: weak ones get pruned
+        let mut m = FeatureMatrix::zeros(6, 3);
+        for i in 0..3 {
+            m.row_mut(i).copy_from_slice(&[5.0, 5.0, 5.0]); // strong triplets
+        }
+        for i in 3..6 {
+            m.row_mut(i).copy_from_slice(&[0.01, 0.0, 0.0]); // negligible
+        }
+        let f = FeatureBased::sqrt(m);
+        let pruned = wei_prune(&f, &(0..6).collect::<Vec<_>>(), 2, None);
+        assert!(pruned.iter().all(|&v| v < 3), "weak items must be pruned: {pruned:?}");
+    }
+}

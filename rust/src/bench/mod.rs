@@ -1,0 +1,153 @@
+//! Bench harness (offline `criterion` substitute): warmup + timed iterations
+//! with mean/median/p95 reporting, plus a row-oriented table printer for the
+//! per-figure reproduction benches.
+//!
+//! All `rust/benches/*.rs` targets are `harness = false` binaries built on
+//! this module; `cargo bench` runs them sequentially.
+
+use crate::util::stats::{Samples, Timer};
+
+/// Timing result of one benchmark case.
+#[derive(Clone, Debug)]
+pub struct BenchResult {
+    pub name: String,
+    pub iters: usize,
+    pub mean_s: f64,
+    pub median_s: f64,
+    pub p95_s: f64,
+    pub min_s: f64,
+}
+
+/// Time `f` with `warmup` discarded runs and `iters` measured runs.
+pub fn bench<R>(name: &str, warmup: usize, iters: usize, mut f: impl FnMut() -> R) -> BenchResult {
+    for _ in 0..warmup {
+        std::hint::black_box(f());
+    }
+    let mut samples = Samples::new();
+    for _ in 0..iters.max(1) {
+        let t = Timer::new();
+        std::hint::black_box(f());
+        samples.push(t.elapsed_s());
+    }
+    let r = BenchResult {
+        name: name.to_string(),
+        iters: samples.len(),
+        mean_s: samples.mean(),
+        median_s: samples.median(),
+        p95_s: samples.percentile(95.0),
+        min_s: samples.percentile(0.0),
+    };
+    println!(
+        "bench {name:<40} iters={iters:<3} mean={:.6}s median={:.6}s p95={:.6}s min={:.6}s",
+        r.mean_s, r.median_s, r.p95_s, r.min_s,
+        name = r.name,
+        iters = r.iters,
+    );
+    r
+}
+
+/// Scale knob shared by all benches: `SS_FULL=1` runs paper-scale workloads,
+/// default is CI-scale (same shapes, smaller n).
+pub fn full_scale() -> bool {
+    std::env::var("SS_FULL").map(|v| v == "1").unwrap_or(false)
+}
+
+/// Markdown-ish table printer for figure/table reproductions.
+pub struct Table {
+    title: String,
+    header: Vec<String>,
+    rows: Vec<Vec<String>>,
+}
+
+impl Table {
+    pub fn new(title: &str, header: &[&str]) -> Self {
+        Self {
+            title: title.to_string(),
+            header: header.iter().map(|s| s.to_string()).collect(),
+            rows: Vec::new(),
+        }
+    }
+
+    pub fn row(&mut self, cells: Vec<String>) {
+        assert_eq!(cells.len(), self.header.len(), "row arity mismatch");
+        self.rows.push(cells);
+    }
+
+    pub fn print(&self) {
+        let mut widths: Vec<usize> = self.header.iter().map(|h| h.len()).collect();
+        for row in &self.rows {
+            for (w, c) in widths.iter_mut().zip(row) {
+                *w = (*w).max(c.len());
+            }
+        }
+        println!("\n== {} ==", self.title);
+        let fmt_row = |cells: &[String]| {
+            cells
+                .iter()
+                .zip(&widths)
+                .map(|(c, w)| format!("{c:<w$}", w = w))
+                .collect::<Vec<_>>()
+                .join(" | ")
+        };
+        println!("{}", fmt_row(&self.header));
+        println!("{}", widths.iter().map(|w| "-".repeat(*w)).collect::<Vec<_>>().join("-|-"));
+        for row in &self.rows {
+            println!("{}", fmt_row(row));
+        }
+    }
+
+    /// Also serialize to JSON for EXPERIMENTS.md tooling.
+    pub fn to_json(&self) -> crate::util::json::Json {
+        use crate::util::json::Json;
+        Json::obj(vec![
+            ("title", Json::Str(self.title.clone())),
+            ("header", Json::Arr(self.header.iter().map(|h| Json::Str(h.clone())).collect())),
+            (
+                "rows",
+                Json::Arr(
+                    self.rows
+                        .iter()
+                        .map(|r| Json::Arr(r.iter().map(|c| Json::Str(c.clone())).collect()))
+                        .collect(),
+                ),
+            ),
+        ])
+    }
+
+    /// Append the JSON form to `target/bench-results/<file>.json`.
+    pub fn save(&self, file: &str) {
+        let dir = std::path::Path::new("target/bench-results");
+        let _ = std::fs::create_dir_all(dir);
+        let _ = std::fs::write(dir.join(file), self.to_json().pretty());
+        println!("(saved to target/bench-results/{file})");
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bench_runs_and_reports() {
+        let r = bench("noop", 1, 5, || 1 + 1);
+        assert_eq!(r.iters, 5);
+        assert!(r.mean_s >= 0.0);
+        assert!(r.median_s <= r.p95_s + 1e-12);
+    }
+
+    #[test]
+    fn table_roundtrip() {
+        let mut t = Table::new("demo", &["a", "b"]);
+        t.row(vec!["1".into(), "2".into()]);
+        let j = t.to_json();
+        assert_eq!(j.get("title").unwrap().as_str(), Some("demo"));
+        t.print();
+    }
+
+    #[test]
+    #[should_panic(expected = "arity")]
+    fn table_rejects_ragged_rows() {
+        let mut t = Table::new("demo", &["a", "b"]);
+        t.row(vec!["only-one".into()]);
+    }
+}

@@ -1,0 +1,12 @@
+//! Config system: a TOML-subset parser plus typed experiment/service
+//! configurations (the offline substitute for `toml` + `serde`).
+//!
+//! Grammar supported: `[section]` headers, `key = value` with string,
+//! integer, float, boolean and flat-array values, `#` comments. This covers
+//! everything in `configs/*.toml`.
+
+pub mod toml_lite;
+pub mod types;
+
+pub use toml_lite::{parse as parse_toml, TomlValue};
+pub use types::{ExperimentConfig, ObjectiveKind, RunnerConfig};

@@ -1,0 +1,169 @@
+//! TOML-subset parser: sections, scalar + flat-array values, comments.
+
+use std::collections::BTreeMap;
+
+#[derive(Clone, Debug, PartialEq)]
+pub enum TomlValue {
+    Str(String),
+    Int(i64),
+    Float(f64),
+    Bool(bool),
+    Array(Vec<TomlValue>),
+}
+
+impl TomlValue {
+    pub fn as_str(&self) -> Option<&str> {
+        match self {
+            TomlValue::Str(s) => Some(s),
+            _ => None,
+        }
+    }
+    pub fn as_i64(&self) -> Option<i64> {
+        match self {
+            TomlValue::Int(x) => Some(*x),
+            _ => None,
+        }
+    }
+    pub fn as_usize(&self) -> Option<usize> {
+        self.as_i64().and_then(|x| usize::try_from(x).ok())
+    }
+    pub fn as_f64(&self) -> Option<f64> {
+        match self {
+            TomlValue::Float(x) => Some(*x),
+            TomlValue::Int(x) => Some(*x as f64),
+            _ => None,
+        }
+    }
+    pub fn as_bool(&self) -> Option<bool> {
+        match self {
+            TomlValue::Bool(b) => Some(*b),
+            _ => None,
+        }
+    }
+    pub fn as_array(&self) -> Option<&[TomlValue]> {
+        match self {
+            TomlValue::Array(v) => Some(v),
+            _ => None,
+        }
+    }
+}
+
+/// `section.key -> value`; top-level keys live under the empty section `""`.
+pub type Doc = BTreeMap<String, BTreeMap<String, TomlValue>>;
+
+pub fn parse(text: &str) -> Result<Doc, String> {
+    let mut doc: Doc = BTreeMap::new();
+    let mut section = String::new();
+    for (lineno, raw) in text.lines().enumerate() {
+        let line = strip_comment(raw).trim();
+        if line.is_empty() {
+            continue;
+        }
+        if let Some(name) = line.strip_prefix('[').and_then(|s| s.strip_suffix(']')) {
+            section = name.trim().to_string();
+            doc.entry(section.clone()).or_default();
+            continue;
+        }
+        let Some((key, value)) = line.split_once('=') else {
+            return Err(format!("line {}: expected key = value, got '{raw}'", lineno + 1));
+        };
+        let v = parse_value(value.trim()).map_err(|e| format!("line {}: {e}", lineno + 1))?;
+        doc.entry(section.clone()).or_default().insert(key.trim().to_string(), v);
+    }
+    Ok(doc)
+}
+
+fn strip_comment(line: &str) -> &str {
+    // naive but sufficient: no '#' inside our config strings
+    let mut in_str = false;
+    for (i, c) in line.char_indices() {
+        match c {
+            '"' => in_str = !in_str,
+            '#' if !in_str => return &line[..i],
+            _ => {}
+        }
+    }
+    line
+}
+
+fn parse_value(s: &str) -> Result<TomlValue, String> {
+    if let Some(inner) = s.strip_prefix('"').and_then(|x| x.strip_suffix('"')) {
+        return Ok(TomlValue::Str(inner.to_string()));
+    }
+    if s == "true" {
+        return Ok(TomlValue::Bool(true));
+    }
+    if s == "false" {
+        return Ok(TomlValue::Bool(false));
+    }
+    if let Some(inner) = s.strip_prefix('[').and_then(|x| x.strip_suffix(']')) {
+        let inner = inner.trim();
+        if inner.is_empty() {
+            return Ok(TomlValue::Array(Vec::new()));
+        }
+        let items = inner
+            .split(',')
+            .map(|item| parse_value(item.trim()))
+            .collect::<Result<Vec<_>, _>>()?;
+        return Ok(TomlValue::Array(items));
+    }
+    if let Ok(i) = s.parse::<i64>() {
+        return Ok(TomlValue::Int(i));
+    }
+    if let Ok(f) = s.parse::<f64>() {
+        return Ok(TomlValue::Float(f));
+    }
+    Err(format!("cannot parse value '{s}'"))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn full_document() {
+        let doc = parse(
+            r#"
+            # experiment config
+            name = "fig1"          # inline comment
+            seed = 42
+
+            [ss]
+            r = 8
+            c = 8.0
+            importance = false
+            sweep = [2, 4, 6]
+
+            [data]
+            sizes = [2000, 20000]
+            label = "nyt-like"
+            "#,
+        )
+        .unwrap();
+        assert_eq!(doc[""]["name"], TomlValue::Str("fig1".into()));
+        assert_eq!(doc[""]["seed"], TomlValue::Int(42));
+        assert_eq!(doc["ss"]["c"].as_f64(), Some(8.0));
+        assert_eq!(doc["ss"]["importance"].as_bool(), Some(false));
+        assert_eq!(doc["ss"]["sweep"].as_array().unwrap().len(), 3);
+        assert_eq!(doc["data"]["label"].as_str(), Some("nyt-like"));
+    }
+
+    #[test]
+    fn int_coerces_to_f64_not_vice_versa() {
+        let doc = parse("x = 3\ny = 3.5").unwrap();
+        assert_eq!(doc[""]["x"].as_f64(), Some(3.0));
+        assert_eq!(doc[""]["y"].as_i64(), None);
+    }
+
+    #[test]
+    fn errors_are_line_numbered() {
+        let err = parse("ok = 1\nbroken line").unwrap_err();
+        assert!(err.contains("line 2"), "{err}");
+    }
+
+    #[test]
+    fn empty_and_comment_only() {
+        assert!(parse("").unwrap().is_empty());
+        assert!(parse("# nothing\n\n# more").unwrap().is_empty());
+    }
+}

@@ -1,0 +1,176 @@
+//! Typed configurations bound from TOML documents.
+
+use anyhow::{anyhow, Result};
+
+use crate::algorithms::{Sampling, SsParams};
+
+use super::toml_lite::{parse, Doc, TomlValue};
+
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum ObjectiveKind {
+    FeatureSqrt,
+    FeatureLog1p,
+    FacilityLocation,
+}
+
+impl ObjectiveKind {
+    pub fn from_str(s: &str) -> Result<Self> {
+        match s {
+            "feature_sqrt" | "sqrt" => Ok(Self::FeatureSqrt),
+            "feature_log1p" | "log1p" => Ok(Self::FeatureLog1p),
+            "facility_location" | "fl" => Ok(Self::FacilityLocation),
+            other => Err(anyhow!("unknown objective '{other}'")),
+        }
+    }
+}
+
+/// How a run executes (threads, compute path).
+#[derive(Clone, Debug)]
+pub struct RunnerConfig {
+    pub threads: usize,
+    pub use_pjrt: bool,
+    pub pjrt_pool: usize,
+}
+
+impl Default for RunnerConfig {
+    fn default() -> Self {
+        Self { threads: 2, use_pjrt: false, pjrt_pool: 1 }
+    }
+}
+
+/// One experiment invocation (used by `ssctl experiment` and the benches).
+#[derive(Clone, Debug)]
+pub struct ExperimentConfig {
+    pub name: String,
+    pub seed: u64,
+    pub ss: SsParams,
+    pub objective: ObjectiveKind,
+    pub runner: RunnerConfig,
+    /// experiment-specific sizes (e.g. Fig-1 n sweep)
+    pub sizes: Vec<usize>,
+    /// scale factor: 1 = CI-fast defaults, larger = closer to the paper
+    pub scale: f64,
+}
+
+impl Default for ExperimentConfig {
+    fn default() -> Self {
+        Self {
+            name: "unnamed".into(),
+            seed: 0,
+            ss: SsParams::default(),
+            objective: ObjectiveKind::FeatureSqrt,
+            runner: RunnerConfig::default(),
+            sizes: vec![],
+            scale: 1.0,
+        }
+    }
+}
+
+fn get<'d>(doc: &'d Doc, section: &str, key: &str) -> Option<&'d TomlValue> {
+    doc.get(section).and_then(|s| s.get(key))
+}
+
+impl ExperimentConfig {
+    pub fn from_toml(text: &str) -> Result<Self> {
+        let doc = parse(text).map_err(|e| anyhow!("config parse error: {e}"))?;
+        let mut cfg = ExperimentConfig::default();
+        if let Some(v) = get(&doc, "", "name").and_then(TomlValue::as_str) {
+            cfg.name = v.to_string();
+        }
+        if let Some(v) = get(&doc, "", "seed").and_then(TomlValue::as_i64) {
+            cfg.seed = v as u64;
+            cfg.ss.seed = v as u64;
+        }
+        if let Some(v) = get(&doc, "", "scale").and_then(TomlValue::as_f64) {
+            cfg.scale = v;
+        }
+        if let Some(v) = get(&doc, "", "objective").and_then(TomlValue::as_str) {
+            cfg.objective = ObjectiveKind::from_str(v)?;
+        }
+        if let Some(v) = get(&doc, "ss", "r").and_then(TomlValue::as_usize) {
+            cfg.ss.r = v;
+        }
+        if let Some(v) = get(&doc, "ss", "c").and_then(TomlValue::as_f64) {
+            cfg.ss.c = v;
+        }
+        if let Some(v) = get(&doc, "ss", "importance").and_then(TomlValue::as_bool) {
+            cfg.ss.sampling = if v { Sampling::Importance } else { Sampling::Uniform };
+        }
+        if let Some(v) = get(&doc, "runner", "threads").and_then(TomlValue::as_usize) {
+            cfg.runner.threads = v.max(1);
+        }
+        if let Some(v) = get(&doc, "runner", "use_pjrt").and_then(TomlValue::as_bool) {
+            cfg.runner.use_pjrt = v;
+        }
+        if let Some(v) = get(&doc, "runner", "pjrt_pool").and_then(TomlValue::as_usize) {
+            cfg.runner.pjrt_pool = v.max(1);
+        }
+        if let Some(v) = get(&doc, "data", "sizes").and_then(TomlValue::as_array) {
+            cfg.sizes = v.iter().filter_map(TomlValue::as_usize).collect();
+        }
+        Ok(cfg)
+    }
+
+    pub fn from_file(path: &std::path::Path) -> Result<Self> {
+        let text = std::fs::read_to_string(path)
+            .map_err(|e| anyhow!("reading config {path:?}: {e}"))?;
+        Self::from_toml(&text)
+    }
+
+    /// Apply the CI-vs-full scale knob (`SS_FULL=1` doubles everything the
+    /// paper-scale direction; benches read this).
+    pub fn effective_sizes(&self, default: &[usize]) -> Vec<usize> {
+        let base = if self.sizes.is_empty() { default.to_vec() } else { self.sizes.clone() };
+        base.iter().map(|&n| ((n as f64) * self.scale) as usize).collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn binds_full_config() {
+        let cfg = ExperimentConfig::from_toml(
+            r#"
+            name = "fig1"
+            seed = 7
+            objective = "feature_sqrt"
+            scale = 0.5
+
+            [ss]
+            r = 10
+            c = 4.0
+            importance = true
+
+            [runner]
+            threads = 3
+            use_pjrt = true
+
+            [data]
+            sizes = [100, 200]
+            "#,
+        )
+        .unwrap();
+        assert_eq!(cfg.name, "fig1");
+        assert_eq!(cfg.ss.r, 10);
+        assert_eq!(cfg.ss.c, 4.0);
+        assert_eq!(cfg.ss.sampling, Sampling::Importance);
+        assert_eq!(cfg.ss.seed, 7);
+        assert!(cfg.runner.use_pjrt);
+        assert_eq!(cfg.effective_sizes(&[1000]), vec![50, 100]);
+    }
+
+    #[test]
+    fn defaults_without_sections() {
+        let cfg = ExperimentConfig::from_toml("name = \"x\"").unwrap();
+        assert_eq!(cfg.ss.r, 8);
+        assert_eq!(cfg.ss.c, 8.0);
+        assert_eq!(cfg.effective_sizes(&[10, 20]), vec![10, 20]);
+    }
+
+    #[test]
+    fn rejects_unknown_objective() {
+        assert!(ExperimentConfig::from_toml("objective = \"nope\"").is_err());
+    }
+}

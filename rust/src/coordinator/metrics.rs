@@ -1,0 +1,88 @@
+//! Coordinator metrics: atomic counters + latency histograms, snapshotted
+//! to JSON for the service endpoint and the bench harness.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+
+use crate::util::json::Json;
+use crate::util::stats::LatencyHistogram;
+
+#[derive(Default)]
+pub struct Counters {
+    pub requests: AtomicU64,
+    pub completed: AtomicU64,
+    pub failed: AtomicU64,
+    pub items_in: AtomicU64,
+    pub items_pruned: AtomicU64,
+    pub divergence_evals: AtomicU64,
+    pub tiles_dispatched: AtomicU64,
+}
+
+pub struct Metrics {
+    pub counters: Counters,
+    pub request_latency: LatencyHistogram,
+    pub queue_wait: LatencyHistogram,
+    pub round_latency: LatencyHistogram,
+}
+
+impl Default for Metrics {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl Metrics {
+    pub fn new() -> Self {
+        Self {
+            counters: Counters::default(),
+            request_latency: LatencyHistogram::new(),
+            queue_wait: LatencyHistogram::new(),
+            round_latency: LatencyHistogram::new(),
+        }
+    }
+
+    pub fn add(&self, c: &AtomicU64, v: u64) {
+        c.fetch_add(v, Ordering::Relaxed);
+    }
+
+    pub fn snapshot(&self) -> Json {
+        let g = |c: &AtomicU64| Json::Num(c.load(Ordering::Relaxed) as f64);
+        let hist = |h: &LatencyHistogram| {
+            Json::obj(vec![
+                ("count", Json::Num(h.count() as f64)),
+                ("p50_s", Json::Num(h.percentile_secs(50.0))),
+                ("p95_s", Json::Num(h.percentile_secs(95.0))),
+                ("p99_s", Json::Num(h.percentile_secs(99.0))),
+            ])
+        };
+        Json::obj(vec![
+            ("requests", g(&self.counters.requests)),
+            ("completed", g(&self.counters.completed)),
+            ("failed", g(&self.counters.failed)),
+            ("items_in", g(&self.counters.items_in)),
+            ("items_pruned", g(&self.counters.items_pruned)),
+            ("divergence_evals", g(&self.counters.divergence_evals)),
+            ("tiles_dispatched", g(&self.counters.tiles_dispatched)),
+            ("request_latency", hist(&self.request_latency)),
+            ("queue_wait", hist(&self.queue_wait)),
+            ("round_latency", hist(&self.round_latency)),
+        ])
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn snapshot_shape() {
+        let m = Metrics::new();
+        m.add(&m.counters.requests, 3);
+        m.request_latency.record_secs(0.01);
+        let s = m.snapshot();
+        assert_eq!(s.get("requests").unwrap().as_f64(), Some(3.0));
+        assert!(s.get("request_latency").unwrap().get("p50_s").unwrap().as_f64().unwrap() > 0.0);
+        // serializes cleanly
+        let text = s.pretty();
+        assert!(crate::util::json::parse(&text).is_ok());
+    }
+}

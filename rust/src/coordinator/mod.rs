@@ -1,0 +1,23 @@
+//! Layer-3 coordinator: the deployment shape of submodular sparsification.
+//!
+//! The paper's per-round hot loop — `O(n log n)` pairwise divergences — is
+//! "small and highly parallelizable" (§1.1); this module is that claim
+//! realized as a system:
+//!
+//! * [`sharded`] — the SS leader's parallel [`DivergenceBackend`]: item
+//!   shards fan out over a worker pool, each shard computing on CPU or via
+//!   the shared PJRT tiled runtime, gathered deterministically;
+//! * [`service`] — summarization-as-a-service: bounded request queue,
+//!   request workers, cross-request tile batching at the PJRT executor,
+//!   backpressure via blocking/shedding submits;
+//! * [`metrics`] — counters + latency histograms surfaced as JSON.
+//!
+//! [`DivergenceBackend`]: crate::algorithms::DivergenceBackend
+
+pub mod metrics;
+pub mod service;
+pub mod sharded;
+
+pub use metrics::Metrics;
+pub use service::{ServiceConfig, SummarizationService, SummarizeRequest, SummarizeResponse};
+pub use sharded::{Compute, ShardedBackend};

@@ -1,0 +1,315 @@
+//! Summarization-as-a-service: the leader/worker deployment shape of SS.
+//!
+//! Requests (a feature matrix + budget + SS params) enter a bounded queue;
+//! request-worker threads drain it, run the SS → lazy-greedy pipeline
+//! (optionally through the shared PJRT runtime, which batches tile jobs
+//! *across* concurrent requests at the executor), and deliver responses
+//! through per-request channels. Backpressure: `submit` blocks when the
+//! queue is full; `try_submit` fails fast — callers choose.
+
+
+use std::sync::mpsc::{sync_channel, Receiver, SyncSender, TrySendError};
+use std::sync::{Arc, Mutex};
+use std::thread::JoinHandle;
+
+use anyhow::{anyhow, Result};
+
+use crate::algorithms::{lazy_greedy, sparsify, SsParams};
+use crate::runtime::TiledRuntime;
+use crate::submodular::FeatureBased;
+use crate::util::pool::ThreadPool;
+use crate::util::stats::Timer;
+use crate::util::vecmath::FeatureMatrix;
+
+use super::metrics::Metrics;
+use super::sharded::{Compute, ShardedBackend};
+
+pub struct SummarizeRequest {
+    /// item features (rows = ground elements)
+    pub feats: FeatureMatrix,
+    /// summary budget
+    pub k: usize,
+    pub params: SsParams,
+    /// route divergence batches through PJRT (requires service started with
+    /// a runtime); false = CPU shards
+    pub use_pjrt: bool,
+}
+
+#[derive(Clone, Debug)]
+pub struct SummarizeResponse {
+    pub summary: Vec<usize>,
+    pub value: f64,
+    /// |V| in
+    pub n: usize,
+    /// |V'| after SS
+    pub reduced: usize,
+    pub ss_rounds: usize,
+    /// end-to-end latency including queueing
+    pub latency_s: f64,
+    /// time spent queued before a worker picked it up
+    pub queue_s: f64,
+}
+
+struct QueuedJob {
+    req: SummarizeRequest,
+    enqueued: Timer,
+    reply: SyncSender<Result<SummarizeResponse>>,
+}
+
+/// Ticket for an in-flight request.
+pub struct Ticket {
+    rx: Receiver<Result<SummarizeResponse>>,
+}
+
+impl Ticket {
+    /// Block until the response is ready.
+    pub fn wait(self) -> Result<SummarizeResponse> {
+        self.rx.recv().map_err(|_| anyhow!("service worker dropped the request"))?
+    }
+}
+
+pub struct ServiceConfig {
+    /// request-worker threads
+    pub workers: usize,
+    /// bounded request-queue depth (backpressure point)
+    pub queue_depth: usize,
+    /// compute-pool threads shared by all requests' SS rounds
+    pub compute_threads: usize,
+}
+
+impl Default for ServiceConfig {
+    fn default() -> Self {
+        Self { workers: 2, queue_depth: 32, compute_threads: 2 }
+    }
+}
+
+pub struct SummarizationService {
+    tx: SyncSender<QueuedJob>,
+    metrics: Arc<Metrics>,
+    workers: Vec<JoinHandle<()>>,
+}
+
+impl SummarizationService {
+    pub fn start(config: ServiceConfig, runtime: Option<Arc<TiledRuntime>>) -> Self {
+        let metrics = Arc::new(Metrics::new());
+        let (tx, rx) = sync_channel::<QueuedJob>(config.queue_depth.max(1));
+        let rx = Arc::new(Mutex::new(rx));
+        let pool = Arc::new(ThreadPool::new(config.compute_threads.max(1), 64));
+        let workers = (0..config.workers.max(1))
+            .map(|i| {
+                let rx = Arc::clone(&rx);
+                let metrics = Arc::clone(&metrics);
+                let pool = Arc::clone(&pool);
+                let runtime = runtime.clone();
+                std::thread::Builder::new()
+                    .name(format!("ss-svc-{i}"))
+                    .spawn(move || worker_main(&rx, &metrics, &pool, runtime.as_ref()))
+                    .expect("spawn service worker")
+            })
+            .collect();
+        Self { tx, metrics, workers }
+    }
+
+    /// Blocking submit (backpressure).
+    pub fn submit(&self, req: SummarizeRequest) -> Ticket {
+        self.metrics.add(&self.metrics.counters.requests, 1);
+        let (rtx, rrx) = sync_channel(1);
+        let job = QueuedJob { req, enqueued: Timer::new(), reply: rtx };
+        self.tx.send(job).expect("service is down");
+        Ticket { rx: rrx }
+    }
+
+    /// Non-blocking submit; `Err` = queue full (shed load).
+    pub fn try_submit(&self, req: SummarizeRequest) -> std::result::Result<Ticket, SummarizeRequest> {
+        let (rtx, rrx) = sync_channel(1);
+        let job = QueuedJob { req, enqueued: Timer::new(), reply: rtx };
+        match self.tx.try_send(job) {
+            Ok(()) => {
+                self.metrics.add(&self.metrics.counters.requests, 1);
+                Ok(Ticket { rx: rrx })
+            }
+            Err(TrySendError::Full(job)) | Err(TrySendError::Disconnected(job)) => Err(job.req),
+        }
+    }
+
+    pub fn metrics(&self) -> &Metrics {
+        &self.metrics
+    }
+
+    pub fn metrics_json(&self) -> String {
+        self.metrics.snapshot().pretty()
+    }
+}
+
+impl Drop for SummarizationService {
+    fn drop(&mut self) {
+        // close the queue; workers exit when drained
+        let (dead_tx, _) = sync_channel(1);
+        let _ = std::mem::replace(&mut self.tx, dead_tx);
+        for w in self.workers.drain(..) {
+            let _ = w.join();
+        }
+    }
+}
+
+fn worker_main(
+    rx: &Mutex<Receiver<QueuedJob>>,
+    metrics: &Arc<Metrics>,
+    pool: &Arc<ThreadPool>,
+    runtime: Option<&Arc<TiledRuntime>>,
+) {
+    loop {
+        let job = {
+            let rx = rx.lock().unwrap();
+            rx.recv()
+        };
+        let Ok(job) = job else { return };
+        let queue_s = job.enqueued.elapsed_s();
+        metrics.queue_wait.record_secs(queue_s);
+        let result = handle(job.req, queue_s, metrics, pool, runtime);
+        match &result {
+            Ok(_) => metrics.add(&metrics.counters.completed, 1),
+            Err(_) => metrics.add(&metrics.counters.failed, 1),
+        }
+        let _ = job.reply.send(result);
+    }
+}
+
+fn handle(
+    req: SummarizeRequest,
+    queue_s: f64,
+    metrics: &Arc<Metrics>,
+    pool: &Arc<ThreadPool>,
+    runtime: Option<&Arc<TiledRuntime>>,
+) -> Result<SummarizeResponse> {
+    let timer = Timer::new();
+    let n = req.feats.n();
+    metrics.add(&metrics.counters.items_in, n as u64);
+    let f = Arc::new(FeatureBased::sqrt(req.feats));
+    let compute = if req.use_pjrt {
+        let rt = runtime.ok_or_else(|| anyhow!("service started without a PJRT runtime"))?;
+        Compute::Pjrt(Arc::clone(rt))
+    } else {
+        Compute::Cpu
+    };
+    let backend =
+        ShardedBackend::new(Arc::clone(&f), Arc::clone(pool), compute, Arc::clone(metrics))?;
+    let round_timer = Timer::new();
+    let ss = sparsify(&backend, &req.params);
+    metrics.round_latency.record_secs(round_timer.elapsed_s() / ss.rounds.max(1) as f64);
+    metrics.add(&metrics.counters.items_pruned, (n - ss.kept.len()) as u64);
+    let sol = lazy_greedy(f.as_ref(), &ss.kept, req.k);
+    Ok(SummarizeResponse {
+        summary: sol.set,
+        value: sol.value,
+        n,
+        reduced: ss.kept.len(),
+        ss_rounds: ss.rounds,
+        latency_s: timer.elapsed_s() + queue_s,
+        queue_s,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    fn feats(n: usize, d: usize, seed: u64) -> FeatureMatrix {
+        let mut rng = Rng::new(seed);
+        let mut m = FeatureMatrix::zeros(n, d);
+        for i in 0..n {
+            for j in 0..d {
+                m.row_mut(i)[j] = if rng.bool(0.4) { rng.f32() } else { 0.0 };
+            }
+        }
+        m
+    }
+
+    fn req(n: usize, seed: u64) -> SummarizeRequest {
+        SummarizeRequest {
+            feats: feats(n, 16, seed),
+            k: 8,
+            params: SsParams::default().with_seed(seed),
+            use_pjrt: false,
+        }
+    }
+
+    #[test]
+    fn roundtrip_single_request() {
+        let svc = SummarizationService::start(ServiceConfig::default(), None);
+        let resp = svc.submit(req(300, 1)).wait().unwrap();
+        assert_eq!(resp.summary.len(), 8);
+        assert_eq!(resp.n, 300);
+        assert!(resp.reduced < 300);
+        assert!(resp.value > 0.0);
+        assert!(resp.latency_s >= resp.queue_s);
+    }
+
+    #[test]
+    fn concurrent_requests_route_correctly() {
+        // responses must correspond to their own request (different n's)
+        let svc = SummarizationService::start(
+            ServiceConfig { workers: 3, queue_depth: 16, compute_threads: 2 },
+            None,
+        );
+        let sizes = [150usize, 220, 310, 180, 260, 400];
+        let tickets: Vec<(usize, Ticket)> =
+            sizes.iter().map(|&n| (n, svc.submit(req(n, n as u64)))).collect();
+        for (n, t) in tickets {
+            let resp = t.wait().unwrap();
+            assert_eq!(resp.n, n, "response routed to wrong request");
+            assert_eq!(resp.summary.len(), 8);
+        }
+        let m = svc.metrics().snapshot();
+        assert_eq!(m.get("completed").unwrap().as_f64(), Some(6.0));
+        assert_eq!(m.get("failed").unwrap().as_f64(), Some(0.0));
+    }
+
+    #[test]
+    fn try_submit_sheds_load_when_full() {
+        let svc = SummarizationService::start(
+            ServiceConfig { workers: 1, queue_depth: 1, compute_threads: 1 },
+            None,
+        );
+        let mut accepted = 0;
+        let mut shed = 0;
+        let mut tickets = Vec::new();
+        for i in 0..20 {
+            match svc.try_submit(req(400, i)) {
+                Ok(t) => {
+                    accepted += 1;
+                    tickets.push(t);
+                }
+                Err(_) => shed += 1,
+            }
+        }
+        assert!(accepted >= 1);
+        assert!(shed >= 1, "queue depth 1 must shed some of 20 rapid submits");
+        for t in tickets {
+            t.wait().unwrap();
+        }
+    }
+
+    #[test]
+    fn pjrt_request_without_runtime_fails_cleanly() {
+        let svc = SummarizationService::start(ServiceConfig::default(), None);
+        let mut r = req(100, 9);
+        r.use_pjrt = true;
+        let err = svc.submit(r).wait().unwrap_err().to_string();
+        assert!(err.contains("PJRT"), "{err}");
+        assert_eq!(
+            svc.metrics().counters.failed.load(std::sync::atomic::Ordering::Relaxed),
+            1
+        );
+    }
+
+    #[test]
+    fn deterministic_given_params() {
+        let svc = SummarizationService::start(ServiceConfig::default(), None);
+        let a = svc.submit(req(250, 5)).wait().unwrap();
+        let b = svc.submit(req(250, 5)).wait().unwrap();
+        assert_eq!(a.summary, b.summary);
+        assert_eq!(a.value, b.value);
+    }
+}

@@ -1,0 +1,171 @@
+//! The SS leader's parallel divergence backend: shards each round's item
+//! set across the worker pool, with each shard computing divergences either
+//! on CPU or through the shared PJRT tiled runtime.
+//!
+//! Determinism: shards are gathered positionally ([`ThreadPool::parallel_ranges`])
+//! and the per-item min is order-invariant, so the coordinator produces the
+//! same pruning decisions as the single-threaded reference backend — a
+//! property `rust/tests/coordinator_e2e.rs` asserts bit-for-bit.
+
+use std::sync::Arc;
+
+use crate::algorithms::DivergenceBackend;
+use crate::runtime::TiledRuntime;
+use crate::submodular::{FeatureBased, SubmodularFn};
+use crate::util::pool::ThreadPool;
+
+use super::metrics::Metrics;
+
+/// Where a shard's divergences are computed.
+#[derive(Clone)]
+pub enum Compute {
+    /// vectorized CPU loops (reference; also the fallback without artifacts)
+    Cpu,
+    /// tiled PJRT executor (the AOT Pallas kernels)
+    Pjrt(Arc<TiledRuntime>),
+}
+
+pub struct ShardedBackend {
+    f: Arc<FeatureBased>,
+    sing: Arc<Vec<f64>>,
+    pool: Arc<ThreadPool>,
+    compute: Compute,
+    shards: usize,
+    metrics: Arc<Metrics>,
+}
+
+impl ShardedBackend {
+    pub fn new(
+        f: Arc<FeatureBased>,
+        pool: Arc<ThreadPool>,
+        compute: Compute,
+        metrics: Arc<Metrics>,
+    ) -> anyhow::Result<Self> {
+        // singleton complements once, through the same compute path
+        let items: Vec<usize> = (0..f.n()).collect();
+        let sing = match &compute {
+            Compute::Cpu => f.singleton_complements(),
+            Compute::Pjrt(rt) => rt.singleton_complements(f.feats(), f.total_mass(), &items)?,
+        };
+        let shards = pool.threads() * 2;
+        Ok(Self { f, sing: Arc::new(sing), pool, compute, shards, metrics })
+    }
+
+    pub fn singletons(&self) -> &[f64] {
+        &self.sing
+    }
+
+    pub fn with_shards(mut self, shards: usize) -> Self {
+        self.shards = shards.max(1);
+        self
+    }
+}
+
+impl DivergenceBackend for ShardedBackend {
+    fn n(&self) -> usize {
+        self.f.n()
+    }
+
+    fn divergences(&self, probes: &[usize], items: &[usize]) -> Vec<f32> {
+        let probes: Arc<Vec<usize>> = Arc::new(probes.to_vec());
+        let items: Arc<Vec<usize>> = Arc::new(items.to_vec());
+        let probe_sing: Arc<Vec<f64>> =
+            Arc::new(probes.iter().map(|&u| self.sing[u]).collect());
+        let f = Arc::clone(&self.f);
+        let compute = self.compute.clone();
+        let chunks = self.pool.parallel_ranges(items.len(), self.shards, move |lo, hi| {
+            let chunk = &items[lo..hi];
+            match &compute {
+                Compute::Cpu => cpu_divergences(&f, &probes, &probe_sing, chunk),
+                Compute::Pjrt(rt) => rt
+                    .divergences(f.feats(), &probes, &probe_sing, chunk)
+                    .expect("pjrt divergences"),
+            }
+        });
+        let out: Vec<f32> = chunks.into_iter().flatten().collect();
+        self.metrics.add(&self.metrics.counters.divergence_evals, out.len() as u64);
+        out
+    }
+
+    fn importance_weights(&self, items: &[usize]) -> Vec<f64> {
+        items.iter().map(|&u| self.f.singleton(u) + self.sing[u]).collect()
+    }
+}
+
+/// CPU shard kernel — delegates to the blocked `FeatureBased` kernel with
+/// per-probe cached `g(u)` rows (bit-identical to the naive reference; see
+/// the perf log in EXPERIMENTS.md §Perf).
+pub fn cpu_divergences(
+    f: &FeatureBased,
+    probes: &[usize],
+    probe_sing: &[f64],
+    items: &[usize],
+) -> Vec<f32> {
+    f.divergences_block(probes, probe_sing, items)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::algorithms::CpuBackend;
+    use crate::util::rng::Rng;
+    use crate::util::vecmath::FeatureMatrix;
+
+    fn instance(n: usize, d: usize, seed: u64) -> Arc<FeatureBased> {
+        let mut rng = Rng::new(seed);
+        let mut m = FeatureMatrix::zeros(n, d);
+        for i in 0..n {
+            for j in 0..d {
+                m.row_mut(i)[j] = if rng.bool(0.4) { rng.f32() } else { 0.0 };
+            }
+        }
+        Arc::new(FeatureBased::sqrt(m))
+    }
+
+    #[test]
+    fn sharded_cpu_matches_reference_backend() {
+        let f = instance(300, 16, 1);
+        let pool = Arc::new(ThreadPool::new(4, 16));
+        let metrics = Arc::new(Metrics::new());
+        let sharded =
+            ShardedBackend::new(Arc::clone(&f), pool, Compute::Cpu, metrics).unwrap();
+        let reference = CpuBackend::new(f.as_ref());
+        let mut rng = Rng::new(2);
+        for _ in 0..5 {
+            let probes = rng.sample_indices(300, 25);
+            let items: Vec<usize> = (0..300).filter(|v| !probes.contains(v)).collect();
+            let a = sharded.divergences(&probes, &items);
+            let b = reference.divergences(&probes, &items);
+            assert_eq!(a, b, "sharded result must be bit-identical to reference");
+        }
+    }
+
+    #[test]
+    fn shard_count_does_not_change_results() {
+        let f = instance(200, 8, 3);
+        let pool = Arc::new(ThreadPool::new(3, 8));
+        let metrics = Arc::new(Metrics::new());
+        let one = ShardedBackend::new(Arc::clone(&f), Arc::clone(&pool), Compute::Cpu, Arc::clone(&metrics))
+            .unwrap()
+            .with_shards(1);
+        let many = ShardedBackend::new(Arc::clone(&f), pool, Compute::Cpu, metrics)
+            .unwrap()
+            .with_shards(13);
+        let probes: Vec<usize> = (0..20).collect();
+        let items: Vec<usize> = (20..200).collect();
+        assert_eq!(one.divergences(&probes, &items), many.divergences(&probes, &items));
+    }
+
+    #[test]
+    fn metrics_count_evals() {
+        let f = instance(100, 8, 4);
+        let pool = Arc::new(ThreadPool::new(2, 8));
+        let metrics = Arc::new(Metrics::new());
+        let b = ShardedBackend::new(f, pool, Compute::Cpu, Arc::clone(&metrics)).unwrap();
+        let _ = b.divergences(&[0, 1, 2], &(3..100).collect::<Vec<_>>());
+        assert_eq!(
+            metrics.counters.divergence_evals.load(std::sync::atomic::Ordering::Relaxed),
+            97
+        );
+    }
+}

@@ -1,0 +1,286 @@
+//! Dataset registry + binary disk cache.
+//!
+//! Benches and the service reuse generated datasets across runs; this
+//! module gives them a content-addressed cache under `target/datasets/`
+//! with a small versioned binary format (no serde offline — the format is
+//! hand-rolled and round-trip tested).
+//!
+//! Format (little-endian):
+//!   magic "SSDS" | u32 version | u32 section count |
+//!   per section: u32 tag | u64 byte len | payload
+
+use std::io::{Read, Write};
+use std::path::{Path, PathBuf};
+
+use anyhow::{anyhow, bail, Context, Result};
+
+use crate::util::vecmath::FeatureMatrix;
+
+use super::corpus::NewsDay;
+use super::text::Sentence;
+
+const MAGIC: &[u8; 4] = b"SSDS";
+const VERSION: u32 = 1;
+
+mod tag {
+    pub const FEATS: u32 = 1;
+    pub const SENTENCES: u32 = 2;
+    pub const REFERENCE: u32 = 3;
+    pub const META: u32 = 4;
+}
+
+fn put_u32(buf: &mut Vec<u8>, x: u32) {
+    buf.extend_from_slice(&x.to_le_bytes());
+}
+
+fn put_u64(buf: &mut Vec<u8>, x: u64) {
+    buf.extend_from_slice(&x.to_le_bytes());
+}
+
+fn get_u32(b: &[u8], pos: &mut usize) -> Result<u32> {
+    let v = b
+        .get(*pos..*pos + 4)
+        .ok_or_else(|| anyhow!("truncated dataset file"))?
+        .try_into()
+        .unwrap();
+    *pos += 4;
+    Ok(u32::from_le_bytes(v))
+}
+
+fn get_u64(b: &[u8], pos: &mut usize) -> Result<u64> {
+    let v = b
+        .get(*pos..*pos + 8)
+        .ok_or_else(|| anyhow!("truncated dataset file"))?
+        .try_into()
+        .unwrap();
+    *pos += 8;
+    Ok(u64::from_le_bytes(v))
+}
+
+fn encode_feats(m: &FeatureMatrix) -> Vec<u8> {
+    let mut out = Vec::with_capacity(8 + m.data().len() * 4);
+    put_u32(&mut out, m.n() as u32);
+    put_u32(&mut out, m.d as u32);
+    for &x in m.data() {
+        out.extend_from_slice(&x.to_le_bytes());
+    }
+    out
+}
+
+fn decode_feats(b: &[u8]) -> Result<FeatureMatrix> {
+    let mut pos = 0usize;
+    let n = get_u32(b, &mut pos)? as usize;
+    let d = get_u32(b, &mut pos)? as usize;
+    if b.len() != 8 + n * d * 4 {
+        bail!("feature payload size mismatch");
+    }
+    let mut m = FeatureMatrix::zeros(n, d);
+    for i in 0..n {
+        for j in 0..d {
+            let raw: [u8; 4] = b[pos..pos + 4].try_into().unwrap();
+            m.row_mut(i)[j] = f32::from_le_bytes(raw);
+            pos += 4;
+        }
+    }
+    Ok(m)
+}
+
+fn encode_sentences(ss: &[Sentence]) -> Vec<u8> {
+    let mut out = Vec::new();
+    put_u32(&mut out, ss.len() as u32);
+    for s in ss {
+        put_u32(&mut out, s.len() as u32);
+        for &w in s {
+            put_u32(&mut out, w);
+        }
+    }
+    out
+}
+
+fn decode_sentences(b: &[u8]) -> Result<Vec<Sentence>> {
+    let mut pos = 0usize;
+    let count = get_u32(b, &mut pos)? as usize;
+    let mut out = Vec::with_capacity(count);
+    for _ in 0..count {
+        let len = get_u32(b, &mut pos)? as usize;
+        let mut s = Vec::with_capacity(len);
+        for _ in 0..len {
+            s.push(get_u32(b, &mut pos)?);
+        }
+        out.push(s);
+    }
+    Ok(out)
+}
+
+/// Serialize a [`NewsDay`] to bytes.
+pub fn encode_day(day: &NewsDay) -> Vec<u8> {
+    let sections: Vec<(u32, Vec<u8>)> = vec![
+        (tag::FEATS, encode_feats(&day.feats)),
+        (tag::SENTENCES, encode_sentences(&day.sentences)),
+        (tag::REFERENCE, encode_sentences(&day.reference)),
+        (tag::META, {
+            let mut m = Vec::new();
+            put_u32(&mut m, day.k as u32);
+            put_u32(&mut m, day.n_topics as u32);
+            m
+        }),
+    ];
+    let mut out = Vec::new();
+    out.extend_from_slice(MAGIC);
+    put_u32(&mut out, VERSION);
+    put_u32(&mut out, sections.len() as u32);
+    for (t, payload) in sections {
+        put_u32(&mut out, t);
+        put_u64(&mut out, payload.len() as u64);
+        out.extend_from_slice(&payload);
+    }
+    out
+}
+
+/// Deserialize a [`NewsDay`].
+pub fn decode_day(bytes: &[u8]) -> Result<NewsDay> {
+    if bytes.len() < 12 || &bytes[..4] != MAGIC {
+        bail!("not a dataset file (bad magic)");
+    }
+    let mut pos = 4usize;
+    let version = get_u32(bytes, &mut pos)?;
+    if version != VERSION {
+        bail!("unsupported dataset version {version}");
+    }
+    let sections = get_u32(bytes, &mut pos)? as usize;
+    let mut feats = None;
+    let mut sentences = None;
+    let mut reference = None;
+    let mut k = 0usize;
+    let mut n_topics = 0usize;
+    for _ in 0..sections {
+        let t = get_u32(bytes, &mut pos)?;
+        let len = get_u64(bytes, &mut pos)? as usize;
+        let payload = bytes
+            .get(pos..pos + len)
+            .ok_or_else(|| anyhow!("truncated section {t}"))?;
+        pos += len;
+        match t {
+            tag::FEATS => feats = Some(decode_feats(payload)?),
+            tag::SENTENCES => sentences = Some(decode_sentences(payload)?),
+            tag::REFERENCE => reference = Some(decode_sentences(payload)?),
+            tag::META => {
+                let mut p = 0usize;
+                k = get_u32(payload, &mut p)? as usize;
+                n_topics = get_u32(payload, &mut p)? as usize;
+            }
+            _ => {} // forward-compatible: unknown sections skipped
+        }
+    }
+    Ok(NewsDay {
+        feats: feats.ok_or_else(|| anyhow!("missing features section"))?,
+        sentences: sentences.ok_or_else(|| anyhow!("missing sentences section"))?,
+        reference: reference.ok_or_else(|| anyhow!("missing reference section"))?,
+        k,
+        n_topics,
+    })
+}
+
+/// Content-addressed cache under `target/datasets/`.
+pub struct DatasetCache {
+    dir: PathBuf,
+}
+
+impl DatasetCache {
+    pub fn new(dir: impl AsRef<Path>) -> Result<Self> {
+        std::fs::create_dir_all(dir.as_ref()).context("creating dataset cache dir")?;
+        Ok(Self { dir: dir.as_ref().to_path_buf() })
+    }
+
+    pub fn default_location() -> Result<Self> {
+        Self::new("target/datasets")
+    }
+
+    fn path(&self, key: &str) -> PathBuf {
+        self.dir.join(format!("{key}.ssds"))
+    }
+
+    pub fn contains(&self, key: &str) -> bool {
+        self.path(key).exists()
+    }
+
+    pub fn store_day(&self, key: &str, day: &NewsDay) -> Result<()> {
+        let bytes = encode_day(day);
+        let tmp = self.path(key).with_extension("tmp");
+        std::fs::File::create(&tmp)?.write_all(&bytes)?;
+        std::fs::rename(&tmp, self.path(key))?; // atomic publish
+        Ok(())
+    }
+
+    pub fn load_day(&self, key: &str) -> Result<NewsDay> {
+        let mut bytes = Vec::new();
+        std::fs::File::open(self.path(key))
+            .with_context(|| format!("dataset '{key}' not cached"))?
+            .read_to_end(&mut bytes)?;
+        decode_day(&bytes)
+    }
+
+    /// Load-or-generate: the bench entry point.
+    pub fn day_cached(
+        &self,
+        key: &str,
+        generate: impl FnOnce() -> NewsDay,
+    ) -> Result<NewsDay> {
+        if self.contains(key) {
+            return self.load_day(key);
+        }
+        let day = generate();
+        self.store_day(key, &day)?;
+        Ok(day)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::{CorpusParams, NewsGenerator};
+
+    fn sample_day() -> NewsDay {
+        NewsGenerator::new(CorpusParams { vocab_size: 400, d: 32, ..Default::default() }, 1)
+            .day(80, 0, 2)
+    }
+
+    #[test]
+    fn roundtrip_day() {
+        let day = sample_day();
+        let decoded = decode_day(&encode_day(&day)).unwrap();
+        assert_eq!(decoded.feats, day.feats);
+        assert_eq!(decoded.sentences, day.sentences);
+        assert_eq!(decoded.reference, day.reference);
+        assert_eq!(decoded.k, day.k);
+        assert_eq!(decoded.n_topics, day.n_topics);
+    }
+
+    #[test]
+    fn rejects_corrupt() {
+        let day = sample_day();
+        let mut bytes = encode_day(&day);
+        bytes[0] = b'X';
+        assert!(decode_day(&bytes).is_err());
+        let truncated = &encode_day(&day)[..40];
+        assert!(decode_day(truncated).is_err());
+    }
+
+    #[test]
+    fn cache_store_load_and_generate_once() {
+        let dir = std::env::temp_dir().join(format!("ssds-test-{}", std::process::id()));
+        let cache = DatasetCache::new(&dir).unwrap();
+        let mut generated = 0;
+        for _ in 0..3 {
+            let day = cache
+                .day_cached("day-80-seed2", || {
+                    generated += 1;
+                    sample_day()
+                })
+                .unwrap();
+            assert_eq!(day.feats.n(), 80);
+        }
+        assert_eq!(generated, 1, "generator must run exactly once");
+        std::fs::remove_dir_all(&dir).ok();
+    }
+}

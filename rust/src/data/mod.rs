@@ -1,0 +1,18 @@
+//! Dataset substrates (DESIGN.md §3): synthetic stand-ins for the paper's
+//! licensed/gated corpora, plus the text pipeline and the ROUGE scorer.
+//!
+//! * [`text`]   — vocabulary, tokenizer, TF-IDF, feature hashing;
+//! * [`corpus`] — NYT-like daily news + DUC-like topic sets;
+//! * [`video`]  — SumMe-like frame streams with 15 simulated annotators;
+//! * [`rouge`]  — ROUGE-2 recall/precision/F1 from scratch.
+
+pub mod corpus;
+pub mod datasets;
+pub mod rouge;
+pub mod text;
+pub mod video;
+
+pub use corpus::{CorpusParams, NewsDay, NewsGenerator};
+pub use datasets::DatasetCache;
+pub use rouge::{rouge_2, rouge_n, truncate_to_words, RougeScore};
+pub use video::{frame_f1, generate as generate_video, reference_by_score, Video, VideoParams};

@@ -1,0 +1,150 @@
+//! ROUGE-N evaluation (Lin, 2004) implemented from scratch — the paper
+//! reports ROUGE-2 recall and ROUGE-2 F1 for all news experiments.
+//!
+//! Definitions (multi-reference, per Lin §3: scores computed against the
+//! concatenated reference, counts clipped):
+//!   recall    = Σ_gram min(count_cand, count_ref) / Σ_gram count_ref
+//!   precision = Σ_gram min(count_cand, count_ref) / Σ_gram count_cand
+//!   F1        = 2PR / (P + R)
+
+use std::collections::HashMap;
+
+use super::text::Sentence;
+
+#[derive(Clone, Copy, Debug, Default, PartialEq)]
+pub struct RougeScore {
+    pub recall: f64,
+    pub precision: f64,
+    pub f1: f64,
+}
+
+fn ngram_counts(sents: &[Sentence], n: usize) -> HashMap<Vec<u32>, u32> {
+    let mut counts = HashMap::new();
+    for s in sents {
+        if s.len() < n {
+            continue;
+        }
+        for w in s.windows(n) {
+            *counts.entry(w.to_vec()).or_insert(0) += 1;
+        }
+    }
+    counts
+}
+
+/// ROUGE-N of a candidate summary against a reference summary; both are
+/// sentence collections over token ids.
+pub fn rouge_n(candidate: &[Sentence], reference: &[Sentence], n: usize) -> RougeScore {
+    let cand = ngram_counts(candidate, n);
+    let refs = ngram_counts(reference, n);
+    let total_ref: u64 = refs.values().map(|&c| c as u64).sum();
+    let total_cand: u64 = cand.values().map(|&c| c as u64).sum();
+    let mut overlap: u64 = 0;
+    for (gram, &rc) in &refs {
+        if let Some(&cc) = cand.get(gram) {
+            overlap += rc.min(cc) as u64;
+        }
+    }
+    let recall = if total_ref == 0 { 0.0 } else { overlap as f64 / total_ref as f64 };
+    let precision = if total_cand == 0 { 0.0 } else { overlap as f64 / total_cand as f64 };
+    let f1 = if recall + precision == 0.0 {
+        0.0
+    } else {
+        2.0 * precision * recall / (precision + recall)
+    };
+    RougeScore { recall, precision, f1 }
+}
+
+/// ROUGE-2, the paper's metric.
+pub fn rouge_2(candidate: &[Sentence], reference: &[Sentence]) -> RougeScore {
+    rouge_n(candidate, reference, 2)
+}
+
+/// Truncate a summary to a word budget (DUC-style 50/100/200/400-word
+/// comparisons), cutting mid-sentence like the NIST evaluation does.
+pub fn truncate_to_words(summary: &[Sentence], words: usize) -> Vec<Sentence> {
+    let mut out = Vec::new();
+    let mut used = 0usize;
+    for s in summary {
+        if used >= words {
+            break;
+        }
+        let take = (words - used).min(s.len());
+        out.push(s[..take].to_vec());
+        used += take;
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn s(xs: &[u32]) -> Sentence {
+        xs.to_vec()
+    }
+
+    #[test]
+    fn identical_summaries_score_one() {
+        let summary = vec![s(&[1, 2, 3, 4]), s(&[5, 6, 7])];
+        let r = rouge_2(&summary, &summary);
+        assert!((r.recall - 1.0).abs() < 1e-12);
+        assert!((r.precision - 1.0).abs() < 1e-12);
+        assert!((r.f1 - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn disjoint_summaries_score_zero() {
+        let a = vec![s(&[1, 2, 3])];
+        let b = vec![s(&[4, 5, 6])];
+        assert_eq!(rouge_2(&a, &b), RougeScore { recall: 0.0, precision: 0.0, f1: 0.0 });
+    }
+
+    #[test]
+    fn hand_computed_example() {
+        // ref bigrams: (1,2),(2,3),(3,4) ; cand bigrams: (1,2),(2,3),(9,9)
+        let reference = vec![s(&[1, 2, 3, 4])];
+        let candidate = vec![s(&[1, 2, 3]), s(&[9, 9])];
+        let r = rouge_2(&candidate, &reference);
+        assert!((r.recall - 2.0 / 3.0).abs() < 1e-12);
+        assert!((r.precision - 2.0 / 3.0).abs() < 1e-12);
+        assert!((r.f1 - 2.0 / 3.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn clipping_prevents_gaming_by_repetition() {
+        // repeating the overlapping bigram must not inflate recall
+        let reference = vec![s(&[1, 2, 9, 8, 7])];
+        let spam = vec![s(&[1, 2]), s(&[1, 2]), s(&[1, 2]), s(&[1, 2])];
+        let honest = vec![s(&[1, 2])];
+        let r_spam = rouge_2(&spam, &reference);
+        let r_honest = rouge_2(&honest, &reference);
+        assert_eq!(r_spam.recall, r_honest.recall, "clipped recall");
+        assert!(r_spam.precision < r_honest.precision, "spam hurts precision");
+    }
+
+    #[test]
+    fn unigram_rouge1() {
+        let reference = vec![s(&[1, 2, 3])];
+        let candidate = vec![s(&[1, 4, 5])];
+        let r = rouge_n(&candidate, &reference, 1);
+        assert!((r.recall - 1.0 / 3.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn truncation_budget() {
+        let summary = vec![s(&[1, 2, 3]), s(&[4, 5, 6]), s(&[7, 8])];
+        let t = truncate_to_words(&summary, 5);
+        let total: usize = t.iter().map(|x| x.len()).sum();
+        assert_eq!(total, 5);
+        assert_eq!(t[1], vec![4, 5]);
+        assert_eq!(truncate_to_words(&summary, 100).len(), 3);
+    }
+
+    #[test]
+    fn short_sentences_skipped_for_bigrams() {
+        let reference = vec![s(&[1])]; // no bigrams
+        let candidate = vec![s(&[1, 2])];
+        let r = rouge_2(&candidate, &reference);
+        assert_eq!(r.recall, 0.0);
+    }
+}

@@ -1,0 +1,217 @@
+//! Text pipeline substrate: synthetic vocabulary, tokenization, TF-IDF and
+//! feature hashing — the replacement for the licensed corpora's
+//! preprocessing stack (sklearn TF-IDF in the paper's setup).
+
+use std::collections::HashMap;
+
+use crate::util::rng::{zipf_cdf, Rng};
+use crate::util::vecmath::{hash_str, FeatureMatrix, SparseVec};
+
+/// Synthetic vocabulary: pronounceable word strings with a Zipf rank
+/// distribution (so TF-IDF has realistic dynamics: a heavy head of
+/// stop-word-ish tokens and a long informative tail).
+pub struct Vocabulary {
+    pub words: Vec<String>,
+    cdf: Vec<f64>,
+}
+
+const ONSETS: [&str; 12] = ["b", "d", "f", "g", "k", "l", "m", "n", "p", "r", "s", "t"];
+const NUCLEI: [&str; 6] = ["a", "e", "i", "o", "u", "ai"];
+const CODAS: [&str; 8] = ["", "n", "r", "s", "t", "l", "m", "k"];
+
+impl Vocabulary {
+    pub fn new(size: usize, zipf_s: f64, seed: u64) -> Self {
+        let mut rng = Rng::new(seed);
+        let mut words = Vec::with_capacity(size);
+        let mut seen = std::collections::HashSet::new();
+        while words.len() < size {
+            let syllables = 1 + rng.below(3);
+            let mut w = String::new();
+            for _ in 0..=syllables {
+                w.push_str(ONSETS[rng.below(ONSETS.len())]);
+                w.push_str(NUCLEI[rng.below(NUCLEI.len())]);
+                w.push_str(CODAS[rng.below(CODAS.len())]);
+            }
+            if seen.insert(w.clone()) {
+                words.push(w);
+            }
+        }
+        Self { words, cdf: zipf_cdf(size, zipf_s) }
+    }
+
+    pub fn len(&self) -> usize {
+        self.words.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.words.is_empty()
+    }
+
+    /// Draw a word id from the Zipf base distribution.
+    pub fn sample(&self, rng: &mut Rng) -> u32 {
+        rng.zipf(&self.cdf) as u32
+    }
+}
+
+/// A sentence is a sequence of vocabulary ids.
+pub type Sentence = Vec<u32>;
+
+/// TF-IDF vectorizer over a collection of sentences ("documents" at the
+/// granularity the paper uses: sentence selection over TF-IDF features).
+pub struct TfIdf {
+    /// document frequency per word id
+    df: HashMap<u32, u32>,
+    n_docs: usize,
+}
+
+impl TfIdf {
+    pub fn fit(sentences: &[Sentence]) -> Self {
+        let mut df: HashMap<u32, u32> = HashMap::new();
+        for s in sentences {
+            let mut seen = std::collections::HashSet::new();
+            for &w in s {
+                if seen.insert(w) {
+                    *df.entry(w).or_insert(0) += 1;
+                }
+            }
+        }
+        Self { df, n_docs: sentences.len() }
+    }
+
+    /// Sparse TF-IDF vector: tf(w) · ln((1+N)/(1+df(w))) + 1-smoothed.
+    pub fn transform(&self, s: &Sentence) -> SparseVec {
+        let mut tf: HashMap<u32, f32> = HashMap::new();
+        for &w in s {
+            *tf.entry(w).or_insert(0.0) += 1.0;
+        }
+        let n = self.n_docs as f32;
+        let pairs = tf
+            .into_iter()
+            .map(|(w, f)| {
+                let dfw = self.df.get(&w).copied().unwrap_or(0) as f32;
+                let idf = ((1.0 + n) / (1.0 + dfw)).ln() + 1.0;
+                (w, f * idf)
+            })
+            .collect();
+        SparseVec::from_pairs(pairs)
+    }
+
+    /// Dense hashed feature matrix for a sentence collection: the ground-set
+    /// features the submodular objective consumes. Non-negative by
+    /// construction; rows L2-scaled to tame length bias.
+    pub fn features(&self, sentences: &[Sentence], d: usize) -> FeatureMatrix {
+        let mut m = FeatureMatrix::zeros(sentences.len(), d);
+        for (i, s) in sentences.iter().enumerate() {
+            let sv = self.transform(s);
+            sv.hash_into(d, m.row_mut(i));
+            // normalize to unit L1 mass scaled by sqrt(len): keeps long
+            // sentences slightly favored (as raw TF-IDF would) but bounded
+            let mass: f32 = m.row(i).iter().sum();
+            if mass > 0.0 {
+                let scale = (s.len() as f32).sqrt() / mass;
+                for x in m.row_mut(i) {
+                    *x *= scale;
+                }
+            }
+        }
+        m
+    }
+}
+
+/// Stable 32-bit id for an out-of-vocabulary token string (the service path
+/// accepts raw text).
+pub fn token_id(tok: &str) -> u32 {
+    (hash_str(tok) & 0xffff_ffff) as u32
+}
+
+/// Tokenize raw text: lowercase alphanumeric runs.
+pub fn tokenize(text: &str) -> Vec<u32> {
+    let mut toks = Vec::new();
+    let mut cur = String::new();
+    for ch in text.chars() {
+        if ch.is_alphanumeric() {
+            cur.extend(ch.to_lowercase());
+        } else if !cur.is_empty() {
+            toks.push(token_id(&cur));
+            cur.clear();
+        }
+    }
+    if !cur.is_empty() {
+        toks.push(token_id(&cur));
+    }
+    toks
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn vocabulary_unique_and_sized() {
+        let v = Vocabulary::new(500, 1.1, 1);
+        assert_eq!(v.len(), 500);
+        let set: std::collections::HashSet<_> = v.words.iter().collect();
+        assert_eq!(set.len(), 500);
+    }
+
+    #[test]
+    fn zipf_sampling_head_heavy() {
+        let v = Vocabulary::new(200, 1.2, 2);
+        let mut rng = Rng::new(3);
+        let mut counts = vec![0usize; 200];
+        for _ in 0..20_000 {
+            counts[v.sample(&mut rng) as usize] += 1;
+        }
+        let head: usize = counts[..20].iter().sum();
+        assert!(head > 20_000 / 3, "top-10% of vocab should dominate: {head}");
+    }
+
+    #[test]
+    fn tfidf_downweights_common_words() {
+        // word 0 in every sentence, word 1 in one sentence
+        let sents: Vec<Sentence> = (0..10).map(|i| if i == 0 { vec![0, 1] } else { vec![0, 2] }).collect();
+        let t = TfIdf::fit(&sents);
+        let sv = t.transform(&vec![0, 1]);
+        let w0 = sv.val[sv.idx.iter().position(|&i| i == 0).unwrap()];
+        let w1 = sv.val[sv.idx.iter().position(|&i| i == 1).unwrap()];
+        assert!(w1 > w0, "rare word must outweigh common word: {w1} vs {w0}");
+    }
+
+    #[test]
+    fn features_nonnegative_and_shaped() {
+        let mut rng = Rng::new(4);
+        let v = Vocabulary::new(100, 1.1, 5);
+        let sents: Vec<Sentence> =
+            (0..30).map(|_| (0..12).map(|_| v.sample(&mut rng)).collect()).collect();
+        let t = TfIdf::fit(&sents);
+        let m = t.features(&sents, 64);
+        assert_eq!((m.n(), m.d), (30, 64));
+        assert!(m.data().iter().all(|&x| x >= 0.0));
+        assert!(m.data().iter().any(|&x| x > 0.0));
+    }
+
+    #[test]
+    fn near_duplicate_sentences_have_near_equal_features() {
+        let v = Vocabulary::new(100, 1.1, 6);
+        let mut rng = Rng::new(7);
+        let s1: Sentence = (0..15).map(|_| v.sample(&mut rng)).collect();
+        let mut s2 = s1.clone();
+        s2[14] = v.sample(&mut rng); // one token differs
+        let many: Vec<Sentence> =
+            (0..20).map(|_| (0..15).map(|_| v.sample(&mut rng)).collect()).collect();
+        let mut all = vec![s1.clone(), s2.clone()];
+        all.extend(many);
+        let t = TfIdf::fit(&all);
+        let m = t.features(&all, 64);
+        let sim = crate::util::vecmath::cosine(m.row(0), m.row(1));
+        assert!(sim > 0.8, "near-duplicates must stay close: {sim}");
+    }
+
+    #[test]
+    fn tokenizer_basic() {
+        let toks = tokenize("Hello, World! hello");
+        assert_eq!(toks.len(), 3);
+        assert_eq!(toks[0], toks[2], "case-insensitive");
+        assert_ne!(toks[0], toks[1]);
+    }
+}

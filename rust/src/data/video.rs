@@ -1,0 +1,295 @@
+//! Synthetic video-summarization substrate: the SumMe replacement
+//! (DESIGN.md §3). Videos are piecewise-smooth trajectories in descriptor
+//! space — segments model shots, random-walk jitter models camera motion —
+//! preserving the property the paper's video experiments exploit: adjacent
+//! frames are nearly identical, so huge fractions of V are prunable.
+//!
+//! 15 simulated users vote for frames near segment boundaries ("events")
+//! plus personal points of interest; the ground-truth frame score is the
+//! vote count, mirroring SumMe's protocol (Gygli et al., ECCV 2014).
+
+use crate::util::rng::Rng;
+use crate::util::vecmath::FeatureMatrix;
+
+pub const NUM_USERS: usize = 15;
+
+pub struct Video {
+    pub name: String,
+    pub feats: FeatureMatrix,
+    /// per-user selected frame indices (sorted)
+    pub user_selections: Vec<Vec<usize>>,
+    /// vote count per frame (0..=NUM_USERS)
+    pub gt_scores: Vec<u32>,
+    /// segment boundaries (frame indices), for diagnostics
+    pub boundaries: Vec<usize>,
+}
+
+#[derive(Clone, Debug)]
+pub struct VideoParams {
+    pub d: usize,
+    /// mean frames per segment (shot length)
+    pub seg_len: usize,
+    /// random-walk jitter scale relative to segment center mass
+    pub jitter: f32,
+    /// fraction of frames each user selects
+    pub user_frac: f64,
+}
+
+impl Default for VideoParams {
+    fn default() -> Self {
+        Self { d: 256, seg_len: 180, jitter: 0.02, user_frac: 0.12 }
+    }
+}
+
+pub fn generate(name: &str, n_frames: usize, params: &VideoParams, seed: u64) -> Video {
+    let mut rng = Rng::new(seed);
+    let d = params.d;
+    let mut feats = FeatureMatrix::zeros(n_frames, d);
+
+    // --- segments ---
+    let mut boundaries = vec![0usize];
+    let mut t = 0usize;
+    while t < n_frames {
+        let len = (params.seg_len as f64 * (0.4 + 1.2 * rng.f64())) as usize;
+        t += len.max(20);
+        if t < n_frames {
+            boundaries.push(t);
+        }
+    }
+
+    // --- trajectory ---
+    let mut seg_idx = 0usize;
+    let mut center: Vec<f32> = (0..d)
+        .map(|_| if rng.bool(0.15) { rng.f32() * 2.0 } else { 0.0 })
+        .collect();
+    let mut walk = center.clone();
+    for i in 0..n_frames {
+        if seg_idx + 1 < boundaries.len() && i == boundaries[seg_idx + 1] {
+            // shot change: new center, reset walk
+            seg_idx += 1;
+            center = (0..d).map(|_| if rng.bool(0.15) { rng.f32() * 2.0 } else { 0.0 }).collect();
+            walk = center.clone();
+        }
+        for j in 0..d {
+            if center[j] > 0.0 {
+                walk[j] = (walk[j] + params.jitter * (rng.f32() - 0.5)).max(0.0);
+            }
+        }
+        feats.row_mut(i).copy_from_slice(&walk);
+    }
+
+    // --- users ---
+    let per_user = ((n_frames as f64) * params.user_frac) as usize;
+    let mut user_selections = Vec::with_capacity(NUM_USERS);
+    let mut votes = vec![0u32; n_frames];
+    for u in 0..NUM_USERS {
+        let mut urng = rng.split(u as u64 + 1);
+        let mut picks = std::collections::HashSet::new();
+        // interest windows around a random subset of boundaries
+        let mut bs: Vec<usize> = boundaries[1..].to_vec();
+        urng.shuffle(&mut bs);
+        let windows = bs.len().max(1).min(3 + urng.below(4));
+        for &b in bs.iter().take(windows) {
+            let w = 10 + urng.below(30);
+            let lo = b.saturating_sub(w / 2);
+            for f in lo..(lo + w).min(n_frames) {
+                if picks.len() < per_user {
+                    picks.insert(f);
+                }
+            }
+        }
+        // plus personal interest: a random contiguous chunk
+        while picks.len() < per_user {
+            let start = urng.below(n_frames);
+            let len = 5 + urng.below(20);
+            for f in start..(start + len).min(n_frames) {
+                if picks.len() >= per_user {
+                    break;
+                }
+                picks.insert(f);
+            }
+        }
+        let mut sel: Vec<usize> = picks.into_iter().collect();
+        sel.sort_unstable();
+        for &f in &sel {
+            votes[f] += 1;
+        }
+        user_selections.push(sel);
+    }
+
+    Video { name: name.to_string(), feats, user_selections, gt_scores: votes, boundaries }
+}
+
+/// The 25 SumMe-like videos with the paper's Table-2 frame counts.
+pub fn summe_suite(params: &VideoParams, seed: u64) -> Vec<(String, usize)> {
+    let _ = (params, seed);
+    [
+        ("Air Force One", 4494),
+        ("Base jumping", 4729),
+        ("Bearpark climbing", 3341),
+        ("Bike polo", 3064),
+        ("Bus in rock tunnel", 5131),
+        ("Car over camera", 4382),
+        ("Car railcrossing", 5075),
+        ("Cockpit landing", 9046),
+        ("Cooking", 1286),
+        ("Eiffel tower", 4971),
+        ("Excavators river crossing", 9721),
+        ("Fire Domino", 1612),
+        ("Jumps", 950),
+        ("Kids playing in leaves", 3187),
+        ("Notre Dame", 4608),
+        ("Paintball", 6096),
+        ("Paluma jump", 2574),
+        ("Playing ball", 3120),
+        ("Playing on water slide", 3065),
+        ("Saving dolphines", 6683),
+        ("Scuba", 2221),
+        ("St Maarten Landing", 1751),
+        ("Statue of Liberty", 3863),
+        ("Uncut evening flight", 9672),
+        ("Valparaiso downhill", 5178),
+    ]
+    .iter()
+    .map(|&(n, f)| (n.to_string(), f))
+    .collect()
+}
+
+/// F1/recall of a selected frame set against a reference frame set
+/// (exact frame-level set overlap).
+pub fn frame_f1(selected: &[usize], reference: &[usize]) -> (f64, f64) {
+    frame_f1_tol(selected, reference, 0)
+}
+
+/// F1/recall with a matching tolerance of ±`tol` frames: a reference frame
+/// is recalled if any selected frame lies within `tol`, and vice versa for
+/// precision. SumMe-style evaluations match at the segment level; adjacent
+/// frames are visually identical, and pruning methods legitimately return a
+/// neighbor of the annotated frame. `tol = 0` is the exact protocol.
+pub fn frame_f1_tol(selected: &[usize], reference: &[usize], tol: usize) -> (f64, f64) {
+    if selected.is_empty() || reference.is_empty() {
+        return (0.0, 0.0);
+    }
+    let near = |xs: &[usize], f: usize| -> bool {
+        // xs sorted ascending: binary search the window [f-tol, f+tol]
+        let lo = f.saturating_sub(tol);
+        let i = xs.partition_point(|&x| x < lo);
+        i < xs.len() && xs[i] <= f + tol
+    };
+    let mut sel = selected.to_vec();
+    sel.sort_unstable();
+    let mut refs = reference.to_vec();
+    refs.sort_unstable();
+    let hit_ref = refs.iter().filter(|&&f| near(&sel, f)).count();
+    let hit_sel = sel.iter().filter(|&&f| near(&refs, f)).count();
+    let recall = hit_ref as f64 / refs.len() as f64;
+    let precision = hit_sel as f64 / sel.len() as f64;
+    let f1 = if recall + precision == 0.0 {
+        0.0
+    } else {
+        2.0 * precision * recall / (precision + recall)
+    };
+    (f1, recall)
+}
+
+/// Reference summary = top-p-fraction frames by ground-truth vote score
+/// (ties broken toward earlier frames, deterministically).
+pub fn reference_by_score(video: &Video, frac: f64) -> Vec<usize> {
+    let n = video.gt_scores.len();
+    let count = ((n as f64) * frac).round().max(1.0) as usize;
+    let mut idx: Vec<usize> = (0..n).collect();
+    idx.sort_by(|&a, &b| {
+        video.gt_scores[b].cmp(&video.gt_scores[a]).then(a.cmp(&b))
+    });
+    let mut out = idx[..count.min(n)].to_vec();
+    out.sort_unstable();
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::vecmath::cosine;
+
+    #[test]
+    fn shapes_and_determinism() {
+        let p = VideoParams { d: 64, ..Default::default() };
+        let a = generate("test", 1000, &p, 1);
+        let b = generate("test", 1000, &p, 1);
+        assert_eq!(a.feats, b.feats);
+        assert_eq!(a.user_selections, b.user_selections);
+        assert_eq!(a.feats.n(), 1000);
+        assert_eq!(a.user_selections.len(), NUM_USERS);
+        assert!(a.gt_scores.iter().all(|&v| v as usize <= NUM_USERS));
+    }
+
+    #[test]
+    fn adjacent_frames_nearly_identical() {
+        let p = VideoParams { d: 64, ..Default::default() };
+        let v = generate("smooth", 2000, &p, 2);
+        let mut sims = Vec::new();
+        for i in (1..2000).step_by(97) {
+            if !v.boundaries.contains(&i) {
+                sims.push(cosine(v.feats.row(i - 1), v.feats.row(i)));
+            }
+        }
+        let avg: f32 = sims.iter().sum::<f32>() / sims.len() as f32;
+        assert!(avg > 0.98, "intra-shot frames must be near-duplicates: {avg}");
+    }
+
+    #[test]
+    fn cross_shot_frames_differ() {
+        let p = VideoParams { d: 64, ..Default::default() };
+        let v = generate("cuts", 2000, &p, 3);
+        assert!(v.boundaries.len() >= 3);
+        let (b1, b2) = (v.boundaries[1], v.boundaries[2]);
+        let sim = cosine(v.feats.row(b1 - 1), v.feats.row((b1 + b2) / 2));
+        assert!(sim < 0.9, "different shots must differ: {sim}");
+    }
+
+    #[test]
+    fn votes_concentrate_near_boundaries() {
+        let p = VideoParams { d: 32, ..Default::default() };
+        let v = generate("votes", 3000, &p, 4);
+        let near: u32 = v
+            .boundaries
+            .iter()
+            .flat_map(|&b| b.saturating_sub(20)..(b + 20).min(3000))
+            .map(|f| v.gt_scores[f])
+            .sum();
+        let total: u32 = v.gt_scores.iter().sum();
+        assert!(
+            near as f64 > 0.3 * total as f64,
+            "boundary windows should attract votes: {near}/{total}"
+        );
+    }
+
+    #[test]
+    fn frame_f1_hand_example() {
+        let (f1, recall) = frame_f1(&[1, 2, 3, 4], &[3, 4, 5, 6]);
+        assert!((recall - 0.5).abs() < 1e-12);
+        assert!((f1 - 0.5).abs() < 1e-12);
+        assert_eq!(frame_f1(&[], &[1]), (0.0, 0.0));
+    }
+
+    #[test]
+    fn reference_by_score_picks_top_voted() {
+        let p = VideoParams { d: 32, ..Default::default() };
+        let v = generate("ref", 1000, &p, 5);
+        let r = reference_by_score(&v, 0.1);
+        assert_eq!(r.len(), 100);
+        let min_in: u32 = r.iter().map(|&f| v.gt_scores[f]).min().unwrap();
+        let max_out: u32 =
+            (0..1000).filter(|f| !r.contains(f)).map(|f| v.gt_scores[f]).max().unwrap();
+        assert!(min_in >= max_out.saturating_sub(0).min(min_in), "top frames selected");
+        assert!(min_in + 1 >= max_out, "selection ~ threshold on votes: {min_in} vs {max_out}");
+    }
+
+    #[test]
+    fn suite_matches_table2() {
+        let suite = summe_suite(&VideoParams::default(), 0);
+        assert_eq!(suite.len(), 25);
+        assert_eq!(suite[0], ("Air Force One".to_string(), 4494));
+        assert_eq!(suite[12], ("Jumps".to_string(), 950));
+    }
+}

@@ -1,0 +1,123 @@
+//! Ablations over the design choices DESIGN.md calls out: §3.4's
+//! improvements (importance sampling, Wei-prune pre-pass, bi-directional
+//! greedy post-reduction), the c/r knobs, and the non-monotone extension.
+
+use crate::algorithms::{
+    bidirectional_greedy, lazy_greedy, sparsify, sparsify_candidates, wei_prune, CpuBackend,
+    Sampling, SsParams,
+};
+use crate::bench::Table;
+use crate::data::{CorpusParams, NewsGenerator};
+use crate::submodular::{FeatureBased, SparsificationObjective, SubmodularFn};
+use crate::util::stats::Timer;
+
+/// Run SS variants on one news day and report |V'|, rel-utility and time.
+pub fn ablation_variants(n: usize, seed: u64) -> Table {
+    let g = NewsGenerator::new(CorpusParams::default(), seed);
+    let day = g.day(n, 0, seed);
+    let f = FeatureBased::sqrt(day.feats.clone());
+    let all: Vec<usize> = (0..f.n()).collect();
+    let k = day.k;
+    let full = lazy_greedy(&f, &all, k);
+    let backend = CpuBackend::new(&f);
+    let sing: Vec<f64> = backend.singletons().to_vec();
+
+    let mut t = Table::new(
+        "Ablation — SS variants (§3.4 improvements)",
+        &["variant", "|V'|", "rel_utility", "time_s"],
+    );
+    let mut push = |name: &str, kept: &[usize], secs: f64| {
+        let sol = lazy_greedy(&f, kept, k);
+        t.row(vec![
+            name.to_string(),
+            kept.len().to_string(),
+            format!("{:.4}", sol.value / full.value),
+            format!("{:.3}", secs),
+        ]);
+    };
+
+    // vanilla
+    let timer = Timer::new();
+    let base = sparsify(&backend, &SsParams::default().with_seed(seed));
+    push("ss_uniform", &base.kept, timer.elapsed_s());
+
+    // importance sampling (§3.4 #2)
+    let timer = Timer::new();
+    let imp = sparsify(
+        &backend,
+        &SsParams::default().with_seed(seed).with_sampling(Sampling::Importance),
+    );
+    push("ss_importance", &imp.kept, timer.elapsed_s());
+
+    // Wei-prune pre-pass (§3.4 #1)
+    let timer = Timer::new();
+    let surviving = wei_prune(&f, &all, k, Some(&sing));
+    let pre = sparsify_candidates(&backend, &surviving, &SsParams::default().with_seed(seed));
+    push("wei_prune+ss", &pre.kept, timer.elapsed_s());
+
+    // bidirectional-greedy post-reduction on h over V' (§3.4 #3)
+    let timer = Timer::new();
+    let eps = base.pruned_max_divergence.max(0.0);
+    // h is defined on the reduced set: remap indices V' -> [0, |V'|)
+    let kept = &base.kept;
+    let graph = crate::graph::SubmodularityGraph::with_singletons(&f, sing.clone());
+    let h = SparsificationObjective::from_weights(kept.len(), eps, |u, v| {
+        graph.weight(kept[u], kept[v])
+    });
+    let local: Vec<usize> = (0..kept.len()).collect();
+    let reduced_local = bidirectional_greedy(&h, &local, seed, true);
+    let mut post: Vec<usize> = reduced_local.set.iter().map(|&i| kept[i]).collect();
+    // h maximization may shrink below k: keep at least the probes
+    if post.len() < k {
+        post = kept.clone();
+    }
+    post.sort_unstable();
+    push("ss+bidir_reduce", &post, timer.elapsed_s());
+
+    t
+}
+
+/// c-sweep: shrink-rate / quality / work tradeoff.
+pub fn ablation_c_sweep(n: usize, seed: u64) -> Table {
+    let g = NewsGenerator::new(CorpusParams::default(), seed);
+    let day = g.day(n, 0, seed);
+    let f = FeatureBased::sqrt(day.feats.clone());
+    let all: Vec<usize> = (0..f.n()).collect();
+    let k = day.k;
+    let full = lazy_greedy(&f, &all, k);
+    let backend = CpuBackend::new(&f);
+    let mut t = Table::new(
+        "Ablation — c sweep (paper fixes c = 8: shrink √2/4 per round)",
+        &["c", "rounds", "|V'|", "divergence_evals", "rel_utility"],
+    );
+    for &c in &[2.0f64, 4.0, 8.0, 16.0, 32.0] {
+        let ss = sparsify(&backend, &SsParams { c, ..SsParams::default().with_seed(seed) });
+        let sol = lazy_greedy(&f, &ss.kept, k);
+        t.row(vec![
+            format!("{c}"),
+            ss.rounds.to_string(),
+            ss.kept.len().to_string(),
+            ss.divergence_evals.to_string(),
+            format!("{:.4}", sol.value / full.value),
+        ]);
+    }
+    t
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn variants_table_builds() {
+        let t = ablation_variants(250, 3);
+        let rows = t.to_json();
+        assert_eq!(rows.get("rows").unwrap().as_arr().unwrap().len(), 4);
+    }
+
+    #[test]
+    fn c_sweep_builds() {
+        let t = ablation_c_sweep(200, 5);
+        assert_eq!(t.to_json().get("rows").unwrap().as_arr().unwrap().len(), 5);
+    }
+}

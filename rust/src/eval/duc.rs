@@ -1,0 +1,130 @@
+//! DUC-2001-like experiments: Figures 6/7 (60 topic sets, 400/200-word
+//! references) and Table 1 (four named topics × four word budgets).
+
+use crate::bench::Table;
+use crate::data::rouge::{rouge_2, truncate_to_words};
+use crate::data::text::Sentence;
+use crate::data::{CorpusParams, NewsGenerator};
+use crate::submodular::FeatureBased;
+use crate::util::stats::Samples;
+
+use super::runners::{run_trio, TrioParams};
+
+fn duc_generator(seed: u64) -> NewsGenerator {
+    NewsGenerator::new(CorpusParams::duc_like(), seed)
+}
+
+/// Evaluate one topic set at a reference word budget: select a summary with
+/// each method, truncate both sides DUC-style, score ROUGE-2 + F1.
+fn eval_topic(
+    sentences: &[Sentence],
+    reference: &[Sentence],
+    feats: crate::util::vecmath::FeatureMatrix,
+    k: usize,
+    words: usize,
+    seed: u64,
+) -> Vec<(String, f64, f64, f64)> {
+    let f = FeatureBased::sqrt(feats);
+    let rs = run_trio(&f, &TrioParams::paper(k, seed));
+    let ref_trunc = truncate_to_words(reference, words);
+    rs.iter()
+        .map(|m| {
+            let chosen: Vec<Sentence> = m.set.iter().map(|&i| sentences[i].clone()).collect();
+            let cand = truncate_to_words(&chosen, words);
+            let score = rouge_2(&cand, &ref_trunc);
+            (m.method.to_string(), score.recall, score.f1, m.rel_utility)
+        })
+        .collect()
+}
+
+/// **Figures 6 & 7**: stats over `sets` topic sets at a given reference word
+/// count (400 for Fig 6, 200 for Fig 7). [paper: SS ≈ lazy greedy on all
+/// three metrics, both above sieve-streaming].
+pub fn fig67(sets: usize, n_per_set: usize, words: usize, seed: u64) -> Table {
+    let g = duc_generator(seed);
+    let mut per_method: Vec<(&str, Samples, Samples, Samples)> = vec![
+        ("lazy_greedy", Samples::new(), Samples::new(), Samples::new()),
+        ("sieve", Samples::new(), Samples::new(), Samples::new()),
+        ("ss", Samples::new(), Samples::new(), Samples::new()),
+    ];
+    for i in 0..sets {
+        let topic = g.duc_topic(n_per_set, seed.wrapping_add(i as u64 * 13));
+        let rows = eval_topic(
+            &topic.sentences,
+            &topic.reference,
+            topic.feats.clone(),
+            topic.k.min(n_per_set / 4),
+            words,
+            seed,
+        );
+        for (mi, (_m, rouge, f1, rel)) in rows.iter().enumerate() {
+            per_method[mi].1.push(*rouge);
+            per_method[mi].2.push(*f1);
+            per_method[mi].3.push(*rel);
+        }
+    }
+    let mut t = Table::new(
+        &format!("Figures 6/7 — DUC-like {sets} topic sets, {words}-word references (median [q1, q3])"),
+        &["method", "rel_utility", "ROUGE-2", "F1"],
+    );
+    for (m, rouge, f1, rel) in &per_method {
+        let f = |s: &Samples| {
+            format!("{:.3} [{:.3}, {:.3}]", s.percentile(50.0), s.percentile(25.0), s.percentile(75.0))
+        };
+        t.row(vec![m.to_string(), f(rel), f(rouge), f(f1)]);
+    }
+    t
+}
+
+/// **Table 1**: four named topics × word budgets {400, 200, 100, 50} ×
+/// methods {lazy greedy, sieve, SS}: ROUGE-2 and F1. [paper: SS matches
+/// lazy greedy to ~3 decimals on every cell; sieve lower].
+pub fn table1(n_per_topic: usize, seed: u64) -> Table {
+    let topics = ["Daycare", "Healthcare", "Pres92", "Robert Gates"];
+    let g = duc_generator(seed);
+    let mut t = Table::new(
+        "Table 1 — DUC-like four-topic summarization (ROUGE-2 / F1)",
+        &["topic", "words", "lazy_R2", "lazy_F1", "sieve_R2", "sieve_F1", "ss_R2", "ss_F1"],
+    );
+    for (ti, topic_name) in topics.iter().enumerate() {
+        let topic = g.duc_topic(n_per_topic, seed.wrapping_add(ti as u64 * 101));
+        for &words in &[400usize, 200, 100, 50] {
+            let rows = eval_topic(
+                &topic.sentences,
+                &topic.reference,
+                topic.feats.clone(),
+                topic.k.min(n_per_topic / 4),
+                words,
+                seed,
+            );
+            t.row(vec![
+                topic_name.to_string(),
+                words.to_string(),
+                format!("{:.3}", rows[0].1),
+                format!("{:.3}", rows[0].2),
+                format!("{:.3}", rows[1].1),
+                format!("{:.3}", rows[1].2),
+                format!("{:.3}", rows[2].1),
+                format!("{:.3}", rows[2].2),
+            ]);
+        }
+    }
+    t
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fig67_builds_with_three_methods() {
+        let t = fig67(3, 120, 200, 11);
+        assert_eq!(t.to_json().get("rows").unwrap().as_arr().unwrap().len(), 3);
+    }
+
+    #[test]
+    fn table1_has_16_rows() {
+        let t = table1(100, 13);
+        assert_eq!(t.to_json().get("rows").unwrap().as_arr().unwrap().len(), 16);
+    }
+}

@@ -1,0 +1,12 @@
+//! Experiment drivers: one function per paper figure/table (DESIGN.md §5
+//! maps each to its bench target). Every driver prints + returns a
+//! [`Table`](crate::bench::Table) whose caption records the paper's
+//! expected *shape* so the reproduction claim is checkable from the output.
+
+pub mod ablation;
+pub mod duc;
+pub mod news;
+pub mod runners;
+pub mod video_eval;
+
+pub use runners::{run_trio, MethodResult, TrioParams};

@@ -1,0 +1,125 @@
+//! Shared experiment running machinery: execute the paper's three methods
+//! (lazy greedy / sieve-streaming / SS+lazy-greedy) on a ground set and
+//! collect utility, timing and quality metrics.
+
+use crate::algorithms::{
+    lazy_greedy, sieve_streaming, sparsify, CpuBackend, DivergenceBackend, SieveParams, Solution,
+    SsParams,
+};
+use crate::data::rouge::{rouge_2, RougeScore};
+use crate::data::text::Sentence;
+use crate::submodular::{FeatureBased, SubmodularFn};
+use crate::util::stats::Timer;
+
+/// One method's outcome on one ground set.
+#[derive(Clone, Debug)]
+pub struct MethodResult {
+    pub method: &'static str,
+    pub value: f64,
+    /// f(S) / f(S_lazy_greedy) — the paper's relative utility
+    pub rel_utility: f64,
+    pub time_s: f64,
+    pub set: Vec<usize>,
+    /// |V'| for SS, n for offline methods, memory bound for sieve
+    pub working_set: usize,
+}
+
+/// The paper's standard trio, run on a feature-based objective.
+pub struct TrioParams {
+    pub k: usize,
+    pub ss: SsParams,
+    pub sieve: SieveParams,
+}
+
+impl TrioParams {
+    pub fn paper(k: usize, seed: u64) -> Self {
+        Self { k, ss: SsParams::default().with_seed(seed), sieve: SieveParams::paper_default() }
+    }
+}
+
+pub fn run_trio(f: &FeatureBased, params: &TrioParams) -> Vec<MethodResult> {
+    run_trio_with_backend(f, params, None)
+}
+
+/// `backend`: override the SS divergence backend (PJRT / sharded
+/// coordinator); `None` = single-threaded CPU reference.
+pub fn run_trio_with_backend(
+    f: &FeatureBased,
+    params: &TrioParams,
+    backend: Option<&dyn DivergenceBackend>,
+) -> Vec<MethodResult> {
+    let n = f.n();
+    let all: Vec<usize> = (0..n).collect();
+    let k = params.k.min(n);
+
+    // --- lazy greedy (the quality reference) ---
+    let lg = lazy_greedy(f, &all, k);
+    let lg_value = lg.value.max(1e-12);
+
+    // --- sieve-streaming ---
+    let sv = sieve_streaming(f, &all, k, &params.sieve);
+
+    // --- SS + lazy greedy ---
+    let t = Timer::new();
+    let owned_backend;
+    let be: &dyn DivergenceBackend = match backend {
+        Some(b) => b,
+        None => {
+            owned_backend = CpuBackend::new(f);
+            &owned_backend
+        }
+    };
+    let ss = sparsify(be, &params.ss);
+    let ss_sol = lazy_greedy(f, &ss.kept, k);
+    let ss_time = t.elapsed_s();
+
+    let mk = |method: &'static str, sol: &Solution, time_s: f64, ws: usize| MethodResult {
+        method,
+        value: sol.value,
+        rel_utility: sol.value / lg_value,
+        time_s,
+        set: sol.set.clone(),
+        working_set: ws,
+    };
+    vec![
+        mk("lazy_greedy", &lg, lg.wall_s, n),
+        mk("sieve", &sv, sv.wall_s, crate::algorithms::sieve_streaming::sieve_memory_elements(k, &params.sieve).min(n)),
+        mk("ss", &ss_sol, ss_time, ss.kept.len()),
+    ]
+}
+
+/// ROUGE-2 of a sentence-selection solution against a reference.
+pub fn rouge_of(set: &[usize], sentences: &[Sentence], reference: &[Sentence]) -> RougeScore {
+    let chosen: Vec<Sentence> = set.iter().map(|&i| sentences[i].clone()).collect();
+    rouge_2(&chosen, reference)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::{CorpusParams, NewsGenerator};
+
+    #[test]
+    fn trio_ordering_and_shapes() {
+        let g = NewsGenerator::new(
+            CorpusParams { vocab_size: 600, d: 64, ..Default::default() },
+            1,
+        );
+        let day = g.day(300, 4, 3);
+        let f = FeatureBased::sqrt(day.feats.clone());
+        let rs = run_trio(&f, &TrioParams::paper(day.k, 7));
+        assert_eq!(rs.len(), 3);
+        let lg = &rs[0];
+        let sieve = &rs[1];
+        let ss = &rs[2];
+        assert_eq!(lg.rel_utility, 1.0);
+        assert!(sieve.value <= lg.value + 1e-9, "sieve cannot beat lazy greedy");
+        assert!(ss.rel_utility > 0.85, "ss rel utility {r}", r = ss.rel_utility);
+        assert!(ss.working_set < 300, "ss must reduce the ground set");
+        // ROUGE is computable for each
+        for r in &rs {
+            let score = rouge_of(&r.set, &day.sentences, &day.reference);
+            assert!(score.recall >= 0.0 && score.recall <= 1.0);
+        }
+    }
+}

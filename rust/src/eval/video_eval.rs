@@ -1,0 +1,169 @@
+//! Video experiments: Table 2 (per-video |V'| and timing) and Figures 8–11
+//! (F1/recall against score-based references and per-user summaries).
+
+use crate::bench::Table;
+use crate::data::video::{self, frame_f1_tol, reference_by_score, Video, VideoParams};
+use crate::submodular::FeatureBased;
+
+use super::runners::{run_trio, MethodResult, TrioParams};
+
+/// Frame-match tolerance (±frames) for F1/recall: SumMe matches at the
+/// segment level, and adjacent frames are visually identical (DESIGN.md §3).
+pub const MATCH_TOL: usize = 8;
+
+pub struct VideoRecord {
+    pub video: Video,
+    pub results: Vec<MethodResult>,
+}
+
+/// Run the paper's protocol on one synthetic video: each method selects
+/// k = 15% of frames; sieve memory = 10k frames worth.
+pub fn run_video(name: &str, n_frames: usize, params: &VideoParams, seed: u64) -> VideoRecord {
+    let v = video::generate(name, n_frames, params, seed);
+    let f = FeatureBased::sqrt(v.feats.clone());
+    let k = ((n_frames as f64) * 0.15) as usize;
+    let mut trio = TrioParams::paper(k, seed);
+    trio.sieve.max_thresholds = 10; // sieve memory 10·k (paper's video setup)
+    // video budgets are huge (k = 0.15·n); keep |V'| ≈ 1.5·k like the
+    // paper's Table 2 (e.g. 1031 kept for k = 674)
+    trio.ss.min_keep = k + k / 2;
+    let results = run_trio(&f, &trio);
+    VideoRecord { video: v, results }
+}
+
+/// **Table 2**: per-video #frames, |V'|, and per-method time. [paper: SS
+/// time ~5–15% of greedy; |V'| a fraction of #frames; sieve fastest].
+///
+/// The paper's "Lazy Greedy" column behaves like an `O(n·k)`-evaluation
+/// greedy (its oracle re-evaluates solutions non-incrementally); our lazy
+/// greedy over an *incremental* coverage state is a substantially stronger
+/// baseline. We therefore report both: `t_naive_s` reproduces the paper's
+/// timing shape (SS ≪ greedy at video budgets k = 0.15·n), `t_lazy_s` shows
+/// the honest gap against the stronger baseline (EXPERIMENTS.md §Deviations).
+pub fn table2(suite: &[(String, usize)], params: &VideoParams, seed: u64) -> (Table, Vec<VideoRecord>) {
+    let mut t = Table::new(
+        "Table 2 — videos: frames, |V'|, time (s) per method",
+        &["video", "#frames", "|V'|", "t_naive_s", "t_lazy_s", "t_sieve_s", "t_ss_s", "rel_ss"],
+    );
+    let mut records = Vec::new();
+    for (i, (name, frames)) in suite.iter().enumerate() {
+        let rec = run_video(name, *frames, params, seed.wrapping_add(i as u64 * 31));
+        // the paper-equivalent baseline: non-lazy greedy, O(n·k) evaluations
+        let f = FeatureBased::sqrt(rec.video.feats.clone());
+        let all: Vec<usize> = (0..rec.video.feats.n()).collect();
+        let k = ((*frames as f64) * 0.15) as usize;
+        let naive = crate::algorithms::greedy(&f, &all, k);
+        t.row(vec![
+            name.clone(),
+            frames.to_string(),
+            rec.results[2].working_set.to_string(),
+            format!("{:.3}", naive.wall_s),
+            format!("{:.3}", rec.results[0].time_s),
+            format!("{:.3}", rec.results[1].time_s),
+            format!("{:.3}", rec.results[2].time_s),
+            format!("{:.4}", rec.results[2].rel_utility),
+        ]);
+        records.push(rec);
+    }
+    (t, records)
+}
+
+/// **Figures 8/9**: F1 and recall vs score-based reference summaries of
+/// sizes p ∈ [0.02, 0.32]·|V| (plus the "first 15% frames" control).
+pub fn fig89(records: &[VideoRecord]) -> Table {
+    let fracs = [0.02, 0.08, 0.15, 0.32];
+    let mut t = Table::new(
+        "Figures 8/9 — F1 / recall vs ground-truth-score references  [paper: SS ≈ or > lazy greedy; first-15% control trails]",
+        &["video", "p", "lazy_F1", "sieve_F1", "ss_F1", "first15_F1", "lazy_rec", "sieve_rec", "ss_rec", "first15_rec"],
+    );
+    for rec in records {
+        let n = rec.video.feats.n();
+        let first15: Vec<usize> = (0..((n as f64 * 0.15) as usize)).collect();
+        for &p in &fracs {
+            let reference = reference_by_score(&rec.video, p);
+            let scores: Vec<(f64, f64)> = rec
+                .results
+                .iter()
+                .map(|m| frame_f1_tol(&m.set, &reference, MATCH_TOL))
+                .chain(std::iter::once(frame_f1_tol(&first15, &reference, MATCH_TOL)))
+                .collect();
+            t.row(vec![
+                rec.video.name.clone(),
+                format!("{p:.2}"),
+                format!("{:.3}", scores[0].0),
+                format!("{:.3}", scores[1].0),
+                format!("{:.3}", scores[2].0),
+                format!("{:.3}", scores[3].0),
+                format!("{:.3}", scores[0].1),
+                format!("{:.3}", scores[1].1),
+                format!("{:.3}", scores[2].1),
+                format!("{:.3}", scores[3].1),
+            ]);
+        }
+    }
+    t
+}
+
+/// **Figures 10/11**: F1 and recall vs each of the 15 user summaries,
+/// averaged per video.
+pub fn fig1011(records: &[VideoRecord]) -> Table {
+    let mut t = Table::new(
+        "Figures 10/11 — avg F1 / recall vs 15 user summaries",
+        &["video", "lazy_F1", "sieve_F1", "ss_F1", "first15_F1", "lazy_rec", "sieve_rec", "ss_rec", "first15_rec"],
+    );
+    for rec in records {
+        let n = rec.video.feats.n();
+        let first15: Vec<usize> = (0..((n as f64 * 0.15) as usize)).collect();
+        let sets: Vec<&[usize]> = rec
+            .results
+            .iter()
+            .map(|m| m.set.as_slice())
+            .chain(std::iter::once(first15.as_slice()))
+            .collect();
+        let mut avg = vec![(0.0f64, 0.0f64); sets.len()];
+        for user in &rec.video.user_selections {
+            for (i, s) in sets.iter().enumerate() {
+                let (f1, rec_) = frame_f1_tol(s, user, MATCH_TOL);
+                avg[i].0 += f1;
+                avg[i].1 += rec_;
+            }
+        }
+        let u = rec.video.user_selections.len() as f64;
+        for a in &mut avg {
+            a.0 /= u;
+            a.1 /= u;
+        }
+        t.row(vec![
+            rec.video.name.clone(),
+            format!("{:.3}", avg[0].0),
+            format!("{:.3}", avg[1].0),
+            format!("{:.3}", avg[2].0),
+            format!("{:.3}", avg[3].0),
+            format!("{:.3}", avg[0].1),
+            format!("{:.3}", avg[1].1),
+            format!("{:.3}", avg[2].1),
+            format!("{:.3}", avg[3].1),
+        ]);
+    }
+    t
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn video_pipeline_end_to_end() {
+        let params = VideoParams { d: 64, seg_len: 60, ..Default::default() };
+        let suite = vec![("Tiny clip".to_string(), 500), ("Second clip".to_string(), 700)];
+        let (t2, records) = table2(&suite, &params, 3);
+        assert_eq!(t2.to_json().get("rows").unwrap().as_arr().unwrap().len(), 2);
+        assert_eq!(records.len(), 2);
+        // SS must substantially reduce frames on smooth video
+        assert!(records[0].results[2].working_set < 500);
+        let f89 = fig89(&records);
+        assert_eq!(f89.to_json().get("rows").unwrap().as_arr().unwrap().len(), 8);
+        let f1011 = fig1011(&records);
+        assert_eq!(f1011.to_json().get("rows").unwrap().as_arr().unwrap().len(), 2);
+    }
+}

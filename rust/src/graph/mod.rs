@@ -1,0 +1,14 @@
+//! The submodularity graph `G(V, E, w)` of paper §2.
+//!
+//! Nodes are ground elements; the directed edge `u → v` carries
+//! `w_{uv} = f(v|u) − f(u|V∖u)` (Eq. 3): the worst-case net loss of pruning
+//! head `v` while retaining tail `u`. [`SubmodularityGraph`] evaluates
+//! weights on demand from any [`SubmodularFn`]; the conditional variant
+//! `w_{uv|S} = f(v|S+u) − f(u|V∖u)` (Eq. 4) threads a context set `S`.
+//!
+//! Dense materialization is `O(n²)` and reserved for tests/diagnostics —
+//! SS's entire point is that pruning needs only `O(n log n)` of these.
+
+pub mod weights;
+
+pub use weights::SubmodularityGraph;

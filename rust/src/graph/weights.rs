@@ -1,0 +1,187 @@
+//! Edge-weight evaluation on the submodularity graph.
+
+use crate::submodular::SubmodularFn;
+
+/// On-demand edge-weight oracle over a submodular function.
+pub struct SubmodularityGraph<'a> {
+    f: &'a dyn SubmodularFn,
+    /// precomputed `f(u|V∖u)` for all u (paper: "precomputed once in linear time")
+    sing: Vec<f64>,
+}
+
+impl<'a> SubmodularityGraph<'a> {
+    pub fn new(f: &'a dyn SubmodularFn) -> Self {
+        let sing = f.singleton_complements();
+        Self { f, sing }
+    }
+
+    /// Reuse an existing singleton-complement vector (the coordinator
+    /// computes it through PJRT and shares it).
+    pub fn with_singletons(f: &'a dyn SubmodularFn, sing: Vec<f64>) -> Self {
+        assert_eq!(sing.len(), f.n());
+        Self { f, sing }
+    }
+
+    pub fn n(&self) -> usize {
+        self.f.n()
+    }
+
+    pub fn singletons(&self) -> &[f64] {
+        &self.sing
+    }
+
+    /// `w_{uv} = f(v|u) − f(u|V∖u)` (Eq. 3). `w_{uu} = −f(u|V∖u) ≤ 0`.
+    pub fn weight(&self, u: usize, v: usize) -> f64 {
+        let pair = if u == v { 0.0 } else { self.f.pair_gain(u, v) };
+        pair - self.sing[u]
+    }
+
+    /// Conditional weight `w_{uv|S} = f(v|S+u) − f(u|V∖u)` (Eq. 4),
+    /// evaluated from scratch (used in tests for Lemma 1; the incremental
+    /// path lives in the SS algorithm itself).
+    pub fn weight_given(&self, s: &[usize], u: usize, v: usize) -> f64 {
+        debug_assert!(!s.contains(&u) && !s.contains(&v) && u != v);
+        let mut su = s.to_vec();
+        su.push(u);
+        let f_su = self.f.eval(&su);
+        su.push(v);
+        let f_suv = self.f.eval(&su);
+        (f_suv - f_su) - self.sing[u]
+    }
+
+    /// Divergence `w_{U,v} = min_{u∈U} w_{uv}` (Definition 2).
+    pub fn divergence(&self, us: &[usize], v: usize) -> f64 {
+        us.iter().map(|&u| self.weight(u, v)).fold(f64::INFINITY, f64::min)
+    }
+
+    /// Full dense weight matrix (row = tail u, col = head v). Tests only.
+    pub fn dense(&self) -> Vec<Vec<f64>> {
+        let n = self.n();
+        (0..n).map(|u| (0..n).map(|v| self.weight(u, v)).collect()).collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::submodular::{Concave, FeatureBased, SubmodularFn};
+    use crate::util::prop::check_seeded;
+    use crate::util::rng::Rng;
+    use crate::util::vecmath::FeatureMatrix;
+
+    fn instance(n: usize, d: usize, seed: u64) -> FeatureBased {
+        let mut rng = Rng::new(seed);
+        let mut m = FeatureMatrix::zeros(n, d);
+        for i in 0..n {
+            for j in 0..d {
+                m.row_mut(i)[j] = if rng.bool(0.5) { rng.f32() * 2.0 } else { 0.0 };
+            }
+        }
+        FeatureBased::new(m, Concave::Sqrt)
+    }
+
+    #[test]
+    fn lemma3_directed_triangle_inequality() {
+        // w_vx <= w_vu + w_ux for all triples (paper Lemma 3)
+        let f = instance(12, 6, 1);
+        let g = SubmodularityGraph::new(&f);
+        for v in 0..12 {
+            for u in 0..12 {
+                for x in 0..12 {
+                    if v == u || u == x || v == x {
+                        continue;
+                    }
+                    let lhs = g.weight(v, x);
+                    let rhs = g.weight(v, u) + g.weight(u, x);
+                    assert!(
+                        lhs <= rhs + 1e-6,
+                        "triangle violated: w[{v}->{x}]={lhs} > {rhs}"
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn lemma2_gain_bound() {
+        // f(v|S) <= f(u|S) + w_{uv|S} (paper Lemma 2)
+        let f = instance(14, 5, 2);
+        let g = SubmodularityGraph::new(&f);
+        check_seeded(200, 150, |gen| {
+            let s = gen.subset(14, 0..6);
+            let rest: Vec<usize> = (0..14).filter(|x| !s.contains(x)).collect();
+            if rest.len() < 2 {
+                return;
+            }
+            let u = rest[gen.usize_in(0, rest.len())];
+            let v = rest[gen.usize_in(0, rest.len())];
+            if u == v {
+                return;
+            }
+            let f_s = f.eval(&s);
+            let gain = |x: usize| {
+                let mut sx = s.clone();
+                sx.push(x);
+                f.eval(&sx) - f_s
+            };
+            assert!(
+                gain(v) <= gain(u) + g.weight_given(&s, u, v) + 1e-6,
+                "Lemma 2 violated at S={s:?}, u={u}, v={v}"
+            );
+        });
+    }
+
+    #[test]
+    fn lemma1_conditional_monotone() {
+        // P ⊆ S  ⇒  w_{uv|S} <= w_{uv|P} (paper Lemma 1)
+        let f = instance(12, 5, 3);
+        let g = SubmodularityGraph::new(&f);
+        check_seeded(300, 100, |gen| {
+            let s = gen.subset(12, 0..6);
+            let p: Vec<usize> = s.iter().copied().filter(|_| gen.bool()).collect();
+            let rest: Vec<usize> = (0..12).filter(|x| !s.contains(x)).collect();
+            if rest.len() < 2 {
+                return;
+            }
+            let (u, v) = (rest[0], rest[rest.len() - 1]);
+            if u == v {
+                return;
+            }
+            assert!(
+                g.weight_given(&s, u, v) <= g.weight_given(&p, u, v) + 1e-6,
+                "Lemma 1 violated"
+            );
+        });
+    }
+
+    #[test]
+    fn self_edge_nonpositive() {
+        let f = instance(10, 4, 4);
+        let g = SubmodularityGraph::new(&f);
+        for u in 0..10 {
+            assert!(g.weight(u, u) <= 1e-9, "w_uu = {}", g.weight(u, u));
+        }
+    }
+
+    #[test]
+    fn divergence_is_min_over_tails() {
+        let f = instance(10, 4, 5);
+        let g = SubmodularityGraph::new(&f);
+        let us = vec![0, 3, 7];
+        for v in [1usize, 4, 9] {
+            let want = us.iter().map(|&u| g.weight(u, v)).fold(f64::INFINITY, f64::min);
+            assert_eq!(g.divergence(&us, v), want);
+        }
+    }
+
+    #[test]
+    fn conditional_reduces_to_unconditional() {
+        let f = instance(9, 4, 6);
+        let g = SubmodularityGraph::new(&f);
+        for u in 0..4 {
+            for v in 5..9 {
+                assert!((g.weight_given(&[], u, v) - g.weight(u, v)).abs() < 1e-9);
+            }
+        }
+    }
+}

@@ -1,0 +1,42 @@
+//! # submodular-ss
+//!
+//! A production-scale reproduction of **"Scaling Submodular Maximization via
+//! Pruned Submodularity Graphs"** (Zhou, Ouyang, Chang, Bilmes, Guestrin;
+//! NIPS 2016 submission / arXiv 2016).
+//!
+//! The paper's contribution — *submodular sparsification (SS)* — is a
+//! randomized pruning algorithm that reduces a ground set `V` of size `n`
+//! down to `O(log^2 n)` elements by pruning a directed "submodularity graph"
+//! whose edge weights `w_{uv} = f(v|u) - f(u|V\u)` bound the utility loss of
+//! dropping `v` while keeping `u`. Greedy maximization on the reduced set
+//! achieves `(1 - 1/e)(f(S*) - 2k eps)` with high probability.
+//!
+//! ## Architecture (three layers)
+//!
+//! * **Layer 3 (this crate)** — the coordinator: SS leader/worker round
+//!   orchestration, dynamic batching of edge-weight jobs, a summarization
+//!   service, dataset substrates, baseline algorithms and the full
+//!   benchmark/eval harness.
+//! * **Layer 2 (python/compile/model.py)** — JAX compute graphs for the
+//!   feature-based submodular objective (batched edge weights, marginal
+//!   gains, singleton-complement gains), lowered once to HLO text.
+//! * **Layer 1 (python/compile/kernels/)** — Pallas kernels implementing the
+//!   hot loops, called from the L2 graphs so they lower into the same HLO.
+//!
+//! Python never runs on the request path: `make artifacts` AOT-compiles the
+//! kernels to `artifacts/*.hlo.txt`, and [`runtime`] loads and executes them
+//! via the PJRT C API (`xla` crate).
+
+pub mod util;
+pub mod submodular;
+pub mod graph;
+pub mod algorithms;
+pub mod data;
+pub mod runtime;
+pub mod coordinator;
+pub mod config;
+pub mod eval;
+pub mod bench;
+
+pub use submodular::{SubmodularFn, FeatureBased};
+

@@ -1,0 +1,320 @@
+//! `ssctl` — the launcher for the submodular-sparsification stack.
+//!
+//! Subcommands cover the operational surface: one-shot summarization,
+//! standalone sparsification, the summarization service demo, synthetic
+//! data generation, the paper-experiment drivers, and artifact inspection.
+
+use std::sync::Arc;
+
+use anyhow::{anyhow, Result};
+
+use submodular_ss::algorithms::{lazy_greedy, sparsify, CpuBackend, Sampling, SsParams};
+use submodular_ss::bench::full_scale;
+use submodular_ss::coordinator::{
+    Compute, Metrics, ServiceConfig, ShardedBackend, SummarizationService, SummarizeRequest,
+};
+use submodular_ss::data::{CorpusParams, NewsGenerator, VideoParams};
+use submodular_ss::eval;
+use submodular_ss::runtime;
+use submodular_ss::submodular::{FeatureBased, SubmodularFn};
+use submodular_ss::util::cli::{App, Args, Command, Parsed};
+use submodular_ss::util::pool::ThreadPool;
+use submodular_ss::util::stats::Timer;
+
+fn app() -> App {
+    App::new("ssctl", "submodular sparsification (Zhou et al. 2016) — coordinator CLI")
+        .command(
+            Command::new("summarize", "generate a news day and summarize it (SS + lazy greedy)")
+                .opt("n", "2000", "ground-set sentences")
+                .opt("k", "0", "budget (0 = reference size)")
+                .opt("r", "8", "SS probe multiplier")
+                .opt("c", "8.0", "SS tradeoff parameter")
+                .opt("seed", "0", "rng seed")
+                .opt("method", "ss", "ss | lazy | sieve")
+                .flag("pjrt", "route SS divergences through PJRT artifacts")
+                .flag("importance", "importance probe sampling (§3.4)"),
+        )
+        .command(
+            Command::new("sparsify", "run Algorithm 1 only; print V' statistics")
+                .opt("n", "4000", "ground-set size")
+                .opt("r", "8", "probe multiplier")
+                .opt("c", "8.0", "tradeoff parameter")
+                .opt("seed", "0", "rng seed")
+                .opt("threads", "2", "coordinator worker threads")
+                .flag("pjrt", "use PJRT backend"),
+        )
+        .command(
+            Command::new("serve", "run the summarization service on a synthetic request stream")
+                .opt("requests", "12", "number of requests")
+                .opt("workers", "2", "service workers")
+                .opt("n", "800", "sentences per request")
+                .opt("seed", "0", "rng seed")
+                .flag("pjrt", "serve through PJRT artifacts"),
+        )
+        .command(
+            Command::new("experiment", "reproduce a paper figure/table (fig1..fig11, table1, table2, ablation)")
+                .opt("seed", "0", "rng seed"),
+        )
+        .command(
+            Command::new("gen-data", "generate a synthetic day/video and print statistics")
+                .opt("kind", "news", "news | video")
+                .opt("n", "1000", "sentences / frames")
+                .opt("seed", "0", "rng seed"),
+        )
+        .command(Command::new("inspect", "validate the artifacts directory and PJRT runtime"))
+}
+
+fn main() {
+    let argv: Vec<String> = std::env::args().skip(1).collect();
+    match app().parse(&argv) {
+        Parsed::Help(h) => print!("{h}"),
+        Parsed::Error(e) => {
+            eprintln!("{e}");
+            std::process::exit(2);
+        }
+        Parsed::Run(name, args) => {
+            let r = match name.as_str() {
+                "summarize" => cmd_summarize(&args),
+                "sparsify" => cmd_sparsify(&args),
+                "serve" => cmd_serve(&args),
+                "experiment" => cmd_experiment(&args),
+                "gen-data" => cmd_gen_data(&args),
+                "inspect" => cmd_inspect(),
+                _ => unreachable!(),
+            };
+            if let Err(e) = r {
+                eprintln!("error: {e:#}");
+                std::process::exit(1);
+            }
+        }
+    }
+}
+
+fn ss_params(args: &Args) -> SsParams {
+    let mut p = SsParams {
+        r: args.usize("r"),
+        c: args.f64("c"),
+        seed: args.u64("seed"),
+        sampling: Sampling::Uniform,
+        ..Default::default()
+    };
+    if args.has("importance") {
+        p.sampling = Sampling::Importance;
+    }
+    p
+}
+
+fn cmd_summarize(args: &Args) -> Result<()> {
+    let n = args.usize("n");
+    let seed = args.u64("seed");
+    let g = NewsGenerator::new(CorpusParams::default(), seed);
+    let day = g.day(n, 0, seed);
+    let k = if args.usize("k") == 0 { day.k } else { args.usize("k") };
+    let f = FeatureBased::sqrt(day.feats.clone());
+    let all: Vec<usize> = (0..f.n()).collect();
+    let timer = Timer::new();
+    let (set, value, reduced) = match args.str("method").as_str() {
+        "lazy" => {
+            let s = lazy_greedy(&f, &all, k);
+            (s.set, s.value, n)
+        }
+        "sieve" => {
+            let s = submodular_ss::algorithms::sieve_streaming(
+                &f,
+                &all,
+                k,
+                &submodular_ss::algorithms::SieveParams::paper_default(),
+            );
+            (s.set, s.value, n)
+        }
+        "ss" => {
+            let params = ss_params(args);
+            let ss = if args.has("pjrt") {
+                let (_svc, rt) = runtime::start_default(1)?;
+                let backend = runtime::PjrtBackend::new(&f, rt)?;
+                sparsify(&backend, &params)
+            } else {
+                let backend = CpuBackend::new(&f);
+                sparsify(&backend, &params)
+            };
+            let s = lazy_greedy(&f, &ss.kept, k);
+            (s.set, s.value, ss.kept.len())
+        }
+        m => return Err(anyhow!("unknown method '{m}'")),
+    };
+    let elapsed = timer.elapsed_s();
+    let rouge = eval::runners::rouge_of(&set, &day.sentences, &day.reference);
+    println!("method={} n={n} k={k} |V'|={reduced}", args.str("method"));
+    println!("f(S)={value:.3}  ROUGE-2={:.3}  F1={:.3}  time={elapsed:.3}s", rouge.recall, rouge.f1);
+    println!("summary sentence indices: {set:?}");
+    Ok(())
+}
+
+fn cmd_sparsify(args: &Args) -> Result<()> {
+    let n = args.usize("n");
+    let seed = args.u64("seed");
+    let g = NewsGenerator::new(CorpusParams::default(), seed);
+    let day = g.day(n, 0, seed);
+    let f = Arc::new(FeatureBased::sqrt(day.feats.clone()));
+    let params = ss_params(args);
+    let pool = Arc::new(ThreadPool::new(args.usize("threads"), 64));
+    let metrics = Arc::new(Metrics::new());
+    let compute = if args.has("pjrt") {
+        let (svc, rt) = runtime::start_default(1)?;
+        std::mem::forget(svc); // keep executor threads alive for process life
+        Compute::Pjrt(rt)
+    } else {
+        Compute::Cpu
+    };
+    let backend = ShardedBackend::new(Arc::clone(&f), pool, compute, Arc::clone(&metrics))?;
+    let res = sparsify(&backend, &params);
+    println!(
+        "n={n} -> |V'|={} ({:.1}% kept) in {} rounds, {} divergence evals, {:.3}s",
+        res.kept.len(),
+        100.0 * res.kept.len() as f64 / n as f64,
+        res.rounds,
+        res.divergence_evals,
+        res.wall_s
+    );
+    println!("probes/round={} measured eps-hat={:.4}", res.probes_per_round, res.pruned_max_divergence);
+    println!("metrics: {}", metrics.snapshot().to_string());
+    Ok(())
+}
+
+fn cmd_serve(args: &Args) -> Result<()> {
+    let use_pjrt = args.has("pjrt");
+    let rt = if use_pjrt {
+        let (svc, rt) = runtime::start_default(1)?;
+        std::mem::forget(svc);
+        Some(rt)
+    } else {
+        None
+    };
+    let svc = SummarizationService::start(
+        ServiceConfig { workers: args.usize("workers"), ..Default::default() },
+        rt,
+    );
+    let seed = args.u64("seed");
+    let n = args.usize("n");
+    let g = NewsGenerator::new(CorpusParams::default(), seed);
+    let count = args.usize("requests");
+    let timer = Timer::new();
+    let tickets: Vec<_> = (0..count)
+        .map(|i| {
+            let day = g.day(n, 0, seed + i as u64);
+            svc.submit(SummarizeRequest {
+                feats: day.feats,
+                k: day.k,
+                params: SsParams::default().with_seed(seed + i as u64),
+                use_pjrt,
+            })
+        })
+        .collect();
+    for (i, t) in tickets.into_iter().enumerate() {
+        let r = t.wait()?;
+        println!(
+            "req {i}: n={} |V'|={} f(S)={:.2} latency={:.3}s (queued {:.3}s)",
+            r.n, r.reduced, r.value, r.latency_s, r.queue_s
+        );
+    }
+    let total = timer.elapsed_s();
+    println!("\nthroughput: {:.2} req/s over {count} requests", count as f64 / total);
+    println!("{}", svc.metrics_json());
+    Ok(())
+}
+
+fn cmd_experiment(args: &Args) -> Result<()> {
+    let seed = args.u64("seed");
+    let which = args.positional.first().map(|s| s.as_str()).unwrap_or("fig1");
+    let scale = if full_scale() { 4 } else { 1 };
+    match which {
+        "fig1" => {
+            let sizes: Vec<usize> = [500, 1000, 2000, 4000].iter().map(|&n| n * scale).collect();
+            eval::news::fig1(&sizes, seed).print();
+        }
+        "fig2" => eval::news::fig2(1500 * scale, seed).print(),
+        "fig3" | "fig4" | "fig5" => {
+            let records = eval::news::run_days(20 * scale, 300, 2000 * scale, seed);
+            match which {
+                "fig3" => eval::news::fig3(&records).print(),
+                "fig4" => eval::news::fig4(&records).print(),
+                _ => eval::news::fig5(&records).print(),
+            }
+        }
+        "fig6" => eval::duc::fig67(10 * scale, 300, 400, seed).print(),
+        "fig7" => eval::duc::fig67(10 * scale, 300, 200, seed).print(),
+        "table1" => eval::duc::table1(250 * scale, seed).print(),
+        "table2" | "fig8" | "fig9" | "fig10" | "fig11" => {
+            let params = VideoParams::default();
+            let suite: Vec<(String, usize)> = submodular_ss::data::video::summe_suite(&params, seed)
+                .into_iter()
+                .take(if full_scale() { 25 } else { 5 })
+                .map(|(name, frames)| (name, if full_scale() { frames } else { frames / 4 }))
+                .collect();
+            let (t2, records) = eval::video_eval::table2(&suite, &params, seed);
+            match which {
+                "table2" => t2.print(),
+                "fig8" | "fig9" => eval::video_eval::fig89(&records).print(),
+                _ => eval::video_eval::fig1011(&records).print(),
+            }
+        }
+        "ablation" => {
+            eval::ablation::ablation_variants(1000 * scale, seed).print();
+            eval::ablation::ablation_c_sweep(1000 * scale, seed).print();
+        }
+        other => return Err(anyhow!("unknown experiment '{other}'")),
+    }
+    Ok(())
+}
+
+fn cmd_gen_data(args: &Args) -> Result<()> {
+    let n = args.usize("n");
+    let seed = args.u64("seed");
+    match args.str("kind").as_str() {
+        "news" => {
+            let g = NewsGenerator::new(CorpusParams::default(), seed);
+            let day = g.day(n, 0, seed);
+            println!(
+                "news day: {} sentences, {} topics, {} reference sentences (k), d={}",
+                day.sentences.len(),
+                day.n_topics,
+                day.k,
+                day.feats.d
+            );
+        }
+        "video" => {
+            let v = submodular_ss::data::generate_video("synthetic", n, &VideoParams::default(), seed);
+            println!(
+                "video: {} frames, {} shots, {} users, total votes {}",
+                v.feats.n(),
+                v.boundaries.len(),
+                v.user_selections.len(),
+                v.gt_scores.iter().sum::<u32>()
+            );
+        }
+        k => return Err(anyhow!("unknown kind '{k}'")),
+    }
+    Ok(())
+}
+
+fn cmd_inspect() -> Result<()> {
+    let manifest = runtime::Manifest::load_default()?;
+    println!("artifacts dir: {:?}", manifest.dir);
+    println!("tile geometry: P={} B={} D={}", manifest.p, manifest.b, manifest.d);
+    for (name, meta) in &manifest.artifacts {
+        println!("  {name:<16} {:?} inputs={:?}", meta.file.file_name().unwrap(), meta.inputs);
+    }
+    let (svc, rt) = runtime::start_default(1)?;
+    let mut feats = submodular_ss::util::vecmath::FeatureMatrix::zeros(4, 8);
+    for i in 0..4 {
+        for j in 0..8 {
+            feats.row_mut(i)[j] = (i + j) as f32 * 0.1;
+        }
+    }
+    let total = feats.col_sums();
+    let s = rt.singleton_complements(&feats, &total, &[0, 1, 2, 3])?;
+    println!("runtime smoke: singleton complements = {s:?}");
+    drop(svc);
+    println!("PJRT runtime OK");
+    Ok(())
+}

@@ -1,0 +1,50 @@
+//! [`PjrtBackend`]: the [`DivergenceBackend`] implementation that routes
+//! SS's hot loop through the AOT-compiled Pallas kernels, making the
+//! `ssctl`/bench SS runs exercise the full three-layer stack.
+
+use std::sync::Arc;
+
+use crate::algorithms::DivergenceBackend;
+use crate::submodular::{FeatureBased, SubmodularFn};
+
+use super::tiled::TiledRuntime;
+
+pub struct PjrtBackend<'a> {
+    f: &'a FeatureBased,
+    rt: Arc<TiledRuntime>,
+    /// f(u|V∖u) — computed through the PJRT singleton kernel at construction
+    sing: Vec<f64>,
+}
+
+impl<'a> PjrtBackend<'a> {
+    pub fn new(f: &'a FeatureBased, rt: Arc<TiledRuntime>) -> anyhow::Result<Self> {
+        let items: Vec<usize> = (0..f.n()).collect();
+        let sing = rt.singleton_complements(f.feats(), f.total_mass(), &items)?;
+        Ok(Self { f, rt, sing })
+    }
+
+    pub fn singletons(&self) -> &[f64] {
+        &self.sing
+    }
+
+    pub fn runtime(&self) -> &TiledRuntime {
+        &self.rt
+    }
+}
+
+impl DivergenceBackend for PjrtBackend<'_> {
+    fn n(&self) -> usize {
+        self.f.n()
+    }
+
+    fn divergences(&self, probes: &[usize], items: &[usize]) -> Vec<f32> {
+        let sing: Vec<f64> = probes.iter().map(|&u| self.sing[u]).collect();
+        self.rt
+            .divergences(self.f.feats(), probes, &sing, items)
+            .expect("pjrt divergence execution failed")
+    }
+
+    fn importance_weights(&self, items: &[usize]) -> Vec<f64> {
+        items.iter().map(|&u| self.f.singleton(u) + self.sing[u]).collect()
+    }
+}

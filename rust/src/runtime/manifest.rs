@@ -1,0 +1,168 @@
+//! `artifacts/manifest.json` — the contract between the Python AOT step and
+//! the Rust runtime. Shapes recorded at lowering time are validated here at
+//! load time, so a stale artifacts directory fails fast instead of feeding
+//! garbage through PJRT.
+
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+
+use anyhow::{anyhow, bail, Context, Result};
+
+use crate::util::json::{self, Json};
+
+/// Names of the five AOT artifacts (must match `model.artifact_specs`).
+pub const ARTIFACT_NAMES: [&str; 5] =
+    ["edge_weights", "marginal_gains", "singleton", "ss_round", "utility"];
+
+#[derive(Clone, Debug)]
+pub struct ArtifactMeta {
+    pub file: PathBuf,
+    /// input shapes as recorded at lowering time
+    pub inputs: Vec<Vec<usize>>,
+}
+
+#[derive(Clone, Debug)]
+pub struct Manifest {
+    /// probes per tile
+    pub p: usize,
+    /// items per tile
+    pub b: usize,
+    /// feature dims
+    pub d: usize,
+    pub artifacts: BTreeMap<String, ArtifactMeta>,
+    pub dir: PathBuf,
+}
+
+impl Manifest {
+    pub fn load(dir: &Path) -> Result<Self> {
+        let path = dir.join("manifest.json");
+        let text = std::fs::read_to_string(&path)
+            .with_context(|| format!("reading {path:?} — run `make artifacts` first"))?;
+        let v = json::parse(&text).map_err(|e| anyhow!("parsing {path:?}: {e}"))?;
+        let geta = |k: &str| -> Result<usize> {
+            v.get(k).and_then(Json::as_usize).ok_or_else(|| anyhow!("manifest missing '{k}'"))
+        };
+        let (p, b, d) = (geta("p")?, geta("b")?, geta("d")?);
+        let mut artifacts = BTreeMap::new();
+        let arts = v.get("artifacts").ok_or_else(|| anyhow!("manifest missing 'artifacts'"))?;
+        for name in ARTIFACT_NAMES {
+            let meta = arts.get(name).ok_or_else(|| anyhow!("manifest missing artifact '{name}'"))?;
+            let file = dir.join(
+                meta.get("file").and_then(Json::as_str).ok_or_else(|| anyhow!("no file for {name}"))?,
+            );
+            if !file.exists() {
+                bail!("artifact file {file:?} missing — re-run `make artifacts`");
+            }
+            let inputs = meta
+                .get("inputs")
+                .and_then(Json::as_arr)
+                .ok_or_else(|| anyhow!("no inputs for {name}"))?
+                .iter()
+                .map(|shape| {
+                    shape
+                        .as_arr()
+                        .map(|dims| dims.iter().filter_map(Json::as_usize).collect::<Vec<_>>())
+                        .ok_or_else(|| anyhow!("bad shape for {name}"))
+                })
+                .collect::<Result<Vec<_>>>()?;
+            artifacts.insert(name.to_string(), ArtifactMeta { file, inputs });
+        }
+        let m = Self { p, b, d, artifacts, dir: dir.to_path_buf() };
+        m.validate()?;
+        Ok(m)
+    }
+
+    /// Default location: `$SS_ARTIFACTS` or `./artifacts`.
+    pub fn load_default() -> Result<Self> {
+        let dir = std::env::var("SS_ARTIFACTS").unwrap_or_else(|_| "artifacts".to_string());
+        Self::load(Path::new(&dir))
+    }
+
+    fn validate(&self) -> Result<()> {
+        let (p, b, d) = (self.p, self.b, self.d);
+        let expect: BTreeMap<&str, Vec<Vec<usize>>> = BTreeMap::from([
+            ("edge_weights", vec![vec![p, d], vec![p], vec![b, d]]),
+            ("marginal_gains", vec![vec![d], vec![b, d]]),
+            ("singleton", vec![vec![d], vec![b, d]]),
+            ("ss_round", vec![vec![p, d], vec![p], vec![b, d]]),
+            ("utility", vec![vec![b, d], vec![b]]),
+        ]);
+        for (name, shapes) in expect {
+            let got = &self.artifacts[name].inputs;
+            if got != &shapes {
+                bail!("artifact '{name}' shape mismatch: manifest says {got:?}, geometry (p={p},b={b},d={d}) implies {shapes:?}");
+            }
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn write_manifest(dir: &Path, p: usize, b: usize, d: usize, shapes_ok: bool) {
+        std::fs::create_dir_all(dir).unwrap();
+        let shape = |dims: &[usize]| {
+            format!("[{}]", dims.iter().map(|x| x.to_string()).collect::<Vec<_>>().join(","))
+        };
+        let ew = if shapes_ok {
+            format!("[{},{},{}]", shape(&[p, d]), shape(&[p]), shape(&[b, d]))
+        } else {
+            format!("[{},{},{}]", shape(&[p, d + 1]), shape(&[p]), shape(&[b, d]))
+        };
+        let art = |name: &str, inputs: String| {
+            std::fs::write(dir.join(format!("{name}.hlo.txt")), "HloModule stub").unwrap();
+            format!(r#""{name}": {{"file": "{name}.hlo.txt", "inputs": {inputs}}}"#)
+        };
+        let text = format!(
+            r#"{{"p": {p}, "b": {b}, "d": {d}, "dtype": "f32", "artifacts": {{
+                {},
+                {},
+                {},
+                {},
+                {}
+            }}}}"#,
+            art("edge_weights", ew),
+            art("marginal_gains", format!("[{},{}]", shape(&[d]), shape(&[b, d]))),
+            art("singleton", format!("[{},{}]", shape(&[d]), shape(&[b, d]))),
+            art("ss_round", format!("[{},{},{}]", shape(&[p, d]), shape(&[p]), shape(&[b, d]))),
+            art("utility", format!("[{},{}]", shape(&[b, d]), shape(&[b]))),
+        );
+        std::fs::write(dir.join("manifest.json"), text).unwrap();
+    }
+
+    #[test]
+    fn loads_valid_manifest() {
+        let dir = std::env::temp_dir().join(format!("ss-manifest-ok-{}", std::process::id()));
+        write_manifest(&dir, 4, 8, 16, true);
+        let m = Manifest::load(&dir).unwrap();
+        assert_eq!((m.p, m.b, m.d), (4, 8, 16));
+        assert_eq!(m.artifacts.len(), 5);
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn rejects_shape_mismatch() {
+        let dir = std::env::temp_dir().join(format!("ss-manifest-bad-{}", std::process::id()));
+        write_manifest(&dir, 4, 8, 16, false);
+        let err = Manifest::load(&dir).unwrap_err().to_string();
+        assert!(err.contains("shape mismatch"), "{err}");
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn missing_dir_is_actionable() {
+        let err = Manifest::load(Path::new("/nonexistent-ss-artifacts")).unwrap_err().to_string();
+        assert!(err.contains("make artifacts"), "{err}");
+    }
+
+    #[test]
+    fn real_artifacts_load_when_present() {
+        // exercises the real `make artifacts` output when built
+        if Path::new("artifacts/manifest.json").exists() {
+            let m = Manifest::load(Path::new("artifacts")).unwrap();
+            assert_eq!((m.p, m.b, m.d), (32, 256, 256));
+        }
+    }
+}

@@ -1,0 +1,34 @@
+//! PJRT runtime: load `artifacts/*.hlo.txt` (AOT-lowered JAX/Pallas
+//! graphs), compile them once on the PJRT CPU client, and execute them from
+//! the Rust hot path. Python is never involved at runtime.
+//!
+//! Layering:
+//! * [`manifest`] — validates the artifact directory against the expected
+//!   tile geometry;
+//! * [`service`]  — executor threads owning the (!Send) PJRT handles, fed
+//!   by a bounded job channel (the backpressure point);
+//! * [`tiled`]    — pads/tiles arbitrary problem sizes to the fixed AOT
+//!   shapes and folds partial results (min across probe tiles);
+//! * [`backend`]  — plugs the above into the SS algorithm as a
+//!   [`crate::algorithms::DivergenceBackend`].
+
+pub mod backend;
+pub mod manifest;
+pub mod service;
+pub mod tiled;
+
+pub use backend::PjrtBackend;
+pub use manifest::Manifest;
+pub use service::{PjrtHandle, PjrtService};
+pub use tiled::TiledRuntime;
+
+use anyhow::Result;
+use std::sync::Arc;
+
+/// One-call setup: load the default artifacts and start a service.
+pub fn start_default(pool_size: usize) -> Result<(PjrtService, Arc<TiledRuntime>)> {
+    let manifest = Manifest::load_default()?;
+    let service = PjrtService::start(manifest, pool_size, 64)?;
+    let rt = Arc::new(TiledRuntime::new(service.handle()));
+    Ok((service, rt))
+}

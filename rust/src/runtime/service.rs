@@ -1,0 +1,236 @@
+//! The PJRT executor service: a dedicated OS thread that owns the PJRT CPU
+//! client and the compiled artifact executables, fed through a bounded job
+//! channel.
+//!
+//! Why a thread-per-client design: the `xla` crate's handles wrap raw
+//! C-API pointers and are `!Send`/`!Sync`, so the only sound way to share
+//! them with the coordinator's worker pool is message passing. This also
+//! gives the batcher its backpressure point for free (the bounded channel).
+//! `pool_size > 1` spins up several executor threads, each with its own
+//! client + compiled executables (PJRT CPU executables are cheap to
+//! duplicate and this sidesteps any cross-thread aliasing questions).
+
+use std::sync::mpsc::{sync_channel, Receiver, SyncSender};
+use std::sync::{Arc, Mutex};
+use std::thread::JoinHandle;
+
+use anyhow::{anyhow, Context, Result};
+
+use super::manifest::Manifest;
+
+/// One padded tile job. All buffers are already padded to the artifact
+/// geometry by the [`super::TiledRuntime`] layer; the service is dumb.
+pub enum Job {
+    /// edge_weights(u_feat[p,d], u_sing[p], v_feat[b,d]) -> w[b]
+    EdgeWeights { u_feat: Vec<f32>, u_sing: Vec<f32>, v_feat: Vec<f32>, reply: SyncSender<Result<Vec<f32>>> },
+    /// marginal_gains(cov[d], v_feat[b,d]) -> g[b]
+    MarginalGains { cov: Vec<f32>, v_feat: Vec<f32>, reply: SyncSender<Result<Vec<f32>>> },
+    /// singleton(total[d], v_feat[b,d]) -> s[b]
+    Singleton { total: Vec<f32>, v_feat: Vec<f32>, reply: SyncSender<Result<Vec<f32>>> },
+    /// utility(v_feat[b,d], mask[b]) -> f[1]
+    Utility { v_feat: Vec<f32>, mask: Vec<f32>, reply: SyncSender<Result<Vec<f32>>> },
+    Shutdown,
+}
+
+/// Handle to the executor service. Cloneable; submitting blocks when the
+/// queue is full (backpressure).
+#[derive(Clone)]
+pub struct PjrtHandle {
+    tx: SyncSender<Job>,
+    manifest: Arc<Manifest>,
+}
+
+pub struct PjrtService {
+    handle: PjrtHandle,
+    threads: Vec<JoinHandle<()>>,
+}
+
+impl PjrtService {
+    /// Start `pool_size` executor threads compiling all five artifacts each.
+    /// Fails fast (synchronously) if any thread cannot compile.
+    pub fn start(manifest: Manifest, pool_size: usize, queue_cap: usize) -> Result<Self> {
+        assert!(pool_size >= 1);
+        let manifest = Arc::new(manifest);
+        let (tx, rx) = sync_channel::<Job>(queue_cap.max(1));
+        let rx = Arc::new(Mutex::new(rx));
+        let mut threads = Vec::new();
+        let (ready_tx, ready_rx) = sync_channel::<Result<()>>(pool_size);
+        for i in 0..pool_size {
+            let rx = Arc::clone(&rx);
+            let m = Arc::clone(&manifest);
+            let ready = ready_tx.clone();
+            threads.push(
+                std::thread::Builder::new()
+                    .name(format!("pjrt-exec-{i}"))
+                    .spawn(move || executor_main(&m, &rx, &ready))
+                    .context("spawning executor thread")?,
+            );
+        }
+        drop(ready_tx);
+        for _ in 0..pool_size {
+            ready_rx.recv().context("executor thread died during startup")??;
+        }
+        Ok(Self { handle: PjrtHandle { tx, manifest }, threads })
+    }
+
+    pub fn handle(&self) -> PjrtHandle {
+        self.handle.clone()
+    }
+}
+
+impl Drop for PjrtService {
+    fn drop(&mut self) {
+        for _ in &self.threads {
+            let _ = self.handle.tx.send(Job::Shutdown);
+        }
+        for t in self.threads.drain(..) {
+            let _ = t.join();
+        }
+    }
+}
+
+impl PjrtHandle {
+    pub fn manifest(&self) -> &Manifest {
+        &self.manifest
+    }
+
+    fn roundtrip(&self, make: impl FnOnce(SyncSender<Result<Vec<f32>>>) -> Job) -> Result<Vec<f32>> {
+        let (rtx, rrx) = sync_channel(1);
+        self.tx.send(make(rtx)).map_err(|_| anyhow!("pjrt service is down"))?;
+        rrx.recv().map_err(|_| anyhow!("pjrt executor dropped the reply"))?
+    }
+
+    /// Padded-tile edge weights; buffers must match the artifact geometry.
+    pub fn edge_weights(&self, u_feat: Vec<f32>, u_sing: Vec<f32>, v_feat: Vec<f32>) -> Result<Vec<f32>> {
+        let (p, b, d) = (self.manifest.p, self.manifest.b, self.manifest.d);
+        debug_assert_eq!(u_feat.len(), p * d);
+        debug_assert_eq!(u_sing.len(), p);
+        debug_assert_eq!(v_feat.len(), b * d);
+        self.roundtrip(|reply| Job::EdgeWeights { u_feat, u_sing, v_feat, reply })
+    }
+
+    pub fn marginal_gains(&self, cov: Vec<f32>, v_feat: Vec<f32>) -> Result<Vec<f32>> {
+        self.roundtrip(|reply| Job::MarginalGains { cov, v_feat, reply })
+    }
+
+    pub fn singleton(&self, total: Vec<f32>, v_feat: Vec<f32>) -> Result<Vec<f32>> {
+        self.roundtrip(|reply| Job::Singleton { total, v_feat, reply })
+    }
+
+    pub fn utility(&self, v_feat: Vec<f32>, mask: Vec<f32>) -> Result<f64> {
+        let out = self.roundtrip(|reply| Job::Utility { v_feat, mask, reply })?;
+        Ok(out[0] as f64)
+    }
+}
+
+/// Executor thread body: compile everything, then serve jobs forever.
+fn executor_main(
+    manifest: &Manifest,
+    rx: &Mutex<Receiver<Job>>,
+    ready: &SyncSender<Result<()>>,
+) {
+    let compiled = (|| -> Result<Compiled> { Compiled::new(manifest) })();
+    let compiled = match compiled {
+        Ok(c) => {
+            let _ = ready.send(Ok(()));
+            c
+        }
+        Err(e) => {
+            let _ = ready.send(Err(e));
+            return;
+        }
+    };
+    loop {
+        let job = {
+            let rx = rx.lock().unwrap();
+            rx.recv()
+        };
+        let Ok(job) = job else { return };
+        match job {
+            Job::Shutdown => return,
+            Job::EdgeWeights { u_feat, u_sing, v_feat, reply } => {
+                let (p, b, d) = geometry(manifest);
+                let r = compiled.run1(
+                    &compiled.edge_weights,
+                    &[(&u_feat, &[p, d][..]), (&u_sing, &[p]), (&v_feat, &[b, d])],
+                );
+                let _ = reply.send(r);
+            }
+            Job::MarginalGains { cov, v_feat, reply } => {
+                let (_, b, d) = geometry(manifest);
+                let r = compiled
+                    .run1(&compiled.marginal_gains, &[(&cov, &[d][..]), (&v_feat, &[b, d])]);
+                let _ = reply.send(r);
+            }
+            Job::Singleton { total, v_feat, reply } => {
+                let (_, b, d) = geometry(manifest);
+                let r =
+                    compiled.run1(&compiled.singleton, &[(&total, &[d][..]), (&v_feat, &[b, d])]);
+                let _ = reply.send(r);
+            }
+            Job::Utility { v_feat, mask, reply } => {
+                let (_, b, d) = geometry(manifest);
+                let r = compiled.run1(&compiled.utility, &[(&v_feat, &[b, d][..]), (&mask, &[b])]);
+                let _ = reply.send(r);
+            }
+        }
+    }
+}
+
+fn geometry(m: &Manifest) -> (i64, i64, i64) {
+    (m.p as i64, m.b as i64, m.d as i64)
+}
+
+/// Per-thread compiled state (must stay on its thread: !Send innards).
+struct Compiled {
+    #[allow(dead_code)]
+    client: xla::PjRtClient,
+    edge_weights: xla::PjRtLoadedExecutable,
+    marginal_gains: xla::PjRtLoadedExecutable,
+    singleton: xla::PjRtLoadedExecutable,
+    #[allow(dead_code)]
+    ss_round: xla::PjRtLoadedExecutable,
+    utility: xla::PjRtLoadedExecutable,
+}
+
+impl Compiled {
+    fn new(manifest: &Manifest) -> Result<Self> {
+        let client = xla::PjRtClient::cpu().map_err(|e| anyhow!("PjRtClient::cpu: {e:?}"))?;
+        let compile = |name: &str| -> Result<xla::PjRtLoadedExecutable> {
+            let meta = &manifest.artifacts[name];
+            let proto = xla::HloModuleProto::from_text_file(&meta.file)
+                .map_err(|e| anyhow!("parsing HLO text {:?}: {e:?}", meta.file))?;
+            let comp = xla::XlaComputation::from_proto(&proto);
+            client.compile(&comp).map_err(|e| anyhow!("compiling {name}: {e:?}"))
+        };
+        Ok(Self {
+            edge_weights: compile("edge_weights")?,
+            marginal_gains: compile("marginal_gains")?,
+            singleton: compile("singleton")?,
+            ss_round: compile("ss_round")?,
+            utility: compile("utility")?,
+            client,
+        })
+    }
+
+    /// Execute a 1-output artifact on f32 inputs with the given dims.
+    fn run1(
+        &self,
+        exe: &xla::PjRtLoadedExecutable,
+        inputs: &[(&Vec<f32>, &[i64])],
+    ) -> Result<Vec<f32>> {
+        let lits: Vec<xla::Literal> = inputs
+            .iter()
+            .map(|(data, dims)| {
+                xla::Literal::vec1(data)
+                    .reshape(dims)
+                    .map_err(|e| anyhow!("reshape {dims:?}: {e:?}"))
+            })
+            .collect::<Result<_>>()?;
+        let out = exe.execute::<xla::Literal>(&lits).map_err(|e| anyhow!("execute: {e:?}"))?;
+        let lit = out[0][0].to_literal_sync().map_err(|e| anyhow!("to_literal: {e:?}"))?;
+        // artifacts lower with return_tuple=True → unwrap the 1-tuple
+        let inner = lit.to_tuple1().map_err(|e| anyhow!("to_tuple1: {e:?}"))?;
+        inner.to_vec::<f32>().map_err(|e| anyhow!("to_vec: {e:?}"))
+    }
+}

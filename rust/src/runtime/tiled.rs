@@ -1,0 +1,197 @@
+//! Tiling + padding layer between arbitrary problem sizes and the fixed
+//! AOT artifact geometry `(P, B, D)`.
+//!
+//! Padding contract (validated on the Python side by
+//! `python/tests/test_kernel.py::test_probe_padding_is_inert` etc.):
+//! * probe rows: zero features, singleton = −1e30 (never wins the min);
+//! * item rows: zero-padded, outputs discarded;
+//! * feature dims: zero-padded on both sides (contribute nothing).
+
+use anyhow::{ensure, Result};
+
+use super::service::PjrtHandle;
+use crate::util::vecmath::FeatureMatrix;
+
+/// Sentinel singleton for padded probe lanes: weight ≈ +1e30 ⇒ inert in min.
+const PAD_SING: f32 = -1e30;
+
+/// Statistics counters for the perf harness.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct TileStats {
+    pub edge_weight_calls: u64,
+    pub marginal_calls: u64,
+    pub singleton_calls: u64,
+    pub items_processed: u64,
+}
+
+/// High-level tiled operations over a [`PjrtHandle`].
+pub struct TiledRuntime {
+    handle: PjrtHandle,
+    stats: std::sync::Mutex<TileStats>,
+    /// reusable padded-buffer scratch (perf: avoids re-zeroing every call)
+    scratch: std::sync::Mutex<Scratch>,
+}
+
+#[derive(Default)]
+struct Scratch {
+    v_feat: Vec<f32>,
+    u_feat: Vec<f32>,
+}
+
+impl TiledRuntime {
+    pub fn new(handle: PjrtHandle) -> Self {
+        Self { handle, stats: Default::default(), scratch: Default::default() }
+    }
+
+    pub fn geometry(&self) -> (usize, usize, usize) {
+        let m = self.handle.manifest();
+        (m.p, m.b, m.d)
+    }
+
+    pub fn stats(&self) -> TileStats {
+        *self.stats.lock().unwrap()
+    }
+
+    fn pad_dim(&self, src: &[f32], d: usize, dst: &mut [f32]) {
+        // copy a d-dim row into a D-dim slot (D >= d), zero the tail
+        dst[..d].copy_from_slice(src);
+        for x in &mut dst[d..] {
+            *x = 0.0;
+        }
+    }
+
+    /// Divergences `w_{probes, v}` for each item row. `probes`/`items` index
+    /// into `feats`; `sing[p]` is `f(u_p|V∖u_p)` aligned with `probes`.
+    pub fn divergences(
+        &self,
+        feats: &FeatureMatrix,
+        probes: &[usize],
+        sing: &[f64],
+        items: &[usize],
+    ) -> Result<Vec<f32>> {
+        let (p_tile, b_tile, d_max) = self.geometry();
+        ensure!(feats.d <= d_max, "feature dim {} exceeds artifact D={d_max}", feats.d);
+        ensure!(probes.len() == sing.len(), "probes/sing length mismatch");
+        let mut result = vec![f32::INFINITY; items.len()];
+
+        for (pchunk, schunk) in probes.chunks(p_tile).zip(sing.chunks(p_tile)) {
+            // build padded probe tile
+            let mut u_feat = {
+                let mut s = self.scratch.lock().unwrap();
+                std::mem::take(&mut s.u_feat)
+            };
+            u_feat.resize(p_tile * d_max, 0.0);
+            let mut u_sing = vec![PAD_SING; p_tile];
+            for (slot, (&u, &su)) in pchunk.iter().zip(schunk).enumerate() {
+                self.pad_dim(feats.row(u), feats.d, &mut u_feat[slot * d_max..(slot + 1) * d_max]);
+                u_sing[slot] = su as f32;
+            }
+            for pad_slot in pchunk.len()..p_tile {
+                u_feat[pad_slot * d_max..(pad_slot + 1) * d_max].fill(0.0);
+            }
+
+            for (block_i, iblock) in items.chunks(b_tile).enumerate() {
+                let mut v_feat = {
+                    let mut s = self.scratch.lock().unwrap();
+                    std::mem::take(&mut s.v_feat)
+                };
+                v_feat.resize(b_tile * d_max, 0.0);
+                for (slot, &v) in iblock.iter().enumerate() {
+                    self.pad_dim(
+                        feats.row(v),
+                        feats.d,
+                        &mut v_feat[slot * d_max..(slot + 1) * d_max],
+                    );
+                }
+                for pad_slot in iblock.len()..b_tile {
+                    v_feat[pad_slot * d_max..(pad_slot + 1) * d_max].fill(0.0);
+                }
+                let w = self.handle.edge_weights(u_feat.clone(), u_sing.clone(), v_feat.clone())?;
+                {
+                    let mut s = self.scratch.lock().unwrap();
+                    s.v_feat = v_feat;
+                }
+                let base = block_i * b_tile;
+                for (slot, _) in iblock.iter().enumerate() {
+                    let w_val = w[slot];
+                    let r = &mut result[base + slot];
+                    if w_val < *r {
+                        *r = w_val;
+                    }
+                }
+                let mut st = self.stats.lock().unwrap();
+                st.edge_weight_calls += 1;
+                st.items_processed += iblock.len() as u64;
+            }
+            let mut s = self.scratch.lock().unwrap();
+            s.u_feat = u_feat;
+        }
+        Ok(result)
+    }
+
+    /// Batched marginal gains `f(v|S)` given coverage `cov` (length d).
+    pub fn marginal_gains(
+        &self,
+        feats: &FeatureMatrix,
+        cov: &[f32],
+        items: &[usize],
+    ) -> Result<Vec<f32>> {
+        let (_, b_tile, d_max) = self.geometry();
+        ensure!(feats.d <= d_max);
+        ensure!(cov.len() == feats.d);
+        let mut padded_cov = vec![0.0f32; d_max];
+        self.pad_dim(cov, feats.d, &mut padded_cov);
+        let mut result = Vec::with_capacity(items.len());
+        for iblock in items.chunks(b_tile) {
+            let mut v_feat = vec![0.0f32; b_tile * d_max];
+            for (slot, &v) in iblock.iter().enumerate() {
+                self.pad_dim(feats.row(v), feats.d, &mut v_feat[slot * d_max..(slot + 1) * d_max]);
+            }
+            let g = self.handle.marginal_gains(padded_cov.clone(), v_feat)?;
+            result.extend_from_slice(&g[..iblock.len()]);
+            let mut st = self.stats.lock().unwrap();
+            st.marginal_calls += 1;
+            st.items_processed += iblock.len() as u64;
+        }
+        Ok(result)
+    }
+
+    /// Batched `f(v|V∖v)` given the total mass vector.
+    pub fn singleton_complements(
+        &self,
+        feats: &FeatureMatrix,
+        total: &[f32],
+        items: &[usize],
+    ) -> Result<Vec<f64>> {
+        let (_, b_tile, d_max) = self.geometry();
+        ensure!(feats.d <= d_max);
+        let mut padded_total = vec![0.0f32; d_max];
+        self.pad_dim(total, feats.d, &mut padded_total);
+        let mut result = Vec::with_capacity(items.len());
+        for iblock in items.chunks(b_tile) {
+            let mut v_feat = vec![0.0f32; b_tile * d_max];
+            for (slot, &v) in iblock.iter().enumerate() {
+                self.pad_dim(feats.row(v), feats.d, &mut v_feat[slot * d_max..(slot + 1) * d_max]);
+            }
+            let s = self.handle.singleton(padded_total.clone(), v_feat)?;
+            result.extend(s[..iblock.len()].iter().map(|&x| x as f64));
+            let mut st = self.stats.lock().unwrap();
+            st.singleton_calls += 1;
+            st.items_processed += iblock.len() as u64;
+        }
+        Ok(result)
+    }
+
+    /// On-device utility f(set) for a set of ≤ B items.
+    pub fn utility(&self, feats: &FeatureMatrix, set: &[usize]) -> Result<f64> {
+        let (_, b_tile, d_max) = self.geometry();
+        ensure!(set.len() <= b_tile, "utility artifact handles ≤ {b_tile} items");
+        let mut v_feat = vec![0.0f32; b_tile * d_max];
+        let mut mask = vec![0.0f32; b_tile];
+        for (slot, &v) in set.iter().enumerate() {
+            self.pad_dim(feats.row(v), feats.d, &mut v_feat[slot * d_max..(slot + 1) * d_max]);
+            mask[slot] = 1.0;
+        }
+        self.handle.utility(v_feat, mask)
+    }
+}

@@ -1,0 +1,328 @@
+//! Coverage-family objectives: weighted set cover and saturated coverage.
+
+use super::{BidirState, SolState, SubmodularFn};
+
+/// Weighted set cover: `f(S) = Σ_{j ∈ ∪_{v∈S} Γ(v)} w_j` where `Γ(v)` is the
+/// set of "concepts" element v covers.
+pub struct SetCover {
+    /// concepts covered by each element (sorted, deduped)
+    covers: Vec<Vec<u32>>,
+    /// weight per concept id
+    weights: Vec<f64>,
+}
+
+impl SetCover {
+    pub fn new(mut covers: Vec<Vec<u32>>, weights: Vec<f64>) -> Self {
+        for c in &mut covers {
+            c.sort_unstable();
+            c.dedup();
+            if let Some(&m) = c.last() {
+                assert!((m as usize) < weights.len(), "concept id out of range");
+            }
+        }
+        debug_assert!(weights.iter().all(|&w| w >= 0.0));
+        Self { covers, weights }
+    }
+
+    /// Unit weights over `m` concepts.
+    pub fn unit(covers: Vec<Vec<u32>>, m: usize) -> Self {
+        Self::new(covers, vec![1.0; m])
+    }
+}
+
+impl SubmodularFn for SetCover {
+    fn n(&self) -> usize {
+        self.covers.len()
+    }
+
+    fn eval(&self, s: &[usize]) -> f64 {
+        let mut hit = vec![false; self.weights.len()];
+        let mut acc = 0.0;
+        for &v in s {
+            for &j in &self.covers[v] {
+                if !hit[j as usize] {
+                    hit[j as usize] = true;
+                    acc += self.weights[j as usize];
+                }
+            }
+        }
+        acc
+    }
+
+    fn state<'a>(&'a self) -> Box<dyn SolState + 'a> {
+        Box::new(CoverState {
+            f: self,
+            count: vec![0u32; self.weights.len()],
+            value: 0.0,
+            set: Vec::new(),
+        })
+    }
+
+    fn singleton_complements(&self) -> Vec<f64> {
+        // f(v|V\v) = weight of concepts covered *only* by v.
+        let mut cover_count = vec![0u32; self.weights.len()];
+        for c in &self.covers {
+            for &j in c {
+                cover_count[j as usize] += 1;
+            }
+        }
+        self.covers
+            .iter()
+            .map(|c| {
+                c.iter()
+                    .filter(|&&j| cover_count[j as usize] == 1)
+                    .map(|&j| self.weights[j as usize])
+                    .sum()
+            })
+            .collect()
+    }
+
+    fn bidir_state<'a>(&'a self, init: &[usize]) -> Option<Box<dyn BidirState + 'a>> {
+        let mut st = CoverState {
+            f: self,
+            count: vec![0u32; self.weights.len()],
+            value: 0.0,
+            set: Vec::new(),
+        };
+        let mut member = vec![false; self.n()];
+        for &v in init {
+            st.add(v);
+            member[v] = true;
+        }
+        Some(Box::new(CoverBidir { inner: st, member }))
+    }
+}
+
+struct CoverState<'a> {
+    f: &'a SetCover,
+    /// multiplicity of coverage per concept (for removal support)
+    count: Vec<u32>,
+    value: f64,
+    set: Vec<usize>,
+}
+
+impl SolState for CoverState<'_> {
+    fn value(&self) -> f64 {
+        self.value
+    }
+
+    fn gain(&self, v: usize) -> f64 {
+        self.f.covers[v]
+            .iter()
+            .filter(|&&j| self.count[j as usize] == 0)
+            .map(|&j| self.f.weights[j as usize])
+            .sum()
+    }
+
+    fn add(&mut self, v: usize) {
+        for &j in &self.f.covers[v] {
+            if self.count[j as usize] == 0 {
+                self.value += self.f.weights[j as usize];
+            }
+            self.count[j as usize] += 1;
+        }
+        self.set.push(v);
+    }
+
+    fn set(&self) -> &[usize] {
+        &self.set
+    }
+}
+
+struct CoverBidir<'a> {
+    inner: CoverState<'a>,
+    member: Vec<bool>,
+}
+
+impl BidirState for CoverBidir<'_> {
+    fn value(&self) -> f64 {
+        self.inner.value
+    }
+
+    fn gain_add(&self, v: usize) -> f64 {
+        self.inner.gain(v)
+    }
+
+    fn gain_remove(&self, v: usize) -> f64 {
+        -self.inner.f.covers[v]
+            .iter()
+            .filter(|&&j| self.inner.count[j as usize] == 1)
+            .map(|&j| self.inner.f.weights[j as usize])
+            .sum::<f64>()
+    }
+
+    fn add(&mut self, v: usize) {
+        debug_assert!(!self.member[v]);
+        self.inner.add(v);
+        self.member[v] = true;
+    }
+
+    fn remove(&mut self, v: usize) {
+        debug_assert!(self.member[v]);
+        for &j in &self.inner.f.covers[v] {
+            self.inner.count[j as usize] -= 1;
+            if self.inner.count[j as usize] == 0 {
+                self.inner.value -= self.inner.f.weights[j as usize];
+            }
+        }
+        self.member[v] = false;
+    }
+
+    fn contains(&self, v: usize) -> bool {
+        self.member[v]
+    }
+
+    fn members(&self) -> Vec<usize> {
+        (0..self.member.len()).filter(|&v| self.member[v]).collect()
+    }
+}
+
+/// Saturated coverage: `f(S) = Σ_i min( Σ_{u∈S} sim(i,u), α · Σ_{u∈V} sim(i,u) )`
+/// — Lin & Bilmes' saturation objective; monotone submodular for α ∈ (0, 1].
+pub struct SaturatedCoverage {
+    n: usize,
+    sim: Vec<f32>,
+    /// per-row saturation cap α·Σ_u sim(i,u)
+    cap: Vec<f64>,
+}
+
+impl SaturatedCoverage {
+    pub fn new(n: usize, sim: Vec<f32>, alpha: f64) -> Self {
+        assert_eq!(sim.len(), n * n);
+        assert!(alpha > 0.0 && alpha <= 1.0);
+        let cap: Vec<f64> = (0..n)
+            .map(|i| alpha * sim[i * n..(i + 1) * n].iter().map(|&x| x as f64).sum::<f64>())
+            .collect();
+        Self { n, sim, cap }
+    }
+
+    #[inline]
+    fn sim(&self, i: usize, u: usize) -> f64 {
+        self.sim[i * self.n + u] as f64
+    }
+}
+
+impl SubmodularFn for SaturatedCoverage {
+    fn n(&self) -> usize {
+        self.n
+    }
+
+    fn eval(&self, s: &[usize]) -> f64 {
+        (0..self.n)
+            .map(|i| {
+                let tot: f64 = s.iter().map(|&u| self.sim(i, u)).sum();
+                tot.min(self.cap[i])
+            })
+            .sum()
+    }
+
+    fn state<'a>(&'a self) -> Box<dyn SolState + 'a> {
+        Box::new(SatState { f: self, row: vec![0.0; self.n], value: 0.0, set: Vec::new() })
+    }
+}
+
+struct SatState<'a> {
+    f: &'a SaturatedCoverage,
+    /// per-row accumulated (unsaturated) mass
+    row: Vec<f64>,
+    value: f64,
+    set: Vec<usize>,
+}
+
+impl SolState for SatState<'_> {
+    fn value(&self) -> f64 {
+        self.value
+    }
+
+    fn gain(&self, v: usize) -> f64 {
+        let mut acc = 0.0;
+        for i in 0..self.f.n {
+            let before = self.row[i].min(self.f.cap[i]);
+            let after = (self.row[i] + self.f.sim(i, v)).min(self.f.cap[i]);
+            acc += after - before;
+        }
+        acc
+    }
+
+    fn add(&mut self, v: usize) {
+        self.value += self.gain(v);
+        for i in 0..self.f.n {
+            self.row[i] += self.f.sim(i, v);
+        }
+        self.set.push(v);
+    }
+
+    fn set(&self) -> &[usize] {
+        &self.set
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::submodular::test_support::*;
+    use crate::util::rng::Rng;
+
+    fn cover_instance(n: usize, m: usize, seed: u64) -> SetCover {
+        let mut rng = Rng::new(seed);
+        let covers = (0..n)
+            .map(|_| {
+                let k = rng.range(1, (m / 2).max(2));
+                rng.sample_indices(m, k).into_iter().map(|x| x as u32).collect()
+            })
+            .collect();
+        let weights = (0..m).map(|_| rng.f64()).collect();
+        SetCover::new(covers, weights)
+    }
+
+    #[test]
+    fn set_cover_properties() {
+        let f = cover_instance(18, 30, 1);
+        check_submodular(&f, true, 50, 150);
+        check_state_consistency(&f, 51, 100);
+        check_edge_ingredients(&f, 52, 80);
+    }
+
+    #[test]
+    fn set_cover_bidir() {
+        let f = cover_instance(12, 20, 2);
+        let mut st = f.bidir_state(&[0, 1, 2]).unwrap();
+        assert!((st.value() - f.eval(&[0, 1, 2])).abs() < 1e-9);
+        st.remove(1);
+        assert!((st.value() - f.eval(&[0, 2])).abs() < 1e-9);
+        st.add(5);
+        assert!((st.value() - f.eval(&[0, 2, 5])).abs() < 1e-9);
+    }
+
+    #[test]
+    fn saturated_properties() {
+        let mut rng = Rng::new(3);
+        let n = 12;
+        let mut sim = vec![0.0f32; n * n];
+        for i in 0..n {
+            for u in 0..n {
+                sim[i * n + u] = rng.f32();
+            }
+        }
+        let f = SaturatedCoverage::new(n, sim, 0.3);
+        check_submodular(&f, true, 60, 150);
+        check_state_consistency(&f, 61, 100);
+    }
+
+    #[test]
+    fn saturation_caps_full_set() {
+        let n = 6;
+        let sim = vec![1.0f32; n * n];
+        let f = SaturatedCoverage::new(n, sim, 0.5);
+        let full: Vec<usize> = (0..n).collect();
+        // each row caps at 0.5 * 6 = 3.0
+        assert!((f.eval(&full) - (n as f64 * 3.0)).abs() < 1e-9);
+    }
+
+    #[test]
+    fn unique_coverage_is_singleton_complement() {
+        let f = SetCover::unit(vec![vec![0, 1], vec![1, 2], vec![3]], 4);
+        let sing = f.singleton_complements();
+        assert_eq!(sing, vec![1.0, 1.0, 1.0]); // concepts 0, 2, 3 unique
+    }
+}

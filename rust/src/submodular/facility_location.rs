@@ -1,0 +1,210 @@
+//! Facility location: `f(S) = Σ_{i∈V} max_{u∈S} sim(i, u)` — the classic
+//! representativeness objective for video/image summarization.
+//!
+//! Backed by a dense similarity matrix (`n × n`, f32). Similarities must be
+//! non-negative for monotonicity + normalization; [`FacilityLocation::from_features`]
+//! builds clamped cosine similarities from a feature matrix.
+//!
+//! Memory note: dense `n²` storage caps practical `n` around ~8k in this
+//! repo's benches; the paper's experiments use the feature-based objective
+//! for exactly this reason, and so do ours — facility location exists for
+//! the video examples and for objective-diversity in tests/ablations.
+
+use super::{SolState, SubmodularFn};
+use crate::util::vecmath::{cosine, FeatureMatrix};
+
+pub struct FacilityLocation {
+    n: usize,
+    /// row-major `sim[i*n + u]` = attraction of ground element i to facility u
+    sim: Vec<f32>,
+}
+
+impl FacilityLocation {
+    pub fn new(n: usize, sim: Vec<f32>) -> Self {
+        assert_eq!(sim.len(), n * n);
+        debug_assert!(sim.iter().all(|&x| x >= 0.0), "similarities must be non-negative");
+        Self { n, sim }
+    }
+
+    /// Clamped-cosine similarity from features: `max(0, cos(x_i, x_u))`.
+    pub fn from_features(feats: &FeatureMatrix) -> Self {
+        let n = feats.n();
+        let mut sim = vec![0.0f32; n * n];
+        for i in 0..n {
+            sim[i * n + i] = 1.0;
+            for u in (i + 1)..n {
+                let s = cosine(feats.row(i), feats.row(u)).max(0.0);
+                sim[i * n + u] = s;
+                sim[u * n + i] = s;
+            }
+        }
+        Self { n, sim }
+    }
+
+    #[inline]
+    pub fn sim(&self, i: usize, u: usize) -> f32 {
+        self.sim[i * self.n + u]
+    }
+}
+
+impl SubmodularFn for FacilityLocation {
+    fn n(&self) -> usize {
+        self.n
+    }
+
+    fn eval(&self, s: &[usize]) -> f64 {
+        if s.is_empty() {
+            return 0.0;
+        }
+        let mut acc = 0.0f64;
+        for i in 0..self.n {
+            let mut best = 0.0f32;
+            for &u in s {
+                best = best.max(self.sim(i, u));
+            }
+            acc += best as f64;
+        }
+        acc
+    }
+
+    fn state<'a>(&'a self) -> Box<dyn SolState + 'a> {
+        Box::new(FlState { f: self, best: vec![0.0; self.n], value: 0.0, set: Vec::new() })
+    }
+
+    fn pair_gain(&self, u: usize, v: usize) -> f64 {
+        // f(v|{u}) = Σ_i max(0, sim(i,v) - sim(i,u))
+        let mut acc = 0.0f64;
+        for i in 0..self.n {
+            let d = self.sim(i, v) - self.sim(i, u);
+            if d > 0.0 {
+                acc += d as f64;
+            }
+        }
+        acc
+    }
+
+    fn singleton(&self, v: usize) -> f64 {
+        (0..self.n).map(|i| self.sim(i, v) as f64).sum()
+    }
+
+    fn singleton_complements(&self) -> Vec<f64> {
+        // f(v|V\v) = Σ_i max(0, sim(i,v) - max_{u≠v} sim(i,u))
+        //          = Σ_i [sim(i,v) == top1(i)] * (top1(i) - top2(i))  (v unique argmax)
+        // Computed with a top-2 scan per row i: O(n²) once.
+        let mut out = vec![0.0f64; self.n];
+        for i in 0..self.n {
+            let row = &self.sim[i * self.n..(i + 1) * self.n];
+            let (mut top1, mut arg1, mut top2) = (f32::NEG_INFINITY, usize::MAX, f32::NEG_INFINITY);
+            for (u, &s) in row.iter().enumerate() {
+                if s > top1 {
+                    top2 = top1;
+                    top1 = s;
+                    arg1 = u;
+                } else if s > top2 {
+                    top2 = s;
+                }
+            }
+            if arg1 != usize::MAX && top1 > top2 {
+                out[arg1] += (top1 - top2) as f64;
+            }
+        }
+        out
+    }
+}
+
+struct FlState<'a> {
+    f: &'a FacilityLocation,
+    /// per-ground-element current best similarity to the solution
+    best: Vec<f32>,
+    value: f64,
+    set: Vec<usize>,
+}
+
+impl SolState for FlState<'_> {
+    fn value(&self) -> f64 {
+        self.value
+    }
+
+    fn gain(&self, v: usize) -> f64 {
+        let mut acc = 0.0f64;
+        for i in 0..self.f.n {
+            let d = self.f.sim(i, v) - self.best[i];
+            if d > 0.0 {
+                acc += d as f64;
+            }
+        }
+        acc
+    }
+
+    fn add(&mut self, v: usize) {
+        let mut acc = 0.0f64;
+        for i in 0..self.f.n {
+            let s = self.f.sim(i, v);
+            if s > self.best[i] {
+                acc += (s - self.best[i]) as f64;
+                self.best[i] = s;
+            }
+        }
+        self.value += acc;
+        self.set.push(v);
+    }
+
+    fn set(&self) -> &[usize] {
+        &self.set
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::submodular::test_support::*;
+    use crate::util::rng::Rng;
+
+    fn instance(n: usize, seed: u64) -> FacilityLocation {
+        let mut rng = Rng::new(seed);
+        let mut sim = vec![0.0f32; n * n];
+        for i in 0..n {
+            sim[i * n + i] = 1.0;
+            for u in (i + 1)..n {
+                let s = rng.f32();
+                sim[i * n + u] = s;
+                sim[u * n + i] = s;
+            }
+        }
+        FacilityLocation::new(n, sim)
+    }
+
+    #[test]
+    fn properties() {
+        let f = instance(15, 1);
+        check_submodular(&f, true, 40, 150);
+        check_state_consistency(&f, 41, 100);
+        check_edge_ingredients(&f, 42, 80);
+    }
+
+    #[test]
+    fn from_features_symmetric_unit_diag() {
+        let mut rng = Rng::new(2);
+        let feats = FeatureMatrix::from_rows(
+            (0..8).map(|_| (0..5).map(|_| rng.f32()).collect()).collect(),
+        );
+        let f = FacilityLocation::from_features(&feats);
+        for i in 0..8 {
+            assert!((f.sim(i, i) - 1.0).abs() < 1e-6);
+            for u in 0..8 {
+                assert_eq!(f.sim(i, u), f.sim(u, i));
+                assert!(f.sim(i, u) >= 0.0);
+            }
+        }
+    }
+
+    #[test]
+    fn full_set_attains_row_maxima() {
+        let f = instance(10, 3);
+        let full: Vec<usize> = (0..10).collect();
+        let want: f64 = (0..10)
+            .map(|i| (0..10).map(|u| f.sim(i, u)).fold(f32::MIN, f32::max) as f64)
+            .sum();
+        assert!((f.eval(&full) - want).abs() < 1e-6);
+    }
+}

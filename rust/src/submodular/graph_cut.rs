@@ -1,0 +1,175 @@
+//! Graph-cut style objective: `f(S) = λ Σ_{i∈V} Σ_{u∈S} sim(i,u) − Σ_{u,v∈S, u<v} sim(u,v)`.
+//!
+//! Coverage-minus-redundancy; submodular for any λ, non-monotone unless λ is
+//! large. With λ < 1 this is the crate's stock *non-monotone* test objective
+//! (SS's Lemmas 1–3 only need submodularity + non-negativity, and §3.4 of
+//! the paper extends SS to the non-monotone case — our ablation bench
+//! exercises that path with this function).
+
+use super::{BidirState, SolState, SubmodularFn};
+
+pub struct GraphCut {
+    n: usize,
+    sim: Vec<f32>,
+    lambda: f64,
+    /// cached column mass Σ_i sim(i,u)
+    col: Vec<f64>,
+}
+
+impl GraphCut {
+    pub fn new(n: usize, sim: Vec<f32>, lambda: f64) -> Self {
+        assert_eq!(sim.len(), n * n);
+        let col: Vec<f64> =
+            (0..n).map(|u| (0..n).map(|i| sim[i * n + u] as f64).sum()).collect();
+        Self { n, sim, lambda, col }
+    }
+
+    #[inline]
+    fn sim(&self, i: usize, u: usize) -> f64 {
+        self.sim[i * self.n + u] as f64
+    }
+
+    /// Marginal gain given the member indicator + current internal mass.
+    fn gain_given(&self, members: &[bool], v: usize) -> f64 {
+        let internal: f64 = (0..self.n).filter(|&u| members[u]).map(|u| self.sim(u, v)).sum();
+        self.lambda * self.col[v] - internal
+    }
+}
+
+impl SubmodularFn for GraphCut {
+    fn n(&self) -> usize {
+        self.n
+    }
+
+    fn eval(&self, s: &[usize]) -> f64 {
+        let mut acc = 0.0;
+        for &u in s {
+            acc += self.lambda * self.col[u];
+        }
+        for (a, &u) in s.iter().enumerate() {
+            for &v in &s[a + 1..] {
+                acc -= self.sim(u, v);
+            }
+        }
+        acc
+    }
+
+    fn state<'a>(&'a self) -> Box<dyn SolState + 'a> {
+        Box::new(GcState { f: self, member: vec![false; self.n], value: 0.0, set: Vec::new() })
+    }
+
+    fn bidir_state<'a>(&'a self, init: &[usize]) -> Option<Box<dyn BidirState + 'a>> {
+        let mut member = vec![false; self.n];
+        let mut value = 0.0;
+        for &v in init {
+            value += self.gain_given(&member, v);
+            member[v] = true;
+        }
+        Some(Box::new(GcBidir { f: self, member, value }))
+    }
+}
+
+struct GcState<'a> {
+    f: &'a GraphCut,
+    member: Vec<bool>,
+    value: f64,
+    set: Vec<usize>,
+}
+
+impl SolState for GcState<'_> {
+    fn value(&self) -> f64 {
+        self.value
+    }
+    fn gain(&self, v: usize) -> f64 {
+        self.f.gain_given(&self.member, v)
+    }
+    fn add(&mut self, v: usize) {
+        self.value += self.gain(v);
+        self.member[v] = true;
+        self.set.push(v);
+    }
+    fn set(&self) -> &[usize] {
+        &self.set
+    }
+}
+
+struct GcBidir<'a> {
+    f: &'a GraphCut,
+    member: Vec<bool>,
+    value: f64,
+}
+
+impl BidirState for GcBidir<'_> {
+    fn value(&self) -> f64 {
+        self.value
+    }
+    fn gain_add(&self, v: usize) -> f64 {
+        self.f.gain_given(&self.member, v)
+    }
+    fn gain_remove(&self, v: usize) -> f64 {
+        let mut members = self.member.clone();
+        members[v] = false;
+        -self.f.gain_given(&members, v)
+    }
+    fn add(&mut self, v: usize) {
+        self.value += self.gain_add(v);
+        self.member[v] = true;
+    }
+    fn remove(&mut self, v: usize) {
+        self.value += self.gain_remove(v);
+        self.member[v] = false;
+    }
+    fn contains(&self, v: usize) -> bool {
+        self.member[v]
+    }
+    fn members(&self) -> Vec<usize> {
+        (0..self.member.len()).filter(|&v| self.member[v]).collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::submodular::test_support::*;
+    use crate::util::rng::Rng;
+
+    fn instance(n: usize, lambda: f64, seed: u64) -> GraphCut {
+        let mut rng = Rng::new(seed);
+        let mut sim = vec![0.0f32; n * n];
+        for i in 0..n {
+            for u in (i + 1)..n {
+                let s = rng.f32();
+                sim[i * n + u] = s;
+                sim[u * n + i] = s;
+            }
+        }
+        GraphCut::new(n, sim, lambda)
+    }
+
+    #[test]
+    fn submodular_nonmonotone() {
+        let f = instance(14, 0.4, 1);
+        check_submodular(&f, false, 70, 150);
+        check_state_consistency(&f, 71, 100);
+    }
+
+    #[test]
+    fn large_lambda_behaves_monotone_on_small_sets() {
+        let f = instance(10, 10.0, 2);
+        let st = f.state();
+        for v in 0..10 {
+            assert!(st.gain(v) > 0.0);
+        }
+    }
+
+    #[test]
+    fn bidir_matches_eval() {
+        let f = instance(10, 0.5, 3);
+        let mut st = f.bidir_state(&[0, 4, 7]).unwrap();
+        assert!((st.value() - f.eval(&[0, 4, 7])).abs() < 1e-6);
+        st.remove(4);
+        assert!((st.value() - f.eval(&[0, 7])).abs() < 1e-6);
+        st.add(2);
+        assert!((st.value() - f.eval(&[0, 2, 7])).abs() < 1e-6);
+    }
+}

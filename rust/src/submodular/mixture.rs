@@ -1,0 +1,120 @@
+//! Weighted mixtures `f = Σ_k α_k f_k` of submodular components — closed
+//! under non-negative combination; the standard way summarization systems
+//! trade coverage against diversity.
+
+use super::{SolState, SubmodularFn};
+
+pub struct Mixture {
+    parts: Vec<(f64, Box<dyn SubmodularFn>)>,
+}
+
+impl Mixture {
+    pub fn new(parts: Vec<(f64, Box<dyn SubmodularFn>)>) -> Self {
+        assert!(!parts.is_empty());
+        let n = parts[0].1.n();
+        for (a, p) in &parts {
+            assert!(*a >= 0.0, "mixture weights must be non-negative");
+            assert_eq!(p.n(), n, "components must share a ground set");
+        }
+        Self { parts }
+    }
+}
+
+impl SubmodularFn for Mixture {
+    fn n(&self) -> usize {
+        self.parts[0].1.n()
+    }
+
+    fn eval(&self, s: &[usize]) -> f64 {
+        self.parts.iter().map(|(a, p)| a * p.eval(s)).sum()
+    }
+
+    fn state<'a>(&'a self) -> Box<dyn SolState + 'a> {
+        Box::new(MixState {
+            states: self.parts.iter().map(|(a, p)| (*a, p.state())).collect(),
+            set: Vec::new(),
+        })
+    }
+
+    fn pair_gain(&self, u: usize, v: usize) -> f64 {
+        self.parts.iter().map(|(a, p)| a * p.pair_gain(u, v)).sum()
+    }
+
+    fn singleton(&self, v: usize) -> f64 {
+        self.parts.iter().map(|(a, p)| a * p.singleton(v)).sum()
+    }
+
+    fn singleton_complements(&self) -> Vec<f64> {
+        let mut acc = vec![0.0; self.n()];
+        for (a, p) in &self.parts {
+            for (dst, s) in acc.iter_mut().zip(p.singleton_complements()) {
+                *dst += a * s;
+            }
+        }
+        acc
+    }
+}
+
+struct MixState<'a> {
+    states: Vec<(f64, Box<dyn SolState + 'a>)>,
+    set: Vec<usize>,
+}
+
+impl SolState for MixState<'_> {
+    fn value(&self) -> f64 {
+        self.states.iter().map(|(a, s)| a * s.value()).sum()
+    }
+    fn gain(&self, v: usize) -> f64 {
+        self.states.iter().map(|(a, s)| a * s.gain(v)).sum()
+    }
+    fn add(&mut self, v: usize) {
+        for (_, s) in &mut self.states {
+            s.add(v);
+        }
+        self.set.push(v);
+    }
+    fn set(&self) -> &[usize] {
+        &self.set
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::{FeatureBased, Modular};
+    use super::*;
+    use crate::submodular::test_support::*;
+    use crate::util::rng::Rng;
+    use crate::util::vecmath::FeatureMatrix;
+
+    fn instance(seed: u64) -> Mixture {
+        let mut rng = Rng::new(seed);
+        let n = 12;
+        let mut m = FeatureMatrix::zeros(n, 6);
+        for i in 0..n {
+            for j in 0..6 {
+                m.row_mut(i)[j] = rng.f32();
+            }
+        }
+        Mixture::new(vec![
+            (0.7, Box::new(FeatureBased::sqrt(m)) as Box<dyn SubmodularFn>),
+            (0.3, Box::new(Modular::new((0..n).map(|_| rng.f64()).collect()))),
+        ])
+    }
+
+    #[test]
+    fn mixture_properties() {
+        let f = instance(1);
+        check_submodular(&f, true, 90, 120);
+        check_state_consistency(&f, 91, 80);
+        check_edge_ingredients(&f, 92, 60);
+    }
+
+    #[test]
+    #[should_panic(expected = "share a ground set")]
+    fn mismatched_ground_sets_rejected() {
+        let _ = Mixture::new(vec![
+            (1.0, Box::new(Modular::new(vec![1.0; 4])) as Box<dyn SubmodularFn>),
+            (1.0, Box::new(Modular::new(vec![1.0; 5]))),
+        ]);
+    }
+}

@@ -1,0 +1,210 @@
+//! Submodular objective library.
+//!
+//! Everything SS touches goes through [`SubmodularFn`]: the paper's
+//! feature-based concave-over-modular function (the experiments' objective),
+//! facility location, coverage families, graph cut, plain modular functions,
+//! and weighted mixtures. Each function exposes
+//!
+//! * whole-set evaluation `f(S)` (the ground-truth oracle),
+//! * an incremental [`SolState`] with `O(gain)` marginal evaluation — the
+//!   contract every maximization algorithm in [`crate::algorithms`] relies
+//!   on,
+//! * the pairwise gain `f(v|{u})` and the batch singleton-complement vector
+//!   `f(v|V\v)` — the two ingredients of the submodularity-graph edge
+//!   weight `w_{uv} = f(v|u) - f(u|V\u)` (paper Eq. 3).
+//!
+//! Functions that additionally support removal implement [`bidir_state`]
+//! (used by the unconstrained bi-directional greedy of Buchbinder et al.,
+//! which §3.4 of the paper applies to the sparsification objective).
+//!
+//! [`bidir_state`]: SubmodularFn::bidir_state
+
+mod coverage;
+mod facility_location;
+mod feature_based;
+mod graph_cut;
+mod mixture;
+mod modular;
+mod sparsification_objective;
+
+pub use coverage::{SaturatedCoverage, SetCover};
+pub use facility_location::FacilityLocation;
+pub use feature_based::{Concave, FeatureBased};
+pub use graph_cut::GraphCut;
+pub use mixture::Mixture;
+pub use modular::Modular;
+pub use sparsification_objective::SparsificationObjective;
+
+/// A normalized (`f(∅) = 0`) non-negative submodular set function over a
+/// ground set `{0, .., n-1}`.
+pub trait SubmodularFn: Send + Sync {
+    /// Ground-set size `n = |V|`.
+    fn n(&self) -> usize;
+
+    /// Evaluate `f(S)` from scratch. `s` may be unsorted; duplicates are a
+    /// caller bug (checked in debug builds by implementations).
+    fn eval(&self, s: &[usize]) -> f64;
+
+    /// Fresh incremental solution state at `S = ∅`.
+    fn state<'a>(&'a self) -> Box<dyn SolState + 'a>;
+
+    /// Pairwise gain `f(v | {u})` — the "local importance" half of the
+    /// submodularity-graph edge weight. Implementations override the
+    /// two-eval default when a cheaper closed form exists.
+    fn pair_gain(&self, u: usize, v: usize) -> f64 {
+        self.eval(&[u, v]) - self.eval(&[u])
+    }
+
+    /// Singleton value `f({v})`.
+    fn singleton(&self, v: usize) -> f64 {
+        self.eval(&[v])
+    }
+
+    /// Batch `f(v | V∖v)` for all `v` — the "global importance" half of the
+    /// edge weight, precomputed once per SS invocation (paper §3.2: "may be
+    /// precomputed once in linear time"). The default is the O(n) eval
+    /// fallback per element (O(n²) total) — fine for tests, overridden by
+    /// every real objective.
+    fn singleton_complements(&self) -> Vec<f64> {
+        let full: Vec<usize> = (0..self.n()).collect();
+        let f_v = self.eval(&full);
+        (0..self.n())
+            .map(|v| {
+                let rest: Vec<usize> = (0..self.n()).filter(|&u| u != v).collect();
+                f_v - self.eval(&rest)
+            })
+            .collect()
+    }
+
+    /// Add/remove-capable state starting from an arbitrary set, when the
+    /// objective supports efficient removal (needed by bi-directional
+    /// greedy). `None` (the default) opts out.
+    fn bidir_state<'a>(&'a self, _init: &[usize]) -> Option<Box<dyn BidirState + 'a>> {
+        None
+    }
+
+    /// Specialization hook: objectives that are (or wrap) a
+    /// [`FeatureBased`] expose it so generic backends can route the SS hot
+    /// loop through the blocked/vectorized divergence kernel.
+    fn as_feature_based(&self) -> Option<&FeatureBased> {
+        None
+    }
+}
+
+/// Incremental solution state: supports gain queries and additions.
+pub trait SolState: Send {
+    /// Current `f(S)`.
+    fn value(&self) -> f64;
+    /// Marginal gain `f(v | S)`.
+    fn gain(&self, v: usize) -> f64;
+    /// Commit `S ← S + v`.
+    fn add(&mut self, v: usize);
+    /// Elements committed so far, in insertion order.
+    fn set(&self) -> &[usize];
+}
+
+/// Add/remove state over an explicit member set (bi-directional greedy).
+pub trait BidirState: Send {
+    fn value(&self) -> f64;
+    /// `f(S + v) - f(S)`.
+    fn gain_add(&self, v: usize) -> f64;
+    /// `f(S - v) - f(S)`.
+    fn gain_remove(&self, v: usize) -> f64;
+    fn add(&mut self, v: usize);
+    fn remove(&mut self, v: usize);
+    fn contains(&self, v: usize) -> bool;
+    fn members(&self) -> Vec<usize>;
+}
+
+#[cfg(test)]
+pub(crate) mod test_support {
+    //! Shared property-test drivers: every objective must pass these.
+    use super::*;
+    use crate::util::prop::{check_seeded, Gen};
+
+    /// Draw a random (A ⊆ B, v ∉ B) triple and verify diminishing returns,
+    /// monotone non-negativity of gains where `monotone`, and consistency of
+    /// the incremental state against from-scratch eval.
+    pub fn check_submodular(f: &dyn SubmodularFn, monotone: bool, seed: u64, cases: usize) {
+        let n = f.n();
+        assert!(n >= 3, "need n >= 3 for the property driver");
+        check_seeded(seed, cases, |g: &mut Gen| {
+            let b = g.subset(n, 0..n.min(12));
+            // A = random subset of B
+            let a: Vec<usize> = b.iter().copied().filter(|_| g.bool()).collect();
+            let outside: Vec<usize> = (0..n).filter(|x| !b.contains(x)).collect();
+            if outside.is_empty() {
+                return;
+            }
+            let v = *g.choose(&outside);
+            let fa = f.eval(&a);
+            let fb = f.eval(&b);
+            let fav = f.eval(&[a.clone(), vec![v]].concat());
+            let fbv = f.eval(&[b.clone(), vec![v]].concat());
+            let ga = fav - fa;
+            let gb = fbv - fb;
+            assert!(
+                ga >= gb - 1e-6 * (1.0 + ga.abs() + gb.abs()),
+                "diminishing returns violated: f(v|A)={ga} < f(v|B)={gb} (A={a:?} B={b:?} v={v})"
+            );
+            if monotone {
+                assert!(gb >= -1e-9, "monotone objective has negative gain {gb}");
+                assert!(fa >= -1e-9 && fb >= -1e-9, "non-negativity");
+            }
+            // normalization
+            assert!(f.eval(&[]).abs() < 1e-9, "f(empty) != 0");
+        });
+    }
+
+    /// Incremental state must track from-scratch eval along random chains.
+    pub fn check_state_consistency(f: &dyn SubmodularFn, seed: u64, cases: usize) {
+        let n = f.n();
+        check_seeded(seed, cases, |g: &mut Gen| {
+            let chain = g.subset(n, 1..n.min(10));
+            let mut st = f.state();
+            let mut so_far: Vec<usize> = Vec::new();
+            for &v in &chain {
+                let want_gain = f.eval(&[so_far.clone(), vec![v]].concat()) - f.eval(&so_far);
+                let got_gain = st.gain(v);
+                assert!(
+                    (want_gain - got_gain).abs() < 1e-5 * (1.0 + want_gain.abs()),
+                    "state gain mismatch at v={v}: got {got_gain}, want {want_gain}"
+                );
+                st.add(v);
+                so_far.push(v);
+                let want_val = f.eval(&so_far);
+                assert!(
+                    (st.value() - want_val).abs() < 1e-5 * (1.0 + want_val.abs()),
+                    "state value drift: got {}, want {want_val}",
+                    st.value()
+                );
+            }
+            assert_eq!(st.set(), &so_far[..]);
+        });
+    }
+
+    /// pair_gain and singleton_complements must agree with eval.
+    pub fn check_edge_ingredients(f: &dyn SubmodularFn, seed: u64, cases: usize) {
+        let n = f.n();
+        let sing = f.singleton_complements();
+        let full: Vec<usize> = (0..n).collect();
+        let f_full = f.eval(&full);
+        check_seeded(seed, cases, |g: &mut Gen| {
+            let u = g.usize_in(0, n);
+            let v = g.usize_in(0, n);
+            if u == v {
+                return;
+            }
+            let want = f.eval(&[u, v]) - f.eval(&[u]);
+            let got = f.pair_gain(u, v);
+            assert!((want - got).abs() < 1e-5 * (1.0 + want.abs()), "pair_gain({u},{v})");
+            let rest: Vec<usize> = (0..n).filter(|&x| x != u).collect();
+            let want_sc = f_full - f.eval(&rest);
+            assert!(
+                (sing[u] - want_sc).abs() < 1e-4 * (1.0 + want_sc.abs()),
+                "singleton_complements[{u}]: got {}, want {want_sc}",
+                sing[u]
+            );
+        });
+    }
+}

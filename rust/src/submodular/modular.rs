@@ -1,0 +1,135 @@
+//! Modular (additive) functions — the degenerate boundary of submodularity.
+//! Used in tests (every inequality in the paper must hold with equality-ish
+//! slack on modular functions) and as components of [`super::Mixture`].
+
+use super::{BidirState, SolState, SubmodularFn};
+
+pub struct Modular {
+    w: Vec<f64>,
+}
+
+impl Modular {
+    pub fn new(w: Vec<f64>) -> Self {
+        debug_assert!(w.iter().all(|&x| x >= 0.0), "normalized non-negative modular");
+        Self { w }
+    }
+}
+
+impl SubmodularFn for Modular {
+    fn n(&self) -> usize {
+        self.w.len()
+    }
+
+    fn eval(&self, s: &[usize]) -> f64 {
+        s.iter().map(|&v| self.w[v]).sum()
+    }
+
+    fn state<'a>(&'a self) -> Box<dyn SolState + 'a> {
+        Box::new(ModState { f: self, value: 0.0, set: Vec::new() })
+    }
+
+    fn pair_gain(&self, _u: usize, v: usize) -> f64 {
+        self.w[v]
+    }
+
+    fn singleton(&self, v: usize) -> f64 {
+        self.w[v]
+    }
+
+    fn singleton_complements(&self) -> Vec<f64> {
+        self.w.clone()
+    }
+
+    fn bidir_state<'a>(&'a self, init: &[usize]) -> Option<Box<dyn BidirState + 'a>> {
+        let mut member = vec![false; self.n()];
+        let mut value = 0.0;
+        for &v in init {
+            member[v] = true;
+            value += self.w[v];
+        }
+        Some(Box::new(ModBidir { f: self, member, value }))
+    }
+}
+
+struct ModState<'a> {
+    f: &'a Modular,
+    value: f64,
+    set: Vec<usize>,
+}
+
+impl SolState for ModState<'_> {
+    fn value(&self) -> f64 {
+        self.value
+    }
+    fn gain(&self, v: usize) -> f64 {
+        self.f.w[v]
+    }
+    fn add(&mut self, v: usize) {
+        self.value += self.f.w[v];
+        self.set.push(v);
+    }
+    fn set(&self) -> &[usize] {
+        &self.set
+    }
+}
+
+struct ModBidir<'a> {
+    f: &'a Modular,
+    member: Vec<bool>,
+    value: f64,
+}
+
+impl BidirState for ModBidir<'_> {
+    fn value(&self) -> f64 {
+        self.value
+    }
+    fn gain_add(&self, v: usize) -> f64 {
+        self.f.w[v]
+    }
+    fn gain_remove(&self, v: usize) -> f64 {
+        -self.f.w[v]
+    }
+    fn add(&mut self, v: usize) {
+        self.member[v] = true;
+        self.value += self.f.w[v];
+    }
+    fn remove(&mut self, v: usize) {
+        self.member[v] = false;
+        self.value -= self.f.w[v];
+    }
+    fn contains(&self, v: usize) -> bool {
+        self.member[v]
+    }
+    fn members(&self) -> Vec<usize> {
+        (0..self.member.len()).filter(|&v| self.member[v]).collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::submodular::test_support::*;
+
+    #[test]
+    fn modular_is_submodular_and_monotone() {
+        let f = Modular::new((0..12).map(|i| i as f64 * 0.5).collect());
+        check_submodular(&f, true, 80, 100);
+        check_state_consistency(&f, 81, 80);
+        check_edge_ingredients(&f, 82, 80);
+    }
+
+    #[test]
+    fn edge_weights_vanish_for_equal_weights() {
+        // w_uv = f(v|u) - f(u|V\u) = w_v - w_u = 0 when all weights equal:
+        // pruning is "free" on redundancy-free modular ground sets.
+        let f = Modular::new(vec![2.0; 6]);
+        let sing = f.singleton_complements();
+        for u in 0..6 {
+            for v in 0..6 {
+                if u != v {
+                    assert_eq!(f.pair_gain(u, v) - sing[u], 0.0);
+                }
+            }
+        }
+    }
+}

@@ -1,0 +1,209 @@
+//! The sparsification objective `h` of paper Eq. (9):
+//!
+//! `h(V') = |{ v ∈ V∖V' : w_{V'v} ≤ ε }|`
+//!
+//! Proposition 1 shows `h(V') = |∪_{u∈V'} A_u| − |V'|` with
+//! `A_u = {v : w_{uv} ≤ ε}` — set cover minus cardinality, hence
+//! non-monotone submodular. The paper notes solving Eq. (9) directly is a
+//! chicken-and-egg problem (it *is* submodular maximization and needs all
+//! n(n−1) edge weights); SS exists to avoid it. We still implement `h`
+//! faithfully because:
+//!
+//! * §3.4's third improvement runs bi-directional greedy on `h` restricted
+//!   to the (small) SS output `V'` to shrink it further;
+//! * tests validate Proposition 1 (submodularity, non-monotonicity) and
+//!   Theorem 1 empirically against this exact objective.
+
+use super::{BidirState, SolState, SubmodularFn};
+
+pub struct SparsificationObjective {
+    /// `a_sets[u]` = sorted ids of v with `w_{uv} <= eps` (including u itself:
+    /// `w_{uu} = -f(u|V\u) <= 0 <= eps`).
+    a_sets: Vec<Vec<u32>>,
+    n: usize,
+}
+
+impl SparsificationObjective {
+    /// Build from a dense edge-weight oracle. O(n²) weight evaluations —
+    /// intended for the *reduced* set (paper §3.4) or tests.
+    pub fn from_weights(n: usize, eps: f64, w: impl Fn(usize, usize) -> f64) -> Self {
+        let a_sets = (0..n)
+            .map(|u| {
+                (0..n)
+                    .filter(|&v| v == u || w(u, v) <= eps)
+                    .map(|v| v as u32)
+                    .collect()
+            })
+            .collect();
+        Self { a_sets, n }
+    }
+
+    pub fn covered_by(&self, u: usize) -> &[u32] {
+        &self.a_sets[u]
+    }
+}
+
+impl SubmodularFn for SparsificationObjective {
+    fn n(&self) -> usize {
+        self.n
+    }
+
+    fn eval(&self, s: &[usize]) -> f64 {
+        let mut hit = vec![false; self.n];
+        let mut covered = 0usize;
+        for &u in s {
+            for &v in &self.a_sets[u] {
+                if !hit[v as usize] {
+                    hit[v as usize] = true;
+                    covered += 1;
+                }
+            }
+        }
+        covered as f64 - s.len() as f64
+    }
+
+    fn state<'a>(&'a self) -> Box<dyn SolState + 'a> {
+        Box::new(HState { f: self, count: vec![0; self.n], value: 0.0, set: Vec::new() })
+    }
+
+    fn bidir_state<'a>(&'a self, init: &[usize]) -> Option<Box<dyn BidirState + 'a>> {
+        let mut st = HState { f: self, count: vec![0; self.n], value: 0.0, set: Vec::new() };
+        let mut member = vec![false; self.n];
+        for &v in init {
+            st.add(v);
+            member[v] = true;
+        }
+        Some(Box::new(HBidir { inner: st, member }))
+    }
+}
+
+struct HState<'a> {
+    f: &'a SparsificationObjective,
+    count: Vec<u32>,
+    value: f64,
+    set: Vec<usize>,
+}
+
+impl HState<'_> {
+    fn add_gain(&self, u: usize) -> f64 {
+        let fresh =
+            self.f.a_sets[u].iter().filter(|&&v| self.count[v as usize] == 0).count();
+        fresh as f64 - 1.0
+    }
+}
+
+impl SolState for HState<'_> {
+    fn value(&self) -> f64 {
+        self.value
+    }
+    fn gain(&self, u: usize) -> f64 {
+        self.add_gain(u)
+    }
+    fn add(&mut self, u: usize) {
+        self.value += self.add_gain(u);
+        for &v in &self.f.a_sets[u] {
+            self.count[v as usize] += 1;
+        }
+        self.set.push(u);
+    }
+    fn set(&self) -> &[usize] {
+        &self.set
+    }
+}
+
+struct HBidir<'a> {
+    inner: HState<'a>,
+    member: Vec<bool>,
+}
+
+impl BidirState for HBidir<'_> {
+    fn value(&self) -> f64 {
+        self.inner.value
+    }
+    fn gain_add(&self, u: usize) -> f64 {
+        self.inner.add_gain(u)
+    }
+    fn gain_remove(&self, u: usize) -> f64 {
+        let lost =
+            self.inner.f.a_sets[u].iter().filter(|&&v| self.inner.count[v as usize] == 1).count();
+        1.0 - lost as f64
+    }
+    fn add(&mut self, u: usize) {
+        debug_assert!(!self.member[u]);
+        self.inner.add(u);
+        self.member[u] = true;
+    }
+    fn remove(&mut self, u: usize) {
+        debug_assert!(self.member[u]);
+        self.inner.value += self.gain_remove(u);
+        for &v in &self.inner.f.a_sets[u] {
+            self.inner.count[v as usize] -= 1;
+        }
+        self.member[u] = false;
+    }
+    fn contains(&self, u: usize) -> bool {
+        self.member[u]
+    }
+    fn members(&self) -> Vec<usize> {
+        (0..self.member.len()).filter(|&v| self.member[v]).collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::submodular::test_support::*;
+    use crate::util::rng::Rng;
+
+    fn instance(n: usize, eps: f64, seed: u64) -> SparsificationObjective {
+        // random asymmetric "weights" in [-0.5, 1.5]
+        let mut rng = Rng::new(seed);
+        let w: Vec<f64> = (0..n * n).map(|_| rng.f64() * 2.0 - 0.5).collect();
+        SparsificationObjective::from_weights(n, eps, move |u, v| w[u * n + v])
+    }
+
+    #[test]
+    fn h_is_submodular_nonmonotone() {
+        let f = instance(14, 0.5, 1);
+        check_submodular(&f, false, 100, 150);
+        check_state_consistency(&f, 101, 100);
+    }
+
+    #[test]
+    fn h_empty_zero_and_self_coverage() {
+        let f = instance(8, 0.2, 2);
+        assert_eq!(f.eval(&[]), 0.0);
+        for u in 0..8 {
+            assert!(f.covered_by(u).contains(&(u as u32)), "u must cover itself");
+        }
+    }
+
+    #[test]
+    fn h_counts_match_definition() {
+        // tiny hand-checkable instance: w(u,v) <= eps iff v == u+1 (mod n)
+        let n = 5;
+        let f = SparsificationObjective::from_weights(n, 0.0, |u, v| {
+            if (u + 1) % n == v {
+                -1.0
+            } else {
+                1.0
+            }
+        });
+        // V' = {0}: covers {0, 1} → h = |{1}| ... = 2 covered - 1 = 1
+        assert_eq!(f.eval(&[0]), 1.0);
+        // V' = {0, 1}: covers {0,1,2} → 3 - 2 = 1
+        assert_eq!(f.eval(&[0, 1]), 1.0);
+        // full set: covers all 5, h = 5 - 5 = 0
+        assert_eq!(f.eval(&[0, 1, 2, 3, 4]), 0.0);
+    }
+
+    #[test]
+    fn bidir_consistency() {
+        let f = instance(10, 0.4, 3);
+        let mut st = f.bidir_state(&[2, 5]).unwrap();
+        assert!((st.value() - f.eval(&[2, 5])).abs() < 1e-9);
+        st.add(7);
+        st.remove(2);
+        assert!((st.value() - f.eval(&[5, 7])).abs() < 1e-9);
+    }
+}

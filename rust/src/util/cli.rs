@@ -1,0 +1,270 @@
+//! Minimal subcommand-style CLI parser (offline `clap` substitute).
+//!
+//! Grammar: `ssctl <subcommand> [--flag] [--key value] [positional...]`.
+//! Flags declared ahead of parsing get typed accessors + generated help;
+//! unknown flags are an error (catches typos in experiment scripts).
+
+use std::collections::BTreeMap;
+
+#[derive(Clone, Debug)]
+pub struct FlagSpec {
+    pub name: &'static str,
+    pub help: &'static str,
+    pub takes_value: bool,
+    pub default: Option<&'static str>,
+}
+
+/// A declared subcommand with its flags.
+pub struct Command {
+    pub name: &'static str,
+    pub about: &'static str,
+    pub flags: Vec<FlagSpec>,
+}
+
+impl Command {
+    pub fn new(name: &'static str, about: &'static str) -> Self {
+        Self { name, about, flags: Vec::new() }
+    }
+
+    pub fn flag(mut self, name: &'static str, help: &'static str) -> Self {
+        self.flags.push(FlagSpec { name, help, takes_value: false, default: None });
+        self
+    }
+
+    pub fn opt(mut self, name: &'static str, default: &'static str, help: &'static str) -> Self {
+        self.flags.push(FlagSpec { name, help, takes_value: true, default: Some(default) });
+        self
+    }
+
+    pub fn opt_req(mut self, name: &'static str, help: &'static str) -> Self {
+        self.flags.push(FlagSpec { name, help, takes_value: true, default: None });
+        self
+    }
+}
+
+/// Parsed arguments for one subcommand invocation.
+#[derive(Debug, Default)]
+pub struct Args {
+    values: BTreeMap<String, String>,
+    switches: Vec<String>,
+    pub positional: Vec<String>,
+}
+
+impl Args {
+    pub fn has(&self, name: &str) -> bool {
+        self.switches.iter().any(|s| s == name)
+    }
+
+    pub fn get(&self, name: &str) -> Option<&str> {
+        self.values.get(name).map(|s| s.as_str())
+    }
+
+    pub fn str(&self, name: &str) -> String {
+        self.get(name).unwrap_or_else(|| panic!("missing required --{name}")).to_string()
+    }
+
+    pub fn usize(&self, name: &str) -> usize {
+        self.str(name).parse().unwrap_or_else(|_| panic!("--{name} must be an integer"))
+    }
+
+    pub fn u64(&self, name: &str) -> u64 {
+        self.str(name).parse().unwrap_or_else(|_| panic!("--{name} must be an integer"))
+    }
+
+    pub fn f64(&self, name: &str) -> f64 {
+        self.str(name).parse().unwrap_or_else(|_| panic!("--{name} must be a number"))
+    }
+}
+
+/// Top-level application: subcommand registry + help.
+pub struct App {
+    pub name: &'static str,
+    pub about: &'static str,
+    pub commands: Vec<Command>,
+}
+
+pub enum Parsed {
+    /// (subcommand name, parsed args)
+    Run(String, Args),
+    /// help text to print, exit 0
+    Help(String),
+    /// error text to print, exit 2
+    Error(String),
+}
+
+impl App {
+    pub fn new(name: &'static str, about: &'static str) -> Self {
+        Self { name, about, commands: Vec::new() }
+    }
+
+    pub fn command(mut self, c: Command) -> Self {
+        self.commands.push(c);
+        self
+    }
+
+    pub fn parse(&self, argv: &[String]) -> Parsed {
+        if argv.is_empty() || argv[0] == "--help" || argv[0] == "-h" || argv[0] == "help" {
+            return Parsed::Help(self.help());
+        }
+        let sub = &argv[0];
+        let Some(cmd) = self.commands.iter().find(|c| c.name == sub) else {
+            return Parsed::Error(format!(
+                "unknown subcommand '{sub}'\n\n{help}",
+                help = self.help()
+            ));
+        };
+        let mut args = Args::default();
+        // seed defaults
+        for f in &cmd.flags {
+            if let Some(d) = f.default {
+                args.values.insert(f.name.to_string(), d.to_string());
+            }
+        }
+        let mut i = 1;
+        while i < argv.len() {
+            let tok = &argv[i];
+            if tok == "--help" || tok == "-h" {
+                return Parsed::Help(self.command_help(cmd));
+            }
+            if let Some(name) = tok.strip_prefix("--") {
+                // allow --key=value
+                let (name, inline) = match name.split_once('=') {
+                    Some((n, v)) => (n, Some(v.to_string())),
+                    None => (name, None),
+                };
+                let Some(spec) = cmd.flags.iter().find(|f| f.name == name) else {
+                    return Parsed::Error(format!(
+                        "unknown flag --{name} for '{sub}'\n\n{help}",
+                        help = self.command_help(cmd)
+                    ));
+                };
+                if spec.takes_value {
+                    let value = match inline {
+                        Some(v) => v,
+                        None => {
+                            i += 1;
+                            match argv.get(i) {
+                                Some(v) => v.clone(),
+                                None => return Parsed::Error(format!("--{name} needs a value")),
+                            }
+                        }
+                    };
+                    args.values.insert(name.to_string(), value);
+                } else {
+                    if inline.is_some() {
+                        return Parsed::Error(format!("--{name} takes no value"));
+                    }
+                    args.switches.push(name.to_string());
+                }
+            } else {
+                args.positional.push(tok.clone());
+            }
+            i += 1;
+        }
+        // check required opts
+        for f in &cmd.flags {
+            if f.takes_value && f.default.is_none() && !args.values.contains_key(f.name) {
+                return Parsed::Error(format!("'{sub}' requires --{name}", name = f.name));
+            }
+        }
+        Parsed::Run(sub.clone(), args)
+    }
+
+    pub fn help(&self) -> String {
+        let mut s = format!("{} — {}\n\nUSAGE:\n  {} <command> [flags]\n\nCOMMANDS:\n", self.name, self.about, self.name);
+        for c in &self.commands {
+            s.push_str(&format!("  {:<14} {}\n", c.name, c.about));
+        }
+        s.push_str("\nRun '<command> --help' for per-command flags.\n");
+        s
+    }
+
+    fn command_help(&self, c: &Command) -> String {
+        let mut s = format!("{} {} — {}\n\nFLAGS:\n", self.name, c.name, c.about);
+        for f in &c.flags {
+            let kind = if f.takes_value {
+                match f.default {
+                    Some(d) => format!("<value> (default: {d})"),
+                    None => "<value> (required)".to_string(),
+                }
+            } else {
+                String::new()
+            };
+            s.push_str(&format!("  --{:<18} {} {}\n", f.name, f.help, kind));
+        }
+        s
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn app() -> App {
+        App::new("ssctl", "test app").command(
+            Command::new("summarize", "run a summary")
+                .opt("k", "10", "budget")
+                .opt("method", "ss", "algorithm")
+                .opt_req("dataset", "dataset name")
+                .flag("verbose", "log more"),
+        )
+    }
+
+    fn sv(xs: &[&str]) -> Vec<String> {
+        xs.iter().map(|s| s.to_string()).collect()
+    }
+
+    #[test]
+    fn parses_values_flags_positionals() {
+        let p = app().parse(&sv(&[
+            "summarize", "--k", "25", "--dataset", "news", "--verbose", "extra",
+        ]));
+        match p {
+            Parsed::Run(name, args) => {
+                assert_eq!(name, "summarize");
+                assert_eq!(args.usize("k"), 25);
+                assert_eq!(args.str("method"), "ss"); // default
+                assert_eq!(args.str("dataset"), "news");
+                assert!(args.has("verbose"));
+                assert_eq!(args.positional, vec!["extra"]);
+            }
+            _ => panic!("expected Run"),
+        }
+    }
+
+    #[test]
+    fn equals_syntax() {
+        match app().parse(&sv(&["summarize", "--k=7", "--dataset=x"])) {
+            Parsed::Run(_, args) => assert_eq!(args.usize("k"), 7),
+            _ => panic!(),
+        }
+    }
+
+    #[test]
+    fn missing_required_is_error() {
+        assert!(matches!(app().parse(&sv(&["summarize"])), Parsed::Error(_)));
+    }
+
+    #[test]
+    fn unknown_flag_is_error() {
+        assert!(matches!(
+            app().parse(&sv(&["summarize", "--dataset", "d", "--bogus"])),
+            Parsed::Error(_)
+        ));
+    }
+
+    #[test]
+    fn unknown_subcommand_is_error() {
+        assert!(matches!(app().parse(&sv(&["frobnicate"])), Parsed::Error(_)));
+    }
+
+    #[test]
+    fn help_paths() {
+        assert!(matches!(app().parse(&sv(&[])), Parsed::Help(_)));
+        assert!(matches!(app().parse(&sv(&["--help"])), Parsed::Help(_)));
+        match app().parse(&sv(&["summarize", "--help"])) {
+            Parsed::Help(h) => assert!(h.contains("--dataset")),
+            _ => panic!(),
+        }
+    }
+}

@@ -1,0 +1,11 @@
+//! Foundation substrates built in-repo (the offline environment has no
+//! rand / rayon / tokio / clap / serde / proptest — see DESIGN.md §3).
+
+pub mod cli;
+pub mod json;
+pub mod pool;
+pub mod prop;
+pub mod rng;
+pub mod select;
+pub mod stats;
+pub mod vecmath;

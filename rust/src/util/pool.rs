@@ -1,0 +1,249 @@
+//! Thread pool + parallel-for (the offline substitute for rayon/tokio).
+//!
+//! The SS coordinator's per-round edge-weight computation is embarrassingly
+//! parallel across item shards; this pool is the substrate that carries it.
+//! Design points:
+//!
+//! * **bounded injection queue** — `submit` blocks when the queue is full,
+//!   which is the coordinator's backpressure mechanism (a leader cannot race
+//!   ahead of PJRT executors);
+//! * **positional gather** — [`parallel_map`] returns results in input
+//!   order regardless of scheduling, so parallel SS is bit-deterministic;
+//! * **panic propagation** — a panicking job poisons the pool and surfaces
+//!   on the next call rather than deadlocking.
+
+use std::panic::{catch_unwind, AssertUnwindSafe};
+use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
+use std::sync::mpsc::{sync_channel, Receiver, SyncSender};
+use std::sync::{Arc, Mutex};
+use std::thread::JoinHandle;
+
+type Job = Box<dyn FnOnce() + Send + 'static>;
+
+struct Shared {
+    rx: Mutex<Receiver<Job>>,
+    panicked: AtomicBool,
+    active: AtomicUsize,
+}
+
+/// Fixed-size worker pool over a bounded MPMC (mutexed mpsc) queue.
+pub struct ThreadPool {
+    tx: Option<SyncSender<Job>>,
+    shared: Arc<Shared>,
+    workers: Vec<JoinHandle<()>>,
+}
+
+impl ThreadPool {
+    /// `threads` workers, queue bounded at `queue_cap` pending jobs.
+    pub fn new(threads: usize, queue_cap: usize) -> Self {
+        assert!(threads > 0);
+        let (tx, rx) = sync_channel::<Job>(queue_cap.max(1));
+        let shared = Arc::new(Shared {
+            rx: Mutex::new(rx),
+            panicked: AtomicBool::new(false),
+            active: AtomicUsize::new(0),
+        });
+        let workers = (0..threads)
+            .map(|i| {
+                let shared = Arc::clone(&shared);
+                std::thread::Builder::new()
+                    .name(format!("ss-worker-{i}"))
+                    .spawn(move || loop {
+                        let job = {
+                            let rx = shared.rx.lock().unwrap();
+                            rx.recv()
+                        };
+                        match job {
+                            Ok(job) => {
+                                shared.active.fetch_add(1, Ordering::SeqCst);
+                                if catch_unwind(AssertUnwindSafe(job)).is_err() {
+                                    shared.panicked.store(true, Ordering::SeqCst);
+                                }
+                                shared.active.fetch_sub(1, Ordering::SeqCst);
+                            }
+                            Err(_) => break, // sender dropped: shut down
+                        }
+                    })
+                    .expect("spawn worker")
+            })
+            .collect();
+        Self { tx: Some(tx), shared, workers }
+    }
+
+    /// Pool sized for this machine (≥2 so copy/compute overlap exists even
+    /// on the 1-core CI container).
+    pub fn default_for_host() -> Self {
+        let n = std::thread::available_parallelism().map(|p| p.get()).unwrap_or(1);
+        Self::new(n.max(2), 64)
+    }
+
+    pub fn threads(&self) -> usize {
+        self.workers.len()
+    }
+
+    /// Submit a fire-and-forget job. Blocks when the queue is full
+    /// (backpressure). Panics if a previous job panicked.
+    pub fn submit<F: FnOnce() + Send + 'static>(&self, f: F) {
+        assert!(!self.shared.panicked.load(Ordering::SeqCst), "pool poisoned by a panicked job");
+        self.tx.as_ref().unwrap().send(Box::new(f)).expect("pool shut down");
+    }
+
+    /// Map `f` over `items` in parallel; results are gathered positionally.
+    ///
+    /// Chunking: items are dealt in contiguous chunks of `chunk` to bound
+    /// per-job overhead; `chunk = 0` auto-sizes to `len / (4 * threads)`.
+    pub fn parallel_map<T, R, F>(&self, items: Vec<T>, chunk: usize, f: F) -> Vec<R>
+    where
+        T: Send + 'static,
+        R: Send + 'static,
+        F: Fn(T) -> R + Send + Sync + 'static,
+    {
+        let n = items.len();
+        if n == 0 {
+            return Vec::new();
+        }
+        let chunk = if chunk == 0 { (n / (4 * self.threads().max(1))).max(1) } else { chunk };
+        let f = Arc::new(f);
+        let (rtx, rrx) = std::sync::mpsc::channel::<(usize, Vec<R>)>();
+        let mut jobs = 0usize;
+        let mut items = items.into_iter();
+        let mut start = 0usize;
+        loop {
+            let batch: Vec<T> = items.by_ref().take(chunk).collect();
+            if batch.is_empty() {
+                break;
+            }
+            let f = Arc::clone(&f);
+            let rtx = rtx.clone();
+            let idx = start;
+            start += batch.len();
+            jobs += 1;
+            self.submit(move || {
+                let out: Vec<R> = batch.into_iter().map(|x| f(x)).collect();
+                let _ = rtx.send((idx, out));
+            });
+        }
+        drop(rtx);
+        let mut slots: Vec<Option<Vec<R>>> = (0..jobs).map(|_| None).collect();
+        let mut order: Vec<(usize, usize)> = Vec::with_capacity(jobs); // (start, slot)
+        for k in 0..jobs {
+            let (idx, out) = rrx.recv().expect("worker dropped result (panic?)");
+            order.push((idx, k));
+            slots[k] = Some(out);
+        }
+        order.sort_unstable();
+        let mut result = Vec::with_capacity(n);
+        for (_, slot) in order {
+            result.extend(slots[slot].take().unwrap());
+        }
+        assert!(!self.shared.panicked.load(Ordering::SeqCst), "job panicked during parallel_map");
+        result
+    }
+
+    /// Parallel-for over index ranges: `f(lo, hi)` per shard, results
+    /// gathered in shard order. The coordinator uses this to process item
+    /// shards against a shared read-only context.
+    pub fn parallel_ranges<R, F>(&self, n: usize, shards: usize, f: F) -> Vec<R>
+    where
+        R: Send + 'static,
+        F: Fn(usize, usize) -> R + Send + Sync + 'static,
+    {
+        if n == 0 {
+            return Vec::new();
+        }
+        let shards = shards.clamp(1, n);
+        let per = n.div_ceil(shards);
+        let ranges: Vec<(usize, usize)> =
+            (0..shards).map(|s| (s * per, ((s + 1) * per).min(n))).filter(|(a, b)| a < b).collect();
+        self.parallel_map(ranges, 1, move |(lo, hi)| f(lo, hi))
+    }
+}
+
+impl Drop for ThreadPool {
+    fn drop(&mut self) {
+        drop(self.tx.take()); // close channel: workers drain and exit
+        for w in self.workers.drain(..) {
+            let _ = w.join();
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::AtomicU64;
+
+    #[test]
+    fn runs_all_jobs() {
+        let pool = ThreadPool::new(4, 8);
+        let counter = Arc::new(AtomicU64::new(0));
+        let done = Arc::new(std::sync::Barrier::new(1));
+        for _ in 0..100 {
+            let c = Arc::clone(&counter);
+            pool.submit(move || {
+                c.fetch_add(1, Ordering::SeqCst);
+            });
+        }
+        drop(done);
+        drop(pool); // join
+        assert_eq!(counter.load(Ordering::SeqCst), 100);
+    }
+
+    #[test]
+    fn parallel_map_preserves_order() {
+        let pool = ThreadPool::new(4, 8);
+        let items: Vec<usize> = (0..1000).collect();
+        let out = pool.parallel_map(items, 7, |x| x * 2);
+        assert_eq!(out, (0..1000).map(|x| x * 2).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn parallel_map_empty() {
+        let pool = ThreadPool::new(2, 4);
+        let out: Vec<usize> = pool.parallel_map(Vec::<usize>::new(), 0, |x| x);
+        assert!(out.is_empty());
+    }
+
+    #[test]
+    fn parallel_ranges_cover_exactly() {
+        let pool = ThreadPool::new(3, 8);
+        let out = pool.parallel_ranges(103, 7, |lo, hi| (lo, hi));
+        let mut total = 0;
+        let mut expect_lo = 0;
+        for (lo, hi) in out {
+            assert_eq!(lo, expect_lo);
+            assert!(hi > lo);
+            total += hi - lo;
+            expect_lo = hi;
+        }
+        assert_eq!(total, 103);
+    }
+
+    #[test]
+    fn parallel_ranges_more_shards_than_items() {
+        let pool = ThreadPool::new(2, 4);
+        let out = pool.parallel_ranges(3, 16, |lo, hi| hi - lo);
+        assert_eq!(out.iter().sum::<usize>(), 3);
+    }
+
+    #[test]
+    #[should_panic(expected = "panic")]
+    fn panic_propagates() {
+        let pool = ThreadPool::new(2, 4);
+        let out = pool.parallel_map(vec![1, 2, 3], 1, |x| {
+            if x == 2 {
+                panic!("boom");
+            }
+            x
+        });
+        let _ = out;
+    }
+
+    #[test]
+    fn heavy_contention_smoke() {
+        let pool = ThreadPool::new(8, 4); // queue smaller than job count
+        let out = pool.parallel_map((0..10_000).collect::<Vec<u64>>(), 13, |x| x % 7);
+        assert_eq!(out.len(), 10_000);
+        assert_eq!(out[6], 6 % 7);
+    }
+}

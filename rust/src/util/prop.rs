@@ -1,0 +1,250 @@
+//! Property-based testing mini-framework (offline `proptest` substitute).
+//!
+//! A property is a closure over a [`Gen`]-drawn input; the runner executes it
+//! across many seeds and, on failure, *shrinks* the input (generator-aware:
+//! generators draw from a recorded byte stream, shrinking truncates/zeroes
+//! the stream — the Hypothesis design, minus the database).
+//!
+//! Usage:
+//! ```ignore
+//! check(100, |g| {
+//!     let xs = g.vec(0..50, |g| g.f32_in(0.0, 10.0));
+//!     let k = g.usize_in(0, xs.len() + 1);
+//!     // ... assert the property, panic on violation
+//! });
+//! ```
+
+use crate::util::rng::Rng;
+
+/// Draw source handed to properties. Wraps an RNG and records all draws so
+/// the shrinker can replay simplified streams.
+pub struct Gen {
+    rng: Rng,
+    /// When `Some`, draws replay from this stream (shrink phase); draws past
+    /// the end return zeros (the "simplest" value by convention).
+    replay: Option<(Vec<u64>, usize)>,
+    /// Record of raw u64 draws for shrink replay.
+    trace: Vec<u64>,
+}
+
+impl Gen {
+    fn fresh(seed: u64) -> Self {
+        Self { rng: Rng::new(seed), replay: None, trace: Vec::new() }
+    }
+
+    fn replaying(stream: Vec<u64>) -> Self {
+        Self { rng: Rng::new(0), replay: Some((stream, 0)), trace: Vec::new() }
+    }
+
+    #[inline]
+    fn draw_u64(&mut self) -> u64 {
+        let v = match &mut self.replay {
+            Some((stream, pos)) => {
+                let v = stream.get(*pos).copied().unwrap_or(0);
+                *pos += 1;
+                v
+            }
+            None => self.rng.next_u64(),
+        };
+        self.trace.push(v);
+        v
+    }
+
+    pub fn usize_in(&mut self, lo: usize, hi: usize) -> usize {
+        assert!(lo < hi, "empty range {lo}..{hi}");
+        lo + (self.draw_u64() % (hi - lo) as u64) as usize
+    }
+
+    pub fn f64_in(&mut self, lo: f64, hi: f64) -> f64 {
+        let u = (self.draw_u64() >> 11) as f64 * (1.0 / (1u64 << 53) as f64);
+        lo + u * (hi - lo)
+    }
+
+    pub fn f32_in(&mut self, lo: f32, hi: f32) -> f32 {
+        self.f64_in(lo as f64, hi as f64) as f32
+    }
+
+    pub fn bool(&mut self) -> bool {
+        self.draw_u64() & 1 == 1
+    }
+
+    pub fn vec<T>(&mut self, len_range: std::ops::Range<usize>, mut f: impl FnMut(&mut Gen) -> T) -> Vec<T> {
+        let n = self.usize_in(len_range.start, len_range.end.max(len_range.start + 1));
+        (0..n).map(|_| f(self)).collect()
+    }
+
+    /// Distinct sorted subset of [0, n) with size in `k_range`.
+    pub fn subset(&mut self, n: usize, k_range: std::ops::Range<usize>) -> Vec<usize> {
+        if n == 0 {
+            return Vec::new();
+        }
+        let k = self.usize_in(k_range.start.min(n), (k_range.end).min(n + 1).max(1));
+        let mut rng = Rng::new(self.draw_u64());
+        rng.sample_indices(n, k.min(n))
+    }
+
+    pub fn choose<'a, T>(&mut self, xs: &'a [T]) -> &'a T {
+        &xs[self.usize_in(0, xs.len())]
+    }
+}
+
+/// Outcome of one property execution.
+fn run_once<F: Fn(&mut Gen)>(
+    g: &mut Gen,
+    prop: &F,
+) -> Result<(), String> {
+    let result = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| prop(&mut *g)));
+    match result {
+        Ok(()) => Ok(()),
+        Err(e) => {
+            let msg = e
+                .downcast_ref::<String>()
+                .cloned()
+                .or_else(|| e.downcast_ref::<&str>().map(|s| s.to_string()))
+                .unwrap_or_else(|| "<panic>".to_string());
+            Err(msg)
+        }
+    }
+}
+
+/// Run `prop` for `cases` random cases. On failure, shrink the draw stream
+/// and panic with the minimal reproduction (seed + shrunken case message).
+pub fn check<F>(cases: usize, prop: F)
+where
+    F: Fn(&mut Gen),
+{
+    check_seeded(0xC0FFEE, cases, prop)
+}
+
+pub fn check_seeded<F>(base_seed: u64, cases: usize, prop: F)
+where
+    F: Fn(&mut Gen),
+{
+    // silence the default panic hook during exploration; restore after
+    let hook = std::panic::take_hook();
+    std::panic::set_hook(Box::new(|_| {}));
+    let mut failure: Option<(u64, Vec<u64>, String)> = None;
+    for case in 0..cases {
+        let seed = base_seed.wrapping_add(case as u64).wrapping_mul(0x9E37_79B9_7F4A_7C15);
+        let mut g = Gen::fresh(seed);
+        if let Err(msg) = run_once(&mut g, &prop) {
+            failure = Some((seed, g.trace.clone(), msg));
+            break;
+        }
+    }
+    let Some((seed, trace, first_msg)) = failure else {
+        std::panic::set_hook(hook);
+        return;
+    };
+
+    // Shrink: try truncations and zeroing of the draw stream.
+    let mut best = trace;
+    let mut best_msg = first_msg;
+    let mut improved = true;
+    let mut budget = 500usize;
+    while improved && budget > 0 {
+        improved = false;
+        // 1) truncate tail (shorter stream = simpler: out-of-stream draws are 0)
+        let mut candidates: Vec<Vec<u64>> = Vec::new();
+        for cut in [best.len() / 2, best.len().saturating_sub(1)] {
+            if cut < best.len() {
+                candidates.push(best[..cut].to_vec());
+            }
+        }
+        // 2) zero each nonzero position
+        for i in 0..best.len() {
+            if best[i] != 0 {
+                let mut c = best.clone();
+                c[i] = 0;
+                candidates.push(c);
+                let mut h = best.clone();
+                h[i] /= 2;
+                candidates.push(h);
+            }
+            if candidates.len() > 64 {
+                break;
+            }
+        }
+        for cand in candidates {
+            if budget == 0 {
+                break;
+            }
+            budget -= 1;
+            let mut g = Gen::replaying(cand.clone());
+            if let Err(msg) = run_once(&mut g, &prop) {
+                let cand_mass: u128 = cand.iter().map(|&x| x as u128).sum();
+                let best_mass: u128 = best.iter().map(|&x| x as u128).sum();
+                if cand.len() < best.len() || cand_mass < best_mass {
+                    best = cand;
+                    best_msg = msg;
+                    improved = true;
+                    break;
+                }
+            }
+        }
+    }
+    std::panic::set_hook(hook);
+    panic!(
+        "property failed (seed={seed:#x}, shrunk to {} draws): {best_msg}",
+        best.len()
+    );
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passing_property_passes() {
+        check(200, |g| {
+            let xs = g.vec(0..20, |g| g.f32_in(0.0, 1.0));
+            let s: f32 = xs.iter().sum();
+            assert!(s >= 0.0);
+        });
+    }
+
+    #[test]
+    fn failing_property_fails_with_shrink() {
+        let r = std::panic::catch_unwind(|| {
+            check(200, |g| {
+                let x = g.usize_in(0, 1000);
+                assert!(x < 500, "x={x}");
+            });
+        });
+        let msg = match r {
+            Err(e) => e.downcast_ref::<String>().cloned().unwrap_or_default(),
+            Ok(()) => panic!("property should have failed"),
+        };
+        assert!(msg.contains("property failed"), "{msg}");
+    }
+
+    #[test]
+    fn subset_well_formed() {
+        check(100, |g| {
+            let n = g.usize_in(1, 50);
+            let s = g.subset(n, 0..n + 1);
+            assert!(s.windows(2).all(|w| w[0] < w[1]));
+            assert!(s.iter().all(|&i| i < n));
+        });
+    }
+
+    #[test]
+    fn deterministic_given_seed() {
+        let mut a = Gen::fresh(9);
+        let mut b = Gen::fresh(9);
+        for _ in 0..32 {
+            assert_eq!(a.draw_u64(), b.draw_u64());
+        }
+    }
+
+    #[test]
+    fn replay_reproduces() {
+        let mut g = Gen::fresh(4);
+        let x1 = g.usize_in(0, 100);
+        let y1 = g.f64_in(-1.0, 1.0);
+        let trace = g.trace.clone();
+        let mut r = Gen::replaying(trace);
+        assert_eq!(r.usize_in(0, 100), x1);
+        assert_eq!(r.f64_in(-1.0, 1.0), y1);
+    }
+}

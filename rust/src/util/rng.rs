@@ -1,0 +1,307 @@
+//! Deterministic pseudo-random generators (the offline substitute for `rand`).
+//!
+//! Everything in this crate that samples — SS probe selection, synthetic
+//! dataset generation, property tests — goes through [`Rng`], a
+//! xoshiro256** generator seeded via SplitMix64. Determinism given a seed is
+//! a hard requirement: the coordinator's parallel SS must produce bit-equal
+//! prunings to the single-threaded reference, and experiments must be
+//! re-runnable.
+
+/// SplitMix64: used to expand a 64-bit seed into xoshiro state and as a
+/// cheap standalone generator for stream splitting.
+#[derive(Clone, Debug)]
+pub struct SplitMix64 {
+    state: u64,
+}
+
+impl SplitMix64 {
+    pub fn new(seed: u64) -> Self {
+        Self { state: seed }
+    }
+
+    #[inline]
+    pub fn next_u64(&mut self) -> u64 {
+        self.state = self.state.wrapping_add(0x9E37_79B9_7F4A_7C15);
+        let mut z = self.state;
+        z = (z ^ (z >> 30)).wrapping_mul(0xBF58_476D_1CE4_E5B9);
+        z = (z ^ (z >> 27)).wrapping_mul(0x94D0_49BB_1331_11EB);
+        z ^ (z >> 31)
+    }
+}
+
+/// xoshiro256** — fast, high-quality, 256-bit state.
+#[derive(Clone, Debug)]
+pub struct Rng {
+    s: [u64; 4],
+}
+
+impl Rng {
+    /// Seed via SplitMix64 per the xoshiro authors' recommendation.
+    pub fn new(seed: u64) -> Self {
+        let mut sm = SplitMix64::new(seed);
+        Self { s: [sm.next_u64(), sm.next_u64(), sm.next_u64(), sm.next_u64()] }
+    }
+
+    /// Derive an independent child stream (for per-worker/per-day RNGs).
+    pub fn split(&mut self, tag: u64) -> Rng {
+        Rng::new(self.next_u64() ^ tag.wrapping_mul(0x9E37_79B9_7F4A_7C15))
+    }
+
+    #[inline]
+    pub fn next_u64(&mut self) -> u64 {
+        let r = self.s[1].wrapping_mul(5).rotate_left(7).wrapping_mul(9);
+        let t = self.s[1] << 17;
+        self.s[2] ^= self.s[0];
+        self.s[3] ^= self.s[1];
+        self.s[1] ^= self.s[2];
+        self.s[0] ^= self.s[3];
+        self.s[2] ^= t;
+        self.s[3] = self.s[3].rotate_left(45);
+        r
+    }
+
+    /// Uniform in `[0, 1)` with 53-bit precision.
+    #[inline]
+    pub fn f64(&mut self) -> f64 {
+        (self.next_u64() >> 11) as f64 * (1.0 / (1u64 << 53) as f64)
+    }
+
+    #[inline]
+    pub fn f32(&mut self) -> f32 {
+        self.f64() as f32
+    }
+
+    /// Uniform integer in `[0, n)` (Lemire's rejection-free-ish method).
+    #[inline]
+    pub fn below(&mut self, n: usize) -> usize {
+        debug_assert!(n > 0);
+        // 128-bit multiply keeps the bias < 2^-64 — fine for our purposes.
+        ((self.next_u64() as u128 * n as u128) >> 64) as usize
+    }
+
+    /// Uniform integer in `[lo, hi)`.
+    pub fn range(&mut self, lo: usize, hi: usize) -> usize {
+        lo + self.below(hi - lo)
+    }
+
+    /// Uniform f64 in `[lo, hi)`.
+    pub fn uniform(&mut self, lo: f64, hi: f64) -> f64 {
+        lo + self.f64() * (hi - lo)
+    }
+
+    pub fn bool(&mut self, p: f64) -> bool {
+        self.f64() < p
+    }
+
+    /// Standard normal via Box–Muller (the slower branchless-unfriendly of
+    /// the pair is discarded; dataset generation is not hot).
+    pub fn gaussian(&mut self) -> f64 {
+        let u1 = self.f64().max(1e-300);
+        let u2 = self.f64();
+        (-2.0 * u1.ln()).sqrt() * (std::f64::consts::TAU * u2).cos()
+    }
+
+    /// In-place Fisher–Yates shuffle.
+    pub fn shuffle<T>(&mut self, xs: &mut [T]) {
+        for i in (1..xs.len()).rev() {
+            let j = self.below(i + 1);
+            xs.swap(i, j);
+        }
+    }
+
+    /// Sample `k` distinct indices from `[0, n)` without replacement.
+    ///
+    /// Uses Floyd's algorithm: O(k) expected time, no O(n) scratch, and the
+    /// result is sorted for cache-friendly downstream gathers.
+    pub fn sample_indices(&mut self, n: usize, k: usize) -> Vec<usize> {
+        assert!(k <= n, "cannot sample {k} from {n}");
+        let mut chosen = std::collections::HashSet::with_capacity(k * 2);
+        let mut out = Vec::with_capacity(k);
+        for j in (n - k)..n {
+            let t = self.below(j + 1);
+            let pick = if chosen.contains(&t) { j } else { t };
+            chosen.insert(pick);
+            out.push(pick);
+        }
+        out.sort_unstable();
+        out
+    }
+
+    /// Weighted sampling without replacement via exponential races
+    /// (Efraimidis–Spirakis): key_i = w_i / Exp(1); take the k largest keys.
+    /// Weights must be non-negative; zero-weight items are only chosen after
+    /// all positive-weight items are exhausted.
+    pub fn weighted_indices(&mut self, weights: &[f64], k: usize) -> Vec<usize> {
+        assert!(k <= weights.len());
+        let mut keyed: Vec<(f64, usize)> = weights
+            .iter()
+            .enumerate()
+            .map(|(i, &w)| {
+                let e = -self.f64().max(1e-300).ln(); // Exp(1)
+                let key = if w > 0.0 { w / e } else { -e }; // zero-weight sinks
+                (key, i)
+            })
+            .collect();
+        keyed.sort_unstable_by(|a, b| b.0.partial_cmp(&a.0).unwrap());
+        let mut out: Vec<usize> = keyed[..k].iter().map(|&(_, i)| i).collect();
+        out.sort_unstable();
+        out
+    }
+
+    /// Zipf-distributed rank in `[0, n)` with exponent `s` (vocabulary
+    /// sampling for the synthetic corpus). Inverse-CDF on a precomputed
+    /// table is the caller's job when hot; this is the direct method.
+    pub fn zipf(&mut self, cdf: &[f64]) -> usize {
+        let u = self.f64();
+        match cdf.binary_search_by(|p| p.partial_cmp(&u).unwrap()) {
+            Ok(i) => i,
+            Err(i) => i.min(cdf.len() - 1),
+        }
+    }
+}
+
+/// Precompute a Zipf CDF table for [`Rng::zipf`].
+pub fn zipf_cdf(n: usize, s: f64) -> Vec<f64> {
+    let mut cdf = Vec::with_capacity(n);
+    let mut acc = 0.0;
+    for i in 1..=n {
+        acc += 1.0 / (i as f64).powf(s);
+        cdf.push(acc);
+    }
+    let z = acc;
+    for p in &mut cdf {
+        *p /= z;
+    }
+    cdf
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn deterministic_given_seed() {
+        let mut a = Rng::new(42);
+        let mut b = Rng::new(42);
+        for _ in 0..100 {
+            assert_eq!(a.next_u64(), b.next_u64());
+        }
+    }
+
+    #[test]
+    fn different_seeds_diverge() {
+        let (mut a, mut b) = (Rng::new(1), Rng::new(2));
+        assert_ne!(
+            (0..8).map(|_| a.next_u64()).collect::<Vec<_>>(),
+            (0..8).map(|_| b.next_u64()).collect::<Vec<_>>()
+        );
+    }
+
+    #[test]
+    fn f64_in_unit_interval() {
+        let mut r = Rng::new(7);
+        for _ in 0..10_000 {
+            let x = r.f64();
+            assert!((0.0..1.0).contains(&x));
+        }
+    }
+
+    #[test]
+    fn below_bounds_and_coverage() {
+        let mut r = Rng::new(3);
+        let mut seen = [false; 10];
+        for _ in 0..10_000 {
+            let x = r.below(10);
+            assert!(x < 10);
+            seen[x] = true;
+        }
+        assert!(seen.iter().all(|&s| s), "all residues should appear");
+    }
+
+    #[test]
+    fn sample_indices_distinct_sorted() {
+        let mut r = Rng::new(11);
+        for _ in 0..200 {
+            let k = r.range(0, 50);
+            let v = r.sample_indices(100, k);
+            assert_eq!(v.len(), k);
+            assert!(v.windows(2).all(|w| w[0] < w[1]), "sorted + distinct");
+            assert!(v.iter().all(|&i| i < 100));
+        }
+    }
+
+    #[test]
+    fn sample_indices_full_range() {
+        let mut r = Rng::new(5);
+        let v = r.sample_indices(10, 10);
+        assert_eq!(v, (0..10).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn weighted_prefers_heavy() {
+        let mut r = Rng::new(13);
+        let mut w = vec![0.01; 100];
+        w[7] = 1000.0;
+        let mut hits = 0;
+        for _ in 0..200 {
+            if r.weighted_indices(&w, 5).contains(&7) {
+                hits += 1;
+            }
+        }
+        assert!(hits > 190, "heavy item chosen in {hits}/200 draws");
+    }
+
+    #[test]
+    fn weighted_zero_weights_ok() {
+        let mut r = Rng::new(17);
+        let w = vec![0.0; 8];
+        let v = r.weighted_indices(&w, 3);
+        assert_eq!(v.len(), 3);
+    }
+
+    #[test]
+    fn shuffle_is_permutation() {
+        let mut r = Rng::new(23);
+        let mut xs: Vec<usize> = (0..50).collect();
+        r.shuffle(&mut xs);
+        let mut sorted = xs.clone();
+        sorted.sort_unstable();
+        assert_eq!(sorted, (0..50).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn gaussian_moments() {
+        let mut r = Rng::new(29);
+        let n = 50_000;
+        let (mut sum, mut sq) = (0.0, 0.0);
+        for _ in 0..n {
+            let x = r.gaussian();
+            sum += x;
+            sq += x * x;
+        }
+        let mean = sum / n as f64;
+        let var = sq / n as f64 - mean * mean;
+        assert!(mean.abs() < 0.02, "mean={mean}");
+        assert!((var - 1.0).abs() < 0.05, "var={var}");
+    }
+
+    #[test]
+    fn zipf_rank_ordering() {
+        let cdf = zipf_cdf(100, 1.1);
+        let mut r = Rng::new(31);
+        let mut counts = [0usize; 100];
+        for _ in 0..20_000 {
+            counts[r.zipf(&cdf)] += 1;
+        }
+        assert!(counts[0] > counts[10]);
+        assert!(counts[10] > counts[90]);
+    }
+
+    #[test]
+    fn split_streams_independent() {
+        let mut root = Rng::new(1);
+        let mut a = root.split(0);
+        let mut b = root.split(1);
+        assert_ne!(a.next_u64(), b.next_u64());
+    }
+}

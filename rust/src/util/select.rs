@@ -1,0 +1,296 @@
+//! Selection primitives on `f32` keys: quickselect, top-k, lazy max-heap.
+//!
+//! SS's per-round prune (Algorithm 1 line 11: "remove the `(1-1/√c)|V|`
+//! items with smallest `w_{Uv}`") is a selection problem — sorting the whole
+//! weight vector every round would add an `O(n log n)` term the paper
+//! explicitly avoids. `partition_smallest` is the O(n) hot-path version;
+//! [`LazyMaxHeap`] carries the lazy-greedy algorithm [Minoux '78].
+
+use std::cmp::Ordering;
+
+/// Indices of the `k` smallest keys (unordered), via iterative quickselect
+/// on an index permutation. Ties broken arbitrarily but deterministically
+/// (pivot choice is deterministic). O(n) expected.
+pub fn partition_smallest(keys: &[f32], k: usize) -> Vec<usize> {
+    let n = keys.len();
+    assert!(k <= n, "k={k} > n={n}");
+    if k == 0 {
+        return Vec::new();
+    }
+    if k == n {
+        return (0..n).collect();
+    }
+    let mut idx: Vec<usize> = (0..n).collect();
+    let (mut lo, mut hi) = (0usize, n);
+    let mut want = k;
+    // Invariant: idx[..lo] are all among the k smallest; we still need
+    // `want - 0` more from idx[lo..hi]... maintained via want relative to lo.
+    while lo < hi {
+        // median-of-three pivot for adversarial robustness
+        let mid = lo + (hi - lo) / 2;
+        let (a, b, c) = (keys[idx[lo]], keys[idx[mid]], keys[idx[hi - 1]]);
+        let pivot = median3(a, b, c);
+        // 3-way partition by key vs pivot
+        let (mut i, mut j, mut p) = (lo, lo, hi);
+        // [lo,i): < pivot, [i,j): == pivot, [j,p): unseen, [p,hi): > pivot
+        while j < p {
+            let kj = keys[idx[j]];
+            match kj.partial_cmp(&pivot).unwrap_or(Ordering::Equal) {
+                Ordering::Less => {
+                    idx.swap(i, j);
+                    i += 1;
+                    j += 1;
+                }
+                Ordering::Equal => j += 1,
+                Ordering::Greater => {
+                    p -= 1;
+                    idx.swap(j, p);
+                }
+            }
+        }
+        let less = i - lo;
+        let eq = j - i;
+        if want < less {
+            hi = i;
+        } else if want <= less + eq {
+            // the boundary falls inside the equal run: take what we need
+            let _boundary = i + (want - less);
+            break;
+        } else {
+            want -= less + eq;
+            lo = j;
+        }
+        if want == 0 {
+            break;
+        }
+        // `want` is relative to current lo after the narrowing above
+        if hi <= lo {
+            break;
+        }
+    }
+    idx.truncate(k);
+    idx
+}
+
+fn median3(a: f32, b: f32, c: f32) -> f32 {
+    let (lo, hi) = if a < b { (a, b) } else { (b, a) };
+    if c < lo {
+        lo
+    } else if c > hi {
+        hi
+    } else {
+        c
+    }
+}
+
+/// Indices of the `k` largest keys, descending by key. O(n log k).
+pub fn top_k_desc(keys: &[f32], k: usize) -> Vec<usize> {
+    let k = k.min(keys.len());
+    if k == 0 {
+        return Vec::new();
+    }
+    // min-heap of (key, idx) capped at k
+    let mut heap: Vec<(f32, usize)> = Vec::with_capacity(k + 1);
+    for (i, &key) in keys.iter().enumerate() {
+        if heap.len() < k {
+            heap.push((key, i));
+            if heap.len() == k {
+                heap.sort_unstable_by(|a, b| a.0.partial_cmp(&b.0).unwrap());
+            }
+        } else if key > heap[0].0 {
+            // replace min; keep sorted-ascending (k is small in our uses)
+            heap[0] = (key, i);
+            let mut j = 0;
+            while j + 1 < heap.len() && heap[j].0 > heap[j + 1].0 {
+                heap.swap(j, j + 1);
+                j += 1;
+            }
+        }
+    }
+    heap.sort_unstable_by(|a, b| b.0.partial_cmp(&a.0).unwrap().then(a.1.cmp(&b.1)));
+    heap.into_iter().map(|(_, i)| i).collect()
+}
+
+/// The k-th smallest key value (0-indexed: `kth_smallest(keys, 0)` = min).
+pub fn kth_smallest(keys: &[f32], k: usize) -> f32 {
+    let idx = partition_smallest(keys, k + 1);
+    idx.iter().map(|&i| keys[i]).fold(f32::NEG_INFINITY, f32::max)
+}
+
+/// Max-heap over `(priority, id)` with *lazy* stale-entry invalidation —
+/// the data structure behind lazy greedy [Minoux '78] and the batcher's
+/// deadline queue. `push` never removes old entries; `pop_if_fresh`
+/// validates against a user version map.
+pub struct LazyMaxHeap {
+    heap: std::collections::BinaryHeap<HeapEntry>,
+}
+
+#[derive(PartialEq)]
+struct HeapEntry {
+    priority: f32,
+    id: usize,
+    version: u64,
+}
+
+impl Eq for HeapEntry {}
+
+impl Ord for HeapEntry {
+    fn cmp(&self, other: &Self) -> Ordering {
+        self.priority
+            .partial_cmp(&other.priority)
+            .unwrap_or(Ordering::Equal)
+            .then(other.id.cmp(&self.id)) // deterministic tie-break: lower id wins
+    }
+}
+
+impl PartialOrd for HeapEntry {
+    fn partial_cmp(&self, other: &Self) -> Option<Ordering> {
+        Some(self.cmp(other))
+    }
+}
+
+impl Default for LazyMaxHeap {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl LazyMaxHeap {
+    pub fn new() -> Self {
+        Self { heap: std::collections::BinaryHeap::new() }
+    }
+
+    pub fn push(&mut self, id: usize, priority: f32, version: u64) {
+        self.heap.push(HeapEntry { priority, id, version });
+    }
+
+    /// Pop the max entry whose version matches `current[id]`; stale entries
+    /// are discarded on the way. Returns `(id, priority)`.
+    pub fn pop_fresh(&mut self, current: &[u64]) -> Option<(usize, f32)> {
+        while let Some(e) = self.heap.pop() {
+            if current[e.id] == e.version {
+                return Some((e.id, e.priority));
+            }
+        }
+        None
+    }
+
+    /// Peek at the max entry (possibly stale).
+    pub fn peek(&self) -> Option<(usize, f32)> {
+        self.heap.peek().map(|e| (e.id, e.priority))
+    }
+
+    pub fn len(&self) -> usize {
+        self.heap.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.heap.is_empty()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    fn check_partition(keys: &[f32], k: usize) {
+        let got = partition_smallest(keys, k);
+        assert_eq!(got.len(), k);
+        let mut sorted: Vec<f32> = keys.to_vec();
+        sorted.sort_unstable_by(|a, b| a.partial_cmp(b).unwrap());
+        let thresh = if k == 0 { f32::NEG_INFINITY } else { sorted[k - 1] };
+        // every selected key <= threshold, and the multiset matches
+        let mut got_keys: Vec<f32> = got.iter().map(|&i| keys[i]).collect();
+        got_keys.sort_unstable_by(|a, b| a.partial_cmp(b).unwrap());
+        assert_eq!(&got_keys[..], &sorted[..k], "k={k}");
+        assert!(got_keys.iter().all(|&x| x <= thresh));
+        // indices distinct
+        let mut g = got.clone();
+        g.sort_unstable();
+        g.dedup();
+        assert_eq!(g.len(), k);
+    }
+
+    #[test]
+    fn partition_matches_sort_random() {
+        let mut rng = Rng::new(1);
+        for trial in 0..100 {
+            let n = rng.range(1, 200);
+            let keys: Vec<f32> = (0..n).map(|_| rng.f32() * 10.0 - 5.0).collect();
+            let k = rng.range(0, n + 1);
+            check_partition(&keys, k);
+            let _ = trial;
+        }
+    }
+
+    #[test]
+    fn partition_with_ties() {
+        let keys = vec![1.0f32, 1.0, 1.0, 1.0, 2.0, 0.5];
+        for k in 0..=6 {
+            check_partition(&keys, k);
+        }
+    }
+
+    #[test]
+    fn partition_all_equal() {
+        let keys = vec![3.3f32; 17];
+        for k in [0, 1, 8, 17] {
+            check_partition(&keys, k);
+        }
+    }
+
+    #[test]
+    fn kth_smallest_matches_sort() {
+        let mut rng = Rng::new(2);
+        let keys: Vec<f32> = (0..101).map(|_| rng.f32()).collect();
+        let mut sorted = keys.clone();
+        sorted.sort_unstable_by(|a, b| a.partial_cmp(b).unwrap());
+        for k in [0, 1, 50, 100] {
+            assert_eq!(kth_smallest(&keys, k), sorted[k]);
+        }
+    }
+
+    #[test]
+    fn top_k_desc_ordered() {
+        let keys = vec![0.1f32, 5.0, 3.0, 3.0, -1.0, 7.5];
+        assert_eq!(top_k_desc(&keys, 3), vec![5, 1, 2]);
+        assert_eq!(top_k_desc(&keys, 0), Vec::<usize>::new());
+        assert_eq!(top_k_desc(&keys, 100).len(), 6);
+    }
+
+    #[test]
+    fn lazy_heap_basic() {
+        let mut h = LazyMaxHeap::new();
+        let versions = vec![0u64, 0, 0];
+        h.push(0, 1.0, 0);
+        h.push(1, 3.0, 0);
+        h.push(2, 2.0, 0);
+        assert_eq!(h.pop_fresh(&versions), Some((1, 3.0)));
+        assert_eq!(h.pop_fresh(&versions), Some((2, 2.0)));
+        assert_eq!(h.pop_fresh(&versions), Some((0, 1.0)));
+        assert_eq!(h.pop_fresh(&versions), None);
+    }
+
+    #[test]
+    fn lazy_heap_discards_stale() {
+        let mut h = LazyMaxHeap::new();
+        let mut versions = vec![0u64, 0];
+        h.push(0, 5.0, 0); // will become stale
+        versions[0] = 1;
+        h.push(0, 2.0, 1);
+        h.push(1, 3.0, 0);
+        assert_eq!(h.pop_fresh(&versions), Some((1, 3.0)));
+        assert_eq!(h.pop_fresh(&versions), Some((0, 2.0)));
+    }
+
+    #[test]
+    fn lazy_heap_deterministic_ties() {
+        let mut h = LazyMaxHeap::new();
+        let versions = vec![0u64; 4];
+        for id in [3, 1, 2, 0] {
+            h.push(id, 1.0, 0);
+        }
+        assert_eq!(h.pop_fresh(&versions).unwrap().0, 0, "lowest id wins ties");
+    }
+}

@@ -1,0 +1,244 @@
+//! Dense/sparse feature-vector math shared by the submodular evaluators,
+//! the CPU fallback kernels, and the dataset substrates.
+//!
+//! Item features live in a [`FeatureMatrix`] — row-major dense `f32` with a
+//! fixed hashed dimension `d` (matching the AOT artifact geometry). Sparse
+//! inputs (TF-IDF bags) are hashed into it at ingest.
+
+/// Row-major dense matrix of item features, shape `(n, d)`.
+#[derive(Clone, Debug, PartialEq)]
+pub struct FeatureMatrix {
+    pub d: usize,
+    data: Vec<f32>,
+}
+
+impl FeatureMatrix {
+    pub fn zeros(n: usize, d: usize) -> Self {
+        Self { d, data: vec![0.0; n * d] }
+    }
+
+    pub fn from_rows(rows: Vec<Vec<f32>>) -> Self {
+        assert!(!rows.is_empty());
+        let d = rows[0].len();
+        let mut data = Vec::with_capacity(rows.len() * d);
+        for r in &rows {
+            assert_eq!(r.len(), d, "ragged rows");
+            data.extend_from_slice(r);
+        }
+        Self { d, data }
+    }
+
+    pub fn n(&self) -> usize {
+        if self.d == 0 {
+            0
+        } else {
+            self.data.len() / self.d
+        }
+    }
+
+    #[inline]
+    pub fn row(&self, i: usize) -> &[f32] {
+        &self.data[i * self.d..(i + 1) * self.d]
+    }
+
+    #[inline]
+    pub fn row_mut(&mut self, i: usize) -> &mut [f32] {
+        &mut self.data[i * self.d..(i + 1) * self.d]
+    }
+
+    pub fn data(&self) -> &[f32] {
+        &self.data
+    }
+
+    /// Gather rows by index into a new matrix.
+    pub fn gather(&self, idx: &[usize]) -> FeatureMatrix {
+        let mut out = FeatureMatrix::zeros(idx.len(), self.d);
+        for (o, &i) in idx.iter().enumerate() {
+            out.row_mut(o).copy_from_slice(self.row(i));
+        }
+        out
+    }
+
+    /// Column sums = total feature mass c(V).
+    pub fn col_sums(&self) -> Vec<f32> {
+        let mut total = vec![0.0f32; self.d];
+        for i in 0..self.n() {
+            add_into(&mut total, self.row(i));
+        }
+        total
+    }
+
+    /// Scale all entries (e.g. normalizing synthetic features).
+    pub fn scale(&mut self, s: f32) {
+        for x in &mut self.data {
+            *x *= s;
+        }
+    }
+}
+
+/// `acc += x` elementwise.
+#[inline]
+pub fn add_into(acc: &mut [f32], x: &[f32]) {
+    debug_assert_eq!(acc.len(), x.len());
+    for (a, &b) in acc.iter_mut().zip(x) {
+        *a += b;
+    }
+}
+
+/// `acc -= x` elementwise, clamped at 0 (float-safe mass removal).
+#[inline]
+pub fn sub_clamp_into(acc: &mut [f32], x: &[f32]) {
+    debug_assert_eq!(acc.len(), x.len());
+    for (a, &b) in acc.iter_mut().zip(x) {
+        *a = (*a - b).max(0.0);
+    }
+}
+
+#[inline]
+pub fn dot(a: &[f32], b: &[f32]) -> f32 {
+    debug_assert_eq!(a.len(), b.len());
+    a.iter().zip(b).map(|(x, y)| x * y).sum()
+}
+
+#[inline]
+pub fn norm2(a: &[f32]) -> f32 {
+    dot(a, a).sqrt()
+}
+
+/// Cosine similarity, 0 if either vector is zero.
+pub fn cosine(a: &[f32], b: &[f32]) -> f32 {
+    let (na, nb) = (norm2(a), norm2(b));
+    if na == 0.0 || nb == 0.0 {
+        0.0
+    } else {
+        (dot(a, b) / (na * nb)).clamp(-1.0, 1.0)
+    }
+}
+
+/// Sparse vector in coordinate form (sorted unique indices).
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct SparseVec {
+    pub idx: Vec<u32>,
+    pub val: Vec<f32>,
+}
+
+impl SparseVec {
+    pub fn from_pairs(mut pairs: Vec<(u32, f32)>) -> Self {
+        pairs.sort_unstable_by_key(|&(i, _)| i);
+        let mut idx = Vec::with_capacity(pairs.len());
+        let mut val: Vec<f32> = Vec::with_capacity(pairs.len());
+        for (i, v) in pairs {
+            if let Some(&last) = idx.last() {
+                if last == i {
+                    *val.last_mut().unwrap() += v;
+                    continue;
+                }
+            }
+            idx.push(i);
+            val.push(v);
+        }
+        Self { idx, val }
+    }
+
+    pub fn nnz(&self) -> usize {
+        self.idx.len()
+    }
+
+    /// Feature-hash into `d` dense dims with a sign hash (unsigned variant:
+    /// the submodular objective needs non-negative mass, so we take |.| of
+    /// the signed-hash accumulation per the "hashing trick, non-negative"
+    /// convention).
+    pub fn hash_into(&self, d: usize, out: &mut [f32]) {
+        debug_assert_eq!(out.len(), d);
+        for (&i, &v) in self.idx.iter().zip(&self.val) {
+            let h = hash_u32(i);
+            out[(h as usize) % d] += v;
+        }
+    }
+}
+
+/// 32-bit finalizer (murmur3 fmix32) — stable feature hashing.
+#[inline]
+pub fn hash_u32(mut x: u32) -> u32 {
+    x ^= x >> 16;
+    x = x.wrapping_mul(0x85EB_CA6B);
+    x ^= x >> 13;
+    x = x.wrapping_mul(0xC2B2_AE35);
+    x ^= x >> 16;
+    x
+}
+
+/// FNV-1a for strings (token ids in the text pipeline).
+pub fn hash_str(s: &str) -> u64 {
+    let mut h: u64 = 0xcbf2_9ce4_8422_2325;
+    for b in s.as_bytes() {
+        h ^= *b as u64;
+        h = h.wrapping_mul(0x1000_0000_01b3);
+    }
+    h
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn matrix_shape_and_rows() {
+        let m = FeatureMatrix::from_rows(vec![vec![1.0, 2.0], vec![3.0, 4.0], vec![5.0, 6.0]]);
+        assert_eq!((m.n(), m.d), (3, 2));
+        assert_eq!(m.row(1), &[3.0, 4.0]);
+        assert_eq!(m.col_sums(), vec![9.0, 12.0]);
+    }
+
+    #[test]
+    fn gather_rows() {
+        let m = FeatureMatrix::from_rows(vec![vec![1.0], vec![2.0], vec![3.0]]);
+        let g = m.gather(&[2, 0]);
+        assert_eq!(g.row(0), &[3.0]);
+        assert_eq!(g.row(1), &[1.0]);
+    }
+
+    #[test]
+    fn add_sub_clamp() {
+        let mut acc = vec![1.0f32, 2.0];
+        add_into(&mut acc, &[0.5, 0.5]);
+        assert_eq!(acc, vec![1.5, 2.5]);
+        sub_clamp_into(&mut acc, &[2.0, 1.0]);
+        assert_eq!(acc, vec![0.0, 1.5]);
+    }
+
+    #[test]
+    fn cosine_props() {
+        let a = vec![1.0f32, 0.0];
+        let b = vec![0.0f32, 2.0];
+        assert_eq!(cosine(&a, &b), 0.0);
+        assert!((cosine(&a, &a) - 1.0).abs() < 1e-6);
+        assert_eq!(cosine(&a, &[0.0, 0.0]), 0.0);
+    }
+
+    #[test]
+    fn sparse_from_pairs_merges_dups() {
+        let s = SparseVec::from_pairs(vec![(5, 1.0), (2, 2.0), (5, 3.0)]);
+        assert_eq!(s.idx, vec![2, 5]);
+        assert_eq!(s.val, vec![2.0, 4.0]);
+    }
+
+    #[test]
+    fn hashing_deterministic_and_spread() {
+        let s = SparseVec::from_pairs((0..100).map(|i| (i, 1.0)).collect());
+        let mut a = vec![0.0f32; 16];
+        let mut b = vec![0.0f32; 16];
+        s.hash_into(16, &mut a);
+        s.hash_into(16, &mut b);
+        assert_eq!(a, b);
+        assert_eq!(a.iter().sum::<f32>(), 100.0, "mass preserved");
+        let occupied = a.iter().filter(|&&x| x > 0.0).count();
+        assert!(occupied >= 12, "hash should spread: {occupied}/16");
+    }
+
+    #[test]
+    fn str_hash_stable() {
+        assert_eq!(hash_str("summarize"), hash_str("summarize"));
+        assert_ne!(hash_str("a"), hash_str("b"));
+    }
+}

@@ -1,0 +1,120 @@
+//! Integration: full pipelines over the synthetic substrates — news days,
+//! DUC topics, videos — exercising data generation → features → algorithms
+//! → metrics end to end (CPU path; the PJRT path is covered by
+//! pjrt_parity.rs and service_demo).
+
+use submodular_ss::algorithms::{SieveParams, SsParams};
+use submodular_ss::data::video::VideoParams;
+use submodular_ss::data::{CorpusParams, NewsGenerator};
+use submodular_ss::eval::news::run_days;
+use submodular_ss::eval::runners::{rouge_of, run_trio, TrioParams};
+use submodular_ss::eval::video_eval::run_video;
+use submodular_ss::submodular::FeatureBased;
+
+#[test]
+fn news_pipeline_shapes_match_paper() {
+    let records = run_days(6, 300, 1200, 42);
+    // (a) SS rel utility high on every day
+    for r in &records {
+        assert!(
+            r.results[2].rel_utility > 0.9,
+            "day n={}: ss rel {}",
+            r.n,
+            r.results[2].rel_utility
+        );
+        // (b) sieve below lazy greedy
+        assert!(r.results[1].value <= r.results[0].value + 1e-9);
+        // (c) SS working set much smaller than n
+        assert!(r.vprime * 2 < r.n, "|V'|={} vs n={}", r.vprime, r.n);
+    }
+    // (d) median sieve rel-utility below median SS rel-utility (Fig 3 shape)
+    let mut sieve: Vec<f64> = records.iter().map(|r| r.results[1].rel_utility).collect();
+    let mut ss: Vec<f64> = records.iter().map(|r| r.results[2].rel_utility).collect();
+    sieve.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    ss.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    assert!(
+        ss[ss.len() / 2] > sieve[sieve.len() / 2],
+        "median SS rel {} must exceed sieve {}",
+        ss[ss.len() / 2],
+        sieve[sieve.len() / 2]
+    );
+}
+
+#[test]
+fn rouge_ordering_ss_vs_sieve_on_average() {
+    // Fig 3's ROUGE claim, averaged over days (single days are noisy)
+    let g = NewsGenerator::new(CorpusParams { vocab_size: 1500, ..Default::default() }, 7);
+    let mut ss_sum = 0.0;
+    let mut sieve_sum = 0.0;
+    let days = 5;
+    for i in 0..days {
+        let day = g.day(600, 0, 100 + i);
+        let f = FeatureBased::sqrt(day.feats.clone());
+        let rs = run_trio(&f, &TrioParams::paper(day.k, i));
+        sieve_sum += rouge_of(&rs[1].set, &day.sentences, &day.reference).recall;
+        ss_sum += rouge_of(&rs[2].set, &day.sentences, &day.reference).recall;
+    }
+    assert!(
+        ss_sum >= sieve_sum * 0.95,
+        "avg SS ROUGE {} should be ≳ sieve {}",
+        ss_sum / days as f64,
+        sieve_sum / days as f64
+    );
+}
+
+#[test]
+fn video_pipeline_table2_shape() {
+    // Table 2's shape: SS time < greedy time at video budgets (k = 15% of
+    // frames), with |V'| a strict reduction. The paper's greedy baseline
+    // behaves like an O(n·k)-evaluation (non-incremental) greedy, which our
+    // naive greedy matches; our *lazy* greedy with an incremental oracle is
+    // a stronger baseline than the paper's (see EXPERIMENTS.md §Deviations).
+    let n = 1600;
+    let rec = run_video("clip", n, &VideoParams { d: 128, ..Default::default() }, 5);
+    let ss = &rec.results[2];
+    assert!(ss.working_set < n);
+    assert!(ss.rel_utility > 0.9, "ss rel {}", ss.rel_utility);
+    let f = FeatureBased::sqrt(rec.video.feats.clone());
+    let all: Vec<usize> = (0..n).collect();
+    let k = (n as f64 * 0.15) as usize;
+    let naive = submodular_ss::algorithms::greedy(&f, &all, k);
+    assert!(
+        ss.time_s < naive.wall_s,
+        "at k=15%·n SS ({:.3}s) must beat O(n·k) greedy ({:.3}s) — Table 2's core claim",
+        ss.time_s,
+        naive.wall_s
+    );
+}
+
+#[test]
+fn sieve_memory_budget_respected() {
+    // the paper's sieve runs hold 50k (news) / 10k (video) elements
+    let g = NewsGenerator::new(CorpusParams::default(), 11);
+    let day = g.day(400, 0, 11);
+    let f = FeatureBased::sqrt(day.feats.clone());
+    let all: Vec<usize> = (0..400).collect();
+    let params = SieveParams::paper_default();
+    let sol = submodular_ss::algorithms::sieve_streaming(&f, &all, day.k, &params);
+    assert!(sol.set.len() <= day.k);
+    assert_eq!(
+        submodular_ss::algorithms::sieve_streaming::sieve_memory_elements(day.k, &params),
+        50 * day.k
+    );
+}
+
+#[test]
+fn ss_seed_stability_across_substrates() {
+    // same params + same data ⇒ identical summaries on both substrates
+    let g = NewsGenerator::new(CorpusParams::default(), 13);
+    let day = g.day(500, 0, 13);
+    let f = FeatureBased::sqrt(day.feats.clone());
+    let backend = submodular_ss::algorithms::CpuBackend::new(&f);
+    let p = SsParams::default().with_seed(99);
+    let a = submodular_ss::algorithms::sparsify(&backend, &p);
+    let b = submodular_ss::algorithms::sparsify(&backend, &p);
+    assert_eq!(a.kept, b.kept);
+
+    let v1 = run_video("stable", 900, &VideoParams { d: 64, ..Default::default() }, 21);
+    let v2 = run_video("stable", 900, &VideoParams { d: 64, ..Default::default() }, 21);
+    assert_eq!(v1.results[2].set, v2.results[2].set);
+}

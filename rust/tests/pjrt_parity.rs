@@ -1,0 +1,123 @@
+//! Integration: PJRT runtime vs the pure-Rust CPU reference.
+//!
+//! Requires `make artifacts` to have run (skips gracefully otherwise, so
+//! `cargo test` stays green on a fresh checkout; CI runs `make test` which
+//! builds artifacts first).
+
+use submodular_ss::algorithms::{sparsify, CpuBackend, DivergenceBackend, SsParams};
+use submodular_ss::runtime::{self, PjrtBackend};
+use submodular_ss::submodular::{FeatureBased, SubmodularFn};
+use submodular_ss::util::rng::Rng;
+use submodular_ss::util::vecmath::FeatureMatrix;
+
+fn artifacts_present() -> bool {
+    std::path::Path::new("artifacts/manifest.json").exists()
+}
+
+fn instance(n: usize, d: usize, seed: u64) -> FeatureBased {
+    let mut rng = Rng::new(seed);
+    let mut m = FeatureMatrix::zeros(n, d);
+    for i in 0..n {
+        for j in 0..d {
+            m.row_mut(i)[j] = if rng.bool(0.3) { rng.f32() * 2.0 } else { 0.0 };
+        }
+    }
+    FeatureBased::sqrt(m)
+}
+
+#[test]
+fn pjrt_matches_cpu_reference() {
+    if !artifacts_present() {
+        eprintln!("skipping: artifacts/ not built");
+        return;
+    }
+    let (_svc, rt) = runtime::start_default(1).expect("start pjrt service");
+    // n deliberately NOT a multiple of the tile size; d < D to test padding
+    let f = instance(401, 200, 1);
+    let pjrt = PjrtBackend::new(&f, rt).expect("backend");
+    let cpu = CpuBackend::new(&f);
+
+    // singleton complements agree
+    let cpu_sing = cpu.singletons();
+    for (v, (&a, &b)) in pjrt.singletons().iter().zip(cpu_sing).enumerate() {
+        assert!((a - b).abs() < 1e-3 * (1.0 + b.abs()), "sing[{v}]: pjrt {a} vs cpu {b}");
+    }
+
+    // divergences agree on irregular probe/item sets (probe count > P forces
+    // multi-tile min-folding; item count > B forces block tiling)
+    let mut rng = Rng::new(7);
+    for trial in 0..3 {
+        let probes = rng.sample_indices(401, 40 + trial * 13);
+        let items: Vec<usize> =
+            (0..401).filter(|v| !probes.contains(v)).collect();
+        let a = pjrt.divergences(&probes, &items);
+        let b = cpu.divergences(&probes, &items);
+        assert_eq!(a.len(), b.len());
+        for (i, (&x, &y)) in a.iter().zip(&b).enumerate() {
+            assert!(
+                (x - y).abs() < 1e-2 * (1.0 + y.abs()),
+                "divergence[{i}] (item {v}): pjrt {x} vs cpu {y}",
+                v = items[i]
+            );
+        }
+    }
+}
+
+#[test]
+fn ss_through_pjrt_prunes_like_cpu() {
+    if !artifacts_present() {
+        eprintln!("skipping: artifacts/ not built");
+        return;
+    }
+    let (_svc, rt) = runtime::start_default(1).expect("start pjrt service");
+    let f = instance(600, 128, 2);
+    let pjrt = PjrtBackend::new(&f, rt).expect("backend");
+    let cpu = CpuBackend::new(&f);
+    let params = SsParams::default().with_seed(5);
+    let a = sparsify(&pjrt, &params);
+    let b = sparsify(&cpu, &params);
+    // identical RNG stream; divergences agree to ~1e-3, so the pruned sets
+    // can differ only at quickselect ties. Require near-identical outcomes.
+    let a_set: std::collections::HashSet<_> = a.kept.iter().collect();
+    let b_set: std::collections::HashSet<_> = b.kept.iter().collect();
+    let inter = a_set.intersection(&b_set).count();
+    let union = a_set.union(&b_set).count();
+    let jaccard = inter as f64 / union as f64;
+    assert!(jaccard > 0.95, "pjrt vs cpu SS sets diverge: jaccard={jaccard}");
+    assert_eq!(a.rounds, b.rounds);
+}
+
+#[test]
+fn utility_artifact_matches_eval() {
+    if !artifacts_present() {
+        eprintln!("skipping: artifacts/ not built");
+        return;
+    }
+    let (_svc, rt) = runtime::start_default(1).expect("start pjrt service");
+    let f = instance(50, 64, 3);
+    let set: Vec<usize> = vec![1, 5, 9, 33];
+    let on_device = rt.utility(f.feats(), &set).expect("utility");
+    let on_cpu = f.eval(&set);
+    assert!((on_device - on_cpu).abs() < 1e-3 * (1.0 + on_cpu.abs()));
+}
+
+#[test]
+fn accelerated_greedy_matches_cpu_greedy() {
+    if !artifacts_present() {
+        eprintln!("skipping: artifacts/ not built");
+        return;
+    }
+    let (_svc, rt) = runtime::start_default(1).expect("start pjrt service");
+    let f = instance(300, 128, 9);
+    let all: Vec<usize> = (0..300).collect();
+    let cpu = submodular_ss::algorithms::greedy(&f, &all, 12);
+    let dev = submodular_ss::algorithms::accelerated_greedy(&f, &rt, &all, 12).expect("accel");
+    // f32 gain batches can flip near-tie argmaxes; values must agree tightly
+    assert!(
+        (dev.value - cpu.value).abs() < 1e-3 * (1.0 + cpu.value),
+        "accelerated {} vs cpu {}",
+        dev.value,
+        cpu.value
+    );
+    assert_eq!(dev.set.len(), cpu.set.len());
+}

@@ -1,0 +1,167 @@
+//! Integration: the paper's theoretical statements, checked empirically on
+//! instances small enough to brute-force or measure exactly.
+
+use submodular_ss::algorithms::{
+    brute_force, greedy, lazy_greedy, sparsify, CpuBackend, SsParams,
+};
+use submodular_ss::graph::SubmodularityGraph;
+use submodular_ss::submodular::{FeatureBased, SparsificationObjective, SubmodularFn};
+use submodular_ss::util::prop::check_seeded;
+use submodular_ss::util::rng::Rng;
+use submodular_ss::util::vecmath::FeatureMatrix;
+
+fn instance(n: usize, d: usize, seed: u64) -> FeatureBased {
+    let mut rng = Rng::new(seed);
+    let mut m = FeatureMatrix::zeros(n, d);
+    for i in 0..n {
+        for j in 0..d {
+            m.row_mut(i)[j] = if rng.bool(0.4) { rng.f32() * 2.0 } else { 0.0 };
+        }
+    }
+    FeatureBased::sqrt(m)
+}
+
+/// Theorem 1: greedy restricted to a pruned V' with max divergence ε loses
+/// at most (1 − 1/e)·kε vs the (1 − 1/e)-scaled optimum.
+#[test]
+fn theorem1_bound_against_brute_force() {
+    check_seeded(41, 12, |g| {
+        let n = 14;
+        let k = 1 + g.usize_in(0, 4);
+        let f = instance(n, 4, g.usize_in(0, 1 << 30) as u64);
+        let graph = SubmodularityGraph::new(&f);
+        // choose an arbitrary V' and compute its exact eps = max over pruned
+        // v of w_{V'v}
+        let vprime = g.subset(n, k..n);
+        if vprime.len() < k {
+            return;
+        }
+        let eps = (0..n)
+            .filter(|v| !vprime.contains(v))
+            .map(|v| graph.divergence(&vprime, v))
+            .fold(0.0f64, f64::max);
+        let opt = brute_force(&f, &(0..n).collect::<Vec<_>>(), k);
+        let s_pruned = greedy(&f, &vprime, k);
+        let bound = (1.0 - (-1.0f64).exp()) * (opt.value - k as f64 * eps);
+        assert!(
+            s_pruned.value >= bound - 1e-9,
+            "Theorem 1 violated: f(S')={} < {bound} (eps={eps}, k={k})",
+            s_pruned.value
+        );
+    });
+}
+
+/// Theorem 2 (empirical form): SS's measured ε̂ certifies the bound
+/// f(S') ≥ (1 − 1/e)(f(S*) − 2kε̂), with f(S*) brute-forced.
+#[test]
+fn theorem2_bound_with_ss_epsilon() {
+    for seed in 0..6u64 {
+        let n = 16;
+        let k = 3;
+        let f = instance(n, 4, seed);
+        let backend = CpuBackend::new(&f);
+        // r=1 so that SS actually prunes at tiny n
+        let params = SsParams { r: 1, ..SsParams::default().with_seed(seed) };
+        let ss = sparsify(&backend, &params);
+        if ss.kept.len() < k || ss.kept.len() == n {
+            continue;
+        }
+        let opt = brute_force(&f, &(0..n).collect::<Vec<_>>(), k);
+        let sol = greedy(&f, &ss.kept, k);
+        let eps_hat = ss.pruned_max_divergence.max(0.0);
+        let bound = (1.0 - (-1.0f64).exp()) * (opt.value - 2.0 * k as f64 * eps_hat);
+        assert!(
+            sol.value >= bound - 1e-9,
+            "seed {seed}: f(S')={} < {bound} (eps-hat {eps_hat})",
+            sol.value
+        );
+    }
+}
+
+/// Proposition 1: h of Eq. (9) built from *real* submodularity-graph weights
+/// is non-monotone submodular (diminishing returns verified on the nose).
+#[test]
+fn proposition1_h_submodular_on_real_weights() {
+    let f = instance(12, 5, 7);
+    let graph = SubmodularityGraph::new(&f);
+    let eps = 0.25;
+    let h = SparsificationObjective::from_weights(12, eps, |u, v| graph.weight(u, v));
+    check_seeded(43, 120, |g| {
+        let b = g.subset(12, 0..8);
+        let a: Vec<usize> = b.iter().copied().filter(|_| g.bool()).collect();
+        let outside: Vec<usize> = (0..12).filter(|x| !b.contains(x)).collect();
+        if outside.is_empty() {
+            return;
+        }
+        let v = outside[g.usize_in(0, outside.len())];
+        let ga = h.eval(&[a.clone(), vec![v]].concat()) - h.eval(&a);
+        let gb = h.eval(&[b.clone(), vec![v]].concat()) - h.eval(&b);
+        assert!(ga >= gb - 1e-9, "h not submodular: {ga} < {gb}");
+    });
+    // non-monotone: the full set scores |V| - |V| = 0 < best singleton-ish sets
+    let full: Vec<usize> = (0..12).collect();
+    assert_eq!(h.eval(&full), 0.0);
+}
+
+/// Lemma 3 on every objective family we ship (triangle inequality is the
+/// load-bearing fact for Lemma 4 / Prop. 2).
+#[test]
+fn lemma3_across_objectives() {
+    use submodular_ss::submodular::{FacilityLocation, Modular, SetCover};
+    let mut rng = Rng::new(9);
+    let n = 9;
+
+    let feature = instance(n, 4, 1);
+    let mut sim = vec![0.0f32; n * n];
+    for i in 0..n {
+        sim[i * n + i] = 1.0;
+        for u in (i + 1)..n {
+            let s = rng.f32();
+            sim[i * n + u] = s;
+            sim[u * n + i] = s;
+        }
+    }
+    let fl = FacilityLocation::new(n, sim);
+    let sc = SetCover::unit(
+        (0..n).map(|i| vec![i as u32, ((i + 1) % n) as u32, ((i * 3) % n) as u32]).collect(),
+        n,
+    );
+    let md = Modular::new((0..n).map(|i| i as f64).collect());
+
+    let objectives: Vec<&dyn SubmodularFn> = vec![&feature, &fl, &sc, &md];
+    for (oi, f) in objectives.into_iter().enumerate() {
+        let g = SubmodularityGraph::new(f);
+        for v in 0..n {
+            for u in 0..n {
+                for x in 0..n {
+                    if v == u || u == x || v == x {
+                        continue;
+                    }
+                    assert!(
+                        g.weight(v, x) <= g.weight(v, u) + g.weight(u, x) + 1e-6,
+                        "objective {oi}: triangle inequality violated at ({v},{u},{x})"
+                    );
+                }
+            }
+        }
+    }
+}
+
+/// Paper's headline empirical claim at test scale: SS + lazy greedy tracks
+/// lazy greedy within a few percent while reducing the ground set ≥ 4×.
+#[test]
+fn headline_quality_and_reduction() {
+    let g = submodular_ss::data::NewsGenerator::new(
+        submodular_ss::data::CorpusParams { vocab_size: 1000, d: 128, ..Default::default() },
+        3,
+    );
+    let day = g.day(2500, 0, 3);
+    let f = FeatureBased::sqrt(day.feats.clone());
+    let all: Vec<usize> = (0..f.n()).collect();
+    let full = lazy_greedy(&f, &all, day.k);
+    let backend = CpuBackend::new(&f);
+    let ss = sparsify(&backend, &SsParams::default().with_seed(4));
+    let sol = lazy_greedy(&f, &ss.kept, day.k);
+    assert!(ss.kept.len() * 4 <= 2500, "reduction ≥ 4×: |V'|={}", ss.kept.len());
+    assert!(sol.value / full.value > 0.95, "rel utility {}", sol.value / full.value);
+}
