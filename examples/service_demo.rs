@@ -17,10 +17,10 @@
 
 
 use submodular_ss::algorithms::{lazy_greedy, SsParams};
-use submodular_ss::coordinator::{ServiceConfig, SummarizationService, SummarizeRequest};
-use submodular_ss::data::{CorpusParams, NewsGenerator};
+use submodular_ss::coordinator::{Objective, ServiceConfig, SummarizationService, SummarizeRequest};
+use submodular_ss::data::{CorpusParams, NewsGenerator, VideoParams};
 use submodular_ss::runtime;
-use submodular_ss::submodular::{FeatureBased, SubmodularFn};
+use submodular_ss::submodular::{FacilityLocation, FeatureBased, SubmodularFn};
 use submodular_ss::util::stats::{Samples, Timer};
 
 fn main() {
@@ -67,12 +67,14 @@ fn main() {
             .iter()
             .enumerate()
             .map(|(i, day)| {
-                svc.submit(SummarizeRequest {
-                    feats: day.feats.clone(),
-                    k: day.k,
-                    params: SsParams::default().with_seed(seed + i as u64),
-                    use_pjrt,
-                })
+                svc.submit(
+                    SummarizeRequest::features(
+                        day.feats.clone(),
+                        day.k,
+                        SsParams::default().with_seed(seed + i as u64),
+                    )
+                    .with_pjrt(use_pjrt),
+                )
             })
             .collect();
         let mut latencies = Samples::new();
@@ -99,5 +101,41 @@ fn main() {
         println!("{}", svc.metrics_json());
         assert!(rels.percentile(0.0) > 0.85, "E2E quality floor violated");
     }
+    // --- video-style facility-location requests through the same service ---
+    // the sharded pipeline is objective-generic: submit a dense-similarity
+    // representativeness objective (the paper's §4.3 workload shape) and it
+    // runs the blocked facility-location kernel on the CPU shards.
+    println!("\n=== facility location (video frames) ===");
+    let svc = SummarizationService::start(
+        ServiceConfig { workers: 2, queue_depth: 16, compute_threads: 2 },
+        None,
+    );
+    let frames = 600usize;
+    let k = frames * 15 / 100;
+    let video = submodular_ss::data::generate_video(
+        "service-demo clip",
+        frames,
+        &VideoParams::default(),
+        seed,
+    );
+    let fl = FacilityLocation::from_features(&video.feats);
+    let all: Vec<usize> = (0..frames).collect();
+    let full = lazy_greedy(&fl, &all, k);
+    let resp = svc
+        .submit(SummarizeRequest {
+            objective: Objective::FacilityLocation(fl),
+            k,
+            params: SsParams::default().with_seed(seed).with_min_keep(k + k / 2),
+            use_pjrt: false,
+        })
+        .wait()
+        .expect("facility-location request failed");
+    let rel = resp.value / full.value;
+    println!(
+        "video: {frames} frames -> |V'|={} -> k={k} thumbnails | rel-utility={rel:.4} latency={:.3}s",
+        resp.reduced, resp.latency_s
+    );
+    assert!(rel > 0.85, "facility-location E2E quality floor violated");
+
     println!("\nservice_demo OK — full stack (Pallas kernels via PJRT under a Rust coordinator) validated");
 }

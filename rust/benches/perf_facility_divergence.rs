@@ -1,0 +1,105 @@
+//! Perf: the facility-location divergence batch — cache-blocked row-walk
+//! kernel vs the scalar `pair_gain` fallback every objective gets for
+//! free. The §Perf facility-location numbers in EXPERIMENTS.md come from
+//! this target.
+//!
+//! The scalar fallback walks two stride-`n` similarity *columns* per
+//! `(probe, item)` pair — a cache miss per ground element. The blocked
+//! kernel streams similarity *rows* contiguously against an L2-resident
+//! accumulator tile. Same math, same bits, very different memory traffic;
+//! the acceptance bar is ≥ 2× at n ≥ 2000 (measured much higher).
+//!
+//! Run: `cargo bench --bench perf_facility_divergence` (SS_FULL=1 for the
+//! paper-scale shape). Prints a ready-to-paste EXPERIMENTS.md table row.
+
+use submodular_ss::bench::{bench, full_scale};
+use submodular_ss::submodular::{BatchedDivergence, FacilityLocation, SolState, SubmodularFn};
+use submodular_ss::util::rng::Rng;
+use submodular_ss::util::vecmath::FeatureMatrix;
+
+/// Wrapper that hides `FacilityLocation`'s kernel overrides so the default
+/// scalar `BatchedDivergence` path can be timed on the same instance.
+struct ScalarFallback<'a>(&'a FacilityLocation);
+
+impl SubmodularFn for ScalarFallback<'_> {
+    fn n(&self) -> usize {
+        self.0.n()
+    }
+    fn eval(&self, s: &[usize]) -> f64 {
+        self.0.eval(s)
+    }
+    fn state<'b>(&'b self) -> Box<dyn SolState + 'b> {
+        self.0.state()
+    }
+    fn pair_gain(&self, u: usize, v: usize) -> f64 {
+        self.0.pair_gain(u, v)
+    }
+    fn singleton(&self, v: usize) -> f64 {
+        self.0.singleton(v)
+    }
+    fn singleton_complements(&self) -> Vec<f64> {
+        self.0.singleton_complements()
+    }
+}
+
+impl BatchedDivergence for ScalarFallback<'_> {
+    fn as_submodular(&self) -> &dyn SubmodularFn {
+        self
+    }
+    // divergences_batch / pair_gains_batch: trait defaults = scalar loop
+}
+
+fn instance(n: usize, d: usize, seed: u64) -> FacilityLocation {
+    let mut rng = Rng::new(seed);
+    let mut m = FeatureMatrix::zeros(n, d);
+    for i in 0..n {
+        for j in 0..d {
+            m.row_mut(i)[j] = if rng.bool(0.3) { rng.f32() } else { 0.0 };
+        }
+    }
+    FacilityLocation::from_features(&m)
+}
+
+fn main() {
+    let n = if full_scale() { 4000 } else { 2000 };
+    // probes per SS round: r·log₂ n with the paper's r = 8
+    let p = (8.0 * (n as f64).log2()).ceil() as usize;
+    let f = instance(n, 64, 1);
+    let probes: Vec<usize> = (0..p).collect();
+    let items: Vec<usize> = (p..n).collect();
+    let sing = f.singleton_complements();
+    let probe_sing: Vec<f64> = probes.iter().map(|&u| sing[u]).collect();
+    let pairs = (probes.len() * items.len()) as f64;
+    println!("facility-location divergence batch: n={n}, probes={p}, items={}", items.len());
+
+    let scalar = ScalarFallback(&f);
+    let r_scalar = bench("fl_scalar_pair_gain_fallback", 0, 2, || {
+        scalar.divergences_batch(&probes, &probe_sing, &items)
+    });
+    let r_blocked = bench("fl_blocked_row_walk_kernel", 1, 5, || {
+        f.divergences_batch(&probes, &probe_sing, &items)
+    });
+
+    // same bits, not just close
+    let a = scalar.divergences_batch(&probes, &probe_sing, &items);
+    let b = f.divergences_batch(&probes, &probe_sing, &items);
+    assert_eq!(a, b, "blocked kernel must be bit-identical to the scalar fallback");
+
+    let speedup = r_scalar.median_s / r_blocked.median_s;
+    println!(
+        "throughput: scalar {:.2} | blocked {:.2} Mpair/s | speedup {speedup:.1}x",
+        pairs / r_scalar.median_s / 1e6,
+        pairs / r_blocked.median_s / 1e6,
+    );
+    println!(
+        "EXPERIMENTS.md row: | {n} | {p} | {:.3} | {:.3} | {:.1}x |",
+        r_scalar.median_s, r_blocked.median_s, speedup
+    );
+    if n >= 2000 {
+        assert!(
+            speedup >= 2.0,
+            "blocked facility-location kernel must be ≥ 2x the scalar fallback at n ≥ 2000 \
+             (measured {speedup:.2}x)"
+        );
+    }
+}

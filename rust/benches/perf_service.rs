@@ -22,12 +22,11 @@ fn main() {
             .iter()
             .enumerate()
             .map(|(i, d)| {
-                svc.submit(SummarizeRequest {
-                    feats: d.feats.clone(),
-                    k: d.k,
-                    params: SsParams::default().with_seed(i as u64),
-                    use_pjrt: false,
-                })
+                svc.submit(SummarizeRequest::features(
+                    d.feats.clone(),
+                    d.k,
+                    SsParams::default().with_seed(i as u64),
+                ))
             })
             .collect();
         let mut lat = Samples::new();

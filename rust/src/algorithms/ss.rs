@@ -20,7 +20,7 @@
 //! round) and finds `r = 8` works in practice.
 
 use super::Solution;
-use crate::submodular::SubmodularFn;
+use crate::submodular::{BatchedDivergence, SubmodularFn};
 use crate::util::rng::Rng;
 use crate::util::select::partition_smallest;
 use crate::util::stats::Timer;
@@ -105,19 +105,23 @@ pub trait DivergenceBackend: Send + Sync {
     fn importance_weights(&self, items: &[usize]) -> Vec<f64>;
 }
 
-/// Reference CPU backend over any [`SubmodularFn`].
+/// Reference CPU backend over any [`BatchedDivergence`] objective. The
+/// divergence batch dispatches through the trait, so objectives with
+/// blocked kernels (feature-based, facility location, mixtures) get them
+/// here and under the sharded coordinator identically; everything else
+/// rides the scalar `pair_gain` default.
 pub struct CpuBackend<'a> {
-    f: &'a dyn SubmodularFn,
+    f: &'a dyn BatchedDivergence,
     sing: Vec<f64>,
 }
 
 impl<'a> CpuBackend<'a> {
-    pub fn new(f: &'a dyn SubmodularFn) -> Self {
+    pub fn new(f: &'a dyn BatchedDivergence) -> Self {
         Self { sing: f.singleton_complements(), f }
     }
 
     /// Share a precomputed singleton-complement vector.
-    pub fn with_singletons(f: &'a dyn SubmodularFn, sing: Vec<f64>) -> Self {
+    pub fn with_singletons(f: &'a dyn BatchedDivergence, sing: Vec<f64>) -> Self {
         assert_eq!(sing.len(), f.n());
         Self { f, sing }
     }
@@ -133,21 +137,8 @@ impl DivergenceBackend for CpuBackend<'_> {
     }
 
     fn divergences(&self, probes: &[usize], items: &[usize]) -> Vec<f32> {
-        // Specialized hot path: feature-based objectives go through the
-        // blocked/vectorized kernel (identical math; see §Perf).
-        if let Some(fb) = self.f.as_feature_based() {
-            let probe_sing: Vec<f64> = probes.iter().map(|&u| self.sing[u]).collect();
-            return fb.divergences_block(probes, &probe_sing, items);
-        }
-        items
-            .iter()
-            .map(|&v| {
-                probes
-                    .iter()
-                    .map(|&u| (self.f.pair_gain(u, v) - self.sing[u]) as f32)
-                    .fold(f32::INFINITY, f32::min)
-            })
-            .collect()
+        let probe_sing: Vec<f64> = probes.iter().map(|&u| self.sing[u]).collect();
+        self.f.divergences_batch(probes, &probe_sing, items)
     }
 
     fn importance_weights(&self, items: &[usize]) -> Vec<f64> {

@@ -13,6 +13,9 @@ pub struct Counters {
     pub failed: AtomicU64,
     pub items_in: AtomicU64,
     pub items_pruned: AtomicU64,
+    /// Pairwise `w_{uv}` evaluations (probes × items per divergence batch)
+    /// — the same unit `SsResult::divergence_evals` reports, so service
+    /// metrics and algorithm accounting agree.
     pub divergence_evals: AtomicU64,
     pub tiles_dispatched: AtomicU64,
 }

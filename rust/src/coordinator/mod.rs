@@ -12,6 +12,12 @@
 //!   backpressure via blocking/shedding submits;
 //! * [`metrics`] — counters + latency histograms surfaced as JSON.
 //!
+//! The whole stack is objective-generic: backends and the service hold an
+//! `Arc<dyn BatchedDivergence>` handle, so every objective in
+//! [`crate::submodular`] — not just the paper's feature-based function —
+//! runs sharded, metered and service-fronted. See
+//! [`crate::submodular::batched`].
+//!
 //! [`DivergenceBackend`]: crate::algorithms::DivergenceBackend
 
 pub mod metrics;
@@ -19,5 +25,8 @@ pub mod service;
 pub mod sharded;
 
 pub use metrics::Metrics;
-pub use service::{ServiceConfig, SummarizationService, SummarizeRequest, SummarizeResponse};
+pub use service::{
+    Objective, ServiceConfig, SubmitError, SummarizationService, SummarizeRequest,
+    SummarizeResponse,
+};
 pub use sharded::{Compute, ShardedBackend};

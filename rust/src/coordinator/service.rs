@@ -1,12 +1,20 @@
 //! Summarization-as-a-service: the leader/worker deployment shape of SS.
 //!
-//! Requests (a feature matrix + budget + SS params) enter a bounded queue;
+//! Requests (an [`Objective`] + budget + SS params) enter a bounded queue;
 //! request-worker threads drain it, run the SS → lazy-greedy pipeline
 //! (optionally through the shared PJRT runtime, which batches tile jobs
 //! *across* concurrent requests at the executor), and deliver responses
 //! through per-request channels. Backpressure: `submit` blocks when the
-//! queue is full; `try_submit` fails fast — callers choose.
-
+//! queue is full; `try_submit` fails fast and distinguishes a full queue
+//! ([`SubmitError::QueueFull`], retryable) from a dead service
+//! ([`SubmitError::ServiceDown`], not retryable) — callers choose.
+//!
+//! Objectives: the service is generic over the crate's objective library
+//! via [`BatchedDivergence`] — news-style feature-based requests, dense
+//! facility-location (video representativeness) requests, and weighted
+//! mixtures all run the same sharded pipeline. PJRT acceleration applies
+//! to the feature-based core; other objectives compute on the CPU shard
+//! kernels transparently.
 
 use std::sync::mpsc::{sync_channel, Receiver, SyncSender, TrySendError};
 use std::sync::{Arc, Mutex};
@@ -16,7 +24,7 @@ use anyhow::{anyhow, Result};
 
 use crate::algorithms::{lazy_greedy, sparsify, SsParams};
 use crate::runtime::TiledRuntime;
-use crate::submodular::FeatureBased;
+use crate::submodular::{BatchedDivergence, FacilityLocation, FeatureBased, Mixture};
 use crate::util::pool::ThreadPool;
 use crate::util::stats::Timer;
 use crate::util::vecmath::FeatureMatrix;
@@ -24,15 +32,59 @@ use crate::util::vecmath::FeatureMatrix;
 use super::metrics::Metrics;
 use super::sharded::{Compute, ShardedBackend};
 
+/// What to summarize: the objective payload of a [`SummarizeRequest`].
+pub enum Objective {
+    /// Feature-based concave-over-modular (√ scalarizer) over hashed item
+    /// features — the paper's news objective; PJRT-accelerable.
+    Features(FeatureMatrix),
+    /// Facility location over a dense similarity matrix — video-style
+    /// representativeness; computed on the blocked CPU kernel.
+    FacilityLocation(FacilityLocation),
+    /// Weighted mixture of objectives (coverage vs diversity trade-offs).
+    Mixture(Mixture),
+}
+
+impl Objective {
+    /// Ground-set size |V|.
+    pub fn n(&self) -> usize {
+        match self {
+            Objective::Features(feats) => feats.n(),
+            Objective::FacilityLocation(fl) => fl.n(),
+            Objective::Mixture(m) => m.n(),
+        }
+    }
+
+    /// Materialize the objective handle the pipeline runs on.
+    fn into_fn(self) -> Arc<dyn BatchedDivergence> {
+        match self {
+            Objective::Features(feats) => Arc::new(FeatureBased::sqrt(feats)),
+            Objective::FacilityLocation(fl) => Arc::new(fl),
+            Objective::Mixture(m) => Arc::new(m),
+        }
+    }
+}
+
 pub struct SummarizeRequest {
-    /// item features (rows = ground elements)
-    pub feats: FeatureMatrix,
+    pub objective: Objective,
     /// summary budget
     pub k: usize,
     pub params: SsParams,
     /// route divergence batches through PJRT (requires service started with
-    /// a runtime); false = CPU shards
+    /// a runtime; only accelerates `Objective::Features` — other objectives
+    /// fall back to CPU shards)
     pub use_pjrt: bool,
+}
+
+impl SummarizeRequest {
+    /// News-style request: feature-based objective over `feats`.
+    pub fn features(feats: FeatureMatrix, k: usize, params: SsParams) -> Self {
+        Self { objective: Objective::Features(feats), k, params, use_pjrt: false }
+    }
+
+    pub fn with_pjrt(mut self, use_pjrt: bool) -> Self {
+        self.use_pjrt = use_pjrt;
+        self
+    }
 }
 
 #[derive(Clone, Debug)]
@@ -48,6 +100,38 @@ pub struct SummarizeResponse {
     pub latency_s: f64,
     /// time spent queued before a worker picked it up
     pub queue_s: f64,
+}
+
+/// Why [`SummarizationService::try_submit`] rejected a request. Both
+/// variants hand the request back so the caller can retry or reroute.
+pub enum SubmitError {
+    /// Bounded queue is full — backpressure; retrying later can succeed.
+    QueueFull(SummarizeRequest),
+    /// The service's workers are gone (shut down or crashed) — retrying
+    /// against this instance can never succeed.
+    ServiceDown(SummarizeRequest),
+}
+
+impl SubmitError {
+    /// Recover the rejected request.
+    pub fn into_request(self) -> SummarizeRequest {
+        match self {
+            SubmitError::QueueFull(r) | SubmitError::ServiceDown(r) => r,
+        }
+    }
+
+    pub fn is_retryable(&self) -> bool {
+        matches!(self, SubmitError::QueueFull(_))
+    }
+}
+
+impl std::fmt::Debug for SubmitError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            SubmitError::QueueFull(_) => f.write_str("SubmitError::QueueFull(..)"),
+            SubmitError::ServiceDown(_) => f.write_str("SubmitError::ServiceDown(..)"),
+        }
+    }
 }
 
 struct QueuedJob {
@@ -110,17 +194,28 @@ impl SummarizationService {
         Self { tx, metrics, workers }
     }
 
-    /// Blocking submit (backpressure).
+    /// Blocking submit (backpressure). After [`Self::shutdown`] the ticket
+    /// resolves to an error instead of blocking or panicking.
     pub fn submit(&self, req: SummarizeRequest) -> Ticket {
-        self.metrics.add(&self.metrics.counters.requests, 1);
         let (rtx, rrx) = sync_channel(1);
         let job = QueuedJob { req, enqueued: Timer::new(), reply: rtx };
-        self.tx.send(job).expect("service is down");
+        match self.tx.send(job) {
+            Ok(()) => self.metrics.add(&self.metrics.counters.requests, 1),
+            Err(dead) => {
+                // workers are gone: fail the ticket, don't panic the caller
+                let _ = dead.0.reply.send(Err(anyhow!("service is down")));
+            }
+        }
         Ticket { rx: rrx }
     }
 
-    /// Non-blocking submit; `Err` = queue full (shed load).
-    pub fn try_submit(&self, req: SummarizeRequest) -> std::result::Result<Ticket, SummarizeRequest> {
+    /// Non-blocking submit. [`SubmitError::QueueFull`] = shed load / retry
+    /// later; [`SubmitError::ServiceDown`] = the workers are gone and no
+    /// retry against this instance can succeed.
+    pub fn try_submit(
+        &self,
+        req: SummarizeRequest,
+    ) -> std::result::Result<Ticket, SubmitError> {
         let (rtx, rrx) = sync_channel(1);
         let job = QueuedJob { req, enqueued: Timer::new(), reply: rtx };
         match self.tx.try_send(job) {
@@ -128,7 +223,19 @@ impl SummarizationService {
                 self.metrics.add(&self.metrics.counters.requests, 1);
                 Ok(Ticket { rx: rrx })
             }
-            Err(TrySendError::Full(job)) | Err(TrySendError::Disconnected(job)) => Err(job.req),
+            Err(TrySendError::Full(job)) => Err(SubmitError::QueueFull(job.req)),
+            Err(TrySendError::Disconnected(job)) => Err(SubmitError::ServiceDown(job.req)),
+        }
+    }
+
+    /// Graceful shutdown: close the queue (already-accepted requests still
+    /// complete), then join the workers. Afterwards `try_submit` reports
+    /// [`SubmitError::ServiceDown`]. Called by `Drop`; idempotent.
+    pub fn shutdown(&mut self) {
+        let (dead_tx, _) = sync_channel(1);
+        let _ = std::mem::replace(&mut self.tx, dead_tx);
+        for w in self.workers.drain(..) {
+            let _ = w.join();
         }
     }
 
@@ -143,12 +250,7 @@ impl SummarizationService {
 
 impl Drop for SummarizationService {
     fn drop(&mut self) {
-        // close the queue; workers exit when drained
-        let (dead_tx, _) = sync_channel(1);
-        let _ = std::mem::replace(&mut self.tx, dead_tx);
-        for w in self.workers.drain(..) {
-            let _ = w.join();
-        }
+        self.shutdown();
     }
 }
 
@@ -168,7 +270,10 @@ fn worker_main(
         metrics.queue_wait.record_secs(queue_s);
         let result = handle(job.req, queue_s, metrics, pool, runtime);
         match &result {
-            Ok(_) => metrics.add(&metrics.counters.completed, 1),
+            Ok(resp) => {
+                metrics.add(&metrics.counters.completed, 1);
+                metrics.request_latency.record_secs(resp.latency_s);
+            }
             Err(_) => metrics.add(&metrics.counters.failed, 1),
         }
         let _ = job.reply.send(result);
@@ -183,9 +288,9 @@ fn handle(
     runtime: Option<&Arc<TiledRuntime>>,
 ) -> Result<SummarizeResponse> {
     let timer = Timer::new();
-    let n = req.feats.n();
+    let n = req.objective.n();
     metrics.add(&metrics.counters.items_in, n as u64);
-    let f = Arc::new(FeatureBased::sqrt(req.feats));
+    let f: Arc<dyn BatchedDivergence> = req.objective.into_fn();
     let compute = if req.use_pjrt {
         let rt = runtime.ok_or_else(|| anyhow!("service started without a PJRT runtime"))?;
         Compute::Pjrt(Arc::clone(rt))
@@ -196,9 +301,13 @@ fn handle(
         ShardedBackend::new(Arc::clone(&f), Arc::clone(pool), compute, Arc::clone(metrics))?;
     let round_timer = Timer::new();
     let ss = sparsify(&backend, &req.params);
-    metrics.round_latency.record_secs(round_timer.elapsed_s() / ss.rounds.max(1) as f64);
+    if ss.rounds > 0 {
+        // only real rounds produce a sample — a small-n passthrough (0
+        // rounds) must not log its sparsify wall time as one fake round
+        metrics.round_latency.record_secs(round_timer.elapsed_s() / ss.rounds as f64);
+    }
     metrics.add(&metrics.counters.items_pruned, (n - ss.kept.len()) as u64);
-    let sol = lazy_greedy(f.as_ref(), &ss.kept, req.k);
+    let sol = lazy_greedy(f.as_submodular(), &ss.kept, req.k);
     Ok(SummarizeResponse {
         summary: sol.set,
         value: sol.value,
@@ -227,12 +336,7 @@ mod tests {
     }
 
     fn req(n: usize, seed: u64) -> SummarizeRequest {
-        SummarizeRequest {
-            feats: feats(n, 16, seed),
-            k: 8,
-            params: SsParams::default().with_seed(seed),
-            use_pjrt: false,
-        }
+        SummarizeRequest::features(feats(n, 16, seed), 8, SsParams::default().with_seed(seed))
     }
 
     #[test]
@@ -244,6 +348,25 @@ mod tests {
         assert!(resp.reduced < 300);
         assert!(resp.value > 0.0);
         assert!(resp.latency_s >= resp.queue_s);
+    }
+
+    #[test]
+    fn facility_location_roundtrip() {
+        let svc = SummarizationService::start(ServiceConfig::default(), None);
+        let fl = FacilityLocation::from_features(&feats(300, 16, 2));
+        let resp = svc
+            .submit(SummarizeRequest {
+                objective: Objective::FacilityLocation(fl),
+                k: 8,
+                params: SsParams::default().with_seed(2),
+                use_pjrt: false,
+            })
+            .wait()
+            .unwrap();
+        assert_eq!(resp.summary.len(), 8);
+        assert_eq!(resp.n, 300);
+        assert!(resp.reduced < 300);
+        assert!(resp.value > 0.0);
     }
 
     #[test]
@@ -281,7 +404,13 @@ mod tests {
                     accepted += 1;
                     tickets.push(t);
                 }
-                Err(_) => shed += 1,
+                Err(e @ SubmitError::QueueFull(_)) => {
+                    assert!(e.is_retryable());
+                    shed += 1;
+                }
+                Err(SubmitError::ServiceDown(_)) => {
+                    panic!("live service must report backpressure, not ServiceDown")
+                }
             }
         }
         assert!(accepted >= 1);
@@ -292,10 +421,52 @@ mod tests {
     }
 
     #[test]
+    fn try_submit_distinguishes_dead_service_from_backpressure() {
+        let mut svc = SummarizationService::start(ServiceConfig::default(), None);
+        svc.shutdown();
+        match svc.try_submit(req(50, 1)) {
+            Err(e @ SubmitError::ServiceDown(_)) => {
+                assert!(!e.is_retryable());
+                assert_eq!(e.into_request().objective.n(), 50, "request must be handed back");
+            }
+            Err(SubmitError::QueueFull(_)) => {
+                panic!("dead service must not masquerade as backpressure")
+            }
+            Ok(_) => panic!("dead service accepted a request"),
+        }
+        // blocking submit must not panic either: the ticket resolves to Err
+        let err = svc.submit(req(50, 2)).wait().unwrap_err().to_string();
+        assert!(err.contains("down"), "{err}");
+        assert_eq!(
+            svc.metrics().counters.requests.load(std::sync::atomic::Ordering::Relaxed),
+            0,
+            "rejected requests must not count as accepted"
+        );
+    }
+
+    #[test]
+    fn passthrough_request_records_no_round_latency() {
+        let svc = SummarizationService::start(ServiceConfig::default(), None);
+        // n = 20 ≤ r·log₂n probes ⇒ SS passes the ground set through in 0
+        // rounds; that must not contribute a round-latency sample
+        let resp = svc.submit(req(20, 3)).wait().unwrap();
+        assert_eq!(resp.ss_rounds, 0, "small n must pass through un-pruned");
+        assert_eq!(resp.reduced, 20);
+        assert_eq!(
+            svc.metrics().round_latency.count(),
+            0,
+            "0-round passthrough must not record a fake round latency"
+        );
+        // a real request does produce samples
+        let resp = svc.submit(req(300, 3)).wait().unwrap();
+        assert!(resp.ss_rounds > 0);
+        assert!(svc.metrics().round_latency.count() > 0);
+    }
+
+    #[test]
     fn pjrt_request_without_runtime_fails_cleanly() {
         let svc = SummarizationService::start(ServiceConfig::default(), None);
-        let mut r = req(100, 9);
-        r.use_pjrt = true;
+        let r = req(100, 9).with_pjrt(true);
         let err = svc.submit(r).wait().unwrap_err().to_string();
         assert!(err.contains("PJRT"), "{err}");
         assert_eq!(

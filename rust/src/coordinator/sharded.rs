@@ -2,16 +2,28 @@
 //! set across the worker pool, with each shard computing divergences either
 //! on CPU or through the shared PJRT tiled runtime.
 //!
+//! Works over **any** [`BatchedDivergence`] objective: each CPU shard
+//! dispatches through the trait, so feature-based, facility-location and
+//! mixture objectives all get their blocked kernels, and everything else
+//! rides the scalar `pair_gain` default. The PJRT route is the
+//! [`FeatureBased`]-only fast path (the AOT artifacts encode the
+//! concave-coverage kernels); objectives without artifacts fall back to the
+//! CPU kernels transparently, so a `Compute::Pjrt` backend never fails on
+//! an unsupported objective — it just computes on CPU.
+//!
 //! Determinism: shards are gathered positionally ([`ThreadPool::parallel_ranges`])
 //! and the per-item min is order-invariant, so the coordinator produces the
 //! same pruning decisions as the single-threaded reference backend — a
-//! property `rust/tests/coordinator_e2e.rs` asserts bit-for-bit.
+//! property `rust/tests/coordinator_e2e.rs` asserts bit-for-bit for every
+//! objective kind.
+//!
+//! [`FeatureBased`]: crate::submodular::FeatureBased
 
 use std::sync::Arc;
 
 use crate::algorithms::DivergenceBackend;
 use crate::runtime::TiledRuntime;
-use crate::submodular::{FeatureBased, SubmodularFn};
+use crate::submodular::BatchedDivergence;
 use crate::util::pool::ThreadPool;
 
 use super::metrics::Metrics;
@@ -19,14 +31,17 @@ use super::metrics::Metrics;
 /// Where a shard's divergences are computed.
 #[derive(Clone)]
 pub enum Compute {
-    /// vectorized CPU loops (reference; also the fallback without artifacts)
+    /// blocked/scalar CPU kernels via [`BatchedDivergence`] (reference;
+    /// also the fallback for objectives without AOT artifacts)
     Cpu,
-    /// tiled PJRT executor (the AOT Pallas kernels)
+    /// tiled PJRT executor (the AOT Pallas kernels) — used when the
+    /// objective exposes a [`FeatureBased`](crate::submodular::FeatureBased)
+    /// core, CPU fallback otherwise
     Pjrt(Arc<TiledRuntime>),
 }
 
 pub struct ShardedBackend {
-    f: Arc<FeatureBased>,
+    f: Arc<dyn BatchedDivergence>,
     sing: Arc<Vec<f64>>,
     pool: Arc<ThreadPool>,
     compute: Compute,
@@ -36,16 +51,19 @@ pub struct ShardedBackend {
 
 impl ShardedBackend {
     pub fn new(
-        f: Arc<FeatureBased>,
+        f: Arc<dyn BatchedDivergence>,
         pool: Arc<ThreadPool>,
         compute: Compute,
         metrics: Arc<Metrics>,
     ) -> anyhow::Result<Self> {
-        // singleton complements once, through the same compute path
-        let items: Vec<usize> = (0..f.n()).collect();
-        let sing = match &compute {
-            Compute::Cpu => f.singleton_complements(),
-            Compute::Pjrt(rt) => rt.singleton_complements(f.feats(), f.total_mass(), &items)?,
+        // singleton complements once, through the same compute path (PJRT
+        // only has the feature-based singleton artifact)
+        let sing = match (&compute, f.as_feature_based()) {
+            (Compute::Pjrt(rt), Some(fb)) => {
+                let items: Vec<usize> = (0..f.n()).collect();
+                rt.singleton_complements(fb.feats(), fb.total_mass(), &items)?
+            }
+            _ => f.singleton_complements(),
         };
         let shards = pool.threads() * 2;
         Ok(Self { f, sing: Arc::new(sing), pool, compute, shards, metrics })
@@ -67,6 +85,7 @@ impl DivergenceBackend for ShardedBackend {
     }
 
     fn divergences(&self, probes: &[usize], items: &[usize]) -> Vec<f32> {
+        let n_probes = probes.len();
         let probes: Arc<Vec<usize>> = Arc::new(probes.to_vec());
         let items: Arc<Vec<usize>> = Arc::new(items.to_vec());
         let probe_sing: Arc<Vec<f64>> =
@@ -75,15 +94,18 @@ impl DivergenceBackend for ShardedBackend {
         let compute = self.compute.clone();
         let chunks = self.pool.parallel_ranges(items.len(), self.shards, move |lo, hi| {
             let chunk = &items[lo..hi];
-            match &compute {
-                Compute::Cpu => cpu_divergences(&f, &probes, &probe_sing, chunk),
-                Compute::Pjrt(rt) => rt
-                    .divergences(f.feats(), &probes, &probe_sing, chunk)
+            match (&compute, f.as_feature_based()) {
+                (Compute::Pjrt(rt), Some(fb)) => rt
+                    .divergences(fb.feats(), &probes, &probe_sing, chunk)
                     .expect("pjrt divergences"),
+                _ => f.divergences_batch(&probes, &probe_sing, chunk),
             }
         });
         let out: Vec<f32> = chunks.into_iter().flatten().collect();
-        self.metrics.add(&self.metrics.counters.divergence_evals, out.len() as u64);
+        // pairwise w_{uv} evaluations — the same unit `sparsify_candidates`
+        // accounts in `SsResult::divergence_evals`
+        self.metrics
+            .add(&self.metrics.counters.divergence_evals, (n_probes * out.len()) as u64);
         out
     }
 
@@ -92,26 +114,15 @@ impl DivergenceBackend for ShardedBackend {
     }
 }
 
-/// CPU shard kernel — delegates to the blocked `FeatureBased` kernel with
-/// per-probe cached `g(u)` rows (bit-identical to the naive reference; see
-/// the perf log in EXPERIMENTS.md §Perf).
-pub fn cpu_divergences(
-    f: &FeatureBased,
-    probes: &[usize],
-    probe_sing: &[f64],
-    items: &[usize],
-) -> Vec<f32> {
-    f.divergences_block(probes, probe_sing, items)
-}
-
 #[cfg(test)]
 mod tests {
     use super::*;
     use crate::algorithms::CpuBackend;
+    use crate::submodular::{FacilityLocation, FeatureBased};
     use crate::util::rng::Rng;
     use crate::util::vecmath::FeatureMatrix;
 
-    fn instance(n: usize, d: usize, seed: u64) -> Arc<FeatureBased> {
+    fn feats(n: usize, d: usize, seed: u64) -> FeatureMatrix {
         let mut rng = Rng::new(seed);
         let mut m = FeatureMatrix::zeros(n, d);
         for i in 0..n {
@@ -119,7 +130,11 @@ mod tests {
                 m.row_mut(i)[j] = if rng.bool(0.4) { rng.f32() } else { 0.0 };
             }
         }
-        Arc::new(FeatureBased::sqrt(m))
+        m
+    }
+
+    fn instance(n: usize, d: usize, seed: u64) -> Arc<FeatureBased> {
+        Arc::new(FeatureBased::sqrt(feats(n, d, seed)))
     }
 
     #[test]
@@ -141,13 +156,38 @@ mod tests {
     }
 
     #[test]
+    fn sharded_facility_location_matches_reference_backend() {
+        let fl = Arc::new(FacilityLocation::from_features(&feats(250, 12, 5)));
+        let pool = Arc::new(ThreadPool::new(3, 16));
+        let metrics = Arc::new(Metrics::new());
+        let sharded =
+            ShardedBackend::new(Arc::clone(&fl), pool, Compute::Cpu, metrics).unwrap();
+        let reference = CpuBackend::new(fl.as_ref());
+        let mut rng = Rng::new(6);
+        for _ in 0..3 {
+            let probes = rng.sample_indices(250, 20);
+            let items: Vec<usize> = (0..250).filter(|v| !probes.contains(v)).collect();
+            assert_eq!(
+                sharded.divergences(&probes, &items),
+                reference.divergences(&probes, &items),
+                "facility-location sharding must be bit-identical to reference"
+            );
+        }
+    }
+
+    #[test]
     fn shard_count_does_not_change_results() {
         let f = instance(200, 8, 3);
         let pool = Arc::new(ThreadPool::new(3, 8));
         let metrics = Arc::new(Metrics::new());
-        let one = ShardedBackend::new(Arc::clone(&f), Arc::clone(&pool), Compute::Cpu, Arc::clone(&metrics))
-            .unwrap()
-            .with_shards(1);
+        let one = ShardedBackend::new(
+            Arc::clone(&f),
+            Arc::clone(&pool),
+            Compute::Cpu,
+            Arc::clone(&metrics),
+        )
+        .unwrap()
+        .with_shards(1);
         let many = ShardedBackend::new(Arc::clone(&f), pool, Compute::Cpu, metrics)
             .unwrap()
             .with_shards(13);
@@ -163,9 +203,10 @@ mod tests {
         let metrics = Arc::new(Metrics::new());
         let b = ShardedBackend::new(f, pool, Compute::Cpu, Arc::clone(&metrics)).unwrap();
         let _ = b.divergences(&[0, 1, 2], &(3..100).collect::<Vec<_>>());
+        // pairwise evaluations: 3 probes × 97 items
         assert_eq!(
             metrics.counters.divergence_evals.load(std::sync::atomic::Ordering::Relaxed),
-            97
+            291
         );
     }
 }

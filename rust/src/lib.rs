@@ -38,5 +38,5 @@ pub mod config;
 pub mod eval;
 pub mod bench;
 
-pub use submodular::{SubmodularFn, FeatureBased};
+pub use submodular::{BatchedDivergence, FeatureBased, SubmodularFn};
 

@@ -202,12 +202,14 @@ fn cmd_serve(args: &Args) -> Result<()> {
     let tickets: Vec<_> = (0..count)
         .map(|i| {
             let day = g.day(n, 0, seed + i as u64);
-            svc.submit(SummarizeRequest {
-                feats: day.feats,
-                k: day.k,
-                params: SsParams::default().with_seed(seed + i as u64),
-                use_pjrt,
-            })
+            svc.submit(
+                SummarizeRequest::features(
+                    day.feats,
+                    day.k,
+                    SsParams::default().with_seed(seed + i as u64),
+                )
+                .with_pjrt(use_pjrt),
+            )
         })
         .collect();
     for (i, t) in tickets.into_iter().enumerate() {

@@ -1,0 +1,156 @@
+//! **Batched divergence capability** — the bridge between the objective
+//! library and the SS hot loop.
+//!
+//! The per-round cost of Algorithm 1 is the divergence batch
+//! `w_{U,v} = min_{u∈U} [f(v|u) − f(u|V∖u)]` over all live items `v`. Every
+//! [`SubmodularFn`] can compute it through the scalar [`pair_gain`] loop,
+//! but the memory-access pattern of that loop is objective-specific — and
+//! that is exactly where blocked kernels pay off (cf. Lindgren et al.,
+//! "Leveraging Sparsity for Efficient Submodular Data Summarization").
+//!
+//! [`BatchedDivergence`] makes the batch a *capability* with a universal
+//! default:
+//!
+//! * the default [`pair_gains_batch`] / [`divergences_batch`] ride the
+//!   scalar [`pair_gain`] loop — correct for every objective, no override
+//!   needed (the coverage / graph-cut / modular family use it as-is);
+//! * [`FeatureBased`] overrides with the blocked concave-coverage kernel
+//!   (`divergences_block`, per-probe cached `g(u)` rows);
+//! * [`FacilityLocation`] overrides with a cache-blocked kernel that walks
+//!   similarity rows contiguously instead of striding down columns
+//!   (`rust/benches/perf_facility_divergence.rs`, EXPERIMENTS.md §Perf);
+//! * [`Mixture`] delegates [`pair_gains_batch`] to its components, so a
+//!   mixture of accelerated objectives stays accelerated.
+//!
+//! Every override must be **bit-identical** to the scalar default — the
+//! sharded coordinator and the single-threaded reference both route through
+//! this trait, and `rust/tests/coordinator_e2e.rs` asserts their pruning
+//! decisions match exactly. Overrides achieve this by accumulating in the
+//! same order (ascending dim / ascending ground element) with the same
+//! float widths as [`pair_gain`].
+//!
+//! [`pair_gain`]: SubmodularFn::pair_gain
+//! [`pair_gains_batch`]: BatchedDivergence::pair_gains_batch
+//! [`divergences_batch`]: BatchedDivergence::divergences_batch
+//! [`FeatureBased`]: super::FeatureBased
+//! [`FacilityLocation`]: super::FacilityLocation
+//! [`Mixture`]: super::Mixture
+
+use super::{GraphCut, Modular, SaturatedCoverage, SetCover, SparsificationObjective, SubmodularFn};
+
+/// A [`SubmodularFn`] that can evaluate divergence batches, with scalar
+/// defaults and objective-specific blocked kernels. This is the objective
+/// handle the production stack holds (`Arc<dyn BatchedDivergence>` in
+/// [`crate::coordinator::ShardedBackend`] and the summarization service).
+pub trait BatchedDivergence: SubmodularFn {
+    /// Upcast to the plain objective trait (for the maximizers, which take
+    /// `&dyn SubmodularFn`). Implementations return `self`; this exists
+    /// because stable trait-object upcasting cannot be assumed from the
+    /// pinned toolchain.
+    fn as_submodular(&self) -> &dyn SubmodularFn;
+
+    /// Batch pairwise gains: `out[vi * probes.len() + ui] = f(v_vi | u_ui)`
+    /// (row-major over items). The default is the scalar [`pair_gain`]
+    /// loop; overrides must match it bit-for-bit.
+    ///
+    /// [`pair_gain`]: SubmodularFn::pair_gain
+    fn pair_gains_batch(&self, probes: &[usize], items: &[usize]) -> Vec<f64> {
+        let mut out = Vec::with_capacity(items.len() * probes.len());
+        for &v in items {
+            for &u in probes {
+                out.push(self.pair_gain(u, v));
+            }
+        }
+        out
+    }
+
+    /// Divergence batch `w_{U,v} = min_{u} [f(v|u) − sing_u]` for each `v`
+    /// in `items`, with `probe_sing[i] = f(u_i|V∖u_i)` aligned to `probes`.
+    /// The default routes through [`pair_gains_batch`]; fused kernels
+    /// (which never materialize the pair-gain matrix) override it.
+    ///
+    /// [`pair_gains_batch`]: BatchedDivergence::pair_gains_batch
+    fn divergences_batch(
+        &self,
+        probes: &[usize],
+        probe_sing: &[f64],
+        items: &[usize],
+    ) -> Vec<f32> {
+        debug_assert_eq!(probes.len(), probe_sing.len());
+        if probes.is_empty() {
+            return vec![f32::INFINITY; items.len()];
+        }
+        let pg = self.pair_gains_batch(probes, items);
+        pg.chunks(probes.len())
+            .map(|row| {
+                row.iter()
+                    .zip(probe_sing)
+                    .map(|(&g, &su)| (g - su) as f32)
+                    .fold(f32::INFINITY, f32::min)
+            })
+            .collect()
+    }
+}
+
+/// The coverage / graph-cut / modular family rides the scalar default:
+/// their [`pair_gain`](SubmodularFn::pair_gain) closed forms are already
+/// index-local, so there is no blocked layout to exploit yet.
+macro_rules! scalar_batched {
+    ($($ty:ty),+ $(,)?) => {$(
+        impl BatchedDivergence for $ty {
+            fn as_submodular(&self) -> &dyn SubmodularFn {
+                self
+            }
+        }
+    )+};
+}
+
+scalar_batched!(Modular, SetCover, SaturatedCoverage, GraphCut, SparsificationObjective);
+
+#[cfg(test)]
+mod tests {
+    use super::super::test_support::scalar_reference_divergences;
+    use super::*;
+    use crate::util::rng::Rng;
+
+    fn graph_cut_instance(n: usize, seed: u64) -> GraphCut {
+        let mut rng = Rng::new(seed);
+        let mut sim = vec![0.0f32; n * n];
+        for i in 0..n {
+            sim[i * n + i] = 1.0;
+            for u in (i + 1)..n {
+                let s = rng.f32();
+                sim[i * n + u] = s;
+                sim[u * n + i] = s;
+            }
+        }
+        GraphCut::new(n, sim, 2.0)
+    }
+
+    #[test]
+    fn default_batch_matches_scalar_loop() {
+        let f = graph_cut_instance(40, 1);
+        let sing = f.singleton_complements();
+        let probes = vec![3usize, 11, 27];
+        let probe_sing: Vec<f64> = probes.iter().map(|&u| sing[u]).collect();
+        let items: Vec<usize> = (0..40).filter(|v| !probes.contains(v)).collect();
+        let got = f.divergences_batch(&probes, &probe_sing, &items);
+        let want = scalar_reference_divergences(&f, &probes, &probe_sing, &items);
+        assert_eq!(got, want, "default batch must equal the scalar reference bit-for-bit");
+    }
+
+    #[test]
+    fn empty_probes_yield_infinite_divergences() {
+        let f = Modular::new(vec![1.0; 8]);
+        let w = f.divergences_batch(&[], &[], &[0, 1, 2]);
+        assert_eq!(w, vec![f32::INFINITY; 3]);
+    }
+
+    #[test]
+    fn pair_gains_batch_layout_is_item_major() {
+        let f = Modular::new((0..6).map(|i| i as f64).collect());
+        let pg = f.pair_gains_batch(&[1, 2], &[3, 4]);
+        // modular: f(v|u) = w_v regardless of u
+        assert_eq!(pg, vec![3.0, 3.0, 4.0, 4.0]);
+    }
+}

@@ -8,7 +8,7 @@
 //! here are the bit-level reference the runtime parity tests compare
 //! against.
 
-use super::{BidirState, SolState, SubmodularFn};
+use super::{BatchedDivergence, BidirState, SolState, SubmodularFn};
 use crate::util::vecmath::{add_into, sub_clamp_into, FeatureMatrix};
 
 /// Concave scalarizer `g`. Must satisfy `g(0) = 0`, `g' > 0`, `g'' < 0`.
@@ -230,6 +230,47 @@ impl SubmodularFn for FeatureBased {
     }
 }
 
+impl BatchedDivergence for FeatureBased {
+    fn as_submodular(&self) -> &dyn SubmodularFn {
+        self
+    }
+
+    /// Per-probe cached `g(u)` rows in f64 — bit-identical to the scalar
+    /// [`SubmodularFn::pair_gain`] (same dims visited in the same order
+    /// with the same widths), which [`super::Mixture`] relies on when it
+    /// delegates here.
+    fn pair_gains_batch(&self, probes: &[usize], items: &[usize]) -> Vec<f64> {
+        let gu: Vec<Vec<f64>> = probes
+            .iter()
+            .map(|&u| self.feats.row(u).iter().map(|&a| self.g.apply(a as f64)).collect())
+            .collect();
+        let mut out = Vec::with_capacity(items.len() * probes.len());
+        for &v in items {
+            let rv = self.feats.row(v);
+            for (&u, gu_row) in probes.iter().zip(&gu) {
+                let ru = self.feats.row(u);
+                let mut acc = 0.0f64;
+                for ((&a, &b), &ga) in ru.iter().zip(rv).zip(gu_row) {
+                    if b > 0.0 {
+                        acc += self.g.apply((a + b) as f64) - ga;
+                    }
+                }
+                out.push(acc);
+            }
+        }
+        out
+    }
+
+    fn divergences_batch(
+        &self,
+        probes: &[usize],
+        probe_sing: &[f64],
+        items: &[usize],
+    ) -> Vec<f32> {
+        self.divergences_block(probes, probe_sing, items)
+    }
+}
+
 struct FeatureState<'a> {
     f: &'a FeatureBased,
     cov: Vec<f32>,
@@ -388,6 +429,23 @@ mod tests {
                 sing[v],
                 f.singleton(v)
             );
+        }
+    }
+
+    #[test]
+    fn pair_gains_batch_bitwise_matches_scalar() {
+        let f = instance(30, 8, 7);
+        let probes = vec![0usize, 5, 9];
+        let items: Vec<usize> = (10..30).collect();
+        let pg = f.pair_gains_batch(&probes, &items);
+        for (vi, &v) in items.iter().enumerate() {
+            for (ui, &u) in probes.iter().enumerate() {
+                assert_eq!(
+                    pg[vi * probes.len() + ui],
+                    f.pair_gain(u, v),
+                    "cached-g(u) batch must be bit-identical at (u={u}, v={v})"
+                );
+            }
         }
     }
 

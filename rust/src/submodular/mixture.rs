@@ -1,15 +1,20 @@
 //! Weighted mixtures `f = Σ_k α_k f_k` of submodular components — closed
 //! under non-negative combination; the standard way summarization systems
 //! trade coverage against diversity.
+//!
+//! Components are [`BatchedDivergence`] handles, so a mixture delegates its
+//! batched pair gains to each part's kernel: a mix of feature-based and
+//! facility-location terms keeps both blocked fast paths instead of
+//! falling back to the scalar loop.
 
-use super::{SolState, SubmodularFn};
+use super::{BatchedDivergence, SolState, SubmodularFn};
 
 pub struct Mixture {
-    parts: Vec<(f64, Box<dyn SubmodularFn>)>,
+    parts: Vec<(f64, Box<dyn BatchedDivergence>)>,
 }
 
 impl Mixture {
-    pub fn new(parts: Vec<(f64, Box<dyn SubmodularFn>)>) -> Self {
+    pub fn new(parts: Vec<(f64, Box<dyn BatchedDivergence>)>) -> Self {
         assert!(!parts.is_empty());
         let n = parts[0].1.n();
         for (a, p) in &parts {
@@ -55,6 +60,57 @@ impl SubmodularFn for Mixture {
     }
 }
 
+impl BatchedDivergence for Mixture {
+    fn as_submodular(&self) -> &dyn SubmodularFn {
+        self
+    }
+
+    /// Delegate the batch to each component's kernel and combine. The
+    /// per-pair accumulation order (parts in declaration order, starting
+    /// from 0.0) matches the scalar [`SubmodularFn::pair_gain`] sum, so the
+    /// delegated batch stays bit-identical to the scalar path as long as
+    /// each component's kernel is (the [`batched`](super::batched)
+    /// contract).
+    fn pair_gains_batch(&self, probes: &[usize], items: &[usize]) -> Vec<f64> {
+        let mut acc = vec![0.0f64; items.len() * probes.len()];
+        for (a, p) in &self.parts {
+            for (dst, g) in acc.iter_mut().zip(p.pair_gains_batch(probes, items)) {
+                *dst += a * g;
+            }
+        }
+        acc
+    }
+
+    /// Chunk items so the transient pair-gain matrices stay bounded
+    /// (`block × P` per component) instead of `items × P` — the first SS
+    /// round passes the whole live set through the reference backend.
+    /// Per-item values are unchanged, so this stays bit-identical to the
+    /// unchunked default.
+    fn divergences_batch(
+        &self,
+        probes: &[usize],
+        probe_sing: &[f64],
+        items: &[usize],
+    ) -> Vec<f32> {
+        debug_assert_eq!(probes.len(), probe_sing.len());
+        if probes.is_empty() {
+            return vec![f32::INFINITY; items.len()];
+        }
+        const ITEM_BLOCK: usize = 512;
+        let mut out = Vec::with_capacity(items.len());
+        for chunk in items.chunks(ITEM_BLOCK) {
+            let pg = self.pair_gains_batch(probes, chunk);
+            out.extend(pg.chunks(probes.len()).map(|row| {
+                row.iter()
+                    .zip(probe_sing)
+                    .map(|(&g, &su)| (g - su) as f32)
+                    .fold(f32::INFINITY, f32::min)
+            }));
+        }
+        out
+    }
+}
+
 struct MixState<'a> {
     states: Vec<(f64, Box<dyn SolState + 'a>)>,
     set: Vec<usize>,
@@ -80,23 +136,29 @@ impl SolState for MixState<'_> {
 
 #[cfg(test)]
 mod tests {
-    use super::super::{FeatureBased, Modular};
+    use super::super::{FacilityLocation, FeatureBased, Modular};
     use super::*;
     use crate::submodular::test_support::*;
     use crate::util::rng::Rng;
     use crate::util::vecmath::FeatureMatrix;
 
-    fn instance(seed: u64) -> Mixture {
+    fn feats(n: usize, d: usize, seed: u64) -> FeatureMatrix {
         let mut rng = Rng::new(seed);
-        let n = 12;
-        let mut m = FeatureMatrix::zeros(n, 6);
+        let mut m = FeatureMatrix::zeros(n, d);
         for i in 0..n {
-            for j in 0..6 {
+            for j in 0..d {
                 m.row_mut(i)[j] = rng.f32();
             }
         }
+        m
+    }
+
+    fn instance(seed: u64) -> Mixture {
+        let mut rng = Rng::new(seed);
+        let n = 12;
+        let m = feats(n, 6, seed);
         Mixture::new(vec![
-            (0.7, Box::new(FeatureBased::sqrt(m)) as Box<dyn SubmodularFn>),
+            (0.7, Box::new(FeatureBased::sqrt(m)) as Box<dyn BatchedDivergence>),
             (0.3, Box::new(Modular::new((0..n).map(|_| rng.f64()).collect()))),
         ])
     }
@@ -110,10 +172,28 @@ mod tests {
     }
 
     #[test]
+    fn delegated_batch_bitwise_matches_scalar() {
+        // feature-based + facility-location parts: both blocked kernels in play
+        let n = 40;
+        let m = feats(n, 8, 5);
+        let f = Mixture::new(vec![
+            (0.6, Box::new(FeatureBased::sqrt(m.clone())) as Box<dyn BatchedDivergence>),
+            (0.4, Box::new(FacilityLocation::from_features(&m))),
+        ]);
+        let sing = f.singleton_complements();
+        let probes = vec![1usize, 17, 33];
+        let probe_sing: Vec<f64> = probes.iter().map(|&u| sing[u]).collect();
+        let items: Vec<usize> = (0..n).filter(|v| !probes.contains(v)).collect();
+        let got = f.divergences_batch(&probes, &probe_sing, &items);
+        let want = scalar_reference_divergences(&f, &probes, &probe_sing, &items);
+        assert_eq!(got, want, "delegated mixture batch must match the scalar path bit-for-bit");
+    }
+
+    #[test]
     #[should_panic(expected = "share a ground set")]
     fn mismatched_ground_sets_rejected() {
         let _ = Mixture::new(vec![
-            (1.0, Box::new(Modular::new(vec![1.0; 4])) as Box<dyn SubmodularFn>),
+            (1.0, Box::new(Modular::new(vec![1.0; 4])) as Box<dyn BatchedDivergence>),
             (1.0, Box::new(Modular::new(vec![1.0; 5]))),
         ]);
     }

@@ -17,8 +17,16 @@
 //! (used by the unconstrained bi-directional greedy of Buchbinder et al.,
 //! which §3.4 of the paper applies to the sparsification objective).
 //!
+//! Objectives additionally implement [`BatchedDivergence`] — the batched
+//! form of the edge-weight computation that the SS backends (CPU reference,
+//! sharded coordinator, summarization service) dispatch through. The
+//! default implementation is the scalar `pair_gain` loop; [`FeatureBased`],
+//! [`FacilityLocation`] and [`Mixture`] override it with blocked kernels
+//! (see [`batched`] for the contract).
+//!
 //! [`bidir_state`]: SubmodularFn::bidir_state
 
+pub mod batched;
 mod coverage;
 mod facility_location;
 mod feature_based;
@@ -27,6 +35,7 @@ mod mixture;
 mod modular;
 mod sparsification_objective;
 
+pub use batched::BatchedDivergence;
 pub use coverage::{SaturatedCoverage, SetCover};
 pub use facility_location::FacilityLocation;
 pub use feature_based::{Concave, FeatureBased};
@@ -181,6 +190,27 @@ pub(crate) mod test_support {
             }
             assert_eq!(st.set(), &so_far[..]);
         });
+    }
+
+    /// Scalar reference for divergence batches: the exact float sequence of
+    /// the default [`BatchedDivergence`] path. Blocked-kernel tests assert
+    /// bitwise equality against this.
+    pub fn scalar_reference_divergences(
+        f: &dyn SubmodularFn,
+        probes: &[usize],
+        probe_sing: &[f64],
+        items: &[usize],
+    ) -> Vec<f32> {
+        items
+            .iter()
+            .map(|&v| {
+                probes
+                    .iter()
+                    .zip(probe_sing)
+                    .map(|(&u, &su)| (f.pair_gain(u, v) - su) as f32)
+                    .fold(f32::INFINITY, f32::min)
+            })
+            .collect()
     }
 
     /// pair_gain and singleton_complements must agree with eval.

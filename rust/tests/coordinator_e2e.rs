@@ -1,16 +1,20 @@
 //! Integration: the parallel coordinator must reproduce the
-//! single-threaded SS reference exactly, and the service must survive
+//! single-threaded SS reference exactly — for every objective kind, not
+//! just the paper's feature-based function — and the service must survive
 //! concurrent load with correct routing.
 
 use std::sync::Arc;
 
 use submodular_ss::algorithms::{lazy_greedy, sparsify, CpuBackend, SsParams};
 use submodular_ss::coordinator::{
-    Compute, Metrics, ServiceConfig, ShardedBackend, SummarizationService, SummarizeRequest,
+    Compute, Metrics, Objective, ServiceConfig, ShardedBackend, SummarizationService,
+    SummarizeRequest,
 };
 use submodular_ss::data::{CorpusParams, NewsGenerator};
-use submodular_ss::submodular::FeatureBased;
+use submodular_ss::submodular::{BatchedDivergence, FacilityLocation, FeatureBased, Mixture};
 use submodular_ss::util::pool::ThreadPool;
+use submodular_ss::util::rng::Rng;
+use submodular_ss::util::vecmath::FeatureMatrix;
 
 fn day_feats(n: usize, seed: u64) -> (FeatureBased, usize) {
     let g = NewsGenerator::new(
@@ -19,6 +23,31 @@ fn day_feats(n: usize, seed: u64) -> (FeatureBased, usize) {
     );
     let day = g.day(n, 0, seed);
     (FeatureBased::sqrt(day.feats.clone()), day.k)
+}
+
+fn random_feats(n: usize, d: usize, seed: u64) -> FeatureMatrix {
+    let mut rng = Rng::new(seed);
+    let mut m = FeatureMatrix::zeros(n, d);
+    for i in 0..n {
+        for j in 0..d {
+            m.row_mut(i)[j] = if rng.bool(0.4) { rng.f32() } else { 0.0 };
+        }
+    }
+    m
+}
+
+/// The three production objective kinds over the same feature substrate.
+fn objective_instance(kind: &str, n: usize, seed: u64) -> Arc<dyn BatchedDivergence> {
+    let feats = random_feats(n, 24, seed);
+    match kind {
+        "features" => Arc::new(FeatureBased::sqrt(feats)),
+        "facility" => Arc::new(FacilityLocation::from_features(&feats)),
+        "mixture" => Arc::new(Mixture::new(vec![
+            (0.6, Box::new(FeatureBased::sqrt(feats.clone())) as Box<dyn BatchedDivergence>),
+            (0.4, Box::new(FacilityLocation::from_features(&feats))),
+        ])),
+        other => panic!("unknown objective kind {other}"),
+    }
 }
 
 #[test]
@@ -37,6 +66,93 @@ fn coordinator_ss_bitwise_matches_reference() {
         let got = sparsify(&backend, &params);
         assert_eq!(got.kept, want.kept, "threads={threads}: parallel SS must be deterministic");
         assert_eq!(got.rounds, want.rounds);
+    }
+}
+
+/// Property: `sparsify` honors `DivergenceBackend` determinism across
+/// objective types — same seed ⇒ identical `kept` for `CpuBackend` vs
+/// `ShardedBackend`, for facility location and mixtures, not just the
+/// feature-based objective.
+#[test]
+fn sharded_ss_deterministic_for_every_objective_kind() {
+    for kind in ["features", "facility", "mixture"] {
+        for seed in [3u64, 17, 91] {
+            let f = objective_instance(kind, 320, seed);
+            let reference = CpuBackend::new(f.as_ref());
+            let params = SsParams::default().with_seed(seed);
+            let want = sparsify(&reference, &params);
+            assert!(want.kept.len() < 320, "{kind}/{seed}: SS must prune");
+            for threads in [1usize, 3] {
+                for shards in [1usize, 7] {
+                    let pool = Arc::new(ThreadPool::new(threads, 16));
+                    let metrics = Arc::new(Metrics::new());
+                    let backend = ShardedBackend::new(
+                        Arc::clone(&f),
+                        pool,
+                        Compute::Cpu,
+                        metrics,
+                    )
+                    .unwrap()
+                    .with_shards(shards);
+                    let got = sparsify(&backend, &params);
+                    assert_eq!(
+                        got.kept, want.kept,
+                        "{kind}/seed={seed}/threads={threads}/shards={shards}: \
+                         sharded SS must match the reference bit-for-bit"
+                    );
+                    assert_eq!(got.rounds, want.rounds);
+                }
+            }
+        }
+    }
+}
+
+/// Acceptance: the service summarizes every objective kind end-to-end
+/// (submit → SS via `ShardedBackend` → lazy greedy → response), and the
+/// result is bit-identical to the single-threaded reference pipeline.
+#[test]
+fn service_summarizes_every_objective_kind_matching_reference() {
+    let svc = SummarizationService::start(
+        ServiceConfig { workers: 2, queue_depth: 8, compute_threads: 2 },
+        None,
+    );
+    let (n, k, seed) = (300usize, 10usize, 7u64);
+    for kind in ["features", "facility", "mixture"] {
+        let objective = match kind {
+            "features" => Objective::Features(random_feats(n, 24, seed)),
+            "facility" => {
+                Objective::FacilityLocation(FacilityLocation::from_features(&random_feats(
+                    n, 24, seed,
+                )))
+            }
+            _ => {
+                let feats = random_feats(n, 24, seed);
+                Objective::Mixture(Mixture::new(vec![
+                    (
+                        0.6,
+                        Box::new(FeatureBased::sqrt(feats.clone()))
+                            as Box<dyn BatchedDivergence>,
+                    ),
+                    (0.4, Box::new(FacilityLocation::from_features(&feats))),
+                ]))
+            }
+        };
+        let params = SsParams::default().with_seed(seed);
+        let resp = svc
+            .submit(SummarizeRequest { objective, k, params: params.clone(), use_pjrt: false })
+            .wait()
+            .unwrap_or_else(|e| panic!("{kind}: service request failed: {e}"));
+
+        let reference = objective_instance(kind, n, seed);
+        let backend = CpuBackend::new(reference.as_ref());
+        let ss = sparsify(&backend, &params);
+        let sol = lazy_greedy(reference.as_submodular(), &ss.kept, k);
+        assert_eq!(resp.n, n);
+        assert_eq!(resp.reduced, ss.kept.len(), "{kind}: |V'| mismatch");
+        assert_eq!(resp.ss_rounds, ss.rounds, "{kind}: round count mismatch");
+        assert_eq!(resp.summary, sol.set, "{kind}: summary must match the reference");
+        assert_eq!(resp.value, sol.value, "{kind}: value must match bit-for-bit");
+        assert!(resp.value > 0.0);
     }
 }
 
@@ -60,12 +176,11 @@ fn service_under_concurrent_load() {
             let mut values = Vec::new();
             for i in 0..4 {
                 let resp = svc2
-                    .submit(SummarizeRequest {
-                        feats: day.feats.clone(),
-                        k: day.k,
-                        params: SsParams::default().with_seed(i),
-                        use_pjrt: false,
-                    })
+                    .submit(SummarizeRequest::features(
+                        day.feats.clone(),
+                        day.k,
+                        SsParams::default().with_seed(i),
+                    ))
                     .wait()
                     .unwrap();
                 assert_eq!(resp.n, 200 + 100 * c as usize, "cross-request routing corruption");
