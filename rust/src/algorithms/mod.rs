@@ -42,7 +42,10 @@ pub use bidirectional_greedy::bidirectional_greedy;
 pub use greedy::greedy;
 pub use lazy_greedy::lazy_greedy;
 pub use sieve_streaming::{sieve_streaming, SieveParams};
-pub use ss::{sparsify, sparsify_candidates, ss_then_greedy, CpuBackend, DivergenceBackend, Sampling, SsParams, SsResult};
+pub use ss::{
+    sparsify, sparsify_candidates, sparsify_candidates_reference, ss_then_greedy, CpuBackend,
+    DivergenceBackend, Sampling, SsParams, SsResult,
+};
 pub use stochastic_greedy::stochastic_greedy;
 pub use wei_prune::wei_prune;
 

@@ -19,10 +19,12 @@
 //! fixes `c = 8` (shrink `1/√c = √2/4 ≈ 0.354`, i.e. ~64.6% pruned per
 //! round) and finds `r = 8` works in practice.
 
+use std::sync::Mutex;
+
 use super::Solution;
 use crate::submodular::{BatchedDivergence, SubmodularFn};
 use crate::util::rng::Rng;
-use crate::util::select::partition_smallest;
+use crate::util::select::{partition_smallest, prune_smallest_paired};
 use crate::util::stats::Timer;
 
 /// Probe-sampling strategy (paper §3.4, improvement 2).
@@ -100,9 +102,31 @@ pub trait DivergenceBackend: Send + Sync {
     /// `w_{U,v} = min_{u∈probes} [f(v|u) − f(u|V∖u)]` for each v in `items`.
     fn divergences(&self, probes: &[usize], items: &[usize]) -> Vec<f32>;
 
+    /// Write-into form of [`divergences`]: `out[i]` receives item `i`'s
+    /// divergence, bit-identical to the allocating path. The round loop
+    /// calls this with its reused arena buffer; production backends
+    /// override it to write in place (CPU kernels directly, the sharded
+    /// coordinator via disjoint slices of `out`). The default delegates to
+    /// [`divergences`] so existing backends stay correct unmodified.
+    ///
+    /// [`divergences`]: DivergenceBackend::divergences
+    fn divergences_into(&self, probes: &[usize], items: &[usize], out: &mut [f32]) {
+        debug_assert_eq!(out.len(), items.len());
+        out.copy_from_slice(&self.divergences(probes, items));
+    }
+
     /// Importance weights `f(u) + f(u|V∖u)` (only called under
     /// [`Sampling::Importance`]).
     fn importance_weights(&self, items: &[usize]) -> Vec<f64>;
+
+    /// Write-into form of [`importance_weights`], reusing `out`'s capacity
+    /// across rounds. Default delegates to the allocating path.
+    ///
+    /// [`importance_weights`]: DivergenceBackend::importance_weights
+    fn importance_weights_into(&self, items: &[usize], out: &mut Vec<f64>) {
+        out.clear();
+        out.extend(self.importance_weights(items));
+    }
 }
 
 /// Reference CPU backend over any [`BatchedDivergence`] objective. The
@@ -113,17 +137,22 @@ pub trait DivergenceBackend: Send + Sync {
 pub struct CpuBackend<'a> {
     f: &'a dyn BatchedDivergence,
     sing: Vec<f64>,
+    /// reused probe-singleton gather. Taken out of the mutex for the
+    /// duration of a batch (lock held only for the swap) so concurrent
+    /// callers on a shared backend never serialize on it; capacity is warm
+    /// after round 1 since P is constant within a run.
+    probe_sing: Mutex<Vec<f64>>,
 }
 
 impl<'a> CpuBackend<'a> {
     pub fn new(f: &'a dyn BatchedDivergence) -> Self {
-        Self { sing: f.singleton_complements(), f }
+        Self { sing: f.singleton_complements(), f, probe_sing: Mutex::new(Vec::new()) }
     }
 
     /// Share a precomputed singleton-complement vector.
     pub fn with_singletons(f: &'a dyn BatchedDivergence, sing: Vec<f64>) -> Self {
         assert_eq!(sing.len(), f.n());
-        Self { f, sing }
+        Self { f, sing, probe_sing: Mutex::new(Vec::new()) }
     }
 
     pub fn singletons(&self) -> &[f64] {
@@ -137,12 +166,30 @@ impl DivergenceBackend for CpuBackend<'_> {
     }
 
     fn divergences(&self, probes: &[usize], items: &[usize]) -> Vec<f32> {
-        let probe_sing: Vec<f64> = probes.iter().map(|&u| self.sing[u]).collect();
-        self.f.divergences_batch(probes, &probe_sing, items)
+        let mut out = vec![0.0f32; items.len()];
+        self.divergences_into(probes, items, &mut out);
+        out
+    }
+
+    fn divergences_into(&self, probes: &[usize], items: &[usize], out: &mut [f32]) {
+        debug_assert_eq!(out.len(), items.len());
+        // lock held only for the swap; see ShardedBackend::probe_sing
+        let mut ps = std::mem::take(&mut *self.probe_sing.lock().unwrap());
+        ps.clear();
+        ps.extend(probes.iter().map(|&u| self.sing[u]));
+        self.f.divergences_into(probes, &ps, items, out);
+        *self.probe_sing.lock().unwrap() = ps;
     }
 
     fn importance_weights(&self, items: &[usize]) -> Vec<f64> {
-        items.iter().map(|&u| self.f.singleton(u) + self.sing[u]).collect()
+        let mut out = Vec::with_capacity(items.len());
+        self.importance_weights_into(items, &mut out);
+        out
+    }
+
+    fn importance_weights_into(&self, items: &[usize], out: &mut Vec<f64>) {
+        out.clear();
+        out.extend(items.iter().map(|&u| self.f.singleton(u) + self.sing[u]));
     }
 }
 
@@ -152,9 +199,160 @@ pub fn sparsify(backend: &dyn DivergenceBackend, params: &SsParams) -> SsResult 
     sparsify_candidates(backend, &all, params)
 }
 
+/// Per-invocation arena for the round loop: every buffer the loop touches
+/// each round, allocated once up front and reused until the run ends. With
+/// a backend whose `divergences_into` writes in place (all production
+/// backends) and kernels that keep their tiles in thread-local scratch,
+/// steady-state rounds perform **zero heap allocations** — asserted by the
+/// counting-allocator test in `rust/tests/alloc_steady_state.rs`.
+struct RoundScratch {
+    /// divergence buffer, capacity = n₀ (the round-1 live set is largest)
+    w: Vec<f32>,
+    /// selection workspace for the fused prune's threshold quickselect
+    sel: Vec<f32>,
+    /// this round's probe set U
+    probes: Vec<usize>,
+    /// sampled positions into the live vector (sorted ascending)
+    probe_pos: Vec<usize>,
+    /// importance weights (only grown under [`Sampling::Importance`])
+    iw: Vec<f64>,
+    /// keyed race array for weighted sampling (idem)
+    keyed: Vec<(f64, usize)>,
+}
+
+impl RoundScratch {
+    fn new(n0: usize, probes_per_round: usize) -> Self {
+        Self {
+            w: Vec::with_capacity(n0),
+            sel: Vec::with_capacity(n0),
+            probes: Vec::with_capacity(probes_per_round),
+            probe_pos: Vec::with_capacity(probes_per_round),
+            iw: Vec::new(),
+            keyed: Vec::new(),
+        }
+    }
+}
+
 /// Algorithm 1 restricted to a candidate subset (used by the distributed
 /// composable-coreset example, which runs SS per partition).
+///
+/// This is the arena implementation: one [`RoundScratch`] carries the
+/// divergence buffer, probe scratch and selection workspace across rounds;
+/// divergences are written in place through
+/// [`DivergenceBackend::divergences_into`]; and the prune step is fused —
+/// `(live, w)` pairs are partitioned in place by
+/// [`prune_smallest_paired`] instead of quickselect → bitmap → rebuild.
+/// Pruning decisions are **bit-identical** to
+/// [`sparsify_candidates_reference`] (same RNG draw sequence, same
+/// canonical selection order — see `util::select` for the NaN/tie policy),
+/// which the determinism suites assert across objectives, backends, shard
+/// counts and sampling modes.
 pub fn sparsify_candidates(
+    backend: &dyn DivergenceBackend,
+    candidates: &[usize],
+    params: &SsParams,
+) -> SsResult {
+    assert!(params.c > 1.0, "c must be > 1");
+    assert!(params.r >= 1);
+    let timer = Timer::new();
+    let mut rng = Rng::new(params.seed);
+    let n0 = candidates.len();
+    let mut live: Vec<usize> = candidates.to_vec();
+
+    // r·log₂ n probes per round; the loop stops when |V| falls below it.
+    let probes_per_round =
+        ((params.r as f64) * (n0.max(2) as f64).log2()).ceil().max(1.0) as usize;
+    let keep_frac = 1.0 / params.c.sqrt();
+
+    // |V'| grows by exactly `probes_per_round` per round plus the final
+    // tail; reserve for the expected log_{√c}(n₀/P) rounds (plus slack) so
+    // steady-state rounds never reallocate `kept`. The min() caps the
+    // reservation at n₀ for degenerate parameter choices.
+    let est_rounds = ((n0.max(2) as f64) / (probes_per_round as f64))
+        .max(1.0)
+        .log2()
+        / params.c.sqrt().log2().max(1e-9);
+    let kept_cap = (probes_per_round * (est_rounds.ceil() as usize + 3)).min(n0);
+    let mut kept: Vec<usize> = Vec::with_capacity(kept_cap);
+
+    let mut scratch = RoundScratch::new(n0, probes_per_round);
+    let mut rounds = 0usize;
+    let mut divergence_evals = 0u64;
+    let mut pruned_max_divergence = f64::NEG_INFINITY;
+
+    while live.len() > probes_per_round {
+        rounds += 1;
+        // --- line 5: sample U from V ---
+        match params.sampling {
+            Sampling::Uniform => {
+                rng.sample_indices_into(live.len(), probes_per_round, &mut scratch.probe_pos)
+            }
+            Sampling::Importance => {
+                backend.importance_weights_into(&live, &mut scratch.iw);
+                rng.weighted_indices_into(
+                    &scratch.iw,
+                    probes_per_round,
+                    &mut scratch.probe_pos,
+                    &mut scratch.keyed,
+                );
+            }
+        }
+        // --- lines 6-7: V ← V∖U, V' ← V' ∪ U --- (probe_pos is sorted asc)
+        scratch.probes.clear();
+        for &p in scratch.probe_pos.iter().rev() {
+            scratch.probes.push(live.swap_remove(p));
+        }
+        kept.extend_from_slice(&scratch.probes);
+        if live.is_empty() {
+            break;
+        }
+        // --- lines 8-10: divergences w_{U,v} for v ∈ V, written in place ---
+        scratch.w.resize(live.len(), 0.0); // shrinks only (round 1 is largest)
+        backend.divergences_into(&scratch.probes, &live, &mut scratch.w);
+        divergence_evals += (scratch.probes.len() * live.len()) as u64;
+        // --- line 11: drop the (1 − 1/√c)|V| smallest, fused in place ---
+        let keep_count = ((live.len() as f64) * keep_frac).floor() as usize;
+        let mut drop_count = live.len() - keep_count;
+        // respect the |V'| floor (Theorem 1 needs |V*| ≥ k)
+        let total_after = kept.len() + live.len();
+        if total_after.saturating_sub(drop_count) < params.min_keep {
+            drop_count = total_after.saturating_sub(params.min_keep);
+        }
+        if drop_count == 0 {
+            break; // no further progress possible (floor hit or c ≈ 1)
+        }
+        // the returned value is the reference loop's exact ε̂ fold over the
+        // dropped keys (NaN-skipping f64::max; NEG_INFINITY when all NaN)
+        let round_max =
+            prune_smallest_paired(&mut scratch.w, &mut live, drop_count, &mut scratch.sel);
+        pruned_max_divergence = pruned_max_divergence.max(round_max);
+    }
+    // --- line 13: V' ← V ∪ V' ---
+    kept.extend_from_slice(&live);
+    kept.sort_unstable();
+    SsResult {
+        kept,
+        rounds,
+        probes_per_round,
+        divergence_evals,
+        pruned_max_divergence: if pruned_max_divergence.is_finite() {
+            pruned_max_divergence
+        } else {
+            0.0
+        },
+        wall_s: timer.elapsed_s(),
+    }
+}
+
+/// Fresh-allocation reference for the arena round loop, kept compiled-in
+/// as (a) the baseline leg of the `perf_ss_round` bench and (b) the
+/// bit-identity oracle for the property/e2e determinism suites: identical
+/// RNG draw sequence, identical canonical prune policy
+/// (`partition_smallest`'s `(total_cmp, index)` order), implemented with
+/// the allocating primitives — fresh `Vec`s for probes/divergences, index
+/// quickselect, bool bitmap, survivor rebuild. `sparsify_candidates` must
+/// match it exactly, forever.
+pub fn sparsify_candidates_reference(
     backend: &dyn DivergenceBackend,
     candidates: &[usize],
     params: &SsParams,
@@ -167,7 +365,6 @@ pub fn sparsify_candidates(
     let mut live: Vec<usize> = candidates.to_vec();
     let mut kept: Vec<usize> = Vec::new();
 
-    // r·log₂ n probes per round; the loop stops when |V| falls below it.
     let probes_per_round =
         ((params.r as f64) * (n0.max(2) as f64).log2()).ceil().max(1.0) as usize;
     let keep_frac = 1.0 / params.c.sqrt();
@@ -178,7 +375,6 @@ pub fn sparsify_candidates(
 
     while live.len() > probes_per_round {
         rounds += 1;
-        // --- line 5: sample U from V ---
         let probe_pos: Vec<usize> = match params.sampling {
             Sampling::Uniform => rng.sample_indices(live.len(), probes_per_round),
             Sampling::Importance => {
@@ -186,7 +382,6 @@ pub fn sparsify_candidates(
                 rng.weighted_indices(&w, probes_per_round)
             }
         };
-        // --- lines 6-7: V ← V∖U, V' ← V' ∪ U --- (probe_pos is sorted asc)
         let mut probes = Vec::with_capacity(probe_pos.len());
         for &p in probe_pos.iter().rev() {
             probes.push(live.swap_remove(p));
@@ -195,19 +390,16 @@ pub fn sparsify_candidates(
         if live.is_empty() {
             break;
         }
-        // --- lines 8-10: divergences w_{U,v} for v ∈ V ---
         let w = backend.divergences(&probes, &live);
         divergence_evals += (probes.len() * live.len()) as u64;
-        // --- line 11: drop the (1 − 1/√c)|V| smallest ---
         let keep_count = ((live.len() as f64) * keep_frac).floor() as usize;
         let mut drop_count = live.len() - keep_count;
-        // respect the |V'| floor (Theorem 1 needs |V*| ≥ k)
         let total_after = kept.len() + live.len();
         if total_after.saturating_sub(drop_count) < params.min_keep {
             drop_count = total_after.saturating_sub(params.min_keep);
         }
         if drop_count == 0 {
-            break; // no further progress possible (floor hit or c ≈ 1)
+            break;
         }
         let drop_pos = partition_smallest(&w, drop_count);
         let mut dropped = vec![false; live.len()];
@@ -215,7 +407,9 @@ pub fn sparsify_candidates(
             dropped[p] = true;
             pruned_max_divergence = pruned_max_divergence.max(w[p] as f64);
         }
-        let mut next = Vec::with_capacity(keep_count);
+        // sized with the post-floor survivor count (the pre-fix code used
+        // the pre-`min_keep` keep_count and could under-reserve)
+        let mut next = Vec::with_capacity(live.len() - drop_count);
         for (i, &v) in live.iter().enumerate() {
             if !dropped[i] {
                 next.push(v);
@@ -223,7 +417,6 @@ pub fn sparsify_candidates(
         }
         live = next;
     }
-    // --- line 13: V' ← V ∪ V' ---
     kept.extend_from_slice(&live);
     kept.sort_unstable();
     SsResult {
@@ -420,6 +613,66 @@ mod tests {
         let cands: Vec<usize> = (0..200).step_by(2).collect();
         let res = sparsify_candidates(&b, &cands, &SsParams::default());
         assert!(res.kept.iter().all(|v| cands.contains(v)));
+    }
+
+    #[test]
+    fn arena_loop_bit_identical_to_reference() {
+        // the tentpole invariant: the zero-allocation arena path and the
+        // fresh-allocation reference agree exactly — kept set, round
+        // count, eval accounting, and the measured ε̂ — across sampling
+        // modes and min_keep floors
+        let f = redundant_instance(900, 14, 10, 21);
+        let b = CpuBackend::new(&f);
+        for sampling in [Sampling::Uniform, Sampling::Importance] {
+            for min_keep in [0usize, 120, 400] {
+                for seed in [0u64, 5, 99] {
+                    let p = SsParams {
+                        sampling,
+                        min_keep,
+                        ..SsParams::default().with_seed(seed)
+                    };
+                    let want = sparsify_candidates_reference(&b, &(0..900).collect::<Vec<_>>(), &p);
+                    let got = sparsify(&b, &p);
+                    assert_eq!(
+                        got.kept, want.kept,
+                        "{sampling:?}/min_keep={min_keep}/seed={seed}: kept sets diverged"
+                    );
+                    assert_eq!(got.rounds, want.rounds);
+                    assert_eq!(got.divergence_evals, want.divergence_evals);
+                    assert_eq!(
+                        got.pruned_max_divergence, want.pruned_max_divergence,
+                        "{sampling:?}/min_keep={min_keep}/seed={seed}: ε̂ diverged"
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn arena_loop_handles_tied_divergences() {
+        // exact duplicate rows ⇒ exact divergence ties: the canonical
+        // (key, position) policy must keep arena == reference anyway
+        let mut m = FeatureMatrix::zeros(240, 6);
+        let mut rng = URng::new(31);
+        for i in 0..40 {
+            for j in 0..6 {
+                m.row_mut(i)[j] = rng.f32();
+            }
+        }
+        for i in 40..240 {
+            for j in 0..6 {
+                let v = m.row(i % 40)[j]; // 6 exact copies of each base row
+                m.row_mut(i)[j] = v;
+            }
+        }
+        let f = FeatureBased::sqrt(m);
+        let b = CpuBackend::new(&f);
+        for seed in 0..6u64 {
+            let p = SsParams::default().with_seed(seed);
+            let want = sparsify_candidates_reference(&b, &(0..240).collect::<Vec<_>>(), &p);
+            let got = sparsify(&b, &p);
+            assert_eq!(got.kept, want.kept, "seed={seed}: tie-breaking diverged");
+        }
     }
 
     #[test]

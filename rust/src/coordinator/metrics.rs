@@ -17,6 +17,10 @@ pub struct Counters {
     /// — the same unit `SsResult::divergence_evals` reports, so service
     /// metrics and algorithm accounting agree.
     pub divergence_evals: AtomicU64,
+    /// Importance-weight evaluations (one `f(u) + f(u|V∖u)` per live item
+    /// per importance-sampled round) — a separate counter because the unit
+    /// is per-item, not pairwise.
+    pub importance_evals: AtomicU64,
     pub tiles_dispatched: AtomicU64,
 }
 
@@ -64,6 +68,7 @@ impl Metrics {
             ("items_in", g(&self.counters.items_in)),
             ("items_pruned", g(&self.counters.items_pruned)),
             ("divergence_evals", g(&self.counters.divergence_evals)),
+            ("importance_evals", g(&self.counters.importance_evals)),
             ("tiles_dispatched", g(&self.counters.tiles_dispatched)),
             ("request_latency", hist(&self.request_latency)),
             ("queue_wait", hist(&self.queue_wait)),

@@ -19,7 +19,7 @@
 //!
 //! [`FeatureBased`]: crate::submodular::FeatureBased
 
-use std::sync::Arc;
+use std::sync::{Arc, Mutex};
 
 use crate::algorithms::DivergenceBackend;
 use crate::runtime::TiledRuntime;
@@ -47,6 +47,11 @@ pub struct ShardedBackend {
     compute: Compute,
     shards: usize,
     metrics: Arc<Metrics>,
+    /// reused probe-singleton gather. The buffer is *taken out* of the
+    /// mutex for the duration of a batch (lock held only for the swap), so
+    /// concurrent callers on a shared backend never serialize on it; warm
+    /// capacity after round 1 since P is constant within a run
+    probe_sing: Mutex<Vec<f64>>,
 }
 
 impl ShardedBackend {
@@ -57,16 +62,37 @@ impl ShardedBackend {
         metrics: Arc<Metrics>,
     ) -> anyhow::Result<Self> {
         // singleton complements once, through the same compute path (PJRT
-        // only has the feature-based singleton artifact)
+        // only has the feature-based singleton artifact). On the CPU route
+        // the precompute — the last serial per-request scan — shards over
+        // the pool when the objective is per-element decomposable;
+        // whole-vector objectives (facility location's top-2 scan) keep
+        // the serial form, which sharding would only multiply.
+        let shards = pool.threads() * 2;
         let sing = match (&compute, f.as_feature_based()) {
             (Compute::Pjrt(rt), Some(fb)) => {
                 let items: Vec<usize> = (0..f.n()).collect();
                 rt.singleton_complements(fb.feats(), fb.total_mass(), &items)?
             }
+            _ if f.singleton_complements_decomposable() => {
+                let items: Vec<usize> = (0..f.n()).collect();
+                let mut sing = vec![0.0f64; f.n()];
+                let fref = f.as_ref();
+                pool.parallel_ranges_into(&mut sing[..], shards, |lo, hi, chunk| {
+                    fref.singleton_complements_into(&items[lo..hi], chunk);
+                });
+                sing
+            }
             _ => f.singleton_complements(),
         };
-        let shards = pool.threads() * 2;
-        Ok(Self { f, sing: Arc::new(sing), pool, compute, shards, metrics })
+        Ok(Self {
+            f,
+            sing: Arc::new(sing),
+            pool,
+            compute,
+            shards,
+            metrics,
+            probe_sing: Mutex::new(Vec::new()),
+        })
     }
 
     pub fn singletons(&self) -> &[f64] {
@@ -85,32 +111,66 @@ impl DivergenceBackend for ShardedBackend {
     }
 
     fn divergences(&self, probes: &[usize], items: &[usize]) -> Vec<f32> {
-        let n_probes = probes.len();
-        let probes: Arc<Vec<usize>> = Arc::new(probes.to_vec());
-        let items: Arc<Vec<usize>> = Arc::new(items.to_vec());
-        let probe_sing: Arc<Vec<f64>> =
-            Arc::new(probes.iter().map(|&u| self.sing[u]).collect());
-        let f = Arc::clone(&self.f);
-        let compute = self.compute.clone();
-        let chunks = self.pool.parallel_ranges(items.len(), self.shards, move |lo, hi| {
-            let chunk = &items[lo..hi];
-            match (&compute, f.as_feature_based()) {
-                (Compute::Pjrt(rt), Some(fb)) => rt
-                    .divergences(fb.feats(), &probes, &probe_sing, chunk)
-                    .expect("pjrt divergences"),
-                _ => f.divergences_batch(&probes, &probe_sing, chunk),
-            }
-        });
-        let out: Vec<f32> = chunks.into_iter().flatten().collect();
-        // pairwise w_{uv} evaluations — the same unit `sparsify_candidates`
-        // accounts in `SsResult::divergence_evals`
-        self.metrics
-            .add(&self.metrics.counters.divergence_evals, (n_probes * out.len()) as u64);
+        let mut out = vec![0.0f32; items.len()];
+        self.divergences_into(probes, items, &mut out);
         out
     }
 
+    /// The round hot path: shards write their divergences directly into
+    /// disjoint slices of the caller's buffer via
+    /// [`ThreadPool::parallel_ranges_into`] — no per-shard `Vec`, no
+    /// flatten, and the borrow-safe scope means `probes`/`items` are
+    /// shared by reference instead of cloned into `Arc<Vec>`s each round.
+    fn divergences_into(&self, probes: &[usize], items: &[usize], out: &mut [f32]) {
+        debug_assert_eq!(out.len(), items.len());
+        // take the scratch out of the mutex so the lock is held only for
+        // the swap, not across the computation — a concurrent caller on a
+        // shared backend gets a fresh (cold) buffer instead of serializing
+        let mut ps = std::mem::take(&mut *self.probe_sing.lock().unwrap());
+        ps.clear();
+        ps.extend(probes.iter().map(|&u| self.sing[u]));
+        let probe_sing: &[f64] = &ps;
+        let f = self.f.as_ref();
+        let compute = &self.compute;
+        self.pool.parallel_ranges_into(out, self.shards, move |lo, hi, chunk_out| {
+            let chunk = &items[lo..hi];
+            match (compute, f.as_feature_based()) {
+                (Compute::Pjrt(rt), Some(fb)) => rt
+                    .divergences_into(fb.feats(), probes, probe_sing, chunk, chunk_out)
+                    .expect("pjrt divergences"),
+                _ => f.divergences_into(probes, probe_sing, chunk, chunk_out),
+            }
+        });
+        *self.probe_sing.lock().unwrap() = ps;
+        // pairwise w_{uv} evaluations — the same unit `sparsify_candidates`
+        // accounts in `SsResult::divergence_evals`
+        self.metrics
+            .add(&self.metrics.counters.divergence_evals, (probes.len() * items.len()) as u64);
+    }
+
     fn importance_weights(&self, items: &[usize]) -> Vec<f64> {
-        items.iter().map(|&u| self.f.singleton(u) + self.sing[u]).collect()
+        let mut out = Vec::with_capacity(items.len());
+        self.importance_weights_into(items, &mut out);
+        out
+    }
+
+    /// Importance weights `f(u) + f(u|V∖u)` sharded over the pool (they
+    /// were the last serial per-round scan on this backend), written into
+    /// disjoint slices of `out` and metered like the divergence batches.
+    fn importance_weights_into(&self, items: &[usize], out: &mut Vec<f64>) {
+        out.clear();
+        out.resize(items.len(), 0.0);
+        let f = self.f.as_ref();
+        let sing: &[f64] = &self.sing;
+        self.pool.parallel_ranges_into(&mut out[..], self.shards, move |lo, hi, chunk_out| {
+            for (slot, &u) in chunk_out.iter_mut().zip(&items[lo..hi]) {
+                *slot = f.singleton(u) + sing[u];
+            }
+        });
+        // one singleton evaluation per item — tracked on its own counter
+        // (the unit differs from the pairwise divergence_evals)
+        self.metrics
+            .add(&self.metrics.counters.importance_evals, items.len() as u64);
     }
 }
 
@@ -207,6 +267,79 @@ mod tests {
         assert_eq!(
             metrics.counters.divergence_evals.load(std::sync::atomic::Ordering::Relaxed),
             291
+        );
+    }
+
+    #[test]
+    fn write_into_matches_allocating_path_and_reference() {
+        let f = instance(300, 12, 7);
+        let pool = Arc::new(ThreadPool::new(4, 16));
+        let sharded =
+            ShardedBackend::new(Arc::clone(&f), pool, Compute::Cpu, Arc::new(Metrics::new()))
+                .unwrap()
+                .with_shards(9);
+        let reference = CpuBackend::new(f.as_ref());
+        let mut rng = Rng::new(12);
+        let mut out = Vec::new();
+        for _ in 0..4 {
+            let probes = rng.sample_indices(300, 30);
+            let items: Vec<usize> = (0..300).filter(|v| !probes.contains(v)).collect();
+            out.clear();
+            out.resize(items.len(), f32::NAN); // dirty buffer must be overwritten
+            sharded.divergences_into(&probes, &items, &mut out);
+            assert_eq!(out, reference.divergences(&probes, &items));
+            assert_eq!(out, sharded.divergences(&probes, &items));
+        }
+    }
+
+    #[test]
+    fn sharded_singleton_precompute_bitwise_matches_serial() {
+        use crate::submodular::{BatchedDivergence, Concave, Mixture};
+        let m = feats(150, 10, 21);
+        let fb: Arc<dyn BatchedDivergence> = Arc::new(FeatureBased::sqrt(m.clone()));
+        // decomposable mixture → sharded; facility location → serial fallback
+        let mix: Arc<dyn BatchedDivergence> = Arc::new(Mixture::new(vec![
+            (0.6, Box::new(FeatureBased::sqrt(m.clone())) as Box<dyn BatchedDivergence>),
+            (0.4, Box::new(FeatureBased::new(m.clone(), Concave::Log1p))),
+        ]));
+        let fl: Arc<dyn BatchedDivergence> = Arc::new(FacilityLocation::from_features(&m));
+        for f in [fb, mix, fl] {
+            let want = f.singleton_complements();
+            let pool = Arc::new(ThreadPool::new(3, 16));
+            let b = ShardedBackend::new(Arc::clone(&f), pool, Compute::Cpu, Arc::new(Metrics::new()))
+                .unwrap();
+            assert_eq!(
+                b.singletons(),
+                &want[..],
+                "sharded singleton precompute must be bit-identical to serial"
+            );
+        }
+    }
+
+    #[test]
+    fn importance_weights_sharded_match_reference_and_are_metered() {
+        let f = instance(220, 10, 9);
+        let pool = Arc::new(ThreadPool::new(3, 16));
+        let metrics = Arc::new(Metrics::new());
+        let sharded = ShardedBackend::new(
+            Arc::clone(&f),
+            pool,
+            Compute::Cpu,
+            Arc::clone(&metrics),
+        )
+        .unwrap()
+        .with_shards(6);
+        let reference = CpuBackend::new(f.as_ref());
+        let items: Vec<usize> = (0..220).step_by(3).collect();
+        let want = reference.importance_weights(&items);
+        assert_eq!(sharded.importance_weights(&items), want, "sharded weights must match");
+        let mut out = vec![f64::NAN; 5]; // wrong size + dirty: must be reset
+        sharded.importance_weights_into(&items, &mut out);
+        assert_eq!(out, want);
+        // two calls × one singleton eval per item
+        assert_eq!(
+            metrics.counters.importance_evals.load(std::sync::atomic::Ordering::Relaxed),
+            2 * items.len() as u64
         );
     }
 }

@@ -36,6 +36,7 @@ pub struct TiledRuntime {
 struct Scratch {
     v_feat: Vec<f32>,
     u_feat: Vec<f32>,
+    u_sing: Vec<f32>,
 }
 
 impl TiledRuntime {
@@ -69,19 +70,41 @@ impl TiledRuntime {
         sing: &[f64],
         items: &[usize],
     ) -> Result<Vec<f32>> {
+        let mut result = vec![0.0f32; items.len()];
+        self.divergences_into(feats, probes, sing, items, &mut result)?;
+        Ok(result)
+    }
+
+    /// Write-into form of [`Self::divergences`]: `out[i]` receives item
+    /// `i`'s divergence (min-folded across probe tiles), so sharded
+    /// callers hand disjoint slices of one round buffer straight to the
+    /// PJRT route. The probe-singleton tile joins the padded-feature
+    /// buffers in the reusable scratch; the remaining per-call clones are
+    /// forced by [`PjrtHandle`]'s owned-`Vec` ABI (see ROADMAP open
+    /// items).
+    pub fn divergences_into(
+        &self,
+        feats: &FeatureMatrix,
+        probes: &[usize],
+        sing: &[f64],
+        items: &[usize],
+        out: &mut [f32],
+    ) -> Result<()> {
         let (p_tile, b_tile, d_max) = self.geometry();
         ensure!(feats.d <= d_max, "feature dim {} exceeds artifact D={d_max}", feats.d);
         ensure!(probes.len() == sing.len(), "probes/sing length mismatch");
-        let mut result = vec![f32::INFINITY; items.len()];
+        ensure!(out.len() == items.len(), "out/items length mismatch");
+        out.fill(f32::INFINITY);
 
         for (pchunk, schunk) in probes.chunks(p_tile).zip(sing.chunks(p_tile)) {
             // build padded probe tile
-            let mut u_feat = {
+            let (mut u_feat, mut u_sing) = {
                 let mut s = self.scratch.lock().unwrap();
-                std::mem::take(&mut s.u_feat)
+                (std::mem::take(&mut s.u_feat), std::mem::take(&mut s.u_sing))
             };
             u_feat.resize(p_tile * d_max, 0.0);
-            let mut u_sing = vec![PAD_SING; p_tile];
+            u_sing.clear();
+            u_sing.resize(p_tile, PAD_SING);
             for (slot, (&u, &su)) in pchunk.iter().zip(schunk).enumerate() {
                 self.pad_dim(feats.row(u), feats.d, &mut u_feat[slot * d_max..(slot + 1) * d_max]);
                 u_sing[slot] = su as f32;
@@ -114,7 +137,7 @@ impl TiledRuntime {
                 let base = block_i * b_tile;
                 for (slot, _) in iblock.iter().enumerate() {
                     let w_val = w[slot];
-                    let r = &mut result[base + slot];
+                    let r = &mut out[base + slot];
                     if w_val < *r {
                         *r = w_val;
                     }
@@ -125,8 +148,9 @@ impl TiledRuntime {
             }
             let mut s = self.scratch.lock().unwrap();
             s.u_feat = u_feat;
+            s.u_sing = u_sing;
         }
-        Ok(result)
+        Ok(())
     }
 
     /// Batched marginal gains `f(v|S)` given coverage `cov` (length d).

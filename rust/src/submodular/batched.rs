@@ -64,6 +64,18 @@ pub trait BatchedDivergence: SubmodularFn {
         out
     }
 
+    /// Write-into batch pair gains: same layout and bit-identical values as
+    /// [`pair_gains_batch`], written into `out` (length `items × probes`).
+    /// The default allocates through `pair_gains_batch`; blocked kernels
+    /// override with in-place writes so [`Mixture`](super::Mixture)'s
+    /// delegation loop stays allocation-free in the steady state.
+    ///
+    /// [`pair_gains_batch`]: BatchedDivergence::pair_gains_batch
+    fn pair_gains_into(&self, probes: &[usize], items: &[usize], out: &mut [f64]) {
+        debug_assert_eq!(out.len(), items.len() * probes.len());
+        out.copy_from_slice(&self.pair_gains_batch(probes, items));
+    }
+
     /// Divergence batch `w_{U,v} = min_{u} [f(v|u) − sing_u]` for each `v`
     /// in `items`, with `probe_sing[i] = f(u_i|V∖u_i)` aligned to `probes`.
     /// The default routes through [`pair_gains_batch`]; fused kernels
@@ -89,6 +101,31 @@ pub trait BatchedDivergence: SubmodularFn {
                     .fold(f32::INFINITY, f32::min)
             })
             .collect()
+    }
+
+    /// Write-into divergence batch — the SS round loop's hot entry point:
+    /// `out[i]` receives the divergence of `items[i]`, bit-identical to
+    /// [`divergences_batch`]. Backends hand shards **disjoint slices of one
+    /// preallocated round buffer**, so with the blocked overrides
+    /// ([`FeatureBased`], [`FacilityLocation`], [`Mixture`] — all of which
+    /// keep their internal tiles in thread-local scratch) the per-round
+    /// cost converges to kernel FLOPs: no allocation, no gather copy. The
+    /// default delegates to the allocating path so scalar objectives stay
+    /// correct without an override.
+    ///
+    /// [`divergences_batch`]: BatchedDivergence::divergences_batch
+    /// [`FeatureBased`]: super::FeatureBased
+    /// [`FacilityLocation`]: super::FacilityLocation
+    /// [`Mixture`]: super::Mixture
+    fn divergences_into(
+        &self,
+        probes: &[usize],
+        probe_sing: &[f64],
+        items: &[usize],
+        out: &mut [f32],
+    ) {
+        debug_assert_eq!(out.len(), items.len());
+        out.copy_from_slice(&self.divergences_batch(probes, probe_sing, items));
     }
 }
 
@@ -144,6 +181,28 @@ mod tests {
         let f = Modular::new(vec![1.0; 8]);
         let w = f.divergences_batch(&[], &[], &[0, 1, 2]);
         assert_eq!(w, vec![f32::INFINITY; 3]);
+        let mut out = vec![0.0f32; 3];
+        f.divergences_into(&[], &[], &[0, 1, 2], &mut out);
+        assert_eq!(out, vec![f32::INFINITY; 3]);
+    }
+
+    #[test]
+    fn default_into_paths_match_allocating_paths() {
+        // scalar objectives ride the defaults; dirty output buffers must be
+        // fully overwritten
+        let f = graph_cut_instance(30, 9);
+        let sing = f.singleton_complements();
+        let probes = vec![1usize, 8, 22];
+        let probe_sing: Vec<f64> = probes.iter().map(|&u| sing[u]).collect();
+        let items: Vec<usize> = (0..30).filter(|v| !probes.contains(v)).collect();
+        let want = f.divergences_batch(&probes, &probe_sing, &items);
+        let mut out = vec![f32::NAN; items.len()];
+        f.divergences_into(&probes, &probe_sing, &items, &mut out);
+        assert_eq!(out, want);
+        let want_pg = f.pair_gains_batch(&probes, &items);
+        let mut out_pg = vec![f64::NAN; items.len() * probes.len()];
+        f.pair_gains_into(&probes, &items, &mut out_pg);
+        assert_eq!(out_pg, want_pg);
     }
 
     #[test]

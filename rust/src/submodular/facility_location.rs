@@ -10,6 +10,8 @@
 //! for exactly this reason, and so do ours — facility location exists for
 //! the video examples and for objective-diversity in tests/ablations.
 
+use std::cell::RefCell;
+
 use super::{BatchedDivergence, SolState, SubmodularFn};
 use crate::util::vecmath::{cosine, FeatureMatrix};
 
@@ -17,6 +19,21 @@ use crate::util::vecmath::{cosine, FeatureMatrix};
 /// accumulator (≲ 64·128·8B = 64 KiB at the largest realistic probe count)
 /// stays L2-resident while similarity rows stream through once per block.
 const ITEM_BLOCK: usize = 64;
+
+thread_local! {
+    /// Per-thread kernel scratch (accumulator tile + probe gather row),
+    /// reused across rounds and shards so the write-into divergence path
+    /// never touches the allocator in the steady state.
+    static FL_SCRATCH: RefCell<FlScratch> = RefCell::new(FlScratch::default());
+}
+
+#[derive(Default)]
+struct FlScratch {
+    /// `ITEM_BLOCK × P` pair-gain accumulator tile
+    acc: Vec<f64>,
+    /// per-row probe-entry gather (length P)
+    pu: Vec<f32>,
+}
 
 pub struct FacilityLocation {
     n: usize,
@@ -103,19 +120,31 @@ impl FacilityLocation {
     /// as `pair_gain` — so the result is bit-identical to the scalar path
     /// and sharded pruning decisions match the reference exactly.
     pub fn pair_gains_block(&self, probes: &[usize], items: &[usize]) -> Vec<f64> {
-        let p = probes.len();
-        let mut out = vec![0.0f64; items.len() * p];
-        let mut pu = vec![0.0f32; p];
-        for (block, vblock) in items.chunks(ITEM_BLOCK).enumerate() {
-            let base = block * ITEM_BLOCK * p;
-            self.accumulate_pair_gain_tile(
-                probes,
-                vblock,
-                &mut out[base..base + vblock.len() * p],
-                &mut pu,
-            );
-        }
+        let mut out = vec![0.0f64; items.len() * probes.len()];
+        self.pair_gains_into_block(probes, items, &mut out);
         out
+    }
+
+    /// Write-into form of [`Self::pair_gains_block`]: same tiles, same
+    /// bits, with the probe gather row in thread-local scratch and the
+    /// (possibly dirty) output zeroed before accumulation.
+    pub fn pair_gains_into_block(&self, probes: &[usize], items: &[usize], out: &mut [f64]) {
+        let p = probes.len();
+        debug_assert_eq!(out.len(), items.len() * p);
+        out.fill(0.0);
+        FL_SCRATCH.with(|cell| {
+            let s = &mut *cell.borrow_mut();
+            s.pu.resize(p, 0.0);
+            for (block, vblock) in items.chunks(ITEM_BLOCK).enumerate() {
+                let base = block * ITEM_BLOCK * p;
+                self.accumulate_pair_gain_tile(
+                    probes,
+                    vblock,
+                    &mut out[base..base + vblock.len() * p],
+                    &mut s.pu,
+                );
+            }
+        });
     }
 
     /// Fused form of [`Self::pair_gains_block`]: folds the per-item min
@@ -128,28 +157,47 @@ impl FacilityLocation {
         probe_sing: &[f64],
         items: &[usize],
     ) -> Vec<f32> {
+        let mut out = vec![0.0f32; items.len()];
+        self.divergences_into_block(probes, probe_sing, items, &mut out);
+        out
+    }
+
+    /// Write-into form of [`Self::divergences_block`] — the zero-allocation
+    /// hot path: the `ITEM_BLOCK × P` accumulator tile and the probe
+    /// gather row live in thread-local scratch, warm after the first SS
+    /// round, so steady-state calls are pure kernel work. Bit-identical to
+    /// the allocating form (same tiles, same fold order).
+    pub fn divergences_into_block(
+        &self,
+        probes: &[usize],
+        probe_sing: &[f64],
+        items: &[usize],
+        out: &mut [f32],
+    ) {
         debug_assert_eq!(probes.len(), probe_sing.len());
+        debug_assert_eq!(out.len(), items.len());
         if probes.is_empty() {
-            return vec![f32::INFINITY; items.len()];
+            out.fill(f32::INFINITY);
+            return;
         }
         let p = probes.len();
-        let mut out = Vec::with_capacity(items.len());
-        let mut acc = vec![0.0f64; ITEM_BLOCK * p];
-        let mut pu = vec![0.0f32; p];
-        for vblock in items.chunks(ITEM_BLOCK) {
-            let tile = &mut acc[..vblock.len() * p];
-            tile.fill(0.0);
-            self.accumulate_pair_gain_tile(probes, vblock, tile, &mut pu);
-            for bi in 0..vblock.len() {
-                let w = acc[bi * p..(bi + 1) * p]
-                    .iter()
-                    .zip(probe_sing)
-                    .map(|(&g, &su)| (g - su) as f32)
-                    .fold(f32::INFINITY, f32::min);
-                out.push(w);
+        FL_SCRATCH.with(|cell| {
+            let s = &mut *cell.borrow_mut();
+            s.acc.resize(ITEM_BLOCK * p, 0.0);
+            s.pu.resize(p, 0.0);
+            for (vblock, out_block) in items.chunks(ITEM_BLOCK).zip(out.chunks_mut(ITEM_BLOCK)) {
+                let tile = &mut s.acc[..vblock.len() * p];
+                tile.fill(0.0);
+                self.accumulate_pair_gain_tile(probes, vblock, tile, &mut s.pu);
+                for (bi, slot) in out_block.iter_mut().enumerate() {
+                    *slot = s.acc[bi * p..(bi + 1) * p]
+                        .iter()
+                        .zip(probe_sing)
+                        .map(|(&g, &su)| (g - su) as f32)
+                        .fold(f32::INFINITY, f32::min);
+                }
             }
-        }
-        out
+        });
     }
 }
 
@@ -162,6 +210,10 @@ impl BatchedDivergence for FacilityLocation {
         self.pair_gains_block(probes, items)
     }
 
+    fn pair_gains_into(&self, probes: &[usize], items: &[usize], out: &mut [f64]) {
+        self.pair_gains_into_block(probes, items, out);
+    }
+
     fn divergences_batch(
         &self,
         probes: &[usize],
@@ -169,6 +221,16 @@ impl BatchedDivergence for FacilityLocation {
         items: &[usize],
     ) -> Vec<f32> {
         self.divergences_block(probes, probe_sing, items)
+    }
+
+    fn divergences_into(
+        &self,
+        probes: &[usize],
+        probe_sing: &[f64],
+        items: &[usize],
+        out: &mut [f32],
+    ) {
+        self.divergences_into_block(probes, probe_sing, items, out);
     }
 }
 
@@ -351,6 +413,30 @@ mod tests {
         let got = f.divergences_block(&probes, &probe_sing, &items);
         let want = scalar_reference_divergences(&f, &probes, &probe_sing, &items);
         assert_eq!(got, want, "fused kernel must equal the scalar divergence path bit-for-bit");
+    }
+
+    #[test]
+    fn write_into_kernels_bitwise_match_allocating_kernels() {
+        // 150 items spans multiple ITEM_BLOCK chunks incl. a ragged tail
+        let f = instance(150, 8);
+        let sing = f.singleton_complements();
+        let probes = vec![3usize, 149, 77];
+        let probe_sing: Vec<f64> = probes.iter().map(|&u| sing[u]).collect();
+        let items: Vec<usize> = (0..150).filter(|v| !probes.contains(v)).collect();
+        let want = scalar_reference_divergences(&f, &probes, &probe_sing, &items);
+        let mut out = vec![f32::NAN; items.len()];
+        for _ in 0..2 {
+            // twice: thread-local scratch reuse must not leak state
+            f.divergences_into_block(&probes, &probe_sing, &items, &mut out);
+            assert_eq!(out, want);
+        }
+        let mut out_pg = vec![f64::NAN; items.len() * probes.len()];
+        f.pair_gains_into_block(&probes, &items, &mut out_pg);
+        for (vi, &v) in items.iter().enumerate() {
+            for (ui, &u) in probes.iter().enumerate() {
+                assert_eq!(out_pg[vi * probes.len() + ui], f.pair_gain(u, v));
+            }
+        }
     }
 
     #[test]

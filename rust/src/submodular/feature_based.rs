@@ -8,8 +8,34 @@
 //! here are the bit-level reference the runtime parity tests compare
 //! against.
 
+use std::cell::RefCell;
+
 use super::{BatchedDivergence, BidirState, SolState, SubmodularFn};
 use crate::util::vecmath::{add_into, sub_clamp_into, FeatureMatrix};
+
+thread_local! {
+    /// Per-thread kernel scratch, reused across rounds *and* across
+    /// instances: the flattened `g(u)` probe rows (f32 for the divergence
+    /// kernel, f64 for the pair-gain batch) and the CSR-style per-item
+    /// nonzero compression. Thread-local rather than per-call because the
+    /// same objective is hit concurrently from pool workers, and
+    /// thread-local rather than per-instance so the SS round loop's steady
+    /// state allocates nothing (the arena invariant asserted by
+    /// `rust/tests/alloc_steady_state.rs`).
+    static FB_SCRATCH: RefCell<FbScratch> = RefCell::new(FbScratch::default());
+}
+
+#[derive(Default)]
+struct FbScratch {
+    /// g(u) probe rows, f32, flattened row-major (P × D)
+    gu: Vec<f32>,
+    /// g(u) probe rows, f64, for the pair-gain batch path
+    gu64: Vec<f64>,
+    /// nonzero dims of the current item
+    nz_d: Vec<u32>,
+    /// nonzero values of the current item, aligned with `nz_d`
+    nz_v: Vec<f32>,
+}
 
 /// Concave scalarizer `g`. Must satisfy `g(0) = 0`, `g' > 0`, `g'' < 0`.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
@@ -100,63 +126,105 @@ impl FeatureBased {
         probe_sing: &[f64],
         items: &[usize],
     ) -> Vec<f32> {
-        debug_assert_eq!(probes.len(), probe_sing.len());
-        // precompute g(u) rows once per call: (P, D), f32 (the hot Sqrt
-        // path consumes them natively; the generic path upcasts)
-        let gu: Vec<Vec<f32>> = probes
-            .iter()
-            .map(|&u| {
-                self.feats.row(u).iter().map(|&a| self.g.apply(a as f64) as f32).collect()
-            })
-            .collect();
-        let mut out = Vec::with_capacity(items.len());
-        // per-item nonzero compression, reused across probes
-        let mut nz_d: Vec<u32> = Vec::with_capacity(self.feats.d);
-        let mut nz_v: Vec<f32> = Vec::with_capacity(self.feats.d);
-        for &v in items {
-            let rv = self.feats.row(v);
-            nz_d.clear();
-            nz_v.clear();
-            for (d, &b) in rv.iter().enumerate() {
-                if b > 0.0 {
-                    nz_d.push(d as u32);
-                    nz_v.push(b);
-                }
-            }
-            let mut best = f32::INFINITY;
-            for ((&u, &su), gu_row) in probes.iter().zip(probe_sing).zip(&gu) {
-                let ru = self.feats.row(u);
-                // Accumulation visits nonzero dims in ascending order. The
-                // Sqrt fast path runs in f32 (2× hardware sqrt throughput;
-                // ~1e-5 relative error is far below SS's own randomization
-                // noise). Both the reference CpuBackend and the sharded
-                // coordinator route through this same kernel, so parallel
-                // == sequential determinism is preserved exactly.
-                let w = match self.g {
-                    Concave::Sqrt => {
-                        let mut acc = 0.0f32;
-                        for (&d, &b) in nz_d.iter().zip(&nz_v) {
-                            let a = ru[d as usize];
-                            acc += (a + b).sqrt() - gu_row[d as usize];
-                        }
-                        acc - su as f32
-                    }
-                    _ => {
-                        let mut acc = 0.0f64;
-                        for (&d, &b) in nz_d.iter().zip(&nz_v) {
-                            let a = ru[d as usize];
-                            acc += self.g.apply((a + b) as f64) - gu_row[d as usize] as f64;
-                        }
-                        (acc - su) as f32
-                    }
-                };
-                if w < best {
-                    best = w;
-                }
-            }
-            out.push(best);
-        }
+        let mut out = vec![0.0f32; items.len()];
+        self.divergences_into_block(probes, probe_sing, items, &mut out);
         out
+    }
+
+    /// Write-into form of [`Self::divergences_block`] — the zero-allocation
+    /// hot path. The per-probe `g(u)` rows and the per-item nonzero
+    /// compression live in thread-local scratch whose capacity is warm
+    /// after the first round (P·D and D are constant within a `sparsify`
+    /// run), so steady-state calls do not touch the allocator at all.
+    /// Bit-identical to the allocating form: same dims visited in the same
+    /// order with the same float widths.
+    pub fn divergences_into_block(
+        &self,
+        probes: &[usize],
+        probe_sing: &[f64],
+        items: &[usize],
+        out: &mut [f32],
+    ) {
+        debug_assert_eq!(probes.len(), probe_sing.len());
+        debug_assert_eq!(out.len(), items.len());
+        if probes.is_empty() {
+            out.fill(f32::INFINITY);
+            return;
+        }
+        let d = self.feats.d;
+        let g = self.g;
+        if d == 0 {
+            // degenerate zero-dim matrix: every item row is empty, so the
+            // kernel reduces to min_u (0 − sing_u) — same float ops as the
+            // pre-refactor loop with an empty nonzero list
+            let w0 = probes
+                .iter()
+                .zip(probe_sing)
+                .map(|(_, &su)| match g {
+                    Concave::Sqrt => 0.0f32 - su as f32,
+                    _ => (0.0f64 - su) as f32,
+                })
+                .fold(f32::INFINITY, f32::min);
+            out.fill(w0);
+            return;
+        }
+        FB_SCRATCH.with(|cell| {
+            let s = &mut *cell.borrow_mut();
+            // precompute g(u) rows once per call: (P, D) flattened, f32
+            // (the hot Sqrt path consumes them natively; the generic path
+            // upcasts)
+            s.gu.clear();
+            for &u in probes {
+                s.gu.extend(self.feats.row(u).iter().map(|&a| g.apply(a as f64) as f32));
+            }
+            for (slot, &v) in out.iter_mut().zip(items) {
+                let rv = self.feats.row(v);
+                // per-item nonzero compression, reused across probes
+                s.nz_d.clear();
+                s.nz_v.clear();
+                for (dim, &b) in rv.iter().enumerate() {
+                    if b > 0.0 {
+                        s.nz_d.push(dim as u32);
+                        s.nz_v.push(b);
+                    }
+                }
+                let mut best = f32::INFINITY;
+                for ((&u, &su), gu_row) in
+                    probes.iter().zip(probe_sing).zip(s.gu.chunks_exact(d))
+                {
+                    let ru = self.feats.row(u);
+                    // Accumulation visits nonzero dims in ascending order.
+                    // The Sqrt fast path runs in f32 (2× hardware sqrt
+                    // throughput; ~1e-5 relative error is far below SS's
+                    // own randomization noise). Both the reference
+                    // CpuBackend and the sharded coordinator route through
+                    // this same kernel, so parallel == sequential
+                    // determinism is preserved exactly.
+                    let w = match g {
+                        Concave::Sqrt => {
+                            let mut acc = 0.0f32;
+                            for (&dim, &b) in s.nz_d.iter().zip(&s.nz_v) {
+                                let a = ru[dim as usize];
+                                acc += (a + b).sqrt() - gu_row[dim as usize];
+                            }
+                            acc - su as f32
+                        }
+                        _ => {
+                            let mut acc = 0.0f64;
+                            for (&dim, &b) in s.nz_d.iter().zip(&s.nz_v) {
+                                let a = ru[dim as usize];
+                                acc += g.apply((a + b) as f64) - gu_row[dim as usize] as f64;
+                            }
+                            (acc - su) as f32
+                        }
+                    };
+                    if w < best {
+                        best = w;
+                    }
+                }
+                *slot = best;
+            }
+        });
     }
 }
 
@@ -198,20 +266,31 @@ impl SubmodularFn for FeatureBased {
     }
 
     fn singleton_complements(&self) -> Vec<f64> {
-        // f(v|V\v) = Σ_d [ g(t_d) - g(t_d - v_d) ]  — the singleton kernel.
+        let mut out = vec![0.0f64; self.n()];
+        let items: Vec<usize> = (0..self.n()).collect();
+        self.singleton_complements_into(&items, &mut out);
+        out
+    }
+
+    fn singleton_complements_decomposable(&self) -> bool {
+        true
+    }
+
+    fn singleton_complements_into(&self, items: &[usize], out: &mut [f64]) {
+        // f(v|V\v) = Σ_d [ g(t_d) - g(t_d - v_d) ]  — the singleton kernel,
+        // per-element over the cached totals (so backends can shard it).
+        debug_assert_eq!(items.len(), out.len());
         let g_total: Vec<f64> = self.total.iter().map(|&t| self.g.apply(t as f64)).collect();
-        (0..self.n())
-            .map(|v| {
-                let row = self.feats.row(v);
-                let mut acc = 0.0f64;
-                for ((&t, &x), &gt) in self.total.iter().zip(row).zip(&g_total) {
-                    if x > 0.0 {
-                        acc += gt - self.g.apply(((t - x).max(0.0)) as f64);
-                    }
+        for (slot, &v) in out.iter_mut().zip(items) {
+            let row = self.feats.row(v);
+            let mut acc = 0.0f64;
+            for ((&t, &x), &gt) in self.total.iter().zip(row).zip(&g_total) {
+                if x > 0.0 {
+                    acc += gt - self.g.apply(((t - x).max(0.0)) as f64);
                 }
-                acc
-            })
-            .collect()
+            }
+            *slot = acc;
+        }
     }
 
     fn as_feature_based(&self) -> Option<&FeatureBased> {
@@ -240,25 +319,46 @@ impl BatchedDivergence for FeatureBased {
     /// with the same widths), which [`super::Mixture`] relies on when it
     /// delegates here.
     fn pair_gains_batch(&self, probes: &[usize], items: &[usize]) -> Vec<f64> {
-        let gu: Vec<Vec<f64>> = probes
-            .iter()
-            .map(|&u| self.feats.row(u).iter().map(|&a| self.g.apply(a as f64)).collect())
-            .collect();
-        let mut out = Vec::with_capacity(items.len() * probes.len());
-        for &v in items {
-            let rv = self.feats.row(v);
-            for (&u, gu_row) in probes.iter().zip(&gu) {
-                let ru = self.feats.row(u);
-                let mut acc = 0.0f64;
-                for ((&a, &b), &ga) in ru.iter().zip(rv).zip(gu_row) {
-                    if b > 0.0 {
-                        acc += self.g.apply((a + b) as f64) - ga;
-                    }
-                }
-                out.push(acc);
-            }
-        }
+        let mut out = vec![0.0f64; items.len() * probes.len()];
+        self.pair_gains_into(probes, items, &mut out);
         out
+    }
+
+    /// Write-into form with the `g(u)` cache in thread-local scratch —
+    /// what keeps the mixture delegation loop allocation-free.
+    fn pair_gains_into(&self, probes: &[usize], items: &[usize], out: &mut [f64]) {
+        let p = probes.len();
+        debug_assert_eq!(out.len(), items.len() * p);
+        let d = self.feats.d;
+        let g = self.g;
+        if d == 0 {
+            // zero-dim matrix: every pair gain is the empty sum
+            out.fill(0.0);
+            return;
+        }
+        FB_SCRATCH.with(|cell| {
+            let s = &mut *cell.borrow_mut();
+            s.gu64.clear();
+            for &u in probes {
+                s.gu64.extend(self.feats.row(u).iter().map(|&a| g.apply(a as f64)));
+            }
+            for (vi, &v) in items.iter().enumerate() {
+                let rv = self.feats.row(v);
+                let row_out = &mut out[vi * p..(vi + 1) * p];
+                for ((slot, &u), gu_row) in
+                    row_out.iter_mut().zip(probes).zip(s.gu64.chunks_exact(d))
+                {
+                    let ru = self.feats.row(u);
+                    let mut acc = 0.0f64;
+                    for ((&a, &b), &ga) in ru.iter().zip(rv).zip(gu_row) {
+                        if b > 0.0 {
+                            acc += g.apply((a + b) as f64) - ga;
+                        }
+                    }
+                    *slot = acc;
+                }
+            }
+        });
     }
 
     fn divergences_batch(
@@ -268,6 +368,16 @@ impl BatchedDivergence for FeatureBased {
         items: &[usize],
     ) -> Vec<f32> {
         self.divergences_block(probes, probe_sing, items)
+    }
+
+    fn divergences_into(
+        &self,
+        probes: &[usize],
+        probe_sing: &[f64],
+        items: &[usize],
+        out: &mut [f32],
+    ) {
+        self.divergences_into_block(probes, probe_sing, items, out);
     }
 }
 
@@ -453,5 +563,35 @@ mod tests {
     fn eval_empty_zero() {
         let f = instance(5, 3, 6);
         assert_eq!(f.eval(&[]), 0.0);
+    }
+
+    #[test]
+    fn write_into_kernels_bitwise_match_allocating_kernels() {
+        let f = instance(60, 10, 12);
+        let sing = f.singleton_complements();
+        let probes = vec![2usize, 17, 40, 59];
+        let probe_sing: Vec<f64> = probes.iter().map(|&u| sing[u]).collect();
+        let items: Vec<usize> = (0..60).filter(|v| !probes.contains(v)).collect();
+        let want = f.divergences_block(&probes, &probe_sing, &items);
+        // dirty buffer must be fully overwritten, twice in a row (scratch
+        // reuse across calls must not leak state)
+        let mut out = vec![f32::NAN; items.len()];
+        for _ in 0..2 {
+            f.divergences_into_block(&probes, &probe_sing, &items, &mut out);
+            assert_eq!(out, want);
+        }
+        let want_pg = {
+            // scalar oracle, not the batch (which now routes through _into)
+            let mut pg = Vec::new();
+            for &v in &items {
+                for &u in &probes {
+                    pg.push(f.pair_gain(u, v));
+                }
+            }
+            pg
+        };
+        let mut out_pg = vec![f64::NAN; items.len() * probes.len()];
+        f.pair_gains_into(&probes, &items, &mut out_pg);
+        assert_eq!(out_pg, want_pg);
     }
 }

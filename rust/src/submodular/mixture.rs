@@ -7,7 +7,26 @@
 //! facility-location terms keeps both blocked fast paths instead of
 //! falling back to the scalar loop.
 
+use std::cell::RefCell;
+
 use super::{BatchedDivergence, SolState, SubmodularFn};
+
+thread_local! {
+    /// Per-thread delegation scratch: the combined accumulator and the
+    /// per-component pair-gain tile. Buffers are *taken out* of the cell
+    /// for the duration of a call (and restored after), so a nested
+    /// mixture component re-entering this path sees empty temporaries
+    /// instead of a `RefCell` double-borrow.
+    static MIX_SCRATCH: RefCell<MixScratch> = RefCell::new(MixScratch::default());
+}
+
+#[derive(Default)]
+struct MixScratch {
+    /// Σ_k α_k · pair-gain tile (ITEM_BLOCK × P)
+    acc: Vec<f64>,
+    /// current component's pair-gain tile
+    part: Vec<f64>,
+}
 
 pub struct Mixture {
     parts: Vec<(f64, Box<dyn BatchedDivergence>)>,
@@ -58,6 +77,27 @@ impl SubmodularFn for Mixture {
         }
         acc
     }
+
+    /// Decomposable exactly when every component is — a facility-location
+    /// part (whole-vector top-2 scan) makes the whole mixture fall back to
+    /// the serial precompute rather than multiplying its O(n²) per shard.
+    fn singleton_complements_decomposable(&self) -> bool {
+        self.parts.iter().all(|(_, p)| p.singleton_complements_decomposable())
+    }
+
+    /// Same part order and `+= a·s` accumulation as the whole-vector form,
+    /// so the sharded precompute is bit-identical to the serial one.
+    fn singleton_complements_into(&self, items: &[usize], out: &mut [f64]) {
+        debug_assert_eq!(items.len(), out.len());
+        out.fill(0.0);
+        let mut part = vec![0.0f64; items.len()];
+        for (a, p) in &self.parts {
+            p.singleton_complements_into(items, &mut part);
+            for (dst, &s) in out.iter_mut().zip(&part) {
+                *dst += a * s;
+            }
+        }
+    }
 }
 
 impl BatchedDivergence for Mixture {
@@ -73,12 +113,24 @@ impl BatchedDivergence for Mixture {
     /// contract).
     fn pair_gains_batch(&self, probes: &[usize], items: &[usize]) -> Vec<f64> {
         let mut acc = vec![0.0f64; items.len() * probes.len()];
-        for (a, p) in &self.parts {
-            for (dst, g) in acc.iter_mut().zip(p.pair_gains_batch(probes, items)) {
+        self.pair_gains_into(probes, items, &mut acc);
+        acc
+    }
+
+    /// Write-into delegation over the components' own write-into kernels;
+    /// the per-component tile lives in thread-local scratch.
+    fn pair_gains_into(&self, probes: &[usize], items: &[usize], out: &mut [f64]) {
+        debug_assert_eq!(out.len(), items.len() * probes.len());
+        out.fill(0.0);
+        let mut part = MIX_SCRATCH.with(|cell| std::mem::take(&mut cell.borrow_mut().part));
+        part.resize(out.len(), 0.0);
+        for (a, component) in &self.parts {
+            component.pair_gains_into(probes, items, &mut part[..out.len()]);
+            for (dst, &g) in out.iter_mut().zip(&part[..out.len()]) {
                 *dst += a * g;
             }
         }
-        acc
+        MIX_SCRATCH.with(|cell| cell.borrow_mut().part = part);
     }
 
     /// Chunk items so the transient pair-gain matrices stay bounded
@@ -92,22 +144,51 @@ impl BatchedDivergence for Mixture {
         probe_sing: &[f64],
         items: &[usize],
     ) -> Vec<f32> {
+        let mut out = vec![0.0f32; items.len()];
+        self.divergences_into(probes, probe_sing, items, &mut out);
+        out
+    }
+
+    /// Write-into delegation: per item chunk, each component writes its
+    /// pair-gain tile into thread-local scratch (through its own
+    /// `pair_gains_into` kernel) and is combined into the Σ_k α_k
+    /// accumulator, then the min-fold lands in `out` — zero steady-state
+    /// allocations, and bit-identical to [`Self::divergences_batch`]'s
+    /// historical accumulation order (parts in declaration order, from
+    /// 0.0, per-chunk).
+    fn divergences_into(
+        &self,
+        probes: &[usize],
+        probe_sing: &[f64],
+        items: &[usize],
+        out: &mut [f32],
+    ) {
         debug_assert_eq!(probes.len(), probe_sing.len());
+        debug_assert_eq!(out.len(), items.len());
         if probes.is_empty() {
-            return vec![f32::INFINITY; items.len()];
+            out.fill(f32::INFINITY);
+            return;
         }
         const ITEM_BLOCK: usize = 512;
-        let mut out = Vec::with_capacity(items.len());
-        for chunk in items.chunks(ITEM_BLOCK) {
-            let pg = self.pair_gains_batch(probes, chunk);
-            out.extend(pg.chunks(probes.len()).map(|row| {
-                row.iter()
+        let p = probes.len();
+        // take the accumulator out of the TLS cell so a nested mixture
+        // re-entering this path sees an empty temporary, not a double
+        // borrow (`pair_gains_into` below manages the `part` buffer the
+        // same way)
+        let mut acc = MIX_SCRATCH.with(|cell| std::mem::take(&mut cell.borrow_mut().acc));
+        for (chunk, out_block) in items.chunks(ITEM_BLOCK).zip(out.chunks_mut(ITEM_BLOCK)) {
+            let len = chunk.len() * p;
+            acc.resize(len, 0.0);
+            self.pair_gains_into(probes, chunk, &mut acc[..len]);
+            for (slot, row) in out_block.iter_mut().zip(acc[..len].chunks_exact(p)) {
+                *slot = row
+                    .iter()
                     .zip(probe_sing)
                     .map(|(&g, &su)| (g - su) as f32)
-                    .fold(f32::INFINITY, f32::min)
-            }));
+                    .fold(f32::INFINITY, f32::min);
+            }
         }
-        out
+        MIX_SCRATCH.with(|cell| cell.borrow_mut().acc = acc);
     }
 }
 
@@ -187,6 +268,52 @@ mod tests {
         let got = f.divergences_batch(&probes, &probe_sing, &items);
         let want = scalar_reference_divergences(&f, &probes, &probe_sing, &items);
         assert_eq!(got, want, "delegated mixture batch must match the scalar path bit-for-bit");
+    }
+
+    #[test]
+    fn write_into_delegation_bitwise_matches_batch() {
+        let n = 90; // spans one ragged ITEM_BLOCK... (block = 512, so single chunk) —
+                    // the multi-chunk case is covered by the SS e2e suites at larger n
+        let m = feats(n, 7, 8);
+        let f = Mixture::new(vec![
+            (0.5, Box::new(FeatureBased::sqrt(m.clone())) as Box<dyn BatchedDivergence>),
+            (0.5, Box::new(FacilityLocation::from_features(&m))),
+        ]);
+        let sing = f.singleton_complements();
+        let probes = vec![0usize, 44, 89];
+        let probe_sing: Vec<f64> = probes.iter().map(|&u| sing[u]).collect();
+        let items: Vec<usize> = (0..n).filter(|v| !probes.contains(v)).collect();
+        let want = scalar_reference_divergences(&f, &probes, &probe_sing, &items);
+        let mut out = vec![f32::NAN; items.len()];
+        for _ in 0..2 {
+            // twice: TLS scratch reuse must not leak state across calls
+            f.divergences_into(&probes, &probe_sing, &items, &mut out);
+            assert_eq!(out, want);
+        }
+    }
+
+    #[test]
+    fn nested_mixture_reenters_scratch_safely() {
+        // a mixture containing a mixture re-enters MIX_SCRATCH on the same
+        // thread — the take/restore discipline must not double-borrow
+        let n = 20;
+        let m = feats(n, 5, 11);
+        let inner = Mixture::new(vec![
+            (1.0, Box::new(FeatureBased::sqrt(m.clone())) as Box<dyn BatchedDivergence>),
+            (0.5, Box::new(Modular::new(vec![0.3; n]))),
+        ]);
+        let outer = Mixture::new(vec![
+            (0.8, Box::new(inner) as Box<dyn BatchedDivergence>),
+            (0.2, Box::new(FacilityLocation::from_features(&m))),
+        ]);
+        let sing = outer.singleton_complements();
+        let probes = vec![1usize, 9];
+        let probe_sing: Vec<f64> = probes.iter().map(|&u| sing[u]).collect();
+        let items: Vec<usize> = (0..n).filter(|v| !probes.contains(v)).collect();
+        let want = scalar_reference_divergences(&outer, &probes, &probe_sing, &items);
+        let mut out = vec![0.0f32; items.len()];
+        outer.divergences_into(&probes, &probe_sing, &items, &mut out);
+        assert_eq!(out, want);
     }
 
     #[test]

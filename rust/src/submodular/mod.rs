@@ -85,6 +85,35 @@ pub trait SubmodularFn: Send + Sync {
             .collect()
     }
 
+    /// Whether [`singleton_complements_into`] computes a range of elements
+    /// in time proportional to that range (true for per-element-decomposable
+    /// objectives like [`FeatureBased`], false when the whole-vector form
+    /// shares work across elements — e.g. facility location's top-2 row
+    /// scan, which scatters into arbitrary output slots). Backends shard
+    /// the one-time singleton precompute over their pool **only** when
+    /// this is true; sharding the fallback would multiply total work by
+    /// the shard count.
+    ///
+    /// [`singleton_complements_into`]: SubmodularFn::singleton_complements_into
+    fn singleton_complements_decomposable(&self) -> bool {
+        false
+    }
+
+    /// Per-element form of [`singleton_complements`]: `out[i] = f(items[i] |
+    /// V∖items[i])`, bit-identical to the whole-vector computation. The
+    /// default computes the full vector and gathers — correct everywhere,
+    /// efficient only where [`singleton_complements_decomposable`] says so.
+    ///
+    /// [`singleton_complements`]: SubmodularFn::singleton_complements
+    /// [`singleton_complements_decomposable`]: SubmodularFn::singleton_complements_decomposable
+    fn singleton_complements_into(&self, items: &[usize], out: &mut [f64]) {
+        debug_assert_eq!(items.len(), out.len());
+        let all = self.singleton_complements();
+        for (slot, &v) in out.iter_mut().zip(items) {
+            *slot = all[v];
+        }
+    }
+
     /// Add/remove-capable state starting from an arbitrary set, when the
     /// objective supports efficient removal (needed by bi-directional
     /// greedy). `None` (the default) opts out.

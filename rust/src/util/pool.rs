@@ -15,7 +15,7 @@
 use std::panic::{catch_unwind, AssertUnwindSafe};
 use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
 use std::sync::mpsc::{sync_channel, Receiver, SyncSender};
-use std::sync::{Arc, Mutex};
+use std::sync::{Arc, Condvar, Mutex};
 use std::thread::JoinHandle;
 
 type Job = Box<dyn FnOnce() + Send + 'static>;
@@ -140,6 +140,70 @@ impl ThreadPool {
         result
     }
 
+    /// Scoped parallel-for over **disjoint slices of one output buffer**:
+    /// shard `s` covering `[lo, hi)` runs `f(lo, hi, &mut out[lo..hi])`.
+    ///
+    /// This is the write-into substrate of the SS round loop: divergence
+    /// shards write straight into the caller's preallocated round buffer,
+    /// so there is no per-shard `Vec`, no gather/flatten copy, and —
+    /// because neither `f` nor `out` needs `'static` — the closure borrows
+    /// round-local state (probes, items, singleton slices) directly
+    /// instead of cloning it into `Arc`s.
+    ///
+    /// Blocks until every shard has completed; a panicking shard poisons
+    /// the pool and re-panics here after the remaining shards finish.
+    /// Shard geometry matches [`parallel_ranges`] (`ceil(n/shards)` per
+    /// shard), and each output element belongs to exactly one shard.
+    pub fn parallel_ranges_into<T, F>(&self, out: &mut [T], shards: usize, f: F)
+    where
+        T: Send,
+        F: Fn(usize, usize, &mut [T]) + Sync,
+    {
+        let n = out.len();
+        if n == 0 {
+            return;
+        }
+        let shards = shards.clamp(1, n);
+        let per = n.div_ceil(shards);
+        let latch = Arc::new(Latch::default());
+        let enqueued = std::cell::Cell::new(0usize);
+        // Declared after `latch`/`enqueued` so it drops first: whether this
+        // frame exits normally or unwinds (e.g. `submit` panicking on a
+        // poisoned pool), we wait for every enqueued job before the borrows
+        // of `out` and `f` end. That wait is what makes the lifetime
+        // erasure below sound.
+        let guard = WaitGuard { latch: &latch, enqueued: &enqueued };
+        for (s, chunk) in out.chunks_mut(per).enumerate() {
+            let lo = s * per;
+            let hi = lo + chunk.len();
+            let fref = &f;
+            let job_latch = Arc::clone(&latch);
+            let job = move || {
+                // bump-on-drop: the latch fires even if `fref` panics
+                let _done = CompletionGuard(job_latch);
+                fref(lo, hi, chunk);
+            };
+            let job: Box<dyn FnOnce() + Send + '_> = Box::new(job);
+            // SAFETY: `WaitGuard` blocks this frame until the completion
+            // latch has fired once per enqueued job, and the latch fires in
+            // a drop guard that runs even on panic — so the borrows inside
+            // `job` (the `out` chunk and `&f`) strictly outlive its
+            // execution. The transmute only erases the borrow lifetime; the
+            // layout of the boxed trait object is unchanged.
+            let job: Box<dyn FnOnce() + Send + 'static> = unsafe { std::mem::transmute(job) };
+            self.submit(job);
+            enqueued.set(enqueued.get() + 1);
+        }
+        drop(guard); // wait for all shards
+        // the latch's own flag, stored before the final bump, is the
+        // deterministic signal — the pool's global `panicked` flag may not
+        // be set yet when the leader wakes
+        assert!(
+            !latch.panicked.load(Ordering::SeqCst),
+            "job panicked during parallel_ranges_into"
+        );
+    }
+
     /// Parallel-for over index ranges: `f(lo, hi)` per shard, results
     /// gathered in shard order. The coordinator uses this to process item
     /// shards against a shared read-only context.
@@ -165,6 +229,59 @@ impl Drop for ThreadPool {
         for w in self.workers.drain(..) {
             let _ = w.join();
         }
+    }
+}
+
+/// Count-up completion latch for [`ThreadPool::parallel_ranges_into`].
+/// Carries its own panic flag so the leader's check is deterministic: the
+/// flag is stored *before* the completion bump that wakes the leader
+/// (the pool's global `panicked` flag is only set after the worker's
+/// `catch_unwind` returns, which can race the leader's wakeup).
+#[derive(Default)]
+struct Latch {
+    done: Mutex<usize>,
+    cv: Condvar,
+    panicked: AtomicBool,
+}
+
+impl Latch {
+    fn bump(&self) {
+        let mut d = self.done.lock().unwrap();
+        *d += 1;
+        self.cv.notify_all();
+    }
+
+    fn wait_for(&self, target: usize) {
+        let mut d = self.done.lock().unwrap();
+        while *d < target {
+            d = self.cv.wait(d).unwrap();
+        }
+    }
+}
+
+/// Fires the latch when a job finishes — including by panic, since drop
+/// guards run during unwinding (detected via `std::thread::panicking`,
+/// recorded before the bump so the leader always observes it).
+struct CompletionGuard(Arc<Latch>);
+
+impl Drop for CompletionGuard {
+    fn drop(&mut self) {
+        if std::thread::panicking() {
+            self.0.panicked.store(true, Ordering::SeqCst);
+        }
+        self.0.bump();
+    }
+}
+
+/// Blocks (on drop) until every job enqueued so far has completed.
+struct WaitGuard<'a> {
+    latch: &'a Latch,
+    enqueued: &'a std::cell::Cell<usize>,
+}
+
+impl Drop for WaitGuard<'_> {
+    fn drop(&mut self) {
+        self.latch.wait_for(self.enqueued.get());
     }
 }
 
@@ -224,6 +341,60 @@ mod tests {
         let pool = ThreadPool::new(2, 4);
         let out = pool.parallel_ranges(3, 16, |lo, hi| hi - lo);
         assert_eq!(out.iter().sum::<usize>(), 3);
+    }
+
+    #[test]
+    fn parallel_ranges_into_writes_each_slot_exactly_once() {
+        let pool = ThreadPool::new(4, 8);
+        for (n, shards) in [(103usize, 7usize), (64, 64), (5, 16), (1000, 3), (17, 1)] {
+            // each shard *adds* to its slots, so a double write (overlapping
+            // shards) or a missed write would both break the value check
+            let mut out: Vec<usize> = (0..n).map(|i| i * 1000).collect();
+            pool.parallel_ranges_into(&mut out[..], shards, |lo, _hi, chunk| {
+                for (off, slot) in chunk.iter_mut().enumerate() {
+                    *slot += lo + off + 1;
+                }
+            });
+            for (i, &v) in out.iter().enumerate() {
+                assert_eq!(v, i * 1000 + i + 1, "slot {i} written exactly once (n={n}, shards={shards})");
+            }
+        }
+    }
+
+    #[test]
+    fn parallel_ranges_into_borrows_without_arc() {
+        // the whole point of the scoped API: borrow non-'static state
+        let pool = ThreadPool::new(3, 8);
+        let items: Vec<usize> = (0..257).map(|i| i * 2).collect();
+        let bias = 7usize;
+        let mut out = vec![0usize; items.len()];
+        pool.parallel_ranges_into(&mut out[..], 5, |lo, hi, chunk| {
+            for (slot, &v) in chunk.iter_mut().zip(&items[lo..hi]) {
+                *slot = v + bias;
+            }
+        });
+        for (i, &v) in out.iter().enumerate() {
+            assert_eq!(v, i * 2 + 7);
+        }
+    }
+
+    #[test]
+    fn parallel_ranges_into_empty_is_noop() {
+        let pool = ThreadPool::new(2, 4);
+        let mut out: Vec<f32> = Vec::new();
+        pool.parallel_ranges_into(&mut out[..], 4, |_, _, _| panic!("must not run"));
+    }
+
+    #[test]
+    #[should_panic(expected = "parallel_ranges_into")]
+    fn parallel_ranges_into_propagates_panic() {
+        let pool = ThreadPool::new(2, 4);
+        let mut out = vec![0u8; 16];
+        pool.parallel_ranges_into(&mut out[..], 4, |lo, _, _| {
+            if lo == 0 {
+                panic!("shard boom");
+            }
+        });
     }
 
     #[test]

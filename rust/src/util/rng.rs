@@ -127,25 +127,61 @@ impl Rng {
         out
     }
 
+    /// Write-into form of [`sample_indices`]: identical draw sequence and
+    /// identical result (asserted in tests), reusing `out`'s capacity so
+    /// the SS round loop — which calls this every round with a constant
+    /// `k = r·log₂ n` — allocates nothing in the steady state. Membership
+    /// is checked by scanning `out` itself: O(k) per draw, and k ≪ n on
+    /// every SS call site, so the O(k²) total is noise next to the O(nk)
+    /// divergence batch it feeds.
+    ///
+    /// [`sample_indices`]: Rng::sample_indices
+    pub fn sample_indices_into(&mut self, n: usize, k: usize, out: &mut Vec<usize>) {
+        assert!(k <= n, "cannot sample {k} from {n}");
+        out.clear();
+        out.reserve(k);
+        for j in (n - k)..n {
+            let t = self.below(j + 1);
+            let pick = if out.contains(&t) { j } else { t };
+            out.push(pick);
+        }
+        out.sort_unstable();
+    }
+
     /// Weighted sampling without replacement via exponential races
     /// (Efraimidis–Spirakis): key_i = w_i / Exp(1); take the k largest keys.
     /// Weights must be non-negative; zero-weight items are only chosen after
     /// all positive-weight items are exhausted.
     pub fn weighted_indices(&mut self, weights: &[f64], k: usize) -> Vec<usize> {
-        assert!(k <= weights.len());
-        let mut keyed: Vec<(f64, usize)> = weights
-            .iter()
-            .enumerate()
-            .map(|(i, &w)| {
-                let e = -self.f64().max(1e-300).ln(); // Exp(1)
-                let key = if w > 0.0 { w / e } else { -e }; // zero-weight sinks
-                (key, i)
-            })
-            .collect();
-        keyed.sort_unstable_by(|a, b| b.0.partial_cmp(&a.0).unwrap());
-        let mut out: Vec<usize> = keyed[..k].iter().map(|&(_, i)| i).collect();
-        out.sort_unstable();
+        let mut out = Vec::with_capacity(k);
+        let mut keyed = Vec::new();
+        self.weighted_indices_into(weights, k, &mut out, &mut keyed);
         out
+    }
+
+    /// Write-into form of [`weighted_indices`]: identical draws and result,
+    /// with the keyed race array living in caller-owned `keyed` scratch so
+    /// importance-sampled SS rounds reuse it instead of reallocating.
+    ///
+    /// [`weighted_indices`]: Rng::weighted_indices
+    pub fn weighted_indices_into(
+        &mut self,
+        weights: &[f64],
+        k: usize,
+        out: &mut Vec<usize>,
+        keyed: &mut Vec<(f64, usize)>,
+    ) {
+        assert!(k <= weights.len());
+        keyed.clear();
+        keyed.extend(weights.iter().enumerate().map(|(i, &w)| {
+            let e = -self.f64().max(1e-300).ln(); // Exp(1)
+            let key = if w > 0.0 { w / e } else { -e }; // zero-weight sinks
+            (key, i)
+        }));
+        keyed.sort_unstable_by(|a, b| b.0.partial_cmp(&a.0).unwrap());
+        out.clear();
+        out.extend(keyed[..k].iter().map(|&(_, i)| i));
+        out.sort_unstable();
     }
 
     /// Zipf-distributed rank in `[0, n)` with exponent `s` (vocabulary
@@ -235,6 +271,41 @@ mod tests {
         let mut r = Rng::new(5);
         let v = r.sample_indices(10, 10);
         assert_eq!(v, (0..10).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn sample_indices_into_bit_identical_to_allocating_form() {
+        // the SS arena loop's determinism rests on this equivalence
+        let mut out = Vec::new();
+        for seed in 0..20u64 {
+            let mut a = Rng::new(seed);
+            let mut b = Rng::new(seed);
+            for trial in 0..20 {
+                let n = 1 + ((seed as usize * 31 + trial * 7) % 200);
+                let k = (trial * 13) % (n + 1);
+                let want = a.sample_indices(n, k);
+                b.sample_indices_into(n, k, &mut out);
+                assert_eq!(out, want, "n={n} k={k}");
+                assert_eq!(a.next_u64(), b.next_u64(), "draw streams must stay aligned");
+            }
+        }
+    }
+
+    #[test]
+    fn weighted_indices_into_bit_identical_to_allocating_form() {
+        let mut keyed = Vec::new();
+        let mut out = Vec::new();
+        for seed in 0..10u64 {
+            let mut gen_w = Rng::new(seed ^ 0xABCD);
+            let w: Vec<f64> = (0..60).map(|_| gen_w.f64() * 3.0).collect();
+            let mut a = Rng::new(seed);
+            let mut b = Rng::new(seed);
+            for k in [0usize, 1, 7, 30, 60] {
+                let want = a.weighted_indices(&w, k);
+                b.weighted_indices_into(&w, k, &mut out, &mut keyed);
+                assert_eq!(out, want, "k={k}");
+            }
+        }
     }
 
     #[test]

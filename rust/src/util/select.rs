@@ -3,39 +3,72 @@
 //! SS's per-round prune (Algorithm 1 line 11: "remove the `(1-1/√c)|V|`
 //! items with smallest `w_{Uv}`") is a selection problem — sorting the whole
 //! weight vector every round would add an `O(n log n)` term the paper
-//! explicitly avoids. `partition_smallest` is the O(n) hot-path version;
+//! explicitly avoids. [`partition_smallest`] is the allocating O(n)
+//! version; [`prune_smallest_paired`] is its in-place successor, fusing
+//! selection and compaction over parallel `(keys, values)` arrays so the
+//! SS round loop prunes with zero steady-state allocations.
 //! [`LazyMaxHeap`] carries the lazy-greedy algorithm [Minoux '78].
+//!
+//! ## Canonical selection order (NaN and tie policy)
+//!
+//! Both selectors rank elements by the **same total order**: `f32::total_cmp`
+//! on the key, so `−NaN < −∞ < finite < +∞ < NaN` — a NaN with the sign
+//! bit clear (the usual result of float arithmetic) ranks *largest* and is
+//! pruned last, while a sign-bit-set −NaN ranks smallest and is pruned
+//! first; ties are broken by **ascending index/position**. The selected
+//! set is therefore a pure function of the input — no dependence on pivot
+//! luck — which is what lets the arena round loop in
+//! [`crate::algorithms::ss`] stay bit-identical to its fresh-allocation
+//! reference on tied and non-finite inputs alike (both paths apply this
+//! same order, whatever the NaN's sign).
 
 use std::cmp::Ordering;
 
-/// Indices of the `k` smallest keys (unordered), via iterative quickselect
-/// on an index permutation. Ties broken arbitrarily but deterministically
-/// (pivot choice is deterministic). O(n) expected.
+/// The module-wide canonical order: key by `total_cmp`, then index.
+/// Distinct indices make this a strict total order — no two elements ever
+/// compare equal, so every selection below is uniquely determined.
+#[inline]
+fn cmp_key_idx(a: (f32, usize), b: (f32, usize)) -> Ordering {
+    a.0.total_cmp(&b.0).then_with(|| a.1.cmp(&b.1))
+}
+
+/// Indices of the `k` smallest keys (unordered) under the canonical
+/// `(total_cmp key, index)` order — among equal keys, **lower indices are
+/// selected first**; positive NaNs rank after `+∞`, −NaNs before `−∞`
+/// (see the module docs). Iterative quickselect on an index permutation,
+/// O(n) expected.
 pub fn partition_smallest(keys: &[f32], k: usize) -> Vec<usize> {
     let n = keys.len();
     assert!(k <= n, "k={k} > n={n}");
     if k == 0 {
         return Vec::new();
     }
-    if k == n {
-        return (0..n).collect();
-    }
     let mut idx: Vec<usize> = (0..n).collect();
-    let (mut lo, mut hi) = (0usize, n);
+    if k < n {
+        select_k_smallest(keys, &mut idx, k);
+    }
+    idx.truncate(k);
+    idx
+}
+
+/// Reorder `idx` so its first `k` entries are the canonically k smallest
+/// (in arbitrary internal order). `1 <= k < idx.len()`.
+fn select_k_smallest(keys: &[f32], idx: &mut [usize], k: usize) {
+    let (mut lo, mut hi) = (0usize, idx.len());
+    // Invariant: idx[..lo] are among the k smallest, idx[hi..] are not;
+    // `want = k - lo` more must come from idx[lo..hi].
     let mut want = k;
-    // Invariant: idx[..lo] are all among the k smallest; we still need
-    // `want - 0` more from idx[lo..hi]... maintained via want relative to lo.
     while lo < hi {
-        // median-of-three pivot for adversarial robustness
+        // median-of-three pivot (by the canonical order) for robustness
         let mid = lo + (hi - lo) / 2;
-        let (a, b, c) = (keys[idx[lo]], keys[idx[mid]], keys[idx[hi - 1]]);
-        let pivot = median3(a, b, c);
-        // 3-way partition by key vs pivot
+        let pair = |i: usize| (keys[idx[i]], idx[i]);
+        let pivot = median3(pair(lo), pair(mid), pair(hi - 1));
+        // 3-way partition vs pivot; the canonical order is strict, so the
+        // equal run is exactly the pivot element itself.
         let (mut i, mut j, mut p) = (lo, lo, hi);
         // [lo,i): < pivot, [i,j): == pivot, [j,p): unseen, [p,hi): > pivot
         while j < p {
-            let kj = keys[idx[j]];
-            match kj.partial_cmp(&pivot).unwrap_or(Ordering::Equal) {
+            match cmp_key_idx((keys[idx[j]], idx[j]), pivot) {
                 Ordering::Less => {
                     idx.swap(i, j);
                     i += 1;
@@ -53,34 +86,87 @@ pub fn partition_smallest(keys: &[f32], k: usize) -> Vec<usize> {
         if want < less {
             hi = i;
         } else if want <= less + eq {
-            // the boundary falls inside the equal run: take what we need
-            let _boundary = i + (want - less);
-            break;
+            // idx[lo..lo+want] = [lo,i) plus (want-less) of the equal run;
+            // with a strict order eq == 1, so this is exact.
+            return;
         } else {
             want -= less + eq;
             lo = j;
         }
-        if want == 0 {
-            break;
-        }
-        // `want` is relative to current lo after the narrowing above
-        if hi <= lo {
-            break;
-        }
     }
-    idx.truncate(k);
-    idx
 }
 
-fn median3(a: f32, b: f32, c: f32) -> f32 {
-    let (lo, hi) = if a < b { (a, b) } else { (b, a) };
-    if c < lo {
+fn median3(a: (f32, usize), b: (f32, usize), c: (f32, usize)) -> (f32, usize) {
+    let (lo, hi) = if cmp_key_idx(a, b) == Ordering::Less { (a, b) } else { (b, a) };
+    if cmp_key_idx(c, lo) == Ordering::Less {
         lo
-    } else if c > hi {
+    } else if cmp_key_idx(hi, c) == Ordering::Less {
         hi
     } else {
         c
     }
+}
+
+/// Fused SS prune — the in-place successor of [`partition_smallest`]: drop
+/// the `k` canonically smallest keys from the parallel `(keys, vals)`
+/// arrays, **preserving the relative order of survivors**, and return the
+/// round's ε̂ contribution — `f64::max` folded over the dropped keys
+/// (upcast to f64), exactly the fold the fresh-allocation reference loop
+/// performs over its drop set, so the two stay bit-identical even on
+/// non-finite inputs. `f64::max` skips NaN operands (of either sign), so
+/// NaN keys never poison ε̂; if every dropped key is NaN the result is
+/// `NEG_INFINITY`, which the caller's running `max` ignores. Both vectors
+/// are compacted and truncated to `len − k` in one pass.
+///
+/// Selection policy is identical to [`partition_smallest`] (see the module
+/// docs): keys ranked by `total_cmp` with NaN largest, ties at the
+/// threshold dropped from the **earliest positions**. Equivalence of the
+/// two formulations is asserted property-style in the tests below.
+///
+/// `scratch` holds the quickselect threshold copy and is reused across
+/// calls — with warm capacity the whole prune allocates nothing, which is
+/// what the SS round arena relies on.
+pub fn prune_smallest_paired(
+    keys: &mut Vec<f32>,
+    vals: &mut Vec<usize>,
+    k: usize,
+    scratch: &mut Vec<f32>,
+) -> f64 {
+    let n = keys.len();
+    assert_eq!(n, vals.len(), "parallel arrays must agree: {n} vs {}", vals.len());
+    assert!(k >= 1 && k <= n, "k={k} out of range (n={n})");
+    scratch.clear();
+    scratch.extend_from_slice(keys);
+    let (_, &mut t, _) = scratch.select_nth_unstable_by(k - 1, f32::total_cmp);
+    // Canonical drop set = {key < t} ∪ {first (k − #less) positions with
+    // key == t}: exactly the k lexicographically smallest (key, position)
+    // pairs, since t is the k-th smallest key value.
+    let less = keys.iter().filter(|key| key.total_cmp(&t) == Ordering::Less).count();
+    let mut eq_budget = k - less;
+    let mut write = 0usize;
+    let mut max_dropped = f64::NEG_INFINITY;
+    for read in 0..n {
+        let key = keys[read];
+        let drop = match key.total_cmp(&t) {
+            Ordering::Less => true,
+            Ordering::Equal if eq_budget > 0 => {
+                eq_budget -= 1;
+                true
+            }
+            _ => false,
+        };
+        if drop {
+            max_dropped = max_dropped.max(key as f64);
+        } else {
+            keys[write] = key;
+            vals[write] = vals[read];
+            write += 1;
+        }
+    }
+    debug_assert_eq!(write, n - k, "prune must drop exactly k elements");
+    keys.truncate(write);
+    vals.truncate(write);
+    max_dropped
 }
 
 /// Indices of the `k` largest keys, descending by key. O(n log k).
@@ -238,6 +324,124 @@ mod tests {
         for k in [0, 1, 8, 17] {
             check_partition(&keys, k);
         }
+    }
+
+    /// The canonical reference: sort (key, index) pairs by the module
+    /// order and take the first k indices. Both selectors must agree with
+    /// this exactly — not just on the key multiset.
+    fn canonical_smallest(keys: &[f32], k: usize) -> Vec<usize> {
+        let mut pairs: Vec<(f32, usize)> = keys.iter().copied().zip(0..).collect();
+        pairs.sort_by(|a, b| a.0.total_cmp(&b.0).then_with(|| a.1.cmp(&b.1)));
+        let mut out: Vec<usize> = pairs[..k].iter().map(|&(_, i)| i).collect();
+        out.sort_unstable();
+        out
+    }
+
+    #[test]
+    fn ties_break_toward_lower_indices() {
+        // four-way tie at 1.0: k=2 must take indices 0 and 1, never 2 or 3
+        let keys = vec![1.0f32, 1.0, 1.0, 1.0, 0.5];
+        let mut got = partition_smallest(&keys, 2);
+        got.sort_unstable();
+        assert_eq!(got, vec![0, 4], "lowest index wins the tie");
+        let mut got3 = partition_smallest(&keys, 3);
+        got3.sort_unstable();
+        assert_eq!(got3, vec![0, 1, 4]);
+    }
+
+    #[test]
+    fn nan_ranks_largest() {
+        // NaN must never be selected before a finite/infinite key
+        let keys = vec![f32::NAN, 2.0, f32::INFINITY, -1.0, f32::NAN];
+        let mut got = partition_smallest(&keys, 3);
+        got.sort_unstable();
+        assert_eq!(got, vec![1, 2, 3], "NaNs rank after +inf");
+        // only once everything else is taken do NaNs appear, lowest index first
+        let mut got4 = partition_smallest(&keys, 4);
+        got4.sort_unstable();
+        assert_eq!(got4, vec![0, 1, 2, 3]);
+    }
+
+    #[test]
+    fn partition_matches_canonical_reference_random() {
+        let mut rng = Rng::new(77);
+        for _ in 0..200 {
+            let n = rng.range(1, 120);
+            // coarse quantization forces heavy ties; sprinkle NaN/inf
+            let keys: Vec<f32> = (0..n)
+                .map(|_| match rng.below(12) {
+                    0 => f32::NAN,
+                    1 => f32::INFINITY,
+                    2 => f32::NEG_INFINITY,
+                    _ => (rng.below(5) as f32) * 0.25,
+                })
+                .collect();
+            let k = rng.range(0, n + 1);
+            let mut got = partition_smallest(&keys, k);
+            got.sort_unstable();
+            assert_eq!(got, canonical_smallest(&keys, k), "n={n} k={k} keys={keys:?}");
+        }
+    }
+
+    #[test]
+    fn prune_paired_matches_partition_and_preserves_order() {
+        let mut rng = Rng::new(91);
+        let mut scratch = Vec::new();
+        for _ in 0..200 {
+            let n = rng.range(1, 150);
+            let keys: Vec<f32> = (0..n)
+                .map(|_| match rng.below(15) {
+                    0 => f32::NAN,
+                    1 => f32::INFINITY,
+                    _ => (rng.below(6) as f32) * 0.5 - 1.0,
+                })
+                .collect();
+            let vals: Vec<usize> = (0..n).map(|i| 1000 + i).collect();
+            let k = rng.range(1, n + 1);
+
+            // reference: partition_smallest + bitmap + rebuild with the
+            // reference loop's per-key f64::max ε̂ fold (the old path)
+            let drop_pos = partition_smallest(&keys, k);
+            let mut dropped = vec![false; n];
+            let mut want_max = f64::NEG_INFINITY;
+            for &p in &drop_pos {
+                dropped[p] = true;
+                want_max = want_max.max(keys[p] as f64);
+            }
+            let want_keys: Vec<f32> =
+                (0..n).filter(|&i| !dropped[i]).map(|i| keys[i]).collect();
+            let want_vals: Vec<usize> =
+                (0..n).filter(|&i| !dropped[i]).map(|i| vals[i]).collect();
+
+            let mut got_keys = keys.clone();
+            let mut got_vals = vals.clone();
+            let got_max = prune_smallest_paired(&mut got_keys, &mut got_vals, k, &mut scratch);
+            assert_eq!(got_vals, want_vals, "survivor set/order must match the old path");
+            assert_eq!(got_keys.len(), n - k);
+            for (a, b) in got_keys.iter().zip(&want_keys) {
+                assert_eq!(a.to_bits(), b.to_bits());
+            }
+            assert_eq!(
+                got_max, want_max,
+                "ε̂ fold must match the reference (NaN-skipping f64::max over dropped keys)"
+            );
+        }
+    }
+
+    #[test]
+    fn prune_paired_drop_all_and_scratch_reuse() {
+        let mut scratch = Vec::new();
+        let mut keys = vec![3.0f32, 1.0, 2.0];
+        let mut vals = vec![30usize, 10, 20];
+        let t = prune_smallest_paired(&mut keys, &mut vals, 3, &mut scratch);
+        assert!(keys.is_empty() && vals.is_empty());
+        assert_eq!(t, 3.0, "max dropped is the overall max");
+        // reuse the same scratch on a second, larger input
+        let mut keys = vec![5.0f32, -1.0, 4.0, 0.0];
+        let mut vals = vec![0usize, 1, 2, 3];
+        let t = prune_smallest_paired(&mut keys, &mut vals, 2, &mut scratch);
+        assert_eq!(vals, vec![0, 2]);
+        assert_eq!(t, 0.0);
     }
 
     #[test]

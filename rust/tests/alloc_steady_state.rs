@@ -1,0 +1,148 @@
+//! The arena invariant, enforced at the allocator: once the round arena,
+//! sampler scratch and kernel thread-locals are warm (rounds 1–2), an SS
+//! round on the CPU reference backend performs **zero heap allocations**,
+//! and on the sharded pool backend a small constant number (job dispatch:
+//! boxed shard closures + the completion latch), independent of `n`.
+//!
+//! This file deliberately contains a single `#[test]`: the counting
+//! allocator is process-global, so concurrent tests in the same binary
+//! would pollute the per-round deltas.
+
+use std::alloc::{GlobalAlloc, Layout, System};
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
+
+use submodular_ss::algorithms::{
+    sparsify, sparsify_candidates_reference, CpuBackend, DivergenceBackend, SsParams,
+};
+use submodular_ss::coordinator::{Compute, Metrics, ShardedBackend};
+use submodular_ss::submodular::FeatureBased;
+use submodular_ss::util::pool::ThreadPool;
+use submodular_ss::util::rng::Rng;
+use submodular_ss::util::vecmath::FeatureMatrix;
+
+static ALLOCS: AtomicU64 = AtomicU64::new(0);
+
+/// Counts every allocation-path entry (alloc / alloc_zeroed / realloc);
+/// frees are not interesting here.
+struct CountingAlloc;
+
+unsafe impl GlobalAlloc for CountingAlloc {
+    unsafe fn alloc(&self, l: Layout) -> *mut u8 {
+        ALLOCS.fetch_add(1, Ordering::Relaxed);
+        System.alloc(l)
+    }
+    unsafe fn dealloc(&self, p: *mut u8, l: Layout) {
+        System.dealloc(p, l)
+    }
+    unsafe fn alloc_zeroed(&self, l: Layout) -> *mut u8 {
+        ALLOCS.fetch_add(1, Ordering::Relaxed);
+        System.alloc_zeroed(l)
+    }
+    unsafe fn realloc(&self, p: *mut u8, l: Layout, n: usize) -> *mut u8 {
+        ALLOCS.fetch_add(1, Ordering::Relaxed);
+        System.realloc(p, l, n)
+    }
+}
+
+#[global_allocator]
+static GLOBAL: CountingAlloc = CountingAlloc;
+
+/// Backend wrapper that snapshots the allocation counter at the entry of
+/// every divergence batch — the deltas between consecutive snapshots are
+/// exactly the allocations of one full round (prune + sample + bookkeeping
+/// + the next batch's kernel). Also asserts the arena loop routes through
+/// the write-into entry points only.
+struct RoundProbe<'a> {
+    inner: &'a dyn DivergenceBackend,
+    marks: Mutex<Vec<u64>>,
+}
+
+impl<'a> RoundProbe<'a> {
+    fn new(inner: &'a dyn DivergenceBackend) -> Self {
+        // pre-reserve so the marks themselves never allocate mid-run
+        Self { inner, marks: Mutex::new(Vec::with_capacity(64)) }
+    }
+
+    fn marks(&self) -> Vec<u64> {
+        self.marks.lock().unwrap().clone()
+    }
+}
+
+impl DivergenceBackend for RoundProbe<'_> {
+    fn n(&self) -> usize {
+        self.inner.n()
+    }
+
+    fn divergences(&self, _probes: &[usize], _items: &[usize]) -> Vec<f32> {
+        panic!("arena round loop must route through divergences_into");
+    }
+
+    fn divergences_into(&self, probes: &[usize], items: &[usize], out: &mut [f32]) {
+        self.marks.lock().unwrap().push(ALLOCS.load(Ordering::Relaxed));
+        self.inner.divergences_into(probes, items, out);
+    }
+
+    fn importance_weights(&self, _items: &[usize]) -> Vec<f64> {
+        panic!("arena round loop must route through importance_weights_into");
+    }
+
+    fn importance_weights_into(&self, items: &[usize], out: &mut Vec<f64>) {
+        self.inner.importance_weights_into(items, out);
+    }
+}
+
+fn feature_instance(n: usize, d: usize, seed: u64) -> FeatureBased {
+    let mut rng = Rng::new(seed);
+    let mut m = FeatureMatrix::zeros(n, d);
+    for i in 0..n {
+        for j in 0..d {
+            m.row_mut(i)[j] = if rng.bool(0.3) { rng.f32() } else { 0.0 };
+        }
+    }
+    FeatureBased::sqrt(m)
+}
+
+#[test]
+fn steady_state_rounds_allocate_zero_on_cpu_and_o_shards_on_pool() {
+    // --- CPU reference backend: exactly zero ---
+    let f = feature_instance(4000, 12, 3);
+    let cpu = CpuBackend::new(&f);
+    let params = SsParams::default().with_seed(9);
+    let probe = RoundProbe::new(&cpu);
+    let res = sparsify(&probe, &params);
+    let marks = probe.marks();
+    assert!(marks.len() >= 4, "need ≥4 rounds to observe a steady state, got {}", marks.len());
+    // Everything between the entry of round 3's batch and the entry of the
+    // final round's batch — ≥1 full round of kernel + prune + sample +
+    // bookkeeping with a warm arena — must not touch the allocator.
+    let steady = marks[marks.len() - 1] - marks[2];
+    assert_eq!(
+        steady, 0,
+        "steady-state CPU rounds allocated {steady} times (marks: {marks:?})"
+    );
+    // sanity: the probed run is still the canonical result
+    let want = sparsify_candidates_reference(&cpu, &(0..4000).collect::<Vec<_>>(), &params);
+    assert_eq!(res.kept, want.kept);
+
+    // --- sharded pool backend: bounded by job dispatch, independent of n ---
+    let f2 = Arc::new(feature_instance(6000, 12, 4));
+    let pool = Arc::new(ThreadPool::new(2, 16));
+    let shards = 4usize;
+    let sharded =
+        ShardedBackend::new(f2, pool, Compute::Cpu, Arc::new(Metrics::new()))
+            .unwrap()
+            .with_shards(shards);
+    let probe = RoundProbe::new(&sharded);
+    let _ = sparsify(&probe, &SsParams::default().with_seed(11));
+    let marks = probe.marks();
+    assert!(marks.len() >= 4, "need ≥4 rounds, got {}", marks.len());
+    let rounds_measured = (marks.len() - 3) as u64;
+    let steady = marks[marks.len() - 1] - marks[2];
+    let budget = rounds_measured * (12 * shards as u64 + 32);
+    assert!(
+        steady <= budget,
+        "sharded steady-state rounds allocated {steady} > budget {budget} \
+         over {rounds_measured} rounds (marks: {marks:?})"
+    );
+}

@@ -5,7 +5,10 @@
 
 use std::sync::Arc;
 
-use submodular_ss::algorithms::{lazy_greedy, sparsify, CpuBackend, SsParams};
+use submodular_ss::algorithms::{
+    lazy_greedy, sparsify, sparsify_candidates, sparsify_candidates_reference, CpuBackend,
+    Sampling, SsParams,
+};
 use submodular_ss::coordinator::{
     Compute, Metrics, Objective, ServiceConfig, ShardedBackend, SummarizationService,
     SummarizeRequest,
@@ -105,6 +108,53 @@ fn sharded_ss_deterministic_for_every_objective_kind() {
             }
         }
     }
+}
+
+/// Property (the tentpole invariant): the zero-allocation arena/write-into
+/// round loop is bit-identical to the compiled-in fresh-allocation
+/// reference — `kept` set, round count and measured ε̂ — across objective
+/// kinds, shard counts, thread counts, sampling strategies and `min_keep`
+/// floors, on both `CpuBackend` and `ShardedBackend`.
+#[test]
+fn arena_round_loop_bit_identical_to_reference_property() {
+    use submodular_ss::util::prop::check_seeded;
+    check_seeded(0x55AA, 20, |g| {
+        let kind = *g.choose(&["features", "facility", "mixture"]);
+        let n = g.usize_in(60, 260);
+        let seed = g.usize_in(0, 1 << 16) as u64;
+        let sampling = if g.bool() { Sampling::Uniform } else { Sampling::Importance };
+        let min_keep = if g.bool() { g.usize_in(0, n) } else { 0 };
+        let f = objective_instance(kind, n, seed);
+        let params = SsParams { seed, sampling, min_keep, ..SsParams::default() };
+        let candidates: Vec<usize> = (0..n).collect();
+
+        let reference_backend = CpuBackend::new(f.as_ref());
+        let want = sparsify_candidates_reference(&reference_backend, &candidates, &params);
+
+        let got_cpu = sparsify_candidates(&reference_backend, &candidates, &params);
+        assert_eq!(
+            got_cpu.kept, want.kept,
+            "{kind}/n={n}/seed={seed}/{sampling:?}/min_keep={min_keep}: CPU arena != reference"
+        );
+        assert_eq!(got_cpu.rounds, want.rounds);
+        assert_eq!(got_cpu.divergence_evals, want.divergence_evals);
+        assert_eq!(got_cpu.pruned_max_divergence, want.pruned_max_divergence);
+
+        let threads = g.usize_in(1, 5);
+        let shards = g.usize_in(1, 10);
+        let pool = Arc::new(ThreadPool::new(threads, 16));
+        let sharded =
+            ShardedBackend::new(Arc::clone(&f), pool, Compute::Cpu, Arc::new(Metrics::new()))
+                .unwrap()
+                .with_shards(shards);
+        let got_sharded = sparsify_candidates(&sharded, &candidates, &params);
+        assert_eq!(
+            got_sharded.kept, want.kept,
+            "{kind}/n={n}/seed={seed}/{sampling:?}/min_keep={min_keep}/threads={threads}/\
+             shards={shards}: sharded arena != reference"
+        );
+        assert_eq!(got_sharded.rounds, want.rounds);
+    });
 }
 
 /// Acceptance: the service summarizes every objective kind end-to-end
