@@ -1,40 +1,281 @@
-//! Perf micro-bench: greedy variants (naive, lazy, stochastic) + the full
-//! SS pipeline — oracle-call accounting and wall-clock.
+//! Perf: the **batched maximizer engine** vs the frozen scalar greedy
+//! family — oracle-dispatch accounting and wall-clock, per objective and
+//! gain route. The baseline legs are the pre-refactor scalar loops,
+//! compiled in as `lazy_greedy_reference` / `greedy_reference` /
+//! `stochastic_greedy_reference`; the engine legs run the same algorithms
+//! with cohort-batched `gains_into` kernels, inline (`Direct`) and fanned
+//! over the worker pool (`Backend` on `ShardedBackend`).
+//!
+//! Mirrors `perf_ss_round`: bit-identity between every engine leg and its
+//! scalar reference is asserted before timing; prints ready-to-paste
+//! EXPERIMENTS.md rows and emits machine-readable `BENCH_greedy.json` at
+//! the repository root.
+//!
+//! What is asserted, and why (EXPERIMENTS.md §Perf has the measurement):
+//! the feature-based gain loop is accumulation-bound, so the batched
+//! kernel's `g(cov)` caching is worth only ~1.0–1.05× single-core — the
+//! durable win is the **dispatch collapse** (tens of thousands of scalar
+//! oracle calls → hundreds of kernel calls), which lets the pool route
+//! fan the big sweeps out and the PJRT route batch whole cohorts per
+//! executor call; facility location's row-walk is a real single-core
+//! multiple once the similarity matrix exceeds cache. Shared CI runners
+//! are noisy, so the default assert is a **no-regression gate** (best
+//! engine route ≥ 0.9× scalar at n ≥ 20 000, on bit-identical outputs);
+//! `SS_STRICT=1` opts into the ≥ 1.3× multi-core target for runs on real
+//! hardware.
+//!
+//! Run: `cargo bench --bench perf_greedy` (SS_FULL=1 for paper scale,
+//! SS_SMOKE=1 for the CI smoke that stays below the gate threshold).
+
+use std::sync::Arc;
 
 use submodular_ss::algorithms::{
-    greedy, lazy_greedy, sparsify, ss_then_greedy, stochastic_greedy, CpuBackend, SsParams,
+    greedy_reference, lazy_greedy_reference, sparsify, ss_then_greedy,
+    stochastic_greedy_reference, GainRoute, MaximizerEngine, SsParams,
 };
-use submodular_ss::bench::{bench, full_scale};
-use submodular_ss::submodular::FeatureBased;
+use submodular_ss::bench::{bench, full_scale, Table};
+use submodular_ss::coordinator::{Compute, Metrics, ShardedBackend};
+use submodular_ss::submodular::{BatchedDivergence, FacilityLocation, FeatureBased};
+use submodular_ss::util::json::Json;
+use submodular_ss::util::pool::ThreadPool;
 use submodular_ss::util::rng::Rng;
 use submodular_ss::util::vecmath::FeatureMatrix;
 
-fn main() {
-    let (n, d, k) = if full_scale() { (8000, 128, 40) } else { (2500, 64, 25) };
-    let mut rng = Rng::new(2);
+fn feats(n: usize, d: usize, seed: u64) -> FeatureMatrix {
+    let mut rng = Rng::new(seed);
     let mut m = FeatureMatrix::zeros(n, d);
     for i in 0..n {
         for j in 0..d {
             m.row_mut(i)[j] = if rng.bool(0.3) { rng.f32() } else { 0.0 };
         }
     }
-    let f = FeatureBased::sqrt(m);
-    let all: Vec<usize> = (0..n).collect();
-    let iters = 3;
+    m
+}
 
-    bench("naive_greedy", 0, 1, || greedy(&f, &all, k));
-    bench("lazy_greedy", 1, iters, || lazy_greedy(&f, &all, k));
-    bench("stochastic_greedy_eps0.1", 1, iters, || stochastic_greedy(&f, &all, k, 0.1, 7));
-    let backend = CpuBackend::new(&f);
-    bench("ss_sparsify_only", 1, iters, || sparsify(&backend, &SsParams::default()));
-    bench("ss_plus_lazy_greedy", 1, iters, || ss_then_greedy(&f, &backend, k, &SsParams::default()));
+fn main() {
+    let smoke = std::env::var("SS_SMOKE").map(|v| v == "1").unwrap_or(false);
+    // feature-based carries the acceptance gate; facility location is
+    // capped by its O(n²) similarity matrix and reported for tracking
+    let (n_feat, k_feat) = if full_scale() {
+        (50_000, 100)
+    } else if smoke {
+        (4_000, 25)
+    } else {
+        (20_000, 50)
+    };
+    let (n_fl, k_fl) = if smoke { (1_000, 15) } else { (3_000, 30) };
+    let d = 16;
+    let iters = if smoke { 1 } else { 3 };
 
-    // oracle-call accounting (single runs)
-    let g = greedy(&f, &all, k);
-    let lz = lazy_greedy(&f, &all, k);
-    let (ss, sol) = ss_then_greedy(&f, &backend, k, &SsParams::default());
-    println!(
-        "oracle calls: naive {} | lazy {} | ss {} divergence evals + {} gains (|V'|={})",
-        g.oracle_calls, lz.oracle_calls, ss.divergence_evals, sol.oracle_calls, ss.kept.len()
+    let pool = Arc::new(ThreadPool::default_for_host());
+    let shards = pool.threads() * 2;
+    let mut table = Table::new(
+        "Greedy family: scalar references vs batched engine",
+        &["case", "n", "k", "scalar_s", "engine_s", "speedup", "scalar_calls", "engine_evals", "dispatches"],
     );
+    let mut json_rows: Vec<Json> = Vec::new();
+    let mut feat_speedup = 0.0f64;
+
+    // ---------- feature-based: lazy greedy (the headline + gate) ----------
+    {
+        // one shared instance: every leg (scalar, Direct, Backend) runs the
+        // same objective, so the bit-identity asserts compare routes only
+        let fb: Arc<dyn BatchedDivergence> = Arc::new(FeatureBased::sqrt(feats(n_feat, d, 1)));
+        let f = fb.as_submodular();
+        let all: Vec<usize> = (0..n_feat).collect();
+        let backend = ShardedBackend::new(
+            Arc::clone(&fb),
+            Arc::clone(&pool),
+            Compute::Cpu,
+            Arc::new(Metrics::new()),
+        )
+        .unwrap()
+        .with_shards(shards);
+
+        // bit-identity first: every engine leg must equal the scalar oracle
+        let want = lazy_greedy_reference(f, &all, k_feat);
+        let mut eng_direct = MaximizerEngine::new(f, GainRoute::Direct);
+        let got = eng_direct.lazy_greedy(&all, k_feat);
+        assert_eq!(got.set, want.set, "engine(Direct) must be bit-identical to scalar lazy");
+        let mut eng_pool = MaximizerEngine::new(fb.as_submodular(), GainRoute::Backend(&backend));
+        let got_pool = eng_pool.lazy_greedy(&all, k_feat);
+        assert_eq!(got_pool.set, want.set, "engine(Backend) must be bit-identical to scalar lazy");
+        assert!(
+            eng_direct.stats().dispatches < want.oracle_calls,
+            "engine dispatches {} must be strictly fewer than scalar oracle calls {}",
+            eng_direct.stats().dispatches,
+            want.oracle_calls
+        );
+
+        let r_scalar = bench("lazy_greedy_scalar_features", 1, iters, || {
+            lazy_greedy_reference(f, &all, k_feat)
+        });
+        let r_direct =
+            bench("lazy_greedy_engine_direct", 1, iters, || eng_direct.lazy_greedy(&all, k_feat));
+        let r_pool =
+            bench("lazy_greedy_engine_pool", 1, iters, || eng_pool.lazy_greedy(&all, k_feat));
+        let speedup_direct = r_scalar.median_s / r_direct.median_s;
+        let speedup_pool = r_scalar.median_s / r_pool.median_s;
+        feat_speedup = speedup_direct.max(speedup_pool);
+        for (case, r, speedup, stats) in [
+            ("lazy/features/direct", &r_direct, speedup_direct, eng_direct.stats()),
+            ("lazy/features/pool", &r_pool, speedup_pool, eng_pool.stats()),
+        ] {
+            table.row(vec![
+                case.into(),
+                n_feat.to_string(),
+                k_feat.to_string(),
+                format!("{:.4}", r_scalar.median_s),
+                format!("{:.4}", r.median_s),
+                format!("{speedup:.2}x"),
+                want.oracle_calls.to_string(),
+                stats.gain_evals.to_string(),
+                stats.dispatches.to_string(),
+            ]);
+            json_rows.push(Json::obj(vec![
+                ("case", Json::Str(case.to_string())),
+                ("n", Json::Num(n_feat as f64)),
+                ("k", Json::Num(k_feat as f64)),
+                ("scalar_median_s", Json::Num(r_scalar.median_s)),
+                ("engine_median_s", Json::Num(r.median_s)),
+                ("speedup", Json::Num(speedup)),
+                ("scalar_oracle_calls", Json::Num(want.oracle_calls as f64)),
+                ("engine_gain_evals", Json::Num(stats.gain_evals as f64)),
+                ("engine_dispatches", Json::Num(stats.dispatches as f64)),
+            ]));
+        }
+
+        // stochastic greedy rides the same kernels — report for tracking
+        let s_want = stochastic_greedy_reference(f, &all, k_feat, 0.1, 7);
+        let s_got = eng_direct.stochastic_greedy(&all, k_feat, 0.1, 7);
+        assert_eq!(s_got.set, s_want.set, "engine stochastic must match scalar");
+        let r_s_scalar = bench("stochastic_scalar_features", 1, iters, || {
+            stochastic_greedy_reference(f, &all, k_feat, 0.1, 7)
+        });
+        let r_s_eng = bench("stochastic_engine_features", 1, iters, || {
+            eng_direct.stochastic_greedy(&all, k_feat, 0.1, 7)
+        });
+        let sp = r_s_scalar.median_s / r_s_eng.median_s;
+        table.row(vec![
+            "stochastic/features".into(),
+            n_feat.to_string(),
+            k_feat.to_string(),
+            format!("{:.4}", r_s_scalar.median_s),
+            format!("{:.4}", r_s_eng.median_s),
+            format!("{sp:.2}x"),
+            s_want.oracle_calls.to_string(),
+            s_got.oracle_calls.to_string(),
+            eng_direct.stats().dispatches.to_string(),
+        ]);
+        json_rows.push(Json::obj(vec![
+            ("case", Json::Str("stochastic/features".to_string())),
+            ("n", Json::Num(n_feat as f64)),
+            ("k", Json::Num(k_feat as f64)),
+            ("scalar_median_s", Json::Num(r_s_scalar.median_s)),
+            ("engine_median_s", Json::Num(r_s_eng.median_s)),
+            ("speedup", Json::Num(sp)),
+        ]));
+
+        // full pipeline seam (the old ss_plus_lazy_greedy leg): arena
+        // sparsify handing V' to the maximizer over the same sharded
+        // backend — catches regressions from pool contention between the
+        // round loop and the gain fan-out that the isolated legs can't see
+        let params = SsParams::default().with_seed(7);
+        let (ss_ref, sol_eng) = ss_then_greedy(f, &backend, k_feat, &params);
+        let want_pipe = lazy_greedy_reference(f, &ss_ref.kept, k_feat);
+        assert_eq!(
+            sol_eng.set, want_pipe.set,
+            "pipeline maximizer must match scalar lazy greedy on V'"
+        );
+        let r_pipe_scalar = bench("ss_plus_lazy_scalar", 1, iters, || {
+            let ss = sparsify(&backend, &params);
+            lazy_greedy_reference(f, &ss.kept, k_feat)
+        });
+        let r_pipe_eng = bench("ss_plus_lazy_engine", 1, iters, || {
+            ss_then_greedy(f, &backend, k_feat, &params)
+        });
+        let sp = r_pipe_scalar.median_s / r_pipe_eng.median_s;
+        table.row(vec![
+            "pipeline/features".into(),
+            n_feat.to_string(),
+            k_feat.to_string(),
+            format!("{:.4}", r_pipe_scalar.median_s),
+            format!("{:.4}", r_pipe_eng.median_s),
+            format!("{sp:.2}x"),
+            want_pipe.oracle_calls.to_string(),
+            sol_eng.oracle_calls.to_string(),
+            "-".into(),
+        ]);
+        json_rows.push(Json::obj(vec![
+            ("case", Json::Str("pipeline/features".to_string())),
+            ("n", Json::Num(n_feat as f64)),
+            ("k", Json::Num(k_feat as f64)),
+            ("reduced", Json::Num(ss_ref.kept.len() as f64)),
+            ("scalar_median_s", Json::Num(r_pipe_scalar.median_s)),
+            ("engine_median_s", Json::Num(r_pipe_eng.median_s)),
+            ("speedup", Json::Num(sp)),
+        ]));
+    }
+
+    // ---------- facility location: naive greedy (column-walk → row-walk) ----------
+    {
+        let fl = FacilityLocation::from_features(&feats(n_fl, d, 2));
+        let all: Vec<usize> = (0..n_fl).collect();
+        let want = greedy_reference(&fl, &all, k_fl);
+        let mut eng = MaximizerEngine::new(&fl, GainRoute::Direct);
+        let got = eng.greedy(&all, k_fl);
+        assert_eq!(got.set, want.set, "engine naive greedy must match scalar on facility");
+        let r_scalar =
+            bench("naive_greedy_scalar_facility", 1, iters, || greedy_reference(&fl, &all, k_fl));
+        let r_eng = bench("naive_greedy_engine_facility", 1, iters, || eng.greedy(&all, k_fl));
+        let sp = r_scalar.median_s / r_eng.median_s;
+        table.row(vec![
+            "naive/facility".into(),
+            n_fl.to_string(),
+            k_fl.to_string(),
+            format!("{:.4}", r_scalar.median_s),
+            format!("{:.4}", r_eng.median_s),
+            format!("{sp:.2}x"),
+            want.oracle_calls.to_string(),
+            got.oracle_calls.to_string(),
+            eng.stats().dispatches.to_string(),
+        ]);
+        json_rows.push(Json::obj(vec![
+            ("case", Json::Str("naive/facility".to_string())),
+            ("n", Json::Num(n_fl as f64)),
+            ("k", Json::Num(k_fl as f64)),
+            ("scalar_median_s", Json::Num(r_scalar.median_s)),
+            ("engine_median_s", Json::Num(r_eng.median_s)),
+            ("speedup", Json::Num(sp)),
+        ]));
+    }
+
+    table.print();
+    let report = Json::obj(vec![
+        ("bench", Json::Str("perf_greedy".to_string())),
+        ("threads", Json::Num(pool.threads() as f64)),
+        ("shards", Json::Num(shards as f64)),
+        ("smoke", Json::Num(if smoke { 1.0 } else { 0.0 })),
+        ("full_scale", Json::Num(if full_scale() { 1.0 } else { 0.0 })),
+        ("rows", Json::Arr(json_rows)),
+    ]);
+    // repo root (one level above the crate), alongside BENCH_ss_round.json
+    let out = format!("{}/../BENCH_greedy.json", env!("CARGO_MANIFEST_DIR"));
+    std::fs::write(&out, report.pretty()).expect("write BENCH_greedy.json");
+    println!("(saved to {out})");
+
+    if n_feat >= 20_000 {
+        assert!(
+            feat_speedup >= 0.9,
+            "batched engine regressed below the scalar lazy-greedy baseline at n ≥ 20000 \
+             (best route measured {feat_speedup:.2}x; the engine must never be slower beyond noise)"
+        );
+        if std::env::var("SS_STRICT").map(|v| v == "1").unwrap_or(false) {
+            assert!(
+                feat_speedup >= 1.3,
+                "SS_STRICT target not met: {feat_speedup:.2}x < 1.3x (expected on multi-core \
+                 hardware where the init sweep shards; see EXPERIMENTS.md)"
+            );
+        }
+    }
 }

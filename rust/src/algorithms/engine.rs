@@ -1,0 +1,519 @@
+//! **Batched maximizer engine** — the shared substrate the greedy family
+//! ([`lazy_greedy`], [`greedy`], [`stochastic_greedy`]) is built on.
+//!
+//! The paper's end-to-end pipeline is sparsify → greedy on the reduced set
+//! `V'` (Alg. 2). PR 2 made the sparsify rounds kernel-bound and
+//! allocation-free, which left the maximizer as the serial tail: one
+//! scalar `state.gain(v)` oracle call at a time. The greedy family is
+//! naturally restructured around evaluating *batches* of candidates per
+//! commit ("Lazier Than Lazy Greedy", Mirzasoleiman et al.), and the
+//! marginal-gain evaluations themselves vectorize through the objective's
+//! structure (Lindgren et al.) — so the engine dispatches **cohorts**
+//! through [`SolState::gains_into`] (blocked kernels for feature-based /
+//! facility-location / mixture states, scalar fallback for everything
+//! else) instead of per-element `gain` calls.
+//!
+//! Routes ([`GainRoute`]):
+//! * [`Direct`](GainRoute::Direct) — the state's batched kernel inline on
+//!   the calling thread (the CPU reference path);
+//! * [`Backend`](GainRoute::Backend) — through
+//!   [`DivergenceBackend::gains_into`], which the sharded coordinator
+//!   overrides to fan large cohorts over its pool and meter them
+//!   (`gain_evals`);
+//! * [`Pjrt`](GainRoute::Pjrt) — the feature-based fast path through the
+//!   AOT marginal-gain artifact (`runtime/tiled.rs`), CPU fallback for
+//!   every other objective or on executor failure. Device gains are f32,
+//!   so this route trades the bit-exactness guarantee below for batched
+//!   regularity — same contract as
+//!   [`accelerated_greedy`](super::accelerated_greedy).
+//!
+//! **Minoux-exactness.** On the CPU routes, batched lazy greedy returns
+//! the bit-identical solution to the scalar reference
+//! ([`lazy_greedy_reference`](super::lazy_greedy::lazy_greedy_reference)):
+//! cohort re-evaluation only changes *when* cached gains are refreshed,
+//! never the commit order. The argument: cached priorities are upper
+//! bounds (diminishing returns), so a heap-top entry whose gain is exact
+//! under the current solution dominates every other exact gain; ties
+//! resolve by the heap's deterministic lowest-id-wins order, and a stale
+//! tie partner re-enters at the same (bit-identical) priority and wins or
+//! loses exactly as it would in the scalar schedule. Since
+//! [`SolState::gains_into`] is bit-identical to scalar `gain`, every
+//! quantity the commit decision reads is identical. The property suite
+//! (`rust/tests/maximizer_equivalence.rs`) asserts this across objectives,
+//! backends, thread counts and cohort sizes.
+//!
+//! Steady-state iterations are **zero-allocation**: the engine owns an
+//! arena (heap, version/epoch maps, cohort buffers, gain buffer) sized
+//! once per run, states reserve their solution vector via
+//! [`SolState::reserve_additions`], and the blocked kernels keep their
+//! tiles in thread-local scratch — asserted by the counting allocator in
+//! `rust/tests/alloc_steady_state.rs`.
+//!
+//! [`lazy_greedy`]: super::lazy_greedy::lazy_greedy
+//! [`greedy`]: super::greedy::greedy
+//! [`stochastic_greedy`]: super::stochastic_greedy::stochastic_greedy
+//! [`SolState::gains_into`]: crate::submodular::SolState::gains_into
+//! [`DivergenceBackend::gains_into`]: super::ss::DivergenceBackend::gains_into
+
+use crate::runtime::TiledRuntime;
+use crate::submodular::{SolState, SubmodularFn};
+use crate::util::rng::Rng;
+use crate::util::select::LazyMaxHeap;
+use crate::util::stats::Timer;
+
+use super::ss::DivergenceBackend;
+use super::Solution;
+
+/// Default cohort size for lazy greedy's stale-entry re-evaluations: large
+/// enough that the blocked kernels amortize their per-call setup (the
+/// `g(cov)` row, tile zeroing), small enough that the overshoot past the
+/// handful of re-evaluations the scalar schedule needs stays cheap.
+pub const DEFAULT_COHORT: usize = 64;
+
+/// How the engine evaluates a cohort of candidate gains.
+pub enum GainRoute<'a> {
+    /// The state's own batched kernel, inline on the calling thread.
+    Direct,
+    /// Through [`DivergenceBackend::gains_into`] — the sharded coordinator
+    /// fans large cohorts over its pool and counts them in `gain_evals`.
+    Backend(&'a dyn DivergenceBackend),
+    /// The PJRT marginal-gain artifact for feature-based states; CPU
+    /// fallback otherwise (f32 device gains — see the module docs).
+    Pjrt(&'a TiledRuntime),
+}
+
+/// Oracle accounting for one engine run.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct EngineStats {
+    /// Per-element marginal-gain evaluations — the unit
+    /// [`Solution::oracle_calls`] reports, comparable across the scalar
+    /// references.
+    pub gain_evals: u64,
+    /// Batched kernel dispatches that produced them. The scalar references
+    /// dispatch once per evaluation; the engine's whole point is
+    /// `dispatches ≪ gain_evals`.
+    pub dispatches: u64,
+}
+
+/// The engine: per-run arena + route. Construct once per maximization run
+/// (or reuse across runs — buffers keep their capacity).
+pub struct MaximizerEngine<'a> {
+    f: &'a dyn SubmodularFn,
+    route: GainRoute<'a>,
+    cohort: usize,
+    stats: EngineStats,
+    // ---- arena (reused across runs, allocation-free within a run) ----
+    heap: LazyMaxHeap,
+    versions: Vec<u64>,
+    evaluated_epoch: Vec<u64>,
+    /// positions (into `candidates`) of the cohort being re-evaluated
+    cohort_pos: Vec<usize>,
+    /// gathered global candidate ids for the current batch
+    cand_buf: Vec<usize>,
+    /// batch gain output (f64, the oracle's width)
+    gains: Vec<f64>,
+    /// f32 staging for the PJRT route
+    gains32: Vec<f32>,
+    /// live candidate list for the naive / stochastic modes
+    remaining: Vec<usize>,
+    /// sampled probe positions for the stochastic mode
+    probe_pos: Vec<usize>,
+}
+
+impl<'a> MaximizerEngine<'a> {
+    pub fn new(f: &'a dyn SubmodularFn, route: GainRoute<'a>) -> Self {
+        Self {
+            f,
+            route,
+            cohort: DEFAULT_COHORT,
+            stats: EngineStats::default(),
+            heap: LazyMaxHeap::new(),
+            versions: Vec::new(),
+            evaluated_epoch: Vec::new(),
+            cohort_pos: Vec::new(),
+            cand_buf: Vec::new(),
+            gains: Vec::new(),
+            gains32: Vec::new(),
+            remaining: Vec::new(),
+            probe_pos: Vec::new(),
+        }
+    }
+
+    /// Override the lazy-mode cohort size (≥ 1; 1 reproduces the scalar
+    /// re-evaluation schedule exactly, batch-dispatched).
+    pub fn with_cohort(mut self, cohort: usize) -> Self {
+        self.cohort = cohort.max(1);
+        self
+    }
+
+    /// Accounting for the most recent run.
+    pub fn stats(&self) -> EngineStats {
+        self.stats
+    }
+
+    /// Minoux's lazy greedy, cohort-batched. Bit-identical solution to
+    /// [`lazy_greedy_reference`](super::lazy_greedy::lazy_greedy_reference)
+    /// on the CPU routes (module docs for the argument), with
+    /// `stats().dispatches` kernel calls instead of one oracle dispatch
+    /// per evaluation.
+    pub fn lazy_greedy(&mut self, candidates: &[usize], k: usize) -> Solution {
+        let timer = Timer::new();
+        let mut state = self.f.state();
+        let k = k.min(candidates.len());
+        state.reserve_additions(k);
+        let n = candidates.len();
+        self.stats = EngineStats::default();
+        self.versions.clear();
+        self.versions.resize(n, 0);
+        self.evaluated_epoch.clear();
+        self.evaluated_epoch.resize(n, 0);
+        self.heap.clear();
+        self.heap.reserve(n);
+        self.gains.clear();
+        self.gains.resize(n, 0.0);
+        self.cohort_pos.clear();
+        self.cohort_pos.reserve(self.cohort);
+        self.cand_buf.clear();
+        self.cand_buf.reserve(self.cohort);
+
+        if n > 0 {
+            // initial fill: the whole candidate set at S = ∅ in one batch
+            // (the scalar reference's n push-time evaluations, 1 dispatch)
+            batch_gains(
+                &self.route,
+                self.f,
+                state.as_ref(),
+                candidates,
+                &mut self.gains[..n],
+                &mut self.gains32,
+                &mut self.stats,
+            );
+            for (i, &g) in self.gains[..n].iter().enumerate() {
+                self.heap.push(i, g as f32, 0);
+            }
+        }
+
+        let mut chosen = 0usize;
+        // epoch = commits + 1; a gain computed in the current epoch is exact
+        let mut epoch = 1u64;
+        while chosen < k {
+            let Some((i, cached)) = self.heap.pop_fresh(&self.versions) else { break };
+            if self.evaluated_epoch[i] == epoch {
+                // exact under the current solution: commit (or stop)
+                if cached <= 0.0 {
+                    break; // non-monotone early stop — same test as the reference
+                }
+                state.add(candidates[i]);
+                self.versions[i] = u64::MAX; // never re-enters
+                chosen += 1;
+                epoch += 1;
+                continue;
+            }
+            // stale: assemble a cohort of further stale entries and
+            // re-evaluate them all in one kernel dispatch
+            self.cohort_pos.clear();
+            self.cohort_pos.push(i);
+            while self.cohort_pos.len() < self.cohort {
+                let Some((j, cj)) = self.heap.pop_fresh(&self.versions) else { break };
+                if self.evaluated_epoch[j] == epoch {
+                    // already exact — put it back untouched (same version,
+                    // same priority); the refreshed cohort competes with it
+                    // on the next pop
+                    self.heap.push(j, cj, self.versions[j]);
+                    break;
+                }
+                self.cohort_pos.push(j);
+            }
+            self.cand_buf.clear();
+            self.cand_buf.extend(self.cohort_pos.iter().map(|&p| candidates[p]));
+            let c = self.cohort_pos.len();
+            batch_gains(
+                &self.route,
+                self.f,
+                state.as_ref(),
+                &self.cand_buf,
+                &mut self.gains[..c],
+                &mut self.gains32,
+                &mut self.stats,
+            );
+            for (idx, &p) in self.cohort_pos.iter().enumerate() {
+                self.versions[p] += 1;
+                self.evaluated_epoch[p] = epoch;
+                self.heap.push(p, self.gains[idx] as f32, self.versions[p]);
+            }
+        }
+
+        Solution {
+            set: state.set().to_vec(),
+            value: state.value(),
+            oracle_calls: self.stats.gain_evals,
+            wall_s: timer.elapsed_s(),
+        }
+    }
+
+    /// Naive greedy, one batch per commit. Bit-identical to
+    /// [`greedy_reference`](super::greedy::greedy_reference): same strict-`>`
+    /// first-maximal scan over the same `swap_remove`-mutated candidate
+    /// order, over bit-identical gains.
+    pub fn greedy(&mut self, candidates: &[usize], k: usize) -> Solution {
+        let timer = Timer::new();
+        let mut state = self.f.state();
+        let k = k.min(candidates.len());
+        state.reserve_additions(k);
+        self.stats = EngineStats::default();
+        self.remaining.clear();
+        self.remaining.extend_from_slice(candidates);
+        self.gains.clear();
+        self.gains.resize(candidates.len(), 0.0);
+        for _ in 0..k {
+            let m = self.remaining.len();
+            if m == 0 {
+                break;
+            }
+            batch_gains(
+                &self.route,
+                self.f,
+                state.as_ref(),
+                &self.remaining,
+                &mut self.gains[..m],
+                &mut self.gains32,
+                &mut self.stats,
+            );
+            let mut best_i = usize::MAX;
+            let mut best_gain = f64::NEG_INFINITY;
+            for (i, &g) in self.gains[..m].iter().enumerate() {
+                // deterministic tie-break on position keeps greedy == lazy_greedy
+                if g > best_gain {
+                    best_gain = g;
+                    best_i = i;
+                }
+            }
+            if best_i == usize::MAX || best_gain <= 0.0 {
+                break; // monotone f never hits this; non-monotone stops early
+            }
+            let v = self.remaining.swap_remove(best_i);
+            state.add(v);
+        }
+        Solution {
+            set: state.set().to_vec(),
+            value: state.value(),
+            oracle_calls: self.stats.gain_evals,
+            wall_s: timer.elapsed_s(),
+        }
+    }
+
+    /// Stochastic greedy (Mirzasoleiman et al.), one batch per sampled
+    /// probe set. Bit-identical draws and solution to
+    /// [`stochastic_greedy_reference`](super::stochastic_greedy::stochastic_greedy_reference):
+    /// `sample_indices_into` reproduces `sample_indices`' draw sequence
+    /// exactly, and the probe scan order is unchanged.
+    pub fn stochastic_greedy(
+        &mut self,
+        candidates: &[usize],
+        k: usize,
+        eps: f64,
+        seed: u64,
+    ) -> Solution {
+        assert!(eps > 0.0 && eps < 1.0);
+        let timer = Timer::new();
+        let mut rng = Rng::new(seed);
+        let mut state = self.f.state();
+        let k = k.min(candidates.len());
+        state.reserve_additions(k);
+        self.stats = EngineStats::default();
+        self.remaining.clear();
+        self.remaining.extend_from_slice(candidates);
+        let sample_size = (((candidates.len() as f64 / k.max(1) as f64) * (1.0 / eps).ln())
+            .ceil() as usize)
+            .max(1);
+        self.gains.clear();
+        self.gains.resize(sample_size.min(candidates.len()).max(1), 0.0);
+        for _ in 0..k {
+            if self.remaining.is_empty() {
+                break;
+            }
+            let m = sample_size.min(self.remaining.len());
+            rng.sample_indices_into(self.remaining.len(), m, &mut self.probe_pos);
+            self.cand_buf.clear();
+            self.cand_buf.extend(self.probe_pos.iter().map(|&p| self.remaining[p]));
+            batch_gains(
+                &self.route,
+                self.f,
+                state.as_ref(),
+                &self.cand_buf,
+                &mut self.gains[..m],
+                &mut self.gains32,
+                &mut self.stats,
+            );
+            let mut best_pos = usize::MAX;
+            let mut best_gain = f64::NEG_INFINITY;
+            for (idx, &p) in self.probe_pos.iter().enumerate() {
+                let g = self.gains[idx];
+                if g > best_gain {
+                    best_gain = g;
+                    best_pos = p;
+                }
+            }
+            if best_pos == usize::MAX || best_gain <= 0.0 {
+                break;
+            }
+            let v = self.remaining.swap_remove(best_pos);
+            state.add(v);
+        }
+        Solution {
+            set: state.set().to_vec(),
+            value: state.value(),
+            oracle_calls: self.stats.gain_evals,
+            wall_s: timer.elapsed_s(),
+        }
+    }
+}
+
+/// One cohort dispatch through the configured route. Free-standing so the
+/// engine can borrow its arena fields disjointly.
+fn batch_gains(
+    route: &GainRoute<'_>,
+    f: &dyn SubmodularFn,
+    state: &dyn SolState,
+    cands: &[usize],
+    out: &mut [f64],
+    out32: &mut Vec<f32>,
+    stats: &mut EngineStats,
+) {
+    debug_assert_eq!(cands.len(), out.len());
+    match route {
+        GainRoute::Direct => state.gains_into(cands, out),
+        GainRoute::Backend(b) => b.gains_into(state, cands, out),
+        GainRoute::Pjrt(rt) => match (f.as_feature_based(), state.feature_coverage()) {
+            (Some(fb), Some(cov)) => {
+                out32.resize(cands.len(), 0.0);
+                match rt.marginal_gains_into(fb.feats(), cov, cands, out32) {
+                    Ok(()) => {
+                        for (slot, &g) in out.iter_mut().zip(out32.iter()) {
+                            *slot = g as f64;
+                        }
+                    }
+                    // executor failure: fall back to the CPU kernel
+                    Err(_) => state.gains_into(cands, out),
+                }
+            }
+            _ => state.gains_into(cands, out),
+        },
+    }
+    stats.gain_evals += cands.len() as u64;
+    stats.dispatches += 1;
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::greedy::greedy_reference;
+    use super::super::lazy_greedy::lazy_greedy_reference;
+    use super::super::stochastic_greedy::stochastic_greedy_reference;
+    use super::*;
+    use crate::submodular::FeatureBased;
+    use crate::util::rng::Rng;
+    use crate::util::vecmath::FeatureMatrix;
+
+    fn feature_instance(n: usize, d: usize, seed: u64) -> FeatureBased {
+        let mut rng = Rng::new(seed);
+        let mut m = FeatureMatrix::zeros(n, d);
+        for i in 0..n {
+            for j in 0..d {
+                m.row_mut(i)[j] = if rng.bool(0.4) { rng.f32() } else { 0.0 };
+            }
+        }
+        FeatureBased::sqrt(m)
+    }
+
+    #[test]
+    fn lazy_bit_identical_to_scalar_reference_across_cohorts() {
+        for seed in [1u64, 7, 23] {
+            let f = feature_instance(120, 8, seed);
+            let all: Vec<usize> = (0..120).collect();
+            for k in [1usize, 5, 30, 120] {
+                let want = lazy_greedy_reference(&f, &all, k);
+                for cohort in [1usize, 2, 16, 64, 1024] {
+                    let mut eng = MaximizerEngine::new(&f, GainRoute::Direct).with_cohort(cohort);
+                    let got = eng.lazy_greedy(&all, k);
+                    assert_eq!(got.set, want.set, "seed={seed} k={k} cohort={cohort}");
+                    assert_eq!(
+                        got.value.to_bits(),
+                        want.value.to_bits(),
+                        "value must be bit-identical (same commits in the same order)"
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn strictly_fewer_dispatches_than_scalar_oracle_calls() {
+        let f = feature_instance(300, 8, 3);
+        let all: Vec<usize> = (0..300).collect();
+        let want = lazy_greedy_reference(&f, &all, 20);
+        let mut eng = MaximizerEngine::new(&f, GainRoute::Direct);
+        let got = eng.lazy_greedy(&all, 20);
+        assert_eq!(got.set, want.set);
+        // the scalar reference dispatches once per evaluation
+        assert!(
+            eng.stats().dispatches < want.oracle_calls,
+            "cohort dispatches {} must be strictly fewer than scalar oracle calls {}",
+            eng.stats().dispatches,
+            want.oracle_calls
+        );
+        assert_eq!(eng.stats().gain_evals, got.oracle_calls);
+    }
+
+    #[test]
+    fn greedy_and_stochastic_bit_identical_to_references() {
+        let f = feature_instance(90, 6, 5);
+        let all: Vec<usize> = (0..90).collect();
+        let mut eng = MaximizerEngine::new(&f, GainRoute::Direct);
+        let g_want = greedy_reference(&f, &all, 12);
+        let g_got = eng.greedy(&all, 12);
+        assert_eq!(g_got.set, g_want.set);
+        assert_eq!(g_got.value.to_bits(), g_want.value.to_bits());
+        assert_eq!(g_got.oracle_calls, g_want.oracle_calls, "same per-element eval count");
+        for seed in 0..4u64 {
+            let s_want = stochastic_greedy_reference(&f, &all, 9, 0.2, seed);
+            let s_got = eng.stochastic_greedy(&all, 9, 0.2, seed);
+            assert_eq!(s_got.set, s_want.set, "seed={seed}");
+            assert_eq!(s_got.oracle_calls, s_want.oracle_calls);
+        }
+    }
+
+    #[test]
+    fn empty_and_degenerate_inputs() {
+        let f = feature_instance(10, 4, 9);
+        let mut eng = MaximizerEngine::new(&f, GainRoute::Direct);
+        let s = eng.lazy_greedy(&[], 5);
+        assert!(s.set.is_empty());
+        assert_eq!(s.value, 0.0);
+        assert_eq!(s.oracle_calls, 0);
+        assert_eq!(eng.stats().dispatches, 0);
+        let s = eng.lazy_greedy(&[3], 0);
+        assert!(s.set.is_empty());
+        let s = eng.greedy(&[], 4);
+        assert!(s.set.is_empty());
+    }
+
+    #[test]
+    fn engine_reuse_across_runs_is_clean() {
+        // arena reuse must not leak state between runs (versions, heap,
+        // epoch maps are all reset)
+        let f1 = feature_instance(60, 6, 11);
+        let f2 = feature_instance(40, 6, 12);
+        let all1: Vec<usize> = (0..60).collect();
+        let all2: Vec<usize> = (0..40).collect();
+        let mut eng = MaximizerEngine::new(&f1, GainRoute::Direct);
+        let a1 = eng.lazy_greedy(&all1, 10);
+        let a2 = eng.lazy_greedy(&all1, 10);
+        assert_eq!(a1.set, a2.set, "same run twice on a reused engine");
+        let mut eng2 = MaximizerEngine::new(&f2, GainRoute::Direct);
+        let b_fresh = eng2.lazy_greedy(&all2, 7);
+        let mut eng_smaller = MaximizerEngine::new(&f2, GainRoute::Direct);
+        let _warm = eng_smaller.lazy_greedy(&all2, 3); // warm with different k
+        let b_reused = eng_smaller.lazy_greedy(&all2, 7);
+        assert_eq!(b_reused.set, b_fresh.set);
+    }
+}

@@ -6,13 +6,30 @@
 //!
 //! This is the paper's main quality baseline ("lazy greedy"), and also the
 //! maximizer SS runs on the reduced set V'.
+//!
+//! [`lazy_greedy`] is the engine-backed default: stale heap entries are
+//! re-evaluated in cohorts through the batched gain kernels
+//! ([`MaximizerEngine`]), bit-identical to the scalar schedule.
+//! [`lazy_greedy_reference`] is that scalar schedule, frozen — the
+//! bit-identity oracle for the property suites and the baseline leg of
+//! `rust/benches/perf_greedy.rs`. It must never change.
 
+use super::engine::{GainRoute, MaximizerEngine};
 use super::Solution;
 use crate::submodular::SubmodularFn;
 use crate::util::select::LazyMaxHeap;
 use crate::util::stats::Timer;
 
+/// Cohort-batched lazy greedy — bit-identical solution to
+/// [`lazy_greedy_reference`], strictly fewer oracle dispatches.
 pub fn lazy_greedy(f: &dyn SubmodularFn, candidates: &[usize], k: usize) -> Solution {
+    MaximizerEngine::new(f, GainRoute::Direct).lazy_greedy(candidates, k)
+}
+
+/// The scalar Minoux loop, frozen as the engine's bit-identity oracle and
+/// bench baseline: one `state.gain` call per evaluation, one heap pop per
+/// re-evaluation decision.
+pub fn lazy_greedy_reference(f: &dyn SubmodularFn, candidates: &[usize], k: usize) -> Solution {
     let timer = Timer::new();
     let mut state = f.state();
     let mut calls = 0u64;
@@ -87,6 +104,21 @@ mod tests {
             let b = lazy_greedy(&f, &all, k);
             assert_eq!(a.set, b.set, "lazy must equal naive greedy (n={n}, k={k})");
             assert!((a.value - b.value).abs() < 1e-9);
+        });
+    }
+
+    #[test]
+    fn engine_backed_identical_to_scalar_reference() {
+        check_seeded(501, 25, |g| {
+            let n = g.usize_in(5, 50);
+            let d = g.usize_in(2, 8);
+            let k = g.usize_in(1, n + 3);
+            let f = feature_instance(n, d, g.usize_in(0, 1 << 30) as u64);
+            let all: Vec<usize> = (0..n).collect();
+            let want = lazy_greedy_reference(&f, &all, k);
+            let got = lazy_greedy(&f, &all, k);
+            assert_eq!(got.set, want.set, "engine must match the scalar oracle (n={n}, k={k})");
+            assert_eq!(got.value.to_bits(), want.value.to_bits());
         });
     }
 

@@ -10,6 +10,13 @@
 //! * [`lazy_greedy`] — Minoux's accelerated greedy; identical output,
 //!   priority-queue laziness (the paper's main quality baseline).
 //! * [`stochastic_greedy`] — "lazier than lazy greedy" (Mirzasoleiman et al.).
+//!
+//! The greedy family is built on the batched [`MaximizerEngine`]
+//! ([`engine`]): marginal gains are evaluated in cohorts through the
+//! objective's blocked kernels ([`crate::submodular::SolState::gains_into`])
+//! instead of one scalar oracle call per element, bit-identically to the
+//! frozen scalar references ([`lazy_greedy_reference`],
+//! [`greedy_reference`], [`stochastic_greedy_reference`]).
 //! * [`sieve_streaming`] — Badanidiyuru et al.'s 1/2−ε streaming algorithm
 //!   (the paper's low-memory baseline).
 //! * [`bidirectional_greedy`] — Buchbinder et al.'s randomized 1/2 double
@@ -27,6 +34,7 @@ pub mod baselines;
 pub mod conditional_ss;
 pub mod constrained;
 pub mod bidirectional_greedy;
+pub mod engine;
 pub mod greedy;
 pub mod lazy_greedy;
 pub mod sieve_streaming;
@@ -39,14 +47,15 @@ pub use baselines::{random_subset, top_k_singleton};
 pub use conditional_ss::{sparsify_conditional, ConditionalCpuBackend};
 pub use constrained::{knapsack_greedy, matroid_greedy, PartitionMatroid};
 pub use bidirectional_greedy::bidirectional_greedy;
-pub use greedy::greedy;
-pub use lazy_greedy::lazy_greedy;
+pub use engine::{EngineStats, GainRoute, MaximizerEngine, DEFAULT_COHORT};
+pub use greedy::{greedy, greedy_reference};
+pub use lazy_greedy::{lazy_greedy, lazy_greedy_reference};
 pub use sieve_streaming::{sieve_streaming, SieveParams};
 pub use ss::{
     sparsify, sparsify_candidates, sparsify_candidates_reference, ss_then_greedy, CpuBackend,
     DivergenceBackend, Sampling, SsParams, SsResult,
 };
-pub use stochastic_greedy::stochastic_greedy;
+pub use stochastic_greedy::{stochastic_greedy, stochastic_greedy_reference};
 pub use wei_prune::wei_prune;
 
 use crate::submodular::SubmodularFn;

@@ -21,8 +21,9 @@
 
 use std::sync::Mutex;
 
+use super::engine::{GainRoute, MaximizerEngine};
 use super::Solution;
-use crate::submodular::{BatchedDivergence, SubmodularFn};
+use crate::submodular::{BatchedDivergence, SolState, SubmodularFn};
 use crate::util::rng::Rng;
 use crate::util::select::{partition_smallest, prune_smallest_paired};
 use crate::util::stats::Timer;
@@ -126,6 +127,15 @@ pub trait DivergenceBackend: Send + Sync {
     fn importance_weights_into(&self, items: &[usize], out: &mut Vec<f64>) {
         out.clear();
         out.extend(self.importance_weights(items));
+    }
+
+    /// Batched marginal gains under `state` — the post-reduction
+    /// maximizer's route: `out[i] = f(candidates[i] | S)`, bit-identical
+    /// to the scalar `state.gain` loop. The default runs the state's own
+    /// batched kernel inline; the sharded coordinator overrides it to fan
+    /// large cohorts over its pool and meter them (`gain_evals`).
+    fn gains_into(&self, state: &dyn SolState, candidates: &[usize], out: &mut [f64]) {
+        state.gains_into(candidates, out);
     }
 }
 
@@ -434,7 +444,10 @@ pub fn sparsify_candidates_reference(
 }
 
 /// Convenience pipeline: SS-reduce then lazy-greedy maximize — the paper's
-/// headline configuration ("greedy on the pruned set").
+/// headline configuration ("greedy on the pruned set"). The maximizer runs
+/// through the batched engine with the *same backend* as the gain route,
+/// so a sharded backend batches (and meters) the post-reduction cohorts
+/// exactly like its divergence rounds.
 pub fn ss_then_greedy(
     f: &dyn SubmodularFn,
     backend: &dyn DivergenceBackend,
@@ -442,7 +455,7 @@ pub fn ss_then_greedy(
     params: &SsParams,
 ) -> (SsResult, Solution) {
     let ss = sparsify(backend, params);
-    let sol = super::lazy_greedy::lazy_greedy(f, &ss.kept, k);
+    let sol = MaximizerEngine::new(f, GainRoute::Backend(backend)).lazy_greedy(&ss.kept, k);
     (ss, sol)
 }
 

@@ -3,13 +3,33 @@
 //! `⌈(|candidates|/k)·ln(1/ε)⌉`, giving a `1 − 1/e − ε` expected guarantee
 //! with `O(n log 1/ε)` total evaluations. Related-work baseline + ablation
 //! partner for SS (sampling *per step* vs SS's sampling *per prune round*).
+//!
+//! [`stochastic_greedy`] is engine-backed: each step's probe set is one
+//! batched kernel dispatch. [`stochastic_greedy_reference`] is the frozen
+//! scalar loop — same RNG draw sequence (`sample_indices_into` reproduces
+//! `sample_indices` draw-for-draw), same probe scan, bit-identical output.
 
+use super::engine::{GainRoute, MaximizerEngine};
 use super::Solution;
 use crate::submodular::SubmodularFn;
 use crate::util::rng::Rng;
 use crate::util::stats::Timer;
 
+/// Batched stochastic greedy — bit-identical to
+/// [`stochastic_greedy_reference`], one kernel dispatch per step.
 pub fn stochastic_greedy(
+    f: &dyn SubmodularFn,
+    candidates: &[usize],
+    k: usize,
+    eps: f64,
+    seed: u64,
+) -> Solution {
+    MaximizerEngine::new(f, GainRoute::Direct).stochastic_greedy(candidates, k, eps, seed)
+}
+
+/// The scalar loop, frozen as the engine's bit-identity oracle and bench
+/// baseline.
+pub fn stochastic_greedy_reference(
     f: &dyn SubmodularFn,
     candidates: &[usize],
     k: usize,
@@ -83,6 +103,21 @@ mod tests {
             sv = s.value,
             gv = g.value
         );
+    }
+
+    #[test]
+    fn engine_backed_identical_to_scalar_reference() {
+        let f = feature_instance(80, 6, 6);
+        let all: Vec<usize> = (0..80).collect();
+        for seed in 0..6u64 {
+            for (k, eps) in [(5usize, 0.1f64), (12, 0.3), (80, 0.5)] {
+                let want = stochastic_greedy_reference(&f, &all, k, eps, seed);
+                let got = stochastic_greedy(&f, &all, k, eps, seed);
+                assert_eq!(got.set, want.set, "seed={seed} k={k} eps={eps}");
+                assert_eq!(got.value.to_bits(), want.value.to_bits());
+                assert_eq!(got.oracle_calls, want.oracle_calls);
+            }
+        }
     }
 
     #[test]

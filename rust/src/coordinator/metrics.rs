@@ -21,6 +21,10 @@ pub struct Counters {
     /// per importance-sampled round) — a separate counter because the unit
     /// is per-item, not pairwise.
     pub importance_evals: AtomicU64,
+    /// Marginal-gain evaluations dispatched through the batched-gain route
+    /// (one `f(v|S)` per cohort element) — the post-reduction maximizer's
+    /// work, in the same per-element unit as `Solution::oracle_calls`.
+    pub gain_evals: AtomicU64,
     pub tiles_dispatched: AtomicU64,
 }
 
@@ -69,6 +73,7 @@ impl Metrics {
             ("items_pruned", g(&self.counters.items_pruned)),
             ("divergence_evals", g(&self.counters.divergence_evals)),
             ("importance_evals", g(&self.counters.importance_evals)),
+            ("gain_evals", g(&self.counters.gain_evals)),
             ("tiles_dispatched", g(&self.counters.tiles_dispatched)),
             ("request_latency", hist(&self.request_latency)),
             ("queue_wait", hist(&self.queue_wait)),

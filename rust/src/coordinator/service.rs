@@ -22,7 +22,7 @@ use std::thread::JoinHandle;
 
 use anyhow::{anyhow, Result};
 
-use crate::algorithms::{lazy_greedy, sparsify, SsParams};
+use crate::algorithms::{sparsify, GainRoute, MaximizerEngine, SsParams};
 use crate::runtime::TiledRuntime;
 use crate::submodular::{BatchedDivergence, FacilityLocation, FeatureBased, Mixture};
 use crate::util::pool::ThreadPool;
@@ -298,7 +298,7 @@ fn handle(
         Compute::Cpu
     };
     let backend =
-        ShardedBackend::new(Arc::clone(&f), Arc::clone(pool), compute, Arc::clone(metrics))?;
+        ShardedBackend::new(Arc::clone(&f), Arc::clone(pool), compute.clone(), Arc::clone(metrics))?;
     let round_timer = Timer::new();
     let ss = sparsify(&backend, &req.params);
     if ss.rounds > 0 {
@@ -307,7 +307,25 @@ fn handle(
         metrics.round_latency.record_secs(round_timer.elapsed_s() / ss.rounds as f64);
     }
     metrics.add(&metrics.counters.items_pruned, (n - ss.kept.len()) as u64);
-    let sol = lazy_greedy(f.as_submodular(), &ss.kept, req.k);
+    // post-reduction maximizer through the batched engine. PJRT requests on
+    // a feature-based objective take the marginal-gain artifact route
+    // (f32 device gains, CPU fallback — same contract as the divergence
+    // side); everything else routes cohorts through the sharded backend,
+    // which fans large ones over the compute pool and meters `gain_evals`.
+    let sol = match &compute {
+        Compute::Pjrt(rt) if f.as_feature_based().is_some() => {
+            let mut eng =
+                MaximizerEngine::new(f.as_submodular(), GainRoute::Pjrt(rt.as_ref()));
+            let sol = eng.lazy_greedy(&ss.kept, req.k);
+            // the PJRT route dispatches cohorts straight at the artifact,
+            // bypassing ShardedBackend::gains_into — meter it here so
+            // accelerated requests account their maximizer work too
+            metrics.add(&metrics.counters.gain_evals, eng.stats().gain_evals);
+            sol
+        }
+        _ => MaximizerEngine::new(f.as_submodular(), GainRoute::Backend(&backend))
+            .lazy_greedy(&ss.kept, req.k),
+    };
     Ok(SummarizeResponse {
         summary: sol.set,
         value: sol.value,
@@ -348,6 +366,20 @@ mod tests {
         assert!(resp.reduced < 300);
         assert!(resp.value > 0.0);
         assert!(resp.latency_s >= resp.queue_s);
+    }
+
+    #[test]
+    fn maximizer_gain_evals_are_metered() {
+        // the post-reduction maximizer routes cohorts through the sharded
+        // backend, so its per-element evaluations land on `gain_evals`
+        let svc = SummarizationService::start(ServiceConfig::default(), None);
+        let resp = svc.submit(req(300, 4)).wait().unwrap();
+        assert_eq!(resp.summary.len(), 8);
+        let m = svc.metrics().snapshot();
+        assert!(
+            m.get("gain_evals").unwrap().as_f64().unwrap() > 0.0,
+            "engine gain route must be metered"
+        );
     }
 
     #[test]

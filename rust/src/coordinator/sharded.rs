@@ -23,10 +23,16 @@ use std::sync::{Arc, Mutex};
 
 use crate::algorithms::DivergenceBackend;
 use crate::runtime::TiledRuntime;
-use crate::submodular::BatchedDivergence;
+use crate::submodular::{BatchedDivergence, SolState};
 use crate::util::pool::ThreadPool;
 
 use super::metrics::Metrics;
+
+/// Gain-cohort size above which the batched-gain route fans out over the
+/// pool — below it the job-dispatch overhead beats the kernel win (lazy
+/// greedy's steady-state cohorts stay inline; the big initial fill and
+/// naive-greedy sweeps shard).
+const GAIN_SHARD_THRESHOLD: usize = 256;
 
 /// Where a shard's divergences are computed.
 #[derive(Clone)]
@@ -63,10 +69,12 @@ impl ShardedBackend {
     ) -> anyhow::Result<Self> {
         // singleton complements once, through the same compute path (PJRT
         // only has the feature-based singleton artifact). On the CPU route
-        // the precompute — the last serial per-request scan — shards over
-        // the pool when the objective is per-element decomposable;
-        // whole-vector objectives (facility location's top-2 scan) keep
-        // the serial form, which sharding would only multiply.
+        // the precompute shards over the pool: per-element-decomposable
+        // objectives split the output range; whole-vector objectives with a
+        // pooled variant (facility location's top-2 scan, mixtures holding
+        // one) shard their reduction dimension and merge in row order —
+        // both bit-identical to the serial forms. Only objectives with
+        // neither keep the serial scan.
         let shards = pool.threads() * 2;
         let sing = match (&compute, f.as_feature_based()) {
             (Compute::Pjrt(rt), Some(fb)) => {
@@ -82,7 +90,10 @@ impl ShardedBackend {
                 });
                 sing
             }
-            _ => f.singleton_complements(),
+            _ => match f.singleton_complements_pooled(&pool, shards) {
+                Some(sing) => sing,
+                None => f.singleton_complements(),
+            },
         };
         Ok(Self {
             f,
@@ -171,6 +182,23 @@ impl DivergenceBackend for ShardedBackend {
         // (the unit differs from the pairwise divergence_evals)
         self.metrics
             .add(&self.metrics.counters.importance_evals, items.len() as u64);
+    }
+
+    /// The batched-gain route: cohorts above [`GAIN_SHARD_THRESHOLD`] fan
+    /// out over the pool into disjoint slices of the engine's gain buffer
+    /// (per-element values are independent of the chunking, so sharding
+    /// never changes a bit); smaller cohorts run inline. Every evaluation
+    /// lands on the `gain_evals` counter.
+    fn gains_into(&self, state: &dyn SolState, candidates: &[usize], out: &mut [f64]) {
+        debug_assert_eq!(candidates.len(), out.len());
+        if candidates.len() >= GAIN_SHARD_THRESHOLD && self.shards > 1 {
+            self.pool.parallel_ranges_into(out, self.shards, |lo, hi, chunk| {
+                state.gains_into(&candidates[lo..hi], chunk);
+            });
+        } else {
+            state.gains_into(candidates, out);
+        }
+        self.metrics.add(&self.metrics.counters.gain_evals, candidates.len() as u64);
     }
 }
 
@@ -314,6 +342,39 @@ mod tests {
                 "sharded singleton precompute must be bit-identical to serial"
             );
         }
+    }
+
+    #[test]
+    fn sharded_gains_route_bitwise_matches_state_and_is_metered() {
+        use crate::submodular::SubmodularFn;
+        // 400 candidates crosses GAIN_SHARD_THRESHOLD → pool fan-out path;
+        // a small cohort stays inline — both must equal the state's own
+        // kernel bit-for-bit
+        let f = instance(400, 10, 8);
+        let pool = Arc::new(ThreadPool::new(3, 16));
+        let metrics = Arc::new(Metrics::new());
+        let b = ShardedBackend::new(Arc::clone(&f), pool, Compute::Cpu, Arc::clone(&metrics))
+            .unwrap()
+            .with_shards(7);
+        let mut st = f.state();
+        st.add(3);
+        st.add(91);
+        let big: Vec<usize> = (0..400).collect();
+        let small: Vec<usize> = (0..40).collect();
+        for cands in [&big, &small] {
+            let mut want = vec![0.0f64; cands.len()];
+            st.gains_into(cands, &mut want);
+            let mut got = vec![f64::NAN; cands.len()]; // dirty buffer
+            b.gains_into(st.as_ref(), cands, &mut got);
+            for (i, (a, w)) in got.iter().zip(&want).enumerate() {
+                assert_eq!(a.to_bits(), w.to_bits(), "slot {i} (|cands|={})", cands.len());
+            }
+        }
+        assert_eq!(
+            metrics.counters.gain_evals.load(std::sync::atomic::Ordering::Relaxed),
+            440,
+            "gain_evals must count every cohort element"
+        );
     }
 
     #[test]

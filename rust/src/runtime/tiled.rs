@@ -37,6 +37,8 @@ struct Scratch {
     v_feat: Vec<f32>,
     u_feat: Vec<f32>,
     u_sing: Vec<f32>,
+    /// padded coverage row for the marginal-gain route
+    cov: Vec<f32>,
 }
 
 impl TiledRuntime {
@@ -160,24 +162,71 @@ impl TiledRuntime {
         cov: &[f32],
         items: &[usize],
     ) -> Result<Vec<f32>> {
+        let mut result = vec![0.0f32; items.len()];
+        self.marginal_gains_into(feats, cov, items, &mut result)?;
+        Ok(result)
+    }
+
+    /// Write-into form of [`Self::marginal_gains`] — the maximizer
+    /// engine's PJRT gain route: `out[i]` receives `f(items[i] | S)` for
+    /// the coverage vector `cov`, so gain cohorts land straight in the
+    /// engine's staging buffer. The padded coverage row and item tiles
+    /// live in the reusable scratch (warm after the first cohort, D and B
+    /// are artifact constants); the remaining per-call clones are forced
+    /// by [`PjrtHandle`]'s owned-`Vec` ABI (see ROADMAP open items).
+    pub fn marginal_gains_into(
+        &self,
+        feats: &FeatureMatrix,
+        cov: &[f32],
+        items: &[usize],
+        out: &mut [f32],
+    ) -> Result<()> {
         let (_, b_tile, d_max) = self.geometry();
-        ensure!(feats.d <= d_max);
-        ensure!(cov.len() == feats.d);
-        let mut padded_cov = vec![0.0f32; d_max];
+        ensure!(feats.d <= d_max, "feature dim {} exceeds artifact D={d_max}", feats.d);
+        ensure!(cov.len() == feats.d, "coverage/feature dim mismatch");
+        ensure!(out.len() == items.len(), "out/items length mismatch");
+        let mut padded_cov = {
+            let mut s = self.scratch.lock().unwrap();
+            std::mem::take(&mut s.cov)
+        };
+        padded_cov.resize(d_max, 0.0);
         self.pad_dim(cov, feats.d, &mut padded_cov);
-        let mut result = Vec::with_capacity(items.len());
-        for iblock in items.chunks(b_tile) {
-            let mut v_feat = vec![0.0f32; b_tile * d_max];
+        for (iblock, out_block) in items.chunks(b_tile).zip(out.chunks_mut(b_tile)) {
+            let mut v_feat = {
+                let mut s = self.scratch.lock().unwrap();
+                std::mem::take(&mut s.v_feat)
+            };
+            v_feat.resize(b_tile * d_max, 0.0);
             for (slot, &v) in iblock.iter().enumerate() {
                 self.pad_dim(feats.row(v), feats.d, &mut v_feat[slot * d_max..(slot + 1) * d_max]);
             }
-            let g = self.handle.marginal_gains(padded_cov.clone(), v_feat)?;
-            result.extend_from_slice(&g[..iblock.len()]);
+            for pad_slot in iblock.len()..b_tile {
+                v_feat[pad_slot * d_max..(pad_slot + 1) * d_max].fill(0.0);
+            }
+            // restore the scratch buffers on the error path too — the
+            // engine's PJRT route falls back to CPU per-dispatch and will
+            // retry here on the next cohort
+            let g = match self.handle.marginal_gains(padded_cov.clone(), v_feat.clone()) {
+                Ok(g) => g,
+                Err(e) => {
+                    let mut s = self.scratch.lock().unwrap();
+                    s.v_feat = v_feat;
+                    s.cov = padded_cov;
+                    return Err(e);
+                }
+            };
+            {
+                let mut s = self.scratch.lock().unwrap();
+                s.v_feat = v_feat;
+            }
+            out_block.copy_from_slice(&g[..iblock.len()]);
             let mut st = self.stats.lock().unwrap();
             st.marginal_calls += 1;
             st.items_processed += iblock.len() as u64;
         }
-        Ok(result)
+        let mut s = self.scratch.lock().unwrap();
+        s.cov = padded_cov;
+        Ok(())
     }
 
     /// Batched `f(v|V∖v)` given the total mass vector.

@@ -13,6 +13,7 @@
 use std::cell::RefCell;
 
 use super::{BatchedDivergence, SolState, SubmodularFn};
+use crate::util::pool::ThreadPool;
 use crate::util::vecmath::{cosine, FeatureMatrix};
 
 /// Items per block of the cache-blocked kernels: the `block × P` f64
@@ -101,6 +102,88 @@ impl FacilityLocation {
                 }
             }
         }
+    }
+
+    /// Cache-blocked batched marginal gains against a per-ground-element
+    /// best-similarity vector: `out[j] = Σ_i max(0, sim(i, c_j) − best_i)`
+    /// — the maximizer engine's hot kernel for this objective. The scalar
+    /// [`SolState::gain`] walks one stride-`n` similarity *column* per
+    /// candidate (a cache miss per ground element); this kernel streams
+    /// rows contiguously and accumulates an `ITEM_BLOCK`-wide f64 tile per
+    /// row — the same loop inversion as [`Self::pair_gains_block`]. Per
+    /// candidate the ground elements are visited in the same ascending
+    /// order with the same f32-subtract / f64-accumulate widths as the
+    /// scalar loop, so the result is bit-identical regardless of how the
+    /// cohort is chunked.
+    pub fn gains_over_best_into(&self, best: &[f32], candidates: &[usize], out: &mut [f64]) {
+        debug_assert_eq!(best.len(), self.n);
+        debug_assert_eq!(candidates.len(), out.len());
+        for (cblock, out_block) in candidates.chunks(ITEM_BLOCK).zip(out.chunks_mut(ITEM_BLOCK)) {
+            out_block.fill(0.0);
+            for (i, &b) in best.iter().enumerate() {
+                let row = &self.sim[i * self.n..(i + 1) * self.n];
+                for (slot, &v) in out_block.iter_mut().zip(cblock) {
+                    let d = row[v] - b;
+                    if d > 0.0 {
+                        *slot += d as f64;
+                    }
+                }
+            }
+        }
+    }
+
+    /// The serial top-2 scan of similarity row `i` — shared by the serial
+    /// and row-sharded singleton precomputes so the two can never drift:
+    /// `(top1, argmax, top2)` under strict-`>` promotion (first occurrence
+    /// wins ties, duplicates count toward top2).
+    #[inline]
+    fn row_top2(&self, i: usize) -> (f32, usize, f32) {
+        let row = &self.sim[i * self.n..(i + 1) * self.n];
+        let (mut top1, mut arg1, mut top2) = (f32::NEG_INFINITY, usize::MAX, f32::NEG_INFINITY);
+        for (u, &s) in row.iter().enumerate() {
+            if s > top1 {
+                top2 = top1;
+                top1 = s;
+                arg1 = u;
+            } else if s > top2 {
+                top2 = s;
+            }
+        }
+        (top1, arg1, top2)
+    }
+
+    /// Row-sharded singleton-complement precompute — the parallel form of
+    /// the O(n²) top-2 scan that used to run serially at request start.
+    /// Phase 1 shards the *reduction* (row) dimension: each shard writes
+    /// its rows' `(argmax, top1 − top2)` results into disjoint slices of a
+    /// row-indexed buffer. Phase 2 scatters them serially in ascending-row
+    /// order — exactly the add sequence of the serial scan, so every
+    /// output slot's f64 fold is bit-identical (asserted in tests and by
+    /// the sharded-backend precompute suite).
+    pub fn singleton_complements_rowsharded(
+        &self,
+        pool: &ThreadPool,
+        shards: usize,
+    ) -> Vec<f64> {
+        let n = self.n;
+        let mut rows: Vec<(usize, f64)> = vec![(usize::MAX, 0.0); n];
+        pool.parallel_ranges_into(&mut rows[..], shards, |lo, _hi, chunk| {
+            for (slot, i) in chunk.iter_mut().zip(lo..) {
+                let (top1, arg1, top2) = self.row_top2(i);
+                *slot = if arg1 != usize::MAX && top1 > top2 {
+                    (arg1, (top1 - top2) as f64)
+                } else {
+                    (usize::MAX, 0.0)
+                };
+            }
+        });
+        let mut out = vec![0.0f64; n];
+        for &(arg, delta) in &rows {
+            if arg != usize::MAX {
+                out[arg] += delta;
+            }
+        }
+        out
     }
 
     /// Cache-blocked batched pair gains `f(v|u) = Σ_i max(0, sim(i,v) −
@@ -280,22 +363,19 @@ impl SubmodularFn for FacilityLocation {
         // Computed with a top-2 scan per row i: O(n²) once.
         let mut out = vec![0.0f64; self.n];
         for i in 0..self.n {
-            let row = &self.sim[i * self.n..(i + 1) * self.n];
-            let (mut top1, mut arg1, mut top2) = (f32::NEG_INFINITY, usize::MAX, f32::NEG_INFINITY);
-            for (u, &s) in row.iter().enumerate() {
-                if s > top1 {
-                    top2 = top1;
-                    top1 = s;
-                    arg1 = u;
-                } else if s > top2 {
-                    top2 = s;
-                }
-            }
+            let (top1, arg1, top2) = self.row_top2(i);
             if arg1 != usize::MAX && top1 > top2 {
                 out[arg1] += (top1 - top2) as f64;
             }
         }
         out
+    }
+
+    /// The top-2 scan scatters into arbitrary output slots, so the
+    /// per-element-decomposable route stays closed — but the scan *is*
+    /// shardable over rows: see [`Self::singleton_complements_rowsharded`].
+    fn singleton_complements_pooled(&self, pool: &ThreadPool, shards: usize) -> Option<Vec<f64>> {
+        Some(self.singleton_complements_rowsharded(pool, shards))
     }
 }
 
@@ -338,6 +418,14 @@ impl SolState for FlState<'_> {
 
     fn set(&self) -> &[usize] {
         &self.set
+    }
+
+    fn gains_into(&self, candidates: &[usize], out: &mut [f64]) {
+        self.f.gains_over_best_into(&self.best, candidates, out);
+    }
+
+    fn reserve_additions(&mut self, additional: usize) {
+        self.set.reserve(additional);
     }
 }
 
@@ -435,6 +523,50 @@ mod tests {
         for (vi, &v) in items.iter().enumerate() {
             for (ui, &u) in probes.iter().enumerate() {
                 assert_eq!(out_pg[vi * probes.len() + ui], f.pair_gain(u, v));
+            }
+        }
+    }
+
+    #[test]
+    fn batched_state_gains_bitwise_match_scalar() {
+        // 150 candidates spans multiple ITEM_BLOCK chunks incl. a ragged
+        // tail; the property driver also covers dirty buffers + reuse
+        let f = instance(150, 6);
+        check_batched_gains(&f, 140, 40);
+        let cands: Vec<usize> = (0..150).collect();
+        let mut st = f.state();
+        for &v in &[3usize, 77, 149] {
+            st.add(v);
+        }
+        let want: Vec<f64> = cands.iter().map(|&v| st.gain(v)).collect();
+        let mut out = vec![f64::NAN; cands.len()];
+        st.gains_into(&cands, &mut out);
+        for (got, w) in out.iter().zip(&want) {
+            assert_eq!(got.to_bits(), w.to_bits());
+        }
+    }
+
+    #[test]
+    fn rowsharded_singleton_precompute_bitwise_matches_serial() {
+        use crate::util::pool::ThreadPool;
+        // sizes chosen to exercise ragged shard tails and shards > rows
+        for (n, seed) in [(97usize, 7u64), (150, 8), (16, 9)] {
+            let f = instance(n, seed);
+            let want = f.singleton_complements();
+            let pool = ThreadPool::new(3, 16);
+            for shards in [1usize, 2, 7, 64] {
+                let got = f.singleton_complements_rowsharded(&pool, shards);
+                assert_eq!(got.len(), want.len());
+                for (v, (a, b)) in got.iter().zip(&want).enumerate() {
+                    assert_eq!(
+                        a.to_bits(),
+                        b.to_bits(),
+                        "slot {v} diverged (n={n}, shards={shards})"
+                    );
+                }
+                // the trait hook must route to the same computation
+                let hooked = f.singleton_complements_pooled(&pool, shards).unwrap();
+                assert_eq!(hooked, got);
             }
         }
     }

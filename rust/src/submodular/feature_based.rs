@@ -35,6 +35,8 @@ struct FbScratch {
     nz_d: Vec<u32>,
     /// nonzero values of the current item, aligned with `nz_d`
     nz_v: Vec<f32>,
+    /// g(cov) row, f64, for the batched marginal-gain path
+    gcov: Vec<f64>,
 }
 
 /// Concave scalarizer `g`. Must satisfy `g(0) = 0`, `g' > 0`, `g'' < 0`.
@@ -105,6 +107,36 @@ impl FeatureBased {
     /// Total feature mass c(V) (cached).
     pub fn total_mass(&self) -> &[f32] {
         &self.total
+    }
+
+    /// Batched form of [`Self::gain_over_cov`]: `out[j] = f(c_j | S)` for a
+    /// cohort of candidates against one coverage vector — the maximizer
+    /// engine's hot kernel. The scalar loop re-evaluates `g(cov_d)` for
+    /// every (candidate, dim) pair; here the `g(cov)` row is computed once
+    /// per call (thread-local scratch, warm across cohorts since D is
+    /// constant) and reused by the whole cohort, halving the concave-eval
+    /// count on the √ path. Bit-identical to the scalar loop: same dims
+    /// visited in the same order with the same f64 widths, and the cached
+    /// `g(cov_d)` is the very value the scalar path recomputes.
+    pub fn gains_over_cov_into(&self, cov: &[f32], candidates: &[usize], out: &mut [f64]) {
+        debug_assert_eq!(cov.len(), self.feats.d);
+        debug_assert_eq!(candidates.len(), out.len());
+        let g = self.g;
+        FB_SCRATCH.with(|cell| {
+            let s = &mut *cell.borrow_mut();
+            s.gcov.clear();
+            s.gcov.extend(cov.iter().map(|&c| g.apply(c as f64)));
+            for (slot, &v) in out.iter_mut().zip(candidates) {
+                let row = self.feats.row(v);
+                let mut acc = 0.0f64;
+                for ((&c, &x), &gc) in cov.iter().zip(row).zip(&s.gcov) {
+                    if x > 0.0 {
+                        acc += g.apply((c + x) as f64) - gc;
+                    }
+                }
+                *slot = acc;
+            }
+        });
     }
 
     /// Blocked divergence kernel: `w_{U,v} = min_u [f(v|u) − sing_u]` for a
@@ -406,6 +438,18 @@ impl SolState for FeatureState<'_> {
     fn set(&self) -> &[usize] {
         &self.set
     }
+
+    fn gains_into(&self, candidates: &[usize], out: &mut [f64]) {
+        self.f.gains_over_cov_into(&self.cov, candidates, out);
+    }
+
+    fn reserve_additions(&mut self, additional: usize) {
+        self.set.reserve(additional);
+    }
+
+    fn feature_coverage(&self) -> Option<&[f32]> {
+        Some(&self.cov)
+    }
 }
 
 struct FeatureBidir<'a> {
@@ -563,6 +607,22 @@ mod tests {
     fn eval_empty_zero() {
         let f = instance(5, 3, 6);
         assert_eq!(f.eval(&[]), 0.0);
+    }
+
+    #[test]
+    fn batched_state_gains_bitwise_match_scalar() {
+        // sqrt and log1p paths, dirty buffers, repeated calls
+        let f = instance(25, 9, 13);
+        check_batched_gains(&f, 130, 60);
+        let mut rng = Rng::new(14);
+        let mut m = FeatureMatrix::zeros(18, 5);
+        for i in 0..18 {
+            for j in 0..5 {
+                m.row_mut(i)[j] = if rng.bool(0.5) { rng.f32() } else { 0.0 };
+            }
+        }
+        let f = FeatureBased::new(m, Concave::Log1p);
+        check_batched_gains(&f, 131, 40);
     }
 
     #[test]

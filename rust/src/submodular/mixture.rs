@@ -10,6 +10,7 @@
 use std::cell::RefCell;
 
 use super::{BatchedDivergence, SolState, SubmodularFn};
+use crate::util::pool::ThreadPool;
 
 thread_local! {
     /// Per-thread delegation scratch: the combined accumulator and the
@@ -26,6 +27,8 @@ struct MixScratch {
     acc: Vec<f64>,
     /// current component's pair-gain tile
     part: Vec<f64>,
+    /// current component's stateful-gain cohort (maximizer engine path)
+    gains: Vec<f64>,
 }
 
 pub struct Mixture {
@@ -97,6 +100,36 @@ impl SubmodularFn for Mixture {
                 *dst += a * s;
             }
         }
+    }
+
+    /// Pool-backed precompute: each part takes its best available route —
+    /// its own pooled variant (facility location's row-sharded scan), the
+    /// decomposable per-element shard, or the serial fallback — and the
+    /// combination keeps the serial form's part order and `+= a·s` fold,
+    /// so the result is bit-identical to [`Self::singleton_complements`].
+    /// Before this, one facility-location term forced the whole mixture
+    /// onto the serial O(n²) path at request start.
+    fn singleton_complements_pooled(&self, pool: &ThreadPool, shards: usize) -> Option<Vec<f64>> {
+        let n = self.n();
+        let items: Vec<usize> = (0..n).collect();
+        let mut acc = vec![0.0f64; n];
+        let mut part = vec![0.0f64; n];
+        for (a, p) in &self.parts {
+            if let Some(v) = p.singleton_complements_pooled(pool, shards) {
+                part.copy_from_slice(&v);
+            } else if p.singleton_complements_decomposable() {
+                let pref: &dyn BatchedDivergence = p.as_ref();
+                pool.parallel_ranges_into(&mut part[..], shards, |lo, hi, chunk| {
+                    pref.singleton_complements_into(&items[lo..hi], chunk);
+                });
+            } else {
+                part.copy_from_slice(&p.singleton_complements());
+            }
+            for (dst, &s) in acc.iter_mut().zip(&part) {
+                *dst += a * s;
+            }
+        }
+        Some(acc)
     }
 }
 
@@ -213,6 +246,35 @@ impl SolState for MixState<'_> {
     fn set(&self) -> &[usize] {
         &self.set
     }
+
+    /// Delegate the cohort to each part's batched kernel and combine with
+    /// the scalar loop's exact fold: per candidate, parts in declaration
+    /// order starting from 0.0 — the same left fold `Σ a_k · g_k` the
+    /// scalar [`SolState::gain`] performs, so the delegated batch stays
+    /// bit-identical as long as each part's kernel is. The per-part cohort
+    /// lives in thread-local scratch (take/restore, so a nested mixture
+    /// re-entering this path sees an empty temporary, not a double
+    /// borrow).
+    fn gains_into(&self, candidates: &[usize], out: &mut [f64]) {
+        debug_assert_eq!(candidates.len(), out.len());
+        out.fill(0.0);
+        let mut part = MIX_SCRATCH.with(|cell| std::mem::take(&mut cell.borrow_mut().gains));
+        part.resize(out.len(), 0.0);
+        for (a, st) in &self.states {
+            st.gains_into(candidates, &mut part[..out.len()]);
+            for (dst, &g) in out.iter_mut().zip(&part[..out.len()]) {
+                *dst += a * g;
+            }
+        }
+        MIX_SCRATCH.with(|cell| cell.borrow_mut().gains = part);
+    }
+
+    fn reserve_additions(&mut self, additional: usize) {
+        self.set.reserve(additional);
+        for (_, s) in &mut self.states {
+            s.reserve_additions(additional);
+        }
+    }
 }
 
 #[cfg(test)]
@@ -314,6 +376,51 @@ mod tests {
         let mut out = vec![0.0f32; items.len()];
         outer.divergences_into(&probes, &probe_sing, &items, &mut out);
         assert_eq!(out, want);
+    }
+
+    #[test]
+    fn batched_state_gains_bitwise_match_scalar() {
+        // feature-based + facility-location parts: both blocked stateful
+        // kernels in the delegation, plus a nested-mixture re-entrancy leg
+        let n = 30;
+        let m = feats(n, 6, 15);
+        let f = Mixture::new(vec![
+            (0.6, Box::new(FeatureBased::sqrt(m.clone())) as Box<dyn BatchedDivergence>),
+            (0.4, Box::new(FacilityLocation::from_features(&m))),
+        ]);
+        check_batched_gains(&f, 150, 40);
+        let inner = Mixture::new(vec![
+            (1.0, Box::new(FeatureBased::sqrt(m.clone())) as Box<dyn BatchedDivergence>),
+            (0.5, Box::new(Modular::new(vec![0.3; n]))),
+        ]);
+        let outer = Mixture::new(vec![
+            (0.8, Box::new(inner) as Box<dyn BatchedDivergence>),
+            (0.2, Box::new(FacilityLocation::from_features(&m))),
+        ]);
+        check_batched_gains(&outer, 151, 25);
+    }
+
+    #[test]
+    fn pooled_singleton_precompute_bitwise_matches_serial() {
+        use crate::util::pool::ThreadPool;
+        // FL part takes its row-sharded route, FB part the decomposable
+        // shard, modular part the serial fallback — combination must stay
+        // bit-identical to the fully serial form
+        let n = 90;
+        let m = feats(n, 7, 16);
+        let f = Mixture::new(vec![
+            (0.5, Box::new(FeatureBased::sqrt(m.clone())) as Box<dyn BatchedDivergence>),
+            (0.3, Box::new(FacilityLocation::from_features(&m))),
+            (0.2, Box::new(Modular::new(vec![0.7; n]))),
+        ]);
+        let want = f.singleton_complements();
+        let pool = ThreadPool::new(3, 16);
+        for shards in [1usize, 4, 9] {
+            let got = f.singleton_complements_pooled(&pool, shards).unwrap();
+            for (v, (a, b)) in got.iter().zip(&want).enumerate() {
+                assert_eq!(a.to_bits(), b.to_bits(), "slot {v} diverged (shards={shards})");
+            }
+        }
     }
 
     #[test]

@@ -24,6 +24,14 @@
 //! [`FacilityLocation`] and [`Mixture`] override it with blocked kernels
 //! (see [`batched`] for the contract).
 //!
+//! The *stateful* counterpart is [`SolState::gains_into`]: batched marginal
+//! gains `f(v|S)` under the current solution, which the maximizer engine
+//! ([`crate::algorithms::MaximizerEngine`]) dispatches per cohort instead
+//! of calling the scalar [`SolState::gain`] once per element. Every
+//! override must be bit-identical to the scalar loop — the engine's lazy
+//! greedy is only Minoux-exact against the scalar reference because the
+//! gains themselves never differ by a bit.
+//!
 //! [`bidir_state`]: SubmodularFn::bidir_state
 
 pub mod batched;
@@ -43,6 +51,8 @@ pub use graph_cut::GraphCut;
 pub use mixture::Mixture;
 pub use modular::Modular;
 pub use sparsification_objective::SparsificationObjective;
+
+use crate::util::pool::ThreadPool;
 
 /// A normalized (`f(∅) = 0`) non-negative submodular set function over a
 /// ground set `{0, .., n-1}`.
@@ -114,6 +124,27 @@ pub trait SubmodularFn: Send + Sync {
         }
     }
 
+    /// Pool-sharded variant of [`singleton_complements`] for objectives
+    /// whose whole-vector precompute is **not** per-element decomposable
+    /// but *is* shardable over its reduction dimension — facility
+    /// location's top-2 row scan being the canonical case: each shard
+    /// computes its rows' `(argmax, top1 − top2)` results, and the leader
+    /// scatters them in ascending-row order, so every output slot sees the
+    /// exact add sequence of the serial scan (bit-identity preserved).
+    /// Backends try this after [`singleton_complements_decomposable`];
+    /// `None` (the default) means no such variant exists and the serial
+    /// whole-vector form is the only option.
+    ///
+    /// [`singleton_complements`]: SubmodularFn::singleton_complements
+    /// [`singleton_complements_decomposable`]: SubmodularFn::singleton_complements_decomposable
+    fn singleton_complements_pooled(
+        &self,
+        _pool: &ThreadPool,
+        _shards: usize,
+    ) -> Option<Vec<f64>> {
+        None
+    }
+
     /// Add/remove-capable state starting from an arbitrary set, when the
     /// objective supports efficient removal (needed by bi-directional
     /// greedy). `None` (the default) opts out.
@@ -130,7 +161,14 @@ pub trait SubmodularFn: Send + Sync {
 }
 
 /// Incremental solution state: supports gain queries and additions.
-pub trait SolState: Send {
+///
+/// `Sync` because the maximizer engine fans gain cohorts over the worker
+/// pool: shards evaluate [`gains_into`] on disjoint candidate ranges
+/// against one shared `&dyn SolState`. All queries are `&self`; mutation
+/// (`add`) stays exclusive to the single-threaded commit step.
+///
+/// [`gains_into`]: SolState::gains_into
+pub trait SolState: Send + Sync {
     /// Current `f(S)`.
     fn value(&self) -> f64;
     /// Marginal gain `f(v | S)`.
@@ -139,6 +177,39 @@ pub trait SolState: Send {
     fn add(&mut self, v: usize);
     /// Elements committed so far, in insertion order.
     fn set(&self) -> &[usize];
+
+    /// Batched marginal gains: `out[i] = f(candidates[i] | S)`,
+    /// **bit-identical** to the scalar [`gain`] loop. The default is that
+    /// loop — correct for every objective with no override; the production
+    /// states override it with blocked kernels ([`FeatureBased`] caches
+    /// `g(cov)` across the cohort, [`FacilityLocation`] streams similarity
+    /// rows instead of striding columns, [`Mixture`] delegates to its
+    /// parts). Per-element values are independent of how `candidates` is
+    /// chunked, so callers may split a cohort across threads into disjoint
+    /// `out` slices without changing a bit.
+    ///
+    /// [`gain`]: SolState::gain
+    fn gains_into(&self, candidates: &[usize], out: &mut [f64]) {
+        debug_assert_eq!(candidates.len(), out.len());
+        for (slot, &v) in out.iter_mut().zip(candidates) {
+            *slot = self.gain(v);
+        }
+    }
+
+    /// Capacity hint: the caller will `add` at most `additional` more
+    /// elements. Default no-op; production states reserve their solution
+    /// vector so steady-state maximizer iterations never touch the
+    /// allocator (the invariant `rust/tests/alloc_steady_state.rs`
+    /// enforces).
+    fn reserve_additions(&mut self, _additional: usize) {}
+
+    /// Specialization hook: states whose gains are a function of a dense
+    /// coverage vector over a [`FeatureBased`] core expose it, so
+    /// accelerated routes can batch cohorts through the PJRT marginal-gain
+    /// artifact (`runtime/tiled.rs`). `None` (the default) opts out.
+    fn feature_coverage(&self) -> Option<&[f32]> {
+        None
+    }
 }
 
 /// Add/remove state over an explicit member set (bi-directional greedy).
@@ -240,6 +311,37 @@ pub(crate) mod test_support {
                     .fold(f32::INFINITY, f32::min)
             })
             .collect()
+    }
+
+    /// Batched stateful gains must be bit-identical to the scalar loop at
+    /// every prefix of a random add-chain — the contract the maximizer
+    /// engine's Minoux-exactness rests on. Exercises dirty output buffers
+    /// and repeated calls (scratch reuse must not leak state).
+    pub fn check_batched_gains(f: &dyn SubmodularFn, seed: u64, cases: usize) {
+        let n = f.n();
+        check_seeded(seed, cases, |g: &mut Gen| {
+            let chain = g.subset(n, 0..n.min(8));
+            let cands = g.subset(n, 1..n.min(16).max(2));
+            let mut st = f.state();
+            for step in 0..=chain.len() {
+                let want: Vec<f64> = cands.iter().map(|&v| st.gain(v)).collect();
+                let mut out = vec![f64::NAN; cands.len()];
+                for _ in 0..2 {
+                    st.gains_into(&cands, &mut out);
+                    for (i, (&got, &w)) in out.iter().zip(&want).enumerate() {
+                        assert_eq!(
+                            got.to_bits(),
+                            w.to_bits(),
+                            "gains_into[{i}] (v={}) diverged from scalar gain at chain step {step}",
+                            cands[i]
+                        );
+                    }
+                }
+                if step < chain.len() {
+                    st.add(chain[step]);
+                }
+            }
+        });
     }
 
     /// pair_gain and singleton_complements must agree with eval.

@@ -163,6 +163,14 @@ impl Rng {
     /// with the keyed race array living in caller-owned `keyed` scratch so
     /// importance-sampled SS rounds reuse it instead of reallocating.
     ///
+    /// Selection is **partial** — `select_nth_unstable_by` moves the `k`
+    /// largest keys to the front in O(m) expected instead of the former
+    /// full O(m log m) descending sort. The order is the strict total
+    /// order `(key desc by total_cmp, index asc)`, so the selected *set*
+    /// (and therefore the ascending-sorted output) is a pure function of
+    /// the draws — exactly what the full sort produced, asserted by the
+    /// equivalence test below. The Exp(1) draw sequence is unchanged.
+    ///
     /// [`weighted_indices`]: Rng::weighted_indices
     pub fn weighted_indices_into(
         &mut self,
@@ -178,8 +186,15 @@ impl Rng {
             let key = if w > 0.0 { w / e } else { -e }; // zero-weight sinks
             (key, i)
         }));
-        keyed.sort_unstable_by(|a, b| b.0.partial_cmp(&a.0).unwrap());
         out.clear();
+        if k == 0 {
+            return;
+        }
+        if k < keyed.len() {
+            keyed.select_nth_unstable_by(k - 1, |a, b| {
+                b.0.total_cmp(&a.0).then_with(|| a.1.cmp(&b.1))
+            });
+        }
         out.extend(keyed[..k].iter().map(|&(_, i)| i));
         out.sort_unstable();
     }
@@ -304,6 +319,60 @@ mod tests {
                 let want = a.weighted_indices(&w, k);
                 b.weighted_indices_into(&w, k, &mut out, &mut keyed);
                 assert_eq!(out, want, "k={k}");
+            }
+        }
+    }
+
+    /// The pre-refactor path, frozen: full descending sort of the keyed
+    /// race array. Canonicalized with the same strict `(key desc, index
+    /// asc)` total order the partial selection uses, so the comparison is
+    /// well-defined even under exact key ties (duplicate weights alone
+    /// never tie — each key carries an independent Exp(1) draw).
+    fn weighted_indices_full_sort_reference(rng: &mut Rng, weights: &[f64], k: usize) -> Vec<usize> {
+        let mut keyed: Vec<(f64, usize)> = weights
+            .iter()
+            .enumerate()
+            .map(|(i, &w)| {
+                let e = -rng.f64().max(1e-300).ln();
+                let key = if w > 0.0 { w / e } else { -e };
+                (key, i)
+            })
+            .collect();
+        keyed.sort_unstable_by(|a, b| b.0.total_cmp(&a.0).then_with(|| a.1.cmp(&b.1)));
+        let mut out: Vec<usize> = keyed[..k].iter().map(|&(_, i)| i).collect();
+        out.sort_unstable();
+        out
+    }
+
+    #[test]
+    fn weighted_partial_selection_matches_full_sort_reference() {
+        // the satellite invariant: O(m) expected selection, identical draw
+        // sequence, identical result — across weight shapes (uniform,
+        // heavy-tailed, duplicates, zeros) and every k regime
+        let mut keyed = Vec::new();
+        let mut out = Vec::new();
+        for seed in 0..12u64 {
+            let mut gen_w = Rng::new(seed ^ 0x5EED);
+            let m = 1 + gen_w.below(120);
+            let w: Vec<f64> = (0..m)
+                .map(|_| match gen_w.below(4) {
+                    0 => 0.0,
+                    1 => 1.0, // duplicates
+                    2 => gen_w.f64() * 1e6,
+                    _ => gen_w.f64(),
+                })
+                .collect();
+            for k in [0usize, 1, m / 3, m.saturating_sub(1), m] {
+                let mut a = Rng::new(seed.wrapping_mul(31).wrapping_add(k as u64));
+                let mut b = a.clone();
+                let want = weighted_indices_full_sort_reference(&mut a, &w, k);
+                b.weighted_indices_into(&w, k, &mut out, &mut keyed);
+                assert_eq!(out, want, "m={m} k={k} seed={seed}");
+                assert_eq!(
+                    a.next_u64(),
+                    b.next_u64(),
+                    "draw streams must stay aligned after selection"
+                );
             }
         }
     }

@@ -246,6 +246,23 @@ impl LazyMaxHeap {
         Self { heap: std::collections::BinaryHeap::new() }
     }
 
+    pub fn with_capacity(cap: usize) -> Self {
+        Self { heap: std::collections::BinaryHeap::with_capacity(cap) }
+    }
+
+    /// Reserve room for `additional` more entries beyond the current
+    /// length. The maximizer engine sizes the heap to the candidate count
+    /// up front — its pop/push cycles never grow past it, so steady-state
+    /// iterations stay allocation-free.
+    pub fn reserve(&mut self, additional: usize) {
+        self.heap.reserve(additional);
+    }
+
+    /// Drop all entries, keeping the allocation (arena reuse across runs).
+    pub fn clear(&mut self) {
+        self.heap.clear();
+    }
+
     pub fn push(&mut self, id: usize, priority: f32, version: u64) {
         self.heap.push(HeapEntry { priority, id, version });
     }

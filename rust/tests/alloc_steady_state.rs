@@ -2,7 +2,11 @@
 //! sampler scratch and kernel thread-locals are warm (rounds 1–2), an SS
 //! round on the CPU reference backend performs **zero heap allocations**,
 //! and on the sharded pool backend a small constant number (job dispatch:
-//! boxed shard closures + the completion latch), independent of `n`.
+//! boxed shard closures + the completion latch), independent of `n`. The
+//! same invariant holds for the maximizer engine: once its arena is sized
+//! (heap, version maps, cohort buffers) and the state has reserved its
+//! solution vector, steady-state lazy-greedy iterations — cohort kernel,
+//! heap churn, commits — allocate **exactly zero** on the CPU route.
 //!
 //! This file deliberately contains a single `#[test]`: the counting
 //! allocator is process-global, so concurrent tests in the same binary
@@ -13,10 +17,11 @@ use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::{Arc, Mutex};
 
 use submodular_ss::algorithms::{
-    sparsify, sparsify_candidates_reference, CpuBackend, DivergenceBackend, SsParams,
+    sparsify, sparsify_candidates_reference, CpuBackend, DivergenceBackend, GainRoute,
+    MaximizerEngine, SsParams,
 };
 use submodular_ss::coordinator::{Compute, Metrics, ShardedBackend};
-use submodular_ss::submodular::FeatureBased;
+use submodular_ss::submodular::{FeatureBased, SolState, SubmodularFn};
 use submodular_ss::util::pool::ThreadPool;
 use submodular_ss::util::rng::Rng;
 use submodular_ss::util::vecmath::FeatureMatrix;
@@ -92,6 +97,66 @@ impl DivergenceBackend for RoundProbe<'_> {
     }
 }
 
+/// Objective wrapper whose states snapshot the allocation counter at every
+/// batched-gain dispatch — the deltas between consecutive snapshots are
+/// exactly the allocations of one engine segment (previous cohort kernel +
+/// heap churn + commits + bookkeeping). Scalar `gain` panics: the engine
+/// must route exclusively through `gains_into`.
+struct GainProbe<'a> {
+    inner: &'a FeatureBased,
+    marks: Mutex<Vec<u64>>,
+}
+
+impl<'a> GainProbe<'a> {
+    fn new(inner: &'a FeatureBased) -> Self {
+        // pre-reserve so the marks themselves never allocate mid-run
+        Self { inner, marks: Mutex::new(Vec::with_capacity(4096)) }
+    }
+
+    fn marks(&self) -> Vec<u64> {
+        self.marks.lock().unwrap().clone()
+    }
+}
+
+impl SubmodularFn for GainProbe<'_> {
+    fn n(&self) -> usize {
+        self.inner.n()
+    }
+    fn eval(&self, s: &[usize]) -> f64 {
+        self.inner.eval(s)
+    }
+    fn state<'b>(&'b self) -> Box<dyn SolState + 'b> {
+        Box::new(ProbeState { inner: self.inner.state(), marks: &self.marks })
+    }
+}
+
+struct ProbeState<'b> {
+    inner: Box<dyn SolState + 'b>,
+    marks: &'b Mutex<Vec<u64>>,
+}
+
+impl SolState for ProbeState<'_> {
+    fn value(&self) -> f64 {
+        self.inner.value()
+    }
+    fn gain(&self, _v: usize) -> f64 {
+        panic!("maximizer engine must route through gains_into");
+    }
+    fn add(&mut self, v: usize) {
+        self.inner.add(v);
+    }
+    fn set(&self) -> &[usize] {
+        self.inner.set()
+    }
+    fn gains_into(&self, candidates: &[usize], out: &mut [f64]) {
+        self.marks.lock().unwrap().push(ALLOCS.load(Ordering::Relaxed));
+        self.inner.gains_into(candidates, out);
+    }
+    fn reserve_additions(&mut self, additional: usize) {
+        self.inner.reserve_additions(additional);
+    }
+}
+
 fn feature_instance(n: usize, d: usize, seed: u64) -> FeatureBased {
     let mut rng = Rng::new(seed);
     let mut m = FeatureMatrix::zeros(n, d);
@@ -145,4 +210,33 @@ fn steady_state_rounds_allocate_zero_on_cpu_and_o_shards_on_pool() {
         "sharded steady-state rounds allocated {steady} > budget {budget} \
          over {rounds_measured} rounds (marks: {marks:?})"
     );
+
+    // --- maximizer engine, CPU route: exactly zero per steady iteration ---
+    // Mark 0 is the initial full-candidate fill (kernel thread-locals warm
+    // up there); every delta from mark 2 to the final mark covers whole
+    // engine segments — cohort kernel + heap churn + commits — with a warm
+    // arena, and must not touch the allocator at all.
+    let f3 = feature_instance(3000, 12, 5);
+    let probe_f = GainProbe::new(&f3);
+    let mut eng = MaximizerEngine::new(&probe_f, GainRoute::Direct);
+    let sol = eng.lazy_greedy(&(0..3000).collect::<Vec<_>>(), 40);
+    assert_eq!(sol.set.len(), 40);
+    let marks = probe_f.marks();
+    assert!(
+        marks.len() >= 8,
+        "need ≥8 gain dispatches to observe a steady state, got {}",
+        marks.len()
+    );
+    let steady = marks[marks.len() - 1] - marks[2];
+    assert_eq!(
+        steady, 0,
+        "steady-state maximizer iterations allocated {steady} times (marks: {marks:?})"
+    );
+    // the probed run must still be the canonical solution
+    let want = submodular_ss::algorithms::lazy_greedy_reference(
+        &f3,
+        &(0..3000).collect::<Vec<_>>(),
+        40,
+    );
+    assert_eq!(sol.set, want.set);
 }
