@@ -1,0 +1,203 @@
+//! Perf: the **streaming ingestion subsystem** vs the only alternative the
+//! repo had before it — ad-hoc batch re-runs (rebuild the objective over
+//! the full prefix and run `ss_then_greedy` from scratch at every summary
+//! point). The stream leg drives a `StreamSession` (windowed
+//! re-sparsification + intermediate stochastic snapshots + one final exact
+//! snapshot); the baseline leg re-runs the batch pipeline on the growing
+//! prefix at the same summary points. Work compared: same arrival order,
+//! same k, same SS parameters, one summary per "day" plus a final one.
+//!
+//! Reported: append throughput (elements/s through the session, inline
+//! re-sparsifications included), attributed per-re-sparsify latency, both
+//! legs' totals, and final-summary relative utility (stream vs batch
+//! oracle at matched k — the quality cost of windowed eviction).
+//! Machine-readable `BENCH_stream.json` lands at the repository root.
+//!
+//! Asserts (skipped under SS_SMOKE=1, CI's release-smoke leg):
+//! * no-regression gate: stream total ≥ 0.9× the batch-rerun total
+//!   (streaming exists to beat prefix re-runs; it must at minimum never
+//!   lose to them beyond noise),
+//! * quality: final stream summary ≥ 0.85× the batch oracle's value on
+//!   redundancy-heavy data.
+//!
+//! Run: `cargo bench --bench perf_stream` (SS_FULL=1 for paper scale,
+//! SS_SMOKE=1 for the CI smoke).
+
+use std::sync::Arc;
+
+use submodular_ss::algorithms::{ss_then_greedy, SsParams};
+use submodular_ss::bench::{full_scale, Table};
+use submodular_ss::coordinator::{Compute, Metrics, ShardedBackend};
+use submodular_ss::stream::{SnapshotMode, StreamConfig, StreamObjective, StreamSession};
+use submodular_ss::submodular::{BatchedDivergence, Concave, FeatureBased};
+use submodular_ss::util::json::Json;
+use submodular_ss::util::pool::ThreadPool;
+use submodular_ss::util::rng::Rng;
+use submodular_ss::util::stats::Timer;
+use submodular_ss::util::vecmath::FeatureMatrix;
+
+/// Redundancy-heavy stream (clustered rows): SS's natural habitat, and the
+/// regime where windowed eviction is supposed to be near-lossless.
+fn clustered_rows(n: usize, clusters: usize, d: usize, seed: u64) -> FeatureMatrix {
+    let mut rng = Rng::new(seed);
+    let centers: Vec<Vec<f32>> = (0..clusters)
+        .map(|_| (0..d).map(|_| if rng.bool(0.4) { rng.f32() * 3.0 } else { 0.0 }).collect())
+        .collect();
+    let mut m = FeatureMatrix::zeros(n, d);
+    for i in 0..n {
+        let c = &centers[rng.below(clusters)];
+        for j in 0..d {
+            m.row_mut(i)[j] = (c[j] + 0.05 * rng.f32()).max(0.0);
+        }
+    }
+    m
+}
+
+fn main() {
+    let smoke = std::env::var("SS_SMOKE").map(|v| v == "1").unwrap_or(false);
+    let (days, per_day) = if full_scale() {
+        (12usize, 8_000usize)
+    } else if smoke {
+        (5, 800)
+    } else {
+        (10, 4_000)
+    };
+    let d = 16;
+    let k = 10;
+    let n_total = days * per_day;
+    let seed = 7u64;
+    let params = SsParams::default().with_seed(seed);
+    let high_water = (2 * per_day / 3).max(64);
+
+    let data = clustered_rows(n_total, 25, d, seed);
+    let pool = Arc::new(ThreadPool::default_for_host());
+
+    // --- baseline: batch re-run over the growing prefix at every day ---
+    let base_timer = Timer::new();
+    let mut batch_final_value = 0.0f64;
+    for day in 1..=days {
+        let prefix = day * per_day;
+        let f: Arc<dyn BatchedDivergence> =
+            Arc::new(FeatureBased::sqrt(data.gather(&(0..prefix).collect::<Vec<_>>())));
+        let backend = ShardedBackend::new(
+            Arc::clone(&f),
+            Arc::clone(&pool),
+            Compute::Cpu,
+            Arc::new(Metrics::new()),
+        )
+        .unwrap();
+        let (_ss, sol) = ss_then_greedy(f.as_submodular(), &backend, k, &params);
+        batch_final_value = sol.value;
+    }
+    let baseline_s = base_timer.elapsed_s();
+
+    // --- stream: one session, windowed re-sparsify, daily snapshots ---
+    let stream_timer = Timer::new();
+    let mut sess = StreamSession::new(
+        StreamObjective::Features(Concave::Sqrt),
+        d,
+        StreamConfig::new(k).with_ss(params.clone()).with_high_water(high_water),
+        Arc::clone(&pool),
+        Arc::new(Metrics::new()),
+    )
+    .unwrap();
+    sess.reserve(n_total);
+    let mut append_s = 0.0f64;
+    let mut resparsify_total_s = 0.0f64;
+    let mut windows = 0usize;
+    let mut snapshot_s = 0.0f64;
+    for day in 0..days {
+        let t = Timer::new();
+        let r = sess
+            .append(&data.data()[day * per_day * d..(day + 1) * per_day * d])
+            .unwrap();
+        append_s += t.elapsed_s();
+        // the session times its own re-sparsifications (SS pass +
+        // compaction only), so the latency row is not polluted by the
+        // day's per-element append/filter work
+        resparsify_total_s += r.resparsify_s;
+        windows += r.resparsifies;
+        let t = Timer::new();
+        let snap = sess.snapshot_summary(SnapshotMode::Intermediate).unwrap();
+        snapshot_s += t.elapsed_s();
+        assert_eq!(snap.summary.len(), k.min(sess.live()));
+    }
+    let t = Timer::new();
+    let final_snap = sess.snapshot_summary(SnapshotMode::Final).unwrap();
+    snapshot_s += t.elapsed_s();
+    let stream_s = stream_timer.elapsed_s();
+    let stats = sess.close();
+
+    let speedup = baseline_s / stream_s;
+    let rel_utility = final_snap.value / batch_final_value;
+    let append_throughput = n_total as f64 / append_s;
+    let resparsify_latency_s =
+        if windows > 0 { resparsify_total_s / windows as f64 } else { 0.0 };
+
+    let mut table = Table::new(
+        "Streaming session vs ad-hoc batch re-runs (one summary per day)",
+        &[
+            "n_total", "days", "hw", "batch_s", "stream_s", "speedup", "appends/s",
+            "resparsify_s", "windows", "live_end", "rel_utility",
+        ],
+    );
+    table.row(vec![
+        n_total.to_string(),
+        days.to_string(),
+        high_water.to_string(),
+        format!("{baseline_s:.3}"),
+        format!("{stream_s:.3}"),
+        format!("{speedup:.2}x"),
+        format!("{append_throughput:.0}"),
+        format!("{resparsify_latency_s:.4}"),
+        windows.to_string(),
+        stats.live.to_string(),
+        format!("{rel_utility:.4}"),
+    ]);
+    table.print();
+
+    let report = Json::obj(vec![
+        ("bench", Json::Str("perf_stream".to_string())),
+        ("threads", Json::Num(pool.threads() as f64)),
+        ("smoke", Json::Num(if smoke { 1.0 } else { 0.0 })),
+        ("full_scale", Json::Num(if full_scale() { 1.0 } else { 0.0 })),
+        ("n_total", Json::Num(n_total as f64)),
+        ("days", Json::Num(days as f64)),
+        ("high_water", Json::Num(high_water as f64)),
+        ("baseline_rerun_s", Json::Num(baseline_s)),
+        ("stream_total_s", Json::Num(stream_s)),
+        ("speedup", Json::Num(speedup)),
+        ("append_elems_per_s", Json::Num(append_throughput)),
+        ("resparsify_latency_s", Json::Num(resparsify_latency_s)),
+        ("resparsifies", Json::Num(windows as f64)),
+        ("evicted", Json::Num(stats.evicted as f64)),
+        ("live_end", Json::Num(stats.live as f64)),
+        ("final_value_stream", Json::Num(final_snap.value)),
+        ("final_value_batch", Json::Num(batch_final_value)),
+        ("rel_utility", Json::Num(rel_utility)),
+    ]);
+    let out = format!("{}/../BENCH_stream.json", env!("CARGO_MANIFEST_DIR"));
+    std::fs::write(&out, report.pretty()).expect("write BENCH_stream.json");
+    println!("(saved to {out})");
+
+    assert!(windows >= 1, "the configuration must exercise windowed re-sparsification");
+    if !smoke {
+        assert!(
+            speedup >= 0.9,
+            "streaming regressed below ad-hoc batch re-runs: {speedup:.2}x < 0.9x \
+             (the subsystem must never lose to prefix re-runs beyond noise)"
+        );
+        assert!(
+            rel_utility >= 0.85,
+            "windowed eviction cost too much utility: {rel_utility:.4} < 0.85 \
+             of the batch oracle at matched k"
+        );
+        if std::env::var("SS_STRICT").map(|v| v == "1").unwrap_or(false) {
+            assert!(
+                speedup >= 1.3,
+                "SS_STRICT target not met: {speedup:.2}x < 1.3x (expected on any stream \
+                 long enough that prefix re-runs go quadratic; see EXPERIMENTS.md)"
+            );
+        }
+    }
+}

@@ -37,6 +37,7 @@ pub mod bidirectional_greedy;
 pub mod engine;
 pub mod greedy;
 pub mod lazy_greedy;
+pub mod sieve_filter;
 pub mod sieve_streaming;
 pub mod ss;
 pub mod stochastic_greedy;
@@ -50,7 +51,10 @@ pub use bidirectional_greedy::bidirectional_greedy;
 pub use engine::{EngineStats, GainRoute, MaximizerEngine, DEFAULT_COHORT};
 pub use greedy::{greedy, greedy_reference};
 pub use lazy_greedy::{lazy_greedy, lazy_greedy_reference};
-pub use sieve_streaming::{sieve_streaming, SieveParams};
+pub use sieve_filter::{SieveFilter, SieveSet};
+pub use sieve_streaming::{
+    sieve_streaming, sieve_streaming_with_stats, SieveParams, SieveStats,
+};
 pub use ss::{
     sparsify, sparsify_candidates, sparsify_candidates_reference, ss_then_greedy, CpuBackend,
     DivergenceBackend, Sampling, SsParams, SsResult,

@@ -1,0 +1,288 @@
+//! Reusable sieve-streaming threshold grid (Badanidiyuru et al., KDD 2014),
+//! factored out of [`sieve_streaming`] so it can run **incrementally** —
+//! one element at a time, over an unbounded stream — instead of over a
+//! fully materialized `&[usize]` slice.
+//!
+//! The grid logic is unchanged from the batch algorithm: thresholds
+//! `τ = (1+ε)^i` bracket the unknown optimum over `[m, 2km]` (m = best
+//! singleton seen so far); on a new max singleton the ladder re-grids
+//! (out-of-range sieves dropped, fresh ones spawned up to the trial cap);
+//! an element is admitted by a sieve when its marginal gain clears
+//! `(τ/2 − f(S_τ)) / (k − |S_τ|)`. What *is* new is the shape: the filter
+//! is generic over the per-threshold candidate-set state [`SieveSet`], so
+//!
+//! * the batch [`sieve_streaming`] instantiates it with a boxed
+//!   [`SolState`](crate::submodular::SolState) per threshold (exact
+//!   pre-refactor behavior, including oracle accounting), and
+//! * the streaming session instantiates it with a plain coverage vector
+//!   per threshold and offers raw *feature rows* — elements are screened
+//!   **before** their storage is admitted, which is what makes the filter
+//!   usable as an ingestion gate.
+//!
+//! The filter also tracks what the batch code only mused about in a
+//! comment: `resident` (elements currently held across all sieves) and
+//! its high-water mark [`peak_resident`](SieveFilter::peak_resident),
+//! the number the paper quotes as "memory of 50k".
+//!
+//! This module lives in the *algorithm* layer (it is a plain algorithm
+//! with no stream-specific state) and depends on nothing above it; the
+//! streaming subsystem re-exports it, keeping the `algorithms ← stream`
+//! dependency one-directional.
+//!
+//! [`sieve_streaming`]: crate::algorithms::sieve_streaming
+
+/// Sieve threshold-grid parameters — shared by the batch
+/// [`sieve_streaming`] algorithm (which re-exports this type at its
+/// pre-refactor path) and the streaming admission filter. Defined here so
+/// the grid core depends on nothing above it.
+///
+/// [`sieve_streaming`]: crate::algorithms::sieve_streaming
+#[derive(Clone, Debug)]
+pub struct SieveParams {
+    /// grid resolution ε (τ ratio = 1+ε)
+    pub eps: f64,
+    /// hard cap on live thresholds (the paper's "number of trials")
+    pub max_thresholds: usize,
+}
+
+impl SieveParams {
+    /// Paper configuration: 50 trials → memory 50·k.
+    pub fn paper_default() -> Self {
+        Self { eps: 0.08, max_thresholds: 50 }
+    }
+}
+
+/// Per-threshold candidate-set state. Implementations carry whatever makes
+/// `gain` cheap for their objective (an incremental [`SolState`] for the
+/// batch path, a coverage vector for the streaming feature path); the
+/// filter itself only needs the set size and current value to evaluate the
+/// admission threshold.
+///
+/// [`SolState`]: crate::submodular::SolState
+pub trait SieveSet {
+    /// `|S_τ|` — elements admitted by this threshold so far.
+    fn len(&self) -> usize;
+    /// `f(S_τ)`.
+    fn value(&self) -> f64;
+}
+
+/// Incremental sieve-streaming admission filter: the τ ladder plus one
+/// [`SieveSet`] per live threshold.
+pub struct SieveFilter<S> {
+    k: usize,
+    ratio: f64,
+    max_thresholds: usize,
+    max_singleton: f64,
+    sieves: Vec<(f64, S)>,
+    resident: usize,
+    peak_resident: usize,
+}
+
+impl<S: SieveSet> SieveFilter<S> {
+    /// `k = 0` yields an inert grid — `hi = 2km = 0` keeps the τ range
+    /// empty, so no sieve ever spawns and nothing is admitted, matching
+    /// the pre-refactor batch loop's degenerate behavior (an empty
+    /// solution, one singleton evaluation per element).
+    pub fn new(k: usize, params: &SieveParams) -> Self {
+        assert!(params.eps > 0.0);
+        Self {
+            k,
+            ratio: 1.0 + params.eps,
+            max_thresholds: params.max_thresholds,
+            max_singleton: 0.0,
+            sieves: Vec::new(),
+            resident: 0,
+            peak_resident: 0,
+        }
+    }
+
+    /// Threshold-grid maintenance — call once per arriving element, with
+    /// its singleton value, *before* [`offer`](Self::offer). When `sv` is a
+    /// new maximum the ladder re-grids to cover `[m, 2km]`: sieves whose τ
+    /// left the range are dropped, missing rungs are spawned via `fresh`
+    /// (an empty candidate set), up to the trial cap. Returns whether the
+    /// grid changed — the only step that may allocate; between re-grids the
+    /// filter is allocation-free.
+    pub fn observe(&mut self, sv: f64, mut fresh: impl FnMut() -> S) -> bool {
+        if !(sv > self.max_singleton) {
+            return false;
+        }
+        self.max_singleton = sv;
+        // re-grid: thresholds must cover [m, 2km]
+        let lo = self.max_singleton;
+        let hi = 2.0 * self.k as f64 * self.max_singleton;
+        // keep existing sieves whose tau is still in range; spawn new taus
+        self.sieves.retain(|(tau, _)| *tau >= lo * 0.999 && *tau <= hi * 1.001);
+        let mut tau = {
+            // smallest power of ratio >= lo
+            let e = (lo.ln() / self.ratio.ln()).ceil();
+            self.ratio.powf(e)
+        };
+        while tau <= hi && self.sieves.len() < self.max_thresholds {
+            let exists = self.sieves.iter().any(|(t, _)| (t / tau - 1.0).abs() < 1e-9);
+            if !exists {
+                self.sieves.push((tau, fresh()));
+            }
+            tau *= self.ratio;
+        }
+        self.resident = self.sieves.iter().map(|(_, s)| s.len()).sum();
+        true
+    }
+
+    /// Offer the current element to every under-budget sieve: `gain`
+    /// evaluates its marginal gain against a sieve's candidate set (called
+    /// exactly once per attempted sieve — the caller meters oracle calls
+    /// there), `add` commits it where the gain clears the admission
+    /// threshold and receives that accepted gain (so states that fold the
+    /// value incrementally don't need a side channel). Returns whether
+    /// **any** sieve admitted the element — the streaming session's signal
+    /// that the element enters the candidate buffer at all.
+    pub fn offer(
+        &mut self,
+        mut gain: impl FnMut(&S) -> f64,
+        mut add: impl FnMut(&mut S, f64),
+    ) -> bool {
+        let mut admitted = false;
+        for (tau, s) in &mut self.sieves {
+            if s.len() >= self.k {
+                continue;
+            }
+            let need = (*tau / 2.0 - s.value()) / (self.k - s.len()) as f64;
+            let g = gain(s);
+            if g >= need && g > 0.0 {
+                add(s, g);
+                self.resident += 1;
+                admitted = true;
+            }
+        }
+        if self.resident > self.peak_resident {
+            self.peak_resident = self.resident;
+        }
+        admitted
+    }
+
+    /// The best thresholded candidate set so far (max `f(S_τ)`).
+    pub fn best(&self) -> Option<&S> {
+        self.sieves
+            .iter()
+            .max_by(|a, b| a.1.value().partial_cmp(&b.1.value()).unwrap())
+            .map(|(_, s)| s)
+    }
+
+    /// Elements currently resident across all sieves.
+    pub fn resident(&self) -> usize {
+        self.resident
+    }
+
+    /// High-water mark of [`resident`](Self::resident) — bounded by
+    /// `max_thresholds · k` ("memory of 50k" in the paper's configuration).
+    pub fn peak_resident(&self) -> usize {
+        self.peak_resident
+    }
+
+    /// Live thresholds.
+    pub fn thresholds(&self) -> usize {
+        self.sieves.len()
+    }
+
+    /// Largest singleton value observed.
+    pub fn max_singleton(&self) -> f64 {
+        self.max_singleton
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// Minimal modular sieve state: value = sum of admitted weights.
+    struct ModSet {
+        total: f64,
+        n: usize,
+    }
+
+    impl SieveSet for ModSet {
+        fn len(&self) -> usize {
+            self.n
+        }
+        fn value(&self) -> f64 {
+            self.total
+        }
+    }
+
+    #[test]
+    fn grid_covers_range_and_respects_cap() {
+        let p = SieveParams { eps: 0.05, max_thresholds: 500 };
+        let mut f: SieveFilter<ModSet> = SieveFilter::new(4, &p);
+        assert!(f.observe(1.0, || ModSet { total: 0.0, n: 0 }));
+        // ladder must cover [1, 8] at ratio 1.05
+        assert!(f.thresholds() > 0);
+        let needed = ((8.0f64).ln() / (1.05f64).ln()).ceil() as usize;
+        assert!(f.thresholds() >= needed, "{} < {needed}", f.thresholds());
+        // no re-grid on a smaller singleton
+        assert!(!f.observe(0.5, || unreachable!("no spawn without a new max")));
+        // capped configuration stays capped
+        let mut capped: SieveFilter<ModSet> = SieveFilter::new(4, &SieveParams {
+            eps: 0.01,
+            max_thresholds: 3,
+        });
+        capped.observe(1.0, || ModSet { total: 0.0, n: 0 });
+        assert_eq!(capped.thresholds(), 3);
+    }
+
+    #[test]
+    fn admission_thresholds_and_peak_resident() {
+        let p = SieveParams { eps: 0.5, max_thresholds: 8 };
+        let k = 2;
+        let mut f: SieveFilter<ModSet> = SieveFilter::new(k, &p);
+        let mut admitted_total = 0usize;
+        for &w in &[1.0f64, 0.9, 0.8, 0.05, 1.0, 0.7] {
+            f.observe(w, || ModSet { total: 0.0, n: 0 });
+            let any = f.offer(
+                |_s| w,
+                |s, g| {
+                    s.total += g;
+                    s.n += 1;
+                },
+            );
+            if any {
+                admitted_total += 1;
+            }
+        }
+        assert!(admitted_total >= 1);
+        assert!(f.peak_resident() >= f.resident());
+        assert!(f.peak_resident() <= p.max_thresholds * k);
+        let best = f.best().unwrap();
+        assert!(best.value() > 0.0);
+        assert!(best.len() <= k);
+    }
+
+    #[test]
+    fn zero_budget_grid_is_inert() {
+        // pre-refactor batch behavior: k = 0 spawns no sieves, admits
+        // nothing, panics nowhere
+        let mut f: SieveFilter<ModSet> = SieveFilter::new(0, &SieveParams::paper_default());
+        assert!(f.observe(1.0, || unreachable!("hi = 0 must spawn nothing")));
+        assert_eq!(f.thresholds(), 0);
+        assert!(!f.offer(|_| 1.0, |_, _| panic!("nothing to admit into")));
+        assert!(f.best().is_none());
+        assert_eq!(f.peak_resident(), 0);
+    }
+
+    #[test]
+    fn regrid_drops_out_of_range_sieves() {
+        let p = SieveParams { eps: 0.08, max_thresholds: 50 };
+        let mut f: SieveFilter<ModSet> = SieveFilter::new(3, &p);
+        f.observe(0.001, || ModSet { total: 0.0, n: 0 });
+        let small_grid = f.thresholds();
+        assert!(small_grid > 0);
+        // a 1000× larger singleton moves [m, 2km] entirely: the old rungs
+        // all fall out of range and the resident count resets with them
+        f.observe(1.0, || ModSet { total: 0.0, n: 0 });
+        assert!(f.max_singleton() == 1.0);
+        assert!(f.thresholds() > 0);
+        for (tau, _) in f.sieves.iter() {
+            assert!(*tau >= 1.0 * 0.999 && *tau <= 6.0 * 1.001);
+        }
+    }
+}

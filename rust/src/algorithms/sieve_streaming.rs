@@ -6,30 +6,47 @@
 //! when its marginal gain is at least `(τ/2 − f(S_τ)) / (k − |S_τ|)`. The
 //! best thresholded set at the end wins. Memory is `O(k · #thresholds)` —
 //! the paper's news experiments run it with 50 thresholds ("trials"),
-//! i.e. a 50k-element memory, which [`SieveParams::paper_default`] mirrors.
+//! i.e. a 50k-element memory, which [`SieveParams::paper_default`] mirrors;
+//! [`SieveStats::peak_resident`] reports the *measured* high-water mark.
+//!
+//! The threshold-grid core is the reusable incremental
+//! [`SieveFilter`](super::sieve_filter::SieveFilter) — the same grid
+//! gates arrivals into [`crate::stream::StreamSession`]'s candidate
+//! buffer.
 
+use super::sieve_filter::{SieveFilter, SieveSet};
 use super::Solution;
 use crate::submodular::{SolState, SubmodularFn};
 use crate::util::stats::Timer;
 
-#[derive(Clone, Debug)]
-pub struct SieveParams {
-    /// grid resolution ε (τ ratio = 1+ε)
-    pub eps: f64,
-    /// hard cap on live thresholds (the paper's "number of trials")
-    pub max_thresholds: usize,
+// The grid parameters moved to the reusable filter core with the
+// refactor; re-exported here so every pre-refactor path keeps working.
+pub use super::sieve_filter::SieveParams;
+
+/// Measured memory behavior of one sieve run: the quantity the paper
+/// quotes as "memory of 50k", observed rather than bounded.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct SieveStats {
+    /// High-water mark of elements resident across all threshold sets —
+    /// always ≤ [`sieve_memory_elements`] (the 50·k bound), usually far
+    /// below it because most thresholds never fill.
+    pub peak_resident: usize,
+    /// Threshold sets live at the end of the stream.
+    pub thresholds_live: usize,
 }
 
-impl SieveParams {
-    /// Paper configuration: 50 trials → memory 50·k.
-    pub fn paper_default() -> Self {
-        Self { eps: 0.08, max_thresholds: 50 }
+/// Per-threshold candidate set of the batch algorithm: an incremental
+/// [`SolState`] (the filter core only needs size and value; gains flow
+/// through the `offer` closures so oracle accounting stays caller-side).
+struct SolSieve<'a>(Box<dyn SolState + 'a>);
+
+impl SieveSet for SolSieve<'_> {
+    fn len(&self) -> usize {
+        self.0.set().len()
     }
-}
-
-struct Sieve<'a> {
-    state: Box<dyn SolState + 'a>,
-    tau: f64,
+    fn value(&self) -> f64 {
+        self.0.value()
+    }
 }
 
 pub fn sieve_streaming(
@@ -38,65 +55,49 @@ pub fn sieve_streaming(
     k: usize,
     params: &SieveParams,
 ) -> Solution {
+    sieve_streaming_with_stats(f, stream, k, params).0
+}
+
+/// [`sieve_streaming`] plus measured memory stats. The threshold-grid
+/// logic lives in the reusable incremental [`SieveFilter`] (shared with
+/// the streaming session's admission stage); this driver supplies the
+/// per-threshold [`SolState`]s and the oracle-call metering the batch
+/// algorithm reports.
+pub fn sieve_streaming_with_stats(
+    f: &dyn SubmodularFn,
+    stream: &[usize],
+    k: usize,
+    params: &SieveParams,
+) -> (Solution, SieveStats) {
     let timer = Timer::new();
     let mut calls = 0u64;
-    let mut max_singleton = 0.0f64;
-    let mut sieves: Vec<Sieve> = Vec::new();
-    let ratio = 1.0 + params.eps;
+    let mut filter: SieveFilter<SolSieve> = SieveFilter::new(k, params);
 
-    // Peak memory accounting (elements resident across all sieves + the
-    // max-singleton tracker) — reported via oracle_calls? No: wall_s and a
-    // dedicated field would bloat Solution; expose via return set len and
-    // the bench harness's own instrumentation instead.
     for &v in stream {
         let sv = f.singleton(v);
         calls += 1;
-        if sv > max_singleton {
-            max_singleton = sv;
-            // re-grid: thresholds must cover [m, 2km]
-            let lo = max_singleton;
-            let hi = 2.0 * k as f64 * max_singleton;
-            // keep existing sieves whose tau is still in range; spawn new taus
-            sieves.retain(|s| s.tau >= lo * 0.999 && s.tau <= hi * 1.001);
-            let mut tau = {
-                // smallest power of ratio >= lo
-                let e = (lo.ln() / ratio.ln()).ceil();
-                ratio.powf(e)
-            };
-            while tau <= hi && sieves.len() < params.max_thresholds {
-                let exists = sieves.iter().any(|s| (s.tau / tau - 1.0).abs() < 1e-9);
-                if !exists {
-                    sieves.push(Sieve { state: f.state(), tau });
-                }
-                tau *= ratio;
-            }
-        }
-        for s in &mut sieves {
-            if s.state.set().len() >= k {
-                continue;
-            }
-            let need =
-                (s.tau / 2.0 - s.state.value()) / (k - s.state.set().len()) as f64;
-            let g = s.state.gain(v);
-            calls += 1;
-            if g >= need && g > 0.0 {
-                s.state.add(v);
-            }
-        }
+        filter.observe(sv, || SolSieve(f.state()));
+        filter.offer(
+            |s| {
+                calls += 1;
+                s.0.gain(v)
+            },
+            |s, _gain| s.0.add(v),
+        );
     }
 
-    let best = sieves
-        .iter()
-        .max_by(|a, b| a.state.value().partial_cmp(&b.state.value()).unwrap());
-    match best {
+    let stats =
+        SieveStats { peak_resident: filter.peak_resident(), thresholds_live: filter.thresholds() };
+    let sol = match filter.best() {
         Some(s) => Solution {
-            set: s.state.set().to_vec(),
-            value: s.state.value(),
+            set: s.0.set().to_vec(),
+            value: s.0.value(),
             oracle_calls: calls,
             wall_s: timer.elapsed_s(),
         },
         None => Solution { set: vec![], value: 0.0, oracle_calls: calls, wall_s: timer.elapsed_s() },
-    }
+    };
+    (sol, stats)
 }
 
 /// Peak memory (in elements) a sieve configuration can hold — the number the
@@ -172,6 +173,45 @@ mod tests {
     #[test]
     fn memory_accounting() {
         assert_eq!(sieve_memory_elements(10, &SieveParams::paper_default()), 500);
+    }
+
+    #[test]
+    fn zero_budget_returns_empty_solution() {
+        // pre-refactor behavior, preserved through the SieveFilter core:
+        // k = 0 spawns no sieves and returns an empty solution after one
+        // singleton evaluation per streamed element
+        let f = feature_instance(30, 4, 6);
+        let all: Vec<usize> = (0..30).collect();
+        let s = sieve_streaming(&f, &all, 0, &SieveParams::paper_default());
+        assert!(s.set.is_empty());
+        assert_eq!(s.value, 0.0);
+        assert_eq!(s.oracle_calls, 30);
+    }
+
+    #[test]
+    fn peak_resident_measured_and_within_doc_bound() {
+        // the doc claim: 50 trials ⇒ memory ≤ 50·k elements. peak_resident
+        // is the *measured* high-water mark and must respect the bound —
+        // and actually mean something (> 0, ≥ the winning set's size).
+        let f = feature_instance(300, 8, 12);
+        let all: Vec<usize> = (0..300).collect();
+        let k = 9;
+        let p = SieveParams::paper_default();
+        let (sol, stats) = sieve_streaming_with_stats(&f, &all, k, &p);
+        assert!(stats.peak_resident > 0);
+        assert!(
+            stats.peak_resident <= sieve_memory_elements(k, &p),
+            "peak resident {} exceeds the documented 50·k = {} bound",
+            stats.peak_resident,
+            sieve_memory_elements(k, &p)
+        );
+        assert!(stats.peak_resident >= sol.set.len(), "the winner was resident");
+        assert!(stats.thresholds_live <= p.max_thresholds);
+        // the wrapper returns the identical solution
+        let plain = sieve_streaming(&f, &all, k, &p);
+        assert_eq!(plain.set, sol.set);
+        assert_eq!(plain.value.to_bits(), sol.value.to_bits());
+        assert_eq!(plain.oracle_calls, sol.oracle_calls);
     }
 
     #[test]

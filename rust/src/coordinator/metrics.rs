@@ -26,6 +26,50 @@ pub struct Counters {
     /// work, in the same per-element unit as `Solution::oracle_calls`.
     pub gain_evals: AtomicU64,
     pub tiles_dispatched: AtomicU64,
+    /// Elements appended to streaming sessions (admitted or not).
+    pub stream_appends: AtomicU64,
+    /// Appended elements the sieve admission stage let into a session's
+    /// candidate buffer (== `stream_appends` when the filter is off).
+    pub stream_admitted: AtomicU64,
+    /// SS rounds run by windowed re-sparsifications (snapshot-time SS
+    /// passes are *not* counted here — they evict nothing).
+    pub resparsify_rounds: AtomicU64,
+    /// Elements evicted (storage compacted away) by re-sparsifications.
+    pub evicted_elements: AtomicU64,
+}
+
+impl Counters {
+    /// Every counter with its snapshot key — the single authoritative
+    /// list [`Metrics::snapshot`] and [`Self::reset`] both iterate, so a
+    /// counter added here is automatically snapshotted *and* reset (the
+    /// two can never drift apart).
+    fn named(&self) -> [(&'static str, &AtomicU64); 13] {
+        [
+            ("requests", &self.requests),
+            ("completed", &self.completed),
+            ("failed", &self.failed),
+            ("items_in", &self.items_in),
+            ("items_pruned", &self.items_pruned),
+            ("divergence_evals", &self.divergence_evals),
+            ("importance_evals", &self.importance_evals),
+            ("gain_evals", &self.gain_evals),
+            ("tiles_dispatched", &self.tiles_dispatched),
+            ("stream_appends", &self.stream_appends),
+            ("stream_admitted", &self.stream_admitted),
+            ("resparsify_rounds", &self.resparsify_rounds),
+            ("evicted_elements", &self.evicted_elements),
+        ]
+    }
+
+    /// Zero every counter — the per-session / per-window metrics scope for
+    /// long-lived streaming sessions, which would otherwise conflate
+    /// windows over a process lifetime. Relaxed stores: concurrent
+    /// increments may land on either side of the reset.
+    pub fn reset(&self) {
+        for (_, c) in self.named() {
+            c.store(0, Ordering::Relaxed);
+        }
+    }
 }
 
 pub struct Metrics {
@@ -55,8 +99,15 @@ impl Metrics {
         c.fetch_add(v, Ordering::Relaxed);
     }
 
+    /// Zero all counters and histograms — see [`Counters::reset`].
+    pub fn reset(&self) {
+        self.counters.reset();
+        self.request_latency.reset();
+        self.queue_wait.reset();
+        self.round_latency.reset();
+    }
+
     pub fn snapshot(&self) -> Json {
-        let g = |c: &AtomicU64| Json::Num(c.load(Ordering::Relaxed) as f64);
         let hist = |h: &LatencyHistogram| {
             Json::obj(vec![
                 ("count", Json::Num(h.count() as f64)),
@@ -65,20 +116,16 @@ impl Metrics {
                 ("p99_s", Json::Num(h.percentile_secs(99.0))),
             ])
         };
-        Json::obj(vec![
-            ("requests", g(&self.counters.requests)),
-            ("completed", g(&self.counters.completed)),
-            ("failed", g(&self.counters.failed)),
-            ("items_in", g(&self.counters.items_in)),
-            ("items_pruned", g(&self.counters.items_pruned)),
-            ("divergence_evals", g(&self.counters.divergence_evals)),
-            ("importance_evals", g(&self.counters.importance_evals)),
-            ("gain_evals", g(&self.counters.gain_evals)),
-            ("tiles_dispatched", g(&self.counters.tiles_dispatched)),
-            ("request_latency", hist(&self.request_latency)),
-            ("queue_wait", hist(&self.queue_wait)),
-            ("round_latency", hist(&self.round_latency)),
-        ])
+        let mut fields: Vec<(&str, Json)> = self
+            .counters
+            .named()
+            .into_iter()
+            .map(|(name, c)| (name, Json::Num(c.load(Ordering::Relaxed) as f64)))
+            .collect();
+        fields.push(("request_latency", hist(&self.request_latency)));
+        fields.push(("queue_wait", hist(&self.queue_wait)));
+        fields.push(("round_latency", hist(&self.round_latency)));
+        Json::obj(fields)
     }
 }
 
@@ -97,5 +144,25 @@ mod tests {
         // serializes cleanly
         let text = s.pretty();
         assert!(crate::util::json::parse(&text).is_ok());
+    }
+
+    #[test]
+    fn reset_zeroes_counters_and_histograms() {
+        let m = Metrics::new();
+        m.add(&m.counters.requests, 3);
+        m.add(&m.counters.stream_appends, 7);
+        m.add(&m.counters.evicted_elements, 2);
+        m.request_latency.record_secs(0.01);
+        m.round_latency.record_secs(0.02);
+        m.reset();
+        let s = m.snapshot();
+        assert_eq!(s.get("requests").unwrap().as_f64(), Some(0.0));
+        assert_eq!(s.get("stream_appends").unwrap().as_f64(), Some(0.0));
+        assert_eq!(s.get("evicted_elements").unwrap().as_f64(), Some(0.0));
+        assert_eq!(m.request_latency.count(), 0);
+        assert_eq!(m.round_latency.count(), 0);
+        // usable again after the reset
+        m.add(&m.counters.stream_admitted, 1);
+        assert_eq!(m.snapshot().get("stream_admitted").unwrap().as_f64(), Some(1.0));
     }
 }

@@ -9,7 +9,9 @@
 //!   the shared PJRT tiled runtime, gathered deterministically;
 //! * [`service`] — summarization-as-a-service: bounded request queue,
 //!   request workers, cross-request tile batching at the PJRT executor,
-//!   backpressure via blocking/shedding submits;
+//!   backpressure via blocking/shedding submits, plus the streaming
+//!   session front-end (`open_stream` / `append` / `snapshot_summary` /
+//!   `close` over [`crate::stream::StreamSession`]);
 //! * [`metrics`] — counters + latency histograms surfaced as JSON.
 //!
 //! The whole stack is objective-generic: backends and the service hold an
@@ -26,7 +28,7 @@ pub mod sharded;
 
 pub use metrics::Metrics;
 pub use service::{
-    Objective, ServiceConfig, SubmitError, SummarizationService, SummarizeRequest,
+    Objective, ServiceConfig, StreamId, SubmitError, SummarizationService, SummarizeRequest,
     SummarizeResponse,
 };
 pub use sharded::{Compute, ShardedBackend};

@@ -16,6 +16,8 @@
 //! to the feature-based core; other objectives compute on the CPU shard
 //! kernels transparently.
 
+use std::collections::HashMap;
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
 use std::sync::mpsc::{sync_channel, Receiver, SyncSender, TrySendError};
 use std::sync::{Arc, Mutex};
 use std::thread::JoinHandle;
@@ -24,6 +26,10 @@ use anyhow::{anyhow, Result};
 
 use crate::algorithms::{sparsify, GainRoute, MaximizerEngine, SsParams};
 use crate::runtime::TiledRuntime;
+use crate::stream::{
+    SnapshotMode, StreamAppend, StreamConfig, StreamObjective, StreamSession, StreamStats,
+    StreamSummary,
+};
 use crate::submodular::{BatchedDivergence, FacilityLocation, FeatureBased, Mixture};
 use crate::util::pool::ThreadPool;
 use crate::util::stats::Timer;
@@ -31,6 +37,23 @@ use crate::util::vecmath::FeatureMatrix;
 
 use super::metrics::Metrics;
 use super::sharded::{Compute, ShardedBackend};
+
+/// Handle to an open streaming session (see
+/// [`SummarizationService::open_stream`]).
+pub type StreamId = u64;
+
+/// Map entry for an open stream: the session plus its row width, kept
+/// outside the session lock so input validation can panic (caller bug)
+/// *before* the mutex is taken — a poisoned session lock would brick the
+/// stream for every later call.
+#[derive(Clone)]
+struct StreamEntry {
+    d: usize,
+    /// whether the session's objective requires non-negative features
+    /// (feature-based coverage); facility location accepts signed rows
+    nonneg: bool,
+    session: Arc<Mutex<StreamSession>>,
+}
 
 /// What to summarize: the objective payload of a [`SummarizeRequest`].
 pub enum Objective {
@@ -102,19 +125,26 @@ pub struct SummarizeResponse {
     pub queue_s: f64,
 }
 
-/// Why [`SummarizationService::try_submit`] rejected a request. Both
-/// variants hand the request back so the caller can retry or reroute.
-pub enum SubmitError {
-    /// Bounded queue is full — backpressure; retrying later can succeed.
-    QueueFull(SummarizeRequest),
-    /// The service's workers are gone (shut down or crashed) — retrying
-    /// against this instance can never succeed.
-    ServiceDown(SummarizeRequest),
+/// Why a submit-shaped call was rejected, generic over the payload handed
+/// back to the caller: [`SummarizationService::try_submit`] returns the
+/// whole [`SummarizeRequest`] (the default), the streaming `append` path
+/// returns `SubmitError<()>` (the caller still owns its rows). Both
+/// variants mean "this work was not accepted"; only [`QueueFull`] is worth
+/// retrying.
+///
+/// [`QueueFull`]: SubmitError::QueueFull
+pub enum SubmitError<R = SummarizeRequest> {
+    /// Bounded queue (or session live-set cap) is full — backpressure;
+    /// retrying later can succeed.
+    QueueFull(R),
+    /// The service's workers are gone, or the session is closed —
+    /// retrying against this instance can never succeed.
+    ServiceDown(R),
 }
 
-impl SubmitError {
-    /// Recover the rejected request.
-    pub fn into_request(self) -> SummarizeRequest {
+impl<R> SubmitError<R> {
+    /// Recover the rejected payload.
+    pub fn into_request(self) -> R {
         match self {
             SubmitError::QueueFull(r) | SubmitError::ServiceDown(r) => r,
         }
@@ -125,7 +155,7 @@ impl SubmitError {
     }
 }
 
-impl std::fmt::Debug for SubmitError {
+impl<R> std::fmt::Debug for SubmitError<R> {
     fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
         match self {
             SubmitError::QueueFull(_) => f.write_str("SubmitError::QueueFull(..)"),
@@ -171,6 +201,14 @@ pub struct SummarizationService {
     tx: SyncSender<QueuedJob>,
     metrics: Arc<Metrics>,
     workers: Vec<JoinHandle<()>>,
+    /// compute pool shared by request workers and streaming sessions
+    pool: Arc<ThreadPool>,
+    /// open streaming sessions; each behind its own lock so sessions
+    /// don't serialize against each other
+    streams: Mutex<HashMap<StreamId, StreamEntry>>,
+    next_stream: AtomicU64,
+    /// set by shutdown: streaming calls fail fast afterwards
+    down: AtomicBool,
 }
 
 impl SummarizationService {
@@ -191,7 +229,15 @@ impl SummarizationService {
                     .expect("spawn service worker")
             })
             .collect();
-        Self { tx, metrics, workers }
+        Self {
+            tx,
+            metrics,
+            workers,
+            pool,
+            streams: Mutex::new(HashMap::new()),
+            next_stream: AtomicU64::new(0),
+            down: AtomicBool::new(false),
+        }
     }
 
     /// Blocking submit (backpressure). After [`Self::shutdown`] the ticket
@@ -228,10 +274,120 @@ impl SummarizationService {
         }
     }
 
+    /// Open a streaming session: append-only ingestion with sieve
+    /// admission and windowed re-sparsification (see
+    /// [`crate::stream::StreamSession`]). The session runs on the
+    /// service's compute pool with its own [`Metrics`] scope; the four
+    /// stream counters are mirrored onto the service-wide metrics so
+    /// dashboards see every session's traffic in one place.
+    pub fn open_stream(
+        &self,
+        objective: StreamObjective,
+        d: usize,
+        cfg: StreamConfig,
+    ) -> Result<StreamId> {
+        if self.down.load(Ordering::SeqCst) {
+            return Err(anyhow!("service is down"));
+        }
+        let session = StreamSession::new(
+            objective,
+            d,
+            cfg,
+            Arc::clone(&self.pool),
+            Arc::new(Metrics::new()),
+        )?;
+        let id = self.next_stream.fetch_add(1, Ordering::Relaxed);
+        let nonneg = matches!(objective, StreamObjective::Features(_));
+        self.streams
+            .lock()
+            .unwrap()
+            .insert(id, StreamEntry { d, nonneg, session: Arc::new(Mutex::new(session)) });
+        Ok(id)
+    }
+
+    /// Append a batch of rows to an open stream. Backpressure surfaces as
+    /// [`SubmitError::QueueFull`] (session live-set cap; recover by
+    /// splitting into smaller batches — eviction only happens through
+    /// windowed re-sparsification, which an over-cap retained core can no
+    /// longer trigger); an unknown/closed stream or a shut-down service
+    /// reports [`SubmitError::ServiceDown`]. A misaligned or
+    /// invalid-valued batch is a caller bug and panics **before** the
+    /// session lock is taken, so it cannot poison the stream.
+    pub fn append(
+        &self,
+        id: StreamId,
+        rows: &[f32],
+    ) -> std::result::Result<StreamAppend, SubmitError<()>> {
+        let Some(entry) = self.stream(id) else {
+            return Err(SubmitError::ServiceDown(()));
+        };
+        // one validation scan, before the lock — a caller-bug panic here
+        // cannot poison the session mutex, and the O(n·d) scan stays out
+        // of the critical section
+        StreamSession::validate_batch(rows, entry.d, entry.nonneg);
+        let mut session = entry.session.lock().unwrap();
+        // mirror the session-scoped counters service-wide by delta, so
+        // work done on error paths (a forced re-sparsification before a
+        // QueueFull shed evicts elements and runs SS rounds) is accounted
+        // identically in both scopes
+        let before = session.stats();
+        let result = session.append_prevalidated(rows);
+        let after = session.stats();
+        drop(session);
+        self.metrics.add(&self.metrics.counters.stream_appends, after.appends - before.appends);
+        self.metrics
+            .add(&self.metrics.counters.stream_admitted, after.admitted - before.admitted);
+        self.metrics
+            .add(&self.metrics.counters.resparsify_rounds, after.ss_rounds - before.ss_rounds);
+        self.metrics
+            .add(&self.metrics.counters.evicted_elements, after.evicted - before.evicted);
+        result
+    }
+
+    /// Summarize a stream's current live set —
+    /// [`SnapshotMode::Intermediate`] for the cheap stochastic-greedy
+    /// refresh, [`SnapshotMode::Final`] for the exact batch-equivalent
+    /// `sparsify → lazy greedy` pass.
+    pub fn snapshot_summary(&self, id: StreamId, mode: SnapshotMode) -> Result<StreamSummary> {
+        let entry = self.stream(id).ok_or_else(|| anyhow!("unknown or closed stream {id}"))?;
+        let mut s = entry.session.lock().unwrap();
+        s.snapshot_summary(mode)
+    }
+
+    /// Per-session metrics snapshot (the session-scoped counters —
+    /// divergence/gain evals of its windows, its stream counters).
+    pub fn stream_metrics(&self, id: StreamId) -> Result<crate::util::json::Json> {
+        let entry = self.stream(id).ok_or_else(|| anyhow!("unknown or closed stream {id}"))?;
+        let s = entry.session.lock().unwrap();
+        Ok(s.metrics().snapshot())
+    }
+
+    /// Close a stream and drop its storage, returning lifetime stats.
+    pub fn close(&self, id: StreamId) -> Result<StreamStats> {
+        let entry = self
+            .streams
+            .lock()
+            .unwrap()
+            .remove(&id)
+            .ok_or_else(|| anyhow!("unknown or closed stream {id}"))?;
+        let mut s = entry.session.lock().unwrap();
+        Ok(s.close())
+    }
+
+    fn stream(&self, id: StreamId) -> Option<StreamEntry> {
+        self.streams.lock().unwrap().get(&id).cloned()
+    }
+
     /// Graceful shutdown: close the queue (already-accepted requests still
-    /// complete), then join the workers. Afterwards `try_submit` reports
-    /// [`SubmitError::ServiceDown`]. Called by `Drop`; idempotent.
+    /// complete), then join the workers; open streaming sessions are
+    /// closed and dropped. Afterwards `try_submit` reports
+    /// [`SubmitError::ServiceDown`] and stream calls fail fast. Called by
+    /// `Drop`; idempotent.
     pub fn shutdown(&mut self) {
+        self.down.store(true, Ordering::SeqCst);
+        for (_, entry) in self.streams.lock().unwrap().drain() {
+            entry.session.lock().unwrap().close();
+        }
         let (dead_tx, _) = sync_channel(1);
         let _ = std::mem::replace(&mut self.tx, dead_tx);
         for w in self.workers.drain(..) {
@@ -514,5 +670,73 @@ mod tests {
         let b = svc.submit(req(250, 5)).wait().unwrap();
         assert_eq!(a.summary, b.summary);
         assert_eq!(a.value, b.value);
+    }
+
+    #[test]
+    fn stream_lifecycle_through_service() {
+        use crate::stream::{SnapshotMode, StreamConfig, StreamObjective};
+        use crate::submodular::Concave;
+        let svc = SummarizationService::start(ServiceConfig::default(), None);
+        let cfg = StreamConfig::new(6)
+            .with_ss(SsParams::default().with_seed(7))
+            .with_high_water(150);
+        let id = svc.open_stream(StreamObjective::Features(Concave::Sqrt), 12, cfg).unwrap();
+        let day1 = feats(400, 12, 21);
+        let day2 = feats(300, 12, 22);
+        let r1 = svc.append(id, day1.data()).unwrap();
+        assert_eq!(r1.appended, 400);
+        assert!(r1.resparsifies >= 1, "400 appends over hw=150 must re-sparsify");
+        let mid = svc.snapshot_summary(id, SnapshotMode::Intermediate).unwrap();
+        assert_eq!(mid.summary.len(), 6);
+        let r2 = svc.append(id, day2.data()).unwrap();
+        assert_eq!(r2.first_ext, 400, "external ids continue across batches");
+        let fin = svc.snapshot_summary(id, SnapshotMode::Final).unwrap();
+        assert_eq!(fin.summary.len(), 6);
+        assert!(fin.value > 0.0);
+        assert!(fin.live < 700, "windowing must have bounded the live set");
+        // service-wide mirror of the session counters
+        let m = svc.metrics().snapshot();
+        assert_eq!(m.get("stream_appends").unwrap().as_f64(), Some(700.0));
+        assert!(m.get("evicted_elements").unwrap().as_f64().unwrap() > 0.0);
+        // per-session scope sees the same traffic
+        let sm = svc.stream_metrics(id).unwrap();
+        assert_eq!(sm.get("stream_appends").unwrap().as_f64(), Some(700.0));
+        assert!(sm.get("divergence_evals").unwrap().as_f64().unwrap() > 0.0);
+        let stats = svc.close(id).unwrap();
+        assert_eq!(stats.appends, 700);
+        assert_eq!(stats.windows as usize, r1.resparsifies + r2.resparsifies);
+        // closed stream: append sheds as ServiceDown, snapshot/close error
+        match svc.append(id, day1.data()) {
+            Err(e @ SubmitError::ServiceDown(())) => assert!(!e.is_retryable()),
+            _ => panic!("closed stream must report ServiceDown"),
+        }
+        assert!(svc.snapshot_summary(id, SnapshotMode::Final).is_err());
+        assert!(svc.close(id).is_err());
+    }
+
+    #[test]
+    fn stream_backpressure_and_shutdown() {
+        use crate::stream::{StreamConfig, StreamObjective};
+        use crate::submodular::Concave;
+        let mut svc = SummarizationService::start(ServiceConfig::default(), None);
+        let cfg = StreamConfig::new(4)
+            .with_ss(SsParams::default().with_seed(3))
+            .with_high_water(80)
+            .with_max_live(200);
+        let id = svc.open_stream(StreamObjective::Features(Concave::Sqrt), 8, cfg).unwrap();
+        let ok = feats(150, 8, 31);
+        svc.append(id, ok.data()).unwrap();
+        let too_big = feats(300, 8, 32);
+        match svc.append(id, too_big.data()) {
+            Err(e @ SubmitError::QueueFull(())) => assert!(e.is_retryable()),
+            _ => panic!("over-cap batch must shed with QueueFull"),
+        }
+        svc.shutdown();
+        assert!(svc.open_stream(StreamObjective::Features(Concave::Sqrt), 8,
+            StreamConfig::new(4)).is_err());
+        match svc.append(id, ok.data()) {
+            Err(SubmitError::ServiceDown(())) => {}
+            _ => panic!("shut-down service must fail stream appends fast"),
+        }
     }
 }

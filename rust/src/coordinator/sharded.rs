@@ -114,6 +114,16 @@ impl ShardedBackend {
         self.shards = shards.max(1);
         self
     }
+
+    /// Zero the metrics this backend meters into ([`Metrics::reset`]) —
+    /// the per-window scope for long-lived streaming sessions, whose
+    /// counters would otherwise accumulate across every re-sparsification
+    /// for the life of the process. Affects every holder of the same
+    /// [`Metrics`] handle, so sessions that want isolation are constructed
+    /// with their own.
+    pub fn reset_metrics(&self) {
+        self.metrics.reset();
+    }
 }
 
 impl DivergenceBackend for ShardedBackend {
@@ -295,6 +305,28 @@ mod tests {
         assert_eq!(
             metrics.counters.divergence_evals.load(std::sync::atomic::Ordering::Relaxed),
             291
+        );
+    }
+
+    #[test]
+    fn reset_metrics_scopes_counters_per_window() {
+        let f = instance(100, 8, 14);
+        let pool = Arc::new(ThreadPool::new(2, 8));
+        let metrics = Arc::new(Metrics::new());
+        let b = ShardedBackend::new(f, pool, Compute::Cpu, Arc::clone(&metrics)).unwrap();
+        let _ = b.divergences(&[0, 1], &(2..50).collect::<Vec<_>>());
+        assert!(metrics.counters.divergence_evals.load(std::sync::atomic::Ordering::Relaxed) > 0);
+        b.reset_metrics();
+        assert_eq!(
+            metrics.counters.divergence_evals.load(std::sync::atomic::Ordering::Relaxed),
+            0,
+            "reset must zero the window's counters"
+        );
+        // next window meters from zero
+        let _ = b.divergences(&[0], &(1..21).collect::<Vec<_>>());
+        assert_eq!(
+            metrics.counters.divergence_evals.load(std::sync::atomic::Ordering::Relaxed),
+            20
         );
     }
 

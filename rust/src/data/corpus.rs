@@ -80,6 +80,12 @@ impl NewsGenerator {
         Self { vocab: Vocabulary::new(params.vocab_size, params.zipf_s, seed), params }
     }
 
+    /// The shared vocabulary (token id → word string) — lets consumers
+    /// render generated sentences as readable text.
+    pub fn vocab(&self) -> &Vocabulary {
+        &self.vocab
+    }
+
     fn topic_pools(&self, rng: &mut Rng, n_topics: usize) -> Vec<Topic> {
         (0..n_topics)
             .map(|_| {

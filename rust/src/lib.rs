@@ -34,6 +34,7 @@ pub mod algorithms;
 pub mod data;
 pub mod runtime;
 pub mod coordinator;
+pub mod stream;
 pub mod config;
 pub mod eval;
 pub mod bench;

@@ -1,0 +1,34 @@
+//! Streaming ingestion subsystem: append-only sessions feeding the arena
+//! SS loop.
+//!
+//! The batch stack (sparsify → maximize, [`crate::algorithms::ss`]) assumes
+//! a fully materialized ground set handed over at request time — the one
+//! thing a production summarization service cannot assume. This module
+//! turns the pipeline inside out for long-lived feeds (rolling news days,
+//! video frames):
+//!
+//! * [`remap`] — the spine: stable external ids ↔ dense internal indices,
+//!   so evicted elements' storage is genuinely compacted away while ids
+//!   handed to callers stay valid forever;
+//! * the incremental [`SieveFilter`] (stage 1 of the retention policy) —
+//!   the sieve-streaming threshold grid refactored into a reusable
+//!   admission core; it lives in
+//!   [`algorithms::sieve_filter`](crate::algorithms::sieve_filter) (it
+//!   is a plain algorithm) and is re-exported here;
+//! * [`session`] — [`StreamSession`]: append-only batches, windowed
+//!   re-sparsification through the zero-allocation round arena (stage 2),
+//!   snapshots through the batched maximizer engine.
+//!
+//! The service front-end ([`crate::coordinator::service`]) exposes
+//! sessions as `open_stream` / `append` / `snapshot_summary` / `close`
+//! with per-session backpressure.
+
+pub mod remap;
+pub mod session;
+
+pub use crate::algorithms::sieve_filter::{SieveFilter, SieveParams, SieveSet};
+pub use remap::IdRemap;
+pub use session::{
+    SnapshotMode, StreamAppend, StreamConfig, StreamObjective, StreamSession, StreamStats,
+    StreamSummary,
+};

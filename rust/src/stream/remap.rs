@@ -1,0 +1,173 @@
+//! Ground-set remap layer — the streaming subsystem's spine.
+//!
+//! A [`StreamSession`](super::StreamSession) hands every arriving element a
+//! **stable external id** (sequential, never reused) while the objective,
+//! the feature/similarity storage and the SS round loop all work in a
+//! **dense internal index space** `0..live` that is compacted on every
+//! windowed re-sparsification. [`IdRemap`] is the bijection between the
+//! two: external ids survive any number of evictions unchanged, internal
+//! indices are always dense so kernels keep their contiguous row layout
+//! and evicted elements' storage is actually dropped (not tombstoned).
+//!
+//! Memory note: stable-forever external ids cost one `u32` per arrival
+//! (admitted or not) in `ext_to_int`, which only ever grows — ~4 MB per
+//! million appends. That residue is deliberate (O(1) lookup, ids never
+//! dangle) and negligible next to feature storage for day/week-scale
+//! sessions, but it is *not* bounded by the retained core; sessions meant
+//! to run for months should be rotated, or the dead prefix compacted
+//! behind an id offset (tracked in ROADMAP).
+
+/// Sentinel marking an external id whose element is no longer resident
+/// (evicted by a re-sparsification, or never admitted by the filter).
+const GONE: u32 = u32::MAX;
+
+/// Stable external ids ↔ dense internal indices.
+#[derive(Default)]
+pub struct IdRemap {
+    /// indexed by external id; `GONE` = evicted / never admitted
+    ext_to_int: Vec<u32>,
+    /// indexed by dense internal index
+    int_to_ext: Vec<usize>,
+}
+
+impl IdRemap {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Reserve for `additional` further external ids (all potentially
+    /// admitted), so steady-state assignment never touches the allocator.
+    pub fn reserve(&mut self, additional: usize) {
+        self.ext_to_int.reserve(additional);
+        self.int_to_ext.reserve(additional);
+    }
+
+    /// Assign the next external id and bind it to the next dense internal
+    /// slot (the caller pushes the element's storage at the same position).
+    pub fn admit(&mut self) -> (usize, usize) {
+        let ext = self.ext_to_int.len();
+        let int = self.int_to_ext.len();
+        assert!(int < GONE as usize, "internal index space exhausted");
+        self.ext_to_int.push(int as u32);
+        self.int_to_ext.push(ext);
+        (ext, int)
+    }
+
+    /// Assign the next external id without binding storage (the admission
+    /// filter rejected the element; it was never resident).
+    pub fn reject(&mut self) -> usize {
+        let ext = self.ext_to_int.len();
+        self.ext_to_int.push(GONE);
+        ext
+    }
+
+    /// Compact the internal space to `keep` (ascending, distinct internal
+    /// indices — the `kept` set of a re-sparsification): survivor
+    /// `keep[i]` becomes internal index `i`, every other live element is
+    /// marked evicted. External ids never change.
+    pub fn compact(&mut self, keep: &[usize]) {
+        let mut kp = 0usize;
+        for old in 0..self.int_to_ext.len() {
+            let ext = self.int_to_ext[old];
+            if kp < keep.len() && keep[kp] == old {
+                self.ext_to_int[ext] = kp as u32;
+                self.int_to_ext[kp] = ext;
+                kp += 1;
+            } else {
+                self.ext_to_int[ext] = GONE;
+            }
+        }
+        assert_eq!(kp, keep.len(), "keep indices must be ascending, distinct and live");
+        self.int_to_ext.truncate(keep.len());
+    }
+
+    /// Dense internal index of a live external id; `None` once evicted
+    /// (or rejected), or for ids never assigned.
+    pub fn internal(&self, ext: usize) -> Option<usize> {
+        match self.ext_to_int.get(ext) {
+            Some(&i) if i != GONE => Some(i as usize),
+            _ => None,
+        }
+    }
+
+    /// Stable external id of a live internal index.
+    pub fn external(&self, int: usize) -> usize {
+        self.int_to_ext[int]
+    }
+
+    /// Live (resident) element count.
+    pub fn live(&self) -> usize {
+        self.int_to_ext.len()
+    }
+
+    /// Total external ids ever assigned (admitted or not).
+    pub fn assigned(&self) -> usize {
+        self.ext_to_int.len()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn admit_reject_compact_roundtrip() {
+        let mut r = IdRemap::new();
+        // ids 0..6: 0,1,2,4,5 admitted; 3 rejected
+        for i in 0..6 {
+            if i == 3 {
+                assert_eq!(r.reject(), 3);
+            } else {
+                let (ext, int) = r.admit();
+                assert_eq!(ext, i);
+                assert_eq!(int, if i < 3 { i } else { i - 1 });
+            }
+        }
+        assert_eq!(r.live(), 5);
+        assert_eq!(r.assigned(), 6);
+        assert_eq!(r.internal(3), None);
+        assert_eq!(r.internal(4), Some(3));
+        // evict internals 1 and 3 (ext 1 and ext 4)
+        r.compact(&[0, 2, 4]);
+        assert_eq!(r.live(), 3);
+        assert_eq!(r.internal(0), Some(0));
+        assert_eq!(r.internal(1), None);
+        assert_eq!(r.internal(2), Some(1));
+        assert_eq!(r.internal(4), None);
+        assert_eq!(r.internal(5), Some(2));
+        assert_eq!(r.external(0), 0);
+        assert_eq!(r.external(1), 2);
+        assert_eq!(r.external(2), 5);
+        // keep appending after compaction: new internals bind past the tail
+        let (ext, int) = r.admit();
+        assert_eq!((ext, int), (6, 3));
+        assert_eq!(r.external(3), 6);
+        // second compaction keeps externals stable again
+        r.compact(&[1, 3]);
+        assert_eq!(r.internal(2), Some(0));
+        assert_eq!(r.internal(6), Some(1));
+        assert_eq!(r.internal(0), None);
+        assert_eq!(r.internal(5), None);
+    }
+
+    #[test]
+    fn identity_compact_is_noop() {
+        let mut r = IdRemap::new();
+        for _ in 0..4 {
+            r.admit();
+        }
+        r.compact(&[0, 1, 2, 3]);
+        assert_eq!(r.live(), 4);
+        for i in 0..4 {
+            assert_eq!(r.internal(i), Some(i));
+            assert_eq!(r.external(i), i);
+        }
+    }
+
+    #[test]
+    fn out_of_range_lookup_is_none() {
+        let r = IdRemap::new();
+        assert_eq!(r.internal(0), None);
+        assert_eq!(r.internal(99), None);
+    }
+}

@@ -1,0 +1,885 @@
+//! Append-only streaming sessions: the arena SS loop fed from a live
+//! stream instead of a fully materialized ground set.
+//!
+//! A [`StreamSession`] accepts batches of feature rows and maintains a
+//! bounded retained core `V′` with a two-stage policy:
+//!
+//! 1. **Sieve hand-off** — an optional incremental
+//!    [`SieveFilter`](super::SieveFilter) screens every arrival *before*
+//!    its storage is admitted: only elements some threshold's candidate
+//!    set wants enter the candidate buffer at all (Badanidiyuru et al.'s
+//!    grid, reused unchanged from [`sieve_streaming`]).
+//! 2. **Windowed re-sparsification** — when the buffer crosses the
+//!    configured high-water mark, the existing `RoundScratch`-arena SS
+//!    loop ([`sparsify_candidates`]) runs over `retained ∪ buffer` and
+//!    shrinks the live set back to `O(log² n)`; evicted elements' feature
+//!    rows (and, for facility location, similarity rows/columns) are
+//!    **compacted away** through the objectives'
+//!    [`retain_elements`](crate::submodular::SubmodularFn::retain_elements)
+//!    capability, with the [`IdRemap`] spine keeping external ids stable
+//!    across any number of evictions.
+//!
+//! Snapshots run the batched [`MaximizerEngine`] over the live set: the
+//! stochastic-greedy route for cheap intermediate summaries ("Lazier Than
+//! Lazy Greedy" justifies the stochastic refresh between
+//! re-sparsifications), lazy greedy for final answers.
+//!
+//! **Batch equivalence.** A session whose window covers the entire stream
+//! (`high_water = usize::MAX`) with the admission filter disabled is
+//! *bit-identical* to the batch pipeline: appending rows one by one grows
+//! the objective with the exact accumulation order of fresh construction,
+//! and the final snapshot runs the same `sparsify → lazy_greedy` pair as
+//! [`ss_then_greedy`](crate::algorithms::ss_then_greedy) with the same
+//! seed. `rust/tests/stream_equivalence.rs` pins this across objectives,
+//! shard counts and seeds.
+//!
+//! **Steady-state appends allocate nothing** on the CPU route once
+//! capacity is reserved ([`StreamSession::reserve`]): id assignment, row
+//! push, filter gain/commit and metric bumps all run in preallocated or
+//! atomic storage — asserted by the counting allocator in
+//! `rust/tests/alloc_steady_state.rs`. The allocator is only touched by
+//! re-sparsifications, sieve re-grids and snapshots.
+//!
+//! [`sieve_streaming`]: crate::algorithms::sieve_streaming
+//! [`sparsify_candidates`]: crate::algorithms::sparsify_candidates
+//! [`MaximizerEngine`]: crate::algorithms::MaximizerEngine
+
+use std::sync::Arc;
+
+use anyhow::{anyhow, Result};
+
+use crate::algorithms::{sparsify, GainRoute, MaximizerEngine, SsParams};
+use crate::coordinator::service::SubmitError;
+use crate::coordinator::{Compute, Metrics, ShardedBackend};
+use crate::submodular::{
+    BatchedDivergence, Concave, FacilityLocation, FeatureBased, SubmodularFn,
+};
+use crate::util::pool::ThreadPool;
+use crate::util::stats::Timer;
+use crate::util::vecmath::{add_into, FeatureMatrix};
+
+use crate::algorithms::sieve_filter::{SieveFilter, SieveParams, SieveSet};
+
+use super::remap::IdRemap;
+
+/// Which objective a session maintains over its live rows.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum StreamObjective {
+    /// Feature-based concave-over-modular over the live rows — grows
+    /// incrementally (bit-identical to fresh construction) and supports
+    /// the sieve admission filter.
+    Features(Concave),
+    /// Facility location over clamped-cosine similarities of the live
+    /// rows — the similarity matrix is (re)built per window operation and
+    /// compacted via `retain_elements`; admission filtering is not
+    /// available (its gains depend on the whole ground set).
+    FacilityLocation,
+}
+
+/// Session configuration. Construct with [`StreamConfig::new`] and refine
+/// with the builder methods.
+#[derive(Clone, Debug)]
+pub struct StreamConfig {
+    /// summary budget k
+    pub k: usize,
+    /// SS parameters for windowed re-sparsification *and* the final
+    /// snapshot (per-window seeds are derived from `ss.seed` so windows
+    /// draw independent probes; window 0 uses `ss.seed` itself, which is
+    /// what makes the full-window session bit-match the batch pipeline).
+    /// Set `ss.min_keep ≥ k` when budgets are large relative to `log² n`.
+    pub ss: SsParams,
+    /// Candidate-buffer high-water mark: an admitted arrival that leaves
+    /// more than this many unsparsified elements triggers a windowed
+    /// re-sparsification. `usize::MAX` = full window (never re-sparsify
+    /// until the final snapshot).
+    pub high_water: usize,
+    /// Hard cap on live (retained + buffered) elements — the per-session
+    /// backpressure point: an append batch that cannot fit even after a
+    /// forced re-sparsification is shed with
+    /// [`SubmitError::QueueFull`]. 0 = uncapped.
+    pub max_live: usize,
+    /// Sieve admission filter ([`StreamObjective::Features`] only).
+    /// `None` = admit every arrival.
+    pub admission: Option<SieveParams>,
+    /// Shard-count override for the windowed SS backend (0 = default).
+    pub shards: usize,
+    /// ε for the stochastic-greedy intermediate-snapshot route.
+    pub intermediate_eps: f64,
+    /// Expected stream length: capacity reserved at construction so
+    /// steady-state appends start allocation-free (the only way to
+    /// pre-reserve a service-opened stream; [`StreamSession::reserve`]
+    /// remains available on directly-owned sessions). 0 = grow on demand.
+    pub reserve_hint: usize,
+}
+
+impl StreamConfig {
+    pub fn new(k: usize) -> Self {
+        Self {
+            k,
+            ss: SsParams::default(),
+            high_water: usize::MAX,
+            max_live: 0,
+            admission: None,
+            shards: 0,
+            intermediate_eps: 0.2,
+            reserve_hint: 0,
+        }
+    }
+
+    pub fn with_ss(mut self, ss: SsParams) -> Self {
+        self.ss = ss;
+        self
+    }
+
+    pub fn with_high_water(mut self, hw: usize) -> Self {
+        self.high_water = hw;
+        self
+    }
+
+    pub fn with_max_live(mut self, cap: usize) -> Self {
+        self.max_live = cap;
+        self
+    }
+
+    pub fn with_admission(mut self, params: SieveParams) -> Self {
+        self.admission = Some(params);
+        self
+    }
+
+    pub fn with_shards(mut self, shards: usize) -> Self {
+        self.shards = shards;
+        self
+    }
+
+    pub fn with_reserve(mut self, expected_stream_len: usize) -> Self {
+        self.reserve_hint = expected_stream_len;
+        self
+    }
+}
+
+/// How a snapshot trades cost for exactness.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum SnapshotMode {
+    /// Stochastic greedy over the live set — the cheap between-windows
+    /// refresh (Mirzasoleiman et al.), no SS pass.
+    Intermediate,
+    /// Full `sparsify → lazy greedy` over the live set — the batch
+    /// pipeline's exact configuration.
+    Final,
+}
+
+/// Outcome of one [`StreamSession::append`] batch.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct StreamAppend {
+    /// External id assigned to the batch's first element (ids are
+    /// sequential, so element `i` of the batch got `first_ext + i`).
+    pub first_ext: usize,
+    /// Elements appended (== batch size).
+    pub appended: usize,
+    /// Elements the admission filter let into the candidate buffer.
+    pub admitted: usize,
+    /// Windowed re-sparsifications triggered by this batch.
+    pub resparsifies: usize,
+    /// Elements evicted by those re-sparsifications.
+    pub evicted: usize,
+    /// SS rounds those re-sparsifications ran.
+    pub ss_rounds: usize,
+    /// Wall time spent inside those re-sparsifications (the SS pass +
+    /// compaction only — append/filter work excluded), for latency
+    /// attribution without external instrumentation.
+    pub resparsify_s: f64,
+}
+
+/// A summary snapshot, in stable external ids.
+#[derive(Clone, Debug)]
+pub struct StreamSummary {
+    /// Selected elements (external ids), in selection order.
+    pub summary: Vec<usize>,
+    pub value: f64,
+    /// Live (retained + buffered) elements at snapshot time.
+    pub live: usize,
+    pub retained: usize,
+    pub buffered: usize,
+    /// SS rounds the snapshot itself ran (0 for [`SnapshotMode::Intermediate`]).
+    pub ss_rounds: usize,
+}
+
+/// Lifetime accounting for a session.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct StreamStats {
+    pub appends: u64,
+    pub admitted: u64,
+    pub evicted: u64,
+    /// Completed windowed re-sparsifications.
+    pub windows: u64,
+    /// Total SS rounds across them.
+    pub ss_rounds: u64,
+    pub live: usize,
+    pub retained: usize,
+    pub buffered: usize,
+    /// Total external ids assigned.
+    pub assigned: usize,
+    /// High-water mark of elements resident in the admission filter's
+    /// threshold sets (0 when the filter is disabled).
+    pub filter_peak_resident: usize,
+}
+
+/// Per-threshold candidate-set state for the streaming admission filter:
+/// a coverage vector is all the feature-based objective needs to price a
+/// row's marginal gain, so rejected elements never get storage anywhere.
+struct CovSieve {
+    cov: Vec<f32>,
+    value: f64,
+    len: usize,
+}
+
+impl SieveSet for CovSieve {
+    fn len(&self) -> usize {
+        self.len
+    }
+    fn value(&self) -> f64 {
+        self.value
+    }
+}
+
+/// Live element storage. The first `retained_len` internal indices are the
+/// retained core; everything after is the unsparsified candidate buffer.
+enum LiveStore {
+    /// The objective *is* the storage: grown row by row, compacted in
+    /// place — never rebuilt.
+    Features(Arc<FeatureBased>),
+    /// Raw rows plus a lazily (re)built similarity objective, invalidated
+    /// by appends and compacted (kept valid) by re-sparsifications.
+    Facility { feats: FeatureMatrix, cached: Option<Arc<FacilityLocation>> },
+}
+
+pub struct StreamSession {
+    cfg: StreamConfig,
+    d: usize,
+    store: LiveStore,
+    remap: IdRemap,
+    /// live internal indices `[0, retained_len)` have survived a
+    /// re-sparsification; `[retained_len, live)` are buffered arrivals
+    retained_len: usize,
+    buffer_len: usize,
+    filter: Option<SieveFilter<CovSieve>>,
+    pool: Arc<ThreadPool>,
+    metrics: Arc<Metrics>,
+    windows: u64,
+    ss_rounds: u64,
+    appends: u64,
+    admitted: u64,
+    evicted: u64,
+    closed: bool,
+}
+
+impl StreamSession {
+    /// A fresh session over `d`-dimensional rows. `pool` carries the
+    /// windowed SS shards; `metrics` receives both the stream counters
+    /// (`stream_appends`, `stream_admitted`, `resparsify_rounds`,
+    /// `evicted_elements`) and the per-window backend counters
+    /// (`divergence_evals`, `gain_evals`, …) — hand each session its own
+    /// [`Metrics`] (and [`Metrics::reset`] it between windows if desired)
+    /// to keep long-lived sessions from conflating scopes.
+    pub fn new(
+        objective: StreamObjective,
+        d: usize,
+        cfg: StreamConfig,
+        pool: Arc<ThreadPool>,
+        metrics: Arc<Metrics>,
+    ) -> Result<Self> {
+        if d == 0 {
+            return Err(anyhow!("stream sessions need d >= 1"));
+        }
+        if cfg.k == 0 {
+            return Err(anyhow!("stream sessions need a budget k >= 1"));
+        }
+        if !(cfg.intermediate_eps > 0.0 && cfg.intermediate_eps < 1.0) {
+            return Err(anyhow!("intermediate_eps must be in (0, 1)"));
+        }
+        let filter = match (&cfg.admission, objective) {
+            (None, _) => None,
+            (Some(p), StreamObjective::Features(_)) => Some(SieveFilter::new(cfg.k, p)),
+            (Some(_), StreamObjective::FacilityLocation) => {
+                return Err(anyhow!(
+                    "sieve admission needs per-row gains; facility location's depend on \
+                     the whole ground set — open the session without a filter"
+                ));
+            }
+        };
+        let store = match objective {
+            StreamObjective::Features(g) => {
+                LiveStore::Features(Arc::new(FeatureBased::new(FeatureMatrix::zeros(0, d), g)))
+            }
+            StreamObjective::FacilityLocation => {
+                LiveStore::Facility { feats: FeatureMatrix::zeros(0, d), cached: None }
+            }
+        };
+        let mut session = Self {
+            cfg,
+            d,
+            store,
+            remap: IdRemap::new(),
+            retained_len: 0,
+            buffer_len: 0,
+            filter,
+            pool,
+            metrics,
+            windows: 0,
+            ss_rounds: 0,
+            appends: 0,
+            admitted: 0,
+            evicted: 0,
+            closed: false,
+        };
+        let hint = session.cfg.reserve_hint;
+        if hint > 0 {
+            session.reserve(hint);
+        }
+        Ok(session)
+    }
+
+    /// Reserve capacity for `additional` further appends so the
+    /// steady-state [`append`](Self::append) path never touches the
+    /// allocator (the invariant `rust/tests/alloc_steady_state.rs`
+    /// enforces).
+    pub fn reserve(&mut self, additional: usize) {
+        self.remap.reserve(additional);
+        match &mut self.store {
+            LiveStore::Features(fb) => Arc::get_mut(fb)
+                .expect("objective handle leaked outside the session")
+                .reserve_elements(additional),
+            LiveStore::Facility { feats, .. } => feats.reserve_rows(additional),
+        }
+    }
+
+    /// Append a batch of rows (row-major, `len % d == 0`). Every element
+    /// gets a stable external id; the admission filter (if any) decides
+    /// which enter the candidate buffer; crossing the high-water mark
+    /// triggers windowed re-sparsification inline. Backpressure: a batch
+    /// that cannot fit under `max_live` even after a forced
+    /// re-sparsification is rejected whole with
+    /// [`SubmitError::QueueFull`]; a closed session reports
+    /// [`SubmitError::ServiceDown`].
+    pub fn append(&mut self, rows: &[f32]) -> std::result::Result<StreamAppend, SubmitError<()>> {
+        Self::validate_batch(rows, self.d, matches!(self.store, LiveStore::Features(_)));
+        self.append_prevalidated(rows)
+    }
+
+    /// Whole-batch input validation — alignment, finiteness, and (for
+    /// feature-based coverage, which needs non-negative mass)
+    /// non-negativity; facility-location sessions accept signed
+    /// embeddings, whose cosines `from_features` clamps exactly like the
+    /// batch pipeline. Runs **before any mutation**, so a bad value can
+    /// never leave a session half-appended, reach the admission filter's
+    /// NaN-intolerant comparisons, or (in release) poison coverage sums.
+    /// Panics: invalid input is a caller bug. The service calls this
+    /// before taking the session lock and then uses
+    /// [`append_prevalidated`](Self::append_prevalidated), so the O(n·d)
+    /// scan runs once and outside the critical section.
+    pub(crate) fn validate_batch(rows: &[f32], d: usize, nonneg: bool) {
+        assert_eq!(rows.len() % d, 0, "append batch must be row-major d-wide");
+        assert!(rows.iter().all(|x| x.is_finite()), "append batch must contain finite features");
+        if nonneg {
+            assert!(
+                rows.iter().all(|&x| x >= 0.0),
+                "feature-based sessions need non-negative features"
+            );
+        }
+    }
+
+    /// [`append`](Self::append) without the input scan — for callers that
+    /// already ran [`validate_batch`](Self::validate_batch) on this exact
+    /// batch (the service does, pre-lock).
+    pub(crate) fn append_prevalidated(
+        &mut self,
+        rows: &[f32],
+    ) -> std::result::Result<StreamAppend, SubmitError<()>> {
+        if self.closed {
+            return Err(SubmitError::ServiceDown(()));
+        }
+        debug_assert_eq!(rows.len() % self.d, 0);
+        let batch_n = rows.len() / self.d;
+        let mut out = StreamAppend { first_ext: self.remap.assigned(), ..Default::default() };
+        if self.cfg.max_live > 0 && self.live() + batch_n > self.cfg.max_live {
+            // a batch bigger than the cap itself can never fit — shed it
+            // before burning (and eroding the retained core with) a forced
+            // re-sparsification that cannot help
+            if batch_n > self.cfg.max_live {
+                return Err(SubmitError::QueueFull(()));
+            }
+            // worst case every element is admitted: shed unless a forced
+            // re-sparsification frees enough headroom
+            if self.buffer_len > 0 {
+                self.resparsify_into(&mut out);
+            }
+            if self.live() + batch_n > self.cfg.max_live {
+                return Err(SubmitError::QueueFull(()));
+            }
+        }
+        for row in rows.chunks_exact(self.d) {
+            out.appended += 1;
+            if !self.admit(row) {
+                self.remap.reject();
+                continue;
+            }
+            let (_ext, int) = self.remap.admit();
+            match &mut self.store {
+                LiveStore::Features(fb) => {
+                    let fb = Arc::get_mut(fb).expect("objective handle leaked outside the session");
+                    debug_assert_eq!(fb.n(), int);
+                    fb.push_element(row);
+                }
+                LiveStore::Facility { feats, cached } => {
+                    debug_assert_eq!(feats.n(), int);
+                    feats.push_row(row);
+                    *cached = None;
+                }
+            }
+            self.buffer_len += 1;
+            out.admitted += 1;
+            if self.buffer_len > self.cfg.high_water {
+                self.resparsify_into(&mut out);
+            }
+        }
+        // one RMW per counter per batch, not per element — the per-element
+        // form costs two relaxed fetch_adds in the hot append loop
+        self.appends += out.appended as u64;
+        self.admitted += out.admitted as u64;
+        self.metrics.add(&self.metrics.counters.stream_appends, out.appended as u64);
+        self.metrics.add(&self.metrics.counters.stream_admitted, out.admitted as u64);
+        Ok(out)
+    }
+
+    /// Run one windowed re-sparsification and fold its accounting (count,
+    /// evictions, rounds, wall time) into an append outcome.
+    fn resparsify_into(&mut self, out: &mut StreamAppend) {
+        let t = Timer::new();
+        let (ev, rounds) = self.resparsify();
+        out.resparsify_s += t.elapsed_s();
+        out.resparsifies += 1;
+        out.evicted += ev;
+        out.ss_rounds += rounds;
+    }
+
+    /// Sieve hand-off: screen one row before admitting its storage.
+    fn admit(&mut self, row: &[f32]) -> bool {
+        let Some(filter) = self.filter.as_mut() else { return true };
+        let LiveStore::Features(fb) = &self.store else { unreachable!("validated in new()") };
+        let g = fb.concave();
+        let d = self.d;
+        // row-form kernels shared with FeatureBased::singleton /
+        // gain_over_cov, so filter pricing can never drift from the
+        // objective bit-wise
+        let sv = g.row_singleton(row);
+        filter.observe(sv, || CovSieve { cov: vec![0.0; d], value: 0.0, len: 0 });
+        filter.offer(
+            |s| g.row_gain(&s.cov, row),
+            |s, gain| {
+                s.value += gain;
+                add_into(&mut s.cov, row);
+                s.len += 1;
+            },
+        )
+    }
+
+    /// Windowed re-sparsification: the arena SS loop over
+    /// `retained ∪ buffer`, then compaction of storage and remap to the
+    /// surviving core. Returns `(evicted, ss_rounds)`.
+    fn resparsify(&mut self) -> (usize, usize) {
+        let m = self.live();
+        if m == 0 {
+            self.buffer_len = 0;
+            return (0, 0);
+        }
+        let obj = self.objective();
+        let backend = self.backend(&obj);
+        let params = SsParams { seed: self.window_seed(), ..self.cfg.ss.clone() };
+        // sparsify == sparsify_candidates over (0..backend.n()), and
+        // backend.n() is exactly the live set here
+        let res = sparsify(&backend, &params);
+        drop(backend);
+        drop(obj); // release the Arc so compaction can take &mut
+        let evicted = m - res.kept.len();
+        self.remap.compact(&res.kept);
+        match &mut self.store {
+            LiveStore::Features(fb) => {
+                let ok = Arc::get_mut(fb)
+                    .expect("objective handle leaked outside the session")
+                    .retain_elements(&res.kept);
+                debug_assert!(ok);
+            }
+            LiveStore::Facility { feats, cached } => {
+                feats.retain_rows(&res.kept);
+                // the compacted similarity matrix stays valid for an
+                // immediately following snapshot
+                if let Some(fl) = cached {
+                    let ok = Arc::get_mut(fl)
+                        .expect("objective handle leaked outside the session")
+                        .retain_elements(&res.kept);
+                    debug_assert!(ok);
+                }
+            }
+        }
+        self.retained_len = res.kept.len();
+        self.buffer_len = 0;
+        self.windows += 1;
+        self.ss_rounds += res.rounds as u64;
+        self.evicted += evicted as u64;
+        self.metrics.add(&self.metrics.counters.resparsify_rounds, res.rounds as u64);
+        self.metrics.add(&self.metrics.counters.evicted_elements, evicted as u64);
+        (evicted, res.rounds)
+    }
+
+    /// Summarize the current live set. [`SnapshotMode::Final`] runs the
+    /// exact batch pipeline (`sparsify → lazy greedy`, same window seed),
+    /// [`SnapshotMode::Intermediate`] the cheap stochastic-greedy route.
+    /// Read-only with respect to the live set: nothing is evicted.
+    pub fn snapshot_summary(&mut self, mode: SnapshotMode) -> Result<StreamSummary> {
+        if self.closed {
+            return Err(anyhow!("session is closed"));
+        }
+        let m = self.live();
+        if m == 0 {
+            return Ok(StreamSummary {
+                summary: Vec::new(),
+                value: 0.0,
+                live: 0,
+                retained: self.retained_len,
+                buffered: self.buffer_len,
+                ss_rounds: 0,
+            });
+        }
+        let obj = self.objective();
+        let backend = self.backend(&obj);
+        let f = obj.as_submodular();
+        let mut engine = MaximizerEngine::new(f, GainRoute::Backend(&backend));
+        let (sol, ss_rounds) = match mode {
+            SnapshotMode::Final => {
+                let params = SsParams { seed: self.window_seed(), ..self.cfg.ss.clone() };
+                let ss = sparsify(&backend, &params);
+                (engine.lazy_greedy(&ss.kept, self.cfg.k), ss.rounds)
+            }
+            SnapshotMode::Intermediate => {
+                // only the stochastic route needs an explicit candidate list
+                let candidates: Vec<usize> = (0..m).collect();
+                (
+                    engine.stochastic_greedy(
+                        &candidates,
+                        self.cfg.k,
+                        self.cfg.intermediate_eps,
+                        self.window_seed(),
+                    ),
+                    0,
+                )
+            }
+        };
+        Ok(StreamSummary {
+            summary: sol.set.iter().map(|&i| self.remap.external(i)).collect(),
+            value: sol.value,
+            live: m,
+            retained: self.retained_len,
+            buffered: self.buffer_len,
+            ss_rounds,
+        })
+    }
+
+    /// Close the session: further appends report
+    /// [`SubmitError::ServiceDown`], snapshots fail. Returns the lifetime
+    /// stats. Idempotent.
+    pub fn close(&mut self) -> StreamStats {
+        self.closed = true;
+        self.stats()
+    }
+
+    pub fn stats(&self) -> StreamStats {
+        StreamStats {
+            appends: self.appends,
+            admitted: self.admitted,
+            evicted: self.evicted,
+            windows: self.windows,
+            ss_rounds: self.ss_rounds,
+            live: self.live(),
+            retained: self.retained_len,
+            buffered: self.buffer_len,
+            assigned: self.remap.assigned(),
+            filter_peak_resident: self.filter.as_ref().map_or(0, |f| f.peak_resident()),
+        }
+    }
+
+    /// Live (retained + buffered) elements.
+    pub fn live(&self) -> usize {
+        match &self.store {
+            LiveStore::Features(fb) => fb.n(),
+            LiveStore::Facility { feats, .. } => feats.n(),
+        }
+    }
+
+    pub fn retained(&self) -> usize {
+        self.retained_len
+    }
+
+    pub fn buffered(&self) -> usize {
+        self.buffer_len
+    }
+
+    /// The feature row of a live external id; `None` once evicted (or
+    /// never admitted) — external ids themselves are stable forever.
+    pub fn row(&self, ext: usize) -> Option<&[f32]> {
+        let int = self.remap.internal(ext)?;
+        Some(match &self.store {
+            LiveStore::Features(fb) => fb.feats().row(int),
+            LiveStore::Facility { feats, .. } => feats.row(int),
+        })
+    }
+
+    /// The id remap spine (read-only).
+    pub fn remap(&self) -> &IdRemap {
+        &self.remap
+    }
+
+    pub fn metrics(&self) -> &Metrics {
+        &self.metrics
+    }
+
+    /// Current objective handle (Features: the live store itself;
+    /// FacilityLocation: rebuilt from the live rows when stale).
+    fn objective(&mut self) -> Arc<dyn BatchedDivergence> {
+        match &mut self.store {
+            LiveStore::Features(fb) => Arc::clone(fb) as Arc<dyn BatchedDivergence>,
+            LiveStore::Facility { feats, cached } => {
+                if cached.is_none() {
+                    *cached = Some(Arc::new(FacilityLocation::from_features(feats)));
+                }
+                Arc::clone(cached.as_ref().unwrap()) as Arc<dyn BatchedDivergence>
+            }
+        }
+    }
+
+    fn backend(&self, obj: &Arc<dyn BatchedDivergence>) -> ShardedBackend {
+        let b = ShardedBackend::new(
+            Arc::clone(obj),
+            Arc::clone(&self.pool),
+            Compute::Cpu,
+            Arc::clone(&self.metrics),
+        )
+        .expect("CPU backend construction is infallible");
+        if self.cfg.shards > 0 {
+            b.with_shards(self.cfg.shards)
+        } else {
+            b
+        }
+    }
+
+    /// Per-window SS seed: window 0 is `ss.seed` itself (batch
+    /// equivalence); later windows decorrelate with a golden-ratio stride.
+    fn window_seed(&self) -> u64 {
+        self.cfg.ss.seed.wrapping_add(self.windows.wrapping_mul(0x9E37_79B9_7F4A_7C15))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    fn rows(n: usize, d: usize, seed: u64) -> FeatureMatrix {
+        let mut rng = Rng::new(seed);
+        let mut m = FeatureMatrix::zeros(n, d);
+        for i in 0..n {
+            for j in 0..d {
+                m.row_mut(i)[j] = if rng.bool(0.3) { rng.f32() } else { 0.0 };
+            }
+        }
+        m
+    }
+
+    fn session(cfg: StreamConfig, d: usize) -> StreamSession {
+        StreamSession::new(
+            StreamObjective::Features(Concave::Sqrt),
+            d,
+            cfg,
+            Arc::new(ThreadPool::new(2, 16)),
+            Arc::new(Metrics::new()),
+        )
+        .unwrap()
+    }
+
+    #[test]
+    fn append_snapshot_roundtrip_full_window() {
+        let data = rows(300, 12, 1);
+        let mut s = session(StreamConfig::new(8).with_ss(SsParams::default().with_seed(5)), 12);
+        let r = s.append(data.data()).unwrap();
+        assert_eq!(r.appended, 300);
+        assert_eq!(r.admitted, 300, "no filter => everything admitted");
+        assert_eq!(r.resparsifies, 0, "full window never re-sparsifies");
+        assert_eq!(s.live(), 300);
+        let snap = s.snapshot_summary(SnapshotMode::Final).unwrap();
+        assert_eq!(snap.summary.len(), 8);
+        assert!(snap.value > 0.0);
+        assert!(snap.ss_rounds > 0);
+        assert!(snap.summary.iter().all(|&e| e < 300));
+        // deterministic given the same stream + seed
+        let mut s2 = session(StreamConfig::new(8).with_ss(SsParams::default().with_seed(5)), 12);
+        s2.append(data.data()).unwrap();
+        let snap2 = s2.snapshot_summary(SnapshotMode::Final).unwrap();
+        assert_eq!(snap.summary, snap2.summary);
+        assert_eq!(snap.value.to_bits(), snap2.value.to_bits());
+    }
+
+    #[test]
+    fn windowing_bounds_live_set_and_keeps_ids_stable() {
+        let data = rows(1200, 10, 2);
+        let mut s = session(
+            StreamConfig::new(6)
+                .with_ss(SsParams::default().with_seed(3))
+                .with_high_water(200),
+            10,
+        );
+        let r = s.append(data.data()).unwrap();
+        assert!(r.resparsifies >= 2, "1200 appends over hw=200 must window repeatedly");
+        assert!(r.evicted > 0);
+        assert!(s.live() < 1200, "live set must stay bounded");
+        assert_eq!(s.buffered() + s.retained(), s.live());
+        assert_eq!(s.stats().windows, r.resparsifies as u64);
+        // every surviving external id still resolves to its original row
+        let mut survivors = 0;
+        for ext in 0..1200 {
+            if let Some(row) = s.row(ext) {
+                assert_eq!(row, data.row(ext), "ext {ext} must keep its row across evictions");
+                survivors += 1;
+            }
+        }
+        assert_eq!(survivors, s.live());
+        // snapshots speak external ids
+        let snap = s.snapshot_summary(SnapshotMode::Intermediate).unwrap();
+        assert_eq!(snap.summary.len(), 6);
+        for &e in &snap.summary {
+            assert!(s.row(e).is_some(), "summary must reference live external ids");
+        }
+    }
+
+    #[test]
+    fn admission_filter_screens_arrivals() {
+        // near-duplicate heavy stream: the sieve grid should reject a
+        // solid fraction of arrivals before they ever get storage
+        let mut base = rows(8, 10, 4);
+        base.scale(2.0);
+        let mut s = session(
+            StreamConfig::new(4)
+                .with_ss(SsParams::default().with_seed(1))
+                .with_admission(SieveParams::paper_default()),
+            10,
+        );
+        let mut rng = Rng::new(9);
+        let mut batch = FeatureMatrix::zeros(0, 10);
+        for _ in 0..400 {
+            let b = rng.below(8);
+            let mut row = base.row(b).to_vec();
+            for x in &mut row {
+                *x = (*x + 0.01 * rng.f32()).max(0.0);
+            }
+            batch.push_row(&row);
+        }
+        let r = s.append(batch.data()).unwrap();
+        assert_eq!(r.appended, 400);
+        assert!(r.admitted < 400, "redundant stream must see rejections");
+        assert!(r.admitted >= 1);
+        assert_eq!(s.live(), r.admitted);
+        let st = s.stats();
+        assert_eq!(st.assigned, 400, "every arrival gets an external id");
+        assert!(st.filter_peak_resident > 0);
+        assert!(st.filter_peak_resident <= 50 * 4, "paper bound: 50·k");
+        // rejected ids resolve to None, admitted ones to their row
+        let mut live_seen = 0;
+        for ext in 0..400 {
+            if s.row(ext).is_some() {
+                live_seen += 1;
+            }
+        }
+        assert_eq!(live_seen, s.live());
+        let snap = s.snapshot_summary(SnapshotMode::Final).unwrap();
+        assert_eq!(snap.summary.len(), 4);
+    }
+
+    #[test]
+    fn backpressure_and_close_semantics() {
+        let data = rows(600, 8, 7);
+        let mut s = session(
+            StreamConfig::new(5)
+                .with_ss(SsParams::default().with_seed(2).with_min_keep(10))
+                .with_high_water(100)
+                .with_max_live(240),
+            8,
+        );
+        // feed in chunks; all should fit thanks to forced re-sparsification
+        for c in data.data().chunks(8 * 120) {
+            s.append(c).unwrap();
+        }
+        assert!(s.live() <= 240);
+        // a batch larger than the cap itself must shed
+        let huge = rows(300, 8, 8);
+        match s.append(huge.data()) {
+            Err(e @ SubmitError::QueueFull(())) => assert!(e.is_retryable()),
+            other => panic!("expected QueueFull, got {:?}", other.map(|r| r.appended)),
+        }
+        let before = s.stats();
+        let _ = s.close();
+        match s.append(data.data()) {
+            Err(e @ SubmitError::ServiceDown(())) => assert!(!e.is_retryable()),
+            _ => panic!("closed session must report ServiceDown"),
+        }
+        assert!(s.snapshot_summary(SnapshotMode::Final).is_err());
+        assert_eq!(s.stats().appends, before.appends, "closed session accepts nothing");
+    }
+
+    #[test]
+    fn facility_location_sessions_work_and_reject_admission() {
+        let data = rows(200, 9, 11);
+        let pool = Arc::new(ThreadPool::new(2, 16));
+        let mut s = StreamSession::new(
+            StreamObjective::FacilityLocation,
+            9,
+            StreamConfig::new(6).with_ss(SsParams::default().with_seed(4)).with_high_water(60),
+            Arc::clone(&pool),
+            Arc::new(Metrics::new()),
+        )
+        .unwrap();
+        s.append(data.data()).unwrap();
+        assert!(s.live() < 200);
+        let snap = s.snapshot_summary(SnapshotMode::Final).unwrap();
+        assert_eq!(snap.summary.len(), 6);
+        assert!(snap.value > 0.0);
+        // admission filter is features-only
+        assert!(StreamSession::new(
+            StreamObjective::FacilityLocation,
+            9,
+            StreamConfig::new(6).with_admission(SieveParams::paper_default()),
+            pool,
+            Arc::new(Metrics::new()),
+        )
+        .is_err());
+    }
+
+    #[test]
+    fn stream_metrics_are_counted() {
+        let data = rows(500, 8, 13);
+        let metrics = Arc::new(Metrics::new());
+        let mut s = StreamSession::new(
+            StreamObjective::Features(Concave::Sqrt),
+            8,
+            StreamConfig::new(5).with_ss(SsParams::default().with_seed(6)).with_high_water(120),
+            Arc::new(ThreadPool::new(2, 16)),
+            Arc::clone(&metrics),
+        )
+        .unwrap();
+        let r = s.append(data.data()).unwrap();
+        let snap = metrics.snapshot();
+        let get = |k: &str| snap.get(k).unwrap().as_f64().unwrap();
+        assert_eq!(get("stream_appends"), 500.0);
+        assert_eq!(get("stream_admitted"), 500.0);
+        assert_eq!(get("resparsify_rounds") as usize, r.ss_rounds);
+        assert_eq!(get("evicted_elements") as usize, r.evicted);
+        assert!(get("divergence_evals") > 0.0, "windowed SS must meter its backend");
+    }
+}

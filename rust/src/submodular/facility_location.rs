@@ -377,6 +377,35 @@ impl SubmodularFn for FacilityLocation {
     fn singleton_complements_pooled(&self, pool: &ThreadPool, shards: usize) -> Option<Vec<f64>> {
         Some(self.singleton_complements_rowsharded(pool, shards))
     }
+
+    fn supports_retain(&self) -> bool {
+        true
+    }
+
+    /// Compact the dense similarity matrix to the `keep × keep` principal
+    /// submatrix, in place: with `keep` ascending every source cell sits
+    /// at or after its destination, so a forward row-major walk never
+    /// reads an overwritten slot. The result is indistinguishable from a
+    /// `FacilityLocation::new` over the gathered submatrix.
+    fn retain_elements(&mut self, keep: &[usize]) -> bool {
+        let n = self.n;
+        let m = keep.len();
+        let mut prev = None;
+        for &old in keep {
+            assert!(old < n, "retain_elements index {old} out of range (n={n})");
+            assert!(prev.map_or(true, |p| p < old), "retain_elements requires ascending indices");
+            prev = Some(old);
+        }
+        for (ni, &oi) in keep.iter().enumerate() {
+            for (nj, &oj) in keep.iter().enumerate() {
+                // oi*n + oj >= ni*m + nj because oi >= ni, oj >= nj, n >= m
+                self.sim[ni * m + nj] = self.sim[oi * n + oj];
+            }
+        }
+        self.sim.truncate(m * m);
+        self.n = m;
+        true
+    }
 }
 
 struct FlState<'a> {
@@ -470,6 +499,34 @@ mod tests {
                 assert_eq!(f.sim(i, u), f.sim(u, i));
                 assert!(f.sim(i, u) >= 0.0);
             }
+        }
+    }
+
+    #[test]
+    fn retain_elements_bitwise_matches_fresh_submatrix() {
+        let mut f = instance(30, 9);
+        let keep: Vec<usize> = (0..30).filter(|i| i % 4 != 2).collect();
+        // fresh construction over the gathered principal submatrix
+        let m = keep.len();
+        let mut sub = vec![0.0f32; m * m];
+        for (ni, &oi) in keep.iter().enumerate() {
+            for (nj, &oj) in keep.iter().enumerate() {
+                sub[ni * m + nj] = f.sim(oi, oj);
+            }
+        }
+        let fresh = FacilityLocation::new(m, sub);
+        assert!(f.supports_retain());
+        assert!(f.retain_elements(&keep));
+        assert_eq!(f.n(), m);
+        for i in 0..m {
+            for u in 0..m {
+                assert_eq!(f.sim(i, u).to_bits(), fresh.sim(i, u).to_bits());
+            }
+        }
+        let a = f.singleton_complements();
+        let b = fresh.singleton_complements();
+        for (x, y) in a.iter().zip(&b) {
+            assert_eq!(x.to_bits(), y.to_bits());
         }
     }
 

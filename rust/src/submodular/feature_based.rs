@@ -58,6 +58,30 @@ impl Concave {
             Concave::Pow(milli) => x.powf(milli as f64 / 1000.0),
         }
     }
+
+    /// `f({row}) = Σ_d g(row_d)` over a raw feature row — the singleton
+    /// kernel in row form. [`FeatureBased::singleton`] delegates here, and
+    /// the streaming admission filter prices not-yet-stored arrivals with
+    /// the same function, so the two can never drift apart bit-wise.
+    #[inline]
+    pub fn row_singleton(self, row: &[f32]) -> f64 {
+        row.iter().map(|&x| self.apply(x as f64)).sum()
+    }
+
+    /// `f(row | cov) = Σ_{d: row_d > 0} g(cov_d + row_d) − g(cov_d)` — the
+    /// scalar marginal-gain kernel in row form. [`FeatureBased::gain_over_cov`]
+    /// delegates here (same delegation note as [`Self::row_singleton`]).
+    #[inline]
+    pub fn row_gain(self, cov: &[f32], row: &[f32]) -> f64 {
+        debug_assert_eq!(cov.len(), row.len());
+        let mut acc = 0.0f64;
+        for (&c, &x) in cov.iter().zip(row) {
+            if x > 0.0 {
+                acc += self.apply((c + x) as f64) - self.apply(c as f64);
+            }
+        }
+        acc
+    }
 }
 
 /// Feature-based submodular function over dense hashed features.
@@ -94,19 +118,30 @@ impl FeatureBased {
     /// `Σ_d g(cov_d + v_d) - g(cov_d)` — the marginal-gain kernel's scalar form.
     #[inline]
     pub fn gain_over_cov(&self, cov: &[f32], v: usize) -> f64 {
-        let row = self.feats.row(v);
-        let mut acc = 0.0f64;
-        for (&c, &x) in cov.iter().zip(row) {
-            if x > 0.0 {
-                acc += self.g.apply((c + x) as f64) - self.g.apply(c as f64);
-            }
-        }
-        acc
+        self.g.row_gain(cov, self.feats.row(v))
     }
 
     /// Total feature mass c(V) (cached).
     pub fn total_mass(&self) -> &[f32] {
         &self.total
+    }
+
+    /// Append one element (streaming ingest). The cached total mass is
+    /// updated incrementally with the same `add_into` row-order
+    /// accumulation [`FeatureMatrix::col_sums`] performs, so an objective
+    /// grown row by row is **bit-identical** to one constructed over the
+    /// final matrix — the invariant the stream ↔ batch equivalence suite
+    /// rests on.
+    pub fn push_element(&mut self, row: &[f32]) {
+        debug_assert!(row.iter().all(|&x| x >= 0.0), "features must be non-negative");
+        self.feats.push_row(row);
+        add_into(&mut self.total, row);
+    }
+
+    /// Reserve row capacity so a steady state of [`Self::push_element`]
+    /// calls never touches the allocator.
+    pub fn reserve_elements(&mut self, additional: usize) {
+        self.feats.reserve_rows(additional);
     }
 
     /// Batched form of [`Self::gain_over_cov`]: `out[j] = f(c_j | S)` for a
@@ -294,7 +329,7 @@ impl SubmodularFn for FeatureBased {
     }
 
     fn singleton(&self, v: usize) -> f64 {
-        self.feats.row(v).iter().map(|&x| self.g.apply(x as f64)).sum()
+        self.g.row_singleton(self.feats.row(v))
     }
 
     fn singleton_complements(&self) -> Vec<f64> {
@@ -323,6 +358,20 @@ impl SubmodularFn for FeatureBased {
             }
             *slot = acc;
         }
+    }
+
+    fn supports_retain(&self) -> bool {
+        true
+    }
+
+    /// Compact to `keep`: rows shift in place, and the total mass is
+    /// recomputed with the fresh-construction `col_sums` accumulation, so
+    /// the result is bit-identical to `FeatureBased::new` over the
+    /// surviving rows.
+    fn retain_elements(&mut self, keep: &[usize]) -> bool {
+        self.feats.retain_rows(keep);
+        self.total = self.feats.col_sums();
+        true
     }
 
     fn as_feature_based(&self) -> Option<&FeatureBased> {
@@ -601,6 +650,40 @@ mod tests {
                 );
             }
         }
+    }
+
+    #[test]
+    fn grown_and_retained_objective_bitwise_matches_fresh_construction() {
+        // push_element row by row == FeatureBased::new over the final
+        // matrix (totals accumulate in the same order), and
+        // retain_elements == FeatureBased::new over the surviving rows —
+        // the two invariants the streaming session relies on
+        let full = instance(40, 7, 19);
+        let mut grown = FeatureBased::sqrt(FeatureMatrix::zeros(0, 7));
+        grown.reserve_elements(40);
+        for i in 0..40 {
+            grown.push_element(full.feats().row(i));
+        }
+        assert_eq!(grown.feats(), full.feats());
+        for (a, b) in grown.total_mass().iter().zip(full.total_mass()) {
+            assert_eq!(a.to_bits(), b.to_bits(), "grown totals must match col_sums");
+        }
+        let keep: Vec<usize> = (0..40).filter(|i| i % 3 != 1).collect();
+        assert!(grown.supports_retain());
+        assert!(grown.retain_elements(&keep));
+        let fresh = FeatureBased::sqrt(full.feats().gather(&keep));
+        assert_eq!(grown.n(), keep.len());
+        assert_eq!(grown.feats(), fresh.feats());
+        for (a, b) in grown.total_mass().iter().zip(fresh.total_mass()) {
+            assert_eq!(a.to_bits(), b.to_bits(), "retained totals must match fresh");
+        }
+        // downstream quantities agree bit-for-bit too
+        let sg = grown.singleton_complements();
+        let sf = fresh.singleton_complements();
+        for (a, b) in sg.iter().zip(&sf) {
+            assert_eq!(a.to_bits(), b.to_bits());
+        }
+        assert_eq!(grown.pair_gain(0, 5).to_bits(), fresh.pair_gain(0, 5).to_bits());
     }
 
     #[test]

@@ -102,6 +102,23 @@ impl SubmodularFn for Mixture {
         }
     }
 
+    /// A mixture can compact exactly when every component can — partial
+    /// compaction would desynchronize the parts' ground sets.
+    fn supports_retain(&self) -> bool {
+        self.parts.iter().all(|(_, p)| p.supports_retain())
+    }
+
+    fn retain_elements(&mut self, keep: &[usize]) -> bool {
+        if !self.supports_retain() {
+            return false;
+        }
+        for (_, p) in &mut self.parts {
+            let ok = p.retain_elements(keep);
+            debug_assert!(ok, "component claimed supports_retain but refused");
+        }
+        true
+    }
+
     /// Pool-backed precompute: each part takes its best available route —
     /// its own pooled variant (facility location's row-sharded scan), the
     /// decomposable per-element shard, or the serial fallback — and the
@@ -421,6 +438,35 @@ mod tests {
                 assert_eq!(a.to_bits(), b.to_bits(), "slot {v} diverged (shards={shards})");
             }
         }
+    }
+
+    #[test]
+    fn retain_delegates_to_all_parts_or_none() {
+        let n = 24;
+        let m = feats(n, 5, 21);
+        let mut f = Mixture::new(vec![
+            (0.6, Box::new(FeatureBased::sqrt(m.clone())) as Box<dyn BatchedDivergence>),
+            (0.4, Box::new(FacilityLocation::from_features(&m))),
+        ]);
+        assert!(f.supports_retain());
+        let keep: Vec<usize> = (0..n).step_by(2).collect();
+        assert!(f.retain_elements(&keep));
+        assert_eq!(f.n(), keep.len());
+        let fresh = Mixture::new(vec![
+            (0.6, Box::new(FeatureBased::sqrt(m.gather(&keep))) as Box<dyn BatchedDivergence>),
+            (0.4, Box::new(FacilityLocation::from_features(&m.gather(&keep)))),
+        ]);
+        for v in 0..keep.len() {
+            assert_eq!(f.singleton(v).to_bits(), fresh.singleton(v).to_bits());
+        }
+        // a modular part (no retain support) makes the whole mixture refuse
+        let mut with_modular = Mixture::new(vec![
+            (1.0, Box::new(FeatureBased::sqrt(m.clone())) as Box<dyn BatchedDivergence>),
+            (0.5, Box::new(Modular::new(vec![0.3; n]))),
+        ]);
+        assert!(!with_modular.supports_retain());
+        assert!(!with_modular.retain_elements(&keep));
+        assert_eq!(with_modular.n(), n, "failed retain must leave the mixture untouched");
     }
 
     #[test]

@@ -145,6 +145,32 @@ pub trait SubmodularFn: Send + Sync {
         None
     }
 
+    /// Whether [`retain_elements`] is implemented — the streaming
+    /// subsystem ([`crate::stream`]) requires it to compact the live
+    /// ground set after a windowed re-sparsification. Defaults to `false`;
+    /// objectives that own per-element storage ([`FeatureBased`],
+    /// [`FacilityLocation`], mixtures of such) opt in.
+    ///
+    /// [`retain_elements`]: SubmodularFn::retain_elements
+    fn supports_retain(&self) -> bool {
+        false
+    }
+
+    /// Compact the ground set to `keep` (ascending, distinct internal
+    /// indices): survivor `keep[i]` is renumbered to element `i`, every
+    /// other element's storage (feature row, similarity row/column, cached
+    /// totals) is dropped, and `n()` becomes `keep.len()`. Returns `false`
+    /// (and must leave the objective untouched) when the capability is
+    /// unsupported — check [`supports_retain`] first; implementations that
+    /// return `true` must make the compacted objective indistinguishable
+    /// from one freshly constructed over the surviving elements in `keep`
+    /// order, which is what the stream ↔ batch equivalence tests pin down.
+    ///
+    /// [`supports_retain`]: SubmodularFn::supports_retain
+    fn retain_elements(&mut self, _keep: &[usize]) -> bool {
+        false
+    }
+
     /// Add/remove-capable state starting from an arbitrary set, when the
     /// objective supports efficient removal (needed by bi-directional
     /// greedy). `None` (the default) opts out.

@@ -201,6 +201,15 @@ impl LatencyHistogram {
         self.buckets.iter().map(|b| b.load(std::sync::atomic::Ordering::Relaxed)).sum()
     }
 
+    /// Zero every bucket (scoped metering — e.g. a streaming session
+    /// resetting its per-window metrics). Concurrent recorders may land a
+    /// sample on either side of the reset; counts never go negative.
+    pub fn reset(&self) {
+        for b in &self.buckets {
+            b.store(0, std::sync::atomic::Ordering::Relaxed);
+        }
+    }
+
     /// Approximate percentile in seconds.
     pub fn percentile_secs(&self, p: f64) -> f64 {
         let total = self.count();

@@ -50,6 +50,39 @@ impl FeatureMatrix {
         &self.data
     }
 
+    /// Append one row (streaming ingest). `row.len()` must equal `d`.
+    #[inline]
+    pub fn push_row(&mut self, row: &[f32]) {
+        assert_eq!(row.len(), self.d, "row width must match d");
+        self.data.extend_from_slice(row);
+    }
+
+    /// Reserve capacity for `additional` more rows, so a streaming
+    /// steady state of `push_row` calls never touches the allocator.
+    pub fn reserve_rows(&mut self, additional: usize) {
+        self.data.reserve(additional * self.d);
+    }
+
+    /// In-place compaction to the rows in `keep` (ascending, distinct):
+    /// survivor `keep[i]` becomes row `i`. The streaming re-sparsifier uses
+    /// this to drop evicted elements without reallocating the matrix.
+    pub fn retain_rows(&mut self, keep: &[usize]) {
+        let n = self.n();
+        let d = self.d;
+        let mut prev = None;
+        for (new_i, &old_i) in keep.iter().enumerate() {
+            assert!(old_i < n, "retain_rows index {old_i} out of range (n={n})");
+            assert!(prev.map_or(true, |p| p < old_i), "retain_rows requires ascending indices");
+            prev = Some(old_i);
+            // old_i >= new_i always (ascending + distinct), so the source
+            // block has not been overwritten yet
+            if old_i != new_i {
+                self.data.copy_within(old_i * d..(old_i + 1) * d, new_i * d);
+            }
+        }
+        self.data.truncate(keep.len() * d);
+    }
+
     /// Gather rows by index into a new matrix.
     pub fn gather(&self, idx: &[usize]) -> FeatureMatrix {
         let mut out = FeatureMatrix::zeros(idx.len(), self.d);
@@ -188,6 +221,30 @@ mod tests {
         assert_eq!((m.n(), m.d), (3, 2));
         assert_eq!(m.row(1), &[3.0, 4.0]);
         assert_eq!(m.col_sums(), vec![9.0, 12.0]);
+    }
+
+    #[test]
+    fn push_and_retain_rows() {
+        let mut m = FeatureMatrix::zeros(0, 2);
+        for i in 0..4 {
+            m.push_row(&[i as f32, 10.0 + i as f32]);
+        }
+        assert_eq!(m.n(), 4);
+        assert_eq!(m.row(3), &[3.0, 13.0]);
+        m.retain_rows(&[0, 2, 3]);
+        assert_eq!(m.n(), 3);
+        assert_eq!(m.row(0), &[0.0, 10.0]);
+        assert_eq!(m.row(1), &[2.0, 12.0]);
+        assert_eq!(m.row(2), &[3.0, 13.0]);
+        // identity retain is a no-op
+        m.retain_rows(&[0, 1, 2]);
+        assert_eq!(m.n(), 3);
+        assert_eq!(m.row(1), &[2.0, 12.0]);
+        // reserve keeps pushes allocation-free afterwards (behavioral check
+        // lives in tests/alloc_steady_state.rs; here just exercise the API)
+        m.reserve_rows(8);
+        m.push_row(&[9.0, 19.0]);
+        assert_eq!(m.n(), 4);
     }
 
     #[test]

@@ -6,7 +6,10 @@
 //! same invariant holds for the maximizer engine: once its arena is sized
 //! (heap, version maps, cohort buffers) and the state has reserved its
 //! solution vector, steady-state lazy-greedy iterations — cohort kernel,
-//! heap churn, commits — allocate **exactly zero** on the CPU route.
+//! heap churn, commits — allocate **exactly zero** on the CPU route. And
+//! for the streaming subsystem: once a `StreamSession` has reserved
+//! capacity, steady-state appends (no re-sparsify, no sieve re-grid)
+//! allocate exactly zero as well.
 //!
 //! This file deliberately contains a single `#[test]`: the counting
 //! allocator is process-global, so concurrent tests in the same binary
@@ -21,7 +24,8 @@ use submodular_ss::algorithms::{
     MaximizerEngine, SsParams,
 };
 use submodular_ss::coordinator::{Compute, Metrics, ShardedBackend};
-use submodular_ss::submodular::{FeatureBased, SolState, SubmodularFn};
+use submodular_ss::stream::{StreamConfig, StreamObjective, StreamSession};
+use submodular_ss::submodular::{Concave, FeatureBased, SolState, SubmodularFn};
 use submodular_ss::util::pool::ThreadPool;
 use submodular_ss::util::rng::Rng;
 use submodular_ss::util::vecmath::FeatureMatrix;
@@ -239,4 +243,39 @@ fn steady_state_rounds_allocate_zero_on_cpu_and_o_shards_on_pool() {
         40,
     );
     assert_eq!(sol.set, want.set);
+
+    // --- streaming session: steady-state appends allocate exactly zero ---
+    // With capacity reserved and no re-sparsify triggered (full window),
+    // an append is id assignment + row push + incremental total update +
+    // atomic metric bumps — none of which may touch the allocator. The
+    // measured window covers thousands of appends in both single-row and
+    // batched form.
+    let stream_src = feature_instance(3000, 12, 7);
+    let stream_data = stream_src.feats();
+    let mut sess = StreamSession::new(
+        StreamObjective::Features(Concave::Sqrt),
+        12,
+        StreamConfig::new(8),
+        Arc::new(ThreadPool::new(2, 16)),
+        Arc::new(Metrics::new()),
+    )
+    .unwrap();
+    sess.reserve(3000);
+    // warmup: first appends may fault in lazy one-time state
+    for i in 0..200 {
+        sess.append(stream_data.row(i)).unwrap();
+    }
+    let before = ALLOCS.load(Ordering::Relaxed);
+    for i in 200..2000 {
+        sess.append(stream_data.row(i)).unwrap();
+    }
+    // batched form shares the same path
+    sess.append(&stream_data.data()[2000 * 12..3000 * 12]).unwrap();
+    let steady = ALLOCS.load(Ordering::Relaxed) - before;
+    assert_eq!(
+        steady, 0,
+        "steady-state stream appends allocated {steady} times over 2800 elements"
+    );
+    assert_eq!(sess.live(), 3000);
+    assert_eq!(sess.stats().appends, 3000);
 }

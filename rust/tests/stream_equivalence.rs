@@ -1,0 +1,203 @@
+//! Streaming ↔ batch contract tests.
+//!
+//! 1. **Equivalence** — a `StreamSession` whose window covers the entire
+//!    stream (never re-sparsifies) with the admission filter disabled must
+//!    produce the **bit-identical** summary to the batch
+//!    `ss_then_greedy` pipeline over the same ground set: same kept-set
+//!    SS pass, same lazy-greedy commits, same f64 value bits — across
+//!    objectives, shard counts, batch chunkings and seeds.
+//! 2. **Remap round-trip** — external ids stay stable (and resolve to the
+//!    exact original rows) across ≥ 3 windowed re-sparsifications, and
+//!    evicted ids stay dead.
+
+use std::sync::Arc;
+
+use submodular_ss::algorithms::{ss_then_greedy, CpuBackend, SsParams};
+use submodular_ss::coordinator::Metrics;
+use submodular_ss::stream::{SnapshotMode, StreamConfig, StreamObjective, StreamSession};
+use submodular_ss::submodular::{BatchedDivergence, Concave, FacilityLocation, FeatureBased};
+use submodular_ss::util::pool::ThreadPool;
+use submodular_ss::util::rng::Rng;
+use submodular_ss::util::vecmath::FeatureMatrix;
+
+fn rows(n: usize, d: usize, seed: u64) -> FeatureMatrix {
+    let mut rng = Rng::new(seed);
+    let mut m = FeatureMatrix::zeros(n, d);
+    for i in 0..n {
+        for j in 0..d {
+            m.row_mut(i)[j] = if rng.bool(0.35) { rng.f32() } else { 0.0 };
+        }
+    }
+    m
+}
+
+fn batch_objective(kind: StreamObjective, data: &FeatureMatrix) -> Box<dyn BatchedDivergence> {
+    match kind {
+        StreamObjective::Features(g) => Box::new(FeatureBased::new(data.clone(), g)),
+        StreamObjective::FacilityLocation => Box::new(FacilityLocation::from_features(data)),
+    }
+}
+
+fn stream_session(
+    kind: StreamObjective,
+    d: usize,
+    cfg: StreamConfig,
+    threads: usize,
+) -> StreamSession {
+    StreamSession::new(
+        kind,
+        d,
+        cfg,
+        Arc::new(ThreadPool::new(threads, 16)),
+        Arc::new(Metrics::new()),
+    )
+    .unwrap()
+}
+
+#[test]
+fn full_window_filter_off_stream_is_bit_identical_to_batch() {
+    let objectives = [
+        ("features-sqrt", StreamObjective::Features(Concave::Sqrt)),
+        ("features-log1p", StreamObjective::Features(Concave::Log1p)),
+        ("facility", StreamObjective::FacilityLocation),
+    ];
+    let d = 10;
+    let k = 7;
+    for (name, kind) in objectives {
+        // facility location's n² sim matrix keeps its leg smaller
+        let n = if matches!(kind, StreamObjective::FacilityLocation) { 220 } else { 380 };
+        for shards in [1usize, 7] {
+            for seed in [0u64, 11, 42] {
+                let data = rows(n, d, seed.wrapping_add(1000));
+                let params = SsParams::default().with_seed(seed);
+
+                // --- batch oracle: the paper pipeline over the full set ---
+                let f = batch_objective(kind, &data);
+                let backend = CpuBackend::new(f.as_ref());
+                let (ss, sol) = ss_then_greedy(f.as_submodular(), &backend, k, &params);
+
+                // --- stream: same rows appended in uneven chunks ---
+                let cfg = StreamConfig::new(k).with_ss(params.clone()).with_shards(shards);
+                let mut sess = stream_session(kind, d, cfg, 3);
+                // ragged chunk sizes exercise batching without changing
+                // arrival order
+                for chunk in data.data().chunks(d * 73) {
+                    sess.append(chunk).unwrap();
+                }
+                assert_eq!(sess.live(), n);
+                let snap = sess.snapshot_summary(SnapshotMode::Final).unwrap();
+
+                assert_eq!(
+                    snap.summary, sol.set,
+                    "{name}/shards={shards}/seed={seed}: stream summary diverged from batch"
+                );
+                assert_eq!(
+                    snap.value.to_bits(),
+                    sol.value.to_bits(),
+                    "{name}/shards={shards}/seed={seed}: value must be bit-identical"
+                );
+                assert_eq!(snap.ss_rounds, ss.rounds, "same SS trajectory");
+                assert_eq!(snap.live, n);
+
+                // chunking must not matter either: one giant append
+                let mut sess2 = stream_session(
+                    kind,
+                    d,
+                    StreamConfig::new(k).with_ss(params.clone()).with_shards(shards),
+                    2,
+                );
+                sess2.append(data.data()).unwrap();
+                let snap2 = sess2.snapshot_summary(SnapshotMode::Final).unwrap();
+                assert_eq!(snap2.summary, snap.summary, "{name}: chunking changed the result");
+                assert_eq!(snap2.value.to_bits(), snap.value.to_bits());
+            }
+        }
+    }
+}
+
+#[test]
+fn external_ids_roundtrip_across_three_or_more_resparsifications() {
+    let d = 8;
+    let n = 1500;
+    let data = rows(n, d, 77);
+    let cfg = StreamConfig::new(6)
+        .with_ss(SsParams::default().with_seed(5).with_min_keep(12))
+        .with_high_water(150);
+    let mut sess = stream_session(StreamObjective::Features(Concave::Sqrt), d, cfg, 2);
+    let mut total_resparsifies = 0usize;
+    for chunk in data.data().chunks(d * 200) {
+        total_resparsifies += sess.append(chunk).unwrap().resparsifies;
+    }
+    assert!(
+        total_resparsifies >= 3,
+        "need ≥3 re-sparsifications to exercise the remap, got {total_resparsifies}"
+    );
+    assert_eq!(sess.stats().windows as usize, total_resparsifies);
+    assert_eq!(sess.stats().assigned, n);
+
+    // every live external id resolves to exactly its original row;
+    // everything else is genuinely gone
+    let mut live = 0usize;
+    for ext in 0..n {
+        match sess.row(ext) {
+            Some(row) => {
+                assert_eq!(row, data.row(ext), "ext {ext} drifted across re-sparsifications");
+                live += 1;
+            }
+            None => assert!(sess.remap().internal(ext).is_none()),
+        }
+    }
+    assert_eq!(live, sess.live());
+    assert!(live < n, "evictions must actually have happened");
+
+    // the remap is a bijection on the live set
+    for int in 0..sess.live() {
+        let ext = sess.remap().external(int);
+        assert_eq!(sess.remap().internal(ext), Some(int));
+    }
+
+    // summaries speak external ids that resolve to live rows
+    let snap = sess.snapshot_summary(SnapshotMode::Final).unwrap();
+    assert_eq!(snap.summary.len(), 6);
+    for &e in &snap.summary {
+        assert!(sess.row(e).is_some());
+    }
+
+    // ids keep flowing after the last compaction
+    let more = rows(40, d, 78);
+    let r = sess.append(more.data()).unwrap();
+    assert_eq!(r.first_ext, n);
+    assert_eq!(sess.row(n).unwrap(), more.row(0));
+}
+
+#[test]
+fn service_stream_final_snapshot_matches_batch_pipeline() {
+    use submodular_ss::coordinator::{ServiceConfig, SummarizationService};
+    let d = 12;
+    let n = 320;
+    let k = 8;
+    let data = rows(n, d, 9);
+    let params = SsParams::default().with_seed(4);
+
+    let f = FeatureBased::sqrt(data.clone());
+    let backend = CpuBackend::new(&f);
+    let (_ss, sol) = ss_then_greedy(&f, &backend, k, &params);
+
+    let svc = SummarizationService::start(ServiceConfig::default(), None);
+    let id = svc
+        .open_stream(
+            StreamObjective::Features(Concave::Sqrt),
+            d,
+            StreamConfig::new(k).with_ss(params),
+        )
+        .unwrap();
+    for chunk in data.data().chunks(d * 100) {
+        svc.append(id, chunk).unwrap();
+    }
+    let snap = svc.snapshot_summary(id, SnapshotMode::Final).unwrap();
+    assert_eq!(snap.summary, sol.set);
+    assert_eq!(snap.value.to_bits(), sol.value.to_bits());
+    let stats = svc.close(id).unwrap();
+    assert_eq!(stats.appends, n as u64);
+    assert_eq!(stats.windows, 0, "full-window session never re-sparsifies");
+}
