@@ -16,12 +16,18 @@
 //! Run: `make artifacts && cargo run --release --example service_demo`
 
 
+use std::time::Duration;
+
 use submodular_ss::algorithms::{lazy_greedy, SsParams};
-use submodular_ss::coordinator::{Objective, ServiceConfig, SummarizationService, SummarizeRequest};
+use submodular_ss::coordinator::{
+    JobOptions, Objective, ServiceConfig, ServiceError, SummarizationService, SummarizeRequest,
+};
 use submodular_ss::data::{CorpusParams, NewsGenerator, VideoParams};
 use submodular_ss::runtime;
-use submodular_ss::submodular::{FacilityLocation, FeatureBased, SubmodularFn};
+use submodular_ss::stream::{SnapshotMode, StreamConfig};
+use submodular_ss::submodular::{Concave, FacilityLocation, FeatureBased, SubmodularFn};
 use submodular_ss::util::stats::{Samples, Timer};
+use submodular_ss::ObjectiveSpec;
 
 fn main() {
     let requests = 10usize;
@@ -136,6 +142,52 @@ fn main() {
         resp.reduced, resp.latency_s
     );
     assert!(rel > 0.85, "facility-location E2E quality floor violated");
+
+    // --- the job API: deadlines, cancellation, copy-on-snapshot streams ---
+    // Every unit of work is a job with a Ticket: a deadline the request
+    // cannot make sheds it (at dequeue or between SS rounds) without
+    // burning the compute pool, a cancel does the same on demand, and a
+    // stream's Final snapshot runs as a pool job while appends continue.
+    println!("\n=== job API (deadlines / cancellation / snapshot jobs) ===");
+    let svc = SummarizationService::start(
+        ServiceConfig { workers: 1, queue_depth: 16, compute_threads: 2 },
+        None,
+    );
+    let day = generator.day(1200, 0, seed + 99);
+    let impossible = svc.submit_with(
+        SummarizeRequest::features(day.feats.clone(), day.k, SsParams::default().with_seed(seed)),
+        JobOptions::default().with_timeout(Duration::from_millis(1)),
+    );
+    match impossible.wait() {
+        Err(ServiceError::DeadlineExceeded) => println!("1ms-deadline request shed, as it must be"),
+        other => println!("unexpectedly fast hardware: {other:?}"),
+    }
+
+    let id = svc
+        .open_stream(
+            ObjectiveSpec::Features(Concave::Sqrt),
+            day.feats.d,
+            StreamConfig::new(day.k).with_ss(SsParams::default().with_seed(seed)),
+        )
+        .expect("open stream");
+    svc.append(id, day.feats.data()).expect("append day");
+    let live_at_submit = 1200;
+    let ticket = svc.submit_snapshot(id, SnapshotMode::Final).expect("submit snapshot job");
+    // appends keep landing while the Final snapshot job runs on the pool
+    let day2 = generator.day(400, 0, seed + 100);
+    svc.append(id, day2.feats.data()).expect("append during in-flight snapshot");
+    let snap = ticket.wait().expect("snapshot job");
+    println!(
+        "snapshot job: f(S) = {:.3} over {} live elements (clone-time view; \
+         {} more rows appended while it ran)",
+        snap.value,
+        snap.live,
+        1200 + 400 - live_at_submit,
+    );
+    assert_eq!(snap.live, live_at_submit, "copy-on-snapshot freezes the clone-time view");
+    let stats = svc.close(id).expect("close stream");
+    assert_eq!(stats.appends, 1600);
+    println!("{}", svc.metrics_json());
 
     println!("\nservice_demo OK — full stack (Pallas kernels via PJRT under a Rust coordinator) validated");
 }

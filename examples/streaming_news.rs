@@ -19,7 +19,7 @@ use std::sync::Arc;
 use submodular_ss::algorithms::{SieveParams, SsParams};
 use submodular_ss::coordinator::Metrics;
 use submodular_ss::data::{CorpusParams, NewsGenerator};
-use submodular_ss::stream::{SnapshotMode, StreamConfig, StreamObjective, StreamSession};
+use submodular_ss::stream::{ObjectiveSpec, SnapshotMode, StreamConfig, StreamSession};
 use submodular_ss::submodular::Concave;
 use submodular_ss::util::pool::ThreadPool;
 
@@ -40,7 +40,7 @@ fn main() {
         .with_admission(SieveParams::paper_default())
         .with_reserve(days * per_day);
     let mut session = StreamSession::new(
-        StreamObjective::Features(Concave::Sqrt),
+        ObjectiveSpec::Features(Concave::Sqrt),
         d,
         cfg,
         Arc::new(ThreadPool::default_for_host()),
@@ -95,6 +95,7 @@ fn main() {
     }
 
     let fin = session.snapshot_summary(SnapshotMode::Final).expect("final snapshot");
+    let (id_base, id_residue) = (session.remap().base(), session.remap().map_residue());
     let stats = session.close();
     println!(
         "\nfinal (exact sparsify → lazy greedy on the retained core): f(S) = {:.3}",
@@ -115,5 +116,10 @@ fn main() {
         stats.live,
         stats.assigned,
         stats.filter_peak_resident
+    );
+    println!(
+        "id map: {} ids behind the compacted base, {} entries resident \
+         (bounded by the live window, not the stream length)",
+        id_base, id_residue
     );
 }

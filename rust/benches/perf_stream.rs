@@ -28,7 +28,7 @@ use std::sync::Arc;
 use submodular_ss::algorithms::{ss_then_greedy, SsParams};
 use submodular_ss::bench::{full_scale, Table};
 use submodular_ss::coordinator::{Compute, Metrics, ShardedBackend};
-use submodular_ss::stream::{SnapshotMode, StreamConfig, StreamObjective, StreamSession};
+use submodular_ss::stream::{ObjectiveSpec, SnapshotMode, StreamConfig, StreamSession};
 use submodular_ss::submodular::{BatchedDivergence, Concave, FeatureBased};
 use submodular_ss::util::json::Json;
 use submodular_ss::util::pool::ThreadPool;
@@ -94,7 +94,7 @@ fn main() {
     // --- stream: one session, windowed re-sparsify, daily snapshots ---
     let stream_timer = Timer::new();
     let mut sess = StreamSession::new(
-        StreamObjective::Features(Concave::Sqrt),
+        ObjectiveSpec::Features(Concave::Sqrt),
         d,
         StreamConfig::new(k).with_ss(params.clone()).with_high_water(high_water),
         Arc::clone(&pool),

@@ -28,6 +28,21 @@ use crate::util::rng::Rng;
 use crate::util::select::{partition_smallest, prune_smallest_paired};
 use crate::util::stats::Timer;
 
+/// Why an interruptible SS run stopped early (cooperative, checked at
+/// round boundaries — see [`sparsify_candidates_with`]). The service layer
+/// maps these onto its typed error variants
+/// ([`Cancelled`](crate::coordinator::ServiceError::Cancelled) /
+/// [`DeadlineExceeded`](crate::coordinator::ServiceError::DeadlineExceeded)),
+/// which is why the distinction is drawn here rather than collapsed into a
+/// bare `bool`.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Interrupt {
+    /// The caller revoked the work (ticket cancelled).
+    Cancelled,
+    /// The work's deadline passed while it was running.
+    DeadlineExceeded,
+}
+
 /// Probe-sampling strategy (paper §3.4, improvement 2).
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub enum Sampling {
@@ -209,6 +224,16 @@ pub fn sparsify(backend: &dyn DivergenceBackend, params: &SsParams) -> SsResult 
     sparsify_candidates(backend, &all, params)
 }
 
+/// Interruptible form of [`sparsify`] — see [`sparsify_candidates_with`].
+pub fn sparsify_with(
+    backend: &dyn DivergenceBackend,
+    params: &SsParams,
+    check: &mut dyn FnMut() -> Option<Interrupt>,
+) -> Result<SsResult, Interrupt> {
+    let all: Vec<usize> = (0..backend.n()).collect();
+    sparsify_candidates_with(backend, &all, params, check)
+}
+
 /// Per-invocation arena for the round loop: every buffer the loop touches
 /// each round, allocated once up front and reused until the run ends. With
 /// a backend whose `divergences_into` writes in place (all production
@@ -262,6 +287,29 @@ pub fn sparsify_candidates(
     candidates: &[usize],
     params: &SsParams,
 ) -> SsResult {
+    match sparsify_candidates_with(backend, candidates, params, &mut || None) {
+        Ok(res) => res,
+        Err(_) => unreachable!("a None-returning check can never interrupt"),
+    }
+}
+
+/// [`sparsify_candidates`] with a cooperative interruption probe, polled
+/// once per round **before** any RNG draw: the shed path of the service's
+/// cancellable deadline-aware jobs. A `Some(Interrupt)` abandons the run —
+/// partial state is dropped (SS keeps no external state, so there is
+/// nothing to unwind) and the interrupt is handed back for the caller to
+/// map onto its error type.
+///
+/// The probe sits at the round boundary and never touches the RNG or any
+/// buffer, so a run whose probe always returns `None` is **bit-identical**
+/// to [`sparsify_candidates`] (which delegates here) — draw sequence,
+/// pruning decisions, accounting, everything.
+pub fn sparsify_candidates_with(
+    backend: &dyn DivergenceBackend,
+    candidates: &[usize],
+    params: &SsParams,
+    check: &mut dyn FnMut() -> Option<Interrupt>,
+) -> Result<SsResult, Interrupt> {
     assert!(params.c > 1.0, "c must be > 1");
     assert!(params.r >= 1);
     let timer = Timer::new();
@@ -291,6 +339,9 @@ pub fn sparsify_candidates(
     let mut pruned_max_divergence = f64::NEG_INFINITY;
 
     while live.len() > probes_per_round {
+        if let Some(why) = check() {
+            return Err(why);
+        }
         rounds += 1;
         // --- line 5: sample U from V ---
         match params.sampling {
@@ -340,7 +391,7 @@ pub fn sparsify_candidates(
     // --- line 13: V' ← V ∪ V' ---
     kept.extend_from_slice(&live);
     kept.sort_unstable();
-    SsResult {
+    Ok(SsResult {
         kept,
         rounds,
         probes_per_round,
@@ -351,7 +402,7 @@ pub fn sparsify_candidates(
             0.0
         },
         wall_s: timer.elapsed_s(),
-    }
+    })
 }
 
 /// Fresh-allocation reference for the arena round loop, kept compiled-in
@@ -686,6 +737,34 @@ mod tests {
             let got = sparsify(&b, &p);
             assert_eq!(got.kept, want.kept, "seed={seed}: tie-breaking diverged");
         }
+    }
+
+    #[test]
+    fn interrupt_probe_aborts_between_rounds() {
+        let f = redundant_instance(1200, 12, 8, 17);
+        let b = CpuBackend::new(&f);
+        let p = SsParams::default().with_seed(4);
+        // a None probe is bit-identical to the plain entry point
+        let want = sparsify(&b, &p);
+        assert!(want.rounds >= 3, "instance must run several rounds");
+        let got = sparsify_with(&b, &p, &mut || None).unwrap();
+        assert_eq!(got.kept, want.kept);
+        assert_eq!(got.rounds, want.rounds);
+        assert_eq!(got.divergence_evals, want.divergence_evals);
+        // a probe firing after 2 rounds abandons the run with its reason
+        for why in [Interrupt::Cancelled, Interrupt::DeadlineExceeded] {
+            let mut polls = 0usize;
+            let err = sparsify_with(&b, &p, &mut || {
+                polls += 1;
+                (polls > 2).then_some(why)
+            })
+            .unwrap_err();
+            assert_eq!(err, why);
+            assert_eq!(polls, 3, "probe must be polled once per round boundary");
+        }
+        // a probe firing immediately sheds before any divergence work
+        let err = sparsify_with(&b, &p, &mut || Some(Interrupt::Cancelled)).unwrap_err();
+        assert_eq!(err, Interrupt::Cancelled);
     }
 
     #[test]

@@ -1,0 +1,411 @@
+//! The service's job primitives: one typed error for every fallible call,
+//! and one ticket shape for every unit of work.
+//!
+//! Everything [`SummarizationService`](super::SummarizationService) accepts
+//! — a batch summarize request, a copy-on-snapshot stream summary — is a
+//! *job*: submitted (blocking or `try_`), tracked by a [`Ticket<T>`], and
+//! resolved exactly once with `Result<T, ServiceError>`. The ticket owns
+//! the caller half of a tiny one-shot state machine
+//! (pending → ready → taken, a mutex + condvar — no channel, so a timed
+//! wait can expire *without* consuming the eventual response); the worker
+//! half is the crate-private [`Responder`], whose `Drop` guarantees a
+//! ticket can never hang: a responder dropped unresolved (worker panic,
+//! queue torn down at shutdown) resolves the ticket
+//! [`ServiceError::ServiceDown`].
+//!
+//! Cancellation and deadlines are cooperative and cheap: [`Ticket::cancel`]
+//! flips an atomic flag, [`JobOptions::with_deadline`] pins an instant, and
+//! workers poll both — once at dequeue (so shed work never touches the
+//! compute pool) and between SS rounds (so shed work stops burning it),
+//! via [`Responder::interrupt`] feeding the round-boundary probe of
+//! [`sparsify_candidates_with`](crate::algorithms::sparsify_candidates_with).
+
+use std::fmt;
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::{Arc, Condvar, Mutex};
+use std::time::{Duration, Instant};
+
+use crate::algorithms::Interrupt;
+
+use super::service::StreamId;
+
+/// Why a service call failed, typed — the *only* error the public service
+/// surface speaks. Generic over the payload handed back on backpressure:
+/// [`try_submit`](super::SummarizationService::try_submit) returns the
+/// whole `SummarizeRequest` so shed load is never lost, the streaming
+/// `append` path returns `ServiceError<()>` (the caller still owns its
+/// rows). Only [`QueueFull`](Self::QueueFull) is worth retrying.
+pub enum ServiceError<R = ()> {
+    /// Bounded queue (or session live-set cap) is full — backpressure; the
+    /// rejected payload is handed back and retrying later can succeed.
+    QueueFull(R),
+    /// The service's workers are gone, or the session is closed — retrying
+    /// against this instance can never succeed.
+    ServiceDown,
+    /// No open stream has this id (never opened, or already closed).
+    UnknownStream(StreamId),
+    /// The request itself is unservable (e.g. a PJRT request on a service
+    /// started without a runtime, or an invalid session config) — retrying
+    /// the identical call can never succeed.
+    Rejected {
+        reason: String,
+    },
+    /// The job's ticket was cancelled before it completed.
+    Cancelled,
+    /// The job's deadline passed before it completed — expired jobs are
+    /// shed at dequeue (never touching the compute pool) or abandoned at
+    /// the next SS round boundary.
+    DeadlineExceeded,
+}
+
+impl<R> ServiceError<R> {
+    /// Retrying the same call later can succeed (backpressure only).
+    pub fn is_retryable(&self) -> bool {
+        matches!(self, ServiceError::QueueFull(_))
+    }
+
+    /// Recover the rejected payload ([`QueueFull`](Self::QueueFull) only —
+    /// the other variants never took ownership of anything).
+    pub fn into_payload(self) -> Option<R> {
+        match self {
+            ServiceError::QueueFull(r) => Some(r),
+            _ => None,
+        }
+    }
+}
+
+impl<R> fmt::Display for ServiceError<R> {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            ServiceError::QueueFull(_) => f.write_str("queue full (backpressure; retry later)"),
+            ServiceError::ServiceDown => f.write_str("service is down"),
+            ServiceError::UnknownStream(id) => write!(f, "unknown or closed stream {id}"),
+            ServiceError::Rejected { reason } => write!(f, "rejected: {reason}"),
+            ServiceError::Cancelled => f.write_str("cancelled"),
+            ServiceError::DeadlineExceeded => f.write_str("deadline exceeded"),
+        }
+    }
+}
+
+// Manual Debug so the payload (a whole request, possibly megabytes of
+// features) is elided rather than required to be Debug itself.
+impl<R> fmt::Debug for ServiceError<R> {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            ServiceError::QueueFull(_) => f.write_str("ServiceError::QueueFull(..)"),
+            ServiceError::ServiceDown => f.write_str("ServiceError::ServiceDown"),
+            ServiceError::UnknownStream(id) => write!(f, "ServiceError::UnknownStream({id})"),
+            ServiceError::Rejected { reason } => {
+                write!(f, "ServiceError::Rejected {{ reason: {reason:?} }}")
+            }
+            ServiceError::Cancelled => f.write_str("ServiceError::Cancelled"),
+            ServiceError::DeadlineExceeded => f.write_str("ServiceError::DeadlineExceeded"),
+        }
+    }
+}
+
+impl<R> std::error::Error for ServiceError<R> {}
+
+impl<R> From<Interrupt> for ServiceError<R> {
+    fn from(why: Interrupt) -> Self {
+        match why {
+            Interrupt::Cancelled => ServiceError::Cancelled,
+            Interrupt::DeadlineExceeded => ServiceError::DeadlineExceeded,
+        }
+    }
+}
+
+/// Per-job submit options (all submit paths have a `_with` form taking
+/// one; the plain forms use `JobOptions::default()` — no deadline).
+#[derive(Clone, Copy, Debug, Default)]
+pub struct JobOptions {
+    /// Absolute deadline: a job still queued past it is shed at dequeue
+    /// without touching the compute pool; a job already running is
+    /// abandoned at the next SS round boundary. Either way its ticket
+    /// resolves [`ServiceError::DeadlineExceeded`].
+    pub deadline: Option<Instant>,
+}
+
+impl JobOptions {
+    pub fn with_deadline(mut self, deadline: Instant) -> Self {
+        self.deadline = Some(deadline);
+        self
+    }
+
+    /// Deadline relative to now.
+    pub fn with_timeout(self, timeout: Duration) -> Self {
+        self.with_deadline(Instant::now() + timeout)
+    }
+}
+
+/// One-shot result slot shared by a [`Ticket`] and its [`Responder`].
+enum Slot<T> {
+    Pending,
+    Ready(Result<T, ServiceError>),
+    /// A `&mut` accessor already handed the result out.
+    Taken,
+}
+
+struct Shared<T> {
+    slot: Mutex<Slot<T>>,
+    ready: Condvar,
+    cancelled: AtomicBool,
+    deadline: Option<Instant>,
+}
+
+/// Create the two halves of a job: the caller's ticket and the worker's
+/// responder.
+pub(crate) fn job_channel<T>(opts: JobOptions) -> (Ticket<T>, Responder<T>) {
+    let shared = Arc::new(Shared {
+        slot: Mutex::new(Slot::Pending),
+        ready: Condvar::new(),
+        cancelled: AtomicBool::new(false),
+        deadline: opts.deadline,
+    });
+    (Ticket { shared: Arc::clone(&shared) }, Responder { shared, resolved: false })
+}
+
+/// Handle to an in-flight job. Every submitted unit of work — batch
+/// summarize, stream snapshot — returns one, parameterized by its response
+/// type.
+///
+/// * [`wait`](Self::wait) blocks until the job resolves (consuming the
+///   ticket);
+/// * [`wait_timeout`](Self::wait_timeout) / [`try_wait`](Self::try_wait)
+///   poll without forfeiting a late response — a timed-out wait leaves the
+///   ticket live, and the response is retrievable by any later wait;
+/// * [`cancel`](Self::cancel) requests cooperative cancellation (a no-op
+///   once the job completed);
+/// * a deadline set at submit time ([`JobOptions`]) sheds the job without
+///   any caller involvement.
+///
+/// A ticket can never hang: if the worker side disappears before
+/// resolving (shutdown tear-down, worker panic), the responder's `Drop`
+/// resolves it [`ServiceError::ServiceDown`].
+pub struct Ticket<T> {
+    shared: Arc<Shared<T>>,
+}
+
+impl<T> fmt::Debug for Ticket<T> {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.debug_struct("Ticket")
+            .field("done", &self.is_done())
+            .field("deadline", &self.shared.deadline)
+            .finish()
+    }
+}
+
+impl<T> Ticket<T> {
+    /// Block until the job resolves and take the result.
+    pub fn wait(self) -> Result<T, ServiceError> {
+        let mut slot = self.shared.slot.lock().unwrap();
+        loop {
+            match std::mem::replace(&mut *slot, Slot::Taken) {
+                Slot::Pending => {
+                    *slot = Slot::Pending;
+                    slot = self.shared.ready.wait(slot).unwrap();
+                }
+                Slot::Ready(result) => return result,
+                Slot::Taken => {
+                    // a &mut accessor already handed the result out — a
+                    // caller bug, reported rather than hung on
+                    return Err(ServiceError::Rejected {
+                        reason: "ticket result was already taken".into(),
+                    });
+                }
+            }
+        }
+    }
+
+    /// Wait at most `timeout` for the result. `None` = not ready yet — the
+    /// ticket stays live and a late response is **never lost**: it stays
+    /// retrievable by any subsequent `wait`/`wait_timeout`/`try_wait`.
+    pub fn wait_timeout(&mut self, timeout: Duration) -> Option<Result<T, ServiceError>> {
+        let deadline = Instant::now() + timeout;
+        let mut slot = self.shared.slot.lock().unwrap();
+        loop {
+            match std::mem::replace(&mut *slot, Slot::Taken) {
+                Slot::Ready(result) => return Some(result),
+                Slot::Taken => {
+                    return Some(Err(ServiceError::Rejected {
+                        reason: "ticket result was already taken".into(),
+                    }))
+                }
+                Slot::Pending => {
+                    *slot = Slot::Pending;
+                    let now = Instant::now();
+                    if now >= deadline {
+                        return None;
+                    }
+                    let (guard, _timed_out) =
+                        self.shared.ready.wait_timeout(slot, deadline - now).unwrap();
+                    slot = guard;
+                    // loop re-checks the slot: spurious wakeups and
+                    // timeout races both resolve by inspection, so a
+                    // response that lands exactly at the deadline is
+                    // returned, not dropped
+                }
+            }
+        }
+    }
+
+    /// Non-blocking poll. `None` = still in flight (ticket stays live).
+    pub fn try_wait(&mut self) -> Option<Result<T, ServiceError>> {
+        self.wait_timeout(Duration::ZERO)
+    }
+
+    /// Whether the job has resolved (the result may already be taken).
+    pub fn is_done(&self) -> bool {
+        !matches!(*self.shared.slot.lock().unwrap(), Slot::Pending)
+    }
+
+    /// Request cooperative cancellation: a still-queued job is shed at
+    /// dequeue (never touching the compute pool), a running job is
+    /// abandoned at the next SS round boundary; either way the ticket
+    /// resolves [`ServiceError::Cancelled`]. After completion this is a
+    /// no-op — the result stays available.
+    pub fn cancel(&self) {
+        self.shared.cancelled.store(true, Ordering::Relaxed);
+    }
+
+    /// The deadline this job was submitted with, if any.
+    pub fn deadline(&self) -> Option<Instant> {
+        self.shared.deadline
+    }
+}
+
+/// Worker half of a job: resolves the ticket exactly once and exposes the
+/// cancellation/deadline probe. Dropping it unresolved (worker panic,
+/// queue tear-down) resolves the ticket [`ServiceError::ServiceDown`] so
+/// callers never hang.
+pub(crate) struct Responder<T> {
+    shared: Arc<Shared<T>>,
+    resolved: bool,
+}
+
+impl<T> Responder<T> {
+    /// The job's cancel/deadline state — the dequeue check and the SS
+    /// round-boundary probe. Cancellation wins over an expired deadline
+    /// (the caller explicitly asked).
+    pub(crate) fn interrupt(&self) -> Option<Interrupt> {
+        if self.shared.cancelled.load(Ordering::Relaxed) {
+            return Some(Interrupt::Cancelled);
+        }
+        match self.shared.deadline {
+            Some(d) if Instant::now() >= d => Some(Interrupt::DeadlineExceeded),
+            _ => None,
+        }
+    }
+
+    /// Resolve the ticket. First resolution wins; the drop safety-net
+    /// then stands down.
+    pub(crate) fn resolve(mut self, result: Result<T, ServiceError>) {
+        self.set(result);
+    }
+
+    fn set(&mut self, result: Result<T, ServiceError>) {
+        self.resolved = true;
+        let mut slot = self.shared.slot.lock().unwrap();
+        if matches!(*slot, Slot::Pending) {
+            *slot = Slot::Ready(result);
+            self.shared.ready.notify_all();
+        }
+    }
+}
+
+impl<T> Drop for Responder<T> {
+    fn drop(&mut self) {
+        if !self.resolved {
+            self.set(Err(ServiceError::ServiceDown));
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn resolve_then_wait() {
+        let (ticket, responder) = job_channel::<u32>(JobOptions::default());
+        responder.resolve(Ok(7));
+        assert!(ticket.is_done());
+        assert_eq!(ticket.wait().unwrap(), 7);
+    }
+
+    #[test]
+    fn wait_blocks_until_resolved() {
+        let (ticket, responder) = job_channel::<u32>(JobOptions::default());
+        let t = std::thread::spawn(move || ticket.wait().unwrap());
+        std::thread::sleep(Duration::from_millis(20));
+        responder.resolve(Ok(42));
+        assert_eq!(t.join().unwrap(), 42);
+    }
+
+    #[test]
+    fn wait_timeout_expires_then_late_response_is_kept() {
+        let (mut ticket, responder) = job_channel::<u32>(JobOptions::default());
+        assert!(ticket.wait_timeout(Duration::from_millis(10)).is_none());
+        assert!(ticket.try_wait().is_none());
+        responder.resolve(Ok(9));
+        // the late response was not lost by the expired waits
+        assert_eq!(ticket.wait_timeout(Duration::from_millis(10)).unwrap().unwrap(), 9);
+        // but it can only be taken once
+        match ticket.try_wait() {
+            Some(Err(ServiceError::Rejected { .. })) => {}
+            other => panic!("double-take must be reported, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn dropped_responder_resolves_service_down() {
+        let (ticket, responder) = job_channel::<u32>(JobOptions::default());
+        drop(responder);
+        match ticket.wait() {
+            Err(ServiceError::ServiceDown) => {}
+            other => panic!("expected ServiceDown, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn cancel_and_deadline_drive_the_interrupt_probe() {
+        let (ticket, responder) = job_channel::<u32>(JobOptions::default());
+        assert_eq!(responder.interrupt(), None);
+        ticket.cancel();
+        assert_eq!(responder.interrupt(), Some(Interrupt::Cancelled));
+
+        let (ticket, responder) =
+            job_channel::<u32>(JobOptions::default().with_timeout(Duration::ZERO));
+        assert!(ticket.deadline().is_some());
+        assert_eq!(responder.interrupt(), Some(Interrupt::DeadlineExceeded));
+        // cancellation wins over an expired deadline
+        ticket.cancel();
+        assert_eq!(responder.interrupt(), Some(Interrupt::Cancelled));
+    }
+
+    #[test]
+    fn cancel_after_completion_is_a_noop() {
+        let (mut ticket, responder) = job_channel::<u32>(JobOptions::default());
+        responder.resolve(Ok(5));
+        ticket.cancel();
+        assert_eq!(ticket.try_wait().unwrap().unwrap(), 5);
+    }
+
+    #[test]
+    fn error_display_and_payload_recovery() {
+        let e: ServiceError<Vec<u8>> = ServiceError::QueueFull(vec![1, 2, 3]);
+        assert!(e.is_retryable());
+        assert_eq!(e.into_payload().unwrap(), vec![1, 2, 3]);
+        let e: ServiceError<()> = ServiceError::UnknownStream(4);
+        assert!(!e.is_retryable());
+        assert_eq!(e.to_string(), "unknown or closed stream 4");
+        assert!(e.into_payload().is_none());
+        let e: ServiceError = ServiceError::Rejected { reason: "no runtime".into() };
+        assert_eq!(e.to_string(), "rejected: no runtime");
+        assert_eq!(ServiceError::<()>::from(Interrupt::Cancelled).to_string(), "cancelled");
+        assert_eq!(
+            ServiceError::<()>::from(Interrupt::DeadlineExceeded).to_string(),
+            "deadline exceeded"
+        );
+    }
+}

@@ -36,6 +36,16 @@ pub struct Counters {
     pub resparsify_rounds: AtomicU64,
     /// Elements evicted (storage compacted away) by re-sparsifications.
     pub evicted_elements: AtomicU64,
+    /// Jobs resolved [`Cancelled`](crate::coordinator::ServiceError::Cancelled)
+    /// — shed at dequeue or aborted at an SS round boundary.
+    pub cancelled: AtomicU64,
+    /// Jobs resolved
+    /// [`DeadlineExceeded`](crate::coordinator::ServiceError::DeadlineExceeded)
+    /// — expired in the queue (shed without touching the compute pool) or
+    /// overrun mid-flight and aborted at an SS round boundary.
+    pub deadline_exceeded: AtomicU64,
+    /// Copy-on-snapshot stream jobs accepted onto the worker queue.
+    pub snapshot_jobs: AtomicU64,
 }
 
 impl Counters {
@@ -43,7 +53,7 @@ impl Counters {
     /// list [`Metrics::snapshot`] and [`Self::reset`] both iterate, so a
     /// counter added here is automatically snapshotted *and* reset (the
     /// two can never drift apart).
-    fn named(&self) -> [(&'static str, &AtomicU64); 13] {
+    fn named(&self) -> [(&'static str, &AtomicU64); 16] {
         [
             ("requests", &self.requests),
             ("completed", &self.completed),
@@ -58,6 +68,9 @@ impl Counters {
             ("stream_admitted", &self.stream_admitted),
             ("resparsify_rounds", &self.resparsify_rounds),
             ("evicted_elements", &self.evicted_elements),
+            ("cancelled", &self.cancelled),
+            ("deadline_exceeded", &self.deadline_exceeded),
+            ("snapshot_jobs", &self.snapshot_jobs),
         ]
     }
 

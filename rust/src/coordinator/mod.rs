@@ -7,10 +7,14 @@
 //! * [`sharded`] — the SS leader's parallel [`DivergenceBackend`]: item
 //!   shards fan out over a worker pool, each shard computing on CPU or via
 //!   the shared PJRT tiled runtime, gathered deterministically;
-//! * [`service`] — summarization-as-a-service: bounded request queue,
-//!   request workers, cross-request tile batching at the PJRT executor,
-//!   backpressure via blocking/shedding submits, plus the streaming
-//!   session front-end (`open_stream` / `append` / `snapshot_summary` /
+//! * [`job`] — the service's job primitives: the typed [`ServiceError`],
+//!   cancellable deadline-aware [`Ticket`]s, and the responder machinery
+//!   that guarantees every accepted job resolves exactly once;
+//! * [`service`] — summarization-as-a-service: every unit of work (batch
+//!   summarize, copy-on-snapshot stream summary) is a job on the bounded
+//!   queue, shed at dequeue or between SS rounds when cancelled/expired,
+//!   with backpressure via blocking/shedding submits and the streaming
+//!   session front-end (`open_stream` / `append` / `submit_snapshot` /
 //!   `close` over [`crate::stream::StreamSession`]);
 //! * [`metrics`] — counters + latency histograms surfaced as JSON.
 //!
@@ -22,13 +26,20 @@
 //!
 //! [`DivergenceBackend`]: crate::algorithms::DivergenceBackend
 
+pub mod job;
 pub mod metrics;
 pub mod service;
 pub mod sharded;
 
+pub use job::{JobOptions, ServiceError, Ticket};
 pub use metrics::Metrics;
 pub use service::{
-    Objective, ServiceConfig, StreamId, SubmitError, SummarizationService, SummarizeRequest,
-    SummarizeResponse,
+    Objective, ServiceConfig, StreamId, SummarizationService, SummarizeRequest, SummarizeResponse,
 };
 pub use sharded::{Compute, ShardedBackend};
+
+// One-release compat: keep the old `coordinator::SubmitError` path alive.
+// The alias is defined (and deprecated) once, in `service`; uses through
+// either path warn.
+#[allow(deprecated)]
+pub use service::SubmitError;

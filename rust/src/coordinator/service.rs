@@ -1,20 +1,51 @@
-//! Summarization-as-a-service: the leader/worker deployment shape of SS.
+//! Summarization-as-a-service: the leader/worker deployment shape of SS,
+//! redesigned around **one job abstraction**.
 //!
-//! Requests (an [`Objective`] + budget + SS params) enter a bounded queue;
-//! request-worker threads drain it, run the SS → lazy-greedy pipeline
-//! (optionally through the shared PJRT runtime, which batches tile jobs
-//! *across* concurrent requests at the executor), and deliver responses
-//! through per-request channels. Backpressure: `submit` blocks when the
-//! queue is full; `try_submit` fails fast and distinguishes a full queue
-//! ([`SubmitError::QueueFull`], retryable) from a dead service
-//! ([`SubmitError::ServiceDown`], not retryable) — callers choose.
+//! Every unit of work the service performs — a batch summarize request, a
+//! copy-on-snapshot stream summary — is a *job*: it enters the bounded
+//! queue (blocking [`submit`] / [`submit_snapshot`], or shedding
+//! [`try_submit`] / [`try_submit_snapshot`]), request-worker threads drain
+//! it, and the caller tracks it through a typed [`Ticket<T>`] with
+//! `wait` / `wait_timeout` / `try_wait` / `cancel` and an optional
+//! deadline ([`JobOptions`]). Every fallible call returns one typed
+//! [`ServiceError`] — `QueueFull` hands the rejected payload back,
+//! `ServiceDown` / `UnknownStream` / `Rejected` are terminal, `Cancelled`
+//! / `DeadlineExceeded` report shed work. There is no `anyhow` anywhere on
+//! the public surface.
 //!
-//! Objectives: the service is generic over the crate's objective library
-//! via [`BatchedDivergence`] — news-style feature-based requests, dense
-//! facility-location (video representativeness) requests, and weighted
-//! mixtures all run the same sharded pipeline. PJRT acceleration applies
-//! to the feature-based core; other objectives compute on the CPU shard
-//! kernels transparently.
+//! **Shedding never burns the pool.** Cancellation and deadlines are
+//! checked twice: at dequeue (an expired or cancelled job resolves without
+//! touching the compute pool) and between SS rounds (a running job
+//! abandons at the next round boundary via the
+//! [`sparsify_candidates_with`](crate::algorithms::sparsify_candidates_with)
+//! probe). The `cancelled` / `deadline_exceeded` counters meter both.
+//!
+//! **Streams.** [`open_stream`] / [`append`] front a
+//! [`StreamSession`](crate::stream::StreamSession) per stream id, each
+//! behind its own lock. Snapshots are **jobs, not calls**:
+//! [`submit_snapshot`] clones the bounded retained core under a short
+//! lock hold ([`SnapshotCore`](crate::stream::SnapshotCore) — the remap
+//! spine isolates external ids from storage, so the clone is
+//! self-contained) and runs SS + maximizer on the worker pool while
+//! appends keep landing; the summary is bit-identical to an in-place
+//! snapshot at the moment of the clone. Closing a stream is a
+//! linearization point: appends racing a [`close`] either land before it
+//! (and are counted in the returned stats) or observe the closed session
+//! and shed `ServiceDown` — never both, never neither.
+//!
+//! Objectives: batch requests and streams share one
+//! [`ObjectiveSpec`](crate::submodular::ObjectiveSpec); [`Objective`]
+//! additionally carries pre-materialized payloads (dense similarity
+//! matrices, mixtures). PJRT acceleration applies to the feature-based
+//! core; other objectives compute on the CPU shard kernels transparently.
+//!
+//! [`submit`]: SummarizationService::submit
+//! [`try_submit`]: SummarizationService::try_submit
+//! [`submit_snapshot`]: SummarizationService::submit_snapshot
+//! [`try_submit_snapshot`]: SummarizationService::try_submit_snapshot
+//! [`open_stream`]: SummarizationService::open_stream
+//! [`append`]: SummarizationService::append
+//! [`close`]: SummarizationService::close
 
 use std::collections::HashMap;
 use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
@@ -22,25 +53,36 @@ use std::sync::mpsc::{sync_channel, Receiver, SyncSender, TrySendError};
 use std::sync::{Arc, Mutex};
 use std::thread::JoinHandle;
 
-use anyhow::{anyhow, Result};
-
-use crate::algorithms::{sparsify, GainRoute, MaximizerEngine, SsParams};
+use crate::algorithms::{sparsify_with, GainRoute, Interrupt, MaximizerEngine, SsParams};
 use crate::runtime::TiledRuntime;
 use crate::stream::{
-    SnapshotMode, StreamAppend, StreamConfig, StreamObjective, StreamSession, StreamStats,
+    SnapshotCore, SnapshotMode, StreamAppend, StreamConfig, StreamSession, StreamStats,
     StreamSummary,
 };
-use crate::submodular::{BatchedDivergence, FacilityLocation, FeatureBased, Mixture};
+use crate::submodular::{
+    BatchedDivergence, FacilityLocation, FeatureBased, Mixture, ObjectiveSpec,
+};
 use crate::util::pool::ThreadPool;
 use crate::util::stats::Timer;
 use crate::util::vecmath::FeatureMatrix;
 
+use super::job::{job_channel, Responder};
 use super::metrics::Metrics;
 use super::sharded::{Compute, ShardedBackend};
+
+pub use super::job::{JobOptions, ServiceError, Ticket};
 
 /// Handle to an open streaming session (see
 /// [`SummarizationService::open_stream`]).
 pub type StreamId = u64;
+
+/// Former error type of the submit-shaped calls — kept one release as an
+/// alias (same default type parameter as the old enum) so external call
+/// sites migrate mechanically (see the migration table in EXPERIMENTS.md;
+/// note `ServiceDown` no longer carries the payload — only backpressure
+/// hands it back).
+#[deprecated(since = "0.2.0", note = "renamed to `ServiceError`")]
+pub type SubmitError<R = SummarizeRequest> = ServiceError<R>;
 
 /// Map entry for an open stream: the session plus its row width, kept
 /// outside the session lock so input validation can panic (caller bug)
@@ -58,22 +100,36 @@ struct StreamEntry {
 /// What to summarize: the objective payload of a [`SummarizeRequest`].
 pub enum Objective {
     /// Feature-based concave-over-modular (√ scalarizer) over hashed item
-    /// features — the paper's news objective; PJRT-accelerable.
+    /// features — the paper's news objective; PJRT-accelerable. For other
+    /// scalarizers use [`Objective::from_rows`] with
+    /// [`ObjectiveSpec::Features`].
     Features(FeatureMatrix),
     /// Facility location over a dense similarity matrix — video-style
     /// representativeness; computed on the blocked CPU kernel.
     FacilityLocation(FacilityLocation),
     /// Weighted mixture of objectives (coverage vs diversity trade-offs).
     Mixture(Mixture),
+    /// Spec + rows — the unified form shared with streaming sessions:
+    /// exactly the objective a stream opened with the same spec maintains
+    /// over the same rows (bit-identical by the stream-equivalence suite).
+    Spec { spec: ObjectiveSpec, rows: FeatureMatrix },
 }
 
 impl Objective {
+    /// Pair an [`ObjectiveSpec`] (the type streams open with) with a
+    /// materialized row matrix — the one construction both front-ends
+    /// share.
+    pub fn from_rows(spec: ObjectiveSpec, rows: FeatureMatrix) -> Self {
+        Objective::Spec { spec, rows }
+    }
+
     /// Ground-set size |V|.
     pub fn n(&self) -> usize {
         match self {
             Objective::Features(feats) => feats.n(),
             Objective::FacilityLocation(fl) => fl.n(),
             Objective::Mixture(m) => m.n(),
+            Objective::Spec { rows, .. } => rows.n(),
         }
     }
 
@@ -83,6 +139,7 @@ impl Objective {
             Objective::Features(feats) => Arc::new(FeatureBased::sqrt(feats)),
             Objective::FacilityLocation(fl) => Arc::new(fl),
             Objective::Mixture(m) => Arc::new(m),
+            Objective::Spec { spec, rows } => spec.build(rows),
         }
     }
 }
@@ -93,8 +150,8 @@ pub struct SummarizeRequest {
     pub k: usize,
     pub params: SsParams,
     /// route divergence batches through PJRT (requires service started with
-    /// a runtime; only accelerates `Objective::Features` — other objectives
-    /// fall back to CPU shards)
+    /// a runtime; only accelerates feature-based objectives — others fall
+    /// back to CPU shards)
     pub use_pjrt: bool,
 }
 
@@ -102,6 +159,11 @@ impl SummarizeRequest {
     /// News-style request: feature-based objective over `feats`.
     pub fn features(feats: FeatureMatrix, k: usize, params: SsParams) -> Self {
         Self { objective: Objective::Features(feats), k, params, use_pjrt: false }
+    }
+
+    /// Spec-form request — see [`Objective::from_rows`].
+    pub fn from_rows(spec: ObjectiveSpec, rows: FeatureMatrix, k: usize, params: SsParams) -> Self {
+        Self { objective: Objective::from_rows(spec, rows), k, params, use_pjrt: false }
     }
 
     pub fn with_pjrt(mut self, use_pjrt: bool) -> Self {
@@ -125,61 +187,21 @@ pub struct SummarizeResponse {
     pub queue_s: f64,
 }
 
-/// Why a submit-shaped call was rejected, generic over the payload handed
-/// back to the caller: [`SummarizationService::try_submit`] returns the
-/// whole [`SummarizeRequest`] (the default), the streaming `append` path
-/// returns `SubmitError<()>` (the caller still owns its rows). Both
-/// variants mean "this work was not accepted"; only [`QueueFull`] is worth
-/// retrying.
-///
-/// [`QueueFull`]: SubmitError::QueueFull
-pub enum SubmitError<R = SummarizeRequest> {
-    /// Bounded queue (or session live-set cap) is full — backpressure;
-    /// retrying later can succeed.
-    QueueFull(R),
-    /// The service's workers are gone, or the session is closed —
-    /// retrying against this instance can never succeed.
-    ServiceDown(R),
-}
-
-impl<R> SubmitError<R> {
-    /// Recover the rejected payload.
-    pub fn into_request(self) -> R {
-        match self {
-            SubmitError::QueueFull(r) | SubmitError::ServiceDown(r) => r,
-        }
-    }
-
-    pub fn is_retryable(&self) -> bool {
-        matches!(self, SubmitError::QueueFull(_))
-    }
-}
-
-impl<R> std::fmt::Debug for SubmitError<R> {
-    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
-        match self {
-            SubmitError::QueueFull(_) => f.write_str("SubmitError::QueueFull(..)"),
-            SubmitError::ServiceDown(_) => f.write_str("SubmitError::ServiceDown(..)"),
-        }
-    }
-}
-
-struct QueuedJob {
-    req: SummarizeRequest,
-    enqueued: Timer,
-    reply: SyncSender<Result<SummarizeResponse>>,
-}
-
-/// Ticket for an in-flight request.
-pub struct Ticket {
-    rx: Receiver<Result<SummarizeResponse>>,
-}
-
-impl Ticket {
-    /// Block until the response is ready.
-    pub fn wait(self) -> Result<SummarizeResponse> {
-        self.rx.recv().map_err(|_| anyhow!("service worker dropped the request"))?
-    }
+/// One queued unit of work. Both kinds carry their enqueue timestamp (for
+/// `queue_wait`) and the responder whose `Drop` guarantees the ticket
+/// resolves even if the job never runs (shutdown tear-down, worker panic).
+enum Job {
+    Summarize {
+        req: SummarizeRequest,
+        enqueued: Timer,
+        responder: Responder<SummarizeResponse>,
+    },
+    Snapshot {
+        core: SnapshotCore,
+        mode: SnapshotMode,
+        enqueued: Timer,
+        responder: Responder<StreamSummary>,
+    },
 }
 
 pub struct ServiceConfig {
@@ -198,7 +220,7 @@ impl Default for ServiceConfig {
 }
 
 pub struct SummarizationService {
-    tx: SyncSender<QueuedJob>,
+    tx: SyncSender<Job>,
     metrics: Arc<Metrics>,
     workers: Vec<JoinHandle<()>>,
     /// compute pool shared by request workers and streaming sessions
@@ -214,7 +236,7 @@ pub struct SummarizationService {
 impl SummarizationService {
     pub fn start(config: ServiceConfig, runtime: Option<Arc<TiledRuntime>>) -> Self {
         let metrics = Arc::new(Metrics::new());
-        let (tx, rx) = sync_channel::<QueuedJob>(config.queue_depth.max(1));
+        let (tx, rx) = sync_channel::<Job>(config.queue_depth.max(1));
         let rx = Arc::new(Mutex::new(rx));
         let pool = Arc::new(ThreadPool::new(config.compute_threads.max(1), 64));
         let workers = (0..config.workers.max(1))
@@ -240,54 +262,72 @@ impl SummarizationService {
         }
     }
 
-    /// Blocking submit (backpressure). After [`Self::shutdown`] the ticket
-    /// resolves to an error instead of blocking or panicking.
-    pub fn submit(&self, req: SummarizeRequest) -> Ticket {
-        let (rtx, rrx) = sync_channel(1);
-        let job = QueuedJob { req, enqueued: Timer::new(), reply: rtx };
-        match self.tx.send(job) {
-            Ok(()) => self.metrics.add(&self.metrics.counters.requests, 1),
-            Err(dead) => {
-                // workers are gone: fail the ticket, don't panic the caller
-                let _ = dead.0.reply.send(Err(anyhow!("service is down")));
-            }
-        }
-        Ticket { rx: rrx }
+    /// Blocking submit (backpressure) with default [`JobOptions`]. After
+    /// [`Self::shutdown`] the ticket resolves
+    /// [`ServiceError::ServiceDown`] instead of blocking or panicking.
+    pub fn submit(&self, req: SummarizeRequest) -> Ticket<SummarizeResponse> {
+        self.submit_with(req, JobOptions::default())
     }
 
-    /// Non-blocking submit. [`SubmitError::QueueFull`] = shed load / retry
-    /// later; [`SubmitError::ServiceDown`] = the workers are gone and no
+    /// [`submit`](Self::submit) with per-job options (deadline).
+    pub fn submit_with(&self, req: SummarizeRequest, opts: JobOptions) -> Ticket<SummarizeResponse> {
+        let (ticket, responder) = job_channel(opts);
+        let job = Job::Summarize { req, enqueued: Timer::new(), responder };
+        if self.tx.send(job).is_ok() {
+            self.metrics.add(&self.metrics.counters.requests, 1);
+        }
+        // on send failure the job (and its responder) was dropped with the
+        // SendError, which already resolved the ticket ServiceDown
+        ticket
+    }
+
+    /// Non-blocking submit with default [`JobOptions`].
+    /// [`ServiceError::QueueFull`] = shed load, request handed back, retry
+    /// later; [`ServiceError::ServiceDown`] = the workers are gone and no
     /// retry against this instance can succeed.
     pub fn try_submit(
         &self,
         req: SummarizeRequest,
-    ) -> std::result::Result<Ticket, SubmitError> {
-        let (rtx, rrx) = sync_channel(1);
-        let job = QueuedJob { req, enqueued: Timer::new(), reply: rtx };
-        match self.tx.try_send(job) {
+    ) -> Result<Ticket<SummarizeResponse>, ServiceError<SummarizeRequest>> {
+        self.try_submit_with(req, JobOptions::default())
+    }
+
+    /// [`try_submit`](Self::try_submit) with per-job options (deadline).
+    pub fn try_submit_with(
+        &self,
+        req: SummarizeRequest,
+        opts: JobOptions,
+    ) -> Result<Ticket<SummarizeResponse>, ServiceError<SummarizeRequest>> {
+        let (ticket, responder) = job_channel(opts);
+        match self.tx.try_send(Job::Summarize { req, enqueued: Timer::new(), responder }) {
             Ok(()) => {
                 self.metrics.add(&self.metrics.counters.requests, 1);
-                Ok(Ticket { rx: rrx })
+                Ok(ticket)
             }
-            Err(TrySendError::Full(job)) => Err(SubmitError::QueueFull(job.req)),
-            Err(TrySendError::Disconnected(job)) => Err(SubmitError::ServiceDown(job.req)),
+            Err(TrySendError::Full(Job::Summarize { req, .. })) => {
+                Err(ServiceError::QueueFull(req))
+            }
+            Err(TrySendError::Disconnected(_)) => Err(ServiceError::ServiceDown),
+            Err(TrySendError::Full(Job::Snapshot { .. })) => {
+                unreachable!("a rejected summarize send returns the summarize job")
+            }
         }
     }
 
     /// Open a streaming session: append-only ingestion with sieve
     /// admission and windowed re-sparsification (see
     /// [`crate::stream::StreamSession`]). The session runs on the
-    /// service's compute pool with its own [`Metrics`] scope; the four
-    /// stream counters are mirrored onto the service-wide metrics so
-    /// dashboards see every session's traffic in one place.
+    /// service's compute pool with its own [`Metrics`] scope; the stream
+    /// counters are mirrored onto the service-wide metrics so dashboards
+    /// see every session's traffic in one place.
     pub fn open_stream(
         &self,
-        objective: StreamObjective,
+        objective: ObjectiveSpec,
         d: usize,
         cfg: StreamConfig,
-    ) -> Result<StreamId> {
+    ) -> Result<StreamId, ServiceError> {
         if self.down.load(Ordering::SeqCst) {
-            return Err(anyhow!("service is down"));
+            return Err(ServiceError::ServiceDown);
         }
         let session = StreamSession::new(
             objective,
@@ -297,7 +337,7 @@ impl SummarizationService {
             Arc::new(Metrics::new()),
         )?;
         let id = self.next_stream.fetch_add(1, Ordering::Relaxed);
-        let nonneg = matches!(objective, StreamObjective::Features(_));
+        let nonneg = objective.needs_nonneg();
         self.streams
             .lock()
             .unwrap()
@@ -306,20 +346,20 @@ impl SummarizationService {
     }
 
     /// Append a batch of rows to an open stream. Backpressure surfaces as
-    /// [`SubmitError::QueueFull`] (session live-set cap; recover by
+    /// [`ServiceError::QueueFull`] (session live-set cap; recover by
     /// splitting into smaller batches — eviction only happens through
     /// windowed re-sparsification, which an over-cap retained core can no
-    /// longer trigger); an unknown/closed stream or a shut-down service
-    /// reports [`SubmitError::ServiceDown`]. A misaligned or
+    /// longer trigger). An id that was never opened (or whose stream is
+    /// closed) reports [`ServiceError::UnknownStream`], a shut-down
+    /// service [`ServiceError::ServiceDown`] — and an append racing a
+    /// [`close`](Self::close) that observes the already-closed session
+    /// sheds [`ServiceError::ServiceDown`] too (the session itself is
+    /// gone, retrying the id cannot succeed). A misaligned or
     /// invalid-valued batch is a caller bug and panics **before** the
     /// session lock is taken, so it cannot poison the stream.
-    pub fn append(
-        &self,
-        id: StreamId,
-        rows: &[f32],
-    ) -> std::result::Result<StreamAppend, SubmitError<()>> {
+    pub fn append(&self, id: StreamId, rows: &[f32]) -> Result<StreamAppend, ServiceError<()>> {
         let Some(entry) = self.stream(id) else {
-            return Err(SubmitError::ServiceDown(()));
+            return Err(self.gone(id));
         };
         // one validation scan, before the lock — a caller-bug panic here
         // cannot poison the session mutex, and the O(n·d) scan stays out
@@ -344,45 +384,142 @@ impl SummarizationService {
         result
     }
 
-    /// Summarize a stream's current live set —
-    /// [`SnapshotMode::Intermediate`] for the cheap stochastic-greedy
-    /// refresh, [`SnapshotMode::Final`] for the exact batch-equivalent
-    /// `sparsify → lazy greedy` pass.
-    pub fn snapshot_summary(&self, id: StreamId, mode: SnapshotMode) -> Result<StreamSummary> {
-        let entry = self.stream(id).ok_or_else(|| anyhow!("unknown or closed stream {id}"))?;
-        let mut s = entry.session.lock().unwrap();
-        s.snapshot_summary(mode)
+    /// Submit a snapshot **job** with default [`JobOptions`]: clone the
+    /// stream's bounded retained core under a short lock hold and run the
+    /// summary ([`SnapshotMode::Intermediate`] = cheap stochastic-greedy
+    /// refresh, [`SnapshotMode::Final`] = exact batch-equivalent
+    /// `sparsify → lazy greedy`) on the worker pool — appends keep landing
+    /// on the session while the job runs, and the summary reflects the
+    /// stream exactly as of this call. Blocks only for queue space.
+    pub fn submit_snapshot(
+        &self,
+        id: StreamId,
+        mode: SnapshotMode,
+    ) -> Result<Ticket<StreamSummary>, ServiceError> {
+        self.submit_snapshot_with(id, mode, JobOptions::default())
+    }
+
+    /// [`submit_snapshot`](Self::submit_snapshot) with per-job options
+    /// (deadline).
+    pub fn submit_snapshot_with(
+        &self,
+        id: StreamId,
+        mode: SnapshotMode,
+        opts: JobOptions,
+    ) -> Result<Ticket<StreamSummary>, ServiceError> {
+        let core = self.clone_core(id)?;
+        let (ticket, responder) = job_channel(opts);
+        let job = Job::Snapshot { core, mode, enqueued: Timer::new(), responder };
+        if self.tx.send(job).is_ok() {
+            self.metrics.add(&self.metrics.counters.snapshot_jobs, 1);
+        }
+        // send failure dropped the responder → ticket reads ServiceDown
+        Ok(ticket)
+    }
+
+    /// Non-blocking [`submit_snapshot`](Self::submit_snapshot) with
+    /// default [`JobOptions`]: [`ServiceError::QueueFull`] sheds the job
+    /// (the cloned core is dropped — re-cloning on retry is cheap and
+    /// picks up newer appends).
+    pub fn try_submit_snapshot(
+        &self,
+        id: StreamId,
+        mode: SnapshotMode,
+    ) -> Result<Ticket<StreamSummary>, ServiceError> {
+        self.try_submit_snapshot_with(id, mode, JobOptions::default())
+    }
+
+    /// [`try_submit_snapshot`](Self::try_submit_snapshot) with per-job
+    /// options (deadline).
+    pub fn try_submit_snapshot_with(
+        &self,
+        id: StreamId,
+        mode: SnapshotMode,
+        opts: JobOptions,
+    ) -> Result<Ticket<StreamSummary>, ServiceError> {
+        let core = self.clone_core(id)?;
+        let (ticket, responder) = job_channel(opts);
+        match self.tx.try_send(Job::Snapshot { core, mode, enqueued: Timer::new(), responder }) {
+            Ok(()) => {
+                self.metrics.add(&self.metrics.counters.snapshot_jobs, 1);
+                Ok(ticket)
+            }
+            Err(TrySendError::Full(_)) => Err(ServiceError::QueueFull(())),
+            Err(TrySendError::Disconnected(_)) => Err(ServiceError::ServiceDown),
+        }
+    }
+
+    /// Copy-on-snapshot: resolve the stream and clone its core under a
+    /// short session-lock hold (O(live·d) — the facility-location O(m²·d)
+    /// similarity build happens inside the job, not here).
+    fn clone_core(&self, id: StreamId) -> Result<SnapshotCore, ServiceError> {
+        let entry = self.stream(id).ok_or_else(|| self.gone::<()>(id))?;
+        let core = entry.session.lock().unwrap().snapshot_core()?;
+        Ok(core)
+    }
+
+    /// One-release compat shim for the pre-job API: submit a snapshot job
+    /// and block on its ticket. Prefer
+    /// [`submit_snapshot`](Self::submit_snapshot) — it returns the ticket,
+    /// so the caller keeps cancel/deadline/timeout control.
+    #[deprecated(
+        since = "0.2.0",
+        note = "snapshots are jobs now: `submit_snapshot(id, mode)?.wait()`"
+    )]
+    pub fn snapshot_summary(
+        &self,
+        id: StreamId,
+        mode: SnapshotMode,
+    ) -> Result<StreamSummary, ServiceError> {
+        self.submit_snapshot(id, mode)?.wait()
     }
 
     /// Per-session metrics snapshot (the session-scoped counters —
     /// divergence/gain evals of its windows, its stream counters).
-    pub fn stream_metrics(&self, id: StreamId) -> Result<crate::util::json::Json> {
-        let entry = self.stream(id).ok_or_else(|| anyhow!("unknown or closed stream {id}"))?;
+    pub fn stream_metrics(&self, id: StreamId) -> Result<crate::util::json::Json, ServiceError> {
+        let entry = self.stream(id).ok_or_else(|| self.gone::<()>(id))?;
         let s = entry.session.lock().unwrap();
         Ok(s.metrics().snapshot())
     }
 
     /// Close a stream and drop its storage, returning lifetime stats.
-    pub fn close(&self, id: StreamId) -> Result<StreamStats> {
-        let entry = self
-            .streams
-            .lock()
-            .unwrap()
-            .remove(&id)
-            .ok_or_else(|| anyhow!("unknown or closed stream {id}"))?;
-        let mut s = entry.session.lock().unwrap();
-        Ok(s.close())
+    ///
+    /// This is a linearization point for the stream: the map entry is
+    /// removed first (no *new* caller can reach the session), then the
+    /// session is closed **under its own lock** — an in-flight append that
+    /// cloned the entry earlier either acquired that lock before us (its
+    /// rows land and are counted in the stats returned here) or acquires
+    /// it after, observes the closed session, and sheds
+    /// [`ServiceError::ServiceDown`]. No append can land after `close`
+    /// returns. Snapshot jobs already queued keep their cloned cores and
+    /// complete normally — they describe the stream as of their submit.
+    pub fn close(&self, id: StreamId) -> Result<StreamStats, ServiceError> {
+        let entry =
+            self.streams.lock().unwrap().remove(&id).ok_or_else(|| self.gone::<()>(id))?;
+        let stats = entry.session.lock().unwrap().close();
+        Ok(stats)
     }
 
     fn stream(&self, id: StreamId) -> Option<StreamEntry> {
         self.streams.lock().unwrap().get(&id).cloned()
     }
 
-    /// Graceful shutdown: close the queue (already-accepted requests still
+    /// Why an id failed to resolve: a shut-down service wins over (and
+    /// explains) the emptied stream map.
+    fn gone<R>(&self, id: StreamId) -> ServiceError<R> {
+        if self.down.load(Ordering::SeqCst) {
+            ServiceError::ServiceDown
+        } else {
+            ServiceError::UnknownStream(id)
+        }
+    }
+
+    /// Graceful shutdown: close the queue (already-accepted jobs still
     /// complete), then join the workers; open streaming sessions are
-    /// closed and dropped. Afterwards `try_submit` reports
-    /// [`SubmitError::ServiceDown`] and stream calls fail fast. Called by
-    /// `Drop`; idempotent.
+    /// closed and dropped. Afterwards submits report
+    /// [`ServiceError::ServiceDown`] (tickets from racing blocking submits
+    /// resolve to the same) and stream calls fail fast. Called by `Drop`;
+    /// idempotent.
     pub fn shutdown(&mut self) {
         self.down.store(true, Ordering::SeqCst);
         for (_, entry) in self.streams.lock().unwrap().drain() {
@@ -411,7 +548,7 @@ impl Drop for SummarizationService {
 }
 
 fn worker_main(
-    rx: &Mutex<Receiver<QueuedJob>>,
+    rx: &Mutex<Receiver<Job>>,
     metrics: &Arc<Metrics>,
     pool: &Arc<ThreadPool>,
     runtime: Option<&Arc<TiledRuntime>>,
@@ -422,17 +559,59 @@ fn worker_main(
             rx.recv()
         };
         let Ok(job) = job else { return };
-        let queue_s = job.enqueued.elapsed_s();
-        metrics.queue_wait.record_secs(queue_s);
-        let result = handle(job.req, queue_s, metrics, pool, runtime);
-        match &result {
-            Ok(resp) => {
-                metrics.add(&metrics.counters.completed, 1);
-                metrics.request_latency.record_secs(resp.latency_s);
+        match job {
+            Job::Summarize { req, enqueued, responder } => {
+                let queue_s = enqueued.elapsed_s();
+                metrics.queue_wait.record_secs(queue_s);
+                // dequeue check: cancelled/expired work is shed without
+                // touching the compute pool (or even materializing the
+                // objective)
+                if let Some(why) = responder.interrupt() {
+                    let e = ServiceError::from(why);
+                    meter_error(metrics, &e);
+                    responder.resolve(Err(e));
+                    continue;
+                }
+                let result =
+                    handle(req, queue_s, metrics, pool, runtime, &mut || responder.interrupt());
+                match &result {
+                    Ok(resp) => {
+                        metrics.add(&metrics.counters.completed, 1);
+                        metrics.request_latency.record_secs(resp.latency_s);
+                    }
+                    Err(e) => meter_error(metrics, e),
+                }
+                responder.resolve(result);
             }
-            Err(_) => metrics.add(&metrics.counters.failed, 1),
+            Job::Snapshot { core, mode, enqueued, responder } => {
+                metrics.queue_wait.record_secs(enqueued.elapsed_s());
+                if let Some(why) = responder.interrupt() {
+                    let e = ServiceError::from(why);
+                    meter_error(metrics, &e);
+                    responder.resolve(Err(e));
+                    continue;
+                }
+                let result = core
+                    .run(mode, &mut || responder.interrupt())
+                    .map_err(ServiceError::from);
+                match &result {
+                    Ok(_) => metrics.add(&metrics.counters.completed, 1),
+                    Err(e) => meter_error(metrics, e),
+                }
+                responder.resolve(result);
+            }
         }
-        let _ = job.reply.send(result);
+    }
+}
+
+/// Variant → counter mapping for every non-success job outcome, whether
+/// shed at dequeue or failed mid-run — one place so the two shed sites
+/// can never diverge.
+fn meter_error(metrics: &Metrics, e: &ServiceError) {
+    match e {
+        ServiceError::Cancelled => metrics.add(&metrics.counters.cancelled, 1),
+        ServiceError::DeadlineExceeded => metrics.add(&metrics.counters.deadline_exceeded, 1),
+        _ => metrics.add(&metrics.counters.failed, 1),
     }
 }
 
@@ -442,21 +621,27 @@ fn handle(
     metrics: &Arc<Metrics>,
     pool: &Arc<ThreadPool>,
     runtime: Option<&Arc<TiledRuntime>>,
-) -> Result<SummarizeResponse> {
+    check: &mut dyn FnMut() -> Option<Interrupt>,
+) -> Result<SummarizeResponse, ServiceError> {
     let timer = Timer::new();
     let n = req.objective.n();
     metrics.add(&metrics.counters.items_in, n as u64);
     let f: Arc<dyn BatchedDivergence> = req.objective.into_fn();
     let compute = if req.use_pjrt {
-        let rt = runtime.ok_or_else(|| anyhow!("service started without a PJRT runtime"))?;
+        let rt = runtime.ok_or_else(|| ServiceError::Rejected {
+            reason: "service started without a PJRT runtime".into(),
+        })?;
         Compute::Pjrt(Arc::clone(rt))
     } else {
         Compute::Cpu
     };
     let backend =
-        ShardedBackend::new(Arc::clone(&f), Arc::clone(pool), compute.clone(), Arc::clone(metrics))?;
+        ShardedBackend::new(Arc::clone(&f), Arc::clone(pool), compute.clone(), Arc::clone(metrics))
+            .map_err(|e| ServiceError::Rejected { reason: e.to_string() })?;
     let round_timer = Timer::new();
-    let ss = sparsify(&backend, &req.params);
+    // the interrupt probe fires between SS rounds: a cancelled or
+    // deadline-blown request abandons the pass at the next round boundary
+    let ss = sparsify_with(&backend, &req.params, check)?;
     if ss.rounds > 0 {
         // only real rounds produce a sample — a small-n passthrough (0
         // rounds) must not log its sparsify wall time as one fake round
@@ -525,6 +710,24 @@ mod tests {
     }
 
     #[test]
+    fn spec_form_request_matches_feature_variant() {
+        use crate::submodular::Concave;
+        let svc = SummarizationService::start(ServiceConfig::default(), None);
+        let a = svc.submit(req(260, 6)).wait().unwrap();
+        let b = svc
+            .submit(SummarizeRequest::from_rows(
+                ObjectiveSpec::Features(Concave::Sqrt),
+                feats(260, 16, 6),
+                8,
+                SsParams::default().with_seed(6),
+            ))
+            .wait()
+            .unwrap();
+        assert_eq!(a.summary, b.summary, "unified spec must build the identical objective");
+        assert_eq!(a.value.to_bits(), b.value.to_bits());
+    }
+
+    #[test]
     fn maximizer_gain_evals_are_metered() {
         // the post-reduction maximizer routes cohorts through the sharded
         // backend, so its per-element evaluations land on `gain_evals`
@@ -565,7 +768,7 @@ mod tests {
             None,
         );
         let sizes = [150usize, 220, 310, 180, 260, 400];
-        let tickets: Vec<(usize, Ticket)> =
+        let tickets: Vec<(usize, Ticket<SummarizeResponse>)> =
             sizes.iter().map(|&n| (n, svc.submit(req(n, n as u64)))).collect();
         for (n, t) in tickets {
             let resp = t.wait().unwrap();
@@ -592,13 +795,13 @@ mod tests {
                     accepted += 1;
                     tickets.push(t);
                 }
-                Err(e @ SubmitError::QueueFull(_)) => {
+                Err(e @ ServiceError::QueueFull(_)) => {
                     assert!(e.is_retryable());
+                    let r = e.into_payload().expect("backpressure hands the request back");
+                    assert_eq!(r.objective.n(), 400);
                     shed += 1;
                 }
-                Err(SubmitError::ServiceDown(_)) => {
-                    panic!("live service must report backpressure, not ServiceDown")
-                }
+                Err(other) => panic!("live service must shed with QueueFull, got {other:?}"),
             }
         }
         assert!(accepted >= 1);
@@ -613,18 +816,20 @@ mod tests {
         let mut svc = SummarizationService::start(ServiceConfig::default(), None);
         svc.shutdown();
         match svc.try_submit(req(50, 1)) {
-            Err(e @ SubmitError::ServiceDown(_)) => {
-                assert!(!e.is_retryable());
-                assert_eq!(e.into_request().objective.n(), 50, "request must be handed back");
-            }
-            Err(SubmitError::QueueFull(_)) => {
+            Err(e @ ServiceError::ServiceDown) => assert!(!e.is_retryable()),
+            Err(ServiceError::QueueFull(_)) => {
                 panic!("dead service must not masquerade as backpressure")
             }
+            Err(other) => panic!("expected ServiceDown, got {other:?}"),
             Ok(_) => panic!("dead service accepted a request"),
         }
-        // blocking submit must not panic either: the ticket resolves to Err
-        let err = svc.submit(req(50, 2)).wait().unwrap_err().to_string();
-        assert!(err.contains("down"), "{err}");
+        // blocking submit must not panic either: the ticket resolves typed
+        match svc.submit(req(50, 2)).wait() {
+            Err(e @ ServiceError::ServiceDown) => {
+                assert!(e.to_string().contains("down"), "{e}");
+            }
+            other => panic!("expected ServiceDown ticket, got {other:?}"),
+        }
         assert_eq!(
             svc.metrics().counters.requests.load(std::sync::atomic::Ordering::Relaxed),
             0,
@@ -655,8 +860,10 @@ mod tests {
     fn pjrt_request_without_runtime_fails_cleanly() {
         let svc = SummarizationService::start(ServiceConfig::default(), None);
         let r = req(100, 9).with_pjrt(true);
-        let err = svc.submit(r).wait().unwrap_err().to_string();
-        assert!(err.contains("PJRT"), "{err}");
+        match svc.submit(r).wait() {
+            Err(ServiceError::Rejected { reason }) => assert!(reason.contains("PJRT"), "{reason}"),
+            other => panic!("expected a typed rejection, got {other:?}"),
+        }
         assert_eq!(
             svc.metrics().counters.failed.load(std::sync::atomic::Ordering::Relaxed),
             1
@@ -674,30 +881,31 @@ mod tests {
 
     #[test]
     fn stream_lifecycle_through_service() {
-        use crate::stream::{SnapshotMode, StreamConfig, StreamObjective};
+        use crate::stream::{SnapshotMode, StreamConfig};
         use crate::submodular::Concave;
         let svc = SummarizationService::start(ServiceConfig::default(), None);
         let cfg = StreamConfig::new(6)
             .with_ss(SsParams::default().with_seed(7))
             .with_high_water(150);
-        let id = svc.open_stream(StreamObjective::Features(Concave::Sqrt), 12, cfg).unwrap();
+        let id = svc.open_stream(ObjectiveSpec::Features(Concave::Sqrt), 12, cfg).unwrap();
         let day1 = feats(400, 12, 21);
         let day2 = feats(300, 12, 22);
         let r1 = svc.append(id, day1.data()).unwrap();
         assert_eq!(r1.appended, 400);
         assert!(r1.resparsifies >= 1, "400 appends over hw=150 must re-sparsify");
-        let mid = svc.snapshot_summary(id, SnapshotMode::Intermediate).unwrap();
+        let mid = svc.try_submit_snapshot(id, SnapshotMode::Intermediate).unwrap().wait().unwrap();
         assert_eq!(mid.summary.len(), 6);
         let r2 = svc.append(id, day2.data()).unwrap();
         assert_eq!(r2.first_ext, 400, "external ids continue across batches");
-        let fin = svc.snapshot_summary(id, SnapshotMode::Final).unwrap();
+        let fin = svc.submit_snapshot(id, SnapshotMode::Final).unwrap().wait().unwrap();
         assert_eq!(fin.summary.len(), 6);
         assert!(fin.value > 0.0);
         assert!(fin.live < 700, "windowing must have bounded the live set");
-        // service-wide mirror of the session counters
+        // service-wide mirror of the session counters + the job counter
         let m = svc.metrics().snapshot();
         assert_eq!(m.get("stream_appends").unwrap().as_f64(), Some(700.0));
         assert!(m.get("evicted_elements").unwrap().as_f64().unwrap() > 0.0);
+        assert_eq!(m.get("snapshot_jobs").unwrap().as_f64(), Some(2.0));
         // per-session scope sees the same traffic
         let sm = svc.stream_metrics(id).unwrap();
         assert_eq!(sm.get("stream_appends").unwrap().as_f64(), Some(700.0));
@@ -705,38 +913,83 @@ mod tests {
         let stats = svc.close(id).unwrap();
         assert_eq!(stats.appends, 700);
         assert_eq!(stats.windows as usize, r1.resparsifies + r2.resparsifies);
-        // closed stream: append sheds as ServiceDown, snapshot/close error
+        // closed stream on a live service: the id is simply unknown now
         match svc.append(id, day1.data()) {
-            Err(e @ SubmitError::ServiceDown(())) => assert!(!e.is_retryable()),
-            _ => panic!("closed stream must report ServiceDown"),
+            Err(e @ ServiceError::UnknownStream(got)) => {
+                assert_eq!(got, id);
+                assert!(!e.is_retryable());
+            }
+            other => panic!("closed stream must report UnknownStream, got {other:?}"),
         }
-        assert!(svc.snapshot_summary(id, SnapshotMode::Final).is_err());
-        assert!(svc.close(id).is_err());
+        match svc.submit_snapshot(id, SnapshotMode::Final) {
+            Err(ServiceError::UnknownStream(_)) => {}
+            other => panic!("snapshot on closed stream must fail typed, got {other:?}"),
+        }
+        match svc.try_submit_snapshot(id, SnapshotMode::Final) {
+            Err(ServiceError::UnknownStream(_)) => {}
+            other => panic!("try-snapshot on closed stream must fail typed, got {other:?}"),
+        }
+        match svc.close(id) {
+            Err(ServiceError::UnknownStream(_)) => {}
+            other => panic!("double close must report UnknownStream, got {other:?}"),
+        }
     }
 
     #[test]
     fn stream_backpressure_and_shutdown() {
-        use crate::stream::{StreamConfig, StreamObjective};
+        use crate::stream::StreamConfig;
         use crate::submodular::Concave;
         let mut svc = SummarizationService::start(ServiceConfig::default(), None);
         let cfg = StreamConfig::new(4)
             .with_ss(SsParams::default().with_seed(3))
             .with_high_water(80)
             .with_max_live(200);
-        let id = svc.open_stream(StreamObjective::Features(Concave::Sqrt), 8, cfg).unwrap();
+        let id = svc.open_stream(ObjectiveSpec::Features(Concave::Sqrt), 8, cfg).unwrap();
         let ok = feats(150, 8, 31);
         svc.append(id, ok.data()).unwrap();
         let too_big = feats(300, 8, 32);
         match svc.append(id, too_big.data()) {
-            Err(e @ SubmitError::QueueFull(())) => assert!(e.is_retryable()),
+            Err(e @ ServiceError::QueueFull(())) => assert!(e.is_retryable()),
             _ => panic!("over-cap batch must shed with QueueFull"),
         }
         svc.shutdown();
-        assert!(svc.open_stream(StreamObjective::Features(Concave::Sqrt), 8,
-            StreamConfig::new(4)).is_err());
+        match svc.open_stream(ObjectiveSpec::Features(Concave::Sqrt), 8, StreamConfig::new(4)) {
+            Err(ServiceError::ServiceDown) => {}
+            other => panic!("shut-down service must refuse streams, got {other:?}"),
+        }
         match svc.append(id, ok.data()) {
-            Err(SubmitError::ServiceDown(())) => {}
+            Err(ServiceError::ServiceDown) => {}
             _ => panic!("shut-down service must fail stream appends fast"),
         }
+        match svc.submit_snapshot(id, SnapshotMode::Final) {
+            Err(ServiceError::ServiceDown) => {}
+            other => panic!("shut-down service must refuse snapshot jobs, got {other:?}"),
+        }
+    }
+
+    #[test]
+    #[allow(deprecated)]
+    fn compat_shims_still_work() {
+        // the one-release migration surface: the SubmitError alias resolves
+        // to ServiceError, and the blocking snapshot_summary shim rides the
+        // job path (metered as a snapshot job)
+        use crate::stream::StreamConfig;
+        use crate::submodular::Concave;
+        let svc = SummarizationService::start(ServiceConfig::default(), None);
+        let id = svc
+            .open_stream(
+                ObjectiveSpec::Features(Concave::Sqrt),
+                8,
+                StreamConfig::new(4).with_ss(SsParams::default().with_seed(11)),
+            )
+            .unwrap();
+        svc.append(id, feats(120, 8, 41).data()).unwrap();
+        let snap = svc.snapshot_summary(id, SnapshotMode::Final).unwrap();
+        assert_eq!(snap.summary.len(), 4);
+        let m = svc.metrics().snapshot();
+        assert_eq!(m.get("snapshot_jobs").unwrap().as_f64(), Some(1.0));
+        // alias in an error position
+        let e: SubmitError<()> = ServiceError::ServiceDown;
+        assert!(!e.is_retryable());
     }
 }

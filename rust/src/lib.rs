@@ -39,5 +39,6 @@ pub mod config;
 pub mod eval;
 pub mod bench;
 
-pub use submodular::{BatchedDivergence, FeatureBased, SubmodularFn};
+pub use coordinator::{JobOptions, ServiceError, SummarizationService, Ticket};
+pub use submodular::{BatchedDivergence, FeatureBased, ObjectiveSpec, SubmodularFn};
 

@@ -9,7 +9,9 @@
 //!
 //! * [`remap`] — the spine: stable external ids ↔ dense internal indices,
 //!   so evicted elements' storage is genuinely compacted away while ids
-//!   handed to callers stay valid forever;
+//!   handed to callers stay valid forever (the map's all-dead prefix is
+//!   itself compacted behind a base offset, so the id residue is bounded
+//!   by the live window, not the stream length);
 //! * the incremental [`SieveFilter`] (stage 1 of the retention policy) —
 //!   the sieve-streaming threshold grid refactored into a reusable
 //!   admission core; it lives in
@@ -17,18 +19,30 @@
 //!   is a plain algorithm) and is re-exported here;
 //! * [`session`] — [`StreamSession`]: append-only batches, windowed
 //!   re-sparsification through the zero-allocation round arena (stage 2),
-//!   snapshots through the batched maximizer engine.
+//!   snapshots through the batched maximizer engine — in place
+//!   ([`StreamSession::snapshot_summary`]) or detached via the
+//!   copy-on-snapshot [`SnapshotCore`], which is how the service runs
+//!   Final summaries as pool jobs while appends continue.
 //!
-//! The service front-end ([`crate::coordinator::service`]) exposes
-//! sessions as `open_stream` / `append` / `snapshot_summary` / `close`
-//! with per-session backpressure.
+//! Sessions speak the crate-wide [`ObjectiveSpec`] (shared with batch
+//! requests) and the service's typed
+//! [`ServiceError`](crate::coordinator::ServiceError) — the front-end
+//! ([`crate::coordinator::service`]) exposes them as `open_stream` /
+//! `append` / `submit_snapshot` / `close` with per-session backpressure.
 
 pub mod remap;
 pub mod session;
 
 pub use crate::algorithms::sieve_filter::{SieveFilter, SieveParams, SieveSet};
+pub use crate::submodular::ObjectiveSpec;
 pub use remap::IdRemap;
 pub use session::{
-    SnapshotMode, StreamAppend, StreamConfig, StreamObjective, StreamSession, StreamStats,
+    SnapshotCore, SnapshotMode, StreamAppend, StreamConfig, StreamSession, StreamStats,
     StreamSummary,
 };
+
+/// Former name of the unified [`ObjectiveSpec`] — kept one release so
+/// existing call sites migrate mechanically (`StreamObjective::Features`
+/// patterns resolve through the alias unchanged).
+#[deprecated(since = "0.2.0", note = "renamed to `ObjectiveSpec`, shared with batch requests")]
+pub type StreamObjective = ObjectiveSpec;

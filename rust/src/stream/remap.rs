@@ -9,13 +9,19 @@
 //! indices are always dense so kernels keep their contiguous row layout
 //! and evicted elements' storage is actually dropped (not tombstoned).
 //!
-//! Memory note: stable-forever external ids cost one `u32` per arrival
-//! (admitted or not) in `ext_to_int`, which only ever grows — ~4 MB per
-//! million appends. That residue is deliberate (O(1) lookup, ids never
-//! dangle) and negligible next to feature storage for day/week-scale
-//! sessions, but it is *not* bounded by the retained core; sessions meant
-//! to run for months should be rotated, or the dead prefix compacted
-//! behind an id offset (tracked in ROADMAP).
+//! Memory: the forward map is *windowed*, not eternal. External ids below
+//! the oldest live id form an all-dead prefix (everything there was
+//! evicted or never admitted — ids are assigned in arrival order and
+//! `int_to_ext` stays ascending, so liveness has a sharp left edge); each
+//! [`compact`](IdRemap::compact) drops that prefix and remembers only its
+//! length in [`base`](IdRemap::base). Lookups stay O(1): an id below
+//! `base` is known-dead by construction, an id at or above it indexes
+//! `ext_to_int[ext - base]`. The retained residue
+//! ([`map_residue`](IdRemap::map_residue)) is bounded by the id *span* of
+//! the live window — retained core + buffer + rejected arrivals since the
+//! last window — instead of growing one `u32` per arrival forever (the
+//! pre-compaction behavior: ~4 MB per million appends, unbounded for
+//! months-long sessions; see ROADMAP history).
 
 /// Sentinel marking an external id whose element is no longer resident
 /// (evicted by a re-sparsification, or never admitted by the filter).
@@ -24,9 +30,14 @@ const GONE: u32 = u32::MAX;
 /// Stable external ids ↔ dense internal indices.
 #[derive(Default)]
 pub struct IdRemap {
-    /// indexed by external id; `GONE` = evicted / never admitted
+    /// external ids below this are all dead and their map entries have
+    /// been compacted away; only ever grows
+    base: usize,
+    /// indexed by `ext - base`; `GONE` = evicted / never admitted
     ext_to_int: Vec<u32>,
-    /// indexed by dense internal index
+    /// indexed by dense internal index; always ascending (ids are
+    /// assigned in arrival order and compaction preserves order), which
+    /// is what gives the dead prefix its sharp edge
     int_to_ext: Vec<usize>,
 }
 
@@ -45,7 +56,7 @@ impl IdRemap {
     /// Assign the next external id and bind it to the next dense internal
     /// slot (the caller pushes the element's storage at the same position).
     pub fn admit(&mut self) -> (usize, usize) {
-        let ext = self.ext_to_int.len();
+        let ext = self.base + self.ext_to_int.len();
         let int = self.int_to_ext.len();
         assert!(int < GONE as usize, "internal index space exhausted");
         self.ext_to_int.push(int as u32);
@@ -56,7 +67,7 @@ impl IdRemap {
     /// Assign the next external id without binding storage (the admission
     /// filter rejected the element; it was never resident).
     pub fn reject(&mut self) -> usize {
-        let ext = self.ext_to_int.len();
+        let ext = self.base + self.ext_to_int.len();
         self.ext_to_int.push(GONE);
         ext
     }
@@ -64,27 +75,44 @@ impl IdRemap {
     /// Compact the internal space to `keep` (ascending, distinct internal
     /// indices — the `kept` set of a re-sparsification): survivor
     /// `keep[i]` becomes internal index `i`, every other live element is
-    /// marked evicted. External ids never change.
+    /// marked evicted, and the forward map's now-all-dead prefix (every
+    /// id older than the oldest survivor) is dropped behind
+    /// [`base`](Self::base). External ids never change meaning.
     pub fn compact(&mut self, keep: &[usize]) {
         let mut kp = 0usize;
         for old in 0..self.int_to_ext.len() {
             let ext = self.int_to_ext[old];
             if kp < keep.len() && keep[kp] == old {
-                self.ext_to_int[ext] = kp as u32;
+                self.ext_to_int[ext - self.base] = kp as u32;
                 self.int_to_ext[kp] = ext;
                 kp += 1;
             } else {
-                self.ext_to_int[ext] = GONE;
+                self.ext_to_int[ext - self.base] = GONE;
             }
         }
         assert_eq!(kp, keep.len(), "keep indices must be ascending, distinct and live");
         self.int_to_ext.truncate(keep.len());
+        // drop the dead prefix: everything below the oldest live id (or
+        // below the next id to assign, when nothing survived) is dead
+        // forever. O(residue) memmove, amortized by the re-sparsification
+        // that triggered the compaction; capacity is kept so the
+        // steady-state append path stays allocation-free.
+        let oldest_live =
+            self.int_to_ext.first().copied().unwrap_or(self.base + self.ext_to_int.len());
+        let cut = oldest_live - self.base;
+        if cut > 0 {
+            self.ext_to_int.drain(..cut);
+            self.base = oldest_live;
+        }
     }
 
     /// Dense internal index of a live external id; `None` once evicted
     /// (or rejected), or for ids never assigned.
     pub fn internal(&self, ext: usize) -> Option<usize> {
-        match self.ext_to_int.get(ext) {
+        if ext < self.base {
+            return None; // compacted dead prefix
+        }
+        match self.ext_to_int.get(ext - self.base) {
             Some(&i) if i != GONE => Some(i as usize),
             _ => None,
         }
@@ -102,6 +130,20 @@ impl IdRemap {
 
     /// Total external ids ever assigned (admitted or not).
     pub fn assigned(&self) -> usize {
+        self.base + self.ext_to_int.len()
+    }
+
+    /// Left edge of the forward map: external ids below this were
+    /// compacted away as an all-dead prefix (and resolve to `None` in
+    /// O(1) without storage).
+    pub fn base(&self) -> usize {
+        self.base
+    }
+
+    /// Forward-map entries currently resident — the memory the stable-id
+    /// guarantee actually costs. Bounded by the id span of the live
+    /// window (`assigned() - base()`), **not** by the stream length.
+    pub fn map_residue(&self) -> usize {
         self.ext_to_int.len()
     }
 }
@@ -138,16 +180,22 @@ mod tests {
         assert_eq!(r.external(0), 0);
         assert_eq!(r.external(1), 2);
         assert_eq!(r.external(2), 5);
+        // ext 0 survived, so nothing was prefix-compacted yet
+        assert_eq!(r.base(), 0);
         // keep appending after compaction: new internals bind past the tail
         let (ext, int) = r.admit();
         assert_eq!((ext, int), (6, 3));
         assert_eq!(r.external(3), 6);
-        // second compaction keeps externals stable again
+        // second compaction keeps externals stable again, and drops the
+        // dead prefix (ids 0 and 1 can never come back to life)
         r.compact(&[1, 3]);
         assert_eq!(r.internal(2), Some(0));
         assert_eq!(r.internal(6), Some(1));
         assert_eq!(r.internal(0), None);
         assert_eq!(r.internal(5), None);
+        assert_eq!(r.base(), 2, "ids 0..2 are an all-dead prefix");
+        assert_eq!(r.assigned(), 7);
+        assert_eq!(r.map_residue(), 5, "only ids 2..7 keep entries");
     }
 
     #[test]
@@ -158,6 +206,7 @@ mod tests {
         }
         r.compact(&[0, 1, 2, 3]);
         assert_eq!(r.live(), 4);
+        assert_eq!(r.base(), 0);
         for i in 0..4 {
             assert_eq!(r.internal(i), Some(i));
             assert_eq!(r.external(i), i);
@@ -169,5 +218,76 @@ mod tests {
         let r = IdRemap::new();
         assert_eq!(r.internal(0), None);
         assert_eq!(r.internal(99), None);
+    }
+
+    #[test]
+    fn dead_prefix_is_compacted_across_many_windows() {
+        // A long-lived session shape: every window admits a batch, then a
+        // re-sparsification keeps only the most recent few. The forward
+        // map must keep its residue bounded by the live id span instead
+        // of growing one entry per arrival — across well over 3
+        // compactions, with lookups exact throughout.
+        let mut r = IdRemap::new();
+        let mut live_exts: Vec<usize> = Vec::new();
+        let per_window = 100usize;
+        for window in 0..8 {
+            for i in 0..per_window {
+                if i % 7 == 3 {
+                    let ext = r.reject();
+                    assert_eq!(ext, r.assigned() - 1);
+                } else {
+                    let (ext, _) = r.admit();
+                    live_exts.push(ext);
+                }
+            }
+            // keep the newest half of the live set (ascending internals)
+            let keep: Vec<usize> = (r.live() / 2..r.live()).collect();
+            live_exts = keep.iter().map(|&i| live_exts[i]).collect();
+            r.compact(&keep);
+            // full round-trip: internal ↔ external agree for survivors...
+            assert_eq!(r.live(), live_exts.len());
+            for (int, &ext) in live_exts.iter().enumerate() {
+                assert_eq!(r.internal(ext), Some(int), "window {window}: ext {ext}");
+                assert_eq!(r.external(int), ext);
+            }
+            // ...every other id ever assigned is dead, prefix or not
+            let live_set: std::collections::HashSet<usize> = live_exts.iter().copied().collect();
+            for ext in 0..r.assigned() {
+                if !live_set.contains(&ext) {
+                    assert_eq!(r.internal(ext), None, "window {window}: ext {ext} must be dead");
+                }
+            }
+            // the dead prefix was dropped: residue is the live span only
+            assert_eq!(r.base(), live_exts.first().copied().unwrap_or(r.assigned()));
+            assert_eq!(r.map_residue(), r.assigned() - r.base());
+            assert!(
+                r.map_residue() <= 2 * per_window,
+                "window {window}: residue {} outgrew the live span",
+                r.map_residue()
+            );
+        }
+        assert_eq!(r.assigned(), 8 * per_window);
+        assert!(r.base() > 6 * per_window, "most of the id space must be behind base");
+    }
+
+    #[test]
+    fn compact_to_empty_drops_everything() {
+        let mut r = IdRemap::new();
+        for _ in 0..10 {
+            r.admit();
+        }
+        r.compact(&[]);
+        assert_eq!(r.live(), 0);
+        assert_eq!(r.assigned(), 10);
+        assert_eq!(r.base(), 10);
+        assert_eq!(r.map_residue(), 0);
+        for ext in 0..10 {
+            assert_eq!(r.internal(ext), None);
+        }
+        // ids keep flowing from where they left off
+        let (ext, int) = r.admit();
+        assert_eq!((ext, int), (10, 0));
+        assert_eq!(r.internal(10), Some(0));
+        assert_eq!(r.external(0), 10);
     }
 }

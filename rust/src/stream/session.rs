@@ -22,7 +22,18 @@
 //! Snapshots run the batched [`MaximizerEngine`] over the live set: the
 //! stochastic-greedy route for cheap intermediate summaries ("Lazier Than
 //! Lazy Greedy" justifies the stochastic refresh between
-//! re-sparsifications), lazy greedy for final answers.
+//! re-sparsifications), lazy greedy for final answers. They come in two
+//! shapes sharing one compute path ([bit-identical results]):
+//!
+//! * [`snapshot_summary`](StreamSession::snapshot_summary) — in place,
+//!   over the live storage, for callers that own the session;
+//! * [`snapshot_core`](StreamSession::snapshot_core) — **copy-on-snapshot**:
+//!   clone the bounded retained core (storage + the remap's external-id
+//!   view) inside a short borrow, hand back a self-contained
+//!   [`SnapshotCore`] whose [`run`](SnapshotCore::run) executes anywhere —
+//!   the service runs it as a worker-pool job while appends keep landing
+//!   on the session. The facility-location similarity rebuild (`O(m²·d)`)
+//!   happens inside `run`, *not* under the borrow.
 //!
 //! **Batch equivalence.** A session whose window covers the entire stream
 //! (`high_water = usize::MAX`) with the admission filter disabled is
@@ -40,19 +51,20 @@
 //! `rust/tests/alloc_steady_state.rs`. The allocator is only touched by
 //! re-sparsifications, sieve re-grids and snapshots.
 //!
+//! [bit-identical results]: SnapshotCore::run
 //! [`sieve_streaming`]: crate::algorithms::sieve_streaming
 //! [`sparsify_candidates`]: crate::algorithms::sparsify_candidates
 //! [`MaximizerEngine`]: crate::algorithms::MaximizerEngine
 
 use std::sync::Arc;
 
-use anyhow::{anyhow, Result};
-
-use crate::algorithms::{sparsify, GainRoute, MaximizerEngine, SsParams};
-use crate::coordinator::service::SubmitError;
+use crate::algorithms::{
+    sparsify, sparsify_with, GainRoute, Interrupt, MaximizerEngine, Solution, SsParams,
+};
+use crate::coordinator::job::ServiceError;
 use crate::coordinator::{Compute, Metrics, ShardedBackend};
 use crate::submodular::{
-    BatchedDivergence, Concave, FacilityLocation, FeatureBased, SubmodularFn,
+    BatchedDivergence, FacilityLocation, FeatureBased, ObjectiveSpec, SubmodularFn,
 };
 use crate::util::pool::ThreadPool;
 use crate::util::stats::Timer;
@@ -61,20 +73,6 @@ use crate::util::vecmath::{add_into, FeatureMatrix};
 use crate::algorithms::sieve_filter::{SieveFilter, SieveParams, SieveSet};
 
 use super::remap::IdRemap;
-
-/// Which objective a session maintains over its live rows.
-#[derive(Clone, Copy, Debug, PartialEq, Eq)]
-pub enum StreamObjective {
-    /// Feature-based concave-over-modular over the live rows — grows
-    /// incrementally (bit-identical to fresh construction) and supports
-    /// the sieve admission filter.
-    Features(Concave),
-    /// Facility location over clamped-cosine similarities of the live
-    /// rows — the similarity matrix is (re)built per window operation and
-    /// compacted via `retain_elements`; admission filtering is not
-    /// available (its gains depend on the whole ground set).
-    FacilityLocation,
-}
 
 /// Session configuration. Construct with [`StreamConfig::new`] and refine
 /// with the builder methods.
@@ -96,9 +94,9 @@ pub struct StreamConfig {
     /// Hard cap on live (retained + buffered) elements — the per-session
     /// backpressure point: an append batch that cannot fit even after a
     /// forced re-sparsification is shed with
-    /// [`SubmitError::QueueFull`]. 0 = uncapped.
+    /// [`ServiceError::QueueFull`]. 0 = uncapped.
     pub max_live: usize,
-    /// Sieve admission filter ([`StreamObjective::Features`] only).
+    /// Sieve admission filter ([`ObjectiveSpec::Features`] only).
     /// `None` = admit every arrival.
     pub admission: Option<SieveParams>,
     /// Shard-count override for the windowed SS backend (0 = default).
@@ -280,38 +278,40 @@ impl StreamSession {
     /// `evicted_elements`) and the per-window backend counters
     /// (`divergence_evals`, `gain_evals`, …) — hand each session its own
     /// [`Metrics`] (and [`Metrics::reset`] it between windows if desired)
-    /// to keep long-lived sessions from conflating scopes.
+    /// to keep long-lived sessions from conflating scopes. An unservable
+    /// configuration reports [`ServiceError::Rejected`].
     pub fn new(
-        objective: StreamObjective,
+        objective: ObjectiveSpec,
         d: usize,
         cfg: StreamConfig,
         pool: Arc<ThreadPool>,
         metrics: Arc<Metrics>,
-    ) -> Result<Self> {
+    ) -> Result<Self, ServiceError> {
+        let reject = |reason: &str| ServiceError::Rejected { reason: reason.into() };
         if d == 0 {
-            return Err(anyhow!("stream sessions need d >= 1"));
+            return Err(reject("stream sessions need d >= 1"));
         }
         if cfg.k == 0 {
-            return Err(anyhow!("stream sessions need a budget k >= 1"));
+            return Err(reject("stream sessions need a budget k >= 1"));
         }
         if !(cfg.intermediate_eps > 0.0 && cfg.intermediate_eps < 1.0) {
-            return Err(anyhow!("intermediate_eps must be in (0, 1)"));
+            return Err(reject("intermediate_eps must be in (0, 1)"));
         }
         let filter = match (&cfg.admission, objective) {
             (None, _) => None,
-            (Some(p), StreamObjective::Features(_)) => Some(SieveFilter::new(cfg.k, p)),
-            (Some(_), StreamObjective::FacilityLocation) => {
-                return Err(anyhow!(
+            (Some(p), ObjectiveSpec::Features(_)) => Some(SieveFilter::new(cfg.k, p)),
+            (Some(_), ObjectiveSpec::FacilityLocation) => {
+                return Err(reject(
                     "sieve admission needs per-row gains; facility location's depend on \
-                     the whole ground set — open the session without a filter"
+                     the whole ground set — open the session without a filter",
                 ));
             }
         };
         let store = match objective {
-            StreamObjective::Features(g) => {
+            ObjectiveSpec::Features(g) => {
                 LiveStore::Features(Arc::new(FeatureBased::new(FeatureMatrix::zeros(0, d), g)))
             }
-            StreamObjective::FacilityLocation => {
+            ObjectiveSpec::FacilityLocation => {
                 LiveStore::Facility { feats: FeatureMatrix::zeros(0, d), cached: None }
             }
         };
@@ -359,9 +359,9 @@ impl StreamSession {
     /// triggers windowed re-sparsification inline. Backpressure: a batch
     /// that cannot fit under `max_live` even after a forced
     /// re-sparsification is rejected whole with
-    /// [`SubmitError::QueueFull`]; a closed session reports
-    /// [`SubmitError::ServiceDown`].
-    pub fn append(&mut self, rows: &[f32]) -> std::result::Result<StreamAppend, SubmitError<()>> {
+    /// [`ServiceError::QueueFull`]; a closed session reports
+    /// [`ServiceError::ServiceDown`].
+    pub fn append(&mut self, rows: &[f32]) -> Result<StreamAppend, ServiceError<()>> {
         Self::validate_batch(rows, self.d, matches!(self.store, LiveStore::Features(_)));
         self.append_prevalidated(rows)
     }
@@ -394,9 +394,9 @@ impl StreamSession {
     pub(crate) fn append_prevalidated(
         &mut self,
         rows: &[f32],
-    ) -> std::result::Result<StreamAppend, SubmitError<()>> {
+    ) -> Result<StreamAppend, ServiceError<()>> {
         if self.closed {
-            return Err(SubmitError::ServiceDown(()));
+            return Err(ServiceError::ServiceDown);
         }
         debug_assert_eq!(rows.len() % self.d, 0);
         let batch_n = rows.len() / self.d;
@@ -406,7 +406,7 @@ impl StreamSession {
             // before burning (and eroding the retained core with) a forced
             // re-sparsification that cannot help
             if batch_n > self.cfg.max_live {
-                return Err(SubmitError::QueueFull(()));
+                return Err(ServiceError::QueueFull(()));
             }
             // worst case every element is admitted: shed unless a forced
             // re-sparsification frees enough headroom
@@ -414,7 +414,7 @@ impl StreamSession {
                 self.resparsify_into(&mut out);
             }
             if self.live() + batch_n > self.cfg.max_live {
-                return Err(SubmitError::QueueFull(()));
+                return Err(ServiceError::QueueFull(()));
             }
         }
         for row in rows.chunks_exact(self.d) {
@@ -531,13 +531,17 @@ impl StreamSession {
         (evicted, res.rounds)
     }
 
-    /// Summarize the current live set. [`SnapshotMode::Final`] runs the
-    /// exact batch pipeline (`sparsify → lazy greedy`, same window seed),
+    /// Summarize the current live set **in place** (no storage clone).
+    /// [`SnapshotMode::Final`] runs the exact batch pipeline
+    /// (`sparsify → lazy greedy`, same window seed),
     /// [`SnapshotMode::Intermediate`] the cheap stochastic-greedy route.
     /// Read-only with respect to the live set: nothing is evicted.
-    pub fn snapshot_summary(&mut self, mode: SnapshotMode) -> Result<StreamSummary> {
+    /// Bit-identical to [`snapshot_core`](Self::snapshot_core) +
+    /// [`SnapshotCore::run`] on a quiesced session — both ride
+    /// [`summarize_live`] over the same data, seed and backend shape.
+    pub fn snapshot_summary(&mut self, mode: SnapshotMode) -> Result<StreamSummary, ServiceError> {
         if self.closed {
-            return Err(anyhow!("session is closed"));
+            return Err(ServiceError::ServiceDown);
         }
         let m = self.live();
         if m == 0 {
@@ -550,29 +554,21 @@ impl StreamSession {
                 ss_rounds: 0,
             });
         }
+        let params = SsParams { seed: self.window_seed(), ..self.cfg.ss.clone() };
         let obj = self.objective();
         let backend = self.backend(&obj);
-        let f = obj.as_submodular();
-        let mut engine = MaximizerEngine::new(f, GainRoute::Backend(&backend));
-        let (sol, ss_rounds) = match mode {
-            SnapshotMode::Final => {
-                let params = SsParams { seed: self.window_seed(), ..self.cfg.ss.clone() };
-                let ss = sparsify(&backend, &params);
-                (engine.lazy_greedy(&ss.kept, self.cfg.k), ss.rounds)
-            }
-            SnapshotMode::Intermediate => {
-                // only the stochastic route needs an explicit candidate list
-                let candidates: Vec<usize> = (0..m).collect();
-                (
-                    engine.stochastic_greedy(
-                        &candidates,
-                        self.cfg.k,
-                        self.cfg.intermediate_eps,
-                        self.window_seed(),
-                    ),
-                    0,
-                )
-            }
+        let (sol, ss_rounds) = match summarize_live(
+            &obj,
+            &backend,
+            mode,
+            self.cfg.k,
+            self.cfg.intermediate_eps,
+            &params,
+            m,
+            &mut || None,
+        ) {
+            Ok(done) => done,
+            Err(_) => unreachable!("a None-returning check can never interrupt"),
         };
         Ok(StreamSummary {
             summary: sol.set.iter().map(|&i| self.remap.external(i)).collect(),
@@ -584,8 +580,43 @@ impl StreamSession {
         })
     }
 
+    /// **Copy-on-snapshot**: clone the bounded retained core into a
+    /// self-contained [`SnapshotCore`] that can run the summary *without
+    /// the session* — the job the service puts on its worker pool so a
+    /// long Final snapshot no longer stalls the session's appends.
+    ///
+    /// Cost under the borrow: `O(m·d)` row clone plus `O(m)` id-view copy
+    /// (`m` = live set, bounded by windowing at `O(log² n)` + buffer) —
+    /// the facility-location `O(m²·d)` similarity build is deferred to
+    /// [`SnapshotCore::run`]. The clone captures this window's seed, so
+    /// the job's summary is bit-identical to what
+    /// [`snapshot_summary`](Self::snapshot_summary) would have produced at
+    /// the moment of the clone, regardless of appends that land while the
+    /// job runs.
+    pub fn snapshot_core(&self) -> Result<SnapshotCore, ServiceError> {
+        if self.closed {
+            return Err(ServiceError::ServiceDown);
+        }
+        let store = match &self.store {
+            LiveStore::Features(fb) => CoreStore::Features(fb.as_ref().clone()),
+            LiveStore::Facility { feats, .. } => CoreStore::FacilityRows(feats.clone()),
+        };
+        Ok(SnapshotCore {
+            store,
+            int_to_ext: (0..self.live()).map(|i| self.remap.external(i)).collect(),
+            k: self.cfg.k,
+            ss: SsParams { seed: self.window_seed(), ..self.cfg.ss.clone() },
+            intermediate_eps: self.cfg.intermediate_eps,
+            shards: self.cfg.shards,
+            retained: self.retained_len,
+            buffered: self.buffer_len,
+            pool: Arc::clone(&self.pool),
+            metrics: Arc::clone(&self.metrics),
+        })
+    }
+
     /// Close the session: further appends report
-    /// [`SubmitError::ServiceDown`], snapshots fail. Returns the lifetime
+    /// [`ServiceError::ServiceDown`], snapshots fail. Returns the lifetime
     /// stats. Idempotent.
     pub fn close(&mut self) -> StreamStats {
         self.closed = true;
@@ -657,18 +688,7 @@ impl StreamSession {
     }
 
     fn backend(&self, obj: &Arc<dyn BatchedDivergence>) -> ShardedBackend {
-        let b = ShardedBackend::new(
-            Arc::clone(obj),
-            Arc::clone(&self.pool),
-            Compute::Cpu,
-            Arc::clone(&self.metrics),
-        )
-        .expect("CPU backend construction is infallible");
-        if self.cfg.shards > 0 {
-            b.with_shards(self.cfg.shards)
-        } else {
-            b
-        }
+        make_backend(obj, &self.pool, &self.metrics, self.cfg.shards)
     }
 
     /// Per-window SS seed: window 0 is `ss.seed` itself (batch
@@ -678,9 +698,148 @@ impl StreamSession {
     }
 }
 
+/// Cloned storage of a [`SnapshotCore`].
+enum CoreStore {
+    /// Deep copy of the grown objective (rows + cached totals).
+    Features(FeatureBased),
+    /// Raw rows only — the `O(m²·d)` similarity build happens in
+    /// [`SnapshotCore::run`], off the session borrow.
+    FacilityRows(FeatureMatrix),
+}
+
+/// A self-contained, immutable clone of a session's live core — everything
+/// a snapshot needs to run detached from the session: storage, the
+/// external-id view, this window's seed, and the pool/metrics handles. The
+/// service wraps one per snapshot job; [`run`](Self::run) executes it on
+/// whatever thread dequeues it while the originating session keeps
+/// accepting appends.
+pub struct SnapshotCore {
+    store: CoreStore,
+    /// internal index → stable external id, frozen at clone time
+    int_to_ext: Vec<usize>,
+    k: usize,
+    /// window-resolved SS params (seed already fixed to the clone moment)
+    ss: SsParams,
+    intermediate_eps: f64,
+    shards: usize,
+    retained: usize,
+    buffered: usize,
+    pool: Arc<ThreadPool>,
+    metrics: Arc<Metrics>,
+}
+
+impl SnapshotCore {
+    /// Live elements captured in the core.
+    pub fn live(&self) -> usize {
+        self.int_to_ext.len()
+    }
+
+    /// Execute the snapshot. `check` is the cooperative cancel/deadline
+    /// probe, polled between SS rounds
+    /// ([`sparsify_candidates_with`](crate::algorithms::sparsify_candidates_with));
+    /// pass `&mut || None` to run to completion.
+    ///
+    /// **Bit-identical** to the in-place
+    /// [`snapshot_summary`](StreamSession::snapshot_summary) on the
+    /// session the core was cloned from, at the moment it was cloned: the
+    /// feature store is a deep copy, the facility-location similarity
+    /// matrix is a pure per-pair function of the cloned rows (so the
+    /// rebuild reproduces the compacted in-place matrix exactly), and
+    /// both paths run [`summarize_live`] with the same seed, budget and
+    /// backend shape. Pinned by `snapshot_core_matches_in_place_snapshot`.
+    pub fn run(
+        self,
+        mode: SnapshotMode,
+        check: &mut dyn FnMut() -> Option<Interrupt>,
+    ) -> Result<StreamSummary, Interrupt> {
+        let m = self.int_to_ext.len();
+        if m == 0 {
+            return Ok(StreamSummary {
+                summary: Vec::new(),
+                value: 0.0,
+                live: 0,
+                retained: self.retained,
+                buffered: self.buffered,
+                ss_rounds: 0,
+            });
+        }
+        let obj: Arc<dyn BatchedDivergence> = match self.store {
+            CoreStore::Features(fb) => Arc::new(fb),
+            CoreStore::FacilityRows(feats) => Arc::new(FacilityLocation::from_features(&feats)),
+        };
+        let backend = make_backend(&obj, &self.pool, &self.metrics, self.shards);
+        let (sol, ss_rounds) =
+            summarize_live(&obj, &backend, mode, self.k, self.intermediate_eps, &self.ss, m, check)?;
+        Ok(StreamSummary {
+            summary: sol.set.iter().map(|&i| self.int_to_ext[i]).collect(),
+            value: sol.value,
+            live: m,
+            retained: self.retained,
+            buffered: self.buffered,
+            ss_rounds,
+        })
+    }
+}
+
+/// CPU sharded backend over a live-set objective — the one construction
+/// both the in-place and the copy-on-snapshot paths use, so their backends
+/// can never differ in shape.
+fn make_backend(
+    obj: &Arc<dyn BatchedDivergence>,
+    pool: &Arc<ThreadPool>,
+    metrics: &Arc<Metrics>,
+    shards: usize,
+) -> ShardedBackend {
+    let b = ShardedBackend::new(
+        Arc::clone(obj),
+        Arc::clone(pool),
+        Compute::Cpu,
+        Arc::clone(metrics),
+    )
+    .expect("CPU backend construction is infallible");
+    if shards > 0 {
+        b.with_shards(shards)
+    } else {
+        b
+    }
+}
+
+/// The one snapshot compute path (shared by
+/// [`StreamSession::snapshot_summary`] and [`SnapshotCore::run`], which is
+/// what makes them bit-identical): [`SnapshotMode::Final`] runs
+/// `sparsify → lazy greedy` with this window's seed,
+/// [`SnapshotMode::Intermediate`] stochastic greedy over the live set. `m`
+/// is the live count (== `backend.n()`); solutions come back in internal
+/// indices for the caller to map through its id view.
+#[allow(clippy::too_many_arguments)]
+fn summarize_live(
+    obj: &Arc<dyn BatchedDivergence>,
+    backend: &ShardedBackend,
+    mode: SnapshotMode,
+    k: usize,
+    intermediate_eps: f64,
+    params: &SsParams,
+    m: usize,
+    check: &mut dyn FnMut() -> Option<Interrupt>,
+) -> Result<(Solution, usize), Interrupt> {
+    let mut engine = MaximizerEngine::new(obj.as_submodular(), GainRoute::Backend(backend));
+    match mode {
+        SnapshotMode::Final => {
+            let ss = sparsify_with(backend, params, check)?;
+            Ok((engine.lazy_greedy(&ss.kept, k), ss.rounds))
+        }
+        SnapshotMode::Intermediate => {
+            // only the stochastic route needs an explicit candidate list
+            let candidates: Vec<usize> = (0..m).collect();
+            Ok((engine.stochastic_greedy(&candidates, k, intermediate_eps, params.seed), 0))
+        }
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::submodular::Concave;
     use crate::util::rng::Rng;
 
     fn rows(n: usize, d: usize, seed: u64) -> FeatureMatrix {
@@ -696,7 +855,7 @@ mod tests {
 
     fn session(cfg: StreamConfig, d: usize) -> StreamSession {
         StreamSession::new(
-            StreamObjective::Features(Concave::Sqrt),
+            ObjectiveSpec::Features(Concave::Sqrt),
             d,
             cfg,
             Arc::new(ThreadPool::new(2, 16)),
@@ -751,6 +910,9 @@ mod tests {
             }
         }
         assert_eq!(survivors, s.live());
+        // the remap's dead prefix was compacted away behind base()
+        assert!(s.remap().base() > 0, "multiple windows must strand a dead prefix");
+        assert_eq!(s.remap().map_residue(), s.remap().assigned() - s.remap().base());
         // snapshots speak external ids
         let snap = s.snapshot_summary(SnapshotMode::Intermediate).unwrap();
         assert_eq!(snap.summary.len(), 6);
@@ -820,16 +982,23 @@ mod tests {
         // a batch larger than the cap itself must shed
         let huge = rows(300, 8, 8);
         match s.append(huge.data()) {
-            Err(e @ SubmitError::QueueFull(())) => assert!(e.is_retryable()),
+            Err(e @ ServiceError::QueueFull(())) => assert!(e.is_retryable()),
             other => panic!("expected QueueFull, got {:?}", other.map(|r| r.appended)),
         }
         let before = s.stats();
         let _ = s.close();
         match s.append(data.data()) {
-            Err(e @ SubmitError::ServiceDown(())) => assert!(!e.is_retryable()),
+            Err(e @ ServiceError::ServiceDown) => assert!(!e.is_retryable()),
             _ => panic!("closed session must report ServiceDown"),
         }
-        assert!(s.snapshot_summary(SnapshotMode::Final).is_err());
+        match s.snapshot_summary(SnapshotMode::Final) {
+            Err(ServiceError::ServiceDown) => {}
+            _ => panic!("closed session must refuse snapshots"),
+        }
+        match s.snapshot_core() {
+            Err(ServiceError::ServiceDown) => {}
+            _ => panic!("closed session must refuse snapshot cores"),
+        }
         assert_eq!(s.stats().appends, before.appends, "closed session accepts nothing");
     }
 
@@ -838,7 +1007,7 @@ mod tests {
         let data = rows(200, 9, 11);
         let pool = Arc::new(ThreadPool::new(2, 16));
         let mut s = StreamSession::new(
-            StreamObjective::FacilityLocation,
+            ObjectiveSpec::FacilityLocation,
             9,
             StreamConfig::new(6).with_ss(SsParams::default().with_seed(4)).with_high_water(60),
             Arc::clone(&pool),
@@ -850,15 +1019,19 @@ mod tests {
         let snap = s.snapshot_summary(SnapshotMode::Final).unwrap();
         assert_eq!(snap.summary.len(), 6);
         assert!(snap.value > 0.0);
-        // admission filter is features-only
-        assert!(StreamSession::new(
-            StreamObjective::FacilityLocation,
+        // admission filter is features-only, reported as a typed rejection
+        match StreamSession::new(
+            ObjectiveSpec::FacilityLocation,
             9,
             StreamConfig::new(6).with_admission(SieveParams::paper_default()),
             pool,
             Arc::new(Metrics::new()),
-        )
-        .is_err());
+        ) {
+            Err(ServiceError::Rejected { reason }) => {
+                assert!(reason.contains("admission"), "{reason}")
+            }
+            _ => panic!("facility location + admission filter must be rejected"),
+        }
     }
 
     #[test]
@@ -866,7 +1039,7 @@ mod tests {
         let data = rows(500, 8, 13);
         let metrics = Arc::new(Metrics::new());
         let mut s = StreamSession::new(
-            StreamObjective::Features(Concave::Sqrt),
+            ObjectiveSpec::Features(Concave::Sqrt),
             8,
             StreamConfig::new(5).with_ss(SsParams::default().with_seed(6)).with_high_water(120),
             Arc::new(ThreadPool::new(2, 16)),
@@ -881,5 +1054,93 @@ mod tests {
         assert_eq!(get("resparsify_rounds") as usize, r.ss_rounds);
         assert_eq!(get("evicted_elements") as usize, r.evicted);
         assert!(get("divergence_evals") > 0.0, "windowed SS must meter its backend");
+    }
+
+    #[test]
+    fn snapshot_core_matches_in_place_snapshot() {
+        // the acceptance invariant: the copy-on-snapshot job produces the
+        // bit-identical summary of the lock-holding in-place path on a
+        // quiesced session — across objectives, modes, and sessions that
+        // have already windowed (non-trivial remap, compacted storage)
+        for spec in [ObjectiveSpec::Features(Concave::Sqrt), ObjectiveSpec::FacilityLocation] {
+            let n = if spec == ObjectiveSpec::FacilityLocation { 220 } else { 420 };
+            let data = rows(n, 10, 19);
+            let mut s = StreamSession::new(
+                spec,
+                10,
+                StreamConfig::new(7)
+                    .with_ss(SsParams::default().with_seed(23))
+                    .with_high_water(90),
+                Arc::new(ThreadPool::new(2, 16)),
+                Arc::new(Metrics::new()),
+            )
+            .unwrap();
+            let r = s.append(data.data()).unwrap();
+            assert!(r.resparsifies >= 1, "{spec:?}: session must have windowed");
+            for mode in [SnapshotMode::Final, SnapshotMode::Intermediate] {
+                let core = s.snapshot_core().unwrap();
+                assert_eq!(core.live(), s.live());
+                let detached = core.run(mode, &mut || None).unwrap();
+                let in_place = s.snapshot_summary(mode).unwrap();
+                assert_eq!(
+                    detached.summary, in_place.summary,
+                    "{spec:?}/{mode:?}: summaries diverged"
+                );
+                assert_eq!(
+                    detached.value.to_bits(),
+                    in_place.value.to_bits(),
+                    "{spec:?}/{mode:?}: value bits diverged"
+                );
+                assert_eq!(detached.live, in_place.live);
+                assert_eq!(detached.retained, in_place.retained);
+                assert_eq!(detached.buffered, in_place.buffered);
+                assert_eq!(detached.ss_rounds, in_place.ss_rounds);
+            }
+        }
+    }
+
+    #[test]
+    fn snapshot_core_is_isolated_from_later_appends() {
+        // the core freezes the session state at clone time: appends that
+        // land after the clone affect neither its result nor its seed
+        let data = rows(500, 9, 29);
+        let mut s = session(
+            StreamConfig::new(6)
+                .with_ss(SsParams::default().with_seed(31))
+                .with_high_water(150),
+            9,
+        );
+        s.append(&data.data()[..300 * 9]).unwrap();
+        let frozen = s.snapshot_summary(SnapshotMode::Final).unwrap();
+        let core = s.snapshot_core().unwrap();
+        // mutate the session heavily after the clone
+        s.append(&data.data()[300 * 9..]).unwrap();
+        assert_eq!(s.stats().appends, 500, "appends landed after the clone");
+        let detached = core.run(SnapshotMode::Final, &mut || None).unwrap();
+        assert_eq!(detached.summary, frozen.summary);
+        assert_eq!(detached.value.to_bits(), frozen.value.to_bits());
+        assert_eq!(detached.live, frozen.live);
+        // and the session still snapshots its *new* state fine
+        let fresh = s.snapshot_summary(SnapshotMode::Final).unwrap();
+        assert_eq!(fresh.live, s.live());
+    }
+
+    #[test]
+    fn snapshot_core_honors_the_interrupt_probe() {
+        let data = rows(600, 8, 37);
+        let mut s = session(StreamConfig::new(5).with_ss(SsParams::default().with_seed(3)), 8);
+        s.append(data.data()).unwrap();
+        let core = s.snapshot_core().unwrap();
+        let err = core.run(SnapshotMode::Final, &mut || Some(Interrupt::Cancelled)).unwrap_err();
+        assert_eq!(err, Interrupt::Cancelled);
+        // an empty core ignores the probe (nothing to do)
+        let empty = session(StreamConfig::new(5), 8);
+        let snap = empty
+            .snapshot_core()
+            .unwrap()
+            .run(SnapshotMode::Final, &mut || Some(Interrupt::Cancelled))
+            .unwrap();
+        assert_eq!(snap.live, 0);
+        assert!(snap.summary.is_empty());
     }
 }

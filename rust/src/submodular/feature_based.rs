@@ -85,6 +85,11 @@ impl Concave {
 }
 
 /// Feature-based submodular function over dense hashed features.
+///
+/// `Clone` is a deep copy of rows + cached totals (bit-identical by
+/// construction) — what the streaming copy-on-snapshot path hands to the
+/// worker pool so appends can keep mutating the original.
+#[derive(Clone)]
 pub struct FeatureBased {
     feats: FeatureMatrix,
     g: Concave,

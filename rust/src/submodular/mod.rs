@@ -53,6 +53,49 @@ pub use modular::Modular;
 pub use sparsification_objective::SparsificationObjective;
 
 use crate::util::pool::ThreadPool;
+use crate::util::vecmath::FeatureMatrix;
+
+/// Which objective *family* to run over a set of feature rows — the single
+/// spec type the whole service surface speaks: batch requests pair it with
+/// a materialized row matrix
+/// ([`Objective::from_rows`](crate::coordinator::Objective::from_rows)),
+/// streaming sessions grow the rows incrementally
+/// ([`open_stream`](crate::coordinator::SummarizationService::open_stream)).
+/// It replaces the former stream-only `StreamObjective` (kept one release
+/// as a deprecated alias).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum ObjectiveSpec {
+    /// Feature-based concave-over-modular over the rows — the paper's news
+    /// objective; PJRT-accelerable, grows incrementally (bit-identical to
+    /// fresh construction) and supports sieve admission filtering.
+    Features(Concave),
+    /// Facility location over clamped-cosine similarities of the rows —
+    /// video-style representativeness; the similarity matrix is built from
+    /// the rows (`O(n²·d)`), so streaming sessions rebuild it per window
+    /// operation. Admission filtering is unavailable (its gains depend on
+    /// the whole ground set).
+    FacilityLocation,
+}
+
+impl ObjectiveSpec {
+    /// Whether rows must be non-negative (feature-based coverage needs
+    /// non-negative mass; facility location accepts signed embeddings).
+    pub fn needs_nonneg(self) -> bool {
+        matches!(self, ObjectiveSpec::Features(_))
+    }
+
+    /// Materialize the objective over a full row matrix — the batch path.
+    /// Bit-identical to a streaming session grown row by row from the same
+    /// matrix (the invariant `rust/tests/stream_equivalence.rs` pins).
+    pub fn build(self, rows: FeatureMatrix) -> std::sync::Arc<dyn BatchedDivergence> {
+        match self {
+            ObjectiveSpec::Features(g) => std::sync::Arc::new(FeatureBased::new(rows, g)),
+            ObjectiveSpec::FacilityLocation => {
+                std::sync::Arc::new(FacilityLocation::from_features(&rows))
+            }
+        }
+    }
+}
 
 /// A normalized (`f(∅) = 0`) non-negative submodular set function over a
 /// ground set `{0, .., n-1}`.

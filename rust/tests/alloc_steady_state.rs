@@ -24,7 +24,7 @@ use submodular_ss::algorithms::{
     MaximizerEngine, SsParams,
 };
 use submodular_ss::coordinator::{Compute, Metrics, ShardedBackend};
-use submodular_ss::stream::{StreamConfig, StreamObjective, StreamSession};
+use submodular_ss::stream::{ObjectiveSpec, StreamConfig, StreamSession};
 use submodular_ss::submodular::{Concave, FeatureBased, SolState, SubmodularFn};
 use submodular_ss::util::pool::ThreadPool;
 use submodular_ss::util::rng::Rng;
@@ -253,7 +253,7 @@ fn steady_state_rounds_allocate_zero_on_cpu_and_o_shards_on_pool() {
     let stream_src = feature_instance(3000, 12, 7);
     let stream_data = stream_src.feats();
     let mut sess = StreamSession::new(
-        StreamObjective::Features(Concave::Sqrt),
+        ObjectiveSpec::Features(Concave::Sqrt),
         12,
         StreamConfig::new(8),
         Arc::new(ThreadPool::new(2, 16)),

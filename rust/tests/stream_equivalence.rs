@@ -14,7 +14,7 @@ use std::sync::Arc;
 
 use submodular_ss::algorithms::{ss_then_greedy, CpuBackend, SsParams};
 use submodular_ss::coordinator::Metrics;
-use submodular_ss::stream::{SnapshotMode, StreamConfig, StreamObjective, StreamSession};
+use submodular_ss::stream::{ObjectiveSpec, SnapshotMode, StreamConfig, StreamSession};
 use submodular_ss::submodular::{BatchedDivergence, Concave, FacilityLocation, FeatureBased};
 use submodular_ss::util::pool::ThreadPool;
 use submodular_ss::util::rng::Rng;
@@ -31,15 +31,15 @@ fn rows(n: usize, d: usize, seed: u64) -> FeatureMatrix {
     m
 }
 
-fn batch_objective(kind: StreamObjective, data: &FeatureMatrix) -> Box<dyn BatchedDivergence> {
+fn batch_objective(kind: ObjectiveSpec, data: &FeatureMatrix) -> Box<dyn BatchedDivergence> {
     match kind {
-        StreamObjective::Features(g) => Box::new(FeatureBased::new(data.clone(), g)),
-        StreamObjective::FacilityLocation => Box::new(FacilityLocation::from_features(data)),
+        ObjectiveSpec::Features(g) => Box::new(FeatureBased::new(data.clone(), g)),
+        ObjectiveSpec::FacilityLocation => Box::new(FacilityLocation::from_features(data)),
     }
 }
 
 fn stream_session(
-    kind: StreamObjective,
+    kind: ObjectiveSpec,
     d: usize,
     cfg: StreamConfig,
     threads: usize,
@@ -57,15 +57,15 @@ fn stream_session(
 #[test]
 fn full_window_filter_off_stream_is_bit_identical_to_batch() {
     let objectives = [
-        ("features-sqrt", StreamObjective::Features(Concave::Sqrt)),
-        ("features-log1p", StreamObjective::Features(Concave::Log1p)),
-        ("facility", StreamObjective::FacilityLocation),
+        ("features-sqrt", ObjectiveSpec::Features(Concave::Sqrt)),
+        ("features-log1p", ObjectiveSpec::Features(Concave::Log1p)),
+        ("facility", ObjectiveSpec::FacilityLocation),
     ];
     let d = 10;
     let k = 7;
     for (name, kind) in objectives {
         // facility location's n² sim matrix keeps its leg smaller
-        let n = if matches!(kind, StreamObjective::FacilityLocation) { 220 } else { 380 };
+        let n = if matches!(kind, ObjectiveSpec::FacilityLocation) { 220 } else { 380 };
         for shards in [1usize, 7] {
             for seed in [0u64, 11, 42] {
                 let data = rows(n, d, seed.wrapping_add(1000));
@@ -123,7 +123,7 @@ fn external_ids_roundtrip_across_three_or_more_resparsifications() {
     let cfg = StreamConfig::new(6)
         .with_ss(SsParams::default().with_seed(5).with_min_keep(12))
         .with_high_water(150);
-    let mut sess = stream_session(StreamObjective::Features(Concave::Sqrt), d, cfg, 2);
+    let mut sess = stream_session(ObjectiveSpec::Features(Concave::Sqrt), d, cfg, 2);
     let mut total_resparsifies = 0usize;
     for chunk in data.data().chunks(d * 200) {
         total_resparsifies += sess.append(chunk).unwrap().resparsifies;
@@ -163,6 +163,17 @@ fn external_ids_roundtrip_across_three_or_more_resparsifications() {
         assert!(sess.row(e).is_some());
     }
 
+    // the forward map's dead prefix was compacted behind the base offset:
+    // residue is bounded by the live id span, not the stream length
+    let remap = sess.remap();
+    assert!(remap.base() > 0, "≥3 windows must strand a compactable dead prefix");
+    assert_eq!(remap.map_residue(), remap.assigned() - remap.base());
+    assert!(
+        remap.map_residue() < n,
+        "residue {} must not cover the whole stream",
+        remap.map_residue()
+    );
+
     // ids keep flowing after the last compaction
     let more = rows(40, d, 78);
     let r = sess.append(more.data()).unwrap();
@@ -186,7 +197,7 @@ fn service_stream_final_snapshot_matches_batch_pipeline() {
     let svc = SummarizationService::start(ServiceConfig::default(), None);
     let id = svc
         .open_stream(
-            StreamObjective::Features(Concave::Sqrt),
+            ObjectiveSpec::Features(Concave::Sqrt),
             d,
             StreamConfig::new(k).with_ss(params),
         )
@@ -194,7 +205,9 @@ fn service_stream_final_snapshot_matches_batch_pipeline() {
     for chunk in data.data().chunks(d * 100) {
         svc.append(id, chunk).unwrap();
     }
-    let snap = svc.snapshot_summary(id, SnapshotMode::Final).unwrap();
+    // snapshots are jobs now: the copy-on-snapshot pool job must still be
+    // bit-identical to the batch pipeline
+    let snap = svc.submit_snapshot(id, SnapshotMode::Final).unwrap().wait().unwrap();
     assert_eq!(snap.summary, sol.set);
     assert_eq!(snap.value.to_bits(), sol.value.to_bits());
     let stats = svc.close(id).unwrap();
