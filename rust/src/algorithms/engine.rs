@@ -61,7 +61,7 @@ use crate::util::rng::Rng;
 use crate::util::select::LazyMaxHeap;
 use crate::util::stats::Timer;
 
-use super::ss::DivergenceBackend;
+use super::ss::{DivergenceBackend, Interrupt};
 use super::Solution;
 
 /// Default cohort size for lazy greedy's stale-entry re-evaluations: large
@@ -157,6 +157,24 @@ impl<'a> MaximizerEngine<'a> {
     /// `stats().dispatches` kernel calls instead of one oracle dispatch
     /// per evaluation.
     pub fn lazy_greedy(&mut self, candidates: &[usize], k: usize) -> Solution {
+        match self.lazy_greedy_with(candidates, k, &mut || None) {
+            Ok(s) => s,
+            Err(_) => unreachable!("the never-interrupting probe cannot fire"),
+        }
+    }
+
+    /// Interruptible form of [`lazy_greedy`](Self::lazy_greedy). The probe
+    /// is polled before the initial fill and at the top of every heap
+    /// iteration, so a cancel or deadline lands within one cohort dispatch
+    /// — the same round-boundary contract as
+    /// [`sparsify_with`](super::ss::sparsify_with). A partial run's arena
+    /// is left reusable; `Err` abandons the solution.
+    pub fn lazy_greedy_with(
+        &mut self,
+        candidates: &[usize],
+        k: usize,
+        check: &mut dyn FnMut() -> Option<Interrupt>,
+    ) -> Result<Solution, Interrupt> {
         let timer = Timer::new();
         let mut state = self.f.state();
         let k = k.min(candidates.len());
@@ -177,6 +195,9 @@ impl<'a> MaximizerEngine<'a> {
         self.cand_buf.reserve(self.cohort);
 
         if n > 0 {
+            if let Some(why) = check() {
+                return Err(why);
+            }
             // initial fill: the whole candidate set at S = ∅ in one batch
             // (the scalar reference's n push-time evaluations, 1 dispatch)
             batch_gains(
@@ -197,6 +218,9 @@ impl<'a> MaximizerEngine<'a> {
         // epoch = commits + 1; a gain computed in the current epoch is exact
         let mut epoch = 1u64;
         while chosen < k {
+            if let Some(why) = check() {
+                return Err(why);
+            }
             let Some((i, cached)) = self.heap.pop_fresh(&self.versions) else { break };
             if self.evaluated_epoch[i] == epoch {
                 // exact under the current solution: commit (or stop)
@@ -243,12 +267,12 @@ impl<'a> MaximizerEngine<'a> {
             }
         }
 
-        Solution {
+        Ok(Solution {
             set: state.set().to_vec(),
             value: state.value(),
             oracle_calls: self.stats.gain_evals,
             wall_s: timer.elapsed_s(),
-        }
+        })
     }
 
     /// Naive greedy, one batch per commit. Bit-identical to
@@ -314,6 +338,24 @@ impl<'a> MaximizerEngine<'a> {
         eps: f64,
         seed: u64,
     ) -> Solution {
+        match self.stochastic_greedy_with(candidates, k, eps, seed, &mut || None) {
+            Ok(s) => s,
+            Err(_) => unreachable!("the never-interrupting probe cannot fire"),
+        }
+    }
+
+    /// Interruptible form of [`stochastic_greedy`](Self::stochastic_greedy):
+    /// the probe is polled at the top of every sample round, bounding shed
+    /// latency by one probe-set dispatch. The draw sequence up to the
+    /// interrupt is identical to the uninterrupted run's.
+    pub fn stochastic_greedy_with(
+        &mut self,
+        candidates: &[usize],
+        k: usize,
+        eps: f64,
+        seed: u64,
+        check: &mut dyn FnMut() -> Option<Interrupt>,
+    ) -> Result<Solution, Interrupt> {
         assert!(eps > 0.0 && eps < 1.0);
         let timer = Timer::new();
         let mut rng = Rng::new(seed);
@@ -329,6 +371,9 @@ impl<'a> MaximizerEngine<'a> {
         self.gains.clear();
         self.gains.resize(sample_size.min(candidates.len()).max(1), 0.0);
         for _ in 0..k {
+            if let Some(why) = check() {
+                return Err(why);
+            }
             if self.remaining.is_empty() {
                 break;
             }
@@ -360,12 +405,12 @@ impl<'a> MaximizerEngine<'a> {
             let v = self.remaining.swap_remove(best_pos);
             state.add(v);
         }
-        Solution {
+        Ok(Solution {
             set: state.set().to_vec(),
             value: state.value(),
             oracle_calls: self.stats.gain_evals,
             wall_s: timer.elapsed_s(),
-        }
+        })
     }
 }
 
@@ -495,6 +540,55 @@ mod tests {
         assert!(s.set.is_empty());
         let s = eng.greedy(&[], 4);
         assert!(s.set.is_empty());
+    }
+
+    #[test]
+    fn interrupt_probe_lands_at_a_round_boundary() {
+        let f = feature_instance(120, 8, 17);
+        let all: Vec<usize> = (0..120).collect();
+        let mut eng = MaximizerEngine::new(&f, GainRoute::Direct).with_cohort(4);
+
+        // fires immediately: no dispatch happens at all
+        let err = eng.lazy_greedy_with(&all, 20, &mut || Some(Interrupt::Cancelled)).unwrap_err();
+        assert_eq!(err, Interrupt::Cancelled);
+        assert_eq!(eng.stats().dispatches, 0);
+
+        // fires after a fixed number of polls: the run stops mid-greedy,
+        // having dispatched fewer cohorts than the full run needs
+        let full = eng.lazy_greedy(&all, 20);
+        let full_dispatches = eng.stats().dispatches;
+        let mut polls = 0u32;
+        let err = eng
+            .lazy_greedy_with(&all, 20, &mut || {
+                polls += 1;
+                (polls > 3).then_some(Interrupt::DeadlineExceeded)
+            })
+            .unwrap_err();
+        assert_eq!(err, Interrupt::DeadlineExceeded);
+        assert!(
+            eng.stats().dispatches < full_dispatches,
+            "interrupted run dispatched {} of the full run's {}",
+            eng.stats().dispatches,
+            full_dispatches
+        );
+
+        // the engine arena stays reusable after an abandoned run
+        let again = eng.lazy_greedy(&all, 20);
+        assert_eq!(again.set, full.set);
+        assert_eq!(again.value.to_bits(), full.value.to_bits());
+
+        // stochastic: same contract, per sample round
+        let mut polls = 0u32;
+        let err = eng
+            .stochastic_greedy_with(&all, 10, 0.2, 7, &mut || {
+                polls += 1;
+                (polls > 2).then_some(Interrupt::Cancelled)
+            })
+            .unwrap_err();
+        assert_eq!(err, Interrupt::Cancelled);
+        let s_full = eng.stochastic_greedy(&all, 10, 0.2, 7);
+        let s_ref = stochastic_greedy_reference(&f, &all, 10, 0.2, 7);
+        assert_eq!(s_full.set, s_ref.set, "interrupted runs must not disturb reuse");
     }
 
     #[test]

@@ -46,6 +46,14 @@ pub struct Counters {
     pub deadline_exceeded: AtomicU64,
     /// Copy-on-snapshot stream jobs accepted onto the worker queue.
     pub snapshot_jobs: AtomicU64,
+    /// Ground-set rows currently backed by a sparse top-t neighbor store
+    /// (0 when the objective is dense or feature-only). Gauge-style: set
+    /// at backend construction, not accumulated.
+    pub sparse_rows: AtomicU64,
+    /// Existing neighbor-list entries displaced or inserted by streaming
+    /// row-border appends into a sparse similarity store — the incremental
+    /// work that replaces the O(m²·d) per-window rebuild.
+    pub neighbor_updates: AtomicU64,
 }
 
 impl Counters {
@@ -53,7 +61,7 @@ impl Counters {
     /// list [`Metrics::snapshot`] and [`Self::reset`] both iterate, so a
     /// counter added here is automatically snapshotted *and* reset (the
     /// two can never drift apart).
-    fn named(&self) -> [(&'static str, &AtomicU64); 16] {
+    fn named(&self) -> [(&'static str, &AtomicU64); 18] {
         [
             ("requests", &self.requests),
             ("completed", &self.completed),
@@ -71,6 +79,8 @@ impl Counters {
             ("cancelled", &self.cancelled),
             ("deadline_exceeded", &self.deadline_exceeded),
             ("snapshot_jobs", &self.snapshot_jobs),
+            ("sparse_rows", &self.sparse_rows),
+            ("neighbor_updates", &self.neighbor_updates),
         ]
     }
 

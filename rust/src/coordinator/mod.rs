@@ -36,7 +36,7 @@ pub use metrics::Metrics;
 pub use service::{
     Objective, ServiceConfig, StreamId, SummarizationService, SummarizeRequest, SummarizeResponse,
 };
-pub use sharded::{Compute, ShardedBackend};
+pub use sharded::{Compute, ParkedBackend, ShardedBackend};
 
 // One-release compat: keep the old `coordinator::SubmitError` path alive.
 // The alias is defined (and deprecated) once, in `service`; uses through

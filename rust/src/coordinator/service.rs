@@ -653,19 +653,23 @@ fn handle(
     // (f32 device gains, CPU fallback — same contract as the divergence
     // side); everything else routes cohorts through the sharded backend,
     // which fans large ones over the compute pool and meters `gain_evals`.
+    // The same probe rides into the greedy epoch loop, so a cancel or
+    // deadline that lands after the SS pass aborts within one cohort
+    // dispatch instead of running the full huge-k maximization out.
     let sol = match &compute {
         Compute::Pjrt(rt) if f.as_feature_based().is_some() => {
             let mut eng =
                 MaximizerEngine::new(f.as_submodular(), GainRoute::Pjrt(rt.as_ref()));
-            let sol = eng.lazy_greedy(&ss.kept, req.k);
+            let sol = eng.lazy_greedy_with(&ss.kept, req.k, check);
             // the PJRT route dispatches cohorts straight at the artifact,
             // bypassing ShardedBackend::gains_into — meter it here so
             // accelerated requests account their maximizer work too
+            // (including the cohorts an aborted run already spent)
             metrics.add(&metrics.counters.gain_evals, eng.stats().gain_evals);
-            sol
+            sol?
         }
         _ => MaximizerEngine::new(f.as_submodular(), GainRoute::Backend(&backend))
-            .lazy_greedy(&ss.kept, req.k),
+            .lazy_greedy_with(&ss.kept, req.k, check)?,
     };
     Ok(SummarizeResponse {
         summary: sol.set,

@@ -67,16 +67,39 @@ impl ShardedBackend {
         compute: Compute,
         metrics: Arc<Metrics>,
     ) -> anyhow::Result<Self> {
-        // singleton complements once, through the same compute path (PJRT
-        // only has the feature-based singleton artifact). On the CPU route
-        // the precompute shards over the pool: per-element-decomposable
-        // objectives split the output range; whole-vector objectives with a
-        // pooled variant (facility location's top-2 scan, mixtures holding
-        // one) shard their reduction dimension and merge in row order —
-        // both bit-identical to the serial forms. Only objectives with
-        // neither keep the serial scan.
         let shards = pool.threads() * 2;
-        let sing = match (&compute, f.as_feature_based()) {
+        let sing = Self::compute_singletons(&f, &pool, &compute, shards)?;
+        // gauge: how much of the ground set rides a sparse neighbor store
+        metrics
+            .counters
+            .sparse_rows
+            .store(f.sparse_rows() as u64, std::sync::atomic::Ordering::Relaxed);
+        Ok(Self {
+            f,
+            sing: Arc::new(sing),
+            pool,
+            compute,
+            shards,
+            metrics,
+            probe_sing: Mutex::new(Vec::new()),
+        })
+    }
+
+    /// Singleton complements once, through the same compute path (PJRT
+    /// only has the feature-based singleton artifact). On the CPU route
+    /// the precompute shards over the pool: per-element-decomposable
+    /// objectives split the output range; whole-vector objectives with a
+    /// pooled variant (facility location's top-2 scan, mixtures holding
+    /// one) shard their reduction dimension and merge in row order —
+    /// both bit-identical to the serial forms. Only objectives with
+    /// neither keep the serial scan.
+    fn compute_singletons(
+        f: &Arc<dyn BatchedDivergence>,
+        pool: &ThreadPool,
+        compute: &Compute,
+        shards: usize,
+    ) -> anyhow::Result<Vec<f64>> {
+        Ok(match (compute, f.as_feature_based()) {
             (Compute::Pjrt(rt), Some(fb)) => {
                 let items: Vec<usize> = (0..f.n()).collect();
                 rt.singleton_complements(fb.feats(), fb.total_mass(), &items)?
@@ -90,20 +113,30 @@ impl ShardedBackend {
                 });
                 sing
             }
-            _ => match f.singleton_complements_pooled(&pool, shards) {
+            _ => match f.singleton_complements_pooled(pool, shards) {
                 Some(sing) => sing,
                 None => f.singleton_complements(),
             },
-        };
-        Ok(Self {
-            f,
-            sing: Arc::new(sing),
-            pool,
-            compute,
-            shards,
-            metrics,
-            probe_sing: Mutex::new(Vec::new()),
         })
+    }
+
+    /// Re-point a live backend at a replacement objective — the streaming
+    /// sessions' per-window path after `retain_elements` compaction or
+    /// sparse appends mutate the ground set. Recomputes the
+    /// singleton-complement precompute for the new objective through the
+    /// same compute route (it is solution-independent state that any
+    /// ground-set change invalidates), but keeps the pool binding, compute
+    /// route, shard count, metrics handle and warmed probe scratch that a
+    /// fresh construction would rebuild. Refreshes the `sparse_rows` gauge.
+    pub fn adopt(&mut self, f: Arc<dyn BatchedDivergence>) -> anyhow::Result<()> {
+        let sing = Self::compute_singletons(&f, &self.pool, &self.compute, self.shards)?;
+        self.sing = Arc::new(sing);
+        self.f = f;
+        self.metrics
+            .counters
+            .sparse_rows
+            .store(self.f.sparse_rows() as u64, std::sync::atomic::Ordering::Relaxed);
+        Ok(())
     }
 
     pub fn singletons(&self) -> &[f64] {
@@ -123,6 +156,60 @@ impl ShardedBackend {
     /// with their own.
     pub fn reset_metrics(&self) {
         self.metrics.reset();
+    }
+
+    /// Park the backend between streaming windows: drops the objective
+    /// handle and its singleton precompute (both are invalidated by the
+    /// appends and compactions that happen between windows — and holding
+    /// the `Arc` would rob the session of the exclusive storage access its
+    /// in-place mutation paths need), keeping the pool wiring, compute
+    /// route, shard count, metrics handle and warmed probe scratch for
+    /// [`ParkedBackend::resume`].
+    pub fn park(self) -> ParkedBackend {
+        ParkedBackend {
+            pool: self.pool,
+            compute: self.compute,
+            shards: self.shards,
+            metrics: self.metrics,
+            probe_sing: self.probe_sing.into_inner().unwrap(),
+        }
+    }
+}
+
+/// A [`ShardedBackend`] with its per-window state (objective handle +
+/// singleton precompute) stripped — what a [`StreamSession`] keeps between
+/// re-sparsification windows instead of constructing a fresh backend.
+///
+/// [`StreamSession`]: crate::stream::StreamSession
+pub struct ParkedBackend {
+    pool: Arc<ThreadPool>,
+    compute: Compute,
+    shards: usize,
+    metrics: Arc<Metrics>,
+    probe_sing: Vec<f64>,
+}
+
+impl ParkedBackend {
+    /// Bring the backend back up over this window's objective: recomputes
+    /// the singleton-complement precompute through the same compute route
+    /// (bit-identical to a fresh construction's) and refreshes the
+    /// `sparse_rows` gauge, reusing everything [`ShardedBackend::park`]
+    /// kept.
+    pub fn resume(self, f: Arc<dyn BatchedDivergence>) -> anyhow::Result<ShardedBackend> {
+        let sing = ShardedBackend::compute_singletons(&f, &self.pool, &self.compute, self.shards)?;
+        self.metrics
+            .counters
+            .sparse_rows
+            .store(f.sparse_rows() as u64, std::sync::atomic::Ordering::Relaxed);
+        Ok(ShardedBackend {
+            f,
+            sing: Arc::new(sing),
+            pool: self.pool,
+            compute: self.compute,
+            shards: self.shards,
+            metrics: self.metrics,
+            probe_sing: Mutex::new(self.probe_sing),
+        })
     }
 }
 
@@ -328,6 +415,45 @@ mod tests {
             metrics.counters.divergence_evals.load(std::sync::atomic::Ordering::Relaxed),
             20
         );
+    }
+
+    #[test]
+    fn adopt_repoints_a_live_backend_and_tracks_sparse_rows() {
+        use crate::submodular::{BatchedDivergence, SubmodularFn};
+        let m = feats(160, 10, 31);
+        let fl: Arc<dyn BatchedDivergence> =
+            Arc::new(FacilityLocation::from_features_sparse(&m, 12));
+        let pool = Arc::new(ThreadPool::new(3, 16));
+        let metrics = Arc::new(Metrics::new());
+        let mut b =
+            ShardedBackend::new(Arc::clone(&fl), pool, Compute::Cpu, Arc::clone(&metrics))
+                .unwrap();
+        assert_eq!(
+            metrics.counters.sparse_rows.load(std::sync::atomic::Ordering::Relaxed),
+            160,
+            "construction must gauge the sparse residency"
+        );
+        assert_eq!(b.singletons(), &fl.singleton_complements()[..]);
+
+        // compact the objective and re-point the same backend at it: the
+        // precompute and gauge must match a fresh construction's bit-for-bit
+        let keep: Vec<usize> = (0..160).filter(|v| v % 3 != 0).collect();
+        let mut small = FacilityLocation::from_features_sparse(&m, 12);
+        small.retain_elements(&keep);
+        let small: Arc<dyn BatchedDivergence> = Arc::new(small);
+        b.adopt(Arc::clone(&small)).unwrap();
+        assert_eq!(b.n(), keep.len());
+        assert_eq!(b.singletons(), &small.singleton_complements()[..]);
+        assert_eq!(
+            metrics.counters.sparse_rows.load(std::sync::atomic::Ordering::Relaxed),
+            keep.len() as u64
+        );
+
+        // a dense objective gauges zero
+        let dense: Arc<dyn BatchedDivergence> =
+            Arc::new(FacilityLocation::from_features_dense(&feats(40, 6, 32)));
+        b.adopt(dense).unwrap();
+        assert_eq!(metrics.counters.sparse_rows.load(std::sync::atomic::Ordering::Relaxed), 0);
     }
 
     #[test]

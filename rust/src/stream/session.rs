@@ -32,8 +32,18 @@
 //!   view) inside a short borrow, hand back a self-contained
 //!   [`SnapshotCore`] whose [`run`](SnapshotCore::run) executes anywhere —
 //!   the service runs it as a worker-pool job while appends keep landing
-//!   on the session. The facility-location similarity rebuild (`O(m²·d)`)
-//!   happens inside `run`, *not* under the borrow.
+//!   on the session. The facility-location similarity build (dense
+//!   `O(m²·d)` below the store crossover, sparse top-t above it) happens
+//!   inside `run`, *not* under the borrow.
+//!
+//! Facility-location sessions above the dense crossover keep a
+//! [`SparseSimStore`](crate::submodular::SparseSimStore)-backed objective
+//! **live across the whole session**: appends grow it by row-border
+//! insertion (`O(live·d)` per admitted row, metered as
+//! `neighbor_updates`), re-sparsifications compact its neighbor lists in
+//! place, and the windowed SS backend is parked and resumed between
+//! windows instead of rebuilt — deleting both halves of the old
+//! per-window `O(m²·d)` rebuild.
 //!
 //! **Batch equivalence.** A session whose window covers the entire stream
 //! (`high_water = usize::MAX`) with the admission filter disabled is
@@ -246,9 +256,22 @@ enum LiveStore {
     /// The objective *is* the storage: grown row by row, compacted in
     /// place — never rebuilt.
     Features(Arc<FeatureBased>),
-    /// Raw rows plus a lazily (re)built similarity objective, invalidated
-    /// by appends and compacted (kept valid) by re-sparsifications.
-    Facility { feats: FeatureMatrix, cached: Option<Arc<FacilityLocation>> },
+    /// Raw rows plus a lazily built similarity objective. A sparse-store
+    /// objective stays valid across the whole session lifecycle: appends
+    /// grow it by row-border insertion and re-sparsifications compact it
+    /// in place, so it is built from scratch at most once. A dense
+    /// (small-n) objective is invalidated by appends and rebuilt lazily —
+    /// the rebuild rides the `crossover` auto-selection, so a session that
+    /// outgrows the dense regime comes back sparse.
+    Facility {
+        feats: FeatureMatrix,
+        cached: Option<Arc<FacilityLocation>>,
+        /// ground-set size below which the store is dense
+        /// ([`ObjectiveSpec::facility_store_params`])
+        crossover: usize,
+        /// explicit top-t override (`None` = auto `O(log n)`)
+        t: Option<usize>,
+    },
 }
 
 pub struct StreamSession {
@@ -263,6 +286,13 @@ pub struct StreamSession {
     filter: Option<SieveFilter<CovSieve>>,
     pool: Arc<ThreadPool>,
     metrics: Arc<Metrics>,
+    /// The windowed SS backend, parked between uses so re-sparsifications
+    /// and snapshots resume it (keeping its pool wiring, shard count and
+    /// warmed scratch) instead of constructing a fresh one per window —
+    /// only taken when the objective supports retain (both live stores
+    /// do); parking drops the objective handle so storage compaction and
+    /// appends keep exclusive access to theirs.
+    parked: Option<crate::coordinator::ParkedBackend>,
     windows: u64,
     ss_rounds: u64,
     appends: u64,
@@ -300,7 +330,7 @@ impl StreamSession {
         let filter = match (&cfg.admission, objective) {
             (None, _) => None,
             (Some(p), ObjectiveSpec::Features(_)) => Some(SieveFilter::new(cfg.k, p)),
-            (Some(_), ObjectiveSpec::FacilityLocation) => {
+            (Some(_), _) => {
                 return Err(reject(
                     "sieve admission needs per-row gains; facility location's depend on \
                      the whole ground set — open the session without a filter",
@@ -311,8 +341,16 @@ impl StreamSession {
             ObjectiveSpec::Features(g) => {
                 LiveStore::Features(Arc::new(FeatureBased::new(FeatureMatrix::zeros(0, d), g)))
             }
-            ObjectiveSpec::FacilityLocation => {
-                LiveStore::Facility { feats: FeatureMatrix::zeros(0, d), cached: None }
+            _ => {
+                let (crossover, t) = objective
+                    .facility_store_params()
+                    .expect("non-feature specs are facility-location shaped");
+                LiveStore::Facility {
+                    feats: FeatureMatrix::zeros(0, d),
+                    cached: None,
+                    crossover,
+                    t,
+                }
             }
         };
         let mut session = Self {
@@ -325,6 +363,7 @@ impl StreamSession {
             filter,
             pool,
             metrics,
+            parked: None,
             windows: 0,
             ss_rounds: 0,
             appends: 0,
@@ -417,6 +456,7 @@ impl StreamSession {
                 return Err(ServiceError::QueueFull(()));
             }
         }
+        let mut neighbor_updates = 0u64;
         for row in rows.chunks_exact(self.d) {
             out.appended += 1;
             if !self.admit(row) {
@@ -430,10 +470,22 @@ impl StreamSession {
                     debug_assert_eq!(fb.n(), int);
                     fb.push_element(row);
                 }
-                LiveStore::Facility { feats, cached } => {
+                LiveStore::Facility { feats, cached, .. } => {
                     debug_assert_eq!(feats.n(), int);
                     feats.push_row(row);
-                    *cached = None;
+                    // a sparse store grows by row-border insertion —
+                    // O(live·d) for the new row, no rebuild; a dense
+                    // store declines, dropping back to the lazy-rebuild
+                    // path (which re-selects sparse once the live set
+                    // outgrows the crossover)
+                    if let Some(mut fl) = cached.take() {
+                        if let Some(updates) =
+                            Arc::make_mut(&mut fl).append_row_from_features(feats)
+                        {
+                            neighbor_updates += updates;
+                            *cached = Some(fl);
+                        }
+                    }
                 }
             }
             self.buffer_len += 1;
@@ -441,6 +493,9 @@ impl StreamSession {
             if self.buffer_len > self.cfg.high_water {
                 self.resparsify_into(&mut out);
             }
+        }
+        if neighbor_updates > 0 {
+            self.metrics.add(&self.metrics.counters.neighbor_updates, neighbor_updates);
         }
         // one RMW per counter per batch, not per element — the per-element
         // form costs two relaxed fetch_adds in the hot append loop
@@ -493,12 +548,15 @@ impl StreamSession {
             return (0, 0);
         }
         let obj = self.objective();
-        let backend = self.backend(&obj);
+        let backend = self.resume_backend(&obj);
         let params = SsParams { seed: self.window_seed(), ..self.cfg.ss.clone() };
         // sparsify == sparsify_candidates over (0..backend.n()), and
         // backend.n() is exactly the live set here
         let res = sparsify(&backend, &params);
-        drop(backend);
+        // park (not drop) the backend: its objective handle and singleton
+        // precompute go away — compaction invalidates both — but the pool
+        // wiring and scratch carry into the next window's resume
+        self.parked = Some(backend.park());
         drop(obj); // release the Arc so compaction can take &mut
         let evicted = m - res.kept.len();
         self.remap.compact(&res.kept);
@@ -509,10 +567,12 @@ impl StreamSession {
                     .retain_elements(&res.kept);
                 debug_assert!(ok);
             }
-            LiveStore::Facility { feats, cached } => {
+            LiveStore::Facility { feats, cached, .. } => {
                 feats.retain_rows(&res.kept);
-                // the compacted similarity matrix stays valid for an
-                // immediately following snapshot
+                // the compacted objective stays valid for an immediately
+                // following snapshot — and, when sparse, for the appends
+                // that grow it afterwards (neighbor lists are index-
+                // rewritten in place, never rebuilt)
                 if let Some(fl) = cached {
                     let ok = Arc::get_mut(fl)
                         .expect("objective handle leaked outside the session")
@@ -556,7 +616,7 @@ impl StreamSession {
         }
         let params = SsParams { seed: self.window_seed(), ..self.cfg.ss.clone() };
         let obj = self.objective();
-        let backend = self.backend(&obj);
+        let backend = self.resume_backend(&obj);
         let (sol, ss_rounds) = match summarize_live(
             &obj,
             &backend,
@@ -570,6 +630,7 @@ impl StreamSession {
             Ok(done) => done,
             Err(_) => unreachable!("a None-returning check can never interrupt"),
         };
+        self.parked = Some(backend.park());
         Ok(StreamSummary {
             summary: sol.set.iter().map(|&i| self.remap.external(i)).collect(),
             value: sol.value,
@@ -599,7 +660,16 @@ impl StreamSession {
         }
         let store = match &self.store {
             LiveStore::Features(fb) => CoreStore::Features(fb.as_ref().clone()),
-            LiveStore::Facility { feats, .. } => CoreStore::FacilityRows(feats.clone()),
+            LiveStore::Facility { feats, cached, crossover, t } => match cached {
+                // a live sparse store is cloned outright (`O(n·t)` — cheap
+                // enough under the borrow, unlike the dense `O(m²·d)`
+                // build): after evictions its incrementally-maintained
+                // neighbor lists are *not* reproducible by a fresh build
+                // over the surviving rows, so cloning is what keeps the
+                // detached snapshot bit-identical to the in-place one
+                Some(fl) if fl.is_sparse() => CoreStore::FacilityBuilt(fl.as_ref().clone()),
+                _ => CoreStore::FacilityRows { feats: feats.clone(), crossover: *crossover, t: *t },
+            },
         };
         Ok(SnapshotCore {
             store,
@@ -674,21 +744,43 @@ impl StreamSession {
     }
 
     /// Current objective handle (Features: the live store itself;
-    /// FacilityLocation: rebuilt from the live rows when stale).
+    /// facility location: built from the live rows when missing — from
+    /// scratch at most once for a sparse store, per staleness for a dense
+    /// one). The build is shard-parallel over the session pool and honors
+    /// the spec's crossover/t parameters.
     fn objective(&mut self) -> Arc<dyn BatchedDivergence> {
         match &mut self.store {
             LiveStore::Features(fb) => Arc::clone(fb) as Arc<dyn BatchedDivergence>,
-            LiveStore::Facility { feats, cached } => {
+            LiveStore::Facility { feats, cached, crossover, t } => {
                 if cached.is_none() {
-                    *cached = Some(Arc::new(FacilityLocation::from_features(feats)));
+                    let shards = if self.cfg.shards > 0 {
+                        self.cfg.shards
+                    } else {
+                        self.pool.threads() * 2
+                    };
+                    *cached = Some(Arc::new(FacilityLocation::from_features_with(
+                        feats,
+                        *crossover,
+                        *t,
+                        Some((self.pool.as_ref(), shards)),
+                    )));
                 }
                 Arc::clone(cached.as_ref().unwrap()) as Arc<dyn BatchedDivergence>
             }
         }
     }
 
-    fn backend(&self, obj: &Arc<dyn BatchedDivergence>) -> ShardedBackend {
-        make_backend(obj, &self.pool, &self.metrics, self.cfg.shards)
+    /// This window's SS backend: resume the parked one — reusing its pool
+    /// wiring, shard count and scratch — when the objective supports
+    /// in-place compaction (every live store's does), falling back to
+    /// fresh construction otherwise.
+    fn resume_backend(&mut self, obj: &Arc<dyn BatchedDivergence>) -> ShardedBackend {
+        match self.parked.take() {
+            Some(p) if obj.supports_retain() => {
+                p.resume(Arc::clone(obj)).expect("CPU backend resume is infallible")
+            }
+            _ => make_backend(obj, &self.pool, &self.metrics, self.cfg.shards),
+        }
     }
 
     /// Per-window SS seed: window 0 is `ss.seed` itself (batch
@@ -702,9 +794,16 @@ impl StreamSession {
 enum CoreStore {
     /// Deep copy of the grown objective (rows + cached totals).
     Features(FeatureBased),
-    /// Raw rows only — the `O(m²·d)` similarity build happens in
-    /// [`SnapshotCore::run`], off the session borrow.
-    FacilityRows(FeatureMatrix),
+    /// Raw rows only — the similarity build (dense `O(m²·d)` below the
+    /// crossover, sparse top-t above it) happens in [`SnapshotCore::run`],
+    /// off the session borrow, with the session's store parameters. Both
+    /// builds are pure per-pair functions of the rows, so the deferred
+    /// build bit-matches what the session would construct.
+    FacilityRows { feats: FeatureMatrix, crossover: usize, t: Option<usize> },
+    /// Clone of the session's live sparse objective (`O(n·t)`) — the only
+    /// faithful capture once incremental appends/retains have made the
+    /// store's history matter (see [`StreamSession::snapshot_core`]).
+    FacilityBuilt(FacilityLocation),
 }
 
 /// A self-contained, immutable clone of a session's live core — everything
@@ -765,7 +864,20 @@ impl SnapshotCore {
         }
         let obj: Arc<dyn BatchedDivergence> = match self.store {
             CoreStore::Features(fb) => Arc::new(fb),
-            CoreStore::FacilityRows(feats) => Arc::new(FacilityLocation::from_features(&feats)),
+            CoreStore::FacilityBuilt(fl) => Arc::new(fl),
+            CoreStore::FacilityRows { feats, crossover, t } => {
+                // same store parameters and pooled build as the session's
+                // own lazy construction — what keeps this path bit-identical
+                // to the in-place snapshot
+                let shards =
+                    if self.shards > 0 { self.shards } else { self.pool.threads() * 2 };
+                Arc::new(FacilityLocation::from_features_with(
+                    &feats,
+                    crossover,
+                    t,
+                    Some((self.pool.as_ref(), shards)),
+                ))
+            }
         };
         let backend = make_backend(&obj, &self.pool, &self.metrics, self.shards);
         let (sol, ss_rounds) =
@@ -826,12 +938,17 @@ fn summarize_live(
     match mode {
         SnapshotMode::Final => {
             let ss = sparsify_with(backend, params, check)?;
-            Ok((engine.lazy_greedy(&ss.kept, k), ss.rounds))
+            // the probe rides into the greedy epoch loop too, so a cancel
+            // landing after the SS pass sheds within one cohort
+            Ok((engine.lazy_greedy_with(&ss.kept, k, check)?, ss.rounds))
         }
         SnapshotMode::Intermediate => {
             // only the stochastic route needs an explicit candidate list
             let candidates: Vec<usize> = (0..m).collect();
-            Ok((engine.stochastic_greedy(&candidates, k, intermediate_eps, params.seed), 0))
+            Ok((
+                engine.stochastic_greedy_with(&candidates, k, intermediate_eps, params.seed, check)?,
+                0,
+            ))
         }
     }
 }
@@ -1032,6 +1149,50 @@ mod tests {
             }
             _ => panic!("facility location + admission filter must be rejected"),
         }
+    }
+
+    #[test]
+    fn sparse_facility_sessions_ride_the_store_across_windows() {
+        let ord = std::sync::atomic::Ordering::Relaxed;
+        let data = rows(260, 9, 41);
+        let metrics = Arc::new(Metrics::new());
+        let mut s = StreamSession::new(
+            ObjectiveSpec::FacilityLocationSparse { t: 24, crossover: 0 },
+            9,
+            StreamConfig::new(6).with_ss(SsParams::default().with_seed(4)).with_high_water(80),
+            Arc::new(ThreadPool::new(2, 16)),
+            Arc::clone(&metrics),
+        )
+        .unwrap();
+        let r = s.append(data.data()).unwrap();
+        assert!(r.resparsifies >= 1, "260 appends over hw=80 must window");
+        // after the first window the sparse store is live: the rest of the
+        // batch grows it by row-border insertion instead of invalidating it
+        assert!(
+            metrics.counters.neighbor_updates.load(ord) > 0,
+            "post-window appends must ride the incremental path"
+        );
+        let snap = s.snapshot_summary(SnapshotMode::Final).unwrap();
+        assert_eq!(snap.summary.len(), 6);
+        assert!(snap.value > 0.0);
+        assert_eq!(
+            metrics.counters.sparse_rows.load(ord) as usize,
+            s.live(),
+            "the resumed backend must gauge the sparse residency"
+        );
+        // the detached snapshot clones the live store, so it stays
+        // bit-identical to the in-place path even though the store's
+        // history (appends + evictions) is not reproducible from the rows
+        let core = s.snapshot_core().unwrap();
+        let detached = core.run(SnapshotMode::Final, &mut || None).unwrap();
+        let in_place = s.snapshot_summary(SnapshotMode::Final).unwrap();
+        assert_eq!(detached.summary, in_place.summary);
+        assert_eq!(detached.value.to_bits(), in_place.value.to_bits());
+        // further appends keep growing the same store
+        let before = metrics.counters.neighbor_updates.load(ord);
+        let more = rows(30, 9, 42);
+        s.append(more.data()).unwrap();
+        assert!(metrics.counters.neighbor_updates.load(ord) > before);
     }
 
     #[test]

@@ -1,17 +1,29 @@
 //! Facility location: `f(S) = Σ_{i∈V} max_{u∈S} sim(i, u)` — the classic
 //! representativeness objective for video/image summarization.
 //!
-//! Backed by a dense similarity matrix (`n × n`, f32). Similarities must be
-//! non-negative for monotonicity + normalization; [`FacilityLocation::from_features`]
-//! builds clamped cosine similarities from a feature matrix.
+//! Similarities live behind [`SimStore`]: a dense `n × n` f32 matrix for
+//! small ground sets (the exact small-n oracle), or a
+//! [`SparseSimStore`](super::sparse_sim::SparseSimStore) of per-row top-`t`
+//! neighbor lists for large ones. Construction through
+//! [`FacilityLocation::from_features`] auto-selects dense below
+//! [`DENSE_CROSSOVER`] and sparse above it; [`from_features_with`]
+//! overrides both the crossover and `t` (the `ObjectiveSpec` surface).
+//! Similarities must be non-negative for monotonicity + normalization;
+//! both builders use clamped cosine. In the sparse store an absent entry
+//! reads `0.0` — a lower bound on the true similarity, so the induced
+//! objective stays monotone submodular; at `t = n − 1` nothing is absent
+//! and every kernel below is bit-identical to the dense path (pinned by
+//! `rust/tests/sparse_fl_equivalence.rs`).
 //!
-//! Memory note: dense `n²` storage caps practical `n` around ~8k in this
-//! repo's benches; the paper's experiments use the feature-based objective
-//! for exactly this reason, and so do ours — facility location exists for
-//! the video examples and for objective-diversity in tests/ablations.
+//! Memory note: the dense store is `O(n²)` and caps practical `n` around
+//! ~8k; the sparse store is `O(n·t)` and is what the large-n batch and
+//! streaming paths ride (EXPERIMENTS.md §Sparse FL).
+//!
+//! [`from_features_with`]: FacilityLocation::from_features_with
 
 use std::cell::RefCell;
 
+use super::sparse_sim::SparseSimStore;
 use super::{BatchedDivergence, SolState, SubmodularFn};
 use crate::util::pool::ThreadPool;
 use crate::util::vecmath::{cosine, FeatureMatrix};
@@ -21,11 +33,25 @@ use crate::util::vecmath::{cosine, FeatureMatrix};
 /// stays L2-resident while similarity rows stream through once per block.
 const ITEM_BLOCK: usize = 64;
 
+/// Ground-set size at which [`FacilityLocation::from_features`] switches
+/// from the dense matrix to the sparse top-`t` store. Below it the dense
+/// build (≤ ~64 MiB of similarities) is both exact and faster to query;
+/// above it the `O(n²)` footprint dominates everything else in the stack.
+/// Methodology for the default in EXPERIMENTS.md §Sparse FL.
+pub const DENSE_CROSSOVER: usize = 4096;
+
 thread_local! {
     /// Per-thread kernel scratch (accumulator tile + probe gather row),
     /// reused across rounds and shards so the write-into divergence path
     /// never touches the allocator in the steady state.
     static FL_SCRATCH: RefCell<FlScratch> = RefCell::new(FlScratch::default());
+    /// Per-thread dense row image for the sparse store: row `i`'s live
+    /// entries are scattered in, the kernel body reads it exactly like a
+    /// dense row (absent columns are `0.0`), and the entries are zeroed
+    /// again afterwards — `O(t)` per row, never `O(n)`. Separate cell from
+    /// `FL_SCRATCH` because the tile kernels hold that one borrowed while
+    /// streaming rows.
+    static FL_ROW_SCRATCH: RefCell<Vec<f32>> = RefCell::new(Vec::new());
 }
 
 #[derive(Default)]
@@ -36,21 +62,35 @@ struct FlScratch {
     pu: Vec<f32>,
 }
 
+/// The similarity backing: dense small-n oracle or sparse top-`t` lists.
+#[derive(Clone)]
+enum SimStore {
+    /// row-major `sim[i*n + u]`
+    Dense(Vec<f32>),
+    Sparse(SparseSimStore),
+}
+
+#[derive(Clone)]
 pub struct FacilityLocation {
     n: usize,
-    /// row-major `sim[i*n + u]` = attraction of ground element i to facility u
-    sim: Vec<f32>,
+    store: SimStore,
 }
 
 impl FacilityLocation {
     pub fn new(n: usize, sim: Vec<f32>) -> Self {
         assert_eq!(sim.len(), n * n);
         debug_assert!(sim.iter().all(|&x| x >= 0.0), "similarities must be non-negative");
-        Self { n, sim }
+        Self { n, store: SimStore::Dense(sim) }
     }
 
-    /// Clamped-cosine similarity from features: `max(0, cos(x_i, x_u))`.
+    /// Clamped-cosine similarity from features, auto-selecting the store:
+    /// dense below [`DENSE_CROSSOVER`], sparse (auto `t`) at or above it.
     pub fn from_features(feats: &FeatureMatrix) -> Self {
+        Self::from_features_with(feats, DENSE_CROSSOVER, None, None)
+    }
+
+    /// The dense small-n oracle: `max(0, cos(x_i, x_u))`, full matrix.
+    pub fn from_features_dense(feats: &FeatureMatrix) -> Self {
         let n = feats.n();
         let mut sim = vec![0.0f32; n * n];
         for i in 0..n {
@@ -61,12 +101,124 @@ impl FacilityLocation {
                 sim[u * n + i] = s;
             }
         }
-        Self { n, sim }
+        Self { n, store: SimStore::Dense(sim) }
+    }
+
+    /// Sparse top-`t` store regardless of size (serial exact kNN build).
+    pub fn from_features_sparse(feats: &FeatureMatrix, t: usize) -> Self {
+        Self { n: feats.n(), store: SimStore::Sparse(SparseSimStore::from_features(feats, t)) }
+    }
+
+    /// Configurable construction — the `ObjectiveSpec` seam: dense iff
+    /// `n < crossover`; otherwise sparse with `t` neighbors (auto-sized
+    /// [`auto_neighbors`] when `None`), shard-parallel over `pooled` when
+    /// a pool is supplied.
+    ///
+    /// [`auto_neighbors`]: FacilityLocation::auto_neighbors
+    pub fn from_features_with(
+        feats: &FeatureMatrix,
+        crossover: usize,
+        t: Option<usize>,
+        pooled: Option<(&ThreadPool, usize)>,
+    ) -> Self {
+        let n = feats.n();
+        if n < crossover {
+            return Self::from_features_dense(feats);
+        }
+        let t = t.unwrap_or_else(|| Self::auto_neighbors(n));
+        let store = match pooled {
+            Some((pool, shards)) => SparseSimStore::from_features_pooled(feats, t, pool, shards),
+            None => SparseSimStore::from_features(feats, t),
+        };
+        Self { n, store: SimStore::Sparse(store) }
+    }
+
+    /// Default neighbor budget at auto-sparse construction: `⌈8·ln n⌉`,
+    /// floored at 16 — the `t = O(log n)` regime whose ≥0.95 utility floor
+    /// the equivalence suite pins on clustered data.
+    pub fn auto_neighbors(n: usize) -> usize {
+        ((((n.max(2)) as f64).ln() * 8.0).ceil() as usize).max(16)
+    }
+
+    /// Whether the similarities are backed by the sparse top-`t` store.
+    pub fn is_sparse(&self) -> bool {
+        matches!(self.store, SimStore::Sparse(_))
+    }
+
+    /// The sparse store, when active (stats introspection for metrics,
+    /// memory tests and benches).
+    pub fn sparse_store(&self) -> Option<&SparseSimStore> {
+        match &self.store {
+            SimStore::Sparse(s) => Some(s),
+            SimStore::Dense(_) => None,
+        }
+    }
+
+    /// Resident bytes of the similarity storage (dense matrix or sparse
+    /// slots) — what the `O(n·t)` peak-memory assertions measure.
+    pub fn resident_bytes(&self) -> usize {
+        match &self.store {
+            SimStore::Dense(sim) => sim.capacity() * std::mem::size_of::<f32>(),
+            SimStore::Sparse(s) => s.resident_bytes(),
+        }
+    }
+
+    /// Row-border append (streaming fast path): the new element's feature
+    /// row must be the last row of `feats` with `feats.n() == n + 1`.
+    /// Returns the number of existing-row neighbor-list updates, or `None`
+    /// when the store is dense — dense growth re-strides the whole matrix,
+    /// so callers rebuild through [`from_features`] instead (which also
+    /// rides the crossover once `n` outgrows it).
+    ///
+    /// [`from_features`]: FacilityLocation::from_features
+    pub fn append_row_from_features(&mut self, feats: &FeatureMatrix) -> Option<u64> {
+        match &mut self.store {
+            SimStore::Dense(_) => None,
+            SimStore::Sparse(s) => {
+                let updates = s.append_row(feats);
+                self.n = s.n();
+                Some(updates)
+            }
+        }
     }
 
     #[inline]
     pub fn sim(&self, i: usize, u: usize) -> f32 {
-        self.sim[i * self.n + u]
+        match &self.store {
+            SimStore::Dense(sim) => sim[i * self.n + u],
+            SimStore::Sparse(s) => s.get(i, u),
+        }
+    }
+
+    /// Stream every similarity row through `f` in ascending ground order.
+    /// Dense rows are borrowed straight from the matrix; sparse rows are
+    /// scattered into a thread-local dense image first (absent columns
+    /// `0.0`) and cleared after — so the kernel bodies are *one* piece of
+    /// code whose arithmetic cannot differ between the stores, which is
+    /// the whole bit-identity argument at `t = n − 1`.
+    #[inline]
+    fn with_rows<F: FnMut(usize, &[f32])>(&self, mut f: F) {
+        match &self.store {
+            SimStore::Dense(sim) => {
+                for i in 0..self.n {
+                    f(i, &sim[i * self.n..(i + 1) * self.n]);
+                }
+            }
+            SimStore::Sparse(s) => FL_ROW_SCRATCH.with(|cell| {
+                let row = &mut *cell.borrow_mut();
+                row.resize(self.n, 0.0);
+                for i in 0..self.n {
+                    let (cols, vals) = s.row(i);
+                    for (&c, &v) in cols.iter().zip(vals) {
+                        row[c as usize] = v;
+                    }
+                    f(i, row);
+                    for &c in cols {
+                        row[c as usize] = 0.0;
+                    }
+                }
+            }),
+        }
     }
 
     /// Shared inner loop of both blocked kernels: accumulate the pair-gain
@@ -86,8 +238,7 @@ impl FacilityLocation {
         let p = probes.len();
         debug_assert_eq!(acc.len(), vblock.len() * p);
         debug_assert_eq!(pu.len(), p);
-        for i in 0..self.n {
-            let row = &self.sim[i * self.n..(i + 1) * self.n];
+        self.with_rows(|_i, row| {
             for (slot, &u) in probes.iter().enumerate() {
                 pu[slot] = row[u];
             }
@@ -101,59 +252,67 @@ impl FacilityLocation {
                     }
                 }
             }
-        }
+        });
     }
 
     /// Cache-blocked batched marginal gains against a per-ground-element
     /// best-similarity vector: `out[j] = Σ_i max(0, sim(i, c_j) − best_i)`
     /// — the maximizer engine's hot kernel for this objective. The scalar
-    /// [`SolState::gain`] walks one stride-`n` similarity *column* per
-    /// candidate (a cache miss per ground element); this kernel streams
-    /// rows contiguously and accumulates an `ITEM_BLOCK`-wide f64 tile per
-    /// row — the same loop inversion as [`Self::pair_gains_block`]. Per
-    /// candidate the ground elements are visited in the same ascending
-    /// order with the same f32-subtract / f64-accumulate widths as the
-    /// scalar loop, so the result is bit-identical regardless of how the
-    /// cohort is chunked.
+    /// [`SolState::gain`] walks one similarity *column* per candidate (a
+    /// cache miss per ground element dense, a binary search sparse); this
+    /// kernel streams rows contiguously and accumulates an `ITEM_BLOCK`-
+    /// wide f64 tile per row — the same loop inversion as
+    /// [`Self::pair_gains_block`]. Per candidate the ground elements are
+    /// visited in the same ascending order with the same f32-subtract /
+    /// f64-accumulate widths as the scalar loop, so the result is
+    /// bit-identical regardless of how the cohort is chunked.
     pub fn gains_over_best_into(&self, best: &[f32], candidates: &[usize], out: &mut [f64]) {
         debug_assert_eq!(best.len(), self.n);
         debug_assert_eq!(candidates.len(), out.len());
         for (cblock, out_block) in candidates.chunks(ITEM_BLOCK).zip(out.chunks_mut(ITEM_BLOCK)) {
             out_block.fill(0.0);
-            for (i, &b) in best.iter().enumerate() {
-                let row = &self.sim[i * self.n..(i + 1) * self.n];
+            self.with_rows(|i, row| {
+                let b = best[i];
                 for (slot, &v) in out_block.iter_mut().zip(cblock) {
                     let d = row[v] - b;
                     if d > 0.0 {
                         *slot += d as f64;
                     }
                 }
-            }
+            });
         }
     }
 
-    /// The serial top-2 scan of similarity row `i` — shared by the serial
-    /// and row-sharded singleton precomputes so the two can never drift:
+    /// The top-2 scan of similarity row `i` — shared by the serial and
+    /// row-sharded singleton precomputes so the two can never drift:
     /// `(top1, argmax, top2)` under strict-`>` promotion (first occurrence
-    /// wins ties, duplicates count toward top2).
+    /// wins ties, duplicates count toward top2). The sparse store's scan
+    /// folds its implicit zeros in position order, reproducing the dense
+    /// scan exactly.
     #[inline]
     fn row_top2(&self, i: usize) -> (f32, usize, f32) {
-        let row = &self.sim[i * self.n..(i + 1) * self.n];
-        let (mut top1, mut arg1, mut top2) = (f32::NEG_INFINITY, usize::MAX, f32::NEG_INFINITY);
-        for (u, &s) in row.iter().enumerate() {
-            if s > top1 {
-                top2 = top1;
-                top1 = s;
-                arg1 = u;
-            } else if s > top2 {
-                top2 = s;
+        match &self.store {
+            SimStore::Dense(sim) => {
+                let row = &sim[i * self.n..(i + 1) * self.n];
+                let (mut top1, mut arg1, mut top2) =
+                    (f32::NEG_INFINITY, usize::MAX, f32::NEG_INFINITY);
+                for (u, &s) in row.iter().enumerate() {
+                    if s > top1 {
+                        top2 = top1;
+                        top1 = s;
+                        arg1 = u;
+                    } else if s > top2 {
+                        top2 = s;
+                    }
+                }
+                (top1, arg1, top2)
             }
+            SimStore::Sparse(s) => s.row_top2(i),
         }
-        (top1, arg1, top2)
     }
 
     /// Row-sharded singleton-complement precompute — the parallel form of
-    /// the O(n²) top-2 scan that used to run serially at request start.
+    /// the top-2 scan that used to run serially at request start.
     /// Phase 1 shards the *reduction* (row) dimension: each shard writes
     /// its rows' `(argmax, top1 − top2)` results into disjoint slices of a
     /// row-indexed buffer. Phase 2 scatters them serially in ascending-row
@@ -191,12 +350,11 @@ impl FacilityLocation {
     /// [`BatchedDivergence::pair_gains_batch`].
     ///
     /// The scalar [`SubmodularFn::pair_gain`] walks two *columns* of the
-    /// similarity matrix per `(u, v)` pair — stride-`n` loads that miss
-    /// cache on every ground element. This kernel inverts the loops: it
-    /// streams similarity *rows* contiguously, gathers the probe entries of
-    /// each row once, and accumulates a `block × P` pair-gain tile that
-    /// stays cache-resident (numbers in EXPERIMENTS.md §Perf; bench:
-    /// `perf_facility_divergence`).
+    /// similarity store per `(u, v)` pair. This kernel inverts the loops:
+    /// it streams similarity *rows* contiguously, gathers the probe
+    /// entries of each row once, and accumulates a `block × P` pair-gain
+    /// tile that stays cache-resident (numbers in EXPERIMENTS.md §Perf;
+    /// bench: `perf_facility_divergence`).
     ///
     /// Per `(u, v)` the accumulation visits ground elements in the same
     /// ascending order, with the same f32-subtract / f64-accumulate widths,
@@ -327,13 +485,13 @@ impl SubmodularFn for FacilityLocation {
             return 0.0;
         }
         let mut acc = 0.0f64;
-        for i in 0..self.n {
+        self.with_rows(|_i, row| {
             let mut best = 0.0f32;
             for &u in s {
-                best = best.max(self.sim(i, u));
+                best = best.max(row[u]);
             }
             acc += best as f64;
-        }
+        });
         acc
     }
 
@@ -344,23 +502,28 @@ impl SubmodularFn for FacilityLocation {
     fn pair_gain(&self, u: usize, v: usize) -> f64 {
         // f(v|{u}) = Σ_i max(0, sim(i,v) - sim(i,u))
         let mut acc = 0.0f64;
-        for i in 0..self.n {
-            let d = self.sim(i, v) - self.sim(i, u);
+        self.with_rows(|_i, row| {
+            let d = row[v] - row[u];
             if d > 0.0 {
                 acc += d as f64;
             }
-        }
+        });
         acc
     }
 
     fn singleton(&self, v: usize) -> f64 {
-        (0..self.n).map(|i| self.sim(i, v) as f64).sum()
+        match &self.store {
+            SimStore::Dense(sim) => (0..self.n).map(|i| sim[i * self.n + v] as f64).sum(),
+            // the store's column sums fold the same ascending-`i` add
+            // sequence (absent entries are exact `+0.0` no-ops)
+            SimStore::Sparse(s) => s.col_sum(v),
+        }
     }
 
     fn singleton_complements(&self) -> Vec<f64> {
         // f(v|V\v) = Σ_i max(0, sim(i,v) - max_{u≠v} sim(i,u))
         //          = Σ_i [sim(i,v) == top1(i)] * (top1(i) - top2(i))  (v unique argmax)
-        // Computed with a top-2 scan per row i: O(n²) once.
+        // Computed with a top-2 scan per row i: O(n²) dense, O(nnz) sparse.
         let mut out = vec![0.0f64; self.n];
         for i in 0..self.n {
             let (top1, arg1, top2) = self.row_top2(i);
@@ -382,11 +545,21 @@ impl SubmodularFn for FacilityLocation {
         true
     }
 
-    /// Compact the dense similarity matrix to the `keep × keep` principal
-    /// submatrix, in place: with `keep` ascending every source cell sits
-    /// at or after its destination, so a forward row-major walk never
-    /// reads an overwritten slot. The result is indistinguishable from a
-    /// `FacilityLocation::new` over the gathered submatrix.
+    fn sparse_rows(&self) -> usize {
+        match &self.store {
+            SimStore::Dense(_) => 0,
+            SimStore::Sparse(s) => s.n(),
+        }
+    }
+
+    /// Compact the store to the surviving elements, in place. Dense: the
+    /// `keep × keep` principal submatrix via a forward row-major walk
+    /// (with `keep` ascending every source cell sits at or after its
+    /// destination, so no slot is read after being overwritten) —
+    /// indistinguishable from a fresh `FacilityLocation::new` over the
+    /// gathered submatrix. Sparse: neighbor-list compaction with an
+    /// old→new column rewrite ([`SparseSimStore::retain`]); entries whose
+    /// column was evicted are dropped, not refilled.
     fn retain_elements(&mut self, keep: &[usize]) -> bool {
         let n = self.n;
         let m = keep.len();
@@ -396,13 +569,18 @@ impl SubmodularFn for FacilityLocation {
             assert!(prev.map_or(true, |p| p < old), "retain_elements requires ascending indices");
             prev = Some(old);
         }
-        for (ni, &oi) in keep.iter().enumerate() {
-            for (nj, &oj) in keep.iter().enumerate() {
-                // oi*n + oj >= ni*m + nj because oi >= ni, oj >= nj, n >= m
-                self.sim[ni * m + nj] = self.sim[oi * n + oj];
+        match &mut self.store {
+            SimStore::Dense(sim) => {
+                for (ni, &oi) in keep.iter().enumerate() {
+                    for (nj, &oj) in keep.iter().enumerate() {
+                        // oi*n + oj >= ni*m + nj because oi >= ni, oj >= nj, n >= m
+                        sim[ni * m + nj] = sim[oi * n + oj];
+                    }
+                }
+                sim.truncate(m * m);
             }
+            SimStore::Sparse(s) => s.retain(keep),
         }
-        self.sim.truncate(m * m);
         self.n = m;
         true
     }
@@ -422,25 +600,27 @@ impl SolState for FlState<'_> {
     }
 
     fn gain(&self, v: usize) -> f64 {
+        let best = &self.best;
         let mut acc = 0.0f64;
-        for i in 0..self.f.n {
-            let d = self.f.sim(i, v) - self.best[i];
+        self.f.with_rows(|i, row| {
+            let d = row[v] - best[i];
             if d > 0.0 {
                 acc += d as f64;
             }
-        }
+        });
         acc
     }
 
     fn add(&mut self, v: usize) {
+        let best = &mut self.best;
         let mut acc = 0.0f64;
-        for i in 0..self.f.n {
-            let s = self.f.sim(i, v);
-            if s > self.best[i] {
-                acc += (s - self.best[i]) as f64;
-                self.best[i] = s;
+        self.f.with_rows(|i, row| {
+            let s = row[v];
+            if s > best[i] {
+                acc += (s - best[i]) as f64;
+                best[i] = s;
             }
-        }
+        });
         self.value += acc;
         self.set.push(v);
     }
@@ -478,6 +658,17 @@ mod tests {
         FacilityLocation::new(n, sim)
     }
 
+    fn feature_rows(n: usize, d: usize, seed: u64) -> FeatureMatrix {
+        let mut rng = Rng::new(seed);
+        let mut m = FeatureMatrix::zeros(n, d);
+        for i in 0..n {
+            for j in 0..d {
+                m.row_mut(i)[j] = rng.f32() - 0.3;
+            }
+        }
+        m
+    }
+
     #[test]
     fn properties() {
         let f = instance(15, 1);
@@ -487,18 +678,107 @@ mod tests {
     }
 
     #[test]
+    fn sparse_store_properties() {
+        // the truncated (asymmetric) store must still be monotone
+        // submodular — absent entries are 0.0, a valid similarity
+        let feats = feature_rows(18, 5, 13);
+        let f = FacilityLocation::from_features_sparse(&feats, 4);
+        assert!(f.is_sparse());
+        check_submodular(&f, true, 50, 150);
+        check_state_consistency(&f, 51, 100);
+        check_edge_ingredients(&f, 52, 80);
+        check_batched_gains(&f, 53, 40);
+    }
+
+    #[test]
     fn from_features_symmetric_unit_diag() {
         let mut rng = Rng::new(2);
         let feats = FeatureMatrix::from_rows(
             (0..8).map(|_| (0..5).map(|_| rng.f32()).collect()).collect(),
         );
         let f = FacilityLocation::from_features(&feats);
+        assert!(!f.is_sparse(), "below the crossover construction stays dense");
         for i in 0..8 {
             assert!((f.sim(i, i) - 1.0).abs() < 1e-6);
             for u in 0..8 {
                 assert_eq!(f.sim(i, u), f.sim(u, i));
                 assert!(f.sim(i, u) >= 0.0);
             }
+        }
+    }
+
+    #[test]
+    fn crossover_selects_the_store() {
+        let feats = feature_rows(24, 4, 3);
+        assert!(!FacilityLocation::from_features_with(&feats, 25, None, None).is_sparse());
+        let sparse = FacilityLocation::from_features_with(&feats, 0, None, None);
+        assert!(sparse.is_sparse());
+        assert_eq!(sparse.sparse_rows(), 24);
+        assert_eq!(FacilityLocation::from_features(&feats).sparse_rows(), 0);
+    }
+
+    #[test]
+    fn sparse_full_t_bitwise_matches_dense_on_every_kernel() {
+        let feats = feature_rows(70, 6, 11);
+        let dense = FacilityLocation::from_features_dense(&feats);
+        let sparse = FacilityLocation::from_features_sparse(&feats, 69);
+        // point lookups
+        for i in 0..70 {
+            for u in 0..70 {
+                assert_eq!(sparse.sim(i, u).to_bits(), dense.sim(i, u).to_bits());
+            }
+        }
+        // singletons + complements
+        for v in 0..70 {
+            assert_eq!(sparse.singleton(v).to_bits(), dense.singleton(v).to_bits());
+        }
+        let (a, b) = (sparse.singleton_complements(), dense.singleton_complements());
+        for (x, y) in a.iter().zip(&b) {
+            assert_eq!(x.to_bits(), y.to_bits());
+        }
+        // blocked divergences + pair gains
+        let probes = vec![3usize, 69, 41];
+        let probe_sing: Vec<f64> = probes.iter().map(|&u| b[u]).collect();
+        let items: Vec<usize> = (0..70).filter(|v| !probes.contains(v)).collect();
+        assert_eq!(
+            sparse.divergences_block(&probes, &probe_sing, &items),
+            dense.divergences_block(&probes, &probe_sing, &items)
+        );
+        let (pg_s, pg_d) =
+            (sparse.pair_gains_block(&probes, &items), dense.pair_gains_block(&probes, &items));
+        for (x, y) in pg_s.iter().zip(&pg_d) {
+            assert_eq!(x.to_bits(), y.to_bits());
+        }
+        // stateful gains along a chain
+        let (mut ss, mut ds) = (sparse.state(), dense.state());
+        let cands: Vec<usize> = (0..70).collect();
+        for &v in &[5usize, 44, 69] {
+            let mut gs = vec![f64::NAN; cands.len()];
+            let mut gd = vec![f64::NAN; cands.len()];
+            ss.gains_into(&cands, &mut gs);
+            ds.gains_into(&cands, &mut gd);
+            for (x, y) in gs.iter().zip(&gd) {
+                assert_eq!(x.to_bits(), y.to_bits());
+            }
+            ss.add(v);
+            ds.add(v);
+            assert_eq!(ss.value().to_bits(), ds.value().to_bits());
+        }
+        // whole-set eval
+        let full: Vec<usize> = (0..70).collect();
+        assert_eq!(sparse.eval(&full).to_bits(), dense.eval(&full).to_bits());
+    }
+
+    #[test]
+    fn sparse_truncated_underapproximates_dense() {
+        let feats = feature_rows(40, 5, 17);
+        let dense = FacilityLocation::from_features_dense(&feats);
+        let sparse = FacilityLocation::from_features_sparse(&feats, 5);
+        let mut rng = Rng::new(18);
+        for _ in 0..40 {
+            let s: Vec<usize> = (0..40).filter(|_| rng.bool(0.2)).collect();
+            let (fs, fd) = (sparse.eval(&s), dense.eval(&s));
+            assert!(fs <= fd + 1e-9, "sparse eval {fs} must lower-bound dense {fd}");
         }
     }
 
@@ -531,6 +811,30 @@ mod tests {
     }
 
     #[test]
+    fn sparse_append_and_retain_ride_the_store() {
+        let feats = feature_rows(26, 5, 19);
+        let head = feats.gather(&(0..20).collect::<Vec<_>>());
+        let mut grown = FacilityLocation::from_features_sparse(&head, 25);
+        let mut partial = head.clone();
+        for i in 20..26 {
+            partial.push_row(feats.row(i));
+            assert!(grown.append_row_from_features(&partial).is_some());
+        }
+        assert_eq!(grown.n(), 26);
+        let fresh = FacilityLocation::from_features_sparse(&feats, 25);
+        let full: Vec<usize> = (0..26).collect();
+        assert_eq!(grown.eval(&full).to_bits(), fresh.eval(&full).to_bits());
+        let keep: Vec<usize> = (0..26).filter(|i| i % 5 != 3).collect();
+        assert!(grown.retain_elements(&keep));
+        assert_eq!(grown.n(), keep.len());
+        // dense growth declines the fast path
+        let mut dense = FacilityLocation::from_features_dense(&head);
+        let mut with_new = head.clone();
+        with_new.push_row(feats.row(20));
+        assert!(dense.append_row_from_features(&with_new).is_none());
+    }
+
+    #[test]
     fn blocked_pair_gains_bitwise_match_scalar() {
         // 150 items spans multiple ITEM_BLOCK chunks incl. a ragged tail
         let f = instance(150, 4);
@@ -558,6 +862,27 @@ mod tests {
         let got = f.divergences_block(&probes, &probe_sing, &items);
         let want = scalar_reference_divergences(&f, &probes, &probe_sing, &items);
         assert_eq!(got, want, "fused kernel must equal the scalar divergence path bit-for-bit");
+    }
+
+    #[test]
+    fn sparse_blocked_kernels_bitwise_match_scalar_paths() {
+        // same contracts as the dense blocked-kernel tests, on a truncated
+        // sparse store (the kernels share one row stream, but pin it)
+        let feats = feature_rows(150, 6, 21);
+        let f = FacilityLocation::from_features_sparse(&feats, 9);
+        let sing = f.singleton_complements();
+        let probes = vec![3usize, 149, 77, 12];
+        let probe_sing: Vec<f64> = probes.iter().map(|&u| sing[u]).collect();
+        let items: Vec<usize> = (0..150).filter(|v| !probes.contains(v)).collect();
+        let got = f.divergences_block(&probes, &probe_sing, &items);
+        let want = scalar_reference_divergences(&f, &probes, &probe_sing, &items);
+        assert_eq!(got, want);
+        let pg = f.pair_gains_block(&probes, &items);
+        for (vi, &v) in items.iter().enumerate() {
+            for (ui, &u) in probes.iter().enumerate() {
+                assert_eq!(pg[vi * probes.len() + ui], f.pair_gain(u, v));
+            }
+        }
     }
 
     #[test]
@@ -606,9 +931,14 @@ mod tests {
     #[test]
     fn rowsharded_singleton_precompute_bitwise_matches_serial() {
         use crate::util::pool::ThreadPool;
-        // sizes chosen to exercise ragged shard tails and shards > rows
-        for (n, seed) in [(97usize, 7u64), (150, 8), (16, 9)] {
-            let f = instance(n, seed);
+        // sizes chosen to exercise ragged shard tails and shards > rows;
+        // the sparse store must ride the same sharded scatter
+        let sparse_inst =
+            |n: usize, seed: u64| FacilityLocation::from_features_sparse(&feature_rows(n, 5, seed), 7);
+        for (dense_store, n, seed) in
+            [(true, 97usize, 7u64), (true, 150, 8), (true, 16, 9), (false, 97, 7), (false, 150, 8)]
+        {
+            let f = if dense_store { instance(n, seed) } else { sparse_inst(n, seed) };
             let want = f.singleton_complements();
             let pool = ThreadPool::new(3, 16);
             for shards in [1usize, 2, 7, 64] {

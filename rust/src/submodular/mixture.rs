@@ -102,6 +102,12 @@ impl SubmodularFn for Mixture {
         }
     }
 
+    /// Sum of the components' sparse residency — a mixture wrapping a
+    /// sparse facility-location term meters it through unchanged.
+    fn sparse_rows(&self) -> usize {
+        self.parts.iter().map(|(_, p)| p.sparse_rows()).sum()
+    }
+
     /// A mixture can compact exactly when every component can — partial
     /// compaction would desynchronize the parts' ground sets.
     fn supports_retain(&self) -> bool {

@@ -41,15 +41,17 @@ mod feature_based;
 mod graph_cut;
 mod mixture;
 mod modular;
+mod sparse_sim;
 mod sparsification_objective;
 
 pub use batched::BatchedDivergence;
 pub use coverage::{SaturatedCoverage, SetCover};
-pub use facility_location::FacilityLocation;
+pub use facility_location::{FacilityLocation, DENSE_CROSSOVER};
 pub use feature_based::{Concave, FeatureBased};
 pub use graph_cut::GraphCut;
 pub use mixture::Mixture;
 pub use modular::Modular;
+pub use sparse_sim::SparseSimStore;
 pub use sparsification_objective::SparsificationObjective;
 
 use crate::util::pool::ThreadPool;
@@ -70,11 +72,21 @@ pub enum ObjectiveSpec {
     /// fresh construction) and supports sieve admission filtering.
     Features(Concave),
     /// Facility location over clamped-cosine similarities of the rows —
-    /// video-style representativeness; the similarity matrix is built from
-    /// the rows (`O(n²·d)`), so streaming sessions rebuild it per window
-    /// operation. Admission filtering is unavailable (its gains depend on
-    /// the whole ground set).
+    /// video-style representativeness. Construction auto-selects the
+    /// similarity store: a dense matrix below
+    /// [`DENSE_CROSSOVER`](crate::submodular::DENSE_CROSSOVER), sparse
+    /// top-`t` neighbor lists (`O(n·t)` memory, row-border streaming
+    /// appends) at or above it. Admission filtering is unavailable (its
+    /// gains depend on the whole ground set).
     FacilityLocation,
+    /// Facility location with the store choice pinned: dense below
+    /// `crossover` rows, sparse with `t` neighbors per row otherwise
+    /// (`t == 0` means the auto budget
+    /// [`FacilityLocation::auto_neighbors`]). `crossover == 0` forces the
+    /// sparse store at any size; `t: 0` with `crossover` equal to
+    /// [`DENSE_CROSSOVER`](crate::submodular::DENSE_CROSSOVER) reproduces
+    /// the plain `FacilityLocation` default.
+    FacilityLocationSparse { t: u32, crossover: u32 },
 }
 
 impl ObjectiveSpec {
@@ -92,6 +104,28 @@ impl ObjectiveSpec {
             ObjectiveSpec::Features(g) => std::sync::Arc::new(FeatureBased::new(rows, g)),
             ObjectiveSpec::FacilityLocation => {
                 std::sync::Arc::new(FacilityLocation::from_features(&rows))
+            }
+            ObjectiveSpec::FacilityLocationSparse { t, crossover } => {
+                let t = if t == 0 { None } else { Some(t as usize) };
+                std::sync::Arc::new(FacilityLocation::from_features_with(
+                    &rows,
+                    crossover as usize,
+                    t,
+                    None,
+                ))
+            }
+        }
+    }
+
+    /// The facility-location store parameters `(crossover, explicit t)`
+    /// this spec pins, or `None` for non-FL objectives — the single place
+    /// streaming sessions and snapshot cores read the build config from.
+    pub fn facility_store_params(self) -> Option<(usize, Option<usize>)> {
+        match self {
+            ObjectiveSpec::Features(_) => None,
+            ObjectiveSpec::FacilityLocation => Some((DENSE_CROSSOVER, None)),
+            ObjectiveSpec::FacilityLocationSparse { t, crossover } => {
+                Some((crossover as usize, if t == 0 { None } else { Some(t as usize) }))
             }
         }
     }
@@ -186,6 +220,15 @@ pub trait SubmodularFn: Send + Sync {
         _shards: usize,
     ) -> Option<Vec<f64>> {
         None
+    }
+
+    /// Ground elements backed by sparse (top-`t` neighbor) storage —
+    /// introspection the backends meter into the coordinator's
+    /// `sparse_rows` counter. `0` (the default) means dense or
+    /// storage-free; [`FacilityLocation`] reports `n` when its sparse
+    /// store is active, and mixtures sum their components.
+    fn sparse_rows(&self) -> usize {
+        0
     }
 
     /// Whether [`retain_elements`] is implemented — the streaming

@@ -1,0 +1,597 @@
+//! **Sparse similarity store** — CSR-style per-row top-`t` neighbor lists
+//! backing [`FacilityLocation`](super::FacilityLocation) at scale.
+//!
+//! Lindgren et al., *Leveraging Sparsity for Efficient Submodular Data
+//! Summarization* (PAPERS.md), observe that facility location only needs
+//! each ground element's strongest few neighbors to preserve greedy
+//! quality. This store keeps, per row `i`, at most `t` non-diagonal
+//! entries `(u, sim(i, u))` — the exact clamped-cosine top-`t` — plus the
+//! pinned diagonal `(i, 1.0)`. Every absent entry reads as `0.0`, which is
+//! a *lower bound* on the true (non-negative) similarity, so the induced
+//! objective stays monotone submodular and under-approximates the dense
+//! one; at `t = n − 1` no entry is absent and the store reproduces the
+//! dense matrix bit-for-bit.
+//!
+//! Layout: fixed-capacity row slots (`cap = t + 1` entries each) in two
+//! flat arrays, columns ascending within a row. The slotted layout is what
+//! makes the two mutation paths in-place:
+//!
+//! * **row-border append** ([`append_row`](SparseSimStore::append_row)):
+//!   a new element scans the live rows once (`O(n·d)`), simultaneously
+//!   selecting its own top-`t` and candidate-updating each existing row's
+//!   list (the new column index is the largest, so an accepted candidate
+//!   lands at the row's end — no interior shift);
+//! * **retain compaction** ([`retain`](SparseSimStore::retain)): an
+//!   `IdRemap`-style old→new column rewrite walks surviving rows forward,
+//!   dropping entries whose column was evicted.
+//!
+//! Selection uses the total order *(value descending, column ascending)*,
+//! so the top-`t` set of any candidate stream is unique — which is exactly
+//! why incremental appends land on the same lists as a fresh batch build
+//! (pinned by `rust/tests/sparse_fl_equivalence.rs`).
+
+use crate::util::pool::ThreadPool;
+use crate::util::vecmath::{cosine, FeatureMatrix};
+
+/// Sentinel for "column evicted" in the retain rewrite map.
+const GONE: u32 = u32::MAX;
+
+/// Per-row top-`t` neighbor lists over clamped-cosine similarities, with a
+/// pinned diagonal. See the module docs for the layout and mutation model.
+#[derive(Clone, Debug)]
+pub struct SparseSimStore {
+    n: usize,
+    /// max non-diagonal neighbors per row (the `t` of "top-t")
+    t: usize,
+    /// slot width per row: `t` neighbors + the pinned diagonal
+    cap: usize,
+    /// live entries per row (`len[i] <= cap`)
+    len: Vec<u32>,
+    /// column indices, ascending within row slot `[i*cap, i*cap + len[i])`
+    cols: Vec<u32>,
+    /// values aligned to `cols`
+    vals: Vec<f32>,
+    /// per-column sums `Σ_i sim(i, v)` (ascending-`i` f64 fold — the exact
+    /// add sequence of the dense `singleton` loop), refreshed after every
+    /// mutation batch
+    col_sums: Vec<f64>,
+}
+
+/// `(new, old)` beats `(old_v, old_c)` under the selection total order:
+/// value descending, column ascending as the tiebreak.
+#[inline]
+fn beats(av: f32, ac: u32, bv: f32, bc: u32) -> bool {
+    av > bv || (av == bv && ac < bc)
+}
+
+/// Candidate-stream top-`t` selection into `sel` (unsorted), maintaining
+/// exactly the top-`t` of everything pushed so far under [`beats`].
+#[inline]
+fn topt_push(sel: &mut Vec<(u32, f32)>, t: usize, c: u32, v: f32) -> bool {
+    if sel.len() < t {
+        sel.push((c, v));
+        return true;
+    }
+    if t == 0 {
+        return false;
+    }
+    // find the worst live entry (the one every other entry beats)
+    let mut worst = 0usize;
+    for (k, &(kc, kv)) in sel.iter().enumerate().skip(1) {
+        let (wc, wv) = (sel[worst].0, sel[worst].1);
+        if beats(wv, wc, kv, kc) {
+            worst = k;
+        }
+    }
+    let (wc, wv) = sel[worst];
+    if beats(v, c, wv, wc) {
+        sel[worst] = (c, v);
+        return true;
+    }
+    false
+}
+
+impl SparseSimStore {
+    /// Exact top-`t` build over clamped-cosine similarities of `feats`,
+    /// serial. Rows with fewer than `t` candidates simply hold them all;
+    /// the capacity stays `t` so the store can grow past the initial `n`
+    /// by row-border appends.
+    pub fn from_features(feats: &FeatureMatrix, t: usize) -> Self {
+        Self::build(feats, t, None)
+    }
+
+    /// Shard-parallel exact top-`t` build: rows are independent, so each
+    /// pool shard fills a disjoint range of them. Bit-identical to the
+    /// serial build (per-row work is untouched by the sharding).
+    pub fn from_features_pooled(
+        feats: &FeatureMatrix,
+        t: usize,
+        pool: &ThreadPool,
+        shards: usize,
+    ) -> Self {
+        Self::build(feats, t, Some((pool, shards)))
+    }
+
+    fn build(feats: &FeatureMatrix, t: usize, pooled: Option<(&ThreadPool, usize)>) -> Self {
+        let n = feats.n();
+        let cap = t + 1;
+        let mut tmp: Vec<Vec<(u32, f32)>> = vec![Vec::new(); n];
+        let fill = |lo: usize, _hi: usize, chunk: &mut [Vec<(u32, f32)>]| {
+            for (slot, i) in chunk.iter_mut().zip(lo..) {
+                *slot = row_topt(feats, i, t, n);
+            }
+        };
+        match pooled {
+            Some((pool, shards)) if n > 0 => pool.parallel_ranges_into(&mut tmp[..], shards, fill),
+            _ => fill(0, n, &mut tmp[..]),
+        }
+        let mut store = Self {
+            n,
+            t,
+            cap,
+            len: vec![0; n],
+            cols: vec![0; n * cap],
+            vals: vec![0.0; n * cap],
+            col_sums: Vec::new(),
+        };
+        for (i, row) in tmp.into_iter().enumerate() {
+            debug_assert!(row.len() <= cap);
+            store.len[i] = row.len() as u32;
+            for (k, (c, v)) in row.into_iter().enumerate() {
+                store.cols[i * cap + k] = c;
+                store.vals[i * cap + k] = v;
+            }
+        }
+        store.recompute_col_sums();
+        store
+    }
+
+    pub fn n(&self) -> usize {
+        self.n
+    }
+
+    /// Max non-diagonal neighbors per row.
+    pub fn t(&self) -> usize {
+        self.t
+    }
+
+    /// Live `(cols, vals)` of row `i`, columns ascending.
+    #[inline]
+    pub fn row(&self, i: usize) -> (&[u32], &[f32]) {
+        let lo = i * self.cap;
+        let hi = lo + self.len[i] as usize;
+        (&self.cols[lo..hi], &self.vals[lo..hi])
+    }
+
+    /// Point lookup `sim(i, u)`; absent entries read `0.0`.
+    #[inline]
+    pub fn get(&self, i: usize, u: usize) -> f32 {
+        let (cols, vals) = self.row(i);
+        match cols.binary_search(&(u as u32)) {
+            Ok(k) => vals[k],
+            Err(_) => 0.0,
+        }
+    }
+
+    /// Column sum `Σ_i sim(i, v)` — the sparse `singleton` closed form.
+    #[inline]
+    pub fn col_sum(&self, v: usize) -> f64 {
+        self.col_sums[v]
+    }
+
+    /// Total live entries across all rows.
+    pub fn entries(&self) -> usize {
+        self.len.iter().map(|&l| l as usize).sum()
+    }
+
+    /// Resident heap bytes of the store (slots + lengths + column sums) —
+    /// the `O(n·t)` footprint the memory tests and benches assert against
+    /// the dense `O(n²)` matrix.
+    pub fn resident_bytes(&self) -> usize {
+        self.cols.capacity() * std::mem::size_of::<u32>()
+            + self.vals.capacity() * std::mem::size_of::<f32>()
+            + self.len.capacity() * std::mem::size_of::<u32>()
+            + self.col_sums.capacity() * std::mem::size_of::<f64>()
+    }
+
+    /// Top-2 scan of row `i` over (present entries ∪ implicit zeros),
+    /// replicating the dense strict-`>` promotion scan exactly: `arg1` is
+    /// the first ground index attaining the row maximum, `top2` the best
+    /// of the rest (duplicates of the max count). Implicit zeros beyond
+    /// the first two encountered cannot change the state (`top1 ≥ 0` after
+    /// the first, `top2 ≥ 0` after the second), so the scan is `O(len)`.
+    pub fn row_top2(&self, i: usize) -> (f32, usize, f32) {
+        let (cols, vals) = self.row(i);
+        let (mut top1, mut arg1, mut top2) = (f32::NEG_INFINITY, usize::MAX, f32::NEG_INFINITY);
+        let mut step = |u: usize, s: f32| {
+            if s > top1 {
+                top2 = top1;
+                top1 = s;
+                arg1 = u;
+            } else if s > top2 {
+                top2 = s;
+            }
+        };
+        let mut u = 0usize;
+        let mut zeros = 0u32;
+        for (k, &c) in cols.iter().enumerate() {
+            let c = c as usize;
+            while u < c && zeros < 2 {
+                step(u, 0.0);
+                zeros += 1;
+                u += 1;
+            }
+            step(c, vals[k]);
+            u = c + 1;
+        }
+        while u < self.n && zeros < 2 {
+            step(u, 0.0);
+            zeros += 1;
+            u += 1;
+        }
+        (top1, arg1, top2)
+    }
+
+    /// Row-border append: element `j = n` arrives with its feature row as
+    /// the last row of `feats`. One pass over the live rows computes
+    /// `s_i = max(0, cos(x_i, x_j))`, feeding both the new row's top-`t`
+    /// selection and a candidate update of each existing row (the new
+    /// column is the largest index, so accepted candidates append at the
+    /// row end). Returns the number of existing-row neighbor-list updates
+    /// (the `neighbor_updates` counter).
+    pub fn append_row(&mut self, feats: &FeatureMatrix) -> u64 {
+        let j = self.n;
+        assert_eq!(feats.n(), j + 1, "feats must contain exactly the live rows plus the new one");
+        let cap = self.cap;
+        self.cols.resize((j + 1) * cap, 0);
+        self.vals.resize((j + 1) * cap, 0.0);
+        self.len.push(0);
+        let xj = feats.row(j);
+        let mut sel: Vec<(u32, f32)> = Vec::with_capacity(self.t);
+        let mut updates = 0u64;
+        for i in 0..j {
+            let s = cosine(feats.row(i), xj).max(0.0);
+            if self.row_accept_border(i, j as u32, s) {
+                updates += 1;
+            }
+            topt_push(&mut sel, self.t, i as u32, s);
+        }
+        sel.sort_unstable_by_key(|&(c, _)| c);
+        let lo = j * cap;
+        for (k, &(c, v)) in sel.iter().enumerate() {
+            self.cols[lo + k] = c;
+            self.vals[lo + k] = v;
+        }
+        // pinned diagonal: j is the largest column, so it goes last
+        self.cols[lo + sel.len()] = j as u32;
+        self.vals[lo + sel.len()] = 1.0;
+        self.len[j] = (sel.len() + 1) as u32;
+        self.n = j + 1;
+        self.recompute_col_sums();
+        updates
+    }
+
+    /// Candidate-update row `i` with the border column `(c, v)`, where `c`
+    /// is strictly larger than every column in the row. Accepts when the
+    /// row has a free slot or when `(v, c)` beats the worst non-diagonal
+    /// entry under the selection order — the same rule [`topt_push`]
+    /// applies at build time, so append-grown rows match fresh builds.
+    fn row_accept_border(&mut self, i: usize, c: u32, v: f32) -> bool {
+        let cap = self.cap;
+        let lo = i * cap;
+        let l = self.len[i] as usize;
+        debug_assert!(l >= 1, "every row holds at least its diagonal");
+        debug_assert!(self.cols[lo + l - 1] < c, "border column must be the largest");
+        if l < cap {
+            self.cols[lo + l] = c;
+            self.vals[lo + l] = v;
+            self.len[i] = (l + 1) as u32;
+            return true;
+        }
+        // full: find the worst non-diagonal entry
+        let diag = i as u32;
+        let mut worst = usize::MAX;
+        for k in 0..l {
+            if self.cols[lo + k] == diag {
+                continue;
+            }
+            if worst == usize::MAX
+                || beats(
+                    self.vals[lo + worst],
+                    self.cols[lo + worst],
+                    self.vals[lo + k],
+                    self.cols[lo + k],
+                )
+            {
+                worst = k;
+            }
+        }
+        if worst == usize::MAX {
+            return false; // t == 0: nothing but the diagonal is ever stored
+        }
+        if !beats(v, c, self.vals[lo + worst], self.cols[lo + worst]) {
+            return false;
+        }
+        // drop the worst entry (shift the tail left one slot), append (c, v)
+        for k in worst..l - 1 {
+            self.cols[lo + k] = self.cols[lo + k + 1];
+            self.vals[lo + k] = self.vals[lo + k + 1];
+        }
+        self.cols[lo + l - 1] = c;
+        self.vals[lo + l - 1] = v;
+        true
+    }
+
+    /// In-place compaction to the surviving elements in `keep` (ascending,
+    /// distinct): survivor `keep[i]` becomes row and column `i`; entries
+    /// whose column was evicted are dropped (their slots are *not*
+    /// refilled — absent reads stay `0.0`, the documented lower bound).
+    /// Rows move forward only (`old ≥ new`), so the walk never reads an
+    /// overwritten slot.
+    pub fn retain(&mut self, keep: &[usize]) {
+        let n = self.n;
+        let m = keep.len();
+        let mut map = vec![GONE; n];
+        let mut prev = None;
+        for (new, &old) in keep.iter().enumerate() {
+            assert!(old < n, "retain index {old} out of range (n={n})");
+            assert!(prev.map_or(true, |p| p < old), "retain requires ascending indices");
+            prev = Some(old);
+            map[old] = new as u32;
+        }
+        let cap = self.cap;
+        for (ni, &oi) in keep.iter().enumerate() {
+            let (src, dst) = (oi * cap, ni * cap);
+            let l = self.len[oi] as usize;
+            let mut w = 0usize;
+            for k in 0..l {
+                let mapped = map[self.cols[src + k] as usize];
+                if mapped != GONE {
+                    // ascending columns stay ascending: the map is
+                    // monotone on survivors
+                    self.cols[dst + w] = mapped;
+                    self.vals[dst + w] = self.vals[src + k];
+                    w += 1;
+                }
+            }
+            self.len[ni] = w as u32;
+        }
+        self.len.truncate(m);
+        self.cols.truncate(m * cap);
+        self.vals.truncate(m * cap);
+        self.n = m;
+        self.recompute_col_sums();
+    }
+
+    /// Rebuild the per-column sums with the dense `singleton` fold order:
+    /// ascending row index, f64 accumulation (absent entries contribute an
+    /// exact `+0.0`, so skipping them preserves the bits).
+    fn recompute_col_sums(&mut self) {
+        self.col_sums.clear();
+        self.col_sums.resize(self.n, 0.0);
+        for i in 0..self.n {
+            let (cols, vals) = self.row(i);
+            for (&c, &v) in cols.iter().zip(vals) {
+                self.col_sums[c as usize] += v as f64;
+            }
+        }
+    }
+}
+
+/// Exact top-`t` of row `i` against rows `0..hi` of `feats` (minus the
+/// diagonal, which is appended pinned at `1.0`), sorted by column.
+fn row_topt(feats: &FeatureMatrix, i: usize, t: usize, hi: usize) -> Vec<(u32, f32)> {
+    let xi = feats.row(i);
+    let mut sel: Vec<(u32, f32)> = Vec::with_capacity(t.min(hi));
+    for u in 0..hi {
+        if u == i {
+            continue;
+        }
+        let s = cosine(xi, feats.row(u)).max(0.0);
+        topt_push(&mut sel, t, u as u32, s);
+    }
+    sel.push((i as u32, 1.0));
+    sel.sort_unstable_by_key(|&(c, _)| c);
+    sel
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    fn feats(n: usize, d: usize, seed: u64) -> FeatureMatrix {
+        let mut rng = Rng::new(seed);
+        let mut m = FeatureMatrix::zeros(n, d);
+        for i in 0..n {
+            for j in 0..d {
+                m.row_mut(i)[j] = rng.f32() - 0.3;
+            }
+        }
+        m
+    }
+
+    fn dense_sim(f: &FeatureMatrix) -> Vec<f32> {
+        let n = f.n();
+        let mut sim = vec![0.0f32; n * n];
+        for i in 0..n {
+            sim[i * n + i] = 1.0;
+            for u in 0..n {
+                if u != i {
+                    sim[i * n + u] = cosine(f.row(i), f.row(u)).max(0.0);
+                }
+            }
+        }
+        sim
+    }
+
+    #[test]
+    fn full_t_reproduces_the_dense_matrix_bitwise() {
+        let f = feats(40, 6, 1);
+        let dense = dense_sim(&f);
+        let s = SparseSimStore::from_features(&f, 39);
+        for i in 0..40 {
+            for u in 0..40 {
+                assert_eq!(
+                    s.get(i, u).to_bits(),
+                    dense[i * 40 + u].to_bits(),
+                    "entry ({i},{u})"
+                );
+            }
+        }
+        assert_eq!(s.entries(), 40 * 40);
+    }
+
+    #[test]
+    fn truncated_rows_keep_the_exact_topt_and_the_diagonal() {
+        let f = feats(30, 5, 2);
+        let dense = dense_sim(&f);
+        let t = 4;
+        let s = SparseSimStore::from_features(&f, t);
+        for i in 0..30 {
+            let (cols, vals) = s.row(i);
+            assert!(cols.len() <= t + 1);
+            assert!(cols.windows(2).all(|w| w[0] < w[1]), "columns ascending");
+            assert!(cols.contains(&(i as u32)), "diagonal pinned");
+            // every kept entry matches the dense value bit-for-bit
+            for (&c, &v) in cols.iter().zip(vals) {
+                assert_eq!(v.to_bits(), dense[i * 30 + c as usize].to_bits());
+            }
+            // nothing outside the list beats the worst kept non-diag entry
+            let kept: Vec<(u32, f32)> = cols
+                .iter()
+                .zip(vals)
+                .filter(|&(&c, _)| c != i as u32)
+                .map(|(&c, &v)| (c, v))
+                .collect();
+            if kept.len() == t {
+                let worst =
+                    kept.iter().copied().reduce(|a, b| if beats(a.1, a.0, b.1, b.0) { b } else { a });
+                let (wc, wv) = worst.unwrap();
+                for u in 0..30u32 {
+                    if u as usize == i || cols.contains(&u) {
+                        continue;
+                    }
+                    let dv = dense[i * 30 + u as usize];
+                    assert!(
+                        !beats(dv, u, wv, wc),
+                        "excluded ({u}, {dv}) beats kept worst ({wc}, {wv}) in row {i}"
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn pooled_build_matches_serial_build() {
+        let f = feats(61, 7, 3);
+        let serial = SparseSimStore::from_features(&f, 6);
+        let pool = ThreadPool::new(3, 16);
+        for shards in [1usize, 2, 7, 64] {
+            let pooled = SparseSimStore::from_features_pooled(&f, 6, &pool, shards);
+            assert_eq!(pooled.len, serial.len, "shards={shards}");
+            assert_eq!(pooled.cols, serial.cols);
+            assert_eq!(
+                pooled.vals.iter().map(|v| v.to_bits()).collect::<Vec<_>>(),
+                serial.vals.iter().map(|v| v.to_bits()).collect::<Vec<_>>()
+            );
+            for v in 0..61 {
+                assert_eq!(pooled.col_sum(v).to_bits(), serial.col_sum(v).to_bits());
+            }
+        }
+    }
+
+    #[test]
+    fn append_grown_store_matches_fresh_build() {
+        let f = feats(50, 6, 4);
+        for t in [3usize, 10, 49] {
+            let fresh = SparseSimStore::from_features(&f, t);
+            let mut grown = SparseSimStore::from_features(&f.gather(&[0]), t);
+            let mut partial = f.gather(&[0]);
+            for i in 1..50 {
+                partial.push_row(f.row(i));
+                grown.append_row(&partial);
+            }
+            assert_eq!(grown.len, fresh.len, "t={t}");
+            assert_eq!(grown.cols, fresh.cols, "t={t}");
+            assert_eq!(
+                grown.vals.iter().map(|v| v.to_bits()).collect::<Vec<_>>(),
+                fresh.vals.iter().map(|v| v.to_bits()).collect::<Vec<_>>(),
+                "t={t}"
+            );
+            for v in 0..50 {
+                assert_eq!(grown.col_sum(v).to_bits(), fresh.col_sum(v).to_bits(), "t={t}");
+            }
+        }
+    }
+
+    #[test]
+    fn retain_compacts_columns_and_preserves_survivor_values() {
+        let f = feats(35, 5, 5);
+        let mut s = SparseSimStore::from_features(&f, 8);
+        let before = s.clone();
+        let keep: Vec<usize> = (0..35).filter(|i| i % 3 != 1).collect();
+        s.retain(&keep);
+        assert_eq!(s.n(), keep.len());
+        for (ni, &oi) in keep.iter().enumerate() {
+            let (cols, vals) = s.row(ni);
+            assert!(cols.windows(2).all(|w| w[0] < w[1]));
+            assert!(cols.contains(&(ni as u32)), "diagonal survives");
+            for (&c, &v) in cols.iter().zip(vals) {
+                let old_c = keep[c as usize];
+                assert_eq!(v.to_bits(), before.get(oi, old_c).to_bits());
+            }
+            // exactly the surviving columns of the old row remain
+            let want: usize = {
+                let (ocols, _) = before.row(oi);
+                ocols.iter().filter(|&&c| keep.binary_search(&(c as usize)).is_ok()).count()
+            };
+            assert_eq!(cols.len(), want);
+        }
+    }
+
+    #[test]
+    fn row_top2_matches_a_dense_scan() {
+        let f = feats(25, 4, 6);
+        let dense = dense_sim(&f);
+        for t in [2usize, 6, 24] {
+            let s = SparseSimStore::from_features(&f, t);
+            for i in 0..25 {
+                // dense reference over the store's effective row
+                let row: Vec<f32> = (0..25).map(|u| s.get(i, u)).collect();
+                let (mut w1, mut wa, mut w2) = (f32::NEG_INFINITY, usize::MAX, f32::NEG_INFINITY);
+                for (u, &v) in row.iter().enumerate() {
+                    if v > w1 {
+                        w2 = w1;
+                        w1 = v;
+                        wa = u;
+                    } else if v > w2 {
+                        w2 = v;
+                    }
+                }
+                let (g1, ga, g2) = s.row_top2(i);
+                assert_eq!((g1.to_bits(), ga, g2.to_bits()), (w1.to_bits(), wa, w2.to_bits()));
+                if t == 24 {
+                    // full rows: also the true dense matrix scan
+                    let drow = &dense[i * 25..(i + 1) * 25];
+                    assert_eq!(g1.to_bits(), drow.iter().fold(f32::MIN, |a, &b| a.max(b)).to_bits());
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn col_sums_track_mutations() {
+        let f = feats(20, 4, 7);
+        let mut s = SparseSimStore::from_features(&f, 5);
+        let check = |s: &SparseSimStore| {
+            for v in 0..s.n() {
+                let want: f64 = (0..s.n()).map(|i| s.get(i, v) as f64).sum();
+                assert_eq!(s.col_sum(v).to_bits(), want.to_bits(), "column {v}");
+            }
+        };
+        check(&s);
+        s.retain(&(0..20).filter(|i| i % 4 != 2).collect::<Vec<_>>());
+        check(&s);
+    }
+}

@@ -167,6 +167,35 @@ fn deadline_mid_run_aborts_at_a_round_boundary() {
 }
 
 #[test]
+fn cancel_mid_run_lands_within_one_greedy_cohort() {
+    // the interrupt probe is now polled inside the maximizer's epoch loop
+    // too, so a cancel that arrives after the SS pass finishes no longer
+    // waits out the whole greedy run — its latency is bounded by one
+    // cohort dispatch. Cancels are cooperative and inherently racy at this
+    // level: a job that beats the cancel legitimately resolves Ok; the
+    // deterministic round-boundary abort is pinned at the engine level
+    // (`engine::tests::interrupt_probe_lands_at_a_round_boundary`).
+    let svc = SummarizationService::start(
+        ServiceConfig { workers: 1, queue_depth: 4, compute_threads: 2 },
+        None,
+    );
+    let t = svc.submit(slow_req(8));
+    std::thread::sleep(Duration::from_millis(2));
+    t.cancel();
+    match t.wait() {
+        Err(ServiceError::Cancelled) => {
+            assert_eq!(svc.metrics().snapshot().get("cancelled").unwrap().as_f64(), Some(1.0));
+        }
+        Ok(resp) => {
+            // completed before the cancel landed: nothing may be shed
+            assert_eq!(resp.n, 1400);
+            assert_eq!(svc.metrics().snapshot().get("cancelled").unwrap().as_f64(), Some(0.0));
+        }
+        other => panic!("expected Cancelled (or a completion that beat it), got {other:?}"),
+    }
+}
+
+#[test]
 fn appends_proceed_during_inflight_final_snapshot() {
     let d = 12usize;
     let k = 6usize;

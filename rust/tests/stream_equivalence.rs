@@ -35,6 +35,14 @@ fn batch_objective(kind: ObjectiveSpec, data: &FeatureMatrix) -> Box<dyn Batched
     match kind {
         ObjectiveSpec::Features(g) => Box::new(FeatureBased::new(data.clone(), g)),
         ObjectiveSpec::FacilityLocation => Box::new(FacilityLocation::from_features(data)),
+        ObjectiveSpec::FacilityLocationSparse { t, crossover } => {
+            Box::new(FacilityLocation::from_features_with(
+                data,
+                crossover as usize,
+                if t == 0 { None } else { Some(t as usize) },
+                None,
+            ))
+        }
     }
 }
 
@@ -60,12 +68,16 @@ fn full_window_filter_off_stream_is_bit_identical_to_batch() {
         ("features-sqrt", ObjectiveSpec::Features(Concave::Sqrt)),
         ("features-log1p", ObjectiveSpec::Features(Concave::Log1p)),
         ("facility", ObjectiveSpec::FacilityLocation),
+        // forced-sparse store: the stream builds it pooled, the batch
+        // oracle serially — pinning that the store build is deterministic
+        // either way and the truncated objective streams bit-identically
+        ("facility-sparse", ObjectiveSpec::FacilityLocationSparse { t: 20, crossover: 0 }),
     ];
     let d = 10;
     let k = 7;
     for (name, kind) in objectives {
         // facility location's n² sim matrix keeps its leg smaller
-        let n = if matches!(kind, ObjectiveSpec::FacilityLocation) { 220 } else { 380 };
+        let n = if matches!(kind, ObjectiveSpec::Features(_)) { 380 } else { 220 };
         for shards in [1usize, 7] {
             for seed in [0u64, 11, 42] {
                 let data = rows(n, d, seed.wrapping_add(1000));
