@@ -1,0 +1,196 @@
+//! Perf: the **durability tax** and the **recovery-time vs
+//! checkpoint-interval** trade-off of durable streaming sessions.
+//!
+//! Leg 1 streams the same clustered feed through a plain session and a
+//! durable one (file-backed WAL, fsync per record) and reports the append
+//! throughput of each — the per-record logging overhead in one number.
+//! Leg 2 "crashes" durable sessions run at several checkpoint intervals
+//! (drop without close) and times `recover_with_report` over the surviving
+//! files: a short interval pays checkpoint writes during ingest to keep
+//! the replayed WAL tail small; interval 0 (manual checkpoints only — here
+//! just the open checkpoint) replays the entire stream. Every recovered
+//! session's Final snapshot is asserted **bit-identical** to the
+//! uninterrupted plain session — the crash-exactness contract, measured
+//! at bench scale rather than test scale.
+//!
+//! Machine-readable `BENCH_durability.json` lands at the repository root.
+//! The WAL/checkpoint files live under a per-process temp directory that
+//! is removed before exit.
+//!
+//! Run: `cargo bench --bench perf_durability` (SS_FULL=1 for paper scale,
+//! SS_SMOKE=1 for the CI smoke).
+
+use std::sync::Arc;
+
+use submodular_ss::algorithms::SsParams;
+use submodular_ss::bench::{full_scale, Table};
+use submodular_ss::coordinator::Metrics;
+use submodular_ss::stream::{
+    DurabilityConfig, FileStore, ObjectiveSpec, SnapshotMode, StreamConfig, StreamSession,
+};
+use submodular_ss::submodular::Concave;
+use submodular_ss::util::json::Json;
+use submodular_ss::util::pool::ThreadPool;
+use submodular_ss::util::rng::Rng;
+use submodular_ss::util::stats::Timer;
+use submodular_ss::util::vecmath::FeatureMatrix;
+
+fn clustered_rows(n: usize, clusters: usize, d: usize, seed: u64) -> FeatureMatrix {
+    let mut rng = Rng::new(seed);
+    let centers: Vec<Vec<f32>> = (0..clusters)
+        .map(|_| (0..d).map(|_| if rng.bool(0.4) { rng.f32() * 3.0 } else { 0.0 }).collect())
+        .collect();
+    let mut m = FeatureMatrix::zeros(n, d);
+    for i in 0..n {
+        let c = &centers[rng.below(clusters)];
+        for j in 0..d {
+            m.row_mut(i)[j] = (c[j] + 0.05 * rng.f32()).max(0.0);
+        }
+    }
+    m
+}
+
+fn main() {
+    let smoke = std::env::var("SS_SMOKE").map(|v| v == "1").unwrap_or(false);
+    let (batches, per_batch) = if full_scale() {
+        (24usize, 2_000usize)
+    } else if smoke {
+        (6, 300)
+    } else {
+        (16, 1_000)
+    };
+    let d = 16;
+    let k = 8;
+    let n_total = batches * per_batch;
+    let seed = 11u64;
+    let params = SsParams::default().with_seed(seed);
+    let high_water = (2 * per_batch / 3).max(64);
+    let kind = ObjectiveSpec::Features(Concave::Sqrt);
+    let cfg = StreamConfig::new(k).with_ss(params).with_high_water(high_water);
+
+    let data = clustered_rows(n_total, 25, d, seed);
+    let pool = Arc::new(ThreadPool::default_for_host());
+    let chunk = |i: usize| &data.data()[i * per_batch * d..(i + 1) * per_batch * d];
+
+    // --- plain session: the no-durability baseline ---
+    let mut plain = StreamSession::new(
+        kind,
+        d,
+        cfg.clone(),
+        Arc::clone(&pool),
+        Arc::new(Metrics::new()),
+    )
+    .unwrap();
+    let t = Timer::new();
+    for i in 0..batches {
+        plain.append(chunk(i)).unwrap();
+    }
+    let plain_append_s = t.elapsed_s();
+    let oracle = plain.snapshot_summary(SnapshotMode::Final).unwrap();
+    plain.close();
+
+    let dir = std::env::temp_dir().join(format!("ss_perf_durability_{}", std::process::id()));
+    let mut table = Table::new(
+        "Durable streams: append tax (file WAL, fsync/record) and recovery vs checkpoint interval",
+        &[
+            "leg", "ckpt_every", "append_s", "elems/s", "overhead", "recover_s", "replayed",
+            "ckpt_seq",
+        ],
+    );
+    let plain_tput = n_total as f64 / plain_append_s;
+    table.row(vec![
+        "plain".into(),
+        "-".into(),
+        format!("{plain_append_s:.3}"),
+        format!("{plain_tput:.0}"),
+        "1.00x".into(),
+        "-".into(),
+        "-".into(),
+        "-".into(),
+    ]);
+
+    // --- durable legs: same feed, crash, recover ---
+    let intervals: &[u64] = &[0, 4, 16];
+    let mut legs = Vec::new();
+    for &interval in intervals {
+        let leg_dir = dir.join(format!("interval_{interval}"));
+        let dcfg = DurabilityConfig::default().with_checkpoint_interval(interval);
+        let mut sess = StreamSession::open_durable(
+            kind,
+            d,
+            cfg.clone(),
+            Arc::clone(&pool),
+            Arc::new(Metrics::new()),
+            Box::new(FileStore::open(&leg_dir).expect("open bench store")),
+            dcfg,
+        )
+        .unwrap();
+        let t = Timer::new();
+        for i in 0..batches {
+            sess.append(chunk(i)).unwrap();
+        }
+        let append_s = t.elapsed_s();
+        drop(sess); // crash: no close, only the files survive
+
+        let t = Timer::new();
+        let (mut rec, report) = StreamSession::recover_with_report(
+            Arc::clone(&pool),
+            Arc::new(Metrics::new()),
+            Box::new(FileStore::open(&leg_dir).expect("reopen bench store")),
+            dcfg,
+        )
+        .expect("recover bench session");
+        let recover_s = t.elapsed_s();
+
+        // crash-exactness at bench scale: the recovered session's exact
+        // snapshot must be bit-identical to the uninterrupted baseline
+        let snap = rec.snapshot_summary(SnapshotMode::Final).unwrap();
+        assert_eq!(snap.summary, oracle.summary, "interval {interval}: summary diverged");
+        assert_eq!(
+            snap.value.to_bits(),
+            oracle.value.to_bits(),
+            "interval {interval}: value bits diverged"
+        );
+        rec.close();
+
+        let overhead = append_s / plain_append_s;
+        table.row(vec![
+            "durable".into(),
+            interval.to_string(),
+            format!("{append_s:.3}"),
+            format!("{:.0}", n_total as f64 / append_s),
+            format!("{overhead:.2}x"),
+            format!("{recover_s:.4}"),
+            report.replayed_records.to_string(),
+            report.checkpoint_seq.to_string(),
+        ]);
+        legs.push(Json::obj(vec![
+            ("checkpoint_interval", Json::Num(interval as f64)),
+            ("append_s", Json::Num(append_s)),
+            ("append_elems_per_s", Json::Num(n_total as f64 / append_s)),
+            ("overhead_vs_plain", Json::Num(overhead)),
+            ("recover_s", Json::Num(recover_s)),
+            ("replayed_records", Json::Num(report.replayed_records as f64)),
+            ("checkpoint_seq", Json::Num(report.checkpoint_seq as f64)),
+            ("torn_tail_truncations", Json::Num(report.torn_tail_truncations as f64)),
+        ]));
+    }
+    table.print();
+    let _ = std::fs::remove_dir_all(&dir); // temp-dir hygiene
+
+    let report = Json::obj(vec![
+        ("bench", Json::Str("perf_durability".to_string())),
+        ("threads", Json::Num(pool.threads() as f64)),
+        ("smoke", Json::Num(if smoke { 1.0 } else { 0.0 })),
+        ("full_scale", Json::Num(if full_scale() { 1.0 } else { 0.0 })),
+        ("n_total", Json::Num(n_total as f64)),
+        ("batches", Json::Num(batches as f64)),
+        ("high_water", Json::Num(high_water as f64)),
+        ("plain_append_s", Json::Num(plain_append_s)),
+        ("plain_elems_per_s", Json::Num(plain_tput)),
+        ("durable_legs", Json::Arr(legs)),
+    ]);
+    let out = format!("{}/../BENCH_durability.json", env!("CARGO_MANIFEST_DIR"));
+    std::fs::write(&out, report.pretty()).expect("write BENCH_durability.json");
+    println!("(saved to {out})");
+}

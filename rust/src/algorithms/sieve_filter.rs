@@ -189,6 +189,37 @@ impl<S: SieveSet> SieveFilter<S> {
     pub fn max_singleton(&self) -> f64 {
         self.max_singleton
     }
+
+    /// Borrow the τ ladder and its per-threshold states — the durable
+    /// state a checkpoint must carry (thresholds and candidate sets are
+    /// stream history, not recomputable from retained storage alone).
+    pub fn sieves(&self) -> &[(f64, S)] {
+        &self.sieves
+    }
+
+    /// Rebuild a filter from checkpointed state. `resident` is a pure
+    /// function of the sieve states and is recomputed; `peak_resident`
+    /// is a high-water mark that must be restored verbatim (recovery
+    /// would otherwise under-report the paper's "memory of 50k" figure).
+    pub fn restore(
+        k: usize,
+        params: &SieveParams,
+        max_singleton: f64,
+        peak_resident: usize,
+        sieves: Vec<(f64, S)>,
+    ) -> Self {
+        assert!(params.eps > 0.0);
+        let resident = sieves.iter().map(|(_, s)| s.len()).sum();
+        Self {
+            k,
+            ratio: 1.0 + params.eps,
+            max_thresholds: params.max_thresholds,
+            max_singleton,
+            sieves,
+            resident,
+            peak_resident: peak_resident.max(resident),
+        }
+    }
 }
 
 #[cfg(test)]

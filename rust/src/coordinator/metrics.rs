@@ -54,6 +54,16 @@ pub struct Counters {
     /// row-border appends into a sparse similarity store — the incremental
     /// work that replaces the O(m²·d) per-window rebuild.
     pub neighbor_updates: AtomicU64,
+    /// Batches logged to durable sessions' write-ahead logs (one record
+    /// per append batch, flushed before the session mutates).
+    pub wal_appends: AtomicU64,
+    /// Checkpoints written (auto-interval and explicit alike).
+    pub checkpoints: AtomicU64,
+    /// Sessions rebuilt from a durable store (checkpoint + WAL replay).
+    pub recoveries: AtomicU64,
+    /// Torn WAL tails truncated away during recovery (at most one per
+    /// recovery — a crash tears at most the final record).
+    pub torn_tail_truncations: AtomicU64,
 }
 
 impl Counters {
@@ -61,7 +71,7 @@ impl Counters {
     /// list [`Metrics::snapshot`] and [`Self::reset`] both iterate, so a
     /// counter added here is automatically snapshotted *and* reset (the
     /// two can never drift apart).
-    fn named(&self) -> [(&'static str, &AtomicU64); 18] {
+    fn named(&self) -> [(&'static str, &AtomicU64); 22] {
         [
             ("requests", &self.requests),
             ("completed", &self.completed),
@@ -81,6 +91,10 @@ impl Counters {
             ("snapshot_jobs", &self.snapshot_jobs),
             ("sparse_rows", &self.sparse_rows),
             ("neighbor_updates", &self.neighbor_updates),
+            ("wal_appends", &self.wal_appends),
+            ("checkpoints", &self.checkpoints),
+            ("recoveries", &self.recoveries),
+            ("torn_tail_truncations", &self.torn_tail_truncations),
         ]
     }
 

@@ -39,7 +39,24 @@
 //! matrices, mixtures). PJRT acceleration applies to the feature-based
 //! core; other objectives compute on the CPU shard kernels transparently.
 //!
+//! **Durability.** [`open_stream_durable`] opens a session whose admitted
+//! batches and eviction decisions are logged to a write-ahead log on a
+//! caller-supplied [`DurableStore`](crate::stream::DurableStore), with
+//! periodic checkpoints; [`recover_stream`] rebuilds such a session —
+//! bit-identical to the uninterrupted one — from the store after a crash.
+//! Checkpoints are jobs too: [`submit_checkpoint`] runs one on the worker
+//! pool under a short session-lock hold. A durable session whose store
+//! fails (I/O error, checksum mismatch) **quarantines**: every later
+//! mutating call reports [`ServiceError::Rejected`] with the original
+//! failure, the in-memory state stays readable, and nothing panics. The
+//! same quarantine shape covers lock poisoning: if an operation panicked
+//! while holding a session's lock, later calls on that stream resolve
+//! `Rejected` instead of propagating the panic to unrelated callers.
+//!
 //! [`submit`]: SummarizationService::submit
+//! [`open_stream_durable`]: SummarizationService::open_stream_durable
+//! [`recover_stream`]: SummarizationService::recover_stream
+//! [`submit_checkpoint`]: SummarizationService::submit_checkpoint
 //! [`try_submit`]: SummarizationService::try_submit
 //! [`submit_snapshot`]: SummarizationService::submit_snapshot
 //! [`try_submit_snapshot`]: SummarizationService::try_submit_snapshot
@@ -56,8 +73,8 @@ use std::thread::JoinHandle;
 use crate::algorithms::{sparsify_with, GainRoute, Interrupt, MaximizerEngine, SsParams};
 use crate::runtime::TiledRuntime;
 use crate::stream::{
-    SnapshotCore, SnapshotMode, StreamAppend, StreamConfig, StreamSession, StreamStats,
-    StreamSummary,
+    CheckpointInfo, DurabilityConfig, DurableStore, RecoveryReport, SnapshotCore, SnapshotMode,
+    StreamAppend, StreamConfig, StreamSession, StreamStats, StreamSummary,
 };
 use crate::submodular::{
     BatchedDivergence, FacilityLocation, FeatureBased, Mixture, ObjectiveSpec,
@@ -197,11 +214,33 @@ enum Job {
         responder: Responder<SummarizeResponse>,
     },
     Snapshot {
-        core: SnapshotCore,
+        core: Arc<SnapshotCore>,
         mode: SnapshotMode,
         enqueued: Timer,
         responder: Responder<StreamSummary>,
     },
+    /// Write a durable session's checkpoint on the worker pool — the lock
+    /// hold is short (encode + one atomic store write), but the caller
+    /// keeps ticket semantics (deadline, cancel-at-dequeue) for free.
+    Checkpoint {
+        session: Arc<Mutex<StreamSession>>,
+        enqueued: Timer,
+        responder: Responder<CheckpointInfo>,
+    },
+}
+
+/// Take a session's lock, mapping poisoning — some earlier operation
+/// panicked while holding it — to a typed, non-retryable rejection
+/// instead of propagating the panic into an unrelated caller. The
+/// in-memory session behind a poisoned lock is suspect; quarantining the
+/// stream (every later call resolves `Rejected`) matches what a durable
+/// session does on a failed store.
+fn lock_session(
+    session: &Mutex<StreamSession>,
+) -> Result<std::sync::MutexGuard<'_, StreamSession>, ServiceError> {
+    session.lock().map_err(|_| ServiceError::Rejected {
+        reason: "stream quarantined: an operation panicked while holding its session lock".into(),
+    })
 }
 
 pub struct ServiceConfig {
@@ -308,7 +347,7 @@ impl SummarizationService {
                 Err(ServiceError::QueueFull(req))
             }
             Err(TrySendError::Disconnected(_)) => Err(ServiceError::ServiceDown),
-            Err(TrySendError::Full(Job::Snapshot { .. })) => {
+            Err(TrySendError::Full(_)) => {
                 unreachable!("a rejected summarize send returns the summarize job")
             }
         }
@@ -340,9 +379,79 @@ impl SummarizationService {
         let nonneg = objective.needs_nonneg();
         self.streams
             .lock()
-            .unwrap()
+            .unwrap_or_else(|e| e.into_inner())
             .insert(id, StreamEntry { d, nonneg, session: Arc::new(Mutex::new(session)) });
         Ok(id)
+    }
+
+    /// [`open_stream`](Self::open_stream) with durability: every admitted
+    /// batch is logged to `store`'s write-ahead log **before** the session
+    /// mutates, eviction decisions are logged after each re-sparsification,
+    /// and a checkpoint is written at open (and then every
+    /// [`DurabilityConfig::checkpoint_interval`] logged records). A session
+    /// crashed mid-stream is rebuilt — bit-identical — by
+    /// [`recover_stream`](Self::recover_stream) over the same store.
+    pub fn open_stream_durable(
+        &self,
+        objective: ObjectiveSpec,
+        d: usize,
+        cfg: StreamConfig,
+        store: Box<dyn DurableStore>,
+        dcfg: DurabilityConfig,
+    ) -> Result<StreamId, ServiceError> {
+        if self.down.load(Ordering::SeqCst) {
+            return Err(ServiceError::ServiceDown);
+        }
+        let session = StreamSession::open_durable(
+            objective,
+            d,
+            cfg,
+            Arc::clone(&self.pool),
+            Arc::new(Metrics::new()),
+            store,
+            dcfg,
+        )?;
+        self.metrics.add(&self.metrics.counters.checkpoints, 1); // the open checkpoint
+        let id = self.next_stream.fetch_add(1, Ordering::Relaxed);
+        let nonneg = objective.needs_nonneg();
+        self.streams
+            .lock()
+            .unwrap_or_else(|e| e.into_inner())
+            .insert(id, StreamEntry { d, nonneg, session: Arc::new(Mutex::new(session)) });
+        Ok(id)
+    }
+
+    /// Rebuild a crashed durable session from its store — checkpoint +
+    /// WAL-tail replay, bit-identical to the uninterrupted session (ids,
+    /// retained rows, sieve state, snapshot values) — and mount it under a
+    /// fresh stream id. Torn tails are truncated; a checksum-corrupt
+    /// record or checkpoint reports [`ServiceError::Rejected`] (never a
+    /// panic). Returns the id plus what recovery found and replayed.
+    pub fn recover_stream(
+        &self,
+        store: Box<dyn DurableStore>,
+        dcfg: DurabilityConfig,
+    ) -> Result<(StreamId, RecoveryReport), ServiceError> {
+        if self.down.load(Ordering::SeqCst) {
+            return Err(ServiceError::ServiceDown);
+        }
+        let (session, report) = StreamSession::recover_with_report(
+            Arc::clone(&self.pool),
+            Arc::new(Metrics::new()),
+            store,
+            dcfg,
+        )?;
+        self.metrics.add(&self.metrics.counters.recoveries, 1);
+        self.metrics
+            .add(&self.metrics.counters.torn_tail_truncations, report.torn_tail_truncations);
+        let d = session.d();
+        let nonneg = session.needs_nonneg();
+        let id = self.next_stream.fetch_add(1, Ordering::Relaxed);
+        self.streams
+            .lock()
+            .unwrap_or_else(|e| e.into_inner())
+            .insert(id, StreamEntry { d, nonneg, session: Arc::new(Mutex::new(session)) });
+        Ok((id, report))
     }
 
     /// Append a batch of rows to an open stream. Backpressure surfaces as
@@ -365,14 +474,23 @@ impl SummarizationService {
         // cannot poison the session mutex, and the O(n·d) scan stays out
         // of the critical section
         StreamSession::validate_batch(rows, entry.d, entry.nonneg);
-        let mut session = entry.session.lock().unwrap();
+        let mut session = lock_session(&entry.session)?;
         // mirror the session-scoped counters service-wide by delta, so
         // work done on error paths (a forced re-sparsification before a
         // QueueFull shed evicts elements and runs SS rounds) is accounted
         // identically in both scopes
+        let snap = |s: &StreamSession| {
+            let c = &s.metrics().counters;
+            (
+                c.wal_appends.load(Ordering::Relaxed),
+                c.checkpoints.load(Ordering::Relaxed),
+            )
+        };
         let before = session.stats();
+        let (wal_before, ckpt_before) = snap(&session);
         let result = session.append_prevalidated(rows);
         let after = session.stats();
+        let (wal_after, ckpt_after) = snap(&session);
         drop(session);
         self.metrics.add(&self.metrics.counters.stream_appends, after.appends - before.appends);
         self.metrics
@@ -381,6 +499,9 @@ impl SummarizationService {
             .add(&self.metrics.counters.resparsify_rounds, after.ss_rounds - before.ss_rounds);
         self.metrics
             .add(&self.metrics.counters.evicted_elements, after.evicted - before.evicted);
+        // durable-session traffic (WAL records, auto-interval checkpoints)
+        self.metrics.add(&self.metrics.counters.wal_appends, wal_after - wal_before);
+        self.metrics.add(&self.metrics.counters.checkpoints, ckpt_after - ckpt_before);
         result
     }
 
@@ -452,10 +573,39 @@ impl SummarizationService {
     /// Copy-on-snapshot: resolve the stream and clone its core under a
     /// short session-lock hold (O(live·d) — the facility-location O(m²·d)
     /// similarity build happens inside the job, not here).
-    fn clone_core(&self, id: StreamId) -> Result<SnapshotCore, ServiceError> {
+    fn clone_core(&self, id: StreamId) -> Result<Arc<SnapshotCore>, ServiceError> {
         let entry = self.stream(id).ok_or_else(|| self.gone::<()>(id))?;
-        let core = entry.session.lock().unwrap().snapshot_core()?;
+        let core = lock_session(&entry.session)?.snapshot_core()?;
         Ok(core)
+    }
+
+    /// Submit a checkpoint **job** for a durable stream with default
+    /// [`JobOptions`]: the worker encodes the session's full recoverable
+    /// state under a short lock hold, writes it atomically to the durable
+    /// store, and truncates the WAL it covers. The ticket resolves with
+    /// the covered WAL sequence and blob size. Streams opened without a
+    /// store resolve [`ServiceError::Rejected`].
+    pub fn submit_checkpoint(&self, id: StreamId) -> Result<Ticket<CheckpointInfo>, ServiceError> {
+        self.submit_checkpoint_with(id, JobOptions::default())
+    }
+
+    /// [`submit_checkpoint`](Self::submit_checkpoint) with per-job options
+    /// (deadline).
+    pub fn submit_checkpoint_with(
+        &self,
+        id: StreamId,
+        opts: JobOptions,
+    ) -> Result<Ticket<CheckpointInfo>, ServiceError> {
+        let entry = self.stream(id).ok_or_else(|| self.gone::<()>(id))?;
+        let (ticket, responder) = job_channel(opts);
+        let job = Job::Checkpoint {
+            session: Arc::clone(&entry.session),
+            enqueued: Timer::new(),
+            responder,
+        };
+        let _ = self.tx.send(job);
+        // send failure dropped the responder → ticket reads ServiceDown
+        Ok(ticket)
     }
 
     /// One-release compat shim for the pre-job API: submit a snapshot job
@@ -478,7 +628,7 @@ impl SummarizationService {
     /// divergence/gain evals of its windows, its stream counters).
     pub fn stream_metrics(&self, id: StreamId) -> Result<crate::util::json::Json, ServiceError> {
         let entry = self.stream(id).ok_or_else(|| self.gone::<()>(id))?;
-        let s = entry.session.lock().unwrap();
+        let s = lock_session(&entry.session)?;
         Ok(s.metrics().snapshot())
     }
 
@@ -494,14 +644,20 @@ impl SummarizationService {
     /// returns. Snapshot jobs already queued keep their cloned cores and
     /// complete normally — they describe the stream as of their submit.
     pub fn close(&self, id: StreamId) -> Result<StreamStats, ServiceError> {
-        let entry =
-            self.streams.lock().unwrap().remove(&id).ok_or_else(|| self.gone::<()>(id))?;
-        let stats = entry.session.lock().unwrap().close();
+        let entry = self
+            .streams
+            .lock()
+            .unwrap_or_else(|e| e.into_inner())
+            .remove(&id)
+            .ok_or_else(|| self.gone::<()>(id))?;
+        // a quarantined (lock-poisoned) session can't deliver stats; the
+        // entry is removed either way — its storage drops with the Arc
+        let stats = lock_session(&entry.session)?.close();
         Ok(stats)
     }
 
     fn stream(&self, id: StreamId) -> Option<StreamEntry> {
-        self.streams.lock().unwrap().get(&id).cloned()
+        self.streams.lock().unwrap_or_else(|e| e.into_inner()).get(&id).cloned()
     }
 
     /// Why an id failed to resolve: a shut-down service wins over (and
@@ -522,8 +678,12 @@ impl SummarizationService {
     /// idempotent.
     pub fn shutdown(&mut self) {
         self.down.store(true, Ordering::SeqCst);
-        for (_, entry) in self.streams.lock().unwrap().drain() {
-            entry.session.lock().unwrap().close();
+        for (_, entry) in self.streams.lock().unwrap_or_else(|e| e.into_inner()).drain() {
+            // a poisoned session is dropped as-is (close would re-panic the
+            // shutdown path for state some other panic already abandoned)
+            if let Ok(mut session) = entry.session.lock() {
+                session.close();
+            }
         }
         let (dead_tx, _) = sync_channel(1);
         let _ = std::mem::replace(&mut self.tx, dead_tx);
@@ -596,6 +756,27 @@ fn worker_main(
                     .map_err(ServiceError::from);
                 match &result {
                     Ok(_) => metrics.add(&metrics.counters.completed, 1),
+                    Err(e) => meter_error(metrics, e),
+                }
+                responder.resolve(result);
+            }
+            Job::Checkpoint { session, enqueued, responder } => {
+                metrics.queue_wait.record_secs(enqueued.elapsed_s());
+                if let Some(why) = responder.interrupt() {
+                    let e = ServiceError::from(why);
+                    meter_error(metrics, &e);
+                    responder.resolve(Err(e));
+                    continue;
+                }
+                let result = match lock_session(&session) {
+                    Ok(mut s) => s.checkpoint_now(),
+                    Err(e) => Err(e),
+                };
+                match &result {
+                    Ok(_) => {
+                        metrics.add(&metrics.counters.completed, 1);
+                        metrics.add(&metrics.counters.checkpoints, 1);
+                    }
                     Err(e) => meter_error(metrics, e),
                 }
                 responder.resolve(result);
@@ -995,5 +1176,99 @@ mod tests {
         // alias in an error position
         let e: SubmitError<()> = ServiceError::ServiceDown;
         assert!(!e.is_retryable());
+    }
+
+    #[test]
+    fn poisoned_session_lock_quarantines_the_stream() {
+        use crate::stream::StreamConfig;
+        use crate::submodular::Concave;
+        let svc = SummarizationService::start(ServiceConfig::default(), None);
+        let id = svc
+            .open_stream(
+                ObjectiveSpec::Features(Concave::Sqrt),
+                8,
+                StreamConfig::new(4).with_ss(SsParams::default().with_seed(13)),
+            )
+            .unwrap();
+        let rows = feats(40, 8, 51);
+        svc.append(id, rows.data()).unwrap();
+        // poison the session mutex: a thread panics while holding it
+        let session = Arc::clone(&svc.stream(id).unwrap().session);
+        let poisoner = std::thread::spawn(move || {
+            let _guard = session.lock().unwrap();
+            panic!("simulated panic while holding the session lock");
+        });
+        assert!(poisoner.join().is_err(), "the poisoning thread must have panicked");
+        // every path resolves typed — the panic never propagates to callers
+        match svc.append(id, rows.data()) {
+            Err(ServiceError::Rejected { reason }) => {
+                assert!(reason.contains("quarantined"), "{reason}");
+            }
+            other => panic!("poisoned stream must reject appends typed, got {other:?}"),
+        }
+        match svc.submit_snapshot(id, SnapshotMode::Final) {
+            Err(ServiceError::Rejected { .. }) => {}
+            other => panic!("poisoned stream must reject snapshot jobs typed, got {other:?}"),
+        }
+        match svc.stream_metrics(id) {
+            Err(ServiceError::Rejected { .. }) => {}
+            other => panic!("poisoned stream must reject metrics typed, got {other:?}"),
+        }
+        match svc.close(id) {
+            Err(ServiceError::Rejected { .. }) => {}
+            other => panic!("poisoned stream must reject close typed, got {other:?}"),
+        }
+        // close removed the entry regardless: the id is simply unknown now,
+        // and shutdown (via Drop) must not re-panic on what remains
+        match svc.append(id, rows.data()) {
+            Err(ServiceError::UnknownStream(_)) => {}
+            other => panic!("closed quarantined stream must be unknown, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn durable_stream_lifecycle_and_recovery_through_the_service() {
+        use crate::stream::{DurabilityConfig, MemStore, StreamConfig};
+        use crate::submodular::Concave;
+        let svc = SummarizationService::start(ServiceConfig::default(), None);
+        let store = MemStore::new();
+        let cfg = StreamConfig::new(6)
+            .with_ss(SsParams::default().with_seed(17))
+            .with_high_water(120);
+        let id = svc
+            .open_stream_durable(
+                ObjectiveSpec::Features(Concave::Sqrt),
+                12,
+                cfg,
+                Box::new(store.clone()),
+                DurabilityConfig::default(),
+            )
+            .unwrap();
+        let day = feats(200, 12, 61);
+        svc.append(id, day.data()).unwrap();
+        let info = svc.submit_checkpoint(id).unwrap().wait().unwrap();
+        assert!(info.bytes > 0);
+        assert!(info.seq >= 1, "one logged batch must advance the covered sequence");
+        let live = svc.submit_snapshot(id, SnapshotMode::Final).unwrap().wait().unwrap();
+
+        // "crash": recover from the surviving bytes while the original keeps
+        // running — the recovered session must match it bit-exactly
+        let (rid, report) =
+            svc.recover_stream(Box::new(store.clone()), DurabilityConfig::default()).unwrap();
+        assert_ne!(rid, id, "recovery mounts under a fresh id");
+        assert_eq!(report.checkpoint_seq, info.seq);
+        assert_eq!(report.replayed_records, 0, "explicit checkpoint left no WAL tail");
+        let rec = svc.submit_snapshot(rid, SnapshotMode::Final).unwrap().wait().unwrap();
+        assert_eq!(live.summary, rec.summary);
+        assert_eq!(live.value.to_bits(), rec.value.to_bits());
+        assert_eq!(live.live, rec.live);
+
+        let m = svc.metrics().snapshot();
+        assert!(m.get("wal_appends").unwrap().as_f64().unwrap() >= 1.0);
+        // the open checkpoint + the explicit job
+        assert!(m.get("checkpoints").unwrap().as_f64().unwrap() >= 2.0);
+        assert_eq!(m.get("recoveries").unwrap().as_f64(), Some(1.0));
+        svc.close(id).unwrap();
+        svc.close(rid).unwrap();
     }
 }

@@ -1,0 +1,562 @@
+//! Checkpoint payload codec: a flat, versioned, little-endian encoding of
+//! everything a [`StreamSession`](super::StreamSession) needs to come back
+//! bit-identical — configuration, counters, the id remap (bounded by its
+//! compacted `base`), the admission filter's τ ladder, and the live
+//! storage (feature rows plus, for sparse facility location, the top-`t`
+//! neighbor lists, which are stream *history* and not reproducible from
+//! the surviving rows).
+//!
+//! This module is pure data + bytes: capture (session → [`CheckpointState`])
+//! and restore ([`CheckpointState`] → session) live in `session.rs`, next
+//! to the private state they touch; the encoding below never sees a
+//! session. Integrity is the WAL layer's job — the payload travels inside
+//! a checksummed [`frame_checkpoint`](super::wal::frame_checkpoint) — so
+//! decode errors here mean structural corruption and surface as
+//! [`WalError::Corrupt`], which recovery maps to a typed quarantine.
+
+use crate::algorithms::sieve_filter::SieveParams;
+use crate::algorithms::{Sampling, SsParams};
+use crate::submodular::Concave;
+use crate::util::vecmath::FeatureMatrix;
+
+use super::wal::{put_f32, put_f64, put_u32, put_u64, put_u8, Cursor, WalError};
+
+/// Payload format version (bump on any layout change).
+const VERSION: u8 = 1;
+
+/// Exported sparse-similarity state (`SparseSimStore::export_parts`).
+pub(crate) struct SparseParts {
+    pub(crate) n: usize,
+    pub(crate) t: usize,
+    pub(crate) len: Vec<u32>,
+    pub(crate) cols: Vec<u32>,
+    pub(crate) vals: Vec<f32>,
+}
+
+/// Live-storage payload: enough to rebuild the session's `LiveStore`
+/// exactly (and its lazily-built objective bit-identically).
+pub(crate) enum StorePayload {
+    Features {
+        concave: Concave,
+        rows: FeatureMatrix,
+    },
+    Facility {
+        crossover: usize,
+        t: Option<usize>,
+        rows: FeatureMatrix,
+        /// The live sparse store, when one was built — post-eviction
+        /// neighbor lists must come from here, not a row rebuild.
+        sparse: Option<SparseParts>,
+    },
+}
+
+/// One sieve threshold's durable state.
+pub(crate) struct SievePayload {
+    pub(crate) tau: f64,
+    pub(crate) value: f64,
+    pub(crate) len: usize,
+    pub(crate) cov: Vec<f32>,
+}
+
+/// The admission filter's durable state.
+pub(crate) struct FilterPayload {
+    pub(crate) max_singleton: f64,
+    pub(crate) peak_resident: usize,
+    pub(crate) sieves: Vec<SievePayload>,
+}
+
+/// The complete durable image of a session at one WAL position: records
+/// with `seq < wal_seq` are covered; recovery replays only the tail.
+pub(crate) struct CheckpointState {
+    pub(crate) wal_seq: u64,
+    pub(crate) d: usize,
+    // --- StreamConfig ---
+    pub(crate) k: usize,
+    pub(crate) ss: SsParams,
+    pub(crate) high_water: usize,
+    pub(crate) max_live: usize,
+    pub(crate) admission: Option<SieveParams>,
+    pub(crate) shards: usize,
+    pub(crate) intermediate_eps: f64,
+    pub(crate) reserve_hint: usize,
+    // --- lifetime counters / flags ---
+    pub(crate) windows: u64,
+    pub(crate) ss_rounds: u64,
+    pub(crate) appends: u64,
+    pub(crate) admitted: u64,
+    pub(crate) evicted: u64,
+    pub(crate) closed: bool,
+    // --- live-set shape ---
+    pub(crate) retained_len: usize,
+    pub(crate) buffer_len: usize,
+    // --- id remap (`IdRemap::export_parts`) ---
+    pub(crate) base: usize,
+    pub(crate) ext_to_int: Vec<u32>,
+    pub(crate) int_to_ext: Vec<usize>,
+    // --- admission filter ---
+    pub(crate) filter: Option<FilterPayload>,
+    // --- storage ---
+    pub(crate) store: StorePayload,
+}
+
+fn put_usize(out: &mut Vec<u8>, v: usize) {
+    put_u64(out, v as u64);
+}
+
+fn put_bool(out: &mut Vec<u8>, v: bool) {
+    put_u8(out, u8::from(v));
+}
+
+fn put_matrix(out: &mut Vec<u8>, m: &FeatureMatrix) {
+    put_usize(out, m.n());
+    put_usize(out, m.d());
+    for &v in m.data() {
+        put_f32(out, v);
+    }
+}
+
+fn corrupt(msg: &str) -> WalError {
+    WalError::Corrupt(format!("checkpoint payload: {msg}"))
+}
+
+fn get_usize(c: &mut Cursor<'_>) -> Result<usize, WalError> {
+    let v = c.u64()?;
+    usize::try_from(v).map_err(|_| corrupt("length field overflows usize"))
+}
+
+fn get_bool(c: &mut Cursor<'_>) -> Result<bool, WalError> {
+    match c.u8()? {
+        0 => Ok(false),
+        1 => Ok(true),
+        other => Err(corrupt(&format!("bad bool byte {other}"))),
+    }
+}
+
+fn get_matrix(c: &mut Cursor<'_>) -> Result<FeatureMatrix, WalError> {
+    let n = get_usize(c)?;
+    let d = get_usize(c)?;
+    if d == 0 && n > 0 {
+        return Err(corrupt("matrix with rows but zero width"));
+    }
+    let mut m = FeatureMatrix::zeros(n, d);
+    for i in 0..n {
+        let row = m.row_mut(i);
+        for slot in row.iter_mut().take(d) {
+            *slot = c.f32()?;
+        }
+    }
+    Ok(m)
+}
+
+/// Serialize a checkpoint state (the bytes that go inside the checksummed
+/// checkpoint frame).
+pub(crate) fn encode(s: &CheckpointState) -> Vec<u8> {
+    let mut out = Vec::new();
+    put_u8(&mut out, VERSION);
+    put_u64(&mut out, s.wal_seq);
+    put_usize(&mut out, s.d);
+    // config
+    put_usize(&mut out, s.k);
+    put_usize(&mut out, s.ss.r);
+    put_f64(&mut out, s.ss.c);
+    put_u64(&mut out, s.ss.seed);
+    put_u8(
+        &mut out,
+        match s.ss.sampling {
+            Sampling::Uniform => 0,
+            Sampling::Importance => 1,
+        },
+    );
+    put_usize(&mut out, s.ss.min_keep);
+    put_usize(&mut out, s.high_water);
+    put_usize(&mut out, s.max_live);
+    match &s.admission {
+        None => put_u8(&mut out, 0),
+        Some(p) => {
+            put_u8(&mut out, 1);
+            put_f64(&mut out, p.eps);
+            put_usize(&mut out, p.max_thresholds);
+        }
+    }
+    put_usize(&mut out, s.shards);
+    put_f64(&mut out, s.intermediate_eps);
+    put_usize(&mut out, s.reserve_hint);
+    // counters / flags
+    put_u64(&mut out, s.windows);
+    put_u64(&mut out, s.ss_rounds);
+    put_u64(&mut out, s.appends);
+    put_u64(&mut out, s.admitted);
+    put_u64(&mut out, s.evicted);
+    put_bool(&mut out, s.closed);
+    put_usize(&mut out, s.retained_len);
+    put_usize(&mut out, s.buffer_len);
+    // remap
+    put_usize(&mut out, s.base);
+    put_usize(&mut out, s.ext_to_int.len());
+    for &e in &s.ext_to_int {
+        put_u32(&mut out, e);
+    }
+    put_usize(&mut out, s.int_to_ext.len());
+    for &e in &s.int_to_ext {
+        put_usize(&mut out, e);
+    }
+    // filter
+    match &s.filter {
+        None => put_u8(&mut out, 0),
+        Some(f) => {
+            put_u8(&mut out, 1);
+            put_f64(&mut out, f.max_singleton);
+            put_usize(&mut out, f.peak_resident);
+            put_usize(&mut out, f.sieves.len());
+            for sv in &f.sieves {
+                put_f64(&mut out, sv.tau);
+                put_f64(&mut out, sv.value);
+                put_usize(&mut out, sv.len);
+                put_usize(&mut out, sv.cov.len());
+                for &x in &sv.cov {
+                    put_f32(&mut out, x);
+                }
+            }
+        }
+    }
+    // store
+    match &s.store {
+        StorePayload::Features { concave, rows } => {
+            put_u8(&mut out, 1);
+            match concave {
+                Concave::Sqrt => put_u8(&mut out, 0),
+                Concave::Log1p => put_u8(&mut out, 1),
+                Concave::Pow(p) => {
+                    put_u8(&mut out, 2);
+                    put_u32(&mut out, u32::from(*p));
+                }
+            }
+            put_matrix(&mut out, rows);
+        }
+        StorePayload::Facility { crossover, t, rows, sparse } => {
+            put_u8(&mut out, 2);
+            put_usize(&mut out, *crossover);
+            match t {
+                None => put_u8(&mut out, 0),
+                Some(t) => {
+                    put_u8(&mut out, 1);
+                    put_usize(&mut out, *t);
+                }
+            }
+            put_matrix(&mut out, rows);
+            match sparse {
+                None => put_u8(&mut out, 0),
+                Some(p) => {
+                    put_u8(&mut out, 1);
+                    put_usize(&mut out, p.n);
+                    put_usize(&mut out, p.t);
+                    put_usize(&mut out, p.len.len());
+                    for &l in &p.len {
+                        put_u32(&mut out, l);
+                    }
+                    put_usize(&mut out, p.cols.len());
+                    for &c in &p.cols {
+                        put_u32(&mut out, c);
+                    }
+                    // vals share cols' length (validated on decode)
+                    for &v in &p.vals {
+                        put_f32(&mut out, v);
+                    }
+                }
+            }
+        }
+    }
+    out
+}
+
+/// Parse a verified checkpoint payload back into a [`CheckpointState`].
+/// Structural errors are `Corrupt`; deeper semantic validation (remap
+/// invariants, store consistency) happens when the session is rebuilt.
+pub(crate) fn decode(bytes: &[u8]) -> Result<CheckpointState, WalError> {
+    let mut c = Cursor::new(bytes);
+    let version = c.u8()?;
+    if version != VERSION {
+        return Err(corrupt(&format!("unsupported version {version}")));
+    }
+    let wal_seq = c.u64()?;
+    let d = get_usize(&mut c)?;
+    let k = get_usize(&mut c)?;
+    let ss = SsParams {
+        r: get_usize(&mut c)?,
+        c: c.f64()?,
+        seed: c.u64()?,
+        sampling: match c.u8()? {
+            0 => Sampling::Uniform,
+            1 => Sampling::Importance,
+            other => return Err(corrupt(&format!("bad sampling tag {other}"))),
+        },
+        min_keep: get_usize(&mut c)?,
+    };
+    let high_water = get_usize(&mut c)?;
+    let max_live = get_usize(&mut c)?;
+    let admission = match c.u8()? {
+        0 => None,
+        1 => Some(SieveParams {
+            eps: c.f64()?,
+            max_thresholds: get_usize(&mut c)?,
+        }),
+        other => return Err(corrupt(&format!("bad admission tag {other}"))),
+    };
+    let shards = get_usize(&mut c)?;
+    let intermediate_eps = c.f64()?;
+    let reserve_hint = get_usize(&mut c)?;
+    let windows = c.u64()?;
+    let ss_rounds = c.u64()?;
+    let appends = c.u64()?;
+    let admitted = c.u64()?;
+    let evicted = c.u64()?;
+    let closed = get_bool(&mut c)?;
+    let retained_len = get_usize(&mut c)?;
+    let buffer_len = get_usize(&mut c)?;
+    let base = get_usize(&mut c)?;
+    let fwd_len = get_usize(&mut c)?;
+    let mut ext_to_int = Vec::with_capacity(fwd_len.min(bytes.len()));
+    for _ in 0..fwd_len {
+        ext_to_int.push(c.u32()?);
+    }
+    let bwd_len = get_usize(&mut c)?;
+    let mut int_to_ext = Vec::with_capacity(bwd_len.min(bytes.len()));
+    for _ in 0..bwd_len {
+        int_to_ext.push(get_usize(&mut c)?);
+    }
+    let filter = match c.u8()? {
+        0 => None,
+        1 => {
+            let max_singleton = c.f64()?;
+            let peak_resident = get_usize(&mut c)?;
+            let n_sieves = get_usize(&mut c)?;
+            let mut sieves = Vec::with_capacity(n_sieves.min(bytes.len()));
+            for _ in 0..n_sieves {
+                let tau = c.f64()?;
+                let value = c.f64()?;
+                let len = get_usize(&mut c)?;
+                let cov_len = get_usize(&mut c)?;
+                let mut cov = Vec::with_capacity(cov_len.min(bytes.len()));
+                for _ in 0..cov_len {
+                    cov.push(c.f32()?);
+                }
+                sieves.push(SievePayload { tau, value, len, cov });
+            }
+            Some(FilterPayload { max_singleton, peak_resident, sieves })
+        }
+        other => return Err(corrupt(&format!("bad filter tag {other}"))),
+    };
+    let store = match c.u8()? {
+        1 => {
+            let concave = match c.u8()? {
+                0 => Concave::Sqrt,
+                1 => Concave::Log1p,
+                2 => {
+                    let p = c.u32()?;
+                    let p = u16::try_from(p).map_err(|_| corrupt("Pow exponent overflow"))?;
+                    Concave::Pow(p)
+                }
+                other => return Err(corrupt(&format!("bad concave tag {other}"))),
+            };
+            let rows = get_matrix(&mut c)?;
+            StorePayload::Features { concave, rows }
+        }
+        2 => {
+            let crossover = get_usize(&mut c)?;
+            let t = match c.u8()? {
+                0 => None,
+                1 => Some(get_usize(&mut c)?),
+                other => return Err(corrupt(&format!("bad t tag {other}"))),
+            };
+            let rows = get_matrix(&mut c)?;
+            let sparse = match c.u8()? {
+                0 => None,
+                1 => {
+                    let n = get_usize(&mut c)?;
+                    let t = get_usize(&mut c)?;
+                    let len_len = get_usize(&mut c)?;
+                    let mut len = Vec::with_capacity(len_len.min(bytes.len()));
+                    for _ in 0..len_len {
+                        len.push(c.u32()?);
+                    }
+                    let slots = get_usize(&mut c)?;
+                    let mut cols = Vec::with_capacity(slots.min(bytes.len()));
+                    for _ in 0..slots {
+                        cols.push(c.u32()?);
+                    }
+                    let mut vals = Vec::with_capacity(slots.min(bytes.len()));
+                    for _ in 0..slots {
+                        vals.push(c.f32()?);
+                    }
+                    Some(SparseParts { n, t, len, cols, vals })
+                }
+                other => return Err(corrupt(&format!("bad sparse tag {other}"))),
+            };
+            StorePayload::Facility { crossover, t, rows, sparse }
+        }
+        other => return Err(corrupt(&format!("bad store tag {other}"))),
+    };
+    c.done()?;
+    Ok(CheckpointState {
+        wal_seq,
+        d,
+        k,
+        ss,
+        high_water,
+        max_live,
+        admission,
+        shards,
+        intermediate_eps,
+        reserve_hint,
+        windows,
+        ss_rounds,
+        appends,
+        admitted,
+        evicted,
+        closed,
+        retained_len,
+        buffer_len,
+        base,
+        ext_to_int,
+        int_to_ext,
+        filter,
+        store,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sample_state() -> CheckpointState {
+        let mut rows = FeatureMatrix::zeros(0, 3);
+        rows.push_row(&[1.0, 0.5, 0.25]);
+        rows.push_row(&[0.0, 2.0, 0.125]);
+        CheckpointState {
+            wal_seq: 42,
+            d: 3,
+            k: 4,
+            ss: SsParams {
+                r: 8,
+                c: 8.0,
+                seed: 7,
+                sampling: Sampling::Importance,
+                min_keep: 2,
+            },
+            high_water: 100,
+            max_live: 0,
+            admission: Some(SieveParams { eps: 0.08, max_thresholds: 50 }),
+            shards: 3,
+            intermediate_eps: 0.2,
+            reserve_hint: 64,
+            windows: 5,
+            ss_rounds: 11,
+            appends: 200,
+            admitted: 150,
+            evicted: 80,
+            closed: false,
+            retained_len: 1,
+            buffer_len: 1,
+            base: 9,
+            ext_to_int: vec![0, u32::MAX, 1],
+            int_to_ext: vec![9, 11],
+            filter: Some(FilterPayload {
+                max_singleton: 1.5,
+                peak_resident: 12,
+                sieves: vec![SievePayload {
+                    tau: 2.25,
+                    value: 1.125,
+                    len: 2,
+                    cov: vec![0.5, 0.0, 1.5],
+                }],
+            }),
+            store: StorePayload::Features { concave: Concave::Pow(3), rows },
+        }
+    }
+
+    #[test]
+    fn round_trip_is_exact() {
+        let s = sample_state();
+        let bytes = encode(&s);
+        let r = decode(&bytes).unwrap();
+        assert_eq!(r.wal_seq, 42);
+        assert_eq!(r.d, 3);
+        assert_eq!(r.k, 4);
+        assert_eq!(r.ss.r, 8);
+        assert_eq!(r.ss.seed, 7);
+        assert!(matches!(r.ss.sampling, Sampling::Importance));
+        assert_eq!(r.ss.min_keep, 2);
+        assert_eq!(r.high_water, 100);
+        let p = r.admission.unwrap();
+        assert_eq!(p.eps.to_bits(), 0.08f64.to_bits());
+        assert_eq!(p.max_thresholds, 50);
+        assert_eq!(r.windows, 5);
+        assert_eq!(r.appends, 200);
+        assert_eq!(r.base, 9);
+        assert_eq!(r.ext_to_int, vec![0, u32::MAX, 1]);
+        assert_eq!(r.int_to_ext, vec![9, 11]);
+        let f = r.filter.unwrap();
+        assert_eq!(f.peak_resident, 12);
+        assert_eq!(f.sieves.len(), 1);
+        assert_eq!(f.sieves[0].cov, vec![0.5, 0.0, 1.5]);
+        match r.store {
+            StorePayload::Features { concave: Concave::Pow(3), rows } => {
+                assert_eq!(rows.n(), 2);
+                assert_eq!(rows.d(), 3);
+                assert_eq!(rows.row(1), &[0.0, 2.0, 0.125]);
+            }
+            _ => panic!("store payload mangled"),
+        }
+    }
+
+    #[test]
+    fn facility_store_round_trips() {
+        let mut rows = FeatureMatrix::zeros(0, 2);
+        rows.push_row(&[1.0, 0.0]);
+        rows.push_row(&[0.0, 1.0]);
+        let mut s = sample_state();
+        s.admission = None;
+        s.filter = None;
+        s.store = StorePayload::Facility {
+            crossover: 4096,
+            t: Some(16),
+            rows,
+            sparse: Some(SparseParts {
+                n: 2,
+                t: 1,
+                len: vec![2, 1],
+                cols: vec![0, 1, 1, 0],
+                vals: vec![1.0, 0.5, 1.0, 0.0],
+            }),
+        };
+        let r = decode(&encode(&s)).unwrap();
+        match r.store {
+            StorePayload::Facility { crossover: 4096, t: Some(16), rows, sparse: Some(p) } => {
+                assert_eq!(rows.n(), 2);
+                assert_eq!(p.n, 2);
+                assert_eq!(p.t, 1);
+                assert_eq!(p.len, vec![2, 1]);
+                assert_eq!(p.cols, vec![0, 1, 1, 0]);
+                assert_eq!(p.vals, vec![1.0, 0.5, 1.0, 0.0]);
+            }
+            _ => panic!("facility payload mangled"),
+        }
+    }
+
+    #[test]
+    fn truncated_and_trailing_bytes_are_corrupt() {
+        let bytes = encode(&sample_state());
+        for cut in [0, 1, 5, bytes.len() / 2, bytes.len() - 1] {
+            assert!(
+                matches!(decode(&bytes[..cut]), Err(WalError::Corrupt(_))),
+                "cut {cut} must be corrupt"
+            );
+        }
+        let mut padded = bytes.clone();
+        padded.push(0);
+        assert!(matches!(decode(&padded), Err(WalError::Corrupt(_))));
+        let mut wrong_version = bytes;
+        wrong_version[0] = 99;
+        assert!(matches!(decode(&wrong_version), Err(WalError::Corrupt(_))));
+    }
+}

@@ -29,17 +29,32 @@
 //! [`ServiceError`](crate::coordinator::ServiceError) — the front-end
 //! ([`crate::coordinator::service`]) exposes them as `open_stream` /
 //! `append` / `submit_snapshot` / `close` with per-session backpressure.
+//!
+//! Sessions can also be made **durable**: [`wal`] provides a hand-rolled
+//! length-prefixed, checksummed write-ahead log plus periodic checkpoints
+//! over a pluggable [`DurableStore`] (in-memory, on-disk, or the
+//! deterministic fault-injecting [`FaultStore`] used by the crash-exactness
+//! tests). A durable session logs every admitted batch *before* mutating
+//! itself and every eviction decision *after* the SS pass picks survivors;
+//! [`StreamSession::recover`] replays checkpoint + WAL tail into a session
+//! bit-identical to the uninterrupted one. Torn tails are truncated,
+//! checksum-corrupt records quarantine the session with a typed error —
+//! recovery never panics on a damaged store.
 
 pub mod remap;
 pub mod session;
+pub mod wal;
+
+pub(crate) mod checkpoint;
 
 pub use crate::algorithms::sieve_filter::{SieveFilter, SieveParams, SieveSet};
 pub use crate::submodular::ObjectiveSpec;
 pub use remap::IdRemap;
 pub use session::{
-    SnapshotCore, SnapshotMode, StreamAppend, StreamConfig, StreamSession, StreamStats,
-    StreamSummary,
+    CheckpointInfo, RecoveryReport, SnapshotCore, SnapshotMode, StreamAppend, StreamConfig,
+    StreamSession, StreamStats, StreamSummary,
 };
+pub use wal::{DurabilityConfig, DurableStore, FaultStore, FileStore, MemStore, WalError};
 
 /// Former name of the unified [`ObjectiveSpec`] — kept one release so
 /// existing call sites migrate mechanically (`StreamObjective::Features`

@@ -146,6 +146,57 @@ impl IdRemap {
     pub fn map_residue(&self) -> usize {
         self.ext_to_int.len()
     }
+
+    /// Borrow the complete durable state: `(base, ext_to_int, int_to_ext)`.
+    /// `base` bounds what must be persisted — the compacted dead prefix
+    /// needs no bytes at all, so a checkpoint costs O(map residue).
+    /// `u32::MAX` entries in the forward map mean "dead" (evicted or
+    /// never admitted).
+    pub fn export_parts(&self) -> (usize, &[u32], &[usize]) {
+        (self.base, &self.ext_to_int, &self.int_to_ext)
+    }
+
+    /// Rebuild from [`export_parts`](Self::export_parts) output,
+    /// revalidating the structural invariants (ascending `int_to_ext`,
+    /// forward/backward agreement) so corrupt checkpoint bytes surface
+    /// as a typed error instead of a later panic or silent misroute.
+    pub fn from_parts(
+        base: usize,
+        ext_to_int: Vec<u32>,
+        int_to_ext: Vec<usize>,
+    ) -> Result<Self, String> {
+        if int_to_ext.windows(2).any(|w| w[0] >= w[1]) {
+            return Err("id remap: int_to_ext not strictly ascending".into());
+        }
+        let mut live = 0usize;
+        for (off, &e) in ext_to_int.iter().enumerate() {
+            if e == GONE {
+                continue;
+            }
+            match int_to_ext.get(e as usize) {
+                Some(&ext) if ext == base + off => live += 1,
+                _ => {
+                    return Err(format!(
+                        "id remap: forward entry {} -> {} disagrees with backward map",
+                        base + off,
+                        e
+                    ))
+                }
+            }
+        }
+        if live != int_to_ext.len() {
+            return Err(format!(
+                "id remap: {} forward entries live but {} internal slots",
+                live,
+                int_to_ext.len()
+            ));
+        }
+        Ok(Self {
+            base,
+            ext_to_int,
+            int_to_ext,
+        })
+    }
 }
 
 #[cfg(test)]
@@ -268,6 +319,85 @@ mod tests {
         }
         assert_eq!(r.assigned(), 8 * per_window);
         assert!(r.base() > 6 * per_window, "most of the id space must be behind base");
+    }
+
+    #[test]
+    fn serialize_round_trip_across_window_compactions() {
+        // Durability property (ISSUE 7 satellite): at *every* point of a
+        // multi-window life — mid-batch, right after a compaction, after
+        // trailing rejects — export_parts → from_parts reproduces a map
+        // that answers identically through the live base()/map_residue()/
+        // internal()/external() accessors. Deterministic LCG "randomness"
+        // keeps the property reproducible.
+        let mut state = 0x1234_5678_9abc_def0u64;
+        let mut rng = move || {
+            state = state.wrapping_mul(6364136223846793005).wrapping_add(1442695040888963407);
+            (state >> 33) as usize
+        };
+        let mut r = IdRemap::new();
+        let mut compactions = 0usize;
+        let mut checkpoints = 0usize;
+        let mut check = |r: &IdRemap| {
+            let (base, fwd, bwd) = r.export_parts();
+            let restored = IdRemap::from_parts(base, fwd.to_vec(), bwd.to_vec())
+                .expect("live state must round-trip");
+            assert_eq!(restored.base(), r.base());
+            assert_eq!(restored.map_residue(), r.map_residue());
+            assert_eq!(restored.live(), r.live());
+            assert_eq!(restored.assigned(), r.assigned());
+            for ext in 0..r.assigned() + 2 {
+                assert_eq!(restored.internal(ext), r.internal(ext), "ext {ext}");
+            }
+            for int in 0..r.live() {
+                assert_eq!(restored.external(int), r.external(int), "int {int}");
+            }
+        };
+        for _window in 0..5 {
+            for _ in 0..40 {
+                if rng() % 4 == 0 {
+                    r.reject();
+                } else {
+                    r.admit();
+                }
+                if rng() % 9 == 0 {
+                    check(&r);
+                    checkpoints += 1;
+                }
+            }
+            // keep a random subset of the live internals (ascending)
+            let keep: Vec<usize> = (0..r.live()).filter(|_| rng() % 3 != 0).collect();
+            r.compact(&keep);
+            compactions += 1;
+            check(&r);
+            checkpoints += 1;
+        }
+        assert!(compactions >= 3, "the property must span >= 3 compactions");
+        assert!(checkpoints > compactions, "mid-window states must be covered too");
+        assert!(r.base() > 0, "prefix compaction must actually have kicked in");
+    }
+
+    #[test]
+    fn from_parts_rejects_inconsistent_state() {
+        let mut r = IdRemap::new();
+        for _ in 0..4 {
+            r.admit();
+        }
+        r.reject();
+        r.compact(&[1, 2, 3]);
+        let (base, fwd, bwd) = r.export_parts();
+        // descending backward map
+        let mut bad = bwd.to_vec();
+        bad.swap(0, 1);
+        assert!(IdRemap::from_parts(base, fwd.to_vec(), bad).is_err());
+        // forward entry pointing at the wrong internal slot
+        let mut bad = fwd.to_vec();
+        let live_off = bad.iter().position(|&e| e != GONE).unwrap();
+        bad[live_off] = bad[live_off].wrapping_add(1);
+        assert!(IdRemap::from_parts(base, bad, bwd.to_vec()).is_err());
+        // more internal slots than live forward entries
+        let mut bad = bwd.to_vec();
+        bad.push(base + fwd.len() + 10);
+        assert!(IdRemap::from_parts(base, fwd.to_vec(), bad).is_err());
     }
 
     #[test]

@@ -59,13 +59,29 @@
 //! push, filter gain/commit and metric bumps all run in preallocated or
 //! atomic storage — asserted by the counting allocator in
 //! `rust/tests/alloc_steady_state.rs`. The allocator is only touched by
-//! re-sparsifications, sieve re-grids and snapshots.
+//! re-sparsifications, sieve re-grids and snapshots (and, on durable
+//! sessions only, the write-ahead log's record framing).
+//!
+//! **Durability.** A session opened with
+//! [`open_durable`](StreamSession::open_durable) logs every batch to a
+//! write-ahead log *before* applying it and periodically writes a full
+//! checkpoint (the [`SnapshotCore`] clone extended with the remap, filter
+//! and counter state — see `stream::checkpoint`), so
+//! [`recover`](StreamSession::recover) after a crash rebuilds a session
+//! **bit-identical** to the uninterrupted one: replay re-runs the exact
+//! deterministic append path over the durable batch suffix. Torn WAL
+//! tails are truncated; corrupt records or checkpoints *quarantine* the
+//! session — every subsequent mutating call reports a typed
+//! [`ServiceError::Rejected`] instead of panicking or silently diverging
+//! from the durable state. Pinned by `rust/tests/stream_recovery.rs`,
+//! which kills the store at every write between two appends.
 //!
 //! [bit-identical results]: SnapshotCore::run
 //! [`sieve_streaming`]: crate::algorithms::sieve_streaming
 //! [`sparsify_candidates`]: crate::algorithms::sparsify_candidates
 //! [`MaximizerEngine`]: crate::algorithms::MaximizerEngine
 
+use std::collections::VecDeque;
 use std::sync::Arc;
 
 use crate::algorithms::{
@@ -74,7 +90,8 @@ use crate::algorithms::{
 use crate::coordinator::job::ServiceError;
 use crate::coordinator::{Compute, Metrics, ShardedBackend};
 use crate::submodular::{
-    BatchedDivergence, FacilityLocation, FeatureBased, ObjectiveSpec, SubmodularFn,
+    BatchedDivergence, FacilityLocation, FeatureBased, ObjectiveSpec, SparseSimStore,
+    SubmodularFn,
 };
 use crate::util::pool::ThreadPool;
 use crate::util::stats::Timer;
@@ -82,7 +99,9 @@ use crate::util::vecmath::{add_into, FeatureMatrix};
 
 use crate::algorithms::sieve_filter::{SieveFilter, SieveParams, SieveSet};
 
+use super::checkpoint::{CheckpointState, FilterPayload, SievePayload, SparseParts, StorePayload};
 use super::remap::IdRemap;
+use super::wal::{self, Durability, DurabilityConfig, DurableStore, RecordKind};
 
 /// Session configuration. Construct with [`StreamConfig::new`] and refine
 /// with the builder methods.
@@ -212,8 +231,10 @@ pub struct StreamSummary {
     pub ss_rounds: usize,
 }
 
-/// Lifetime accounting for a session.
-#[derive(Clone, Copy, Debug, Default)]
+/// Lifetime accounting for a session. `PartialEq`/`Eq` (all fields are
+/// integers) so recovery tests can compare whole-session accounting at
+/// once.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
 pub struct StreamStats {
     pub appends: u64,
     pub admitted: u64,
@@ -274,6 +295,35 @@ enum LiveStore {
     },
 }
 
+/// A compaction decision parsed back out of the WAL, queued for the
+/// batch replay that triggered it (recovery only; empty in live use).
+struct ReplayCompact {
+    rounds: usize,
+    kept: Vec<usize>,
+}
+
+/// Receipt of one completed checkpoint.
+#[derive(Clone, Copy, Debug)]
+pub struct CheckpointInfo {
+    /// WAL sequence the checkpoint covers up to (exclusive).
+    pub seq: u64,
+    /// Checkpoint blob size on the durable store, bytes.
+    pub bytes: usize,
+}
+
+/// What recovery found and did.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct RecoveryReport {
+    /// WAL sequence the checkpoint covered up to (exclusive).
+    pub checkpoint_seq: u64,
+    /// WAL records replayed on top of the checkpoint — bounded by the
+    /// configured checkpoint interval (plus in-flight compaction/close
+    /// records of the final batches).
+    pub replayed_records: u64,
+    /// 1 when a torn WAL tail was truncated away, else 0.
+    pub torn_tail_truncations: u64,
+}
+
 pub struct StreamSession {
     cfg: StreamConfig,
     d: usize,
@@ -299,6 +349,22 @@ pub struct StreamSession {
     admitted: u64,
     evicted: u64,
     closed: bool,
+    /// Mutation epoch: bumped whenever the live set changes (an admitted
+    /// element or a compaction). [`snapshot_core`](Self::snapshot_core)
+    /// reuses `core_cache` while the epoch is unchanged, so quiet streams
+    /// pay zero clones per snapshot/checkpoint.
+    epoch: u64,
+    core_cache: Option<(u64, Arc<SnapshotCore>)>,
+    /// Deep core clones actually performed (the no-clone counter the
+    /// epoch-cache test asserts on).
+    core_builds: u64,
+    /// WAL + checkpoint machinery; `None` on plain in-memory sessions
+    /// (the steady-state append hook is then a single branch).
+    durability: Option<Durability>,
+    /// Recovery replay only: compaction decisions logged by the batch
+    /// currently being replayed, consumed by [`resparsify`](Self::resparsify)
+    /// in place of re-running SS. Always empty during live operation.
+    pending_compacts: VecDeque<ReplayCompact>,
 }
 
 impl StreamSession {
@@ -326,6 +392,16 @@ impl StreamSession {
         }
         if !(cfg.intermediate_eps > 0.0 && cfg.intermediate_eps < 1.0) {
             return Err(reject("intermediate_eps must be in (0, 1)"));
+        }
+        // Shape checks that used to fail far downstream (a high-water
+        // window smaller than the budget starves every snapshot; a live
+        // cap below the window sheds every batch that tries to fill it) —
+        // reported at open time as typed rejections instead.
+        if cfg.high_water < cfg.k {
+            return Err(reject("high_water must be at least the budget k"));
+        }
+        if cfg.max_live > 0 && cfg.max_live < cfg.high_water {
+            return Err(reject("max_live must be at least high_water (or 0 = uncapped)"));
         }
         let filter = match (&cfg.admission, objective) {
             (None, _) => None,
@@ -370,12 +446,160 @@ impl StreamSession {
             admitted: 0,
             evicted: 0,
             closed: false,
+            epoch: 0,
+            core_cache: None,
+            core_builds: 0,
+            durability: None,
+            pending_compacts: VecDeque::new(),
         };
         let hint = session.cfg.reserve_hint;
         if hint > 0 {
             session.reserve(hint);
         }
         Ok(session)
+    }
+
+    /// A fresh **durable** session: [`new`](Self::new) plus a write-ahead
+    /// log on `store` and an immediate initial checkpoint (so recovery
+    /// always finds the session's configuration, even before the first
+    /// append). From here on every batch is logged before it is applied
+    /// and a checkpoint is written every `dcfg.checkpoint_interval`
+    /// records.
+    pub fn open_durable(
+        objective: ObjectiveSpec,
+        d: usize,
+        cfg: StreamConfig,
+        pool: Arc<ThreadPool>,
+        metrics: Arc<Metrics>,
+        store: Box<dyn DurableStore>,
+        dcfg: DurabilityConfig,
+    ) -> Result<Self, ServiceError> {
+        let mut session = Self::new(objective, d, cfg, pool, metrics)?;
+        session.durability = Some(Durability::new(store, dcfg));
+        session.checkpoint_now()?;
+        Ok(session)
+    }
+
+    /// Rebuild a session from its durable store: verify + decode the
+    /// checkpoint, truncate a torn WAL tail if the last crash left one,
+    /// then replay the WAL suffix through the ordinary (deterministic)
+    /// append path — the recovered session is **bit-identical** to the
+    /// uninterrupted one. Corrupt bytes surface as
+    /// [`ServiceError::Rejected`]; nothing here panics on bad input.
+    pub fn recover(
+        pool: Arc<ThreadPool>,
+        metrics: Arc<Metrics>,
+        store: Box<dyn DurableStore>,
+        dcfg: DurabilityConfig,
+    ) -> Result<Self, ServiceError> {
+        Self::recover_with_report(pool, metrics, store, dcfg).map(|(s, _)| s)
+    }
+
+    /// [`recover`](Self::recover), also returning what was found/replayed.
+    pub fn recover_with_report(
+        pool: Arc<ThreadPool>,
+        metrics: Arc<Metrics>,
+        mut store: Box<dyn DurableStore>,
+        dcfg: DurabilityConfig,
+    ) -> Result<(Self, RecoveryReport), ServiceError> {
+        let reject = |reason: String| ServiceError::Rejected { reason };
+        let loaded = wal::load(store.as_mut())
+            .map_err(|e| reject(format!("recovery failed: {e}")))?;
+        let payload = loaded
+            .checkpoint
+            .ok_or_else(|| reject("recovery failed: no checkpoint in the durable store".into()))?;
+        let state = super::checkpoint::decode(&payload)
+            .map_err(|e| reject(format!("recovery failed: {e}")))?;
+        let wal_seq = state.wal_seq;
+        let mut session = Self::from_checkpoint_state(state, pool, Arc::clone(&metrics))?;
+
+        // The tail: records the checkpoint does not cover. Records below
+        // `wal_seq` are leftovers of a crash between checkpoint-write and
+        // WAL-truncate — already folded into the checkpoint, skipped. The
+        // parser enforced in-file seq contiguity, so one boundary check
+        // rules out a gap.
+        let records: Vec<wal::WalRecord> =
+            loaded.records.into_iter().filter(|r| r.seq >= wal_seq).collect();
+        if let Some(first) = records.first() {
+            if first.seq != wal_seq {
+                return Err(reject(format!(
+                    "recovery failed: WAL resumes at seq {} but the checkpoint covers only below {}",
+                    first.seq, wal_seq
+                )));
+            }
+        }
+        let replayed = records.len() as u64;
+        let next_seq = records.last().map_or(wal_seq, |r| r.seq + 1);
+
+        let mut i = 0usize;
+        while i < records.len() {
+            match &records[i].kind {
+                RecordKind::Append(rows) => {
+                    // queue the compaction decisions this batch logged, so
+                    // replay applies them instead of re-running SS
+                    let mut j = i + 1;
+                    while j < records.len() {
+                        match &records[j].kind {
+                            RecordKind::Compact { rounds, kept } => {
+                                session.pending_compacts.push_back(ReplayCompact {
+                                    rounds: *rounds as usize,
+                                    kept: kept.iter().map(|&k| k as usize).collect(),
+                                });
+                                j += 1;
+                            }
+                            _ => break,
+                        }
+                    }
+                    if rows.len() % session.d != 0 {
+                        return Err(reject(
+                            "recovery failed: WAL batch width disagrees with the session's d"
+                                .into(),
+                        ));
+                    }
+                    let nonneg = matches!(session.store, LiveStore::Features(_));
+                    if !rows.iter().all(|x| x.is_finite() && (!nonneg || *x >= 0.0)) {
+                        return Err(reject(
+                            "recovery failed: WAL batch holds out-of-domain features".into(),
+                        ));
+                    }
+                    // a QueueFull here re-sheds exactly the batch the
+                    // original session shed (same state, same cap) — the
+                    // shed *is* part of the deterministic history
+                    let _ = session.append_prevalidated(rows);
+                    if !session.pending_compacts.is_empty() {
+                        return Err(reject(
+                            "recovery failed: WAL compaction records diverge from replay".into(),
+                        ));
+                    }
+                    i = j;
+                }
+                RecordKind::Compact { .. } => {
+                    return Err(reject(
+                        "recovery failed: stray compaction record without a preceding append"
+                            .into(),
+                    ));
+                }
+                RecordKind::Close => {
+                    session.close();
+                    i += 1;
+                }
+            }
+        }
+
+        session.durability = Some(Durability::resume(store, dcfg, next_seq, replayed));
+        metrics.add(&metrics.counters.recoveries, 1);
+        if loaded.torn_tail_truncations > 0 {
+            metrics.add(
+                &metrics.counters.torn_tail_truncations,
+                loaded.torn_tail_truncations,
+            );
+        }
+        let report = RecoveryReport {
+            checkpoint_seq: wal_seq,
+            replayed_records: replayed,
+            torn_tail_truncations: loaded.torn_tail_truncations,
+        };
+        Ok((session, report))
     }
 
     /// Reserve capacity for `additional` further appends so the
@@ -436,6 +660,27 @@ impl StreamSession {
     ) -> Result<StreamAppend, ServiceError<()>> {
         if self.closed {
             return Err(ServiceError::ServiceDown);
+        }
+        if let Some(du) = self.durability.as_ref() {
+            if let Some(reason) = du.quarantined() {
+                return Err(ServiceError::Rejected {
+                    reason: format!("session quarantined: {reason}"),
+                });
+            }
+        }
+        // Log-before-apply: the whole raw batch goes to the WAL (rejected
+        // rows still advance sieve + remap state, and a shed batch is part
+        // of the deterministic history — replay re-sheds it) before any
+        // in-memory mutation, so every durable WAL prefix corresponds to a
+        // reachable session state. An I/O failure quarantines: continuing
+        // un-logged would silently diverge from what recovery can rebuild.
+        if let Some(du) = self.durability.as_mut() {
+            if let Err(e) = du.log_append(rows) {
+                let reason = e.to_string();
+                du.quarantine(reason.clone());
+                return Err(ServiceError::Rejected { reason });
+            }
+            self.metrics.add(&self.metrics.counters.wal_appends, 1);
         }
         debug_assert_eq!(rows.len() % self.d, 0);
         let batch_n = rows.len() / self.d;
@@ -503,6 +748,19 @@ impl StreamSession {
         self.admitted += out.admitted as u64;
         self.metrics.add(&self.metrics.counters.stream_appends, out.appended as u64);
         self.metrics.add(&self.metrics.counters.stream_admitted, out.admitted as u64);
+        if out.admitted > 0 {
+            self.epoch = self.epoch.wrapping_add(1);
+        }
+        // Auto-checkpoint once the interval has elapsed. Failure inside
+        // checkpoint_now quarantines on its own; the batch itself already
+        // applied and logged fine, so its outcome stands.
+        if self
+            .durability
+            .as_ref()
+            .is_some_and(|du| du.quarantined().is_none() && du.checkpoint_due())
+        {
+            let _ = self.checkpoint_now();
+        }
         Ok(out)
     }
 
@@ -547,6 +805,21 @@ impl StreamSession {
             self.buffer_len = 0;
             return (0, 0);
         }
+        // Recovery replay: the WAL recorded what this window decided, so
+        // apply the logged verdict instead of re-running SS — a pure
+        // optimization (the live pass below recomputes the identical kept
+        // set from the identical state + seed), which also lets recovery
+        // skip the most expensive part of replay. A record that fails the
+        // shape checks is dropped and the live pass takes over.
+        if let Some(rec) = self.pending_compacts.pop_front() {
+            let valid = rec.kept.len() <= m
+                && rec.kept.windows(2).all(|w| w[0] < w[1])
+                && rec.kept.last().map_or(true, |&l| l < m);
+            if valid {
+                let evicted = self.apply_compaction(&rec.kept, rec.rounds);
+                return (evicted, rec.rounds);
+            }
+        }
         let obj = self.objective();
         let backend = self.resume_backend(&obj);
         let params = SsParams { seed: self.window_seed(), ..self.cfg.ss.clone() };
@@ -558,17 +831,36 @@ impl StreamSession {
         // wiring and scratch carry into the next window's resume
         self.parked = Some(backend.park());
         drop(obj); // release the Arc so compaction can take &mut
-        let evicted = m - res.kept.len();
-        self.remap.compact(&res.kept);
+        // log the verdict before applying it, mirroring the append path;
+        // the enclosing append already logged, so a failure here only
+        // loses an optimization — quarantine still stops further writes
+        if let Some(du) = self.durability.as_mut() {
+            if du.quarantined().is_none() {
+                if let Err(e) = du.log_compact(res.rounds, &res.kept) {
+                    du.quarantine(e.to_string());
+                }
+            }
+        }
+        let evicted = self.apply_compaction(&res.kept, res.rounds);
+        (evicted, res.rounds)
+    }
+
+    /// Compact storage, remap and accounting to a surviving `kept` set
+    /// (ascending internal indices) — the apply half of a window, shared
+    /// by the live SS pass and WAL replay.
+    fn apply_compaction(&mut self, kept: &[usize], rounds: usize) -> usize {
+        let m = self.live();
+        let evicted = m - kept.len();
+        self.remap.compact(kept);
         match &mut self.store {
             LiveStore::Features(fb) => {
                 let ok = Arc::get_mut(fb)
                     .expect("objective handle leaked outside the session")
-                    .retain_elements(&res.kept);
+                    .retain_elements(kept);
                 debug_assert!(ok);
             }
             LiveStore::Facility { feats, cached, .. } => {
-                feats.retain_rows(&res.kept);
+                feats.retain_rows(kept);
                 // the compacted objective stays valid for an immediately
                 // following snapshot — and, when sparse, for the appends
                 // that grow it afterwards (neighbor lists are index-
@@ -576,19 +868,20 @@ impl StreamSession {
                 if let Some(fl) = cached {
                     let ok = Arc::get_mut(fl)
                         .expect("objective handle leaked outside the session")
-                        .retain_elements(&res.kept);
+                        .retain_elements(kept);
                     debug_assert!(ok);
                 }
             }
         }
-        self.retained_len = res.kept.len();
+        self.retained_len = kept.len();
         self.buffer_len = 0;
         self.windows += 1;
-        self.ss_rounds += res.rounds as u64;
+        self.ss_rounds += rounds as u64;
         self.evicted += evicted as u64;
-        self.metrics.add(&self.metrics.counters.resparsify_rounds, res.rounds as u64);
+        self.epoch = self.epoch.wrapping_add(1);
+        self.metrics.add(&self.metrics.counters.resparsify_rounds, rounds as u64);
         self.metrics.add(&self.metrics.counters.evicted_elements, evicted as u64);
-        (evicted, res.rounds)
+        evicted
     }
 
     /// Summarize the current live set **in place** (no storage clone).
@@ -654,24 +947,52 @@ impl StreamSession {
     /// [`snapshot_summary`](Self::snapshot_summary) would have produced at
     /// the moment of the clone, regardless of appends that land while the
     /// job runs.
-    pub fn snapshot_core(&self) -> Result<SnapshotCore, ServiceError> {
+    ///
+    /// **Quiet streams pay no clone at all**: the core is cached against
+    /// the session's mutation epoch, so back-to-back snapshots (or
+    /// checkpoints) with no intervening admitted element or compaction
+    /// share one immutable `Arc` — [`core_builds`](Self::core_builds)
+    /// counts the deep clones actually performed.
+    pub fn snapshot_core(&mut self) -> Result<Arc<SnapshotCore>, ServiceError> {
         if self.closed {
             return Err(ServiceError::ServiceDown);
         }
+        if let Some((epoch, core)) = &self.core_cache {
+            if *epoch == self.epoch {
+                return Ok(Arc::clone(core));
+            }
+        }
+        let core = Arc::new(self.build_core());
+        self.core_cache = Some((self.epoch, Arc::clone(&core)));
+        self.core_builds += 1;
+        Ok(core)
+    }
+
+    /// The deep clone behind [`snapshot_core`](Self::snapshot_core) —
+    /// always into *fresh* `Arc`s, never sharing the session's live
+    /// objective handles (appends take `Arc::get_mut` on those).
+    fn build_core(&self) -> SnapshotCore {
         let store = match &self.store {
-            LiveStore::Features(fb) => CoreStore::Features(fb.as_ref().clone()),
-            LiveStore::Facility { feats, cached, crossover, t } => match cached {
+            LiveStore::Features(fb) => CoreStore::Features(Arc::new(fb.as_ref().clone())),
+            LiveStore::Facility { feats, cached, crossover, t } => CoreStore::Facility {
+                // rows are always captured (the checkpoint needs them even
+                // when a built store rides along)
+                feats: feats.clone(),
                 // a live sparse store is cloned outright (`O(n·t)` — cheap
                 // enough under the borrow, unlike the dense `O(m²·d)`
                 // build): after evictions its incrementally-maintained
                 // neighbor lists are *not* reproducible by a fresh build
                 // over the surviving rows, so cloning is what keeps the
                 // detached snapshot bit-identical to the in-place one
-                Some(fl) if fl.is_sparse() => CoreStore::FacilityBuilt(fl.as_ref().clone()),
-                _ => CoreStore::FacilityRows { feats: feats.clone(), crossover: *crossover, t: *t },
+                built: match cached {
+                    Some(fl) if fl.is_sparse() => Some(Arc::new(fl.as_ref().clone())),
+                    _ => None,
+                },
+                crossover: *crossover,
+                t: *t,
             },
         };
-        Ok(SnapshotCore {
+        SnapshotCore {
             store,
             int_to_ext: (0..self.live()).map(|i| self.remap.external(i)).collect(),
             k: self.cfg.k,
@@ -682,13 +1003,23 @@ impl StreamSession {
             buffered: self.buffer_len,
             pool: Arc::clone(&self.pool),
             metrics: Arc::clone(&self.metrics),
-        })
+        }
     }
 
     /// Close the session: further appends report
-    /// [`ServiceError::ServiceDown`], snapshots fail. Returns the lifetime
-    /// stats. Idempotent.
+    /// [`ServiceError::ServiceDown`], snapshots fail. A healthy durable
+    /// session logs a clean-close marker first (exactly once), so recovery
+    /// reproduces the closed state. Returns the lifetime stats. Idempotent.
     pub fn close(&mut self) -> StreamStats {
+        if !self.closed {
+            if let Some(du) = self.durability.as_mut() {
+                if du.quarantined().is_none() {
+                    if let Err(e) = du.log_close() {
+                        du.quarantine(e.to_string());
+                    }
+                }
+            }
+        }
         self.closed = true;
         self.stats()
     }
@@ -706,6 +1037,222 @@ impl StreamSession {
             assigned: self.remap.assigned(),
             filter_peak_resident: self.filter.as_ref().map_or(0, |f| f.peak_resident()),
         }
+    }
+
+    /// Checkpoint the session now: capture the full durable image (see
+    /// `stream::checkpoint`), atomically replace the checkpoint blob, and
+    /// reset the WAL. Returns the covered sequence + blob size; a write
+    /// failure quarantines the session (the WAL and checkpoint can no
+    /// longer be trusted to agree). Errors with
+    /// [`ServiceError::Rejected`] on non-durable or quarantined sessions.
+    pub fn checkpoint_now(&mut self) -> Result<CheckpointInfo, ServiceError> {
+        if self.closed {
+            return Err(ServiceError::ServiceDown);
+        }
+        let wal_seq = {
+            let Some(du) = self.durability.as_ref() else {
+                return Err(ServiceError::Rejected {
+                    reason: "checkpointing needs a durable session (open_durable)".into(),
+                });
+            };
+            if let Some(reason) = du.quarantined() {
+                return Err(ServiceError::Rejected {
+                    reason: format!("session quarantined: {reason}"),
+                });
+            }
+            du.next_seq()
+        };
+        let state = self.capture_checkpoint_state(wal_seq)?;
+        let payload = super::checkpoint::encode(&state);
+        let du = self.durability.as_mut().expect("checked durable above");
+        match du.write_checkpoint(&payload) {
+            Ok(bytes) => {
+                self.metrics.add(&self.metrics.counters.checkpoints, 1);
+                Ok(CheckpointInfo { seq: wal_seq, bytes })
+            }
+            Err(e) => {
+                let reason = e.to_string();
+                du.quarantine(reason.clone());
+                Err(ServiceError::Rejected { reason })
+            }
+        }
+    }
+
+    /// Assemble the durable image. The storage rides the epoch-cached
+    /// [`snapshot_core`](Self::snapshot_core) (so a quiet stream's
+    /// checkpoints re-serialize without re-cloning), but the remap, filter
+    /// and counters are read fresh from the session: an all-rejected batch
+    /// advances those without touching the store, so only the store may
+    /// come from the cache.
+    fn capture_checkpoint_state(&mut self, wal_seq: u64) -> Result<CheckpointState, ServiceError> {
+        let core = self.snapshot_core()?;
+        let store = match &core.store {
+            CoreStore::Features(fb) => StorePayload::Features {
+                concave: fb.concave(),
+                rows: fb.feats().clone(),
+            },
+            CoreStore::Facility { feats, built, crossover, t } => StorePayload::Facility {
+                crossover: *crossover,
+                t: *t,
+                rows: feats.clone(),
+                sparse: built.as_ref().and_then(|fl| fl.sparse_store()).map(|s| {
+                    let (n, t, len, cols, vals) = s.export_parts();
+                    SparseParts { n, t, len, cols, vals }
+                }),
+            },
+        };
+        let (base, fwd, bwd) = self.remap.export_parts();
+        let filter = self.filter.as_ref().map(|f| FilterPayload {
+            max_singleton: f.max_singleton(),
+            peak_resident: f.peak_resident(),
+            sieves: f
+                .sieves()
+                .iter()
+                .map(|(tau, s)| SievePayload {
+                    tau: *tau,
+                    value: s.value,
+                    len: s.len,
+                    cov: s.cov.clone(),
+                })
+                .collect(),
+        });
+        Ok(CheckpointState {
+            wal_seq,
+            d: self.d,
+            k: self.cfg.k,
+            ss: self.cfg.ss.clone(),
+            high_water: self.cfg.high_water,
+            max_live: self.cfg.max_live,
+            admission: self.cfg.admission.clone(),
+            shards: self.cfg.shards,
+            intermediate_eps: self.cfg.intermediate_eps,
+            reserve_hint: self.cfg.reserve_hint,
+            windows: self.windows,
+            ss_rounds: self.ss_rounds,
+            appends: self.appends,
+            admitted: self.admitted,
+            evicted: self.evicted,
+            closed: self.closed,
+            retained_len: self.retained_len,
+            buffer_len: self.buffer_len,
+            base,
+            ext_to_int: fwd.to_vec(),
+            int_to_ext: bwd.to_vec(),
+            filter,
+            store,
+        })
+    }
+
+    /// Rebuild a session from a decoded checkpoint. The payload already
+    /// passed the frame checksum, but a checksum-valid-yet-impossible
+    /// state (hand-edited, version-confused) must still surface as a typed
+    /// rejection — every structural invariant is re-validated here instead
+    /// of trusting the bytes into a panic or a silent divergence.
+    fn from_checkpoint_state(
+        state: CheckpointState,
+        pool: Arc<ThreadPool>,
+        metrics: Arc<Metrics>,
+    ) -> Result<Self, ServiceError> {
+        let reject =
+            |reason: &str| ServiceError::Rejected { reason: format!("recovery failed: {reason}") };
+        let cfg = StreamConfig {
+            k: state.k,
+            ss: state.ss,
+            high_water: state.high_water,
+            max_live: state.max_live,
+            admission: state.admission,
+            shards: state.shards,
+            intermediate_eps: state.intermediate_eps,
+            reserve_hint: state.reserve_hint,
+        };
+        // same servability gate as `new()` — a checkpoint of a session
+        // that could never have been opened is corruption, not config
+        if state.d == 0
+            || cfg.k == 0
+            || !(cfg.intermediate_eps > 0.0 && cfg.intermediate_eps < 1.0)
+            || cfg.high_water < cfg.k
+            || (cfg.max_live > 0 && cfg.max_live < cfg.high_water)
+            || cfg.admission.as_ref().is_some_and(|p| !(p.eps > 0.0))
+        {
+            return Err(reject("checkpoint holds an unservable configuration"));
+        }
+        let store = match state.store {
+            StorePayload::Features { concave, rows } => {
+                if rows.d() != state.d {
+                    return Err(reject("feature rows disagree with the session's d"));
+                }
+                if !rows.data().iter().all(|x| x.is_finite() && *x >= 0.0) {
+                    return Err(reject("feature rows hold out-of-domain values"));
+                }
+                LiveStore::Features(Arc::new(FeatureBased::new(rows, concave)))
+            }
+            StorePayload::Facility { crossover, t, rows, sparse } => {
+                if rows.d() != state.d {
+                    return Err(reject("facility rows disagree with the session's d"));
+                }
+                if !rows.data().iter().all(|x| x.is_finite()) {
+                    return Err(reject("facility rows hold non-finite values"));
+                }
+                let cached = match sparse {
+                    Some(p) => {
+                        if p.n != rows.n() {
+                            return Err(reject("sparse store disagrees with the row count"));
+                        }
+                        let s = SparseSimStore::from_parts(p.n, p.t, p.len, p.cols, p.vals)
+                            .map_err(|e| reject(&e))?;
+                        Some(Arc::new(FacilityLocation::from_sparse_store(s)))
+                    }
+                    None => None,
+                };
+                LiveStore::Facility { feats: rows, cached, crossover, t }
+            }
+        };
+        let remap = IdRemap::from_parts(state.base, state.ext_to_int, state.int_to_ext)
+            .map_err(|e| reject(&e))?;
+        let live = match &store {
+            LiveStore::Features(fb) => fb.n(),
+            LiveStore::Facility { feats, .. } => feats.n(),
+        };
+        if remap.live() != live || state.retained_len + state.buffer_len != live {
+            return Err(reject("live-set accounting is internally inconsistent"));
+        }
+        let filter = match (&cfg.admission, state.filter, &store) {
+            (Some(p), Some(fp), LiveStore::Features(_)) => {
+                let mut sieves = Vec::with_capacity(fp.sieves.len());
+                for s in fp.sieves {
+                    if s.cov.len() != state.d {
+                        return Err(reject("sieve coverage width disagrees with d"));
+                    }
+                    sieves.push((s.tau, CovSieve { cov: s.cov, value: s.value, len: s.len }));
+                }
+                Some(SieveFilter::restore(cfg.k, p, fp.max_singleton, fp.peak_resident, sieves))
+            }
+            (None, None, _) => None,
+            _ => return Err(reject("admission-filter state disagrees with the configuration")),
+        };
+        Ok(Self {
+            cfg,
+            d: state.d,
+            store,
+            remap,
+            retained_len: state.retained_len,
+            buffer_len: state.buffer_len,
+            filter,
+            pool,
+            metrics,
+            parked: None,
+            windows: state.windows,
+            ss_rounds: state.ss_rounds,
+            appends: state.appends,
+            admitted: state.admitted,
+            evicted: state.evicted,
+            closed: state.closed,
+            epoch: 0,
+            core_cache: None,
+            core_builds: 0,
+            durability: None,
+            pending_compacts: VecDeque::new(),
+        })
     }
 
     /// Live (retained + buffered) elements.
@@ -737,6 +1284,24 @@ impl StreamSession {
     /// The id remap spine (read-only).
     pub fn remap(&self) -> &IdRemap {
         &self.remap
+    }
+
+    /// Feature dimensionality the session was opened with.
+    pub fn d(&self) -> usize {
+        self.d
+    }
+
+    /// Deep snapshot-core clones actually performed (cache misses of the
+    /// epoch-keyed core cache) — the counter the no-clone test asserts on.
+    pub fn core_builds(&self) -> u64 {
+        self.core_builds
+    }
+
+    /// Whether this session's objective requires non-negative features
+    /// (feature-based coverage does; facility location accepts signed
+    /// embeddings) — what [`validate_batch`](Self::validate_batch) needs.
+    pub(crate) fn needs_nonneg(&self) -> bool {
+        matches!(self.store, LiveStore::Features(_))
     }
 
     pub fn metrics(&self) -> &Metrics {
@@ -790,20 +1355,28 @@ impl StreamSession {
     }
 }
 
-/// Cloned storage of a [`SnapshotCore`].
+/// Cloned storage of a [`SnapshotCore`]. Objectives sit behind fresh
+/// `Arc`s (never the session's live handles) so one cached core can be
+/// shared by any number of concurrent snapshot jobs.
 enum CoreStore {
     /// Deep copy of the grown objective (rows + cached totals).
-    Features(FeatureBased),
-    /// Raw rows only — the similarity build (dense `O(m²·d)` below the
-    /// crossover, sparse top-t above it) happens in [`SnapshotCore::run`],
-    /// off the session borrow, with the session's store parameters. Both
-    /// builds are pure per-pair functions of the rows, so the deferred
-    /// build bit-matches what the session would construct.
-    FacilityRows { feats: FeatureMatrix, crossover: usize, t: Option<usize> },
-    /// Clone of the session's live sparse objective (`O(n·t)`) — the only
-    /// faithful capture once incremental appends/retains have made the
-    /// store's history matter (see [`StreamSession::snapshot_core`]).
-    FacilityBuilt(FacilityLocation),
+    Features(Arc<FeatureBased>),
+    /// Facility-location capture: the raw rows always (checkpoints need
+    /// them), plus a clone of the live sparse objective when one exists —
+    /// the only faithful capture once incremental appends/retains have
+    /// made the store's history matter (see
+    /// [`StreamSession::snapshot_core`]). With `built` absent the
+    /// similarity build (dense `O(m²·d)` below the crossover, sparse
+    /// top-t above it) happens in [`SnapshotCore::run`], off the session
+    /// borrow, with the session's store parameters — both builds are pure
+    /// per-pair functions of the rows, so the deferred build bit-matches
+    /// what the session would construct.
+    Facility {
+        feats: FeatureMatrix,
+        built: Option<Arc<FacilityLocation>>,
+        crossover: usize,
+        t: Option<usize>,
+    },
 }
 
 /// A self-contained, immutable clone of a session's live core — everything
@@ -847,7 +1420,7 @@ impl SnapshotCore {
     /// both paths run [`summarize_live`] with the same seed, budget and
     /// backend shape. Pinned by `snapshot_core_matches_in_place_snapshot`.
     pub fn run(
-        self,
+        &self,
         mode: SnapshotMode,
         check: &mut dyn FnMut() -> Option<Interrupt>,
     ) -> Result<StreamSummary, Interrupt> {
@@ -862,19 +1435,21 @@ impl SnapshotCore {
                 ss_rounds: 0,
             });
         }
-        let obj: Arc<dyn BatchedDivergence> = match self.store {
-            CoreStore::Features(fb) => Arc::new(fb),
-            CoreStore::FacilityBuilt(fl) => Arc::new(fl),
-            CoreStore::FacilityRows { feats, crossover, t } => {
+        let obj: Arc<dyn BatchedDivergence> = match &self.store {
+            CoreStore::Features(fb) => Arc::clone(fb) as Arc<dyn BatchedDivergence>,
+            CoreStore::Facility { built: Some(fl), .. } => {
+                Arc::clone(fl) as Arc<dyn BatchedDivergence>
+            }
+            CoreStore::Facility { feats, built: None, crossover, t } => {
                 // same store parameters and pooled build as the session's
                 // own lazy construction — what keeps this path bit-identical
                 // to the in-place snapshot
                 let shards =
                     if self.shards > 0 { self.shards } else { self.pool.threads() * 2 };
                 Arc::new(FacilityLocation::from_features_with(
-                    &feats,
-                    crossover,
-                    t,
+                    feats,
+                    *crossover,
+                    *t,
                     Some((self.pool.as_ref(), shards)),
                 ))
             }
@@ -1295,7 +1870,7 @@ mod tests {
         let err = core.run(SnapshotMode::Final, &mut || Some(Interrupt::Cancelled)).unwrap_err();
         assert_eq!(err, Interrupt::Cancelled);
         // an empty core ignores the probe (nothing to do)
-        let empty = session(StreamConfig::new(5), 8);
+        let mut empty = session(StreamConfig::new(5), 8);
         let snap = empty
             .snapshot_core()
             .unwrap()
@@ -1303,5 +1878,63 @@ mod tests {
             .unwrap();
         assert_eq!(snap.live, 0);
         assert!(snap.summary.is_empty());
+    }
+
+    #[test]
+    fn unservable_configs_are_rejected_at_open() {
+        let pool = Arc::new(ThreadPool::new(2, 16));
+        let open = |cfg: StreamConfig| {
+            StreamSession::new(
+                ObjectiveSpec::Features(Concave::Sqrt),
+                6,
+                cfg,
+                Arc::clone(&pool),
+                Arc::new(Metrics::new()),
+            )
+        };
+        // high_water below the budget starves every snapshot
+        match open(StreamConfig::new(8).with_high_water(4)) {
+            Err(ServiceError::Rejected { reason }) => assert!(reason.contains("high_water")),
+            _ => panic!("hw < k must be rejected"),
+        }
+        // max_live below high_water sheds every batch that tries to fill
+        // the window
+        match open(StreamConfig::new(4).with_high_water(100).with_max_live(50)) {
+            Err(ServiceError::Rejected { reason }) => assert!(reason.contains("max_live")),
+            _ => panic!("max_live < high_water must be rejected"),
+        }
+        // boundary shapes stay servable
+        assert!(open(StreamConfig::new(8).with_high_water(8)).is_ok());
+        assert!(open(StreamConfig::new(4).with_high_water(100).with_max_live(100)).is_ok());
+        assert!(open(StreamConfig::new(4).with_max_live(0)).is_ok(), "0 stays uncapped");
+    }
+
+    #[test]
+    fn snapshot_core_cache_skips_clones_on_quiet_streams() {
+        let data = rows(300, 10, 51);
+        let mut s = session(
+            StreamConfig::new(6).with_ss(SsParams::default().with_seed(9)).with_high_water(120),
+            10,
+        );
+        s.append(&data.data()[..200 * 10]).unwrap();
+        assert_eq!(s.core_builds(), 0);
+        let a = s.snapshot_core().unwrap();
+        let b = s.snapshot_core().unwrap();
+        assert!(Arc::ptr_eq(&a, &b), "quiet stream must share one cached core");
+        assert_eq!(s.core_builds(), 1, "two snapshots, one deep clone");
+        // both handles still run (and agree bit-for-bit)
+        let ra = a.run(SnapshotMode::Final, &mut || None).unwrap();
+        let rb = b.run(SnapshotMode::Final, &mut || None).unwrap();
+        assert_eq!(ra.summary, rb.summary);
+        assert_eq!(ra.value.to_bits(), rb.value.to_bits());
+        // an admitted append invalidates the cache...
+        s.append(&data.data()[200 * 10..]).unwrap();
+        let c = s.snapshot_core().unwrap();
+        assert!(!Arc::ptr_eq(&a, &c), "mutation must invalidate the cached core");
+        assert_eq!(s.core_builds(), 2);
+        // ...and the fresh core is cached again
+        let d = s.snapshot_core().unwrap();
+        assert!(Arc::ptr_eq(&c, &d));
+        assert_eq!(s.core_builds(), 2);
     }
 }

@@ -1,0 +1,1055 @@
+//! Write-ahead log and durable-store abstraction for stream sessions.
+//!
+//! A durable session owns a [`DurableStore`] with two named blobs:
+//!
+//! * `"wal"` — an append-only sequence of length-prefixed, checksummed
+//!   records (admitted batches, compaction decisions, close markers);
+//! * `"checkpoint"` — the latest atomically-replaced full-state snapshot
+//!   (encoded by `stream::checkpoint`).
+//!
+//! Record framing is `[body_len: u32 LE][body][fnv1a64(body): u64 LE]`
+//! where `body = [kind: u8][seq: u64 LE][payload]`. Sequence numbers are
+//! monotone across the session's whole life (they survive checkpoint
+//! truncation), which lets recovery skip records already covered by the
+//! checkpoint after a crash between checkpoint-write and WAL-truncate.
+//!
+//! The protocol is *log-before-apply*: a batch is framed, appended, and
+//! flushed before the session mutates any in-memory state, so every
+//! durable prefix of the WAL corresponds to a reachable session state.
+//! Torn tails (a crash mid-append) are detected by the length prefix /
+//! trailing checksum and truncated on recovery; a checksum-valid but
+//! semantically impossible record is *corruption* and quarantines the
+//! session with a typed error instead of a panic.
+//!
+//! Everything here is hand-rolled over `std` — no new dependencies.
+
+use std::collections::HashMap;
+use std::io::Write;
+use std::path::PathBuf;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
+
+/// Blob name of the write-ahead log inside a [`DurableStore`].
+pub(crate) const WAL: &str = "wal";
+/// Blob name of the checkpoint inside a [`DurableStore`].
+pub(crate) const CHECKPOINT: &str = "checkpoint";
+
+/// Magic prefix of a checkpoint blob: `"SSCP"` little-endian.
+pub(crate) const CHECKPOINT_MAGIC: u32 = 0x5353_4350;
+
+pub(crate) const KIND_APPEND: u8 = 1;
+pub(crate) const KIND_COMPACT: u8 = 2;
+pub(crate) const KIND_CLOSE: u8 = 3;
+
+/// Minimum body size: kind (1) + seq (8).
+const MIN_BODY: usize = 9;
+
+// ---------------------------------------------------------------------------
+// Errors
+// ---------------------------------------------------------------------------
+
+/// Failures surfaced by the durability layer.
+///
+/// `Io` is an environmental failure (disk full, permission, injected
+/// fault); `Corrupt` means the durable bytes violate the protocol in a
+/// way truncation cannot repair — the session must be quarantined.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum WalError {
+    /// Underlying storage failed.
+    Io(String),
+    /// The durable bytes are internally inconsistent (bad checksum,
+    /// malformed payload, sequence gap, bad checkpoint magic, ...).
+    Corrupt(String),
+}
+
+impl std::fmt::Display for WalError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            WalError::Io(msg) => write!(f, "durable store I/O error: {msg}"),
+            WalError::Corrupt(msg) => write!(f, "durable log corrupt: {msg}"),
+        }
+    }
+}
+
+impl std::error::Error for WalError {}
+
+// ---------------------------------------------------------------------------
+// Checksum + little-endian codec helpers (shared with stream::checkpoint)
+// ---------------------------------------------------------------------------
+
+/// FNV-1a 64-bit — tiny, dependency-free, and plenty for torn/bit-rot
+/// detection (this is an integrity check, not an adversarial MAC).
+pub(crate) fn fnv1a64(bytes: &[u8]) -> u64 {
+    let mut h: u64 = 0xcbf2_9ce4_8422_2325;
+    for &b in bytes {
+        h = (h ^ u64::from(b)).wrapping_mul(0x0000_0100_0000_01b3);
+    }
+    h
+}
+
+pub(crate) fn put_u8(out: &mut Vec<u8>, v: u8) {
+    out.push(v);
+}
+
+pub(crate) fn put_u32(out: &mut Vec<u8>, v: u32) {
+    out.extend_from_slice(&v.to_le_bytes());
+}
+
+pub(crate) fn put_u64(out: &mut Vec<u8>, v: u64) {
+    out.extend_from_slice(&v.to_le_bytes());
+}
+
+pub(crate) fn put_f32(out: &mut Vec<u8>, v: f32) {
+    out.extend_from_slice(&v.to_bits().to_le_bytes());
+}
+
+pub(crate) fn put_f64(out: &mut Vec<u8>, v: f64) {
+    out.extend_from_slice(&v.to_bits().to_le_bytes());
+}
+
+/// Bounds-checked little-endian reader over a byte slice. Every short
+/// read is a `Corrupt` error (the caller decides whether the enclosing
+/// context makes it torn instead).
+pub(crate) struct Cursor<'a> {
+    buf: &'a [u8],
+    pos: usize,
+}
+
+impl<'a> Cursor<'a> {
+    pub(crate) fn new(buf: &'a [u8]) -> Self {
+        Self { buf, pos: 0 }
+    }
+
+    pub(crate) fn remaining(&self) -> usize {
+        self.buf.len() - self.pos
+    }
+
+    pub(crate) fn take(&mut self, n: usize) -> Result<&'a [u8], WalError> {
+        if self.remaining() < n {
+            return Err(WalError::Corrupt(format!(
+                "short read: wanted {n} bytes, {} remain",
+                self.remaining()
+            )));
+        }
+        let s = &self.buf[self.pos..self.pos + n];
+        self.pos += n;
+        Ok(s)
+    }
+
+    pub(crate) fn u8(&mut self) -> Result<u8, WalError> {
+        Ok(self.take(1)?[0])
+    }
+
+    pub(crate) fn u32(&mut self) -> Result<u32, WalError> {
+        let b = self.take(4)?;
+        Ok(u32::from_le_bytes([b[0], b[1], b[2], b[3]]))
+    }
+
+    pub(crate) fn u64(&mut self) -> Result<u64, WalError> {
+        let b = self.take(8)?;
+        Ok(u64::from_le_bytes([
+            b[0], b[1], b[2], b[3], b[4], b[5], b[6], b[7],
+        ]))
+    }
+
+    pub(crate) fn f32(&mut self) -> Result<f32, WalError> {
+        Ok(f32::from_bits(self.u32()?))
+    }
+
+    pub(crate) fn f64(&mut self) -> Result<f64, WalError> {
+        Ok(f64::from_bits(self.u64()?))
+    }
+
+    pub(crate) fn done(&self) -> Result<(), WalError> {
+        if self.remaining() != 0 {
+            return Err(WalError::Corrupt(format!(
+                "{} trailing bytes after payload",
+                self.remaining()
+            )));
+        }
+        Ok(())
+    }
+}
+
+// ---------------------------------------------------------------------------
+// DurableStore: the pluggable byte-blob backend
+// ---------------------------------------------------------------------------
+
+/// A tiny named-blob store the durability layer writes through. Two
+/// implementations ship: [`FileStore`] (real files) and [`MemStore`]
+/// (tests), plus [`FaultStore`], a deterministic fault injector that
+/// wraps either.
+///
+/// Contract: `append` extends a blob (creating it), `write_atomic`
+/// replaces a blob all-or-nothing (a crash mid-call leaves the *old*
+/// content), `truncate` shortens to `len` bytes, `flush` makes prior
+/// writes to the blob durable, and `read_all` returns `None` for a
+/// blob that was never written.
+pub trait DurableStore: Send {
+    fn read_all(&mut self, name: &str) -> Result<Option<Vec<u8>>, WalError>;
+    fn append(&mut self, name: &str, bytes: &[u8]) -> Result<(), WalError>;
+    fn write_atomic(&mut self, name: &str, bytes: &[u8]) -> Result<(), WalError>;
+    fn truncate(&mut self, name: &str, len: u64) -> Result<(), WalError>;
+    fn flush(&mut self, name: &str) -> Result<(), WalError>;
+}
+
+fn io_err(ctx: &str, e: std::io::Error) -> WalError {
+    WalError::Io(format!("{ctx}: {e}"))
+}
+
+/// File-backed [`DurableStore`]: one file per blob under a directory.
+///
+/// Flush policy: `append` only buffers through the OS (`write_all`);
+/// [`Durability`] calls `flush` — an `fsync` — once per logical record,
+/// so a record is durable before the session mutates in-memory state.
+/// `write_atomic` goes through a `.tmp` + `fsync` + `rename` so the
+/// checkpoint blob is replaced all-or-nothing.
+pub struct FileStore {
+    dir: PathBuf,
+}
+
+impl FileStore {
+    /// Open (creating if needed) a store rooted at `dir`.
+    pub fn open(dir: impl Into<PathBuf>) -> Result<Self, WalError> {
+        let dir = dir.into();
+        std::fs::create_dir_all(&dir).map_err(|e| io_err("create store dir", e))?;
+        Ok(Self { dir })
+    }
+
+    /// Directory this store lives in.
+    pub fn dir(&self) -> &std::path::Path {
+        &self.dir
+    }
+
+    fn path(&self, name: &str) -> PathBuf {
+        self.dir.join(name)
+    }
+}
+
+impl DurableStore for FileStore {
+    fn read_all(&mut self, name: &str) -> Result<Option<Vec<u8>>, WalError> {
+        match std::fs::read(self.path(name)) {
+            Ok(bytes) => Ok(Some(bytes)),
+            Err(e) if e.kind() == std::io::ErrorKind::NotFound => Ok(None),
+            Err(e) => Err(io_err("read blob", e)),
+        }
+    }
+
+    fn append(&mut self, name: &str, bytes: &[u8]) -> Result<(), WalError> {
+        let mut f = std::fs::OpenOptions::new()
+            .append(true)
+            .create(true)
+            .open(self.path(name))
+            .map_err(|e| io_err("open for append", e))?;
+        f.write_all(bytes).map_err(|e| io_err("append", e))
+    }
+
+    fn write_atomic(&mut self, name: &str, bytes: &[u8]) -> Result<(), WalError> {
+        let tmp = self.path(&format!("{name}.tmp"));
+        {
+            let mut f = std::fs::File::create(&tmp).map_err(|e| io_err("create tmp", e))?;
+            f.write_all(bytes).map_err(|e| io_err("write tmp", e))?;
+            f.sync_all().map_err(|e| io_err("sync tmp", e))?;
+        }
+        std::fs::rename(&tmp, self.path(name)).map_err(|e| io_err("rename tmp", e))?;
+        // Make the rename itself durable (Linux: fsync the directory).
+        if let Ok(d) = std::fs::File::open(&self.dir) {
+            let _ = d.sync_all();
+        }
+        Ok(())
+    }
+
+    fn truncate(&mut self, name: &str, len: u64) -> Result<(), WalError> {
+        let f = std::fs::OpenOptions::new()
+            .write(true)
+            .create(true)
+            .truncate(false)
+            .open(self.path(name))
+            .map_err(|e| io_err("open for truncate", e))?;
+        f.set_len(len).map_err(|e| io_err("truncate", e))?;
+        f.sync_all().map_err(|e| io_err("sync truncate", e))
+    }
+
+    fn flush(&mut self, name: &str) -> Result<(), WalError> {
+        match std::fs::File::open(self.path(name)) {
+            Ok(f) => f.sync_all().map_err(|e| io_err("fsync", e)),
+            Err(e) if e.kind() == std::io::ErrorKind::NotFound => Ok(()),
+            Err(e) => Err(io_err("open for fsync", e)),
+        }
+    }
+}
+
+/// In-memory [`DurableStore`] for tests. Cloning yields a handle onto
+/// the *same* blobs, so a test can keep a handle, hand a clone to a
+/// session (possibly wrapped in a [`FaultStore`]), "crash" by dropping
+/// the session, and recover from what survived.
+#[derive(Clone, Default)]
+pub struct MemStore {
+    files: Arc<Mutex<HashMap<String, Vec<u8>>>>,
+}
+
+impl MemStore {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    fn lock(&self) -> std::sync::MutexGuard<'_, HashMap<String, Vec<u8>>> {
+        // A poisoned test store just means some other test thread
+        // panicked; the bytes themselves are still coherent.
+        self.files.lock().unwrap_or_else(|e| e.into_inner())
+    }
+
+    /// Raw bytes of a blob (test inspection).
+    pub fn raw(&self, name: &str) -> Option<Vec<u8>> {
+        self.lock().get(name).cloned()
+    }
+
+    /// Overwrite a blob wholesale (test setup).
+    pub fn set_raw(&self, name: &str, bytes: Vec<u8>) {
+        self.lock().insert(name.to_string(), bytes);
+    }
+
+    /// Flip one byte in place — simulates bit rot / checksum corruption.
+    pub fn flip_byte(&self, name: &str, idx: usize) {
+        let mut files = self.lock();
+        if let Some(buf) = files.get_mut(name) {
+            if let Some(b) = buf.get_mut(idx) {
+                *b ^= 0xff;
+            }
+        }
+    }
+
+    /// Drop the last `n` bytes of a blob — simulates a torn tail.
+    pub fn chop_tail(&self, name: &str, n: usize) {
+        let mut files = self.lock();
+        if let Some(buf) = files.get_mut(name) {
+            let keep = buf.len().saturating_sub(n);
+            buf.truncate(keep);
+        }
+    }
+
+    /// Blob length in bytes (0 if absent).
+    pub fn len(&self, name: &str) -> usize {
+        self.lock().get(name).map_or(0, Vec::len)
+    }
+
+    /// True when no blob has ever been written.
+    pub fn is_empty(&self) -> bool {
+        self.lock().is_empty()
+    }
+}
+
+impl DurableStore for MemStore {
+    fn read_all(&mut self, name: &str) -> Result<Option<Vec<u8>>, WalError> {
+        Ok(self.lock().get(name).cloned())
+    }
+
+    fn append(&mut self, name: &str, bytes: &[u8]) -> Result<(), WalError> {
+        self.lock()
+            .entry(name.to_string())
+            .or_default()
+            .extend_from_slice(bytes);
+        Ok(())
+    }
+
+    fn write_atomic(&mut self, name: &str, bytes: &[u8]) -> Result<(), WalError> {
+        self.lock().insert(name.to_string(), bytes.to_vec());
+        Ok(())
+    }
+
+    fn truncate(&mut self, name: &str, len: u64) -> Result<(), WalError> {
+        let mut files = self.lock();
+        let buf = files.entry(name.to_string()).or_default();
+        let keep = (len as usize).min(buf.len());
+        buf.truncate(keep);
+        Ok(())
+    }
+
+    fn flush(&mut self, _name: &str) -> Result<(), WalError> {
+        Ok(())
+    }
+}
+
+// ---------------------------------------------------------------------------
+// FaultStore: deterministic crash / torn-write / short-read injection
+// ---------------------------------------------------------------------------
+
+/// Deterministic fault-injection wrapper around any [`DurableStore`].
+///
+/// The model is an *op budget*: every mutating call (`append`,
+/// `write_atomic`, `truncate`) increments a shared counter; once the
+/// counter passes `fail_after_ops`, mutations are silently dropped —
+/// the image a real crash at that instant would leave behind. The
+/// wrapped session keeps running in memory (the test discards it), and
+/// recovery then sees exactly the durable prefix.
+///
+/// Options:
+/// * `with_torn_tail(b)` — the first over-budget `append` lands only
+///   its first `b` bytes, producing a torn record;
+/// * `with_error_on_fault()` — over-budget mutations return
+///   `WalError::Io` instead of silently dropping (exercises the
+///   quarantine-on-I/O-error path);
+/// * `with_read_cap(n)` — `read_all` returns at most `n` bytes
+///   (a short read at recovery time).
+///
+/// `flush` never consumes budget and never faults: durability points
+/// are modeled at the write that precedes them, keeping kill-point
+/// enumeration dense and deterministic.
+pub struct FaultStore {
+    inner: Box<dyn DurableStore>,
+    ops: Arc<AtomicU64>,
+    fail_after_ops: Option<u64>,
+    torn_tail_bytes: Option<usize>,
+    torn_done: bool,
+    error_on_fault: bool,
+    read_cap: Option<usize>,
+}
+
+impl FaultStore {
+    /// Wrap `inner` with no faults armed (pure pass-through + op count).
+    pub fn new(inner: Box<dyn DurableStore>) -> Self {
+        Self {
+            inner,
+            ops: Arc::new(AtomicU64::new(0)),
+            fail_after_ops: None,
+            torn_tail_bytes: None,
+            torn_done: false,
+            error_on_fault: false,
+            read_cap: None,
+        }
+    }
+
+    /// Crash after `n` mutating ops: ops `0..n` land, the rest vanish.
+    pub fn fail_after(mut self, n: u64) -> Self {
+        self.fail_after_ops = Some(n);
+        self
+    }
+
+    /// First over-budget append lands a `bytes`-byte prefix (torn tail).
+    pub fn with_torn_tail(mut self, bytes: usize) -> Self {
+        self.torn_tail_bytes = Some(bytes);
+        self
+    }
+
+    /// Report over-budget mutations as `WalError::Io` instead of
+    /// silently dropping them.
+    pub fn with_error_on_fault(mut self) -> Self {
+        self.error_on_fault = true;
+        self
+    }
+
+    /// Cap `read_all` results at `n` bytes (short read).
+    pub fn with_read_cap(mut self, n: usize) -> Self {
+        self.read_cap = Some(n);
+        self
+    }
+
+    /// Shared handle onto the mutating-op counter. Clone it *before*
+    /// boxing the store to observe/record op positions from the test.
+    pub fn ops_counter(&self) -> Arc<AtomicU64> {
+        Arc::clone(&self.ops)
+    }
+
+    /// Counts one mutating op; true while within budget.
+    fn within_budget(&mut self) -> bool {
+        let c = self.ops.fetch_add(1, Ordering::SeqCst);
+        match self.fail_after_ops {
+            None => true,
+            Some(n) => c < n,
+        }
+    }
+
+    fn fault_result(&self) -> Result<(), WalError> {
+        if self.error_on_fault {
+            Err(WalError::Io("injected fault".into()))
+        } else {
+            Ok(())
+        }
+    }
+}
+
+impl DurableStore for FaultStore {
+    fn read_all(&mut self, name: &str) -> Result<Option<Vec<u8>>, WalError> {
+        let out = self.inner.read_all(name)?;
+        Ok(match (out, self.read_cap) {
+            (Some(mut bytes), Some(cap)) => {
+                bytes.truncate(cap);
+                Some(bytes)
+            }
+            (out, _) => out,
+        })
+    }
+
+    fn append(&mut self, name: &str, bytes: &[u8]) -> Result<(), WalError> {
+        if self.within_budget() {
+            return self.inner.append(name, bytes);
+        }
+        if let (Some(b), false) = (self.torn_tail_bytes, self.torn_done) {
+            self.torn_done = true;
+            let cut = b.min(bytes.len());
+            self.inner.append(name, &bytes[..cut])?;
+        }
+        self.fault_result()
+    }
+
+    fn write_atomic(&mut self, name: &str, bytes: &[u8]) -> Result<(), WalError> {
+        if self.within_budget() {
+            return self.inner.write_atomic(name, bytes);
+        }
+        // Atomic replace: an over-budget write leaves the old blob.
+        self.fault_result()
+    }
+
+    fn truncate(&mut self, name: &str, len: u64) -> Result<(), WalError> {
+        if self.within_budget() {
+            return self.inner.truncate(name, len);
+        }
+        self.fault_result()
+    }
+
+    fn flush(&mut self, name: &str) -> Result<(), WalError> {
+        self.inner.flush(name)
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Records
+// ---------------------------------------------------------------------------
+
+/// A parsed WAL record.
+#[derive(Debug, Clone, PartialEq)]
+pub(crate) struct WalRecord {
+    pub(crate) seq: u64,
+    pub(crate) kind: RecordKind,
+}
+
+#[derive(Debug, Clone, PartialEq)]
+pub(crate) enum RecordKind {
+    /// Raw admitted-batch floats, row-major; width is the session's `d`.
+    Append(Vec<f32>),
+    /// A window compaction: SS ran `rounds` rounds and kept these live
+    /// offsets (ascending). A replay optimization — replay falls back
+    /// to re-running SS live (bit-identical) if the record is unusable.
+    Compact { rounds: u32, kept: Vec<u32> },
+    /// The session was closed cleanly.
+    Close,
+}
+
+fn frame(kind: u8, seq: u64, payload: &[u8]) -> Vec<u8> {
+    let mut body = Vec::with_capacity(MIN_BODY + payload.len());
+    put_u8(&mut body, kind);
+    put_u64(&mut body, seq);
+    body.extend_from_slice(payload);
+    let mut out = Vec::with_capacity(4 + body.len() + 8);
+    put_u32(&mut out, body.len() as u32);
+    out.extend_from_slice(&body);
+    put_u64(&mut out, fnv1a64(&body));
+    out
+}
+
+/// Frame a checkpoint payload: `[magic][len][payload][fnv64(payload)]`.
+pub(crate) fn frame_checkpoint(payload: &[u8]) -> Vec<u8> {
+    let mut out = Vec::with_capacity(8 + payload.len() + 8);
+    put_u32(&mut out, CHECKPOINT_MAGIC);
+    put_u32(&mut out, payload.len() as u32);
+    out.extend_from_slice(payload);
+    put_u64(&mut out, fnv1a64(payload));
+    out
+}
+
+fn parse_checkpoint(bytes: &[u8]) -> Result<Vec<u8>, WalError> {
+    let mut c = Cursor::new(bytes);
+    let magic = c.u32().map_err(|_| {
+        WalError::Corrupt("checkpoint blob shorter than its header".into())
+    })?;
+    if magic != CHECKPOINT_MAGIC {
+        return Err(WalError::Corrupt(format!(
+            "bad checkpoint magic 0x{magic:08x}"
+        )));
+    }
+    let len = c.u32()? as usize;
+    let payload = c
+        .take(len)
+        .map_err(|_| WalError::Corrupt("checkpoint payload truncated".into()))?;
+    let sum = c.u64()?;
+    c.done()?;
+    if sum != fnv1a64(payload) {
+        return Err(WalError::Corrupt("checkpoint checksum mismatch".into()));
+    }
+    Ok(payload.to_vec())
+}
+
+fn parse_body(body: &[u8]) -> Result<WalRecord, WalError> {
+    let mut c = Cursor::new(body);
+    let kind = c.u8()?;
+    let seq = c.u64()?;
+    let kind = match kind {
+        KIND_APPEND => {
+            let n = c.u32()? as usize;
+            let mut rows = Vec::with_capacity(n);
+            for _ in 0..n {
+                rows.push(c.f32()?);
+            }
+            RecordKind::Append(rows)
+        }
+        KIND_COMPACT => {
+            let rounds = c.u32()?;
+            let count = c.u32()? as usize;
+            let mut kept = Vec::with_capacity(count);
+            for _ in 0..count {
+                kept.push(c.u32()?);
+            }
+            RecordKind::Compact { rounds, kept }
+        }
+        KIND_CLOSE => RecordKind::Close,
+        other => {
+            return Err(WalError::Corrupt(format!(
+                "unknown record kind {other} at seq {seq}"
+            )))
+        }
+    };
+    c.done()?;
+    Ok(WalRecord { seq, kind })
+}
+
+// ---------------------------------------------------------------------------
+// Load: checkpoint + WAL parse with torn-tail repair
+// ---------------------------------------------------------------------------
+
+/// Everything recovery needs, parsed and integrity-checked.
+pub(crate) struct LoadedLog {
+    /// Verified checkpoint payload bytes, if a checkpoint exists.
+    pub(crate) checkpoint: Option<Vec<u8>>,
+    /// Contiguous-seq records that survived in the WAL.
+    pub(crate) records: Vec<WalRecord>,
+    /// 1 if a torn tail was found and truncated away, else 0.
+    pub(crate) torn_tail_truncations: u64,
+}
+
+/// Read and verify the checkpoint and WAL from `store`, truncating a
+/// torn tail in place. `Err(Corrupt)` means the session must be
+/// quarantined; torn tails are expected after a crash and repaired.
+pub(crate) fn load(store: &mut dyn DurableStore) -> Result<LoadedLog, WalError> {
+    let checkpoint = match store.read_all(CHECKPOINT)? {
+        Some(bytes) => Some(parse_checkpoint(&bytes)?),
+        None => None,
+    };
+
+    let wal = store.read_all(WAL)?.unwrap_or_default();
+    let mut records = Vec::new();
+    let mut torn = 0u64;
+    let mut pos = 0usize;
+    while pos < wal.len() {
+        let rem = wal.len() - pos;
+        // A partially-written length prefix is torn by definition; a
+        // fully-written one whose frame overruns the file is torn too —
+        // this also catches a garbage length value, because a complete
+        // frame is always present for every record the session flushed.
+        if rem < 4 {
+            torn = 1;
+            break;
+        }
+        let len =
+            u32::from_le_bytes([wal[pos], wal[pos + 1], wal[pos + 2], wal[pos + 3]]) as usize;
+        if rem < 4 + len + 8 {
+            torn = 1;
+            break;
+        }
+        if len < MIN_BODY {
+            return Err(WalError::Corrupt(format!(
+                "record at byte {pos} has impossible body length {len}"
+            )));
+        }
+        let body = &wal[pos + 4..pos + 4 + len];
+        let sum = u64::from_le_bytes(
+            wal[pos + 4 + len..pos + 4 + len + 8].try_into().unwrap(),
+        );
+        if sum != fnv1a64(body) {
+            return Err(WalError::Corrupt(format!(
+                "record checksum mismatch at byte {pos}"
+            )));
+        }
+        let rec = parse_body(body)?;
+        if let Some(prev) = records.last() {
+            let prev: &WalRecord = prev;
+            if rec.seq != prev.seq + 1 {
+                return Err(WalError::Corrupt(format!(
+                    "sequence gap: record {} follows {}",
+                    rec.seq, prev.seq
+                )));
+            }
+        }
+        records.push(rec);
+        pos += 4 + len + 8;
+    }
+    if torn == 1 {
+        store.truncate(WAL, pos as u64)?;
+        store.flush(WAL)?;
+    }
+    Ok(LoadedLog {
+        checkpoint,
+        records,
+        torn_tail_truncations: torn,
+    })
+}
+
+// ---------------------------------------------------------------------------
+// Durability: the session-side write path
+// ---------------------------------------------------------------------------
+
+/// Tuning for a durable session.
+#[derive(Debug, Clone, Copy)]
+pub struct DurabilityConfig {
+    /// Auto-checkpoint after this many WAL records (appends, compacts,
+    /// closes) since the last checkpoint; `0` disables auto-checkpoints
+    /// (explicit `checkpoint_now` / `submit_checkpoint` only). The
+    /// replayed-on-recovery WAL tail is bounded by this interval.
+    pub checkpoint_interval: u64,
+}
+
+impl Default for DurabilityConfig {
+    fn default() -> Self {
+        Self {
+            checkpoint_interval: 64,
+        }
+    }
+}
+
+impl DurabilityConfig {
+    pub fn with_checkpoint_interval(mut self, every: u64) -> Self {
+        self.checkpoint_interval = every;
+        self
+    }
+}
+
+/// The per-session durability state: a boxed store, the next record
+/// sequence number, and the record count since the last checkpoint.
+/// Owned by `StreamSession`; all writes happen under the session lock,
+/// so WAL order always matches apply order.
+pub(crate) struct Durability {
+    store: Box<dyn DurableStore>,
+    cfg: DurabilityConfig,
+    next_seq: u64,
+    since_checkpoint: u64,
+    quarantined: Option<String>,
+}
+
+impl Durability {
+    pub(crate) fn new(store: Box<dyn DurableStore>, cfg: DurabilityConfig) -> Self {
+        Self {
+            store,
+            cfg,
+            next_seq: 0,
+            since_checkpoint: 0,
+            quarantined: None,
+        }
+    }
+
+    /// Re-attach after recovery: `next_seq` continues the parsed log,
+    /// `since_checkpoint` is the replayed tail length.
+    pub(crate) fn resume(
+        store: Box<dyn DurableStore>,
+        cfg: DurabilityConfig,
+        next_seq: u64,
+        since_checkpoint: u64,
+    ) -> Self {
+        Self {
+            store,
+            cfg,
+            next_seq,
+            since_checkpoint,
+            quarantined: None,
+        }
+    }
+
+    pub(crate) fn next_seq(&self) -> u64 {
+        self.next_seq
+    }
+
+    pub(crate) fn quarantined(&self) -> Option<&str> {
+        self.quarantined.as_deref()
+    }
+
+    pub(crate) fn quarantine(&mut self, reason: String) {
+        if self.quarantined.is_none() {
+            self.quarantined = Some(reason);
+        }
+    }
+
+    fn log(&mut self, kind: u8, payload: &[u8]) -> Result<(), WalError> {
+        let framed = frame(kind, self.next_seq, payload);
+        self.store.append(WAL, &framed)?;
+        self.store.flush(WAL)?;
+        self.next_seq += 1;
+        self.since_checkpoint += 1;
+        Ok(())
+    }
+
+    /// Log an admitted-batch record (the raw rows, pre-admission: even
+    /// rejected rows advance sieve and id-remap state, so replay needs
+    /// the whole batch).
+    pub(crate) fn log_append(&mut self, rows: &[f32]) -> Result<(), WalError> {
+        let mut payload = Vec::with_capacity(4 + rows.len() * 4);
+        put_u32(&mut payload, rows.len() as u32);
+        for &v in rows {
+            put_f32(&mut payload, v);
+        }
+        self.log(KIND_APPEND, &payload)
+    }
+
+    /// Log a window compaction (SS `rounds` + ascending kept offsets).
+    pub(crate) fn log_compact(&mut self, rounds: usize, kept: &[usize]) -> Result<(), WalError> {
+        let mut payload = Vec::with_capacity(8 + kept.len() * 4);
+        put_u32(&mut payload, rounds as u32);
+        put_u32(&mut payload, kept.len() as u32);
+        for &k in kept {
+            put_u32(&mut payload, k as u32);
+        }
+        self.log(KIND_COMPACT, &payload)
+    }
+
+    /// Log a clean close.
+    pub(crate) fn log_close(&mut self) -> Result<(), WalError> {
+        self.log(KIND_CLOSE, &[])
+    }
+
+    /// True when the auto-checkpoint interval has elapsed.
+    pub(crate) fn checkpoint_due(&self) -> bool {
+        self.cfg.checkpoint_interval > 0 && self.since_checkpoint >= self.cfg.checkpoint_interval
+    }
+
+    /// Atomically replace the checkpoint blob, then reset the WAL. A
+    /// crash between the two is safe: recovery skips records whose seq
+    /// is below the checkpoint's embedded `wal_seq`. Returns the
+    /// checkpoint blob size in bytes.
+    pub(crate) fn write_checkpoint(&mut self, payload: &[u8]) -> Result<usize, WalError> {
+        let framed = frame_checkpoint(payload);
+        let bytes = framed.len();
+        self.store.write_atomic(CHECKPOINT, &framed)?;
+        self.store.flush(CHECKPOINT)?;
+        self.store.truncate(WAL, 0)?;
+        self.store.flush(WAL)?;
+        self.since_checkpoint = 0;
+        Ok(bytes)
+    }
+
+    /// Reclaim the boxed store (used when recovery hands ownership
+    /// through a temporary `Durability`).
+    #[allow(dead_code)]
+    pub(crate) fn into_store(self) -> Box<dyn DurableStore> {
+        self.store
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Tests
+// ---------------------------------------------------------------------------
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn mem() -> MemStore {
+        MemStore::new()
+    }
+
+    #[test]
+    fn fnv1a64_matches_reference_vectors() {
+        // Published FNV-1a 64 vectors.
+        assert_eq!(fnv1a64(b""), 0xcbf2_9ce4_8422_2325);
+        assert_eq!(fnv1a64(b"a"), 0xaf63_dc4c_8601_ec8c);
+        assert_eq!(fnv1a64(b"foobar"), 0x85944171f73967e8);
+    }
+
+    #[test]
+    fn wal_round_trips_all_record_kinds() {
+        let store = mem();
+        let mut d = Durability::new(Box::new(store.clone()), DurabilityConfig::default());
+        d.log_append(&[1.0, 2.5, -0.0]).unwrap();
+        d.log_compact(3, &[0, 2, 5]).unwrap();
+        d.log_close().unwrap();
+        assert_eq!(d.next_seq(), 3);
+
+        let mut reader = store.clone();
+        let loaded = load(&mut reader).unwrap();
+        assert!(loaded.checkpoint.is_none());
+        assert_eq!(loaded.torn_tail_truncations, 0);
+        assert_eq!(loaded.records.len(), 3);
+        assert_eq!(
+            loaded.records[0].kind,
+            RecordKind::Append(vec![1.0, 2.5, -0.0])
+        );
+        assert_eq!(
+            loaded.records[1].kind,
+            RecordKind::Compact {
+                rounds: 3,
+                kept: vec![0, 2, 5]
+            }
+        );
+        assert_eq!(loaded.records[2].kind, RecordKind::Close);
+        assert_eq!(loaded.records[2].seq, 2);
+    }
+
+    #[test]
+    fn torn_tail_is_truncated_not_fatal() {
+        let store = mem();
+        let mut d = Durability::new(Box::new(store.clone()), DurabilityConfig::default());
+        d.log_append(&[1.0, 2.0]).unwrap();
+        d.log_append(&[3.0, 4.0]).unwrap();
+        let full = store.len(WAL);
+        // Tear anywhere inside the second record, including mid-prefix.
+        for chop in 1..(full / 2) {
+            let s = mem();
+            s.set_raw(WAL, store.raw(WAL).unwrap());
+            s.chop_tail(WAL, chop);
+            let mut reader = s.clone();
+            let loaded = load(&mut reader).unwrap();
+            assert_eq!(loaded.torn_tail_truncations, 1, "chop {chop}");
+            assert_eq!(loaded.records.len(), 1, "chop {chop}");
+            // The file was repaired in place: a second load is clean.
+            let again = load(&mut s.clone()).unwrap();
+            assert_eq!(again.torn_tail_truncations, 0);
+            assert_eq!(again.records.len(), 1);
+        }
+    }
+
+    #[test]
+    fn corrupt_body_is_a_typed_error() {
+        let store = mem();
+        let mut d = Durability::new(Box::new(store.clone()), DurabilityConfig::default());
+        d.log_append(&[1.0, 2.0, 3.0]).unwrap();
+        d.log_append(&[4.0, 5.0, 6.0]).unwrap();
+        // Flip a byte inside the *first* record's body: a complete frame
+        // with a bad checksum is corruption, never a torn tail.
+        store.flip_byte(WAL, 14);
+        let err = load(&mut store.clone()).unwrap_err();
+        assert!(matches!(err, WalError::Corrupt(_)), "{err:?}");
+    }
+
+    #[test]
+    fn sequence_gap_is_corruption() {
+        let store = mem();
+        let mut a = Durability::new(Box::new(store.clone()), DurabilityConfig::default());
+        a.log_append(&[1.0]).unwrap();
+        // Forge a second durability whose seq skips ahead.
+        let mut b = Durability::resume(
+            Box::new(store.clone()),
+            DurabilityConfig::default(),
+            5,
+            0,
+        );
+        b.log_append(&[2.0]).unwrap();
+        let err = load(&mut store.clone()).unwrap_err();
+        assert!(matches!(err, WalError::Corrupt(_)), "{err:?}");
+    }
+
+    #[test]
+    fn checkpoint_frame_round_trip_and_corruption() {
+        let store = mem();
+        let payload = vec![9u8, 8, 7, 6, 5];
+        let mut d = Durability::new(Box::new(store.clone()), DurabilityConfig::default());
+        d.log_append(&[1.0]).unwrap();
+        d.write_checkpoint(&payload).unwrap();
+        // Checkpoint resets the WAL; seq keeps counting.
+        assert_eq!(store.len(WAL), 0);
+        d.log_append(&[2.0]).unwrap();
+        assert_eq!(d.next_seq(), 2);
+
+        let loaded = load(&mut store.clone()).unwrap();
+        assert_eq!(loaded.checkpoint.as_deref(), Some(&payload[..]));
+        assert_eq!(loaded.records.len(), 1);
+        assert_eq!(loaded.records[0].seq, 1);
+
+        // Any flipped checkpoint byte is Corrupt (magic, len, payload, sum).
+        let blob = store.raw(CHECKPOINT).unwrap();
+        for idx in 0..blob.len() {
+            let s = mem();
+            s.set_raw(CHECKPOINT, blob.clone());
+            s.flip_byte(CHECKPOINT, idx);
+            let err = load(&mut s.clone());
+            assert!(
+                matches!(err, Err(WalError::Corrupt(_))),
+                "byte {idx}: {err:?}"
+            );
+        }
+        // A short-read checkpoint is Corrupt too, never truncated.
+        for cap in 0..blob.len() {
+            let s = mem();
+            s.set_raw(CHECKPOINT, blob[..cap].to_vec());
+            if cap == 0 {
+                // Zero bytes parses as "blob exists but has no header".
+                let err = load(&mut s.clone());
+                assert!(matches!(err, Err(WalError::Corrupt(_))), "cap 0: {err:?}");
+                continue;
+            }
+            let err = load(&mut s.clone());
+            assert!(matches!(err, Err(WalError::Corrupt(_))), "cap {cap}: {err:?}");
+        }
+    }
+
+    #[test]
+    fn fault_store_budget_drops_and_torn_writes() {
+        // Budget 1: the first append lands, the second vanishes.
+        let base = mem();
+        let faulty = FaultStore::new(Box::new(base.clone())).fail_after(1);
+        let mut d = Durability::new(Box::new(faulty), DurabilityConfig::default());
+        d.log_append(&[1.0]).unwrap();
+        d.log_append(&[2.0]).unwrap(); // silently dropped
+        let loaded = load(&mut base.clone()).unwrap();
+        assert_eq!(loaded.records.len(), 1);
+        assert_eq!(loaded.torn_tail_truncations, 0);
+
+        // Torn tail: the over-budget append lands a 5-byte prefix.
+        let base = mem();
+        let faulty = FaultStore::new(Box::new(base.clone()))
+            .fail_after(1)
+            .with_torn_tail(5);
+        let mut d = Durability::new(Box::new(faulty), DurabilityConfig::default());
+        d.log_append(&[1.0]).unwrap();
+        d.log_append(&[2.0]).unwrap();
+        let loaded = load(&mut base.clone()).unwrap();
+        assert_eq!(loaded.records.len(), 1);
+        assert_eq!(loaded.torn_tail_truncations, 1);
+
+        // Error mode: the drop is reported as Io.
+        let base = mem();
+        let faulty = FaultStore::new(Box::new(base.clone()))
+            .fail_after(0)
+            .with_error_on_fault();
+        let mut d = Durability::new(Box::new(faulty), DurabilityConfig::default());
+        let err = d.log_append(&[1.0]).unwrap_err();
+        assert!(matches!(err, WalError::Io(_)));
+    }
+
+    #[test]
+    fn file_store_round_trip() {
+        let dir = std::env::temp_dir().join(format!(
+            "ss_wal_unit_{}_{:?}",
+            std::process::id(),
+            std::thread::current().id()
+        ));
+        let _ = std::fs::remove_dir_all(&dir);
+        {
+            let store = FileStore::open(&dir).unwrap();
+            let mut d = Durability::new(Box::new(store), DurabilityConfig::default());
+            d.log_append(&[1.5, -2.5]).unwrap();
+            d.write_checkpoint(b"payload").unwrap();
+            d.log_compact(2, &[0, 1]).unwrap();
+        }
+        {
+            let mut store = FileStore::open(&dir).unwrap();
+            let loaded = load(&mut store).unwrap();
+            assert_eq!(loaded.checkpoint.as_deref(), Some(&b"payload"[..]));
+            assert_eq!(loaded.records.len(), 1);
+            assert_eq!(
+                loaded.records[0].kind,
+                RecordKind::Compact {
+                    rounds: 2,
+                    kept: vec![0, 1]
+                }
+            );
+            assert_eq!(loaded.records[0].seq, 1);
+        }
+        std::fs::remove_dir_all(&dir).unwrap();
+    }
+}

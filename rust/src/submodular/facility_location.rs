@@ -109,6 +109,14 @@ impl FacilityLocation {
         Self { n: feats.n(), store: SimStore::Sparse(SparseSimStore::from_features(feats, t)) }
     }
 
+    /// Wrap an already-materialized sparse store — the checkpoint-restore
+    /// seam: a stream session's post-eviction neighbor history is not
+    /// reproducible from the surviving feature rows, so recovery rebuilds
+    /// the store from persisted lists and adopts it here verbatim.
+    pub fn from_sparse_store(store: SparseSimStore) -> Self {
+        Self { n: store.n(), store: SimStore::Sparse(store) }
+    }
+
     /// Configurable construction — the `ObjectiveSpec` seam: dense iff
     /// `n < crossover`; otherwise sparse with `t` neighbors (auto-sized
     /// [`auto_neighbors`] when `None`), shard-parallel over `pooled` when

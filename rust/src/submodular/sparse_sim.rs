@@ -363,6 +363,69 @@ impl SparseSimStore {
         self.recompute_col_sums();
     }
 
+    /// Clone out the complete durable state: `(n, t, len, cols, vals)`.
+    /// Neighbor lists are *history* — after an eviction they are not
+    /// reproducible from the surviving feature rows (dropped entries are
+    /// gone, not refilled) — so checkpoints must carry them verbatim.
+    /// `col_sums` is deliberately excluded: it is a pure function of the
+    /// lists (see [`from_parts`](Self::from_parts)).
+    pub fn export_parts(&self) -> (usize, usize, Vec<u32>, Vec<u32>, Vec<f32>) {
+        (self.n, self.t, self.len.clone(), self.cols.clone(), self.vals.clone())
+    }
+
+    /// Rebuild from [`export_parts`](Self::export_parts) output,
+    /// revalidating the layout invariants (slot bounds, ascending
+    /// columns) and recomputing `col_sums` with the exact fold order —
+    /// so the restored store is bit-identical to the exported one, and
+    /// corrupt checkpoint bytes surface as a typed error, not a panic.
+    pub fn from_parts(
+        n: usize,
+        t: usize,
+        len: Vec<u32>,
+        cols: Vec<u32>,
+        vals: Vec<f32>,
+    ) -> Result<Self, String> {
+        let cap = t + 1;
+        if len.len() != n {
+            return Err(format!("sparse store: {} row lengths for n={n}", len.len()));
+        }
+        if cols.len() != n * cap || vals.len() != n * cap {
+            return Err(format!(
+                "sparse store: slot arrays {}x{} don't match n*cap={}",
+                cols.len(),
+                vals.len(),
+                n * cap
+            ));
+        }
+        for (i, &l) in len.iter().enumerate() {
+            let l = l as usize;
+            if l > cap {
+                return Err(format!("sparse store: row {i} length {l} exceeds cap {cap}"));
+            }
+            let lo = i * cap;
+            for k in 0..l {
+                let c = cols[lo + k];
+                if c as usize >= n {
+                    return Err(format!("sparse store: row {i} column {c} out of range"));
+                }
+                if k > 0 && cols[lo + k - 1] >= c {
+                    return Err(format!("sparse store: row {i} columns not ascending"));
+                }
+            }
+        }
+        let mut store = Self {
+            n,
+            t,
+            cap,
+            len,
+            cols,
+            vals,
+            col_sums: Vec::new(),
+        };
+        store.recompute_col_sums();
+        Ok(store)
+    }
+
     /// Rebuild the per-column sums with the dense `singleton` fold order:
     /// ascending row index, f64 accumulation (absent entries contribute an
     /// exact `+0.0`, so skipping them preserves the bits).

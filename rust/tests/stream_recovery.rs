@@ -1,0 +1,554 @@
+//! Crash-exact recovery contract tests for durable streaming sessions.
+//!
+//! The durability design is log-before-apply: an admitted batch hits the
+//! write-ahead log before the session mutates, eviction decisions are
+//! logged after each windowed re-sparsification, and checkpoints cover
+//! (and truncate) the log. The contract pinned here:
+//!
+//! 1. **Kill-point sweep** — for *every* mutating-store operation a crash
+//!    could land after, the session recovered from what survived is
+//!    **bit-identical** to an uninterrupted session fed the durable
+//!    prefix: same lifetime accounting, same external-id → row mapping,
+//!    same sieve state, same Final-snapshot summary and f64 value bits —
+//!    across objectives (feature-based with and without the admission
+//!    filter, dense facility location, sparse facility location whose
+//!    post-eviction neighbor history must come back from the checkpoint).
+//!    And the recovered session keeps streaming: feeding the remaining
+//!    batches to both yields identical finals.
+//! 2. **Torn tails** are truncated (once, counted), never fatal.
+//! 3. **Checksum corruption** (WAL or checkpoint) reports a typed
+//!    `Rejected` — recovery never panics on a damaged store.
+//! 4. The replayed WAL tail is **bounded by the checkpoint interval**.
+//! 5. A store that starts erroring **quarantines** the session: mutating
+//!    calls reject typed, reads still work, nothing panics.
+
+use std::sync::atomic::Ordering;
+use std::sync::Arc;
+
+use submodular_ss::algorithms::SsParams;
+use submodular_ss::coordinator::{Metrics, ServiceError};
+use submodular_ss::stream::{
+    DurabilityConfig, FaultStore, FileStore, MemStore, ObjectiveSpec, SieveParams, SnapshotMode,
+    StreamConfig, StreamSession,
+};
+use submodular_ss::submodular::Concave;
+use submodular_ss::util::pool::ThreadPool;
+use submodular_ss::util::rng::Rng;
+use submodular_ss::util::vecmath::FeatureMatrix;
+
+fn rows(n: usize, d: usize, seed: u64) -> FeatureMatrix {
+    let mut rng = Rng::new(seed);
+    let mut m = FeatureMatrix::zeros(n, d);
+    for i in 0..n {
+        for j in 0..d {
+            m.row_mut(i)[j] = if rng.bool(0.35) { rng.f32() } else { 0.0 };
+        }
+    }
+    m
+}
+
+fn pool() -> Arc<ThreadPool> {
+    Arc::new(ThreadPool::new(2, 16))
+}
+
+fn fresh(kind: ObjectiveSpec, d: usize, cfg: StreamConfig) -> StreamSession {
+    StreamSession::new(kind, d, cfg, pool(), Arc::new(Metrics::new())).unwrap()
+}
+
+/// Full bit-exactness check: accounting, id → row mapping, and the exact
+/// Final snapshot (summary ids + f64 value bits, which transitively pins
+/// retained rows, buffer contents, sieve state and SS trajectory).
+fn assert_identical(tag: &str, a: &mut StreamSession, b: &mut StreamSession) {
+    assert_eq!(a.stats(), b.stats(), "{tag}: lifetime accounting diverged");
+    assert_eq!(a.remap().assigned(), b.remap().assigned(), "{tag}: assigned ids diverged");
+    for ext in 0..a.remap().assigned() {
+        assert_eq!(a.row(ext), b.row(ext), "{tag}: row for ext id {ext} diverged");
+    }
+    if a.stats().live == 0 {
+        return; // nothing durable survived; nothing to summarize
+    }
+    let sa = a.snapshot_summary(SnapshotMode::Final).unwrap();
+    let sb = b.snapshot_summary(SnapshotMode::Final).unwrap();
+    assert_eq!(sa.summary, sb.summary, "{tag}: snapshot summaries diverged");
+    assert_eq!(sa.value.to_bits(), sb.value.to_bits(), "{tag}: snapshot value bits diverged");
+    assert_eq!(sa.ss_rounds, sb.ss_rounds, "{tag}: snapshot SS trajectory diverged");
+}
+
+/// Run the scenario uninterrupted once to enumerate the mutating-store
+/// operations, then re-run it against a store that drops everything after
+/// op `kill` — for every `kill` — and check the recovered session is
+/// bit-identical to an oracle fed exactly the batches whose WAL record
+/// landed, both at recovery and after the stream continues.
+fn kill_sweep(name: &str, kind: ObjectiveSpec, d: usize, cfg: &StreamConfig, batches: &[FeatureMatrix]) {
+    let dcfg = DurabilityConfig::default().with_checkpoint_interval(4);
+
+    // --- probe run: where does each batch's WAL write land in op order? ---
+    let probe = FaultStore::new(Box::new(MemStore::new()));
+    let ops = probe.ops_counter();
+    let mut session = StreamSession::open_durable(
+        kind,
+        d,
+        cfg.clone(),
+        pool(),
+        Arc::new(Metrics::new()),
+        Box::new(probe),
+        dcfg,
+    )
+    .unwrap();
+    let mut pre = Vec::with_capacity(batches.len());
+    for b in batches {
+        // the batch's log-before-apply WAL append is the next mutating op
+        pre.push(ops.load(Ordering::SeqCst));
+        session.append(b.data()).unwrap();
+    }
+    let total_ops = ops.load(Ordering::SeqCst);
+    if cfg.admission.is_none() {
+        // (with the sieve filter on, eviction depends on the admission rate
+        // — the sweep still pins whatever trajectory the data produces)
+        assert!(session.stats().evicted > 0, "{name}: scenario must exercise eviction");
+    }
+    drop(session);
+
+    for kill in 0..=total_ops {
+        let tag = format!("{name}/kill={kill}");
+        let surviving = MemStore::new();
+        let fault = FaultStore::new(Box::new(surviving.clone())).fail_after(kill);
+        let mut doomed = StreamSession::open_durable(
+            kind,
+            d,
+            cfg.clone(),
+            pool(),
+            Arc::new(Metrics::new()),
+            Box::new(fault),
+            dcfg,
+        )
+        .unwrap();
+        for b in batches {
+            let _ = doomed.append(b.data());
+        }
+        drop(doomed); // crash: whatever reached `surviving` is all that's left
+
+        let recovered = StreamSession::recover_with_report(
+            pool(),
+            Arc::new(Metrics::new()),
+            Box::new(surviving.clone()),
+            dcfg,
+        );
+        if kill == 0 {
+            // even the open checkpoint never landed: typed, not a panic
+            match recovered {
+                Err(ServiceError::Rejected { reason }) => {
+                    assert!(reason.contains("recovery failed"), "{tag}: {reason}");
+                }
+                Ok(_) => panic!("{tag}: recovery without any checkpoint must fail typed"),
+                Err(other) => panic!("{tag}: expected Rejected, got {other:?}"),
+            }
+            continue;
+        }
+        let (mut rec, report) =
+            recovered.unwrap_or_else(|e| panic!("{tag}: recovery failed: {e}"));
+        assert_eq!(report.torn_tail_truncations, 0, "{tag}: whole-record drops tear nothing");
+
+        // batch j is durable iff its WAL write (op pre[j]) was within budget
+        let durable_prefix = pre.iter().filter(|&&p| p < kill).count();
+        let mut oracle = fresh(kind, d, cfg.clone());
+        for b in &batches[..durable_prefix] {
+            oracle.append(b.data()).unwrap();
+        }
+        assert_identical(&tag, &mut rec, &mut oracle);
+
+        // the recovered session keeps streaming, in lockstep with the oracle
+        for b in &batches[durable_prefix..] {
+            let ra = rec.append(b.data()).unwrap();
+            let oa = oracle.append(b.data()).unwrap();
+            assert_eq!(ra.first_ext, oa.first_ext, "{tag}: id assignment diverged post-recovery");
+        }
+        assert_identical(&format!("{tag}/continued"), &mut rec, &mut oracle);
+    }
+}
+
+#[test]
+fn every_kill_point_recovers_bit_identical_features() {
+    let d = 6;
+    let cfg = StreamConfig::new(4)
+        .with_ss(SsParams::default().with_seed(3).with_min_keep(8))
+        .with_high_water(48);
+    let batches: Vec<FeatureMatrix> = (0..6).map(|i| rows(36, d, 100 + i)).collect();
+    kill_sweep("features", ObjectiveSpec::Features(Concave::Sqrt), d, &cfg, &batches);
+}
+
+#[test]
+fn every_kill_point_recovers_bit_identical_features_with_sieve_filter() {
+    let d = 6;
+    let cfg = StreamConfig::new(4)
+        .with_ss(SsParams::default().with_seed(5).with_min_keep(8))
+        .with_high_water(40)
+        .with_admission(SieveParams::paper_default());
+    let batches: Vec<FeatureMatrix> = (0..6).map(|i| rows(36, d, 200 + i)).collect();
+    kill_sweep("features+sieve", ObjectiveSpec::Features(Concave::Sqrt), d, &cfg, &batches);
+}
+
+#[test]
+fn every_kill_point_recovers_bit_identical_dense_facility_location() {
+    let d = 6;
+    let cfg = StreamConfig::new(4)
+        .with_ss(SsParams::default().with_seed(7).with_min_keep(8))
+        .with_high_water(40);
+    let batches: Vec<FeatureMatrix> = (0..5).map(|i| rows(24, d, 300 + i)).collect();
+    kill_sweep("facility-dense", ObjectiveSpec::FacilityLocation, d, &cfg, &batches);
+}
+
+#[test]
+fn every_kill_point_recovers_bit_identical_sparse_facility_location() {
+    // crossover 0 forces the sparse top-t store from the first row; its
+    // neighbor lists carry post-eviction history that only the checkpoint
+    // can restore (retained rows alone rebuild a *different* store than
+    // one grown through the eviction sequence)
+    let d = 6;
+    let cfg = StreamConfig::new(4)
+        .with_ss(SsParams::default().with_seed(9).with_min_keep(8))
+        .with_high_water(40);
+    let kind = ObjectiveSpec::FacilityLocationSparse { t: 8, crossover: 0 };
+    let batches: Vec<FeatureMatrix> = (0..5).map(|i| rows(24, d, 400 + i)).collect();
+    kill_sweep("facility-sparse", kind, d, &cfg, &batches);
+}
+
+#[test]
+fn torn_wal_tail_is_truncated_once_and_counted() {
+    let d = 6;
+    let kind = ObjectiveSpec::Features(Concave::Sqrt);
+    // full window (no compaction records) so the WAL holds exactly one
+    // record per batch and the replay arithmetic below is exact
+    let cfg = StreamConfig::new(4).with_ss(SsParams::default().with_seed(11));
+    let dcfg = DurabilityConfig::default().with_checkpoint_interval(0); // keep the whole WAL
+    let batches: Vec<FeatureMatrix> = (0..5).map(|i| rows(30, d, 500 + i)).collect();
+
+    // probe for the op position of each batch's WAL write
+    let probe = FaultStore::new(Box::new(MemStore::new()));
+    let ops = probe.ops_counter();
+    let mut session = StreamSession::open_durable(
+        kind,
+        d,
+        cfg.clone(),
+        pool(),
+        Arc::new(Metrics::new()),
+        Box::new(probe),
+        dcfg,
+    )
+    .unwrap();
+    let mut pre = Vec::new();
+    for b in &batches {
+        pre.push(ops.load(Ordering::SeqCst));
+        session.append(b.data()).unwrap();
+    }
+    drop(session);
+
+    // crash exactly at batch 3's WAL write, landing a 7-byte prefix of it
+    let torn_at = 3;
+    let surviving = MemStore::new();
+    let fault = FaultStore::new(Box::new(surviving.clone()))
+        .fail_after(pre[torn_at])
+        .with_torn_tail(7);
+    let mut doomed = StreamSession::open_durable(
+        kind,
+        d,
+        cfg.clone(),
+        pool(),
+        Arc::new(Metrics::new()),
+        Box::new(fault),
+        dcfg,
+    )
+    .unwrap();
+    for b in &batches {
+        let _ = doomed.append(b.data());
+    }
+    drop(doomed);
+    let wal_with_tear = surviving.len("wal");
+
+    let metrics = Arc::new(Metrics::new());
+    let (mut rec, report) = StreamSession::recover_with_report(
+        pool(),
+        Arc::clone(&metrics),
+        Box::new(surviving.clone()),
+        dcfg,
+    )
+    .unwrap();
+    assert_eq!(report.torn_tail_truncations, 1, "exactly one torn tail");
+    assert_eq!(report.replayed_records, torn_at as u64, "records before the tear replay");
+    assert_eq!(
+        metrics.counters.torn_tail_truncations.load(Ordering::Relaxed),
+        1,
+        "the truncation must be metered"
+    );
+    assert!(
+        surviving.len("wal") < wal_with_tear,
+        "recovery must truncate the torn bytes in place"
+    );
+
+    // recovered == oracle over the durable prefix (everything before the tear)
+    let mut oracle = fresh(kind, d, cfg);
+    for b in &batches[..torn_at] {
+        oracle.append(b.data()).unwrap();
+    }
+    assert_identical("torn-tail", &mut rec, &mut oracle);
+
+    // the truncated log is coherent: recovering again finds no tear
+    drop(rec);
+    let (_, again) = StreamSession::recover_with_report(
+        pool(),
+        Arc::new(Metrics::new()),
+        Box::new(surviving),
+        dcfg,
+    )
+    .unwrap();
+    assert_eq!(again.torn_tail_truncations, 0);
+}
+
+#[test]
+fn corrupt_wal_or_checkpoint_rejects_typed_never_panics() {
+    let d = 6;
+    let kind = ObjectiveSpec::Features(Concave::Sqrt);
+    let cfg = StreamConfig::new(4).with_ss(SsParams::default().with_seed(13));
+    let dcfg = DurabilityConfig::default().with_checkpoint_interval(0);
+    let store = MemStore::new();
+    let mut session = StreamSession::open_durable(
+        kind,
+        d,
+        cfg,
+        pool(),
+        Arc::new(Metrics::new()),
+        Box::new(store.clone()),
+        dcfg,
+    )
+    .unwrap();
+    for i in 0..3 {
+        session.append(rows(20, d, 600 + i).data()).unwrap();
+    }
+    drop(session);
+
+    // MemStore clones share blobs, so corrupt deep copies, not handles
+    let deep_copy = |src: &MemStore| {
+        let dst = MemStore::new();
+        for name in ["wal", "checkpoint"] {
+            if let Some(bytes) = src.raw(name) {
+                dst.set_raw(name, bytes);
+            }
+        }
+        dst
+    };
+
+    // flip a byte inside the first record's body (past the 4-byte length
+    // prefix) — the checksum must catch it and quarantine, not panic
+    let wal_broken = deep_copy(&store);
+    wal_broken.flip_byte("wal", 14);
+    match StreamSession::recover_with_report(
+        pool(),
+        Arc::new(Metrics::new()),
+        Box::new(wal_broken.clone()),
+        dcfg,
+    ) {
+        Err(ServiceError::Rejected { reason }) => {
+            assert!(reason.contains("recovery failed"), "{reason}");
+        }
+        Ok(_) => panic!("corrupt WAL record must not recover silently"),
+        Err(other) => panic!("expected Rejected, got {other:?}"),
+    }
+    // a corrupt record is quarantined, not destroyed: the bytes are left
+    // for forensics (unlike a torn tail, which is truncated)
+    assert_eq!(wal_broken.len("wal"), store.len("wal"));
+
+    // corrupt checkpoint: same typed shape
+    let ckpt_broken = deep_copy(&store);
+    ckpt_broken.flip_byte("checkpoint", 12);
+    match StreamSession::recover_with_report(
+        pool(),
+        Arc::new(Metrics::new()),
+        Box::new(ckpt_broken),
+        dcfg,
+    ) {
+        Err(ServiceError::Rejected { reason }) => {
+            assert!(reason.contains("recovery failed"), "{reason}");
+        }
+        Ok(_) => panic!("corrupt checkpoint must not recover silently"),
+        Err(other) => panic!("expected Rejected, got {other:?}"),
+    }
+
+    // the pristine store still recovers fine
+    assert!(StreamSession::recover_with_report(
+        pool(),
+        Arc::new(Metrics::new()),
+        Box::new(store),
+        dcfg,
+    )
+    .is_ok());
+}
+
+#[test]
+fn replayed_wal_tail_is_bounded_by_the_checkpoint_interval() {
+    let d = 4;
+    let kind = ObjectiveSpec::Features(Concave::Sqrt);
+    // full window: no compaction records, so the arithmetic is exact
+    let cfg = StreamConfig::new(3).with_ss(SsParams::default().with_seed(15));
+    let interval = 4u64;
+    let dcfg = DurabilityConfig::default().with_checkpoint_interval(interval);
+    let store = MemStore::new();
+    let mut session = StreamSession::open_durable(
+        kind,
+        d,
+        cfg,
+        pool(),
+        Arc::new(Metrics::new()),
+        Box::new(store.clone()),
+        dcfg,
+    )
+    .unwrap();
+    let n_batches = 14u64; // 14 ≡ 2 (mod 4): two records past the last auto-checkpoint
+    for i in 0..n_batches {
+        session.append(rows(10, d, 700 + i).data()).unwrap();
+    }
+    drop(session); // crash without close
+
+    let (_, report) = StreamSession::recover_with_report(
+        pool(),
+        Arc::new(Metrics::new()),
+        Box::new(store),
+        dcfg,
+    )
+    .unwrap();
+    assert_eq!(report.replayed_records, n_batches % interval);
+    assert!(report.replayed_records <= interval, "replay must be bounded by the interval");
+    assert_eq!(report.checkpoint_seq, n_batches - n_batches % interval);
+}
+
+#[test]
+fn graceful_close_recovers_as_a_closed_session() {
+    let d = 5;
+    let kind = ObjectiveSpec::Features(Concave::Sqrt);
+    let cfg = StreamConfig::new(3).with_ss(SsParams::default().with_seed(17));
+    let dcfg = DurabilityConfig::default();
+    let store = MemStore::new();
+    let mut session = StreamSession::open_durable(
+        kind,
+        d,
+        cfg,
+        pool(),
+        Arc::new(Metrics::new()),
+        Box::new(store.clone()),
+        dcfg,
+    )
+    .unwrap();
+    session.append(rows(40, d, 800).data()).unwrap();
+    let stats = session.close();
+    drop(session);
+
+    let (mut rec, _) = StreamSession::recover_with_report(
+        pool(),
+        Arc::new(Metrics::new()),
+        Box::new(store),
+        dcfg,
+    )
+    .unwrap();
+    assert_eq!(rec.stats(), stats, "closed-session accounting must survive recovery");
+    match rec.append(rows(5, d, 801).data()) {
+        Err(ServiceError::ServiceDown) => {}
+        other => panic!("a recovered closed session must shed appends, got {other:?}"),
+    }
+}
+
+#[test]
+fn store_io_errors_quarantine_the_session_typed() {
+    let d = 5;
+    let kind = ObjectiveSpec::Features(Concave::Sqrt);
+    let cfg = StreamConfig::new(3).with_ss(SsParams::default().with_seed(19));
+    let dcfg = DurabilityConfig::default().with_checkpoint_interval(0);
+    // the open checkpoint takes 2 ops; the first batch takes 1; the disk
+    // "fails" at the second batch's WAL write
+    let fault = FaultStore::new(Box::new(MemStore::new())).fail_after(3).with_error_on_fault();
+    let mut session = StreamSession::open_durable(
+        kind,
+        d,
+        cfg,
+        pool(),
+        Arc::new(Metrics::new()),
+        Box::new(fault),
+        dcfg,
+    )
+    .unwrap();
+    session.append(rows(20, d, 900).data()).unwrap();
+    let before = session.stats();
+
+    match session.append(rows(20, d, 901).data()) {
+        Err(ServiceError::Rejected { reason }) => {
+            assert!(reason.contains("injected fault"), "{reason}");
+        }
+        other => panic!("a failed WAL write must reject the batch typed, got {other:?}"),
+    }
+    // log-before-apply: the rejected batch left no trace in memory
+    assert_eq!(session.stats(), before, "a rejected batch must not mutate the session");
+
+    // quarantine is sticky across every mutating call…
+    match session.append(rows(20, d, 902).data()) {
+        Err(ServiceError::Rejected { reason }) => {
+            assert!(reason.contains("quarantined"), "{reason}");
+        }
+        other => panic!("a quarantined session must stay rejected, got {other:?}"),
+    }
+    match session.checkpoint_now() {
+        Err(ServiceError::Rejected { reason }) => {
+            assert!(reason.contains("quarantined"), "{reason}");
+        }
+        other => panic!("a quarantined session must refuse checkpoints, got {other:?}"),
+    }
+    // …while reads still work: the in-memory state is intact
+    let snap = session.snapshot_summary(SnapshotMode::Final).unwrap();
+    assert_eq!(snap.live, before.live);
+    assert!(snap.value > 0.0);
+}
+
+#[test]
+fn file_store_round_trip_with_temp_dir_hygiene() {
+    let d = 6;
+    let kind = ObjectiveSpec::Features(Concave::Sqrt);
+    let cfg = StreamConfig::new(4)
+        .with_ss(SsParams::default().with_seed(21).with_min_keep(8))
+        .with_high_water(48);
+    let dcfg = DurabilityConfig::default().with_checkpoint_interval(4);
+    let dir = std::env::temp_dir().join(format!("ss_stream_recovery_{}", std::process::id()));
+    let batches: Vec<FeatureMatrix> = (0..4).map(|i| rows(30, d, 950 + i)).collect();
+
+    let result = std::panic::catch_unwind(|| {
+        let store = FileStore::open(&dir).unwrap();
+        let mut session = StreamSession::open_durable(
+            kind,
+            d,
+            cfg.clone(),
+            pool(),
+            Arc::new(Metrics::new()),
+            Box::new(store),
+            dcfg,
+        )
+        .unwrap();
+        for b in &batches {
+            session.append(b.data()).unwrap();
+        }
+        drop(session); // crash: only the files remain
+
+        let (mut rec, _) = StreamSession::recover_with_report(
+            pool(),
+            Arc::new(Metrics::new()),
+            Box::new(FileStore::open(&dir).unwrap()),
+            dcfg,
+        )
+        .unwrap();
+        let mut oracle = fresh(kind, d, cfg.clone());
+        for b in &batches {
+            oracle.append(b.data()).unwrap();
+        }
+        assert_identical("file-store", &mut rec, &mut oracle);
+    });
+    // temp-dir hygiene: remove our directory whether the body passed or not
+    let _ = std::fs::remove_dir_all(&dir);
+    if let Err(p) = result {
+        std::panic::resume_unwind(p);
+    }
+}
