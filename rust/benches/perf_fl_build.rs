@@ -1,0 +1,223 @@
+//! Perf: **LSH-bucketed neighbor build** vs the exact all-pairs O(n²·d)
+//! builder behind `SparseSimStore`. One leg per scale: build the top-t
+//! store both ways (same explicit t, so the comparison is
+//! candidate-generation only), then run the production pipeline
+//! (`ss_then_greedy` over a `ShardedBackend`) on each and score the
+//! LSH-built leg's pick under the exact-built objective.
+//!
+//! Always-on correctness gates (cheap, deterministic, run even under
+//! SS_SMOKE=1):
+//! * saturation bit-identity: `Lsh { tables: 1, bits: 0 }` (one bucket =
+//!   all pairs) must reproduce the exact builder's store bit for bit,
+//! * rel-utility ≥ 0.95: the LSH-built pipeline's summary, scored under
+//!   the exact-built objective, at every scale,
+//! * accounting: the LSH store's `resident_bytes` must exceed the exact
+//!   store's (the hash tables are resident state — the memory gates in
+//!   `perf_sparse_fl` must not be gameable by hiding the index).
+//!
+//! Perf gate behind `SS_STRICT=1`: LSH build ≥ 4× faster than the exact
+//! build at the largest scale.
+//!
+//! Machine-readable `BENCH_fl_build.json` lands at the repository root.
+//! Run: `cargo bench --bench perf_fl_build` (SS_FULL=1 for paper scale
+//! n ∈ {5k, 20k, 80k}, SS_SMOKE=1 for the CI smoke).
+
+use std::sync::Arc;
+
+use submodular_ss::algorithms::{ss_then_greedy, SsParams};
+use submodular_ss::bench::{full_scale, Table};
+use submodular_ss::coordinator::{Compute, Metrics, ShardedBackend};
+use submodular_ss::submodular::{
+    BatchedDivergence, BuildStrategy, FacilityLocation, SubmodularFn,
+};
+use submodular_ss::util::json::Json;
+use submodular_ss::util::pool::ThreadPool;
+use submodular_ss::util::rng::Rng;
+use submodular_ss::util::stats::Timer;
+use submodular_ss::util::vecmath::FeatureMatrix;
+
+/// Clustered embeddings (signed): the regime hyperplane LSH banks on — a
+/// row's informative neighbors share its sign pattern, so buckets align
+/// with clusters and candidate generation prunes the cross-cluster work.
+fn clustered_rows(n: usize, clusters: usize, d: usize, seed: u64) -> FeatureMatrix {
+    let mut rng = Rng::new(seed);
+    let centers: Vec<Vec<f32>> =
+        (0..clusters).map(|_| (0..d).map(|_| rng.f32() * 2.0 - 1.0).collect()).collect();
+    let mut m = FeatureMatrix::zeros(n, d);
+    for i in 0..n {
+        let c = &centers[rng.below(clusters)];
+        for j in 0..d {
+            m.row_mut(i)[j] = c[j] + 0.1 * (rng.f32() - 0.5);
+        }
+    }
+    m
+}
+
+fn pipeline_set(
+    f: Arc<dyn BatchedDivergence>,
+    pool: &Arc<ThreadPool>,
+    k: usize,
+    params: &SsParams,
+) -> (f64, Vec<usize>) {
+    let backend = ShardedBackend::new(
+        Arc::clone(&f),
+        Arc::clone(pool),
+        Compute::Cpu,
+        Arc::new(Metrics::new()),
+    )
+    .unwrap();
+    let (_ss, sol) = ss_then_greedy(f.as_submodular(), &backend, k, params);
+    (sol.value, sol.set)
+}
+
+fn main() {
+    let smoke = std::env::var("SS_SMOKE").map(|v| v == "1").unwrap_or(false);
+    let strict = std::env::var("SS_STRICT").map(|v| v == "1").unwrap_or(false);
+    let scales: &[usize] = if full_scale() {
+        &[5_000, 20_000, 80_000]
+    } else if smoke {
+        &[1_500, 5_000, 12_000]
+    } else {
+        &[5_000, 20_000]
+    };
+    let d = 16;
+    let k = 10;
+    let seed = 3u64;
+    let params = SsParams::default().with_seed(seed);
+    let pool = Arc::new(ThreadPool::default_for_host());
+    let shards = pool.threads() * 2;
+
+    // --- saturation gate: one bucket = all pairs = the exact builder ---
+    let n_bit = if smoke { 1_200 } else { 2_000 };
+    {
+        let data = clustered_rows(n_bit, 30, d, seed);
+        let t = FacilityLocation::auto_neighbors(n_bit);
+        let exact = FacilityLocation::from_features_strat(
+            &data,
+            0,
+            Some(t),
+            BuildStrategy::Exact,
+            Some((&pool, shards)),
+        );
+        let saturated = FacilityLocation::from_features_strat(
+            &data,
+            0,
+            Some(t),
+            BuildStrategy::Lsh { tables: 1, bits: 0 },
+            Some((&pool, shards)),
+        );
+        let (ne, te, le, ce, ve) = exact.sparse_store().unwrap().export_parts();
+        let (ns, ts, ls, cs, vs) = saturated.sparse_store().unwrap().export_parts();
+        assert_eq!((ne, te, &le, &ce), (ns, ts, &ls, &cs), "saturated LSH shape diverged");
+        assert!(
+            ve.iter().zip(&vs).all(|(a, b)| a.to_bits() == b.to_bits()),
+            "saturated LSH values diverged from the exact builder"
+        );
+        println!("saturation bit-identity @ n={n_bit}, t={t}: OK");
+    }
+
+    let mut table = Table::new(
+        "LSH-bucketed neighbor build vs exact all-pairs (same explicit t)",
+        &[
+            "n", "t", "tables", "bits", "exact_build_s", "lsh_build_s", "speedup",
+            "cand_frac", "bucket_max", "rel_utility",
+        ],
+    );
+    let mut per_scale = Vec::new();
+    let mut last_speedup = 0.0f64;
+    for &n in scales {
+        // k clusters, same shape as perf_sparse_fl: a k-budget summary can
+        // cover the data, so rel-utility isolates the candidate-recall
+        // cost instead of conflating it with budget starvation
+        let data = clustered_rows(n, k, d, 11);
+        let t = FacilityLocation::auto_neighbors(n);
+        let (tables, bits) = BuildStrategy::auto_lsh_params(n);
+
+        let timer = Timer::new();
+        let exact = FacilityLocation::from_features_strat(
+            &data,
+            0,
+            Some(t),
+            BuildStrategy::Exact,
+            Some((&pool, shards)),
+        );
+        let exact_build_s = timer.elapsed_s();
+
+        let timer = Timer::new();
+        let lsh = FacilityLocation::from_features_strat(
+            &data,
+            0,
+            Some(t),
+            BuildStrategy::Lsh { tables, bits },
+            Some((&pool, shards)),
+        );
+        let lsh_build_s = timer.elapsed_s();
+        last_speedup = exact_build_s / lsh_build_s.max(1e-9);
+
+        let store = lsh.sparse_store().unwrap();
+        let (cands, bucket_max) = store.lsh_stats().unwrap();
+        let cand_frac = cands as f64 / (n as f64 * (n as f64 - 1.0));
+        assert!(
+            lsh.resident_bytes() > exact.resident_bytes(),
+            "n={n}: resident_bytes must account for the hash tables"
+        );
+
+        let (exact_value, _) =
+            pipeline_set(Arc::new(exact.clone()), &pool, k, &params);
+        let (_, lsh_set) = pipeline_set(Arc::new(lsh.clone()), &pool, k, &params);
+        let rel_utility = exact.eval(&lsh_set) / exact_value;
+        assert!(
+            rel_utility >= 0.95,
+            "n={n}: LSH candidate recall cost too much utility: {rel_utility:.4}"
+        );
+
+        table.row(vec![
+            n.to_string(),
+            t.to_string(),
+            tables.to_string(),
+            bits.to_string(),
+            format!("{exact_build_s:.3}"),
+            format!("{lsh_build_s:.3}"),
+            format!("{last_speedup:.2}x"),
+            format!("{cand_frac:.4}"),
+            bucket_max.to_string(),
+            format!("{rel_utility:.4}"),
+        ]);
+        per_scale.push(Json::obj(vec![
+            ("n", Json::Num(n as f64)),
+            ("t", Json::Num(t as f64)),
+            ("tables", Json::Num(tables as f64)),
+            ("bits", Json::Num(bits as f64)),
+            ("exact_build_s", Json::Num(exact_build_s)),
+            ("lsh_build_s", Json::Num(lsh_build_s)),
+            ("build_speedup", Json::Num(last_speedup)),
+            ("lsh_candidates", Json::Num(cands as f64)),
+            ("candidate_fraction", Json::Num(cand_frac)),
+            ("lsh_bucket_max", Json::Num(bucket_max as f64)),
+            ("rel_utility", Json::Num(rel_utility)),
+        ]));
+    }
+    table.print();
+
+    if strict {
+        assert!(
+            last_speedup >= 4.0,
+            "SS_STRICT target not met: LSH build {last_speedup:.2}x < 4x over exact at the \
+             top scale (expected once bucket candidate generation displaces the O(n²·d) scan)"
+        );
+    }
+
+    let report = Json::obj(vec![
+        ("bench", Json::Str("perf_fl_build".to_string())),
+        ("threads", Json::Num(pool.threads() as f64)),
+        ("smoke", Json::Num(if smoke { 1.0 } else { 0.0 })),
+        ("full_scale", Json::Num(if full_scale() { 1.0 } else { 0.0 })),
+        ("saturation_bit_identity_n", Json::Num(n_bit as f64)),
+        ("saturation_bit_identity", Json::Bool(true)),
+        ("build_speedup_top", Json::Num(last_speedup)),
+        ("scales", Json::Arr(per_scale)),
+    ]);
+    let out = format!("{}/../BENCH_fl_build.json", env!("CARGO_MANIFEST_DIR"));
+    std::fs::write(&out, report.pretty()).expect("write BENCH_fl_build.json");
+    println!("(saved to {out})");
+}

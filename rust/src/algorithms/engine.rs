@@ -227,7 +227,7 @@ impl<'a> MaximizerEngine<'a> {
                 if cached <= 0.0 {
                     break; // non-monotone early stop — same test as the reference
                 }
-                state.add(candidates[i]);
+                commit(&self.route, state.as_mut(), candidates[i]);
                 self.versions[i] = u64::MAX; // never re-enters
                 chosen += 1;
                 epoch += 1;
@@ -316,7 +316,7 @@ impl<'a> MaximizerEngine<'a> {
                 break; // monotone f never hits this; non-monotone stops early
             }
             let v = self.remaining.swap_remove(best_i);
-            state.add(v);
+            commit(&self.route, state.as_mut(), v);
         }
         Solution {
             set: state.set().to_vec(),
@@ -403,7 +403,7 @@ impl<'a> MaximizerEngine<'a> {
                 break;
             }
             let v = self.remaining.swap_remove(best_pos);
-            state.add(v);
+            commit(&self.route, state.as_mut(), v);
         }
         Ok(Solution {
             set: state.set().to_vec(),
@@ -411,6 +411,18 @@ impl<'a> MaximizerEngine<'a> {
             oracle_calls: self.stats.gain_evals,
             wall_s: timer.elapsed_s(),
         })
+    }
+}
+
+/// One commit through the configured route: the backend route may fan the
+/// state's per-element bookkeeping walk over its pool
+/// ([`DivergenceBackend::commit`] → [`SolState::add_pooled`]), the others
+/// add inline — all bit-identical to `state.add(v)`, so route choice can
+/// never change a solution.
+fn commit(route: &GainRoute<'_>, state: &mut dyn SolState, v: usize) {
+    match route {
+        GainRoute::Backend(b) => b.commit(state, v),
+        _ => state.add(v),
     }
 }
 

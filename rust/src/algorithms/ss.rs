@@ -152,6 +152,15 @@ pub trait DivergenceBackend: Send + Sync {
     fn gains_into(&self, state: &dyn SolState, candidates: &[usize], out: &mut [f64]) {
         state.gains_into(candidates, out);
     }
+
+    /// Commit `state ← state + v` — the maximizer's per-epoch add,
+    /// **bit-identical** to `state.add(v)`. The default *is* that serial
+    /// add; the sharded coordinator overrides it to fan the state's O(n)
+    /// bookkeeping walk over its pool via [`SolState::add_pooled`] once
+    /// the ground set is large enough to pay for the dispatch.
+    fn commit(&self, state: &mut dyn SolState, v: usize) {
+        state.add(v);
+    }
 }
 
 /// Reference CPU backend over any [`BatchedDivergence`] objective. The

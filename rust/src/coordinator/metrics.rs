@@ -64,6 +64,15 @@ pub struct Counters {
     /// Torn WAL tails truncated away during recovery (at most one per
     /// recovery — a crash tears at most the final record).
     pub torn_tail_truncations: AtomicU64,
+    /// Candidate pairs actually scored by an LSH-bucketed neighbor build
+    /// (batch build plus every incremental append since). Gauge-style like
+    /// `sparse_rows`: set when a backend (re)binds its objective. Compare
+    /// against n·(n−1) to read the pruning ratio the hash tables bought.
+    pub lsh_candidates: AtomicU64,
+    /// Largest hash-bucket occupancy across the LSH index's tables — the
+    /// skew gauge: a bucket near n means the projections aren't splitting
+    /// the data and the build is degenerating toward all-pairs.
+    pub lsh_bucket_max: AtomicU64,
 }
 
 impl Counters {
@@ -71,7 +80,7 @@ impl Counters {
     /// list [`Metrics::snapshot`] and [`Self::reset`] both iterate, so a
     /// counter added here is automatically snapshotted *and* reset (the
     /// two can never drift apart).
-    fn named(&self) -> [(&'static str, &AtomicU64); 22] {
+    fn named(&self) -> [(&'static str, &AtomicU64); 24] {
         [
             ("requests", &self.requests),
             ("completed", &self.completed),
@@ -95,6 +104,8 @@ impl Counters {
             ("checkpoints", &self.checkpoints),
             ("recoveries", &self.recoveries),
             ("torn_tail_truncations", &self.torn_tail_truncations),
+            ("lsh_candidates", &self.lsh_candidates),
+            ("lsh_bucket_max", &self.lsh_bucket_max),
         ]
     }
 

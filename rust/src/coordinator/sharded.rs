@@ -34,6 +34,25 @@ use super::metrics::Metrics;
 /// naive-greedy sweeps shard).
 const GAIN_SHARD_THRESHOLD: usize = 256;
 
+/// Ground-set size above which the maximizer commit step fans the state's
+/// per-element bookkeeping walk over the pool
+/// ([`DivergenceBackend::commit`] → `SolState::add_pooled`) — below it the
+/// walk is a few microseconds and job dispatch would dominate.
+const COMMIT_SHARD_MIN: usize = 4096;
+
+/// Refresh the store-shape gauges from the objective: `sparse_rows`,
+/// `lsh_candidates`, `lsh_bucket_max`. Stored rather than accumulated —
+/// they describe the backend's *current* objective, and every site that
+/// (re)binds one goes through here (construction, adopt, resume).
+fn refresh_store_gauges(metrics: &Metrics, f: &dyn BatchedDivergence) {
+    use std::sync::atomic::Ordering::Relaxed;
+    let c = &metrics.counters;
+    c.sparse_rows.store(f.sparse_rows() as u64, Relaxed);
+    let (cands, bmax) = f.lsh_stats();
+    c.lsh_candidates.store(cands, Relaxed);
+    c.lsh_bucket_max.store(bmax, Relaxed);
+}
+
 /// Where a shard's divergences are computed.
 #[derive(Clone)]
 pub enum Compute {
@@ -69,11 +88,9 @@ impl ShardedBackend {
     ) -> anyhow::Result<Self> {
         let shards = pool.threads() * 2;
         let sing = Self::compute_singletons(&f, &pool, &compute, shards)?;
-        // gauge: how much of the ground set rides a sparse neighbor store
-        metrics
-            .counters
-            .sparse_rows
-            .store(f.sparse_rows() as u64, std::sync::atomic::Ordering::Relaxed);
+        // gauge: how much of the ground set rides a sparse neighbor store,
+        // and how much candidate work an LSH-bucketed build did to get it
+        refresh_store_gauges(&metrics, f.as_ref());
         Ok(Self {
             f,
             sing: Arc::new(sing),
@@ -127,15 +144,12 @@ impl ShardedBackend {
     /// same compute route (it is solution-independent state that any
     /// ground-set change invalidates), but keeps the pool binding, compute
     /// route, shard count, metrics handle and warmed probe scratch that a
-    /// fresh construction would rebuild. Refreshes the `sparse_rows` gauge.
+    /// fresh construction would rebuild. Refreshes the store-shape gauges.
     pub fn adopt(&mut self, f: Arc<dyn BatchedDivergence>) -> anyhow::Result<()> {
         let sing = Self::compute_singletons(&f, &self.pool, &self.compute, self.shards)?;
         self.sing = Arc::new(sing);
         self.f = f;
-        self.metrics
-            .counters
-            .sparse_rows
-            .store(self.f.sparse_rows() as u64, std::sync::atomic::Ordering::Relaxed);
+        refresh_store_gauges(&self.metrics, self.f.as_ref());
         Ok(())
     }
 
@@ -193,14 +207,11 @@ impl ParkedBackend {
     /// Bring the backend back up over this window's objective: recomputes
     /// the singleton-complement precompute through the same compute route
     /// (bit-identical to a fresh construction's) and refreshes the
-    /// `sparse_rows` gauge, reusing everything [`ShardedBackend::park`]
+    /// store-shape gauges, reusing everything [`ShardedBackend::park`]
     /// kept.
     pub fn resume(self, f: Arc<dyn BatchedDivergence>) -> anyhow::Result<ShardedBackend> {
         let sing = ShardedBackend::compute_singletons(&f, &self.pool, &self.compute, self.shards)?;
-        self.metrics
-            .counters
-            .sparse_rows
-            .store(f.sparse_rows() as u64, std::sync::atomic::Ordering::Relaxed);
+        refresh_store_gauges(&self.metrics, f.as_ref());
         Ok(ShardedBackend {
             f,
             sing: Arc::new(sing),
@@ -216,6 +227,20 @@ impl ParkedBackend {
 impl DivergenceBackend for ShardedBackend {
     fn n(&self) -> usize {
         self.f.n()
+    }
+
+    /// Commit step sharded over the pool for large ground sets: the
+    /// state's per-element bookkeeping walk (facility location's
+    /// best-similarity update is O(n)) was the last serial stretch of a
+    /// maximizer round on this backend. `add_pooled` is contractually
+    /// bit-identical to `add` — parallel gather, serial ascending fold —
+    /// so the gate is pure scheduling, never semantics.
+    fn commit(&self, state: &mut dyn SolState, v: usize) {
+        if self.f.n() >= COMMIT_SHARD_MIN {
+            state.add_pooled(v, &self.pool, self.shards);
+        } else {
+            state.add(v);
+        }
     }
 
     fn divergences(&self, probes: &[usize], items: &[usize]) -> Vec<f32> {

@@ -16,13 +16,15 @@
 
 use crate::algorithms::sieve_filter::SieveParams;
 use crate::algorithms::{Sampling, SsParams};
-use crate::submodular::Concave;
+use crate::submodular::{BuildStrategy, Concave};
 use crate::util::vecmath::FeatureMatrix;
 
 use super::wal::{put_f32, put_f64, put_u32, put_u64, put_u8, Cursor, WalError};
 
 /// Payload format version (bump on any layout change).
-const VERSION: u8 = 1;
+/// v2: facility stores carry their [`BuildStrategy`] and, when the sparse
+/// store was LSH-built, the index geometry `(tables, bits, adapt_floor)`.
+const VERSION: u8 = 2;
 
 /// Exported sparse-similarity state (`SparseSimStore::export_parts`).
 pub(crate) struct SparseParts {
@@ -31,6 +33,11 @@ pub(crate) struct SparseParts {
     pub(crate) len: Vec<u32>,
     pub(crate) cols: Vec<u32>,
     pub(crate) vals: Vec<f32>,
+    /// LSH index geometry `(tables, bits, adapt_floor)` when the store was
+    /// LSH-built (`adapt_floor` 0 = explicit-t build, no adaptive budget).
+    /// Only geometry persists: the projections are derived from a fixed
+    /// seed, so restore rehashes the rows and gets the identical index.
+    pub(crate) lsh: Option<(u32, u32, u32)>,
 }
 
 /// Live-storage payload: enough to rebuild the session's `LiveStore`
@@ -43,6 +50,9 @@ pub(crate) enum StorePayload {
     Facility {
         crossover: usize,
         t: Option<usize>,
+        /// Neighbor-build strategy for post-recovery (re)builds — restored
+        /// sessions must pick the same exact/LSH path the live one would.
+        build: BuildStrategy,
         rows: FeatureMatrix,
         /// The live sparse store, when one was built — post-eviction
         /// neighbor lists must come from here, not a row rebuild.
@@ -233,7 +243,7 @@ pub(crate) fn encode(s: &CheckpointState) -> Vec<u8> {
             }
             put_matrix(&mut out, rows);
         }
-        StorePayload::Facility { crossover, t, rows, sparse } => {
+        StorePayload::Facility { crossover, t, build, rows, sparse } => {
             put_u8(&mut out, 2);
             put_usize(&mut out, *crossover);
             match t {
@@ -243,6 +253,15 @@ pub(crate) fn encode(s: &CheckpointState) -> Vec<u8> {
                     put_usize(&mut out, *t);
                 }
             }
+            match build {
+                BuildStrategy::Exact => put_u8(&mut out, 0),
+                BuildStrategy::Lsh { tables, bits } => {
+                    put_u8(&mut out, 1);
+                    put_u32(&mut out, *tables);
+                    put_u32(&mut out, *bits);
+                }
+                BuildStrategy::Auto => put_u8(&mut out, 2),
+            }
             put_matrix(&mut out, rows);
             match sparse {
                 None => put_u8(&mut out, 0),
@@ -250,6 +269,15 @@ pub(crate) fn encode(s: &CheckpointState) -> Vec<u8> {
                     put_u8(&mut out, 1);
                     put_usize(&mut out, p.n);
                     put_usize(&mut out, p.t);
+                    match p.lsh {
+                        None => put_u8(&mut out, 0),
+                        Some((tables, bits, floor)) => {
+                            put_u8(&mut out, 1);
+                            put_u32(&mut out, tables);
+                            put_u32(&mut out, bits);
+                            put_u32(&mut out, floor);
+                        }
+                    }
                     put_usize(&mut out, p.len.len());
                     for &l in &p.len {
                         put_u32(&mut out, l);
@@ -368,12 +396,23 @@ pub(crate) fn decode(bytes: &[u8]) -> Result<CheckpointState, WalError> {
                 1 => Some(get_usize(&mut c)?),
                 other => return Err(corrupt(&format!("bad t tag {other}"))),
             };
+            let build = match c.u8()? {
+                0 => BuildStrategy::Exact,
+                1 => BuildStrategy::Lsh { tables: c.u32()?, bits: c.u32()? },
+                2 => BuildStrategy::Auto,
+                other => return Err(corrupt(&format!("bad build-strategy tag {other}"))),
+            };
             let rows = get_matrix(&mut c)?;
             let sparse = match c.u8()? {
                 0 => None,
                 1 => {
                     let n = get_usize(&mut c)?;
                     let t = get_usize(&mut c)?;
+                    let lsh = match c.u8()? {
+                        0 => None,
+                        1 => Some((c.u32()?, c.u32()?, c.u32()?)),
+                        other => return Err(corrupt(&format!("bad lsh tag {other}"))),
+                    };
                     let len_len = get_usize(&mut c)?;
                     let mut len = Vec::with_capacity(len_len.min(bytes.len()));
                     for _ in 0..len_len {
@@ -388,11 +427,11 @@ pub(crate) fn decode(bytes: &[u8]) -> Result<CheckpointState, WalError> {
                     for _ in 0..slots {
                         vals.push(c.f32()?);
                     }
-                    Some(SparseParts { n, t, len, cols, vals })
+                    Some(SparseParts { n, t, len, cols, vals, lsh })
                 }
                 other => return Err(corrupt(&format!("bad sparse tag {other}"))),
             };
-            StorePayload::Facility { crossover, t, rows, sparse }
+            StorePayload::Facility { crossover, t, build, rows, sparse }
         }
         other => return Err(corrupt(&format!("bad store tag {other}"))),
     };
@@ -520,6 +559,7 @@ mod tests {
         s.store = StorePayload::Facility {
             crossover: 4096,
             t: Some(16),
+            build: BuildStrategy::Lsh { tables: 6, bits: 9 },
             rows,
             sparse: Some(SparseParts {
                 n: 2,
@@ -527,18 +567,54 @@ mod tests {
                 len: vec![2, 1],
                 cols: vec![0, 1, 1, 0],
                 vals: vec![1.0, 0.5, 1.0, 0.0],
+                lsh: Some((6, 9, 12)),
             }),
         };
         let r = decode(&encode(&s)).unwrap();
         match r.store {
-            StorePayload::Facility { crossover: 4096, t: Some(16), rows, sparse: Some(p) } => {
+            StorePayload::Facility {
+                crossover: 4096,
+                t: Some(16),
+                build: BuildStrategy::Lsh { tables: 6, bits: 9 },
+                rows,
+                sparse: Some(p),
+            } => {
                 assert_eq!(rows.n(), 2);
                 assert_eq!(p.n, 2);
                 assert_eq!(p.t, 1);
                 assert_eq!(p.len, vec![2, 1]);
                 assert_eq!(p.cols, vec![0, 1, 1, 0]);
                 assert_eq!(p.vals, vec![1.0, 0.5, 1.0, 0.0]);
+                assert_eq!(p.lsh, Some((6, 9, 12)));
             }
+            _ => panic!("facility payload mangled"),
+        }
+    }
+
+    #[test]
+    fn facility_store_without_lsh_round_trips() {
+        let mut rows = FeatureMatrix::zeros(0, 2);
+        rows.push_row(&[1.0, 0.0]);
+        let mut s = sample_state();
+        s.store = StorePayload::Facility {
+            crossover: 0,
+            t: None,
+            build: BuildStrategy::Auto,
+            rows,
+            sparse: Some(SparseParts {
+                n: 1,
+                t: 0,
+                len: vec![1],
+                cols: vec![0],
+                vals: vec![1.0],
+                lsh: None,
+            }),
+        };
+        let r = decode(&encode(&s)).unwrap();
+        match r.store {
+            StorePayload::Facility {
+                build: BuildStrategy::Auto, t: None, sparse: Some(p), ..
+            } => assert_eq!(p.lsh, None),
             _ => panic!("facility payload mangled"),
         }
     }

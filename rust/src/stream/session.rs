@@ -90,8 +90,8 @@ use crate::algorithms::{
 use crate::coordinator::job::ServiceError;
 use crate::coordinator::{Compute, Metrics, ShardedBackend};
 use crate::submodular::{
-    BatchedDivergence, FacilityLocation, FeatureBased, ObjectiveSpec, SparseSimStore,
-    SubmodularFn,
+    BatchedDivergence, BuildStrategy, FacilityLocation, FeatureBased, ObjectiveSpec,
+    SparseSimStore, SubmodularFn,
 };
 use crate::util::pool::ThreadPool;
 use crate::util::stats::Timer;
@@ -292,6 +292,10 @@ enum LiveStore {
         crossover: usize,
         /// explicit top-t override (`None` = auto `O(log n)`)
         t: Option<usize>,
+        /// neighbor-build strategy above the crossover (exact all-pairs,
+        /// forced LSH geometry, or size-gated auto) — threaded into every
+        /// build site so batch, snapshot and recovery stores agree
+        build: BuildStrategy,
     },
 }
 
@@ -418,7 +422,7 @@ impl StreamSession {
                 LiveStore::Features(Arc::new(FeatureBased::new(FeatureMatrix::zeros(0, d), g)))
             }
             _ => {
-                let (crossover, t) = objective
+                let (crossover, t, build) = objective
                     .facility_store_params()
                     .expect("non-feature specs are facility-location shaped");
                 LiveStore::Facility {
@@ -426,6 +430,7 @@ impl StreamSession {
                     cached: None,
                     crossover,
                     t,
+                    build,
                 }
             }
         };
@@ -974,7 +979,7 @@ impl StreamSession {
     fn build_core(&self) -> SnapshotCore {
         let store = match &self.store {
             LiveStore::Features(fb) => CoreStore::Features(Arc::new(fb.as_ref().clone())),
-            LiveStore::Facility { feats, cached, crossover, t } => CoreStore::Facility {
+            LiveStore::Facility { feats, cached, crossover, t, build } => CoreStore::Facility {
                 // rows are always captured (the checkpoint needs them even
                 // when a built store rides along)
                 feats: feats.clone(),
@@ -990,6 +995,7 @@ impl StreamSession {
                 },
                 crossover: *crossover,
                 t: *t,
+                build: *build,
             },
         };
         SnapshotCore {
@@ -1091,13 +1097,19 @@ impl StreamSession {
                 concave: fb.concave(),
                 rows: fb.feats().clone(),
             },
-            CoreStore::Facility { feats, built, crossover, t } => StorePayload::Facility {
+            CoreStore::Facility { feats, built, crossover, t, build } => StorePayload::Facility {
                 crossover: *crossover,
                 t: *t,
+                build: *build,
                 rows: feats.clone(),
                 sparse: built.as_ref().and_then(|fl| fl.sparse_store()).map(|s| {
                     let (n, t, len, cols, vals) = s.export_parts();
-                    SparseParts { n, t, len, cols, vals }
+                    // only the LSH *geometry* persists — the index itself
+                    // is a pure function of it and is rehashed on restore
+                    let lsh = s.lsh_params().map(|(tables, bits)| {
+                        (tables, bits, s.adapt_floor().map_or(0, |f| f as u32))
+                    });
+                    SparseParts { n, t, len, cols, vals, lsh }
                 }),
             },
         };
@@ -1186,7 +1198,7 @@ impl StreamSession {
                 }
                 LiveStore::Features(Arc::new(FeatureBased::new(rows, concave)))
             }
-            StorePayload::Facility { crossover, t, rows, sparse } => {
+            StorePayload::Facility { crossover, t, build, rows, sparse } => {
                 if rows.d() != state.d {
                     return Err(reject("facility rows disagree with the session's d"));
                 }
@@ -1198,13 +1210,21 @@ impl StreamSession {
                         if p.n != rows.n() {
                             return Err(reject("sparse store disagrees with the row count"));
                         }
-                        let s = SparseSimStore::from_parts(p.n, p.t, p.len, p.cols, p.vals)
+                        let mut s = SparseSimStore::from_parts(p.n, p.t, p.len, p.cols, p.vals)
                             .map_err(|e| reject(&e))?;
+                        // rehydrate the LSH index from its persisted
+                        // geometry: projections are seeded, so the rebuilt
+                        // index is identical to the one checkpointed and
+                        // post-recovery appends stay ≡ the uncrashed run
+                        if let Some((tables, bits, floor)) = p.lsh {
+                            let floor = (floor > 0).then_some(floor as usize);
+                            s.attach_lsh(tables, bits, floor, &rows);
+                        }
                         Some(Arc::new(FacilityLocation::from_sparse_store(s)))
                     }
                     None => None,
                 };
-                LiveStore::Facility { feats: rows, cached, crossover, t }
+                LiveStore::Facility { feats: rows, cached, crossover, t, build }
             }
         };
         let remap = IdRemap::from_parts(state.base, state.ext_to_int, state.int_to_ext)
@@ -1316,17 +1336,18 @@ impl StreamSession {
     fn objective(&mut self) -> Arc<dyn BatchedDivergence> {
         match &mut self.store {
             LiveStore::Features(fb) => Arc::clone(fb) as Arc<dyn BatchedDivergence>,
-            LiveStore::Facility { feats, cached, crossover, t } => {
+            LiveStore::Facility { feats, cached, crossover, t, build } => {
                 if cached.is_none() {
                     let shards = if self.cfg.shards > 0 {
                         self.cfg.shards
                     } else {
                         self.pool.threads() * 2
                     };
-                    *cached = Some(Arc::new(FacilityLocation::from_features_with(
+                    *cached = Some(Arc::new(FacilityLocation::from_features_strat(
                         feats,
                         *crossover,
                         *t,
+                        *build,
                         Some((self.pool.as_ref(), shards)),
                     )));
                 }
@@ -1376,6 +1397,7 @@ enum CoreStore {
         built: Option<Arc<FacilityLocation>>,
         crossover: usize,
         t: Option<usize>,
+        build: BuildStrategy,
     },
 }
 
@@ -1440,16 +1462,17 @@ impl SnapshotCore {
             CoreStore::Facility { built: Some(fl), .. } => {
                 Arc::clone(fl) as Arc<dyn BatchedDivergence>
             }
-            CoreStore::Facility { feats, built: None, crossover, t } => {
+            CoreStore::Facility { feats, built: None, crossover, t, build } => {
                 // same store parameters and pooled build as the session's
                 // own lazy construction — what keeps this path bit-identical
                 // to the in-place snapshot
                 let shards =
                     if self.shards > 0 { self.shards } else { self.pool.threads() * 2 };
-                Arc::new(FacilityLocation::from_features_with(
+                Arc::new(FacilityLocation::from_features_strat(
                     feats,
                     *crossover,
                     *t,
+                    *build,
                     Some((self.pool.as_ref(), shards)),
                 ))
             }
@@ -1732,7 +1755,11 @@ mod tests {
         let data = rows(260, 9, 41);
         let metrics = Arc::new(Metrics::new());
         let mut s = StreamSession::new(
-            ObjectiveSpec::FacilityLocationSparse { t: 24, crossover: 0 },
+            ObjectiveSpec::FacilityLocationSparse {
+                t: 24,
+                crossover: 0,
+                build: BuildStrategy::Auto,
+            },
             9,
             StreamConfig::new(6).with_ss(SsParams::default().with_seed(4)).with_high_water(80),
             Arc::new(ThreadPool::new(2, 16)),

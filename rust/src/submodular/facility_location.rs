@@ -23,7 +23,7 @@
 
 use std::cell::RefCell;
 
-use super::sparse_sim::SparseSimStore;
+use super::sparse_sim::{BuildStrategy, SparseSimStore};
 use super::{BatchedDivergence, SolState, SubmodularFn};
 use crate::util::pool::ThreadPool;
 use crate::util::vecmath::{cosine, FeatureMatrix};
@@ -120,7 +120,11 @@ impl FacilityLocation {
     /// Configurable construction — the `ObjectiveSpec` seam: dense iff
     /// `n < crossover`; otherwise sparse with `t` neighbors (auto-sized
     /// [`auto_neighbors`] when `None`), shard-parallel over `pooled` when
-    /// a pool is supplied.
+    /// a pool is supplied. Neighbor candidates come from
+    /// [`BuildStrategy::Auto`]: exact all-pairs below
+    /// [`LSH_CROSSOVER`](super::sparse_sim::LSH_CROSSOVER), LSH-bucketed
+    /// above — use [`from_features_strat`](Self::from_features_strat) to
+    /// pin a builder explicitly.
     ///
     /// [`auto_neighbors`]: FacilityLocation::auto_neighbors
     pub fn from_features_with(
@@ -129,14 +133,54 @@ impl FacilityLocation {
         t: Option<usize>,
         pooled: Option<(&ThreadPool, usize)>,
     ) -> Self {
+        Self::from_features_strat(feats, crossover, t, BuildStrategy::Auto, pooled)
+    }
+
+    /// [`from_features_with`](Self::from_features_with) with an explicit
+    /// neighbor [`BuildStrategy`]. Under `Lsh`, an explicit `t` keeps the
+    /// exact top-`t` of the bucket candidates (so saturated tables are
+    /// bit-identical to `Exact`); auto `t` engages the adaptive budget —
+    /// per-row cap `4·auto_neighbors(n)` with the mass-coverage floor
+    /// `max(8, auto_neighbors(n)/2)` — so rows in large redundant
+    /// clusters keep enough neighbors to hold the utility floor where
+    /// the fixed `t = O(log n)` budget collapses (EXPERIMENTS.md §Sparse
+    /// facility location).
+    pub fn from_features_strat(
+        feats: &FeatureMatrix,
+        crossover: usize,
+        t: Option<usize>,
+        build: BuildStrategy,
+        pooled: Option<(&ThreadPool, usize)>,
+    ) -> Self {
         let n = feats.n();
         if n < crossover {
             return Self::from_features_dense(feats);
         }
-        let t = t.unwrap_or_else(|| Self::auto_neighbors(n));
-        let store = match pooled {
-            Some((pool, shards)) => SparseSimStore::from_features_pooled(feats, t, pool, shards),
-            None => SparseSimStore::from_features(feats, t),
+        let store = match build.resolve(n) {
+            None => {
+                let t = t.unwrap_or_else(|| Self::auto_neighbors(n));
+                match pooled {
+                    Some((pool, shards)) => {
+                        SparseSimStore::from_features_pooled(feats, t, pool, shards)
+                    }
+                    None => SparseSimStore::from_features(feats, t),
+                }
+            }
+            Some((tables, bits)) => {
+                let (cap, floor) = match t {
+                    Some(t) => (t, None),
+                    None => {
+                        let base = Self::auto_neighbors(n);
+                        ((base * 4).min(n.saturating_sub(1)).max(1), Some((base / 2).max(8)))
+                    }
+                };
+                match pooled {
+                    Some((pool, shards)) => SparseSimStore::from_features_lsh_pooled(
+                        feats, cap, floor, tables, bits, pool, shards,
+                    ),
+                    None => SparseSimStore::from_features_lsh(feats, cap, floor, tables, bits),
+                }
+            }
         };
         Self { n, store: SimStore::Sparse(store) }
     }
@@ -195,6 +239,27 @@ impl FacilityLocation {
         match &self.store {
             SimStore::Dense(sim) => sim[i * self.n + u],
             SimStore::Sparse(s) => s.get(i, u),
+        }
+    }
+
+    /// Write `sim(lo + k, v)` into `out[k]` — the commit-step gather:
+    /// [`FlState::add_pooled`] fans this over the pool into disjoint
+    /// slices, and each value is exactly what the serial `add` loop reads
+    /// (`row[v]` of the dense row or the scattered sparse image), so the
+    /// subsequent serial fold is bit-identical to `add`.
+    #[inline]
+    fn gather_column_into(&self, v: usize, lo: usize, out: &mut [f32]) {
+        match &self.store {
+            SimStore::Dense(sim) => {
+                for (k, slot) in out.iter_mut().enumerate() {
+                    *slot = sim[(lo + k) * self.n + v];
+                }
+            }
+            SimStore::Sparse(s) => {
+                for (k, slot) in out.iter_mut().enumerate() {
+                    *slot = s.get(lo + k, v);
+                }
+            }
         }
     }
 
@@ -504,7 +569,13 @@ impl SubmodularFn for FacilityLocation {
     }
 
     fn state<'a>(&'a self) -> Box<dyn SolState + 'a> {
-        Box::new(FlState { f: self, best: vec![0.0; self.n], value: 0.0, set: Vec::new() })
+        Box::new(FlState {
+            f: self,
+            best: vec![0.0; self.n],
+            value: 0.0,
+            set: Vec::new(),
+            col_scratch: Vec::new(),
+        })
     }
 
     fn pair_gain(&self, u: usize, v: usize) -> f64 {
@@ -560,6 +631,13 @@ impl SubmodularFn for FacilityLocation {
         }
     }
 
+    fn lsh_stats(&self) -> (u64, u64) {
+        match &self.store {
+            SimStore::Dense(_) => (0, 0),
+            SimStore::Sparse(s) => s.lsh_stats().unwrap_or((0, 0)),
+        }
+    }
+
     /// Compact the store to the surviving elements, in place. Dense: the
     /// `keep × keep` principal submatrix via a forward row-major walk
     /// (with `keep` ascending every source cell sits at or after its
@@ -600,6 +678,9 @@ struct FlState<'a> {
     best: Vec<f32>,
     value: f64,
     set: Vec<usize>,
+    /// reused column gather for [`add_pooled`](SolState::add_pooled)
+    /// (warm after the first pooled commit)
+    col_scratch: Vec<f32>,
 }
 
 impl SolState for FlState<'_> {
@@ -631,6 +712,37 @@ impl SolState for FlState<'_> {
         });
         self.value += acc;
         self.set.push(v);
+    }
+
+    /// The sharded commit: phase 1 gathers column `v` over the pool into
+    /// disjoint scratch slices (pure reads of the store — each slot holds
+    /// exactly the `row[v]` the serial loop would read); phase 2 runs the
+    /// serial best-vector fold over the gathered column in ascending `i`
+    /// with the identical compare-and-accumulate, so `value`/`best` end
+    /// bit-identical to [`add`](SolState::add). This closes the serial
+    /// O(n) half of the maximizer commit step (the other half — batching
+    /// commits themselves — needs an ε-tolerant multi-add, which exact
+    /// Minoux forbids).
+    fn add_pooled(&mut self, v: usize, pool: &ThreadPool, shards: usize) {
+        let n = self.f.n;
+        let mut col = std::mem::take(&mut self.col_scratch);
+        col.clear();
+        col.resize(n, 0.0);
+        let f = self.f;
+        pool.parallel_ranges_into(&mut col[..], shards, |lo, _hi, chunk| {
+            f.gather_column_into(v, lo, chunk);
+        });
+        let best = &mut self.best;
+        let mut acc = 0.0f64;
+        for (i, &s) in col.iter().enumerate() {
+            if s > best[i] {
+                acc += (s - best[i]) as f64;
+                best[i] = s;
+            }
+        }
+        self.value += acc;
+        self.set.push(v);
+        self.col_scratch = col;
     }
 
     fn set(&self) -> &[usize] {
@@ -696,6 +808,102 @@ mod tests {
         check_state_consistency(&f, 51, 100);
         check_edge_ingredients(&f, 52, 80);
         check_batched_gains(&f, 53, 40);
+    }
+
+    #[test]
+    fn add_pooled_is_bit_identical_to_serial_add() {
+        let pool = ThreadPool::new(3, 16);
+        let feats = feature_rows(90, 6, 21);
+        let cases: Vec<FacilityLocation> = vec![
+            FacilityLocation::from_features_dense(&feats),
+            FacilityLocation::from_features_sparse(&feats, 7),
+            FacilityLocation::from_features_strat(&feats, 0, Some(7), BuildStrategy::Lsh { tables: 4, bits: 3 }, None),
+        ];
+        for (ci, f) in cases.iter().enumerate() {
+            for shards in [1usize, 2, 5, 16] {
+                let mut serial = f.state();
+                let mut pooled = f.state();
+                for &v in &[3usize, 41, 3, 77, 12] {
+                    serial.add(v);
+                    pooled.add_pooled(v, &pool, shards);
+                    assert_eq!(
+                        pooled.value().to_bits(),
+                        serial.value().to_bits(),
+                        "case {ci} shards {shards} after add({v})"
+                    );
+                }
+                assert_eq!(pooled.set(), serial.set());
+                // identical gains downstream → identical best vectors
+                let cands: Vec<usize> = (0..90).collect();
+                let (mut gs, mut gp) = (vec![0.0f64; 90], vec![0.0f64; 90]);
+                serial.gains_into(&cands, &mut gs);
+                pooled.gains_into(&cands, &mut gp);
+                for v in 0..90 {
+                    assert_eq!(gp[v].to_bits(), gs[v].to_bits(), "gain({v})");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn strat_seam_defaults_and_saturated_lsh_match_exact() {
+        let feats = feature_rows(60, 5, 22);
+        // Auto at small n = exact: same rows as the explicit exact build
+        let auto = FacilityLocation::from_features_strat(&feats, 0, Some(6), BuildStrategy::Auto, None);
+        let exact = FacilityLocation::from_features_strat(&feats, 0, Some(6), BuildStrategy::Exact, None);
+        let saturated = FacilityLocation::from_features_strat(
+            &feats,
+            0,
+            Some(6),
+            BuildStrategy::Lsh { tables: 1, bits: 0 },
+            None,
+        );
+        assert!(auto.sparse_store().unwrap().lsh_params().is_none());
+        assert_eq!(saturated.sparse_store().unwrap().lsh_params(), Some((1, 0)));
+        for i in 0..60 {
+            for u in 0..60 {
+                let want = exact.sim(i, u).to_bits();
+                assert_eq!(auto.sim(i, u).to_bits(), want, "auto ({i},{u})");
+                assert_eq!(saturated.sim(i, u).to_bits(), want, "saturated ({i},{u})");
+            }
+        }
+        assert_eq!(exact.lsh_stats(), (0, 0));
+        let (cands, bmax) = saturated.lsh_stats();
+        assert_eq!((cands, bmax), (60 * 59, 60));
+        // dense below the crossover regardless of strategy
+        let dense = FacilityLocation::from_features_strat(
+            &feats,
+            100,
+            None,
+            BuildStrategy::Lsh { tables: 2, bits: 2 },
+            None,
+        );
+        assert!(!dense.is_sparse());
+    }
+
+    #[test]
+    fn auto_t_lsh_engages_the_adaptive_budget() {
+        let feats = feature_rows(50, 5, 23);
+        let f = FacilityLocation::from_features_strat(
+            &feats,
+            0,
+            None,
+            BuildStrategy::Lsh { tables: 2, bits: 2 },
+            None,
+        );
+        let s = f.sparse_store().unwrap();
+        let base = FacilityLocation::auto_neighbors(50);
+        assert_eq!(s.t(), (base * 4).min(49));
+        assert_eq!(s.adapt_floor(), Some((base / 2).max(8)));
+        // explicit t: no adaptivity
+        let f = FacilityLocation::from_features_strat(
+            &feats,
+            0,
+            Some(5),
+            BuildStrategy::Lsh { tables: 2, bits: 2 },
+            None,
+        );
+        assert_eq!(f.sparse_store().unwrap().adapt_floor(), None);
     }
 
     #[test]

@@ -51,7 +51,7 @@ pub use feature_based::{Concave, FeatureBased};
 pub use graph_cut::GraphCut;
 pub use mixture::Mixture;
 pub use modular::Modular;
-pub use sparse_sim::SparseSimStore;
+pub use sparse_sim::{BuildStrategy, SparseSimStore, LSH_CROSSOVER};
 pub use sparsification_objective::SparsificationObjective;
 
 use crate::util::pool::ThreadPool;
@@ -85,8 +85,12 @@ pub enum ObjectiveSpec {
     /// [`FacilityLocation::auto_neighbors`]). `crossover == 0` forces the
     /// sparse store at any size; `t: 0` with `crossover` equal to
     /// [`DENSE_CROSSOVER`](crate::submodular::DENSE_CROSSOVER) reproduces
-    /// the plain `FacilityLocation` default.
-    FacilityLocationSparse { t: u32, crossover: u32 },
+    /// the plain `FacilityLocation` default. `build` picks the neighbor
+    /// builder ([`BuildStrategy::Auto`] = exact all-pairs below
+    /// [`LSH_CROSSOVER`], LSH-bucketed candidates above) and threads
+    /// through every production path — sharded backend, maximizer engine,
+    /// stream sessions and snapshot cores — with no call-site changes.
+    FacilityLocationSparse { t: u32, crossover: u32, build: BuildStrategy },
 }
 
 impl ObjectiveSpec {
@@ -105,28 +109,34 @@ impl ObjectiveSpec {
             ObjectiveSpec::FacilityLocation => {
                 std::sync::Arc::new(FacilityLocation::from_features(&rows))
             }
-            ObjectiveSpec::FacilityLocationSparse { t, crossover } => {
+            ObjectiveSpec::FacilityLocationSparse { t, crossover, build } => {
                 let t = if t == 0 { None } else { Some(t as usize) };
-                std::sync::Arc::new(FacilityLocation::from_features_with(
+                std::sync::Arc::new(FacilityLocation::from_features_strat(
                     &rows,
                     crossover as usize,
                     t,
+                    build,
                     None,
                 ))
             }
         }
     }
 
-    /// The facility-location store parameters `(crossover, explicit t)`
-    /// this spec pins, or `None` for non-FL objectives — the single place
-    /// streaming sessions and snapshot cores read the build config from.
-    pub fn facility_store_params(self) -> Option<(usize, Option<usize>)> {
+    /// The facility-location store parameters
+    /// `(crossover, explicit t, build strategy)` this spec pins, or `None`
+    /// for non-FL objectives — the single place streaming sessions and
+    /// snapshot cores read the build config from.
+    pub fn facility_store_params(self) -> Option<(usize, Option<usize>, BuildStrategy)> {
         match self {
             ObjectiveSpec::Features(_) => None,
-            ObjectiveSpec::FacilityLocation => Some((DENSE_CROSSOVER, None)),
-            ObjectiveSpec::FacilityLocationSparse { t, crossover } => {
-                Some((crossover as usize, if t == 0 { None } else { Some(t as usize) }))
+            ObjectiveSpec::FacilityLocation => {
+                Some((DENSE_CROSSOVER, None, BuildStrategy::Auto))
             }
+            ObjectiveSpec::FacilityLocationSparse { t, crossover, build } => Some((
+                crossover as usize,
+                if t == 0 { None } else { Some(t as usize) },
+                build,
+            )),
         }
     }
 }
@@ -231,6 +241,15 @@ pub trait SubmodularFn: Send + Sync {
         0
     }
 
+    /// `(candidate pairs scored, largest bucket)` of an LSH-bucketed
+    /// neighbor build, when one backs this objective — introspection the
+    /// backends meter into the coordinator's `lsh_candidates` /
+    /// `lsh_bucket_max` gauges. `(0, 0)` (the default) means no LSH index;
+    /// [`FacilityLocation`] forwards its sparse store's stats.
+    fn lsh_stats(&self) -> (u64, u64) {
+        (0, 0)
+    }
+
     /// Whether [`retain_elements`] is implemented — the streaming
     /// subsystem ([`crate::stream`]) requires it to compact the live
     /// ground set after a windowed re-sparsification. Defaults to `false`;
@@ -287,6 +306,23 @@ pub trait SolState: Send + Sync {
     fn gain(&self, v: usize) -> f64;
     /// Commit `S ← S + v`.
     fn add(&mut self, v: usize);
+
+    /// Commit `S ← S + v` with the per-element bookkeeping walk fanned
+    /// over `pool` — **bit-identical** to [`add`]: states may parallelize
+    /// only the pure *gather* phase (disjoint writes into scratch) and
+    /// must keep the value fold serial in the same element order, since
+    /// f64 addition is not associative. The default is the serial [`add`]
+    /// (correct everywhere); [`FacilityLocation`]'s state overrides it to
+    /// shard its O(n) best-similarity update — the maximizer commit step
+    /// that used to serialize every epoch. Callers gate on ground-set
+    /// size (the sharded backend uses its commit threshold): below it,
+    /// dispatch overhead beats the win.
+    ///
+    /// [`add`]: SolState::add
+    fn add_pooled(&mut self, v: usize, _pool: &ThreadPool, _shards: usize) {
+        self.add(v);
+    }
+
     /// Elements committed so far, in insertion order.
     fn set(&self) -> &[usize];
 

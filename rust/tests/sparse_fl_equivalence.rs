@@ -25,7 +25,7 @@ use submodular_ss::algorithms::{
 use submodular_ss::coordinator::{Compute, Metrics, ShardedBackend};
 use submodular_ss::stream::{ObjectiveSpec, SnapshotMode, StreamConfig, StreamSession};
 use submodular_ss::submodular::{
-    BatchedDivergence, FacilityLocation, SubmodularFn, DENSE_CROSSOVER,
+    BatchedDivergence, BuildStrategy, FacilityLocation, SubmodularFn, DENSE_CROSSOVER,
 };
 use submodular_ss::util::pool::ThreadPool;
 use submodular_ss::util::rng::Rng;
@@ -196,6 +196,7 @@ fn full_t_sparse_stream_matches_the_dense_stream_across_windows() {
     let (snap_sparse, w_sparse) = run(ObjectiveSpec::FacilityLocationSparse {
         t: (n - 1) as u32,
         crossover: 0,
+        build: BuildStrategy::Auto,
     });
     assert!(w_dense >= 2, "session must have windowed, got {w_dense}");
     assert_eq!(w_dense, w_sparse, "window schedules diverged");

@@ -15,7 +15,9 @@ use std::sync::Arc;
 use submodular_ss::algorithms::{ss_then_greedy, CpuBackend, SsParams};
 use submodular_ss::coordinator::Metrics;
 use submodular_ss::stream::{ObjectiveSpec, SnapshotMode, StreamConfig, StreamSession};
-use submodular_ss::submodular::{BatchedDivergence, Concave, FacilityLocation, FeatureBased};
+use submodular_ss::submodular::{
+    BatchedDivergence, BuildStrategy, Concave, FacilityLocation, FeatureBased,
+};
 use submodular_ss::util::pool::ThreadPool;
 use submodular_ss::util::rng::Rng;
 use submodular_ss::util::vecmath::FeatureMatrix;
@@ -35,11 +37,12 @@ fn batch_objective(kind: ObjectiveSpec, data: &FeatureMatrix) -> Box<dyn Batched
     match kind {
         ObjectiveSpec::Features(g) => Box::new(FeatureBased::new(data.clone(), g)),
         ObjectiveSpec::FacilityLocation => Box::new(FacilityLocation::from_features(data)),
-        ObjectiveSpec::FacilityLocationSparse { t, crossover } => {
-            Box::new(FacilityLocation::from_features_with(
+        ObjectiveSpec::FacilityLocationSparse { t, crossover, build } => {
+            Box::new(FacilityLocation::from_features_strat(
                 data,
                 crossover as usize,
                 if t == 0 { None } else { Some(t as usize) },
+                build,
                 None,
             ))
         }
@@ -71,7 +74,14 @@ fn full_window_filter_off_stream_is_bit_identical_to_batch() {
         // forced-sparse store: the stream builds it pooled, the batch
         // oracle serially — pinning that the store build is deterministic
         // either way and the truncated objective streams bit-identically
-        ("facility-sparse", ObjectiveSpec::FacilityLocationSparse { t: 20, crossover: 0 }),
+        (
+            "facility-sparse",
+            ObjectiveSpec::FacilityLocationSparse {
+                t: 20,
+                crossover: 0,
+                build: BuildStrategy::Auto,
+            },
+        ),
     ];
     let d = 10;
     let k = 7;

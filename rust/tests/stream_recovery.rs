@@ -31,7 +31,7 @@ use submodular_ss::stream::{
     DurabilityConfig, FaultStore, FileStore, MemStore, ObjectiveSpec, SieveParams, SnapshotMode,
     StreamConfig, StreamSession,
 };
-use submodular_ss::submodular::Concave;
+use submodular_ss::submodular::{BuildStrategy, Concave};
 use submodular_ss::util::pool::ThreadPool;
 use submodular_ss::util::rng::Rng;
 use submodular_ss::util::vecmath::FeatureMatrix;
@@ -208,7 +208,8 @@ fn every_kill_point_recovers_bit_identical_sparse_facility_location() {
     let cfg = StreamConfig::new(4)
         .with_ss(SsParams::default().with_seed(9).with_min_keep(8))
         .with_high_water(40);
-    let kind = ObjectiveSpec::FacilityLocationSparse { t: 8, crossover: 0 };
+    let kind =
+        ObjectiveSpec::FacilityLocationSparse { t: 8, crossover: 0, build: BuildStrategy::Auto };
     let batches: Vec<FeatureMatrix> = (0..5).map(|i| rows(24, d, 400 + i)).collect();
     kill_sweep("facility-sparse", kind, d, &cfg, &batches);
 }
