@@ -189,5 +189,57 @@ fn main() {
     assert_eq!(stats.appends, 1600);
     println!("{}", svc.metrics_json());
 
+    // --- observability: structured spans, Chrome trace, flight recorder ---
+    // Enable the service-scope tracer, run one summarize job through it,
+    // and dump the span tree (job -> ss_round -> cohort / kernel_dispatch)
+    // as a Chrome trace-event document loadable in Perfetto or
+    // chrome://tracing. Streams additionally keep an always-on bounded
+    // flight recorder, dumpable through the job API even after quarantine.
+    println!("\n=== observability (Chrome trace / flight recorder) ===");
+    let tracer = svc.metrics().tracer();
+    tracer.enable("service", 4096);
+    let day3 = generator.day(900, 0, seed + 101);
+    let traced = svc
+        .submit(SummarizeRequest::features(
+            day3.feats.clone(),
+            day3.k,
+            SsParams::default().with_seed(seed),
+        ))
+        .wait()
+        .expect("traced request");
+    assert!(!tracer.is_empty(), "the traced job must leave spans behind");
+    let doc = submodular_ss::trace::export::to_chrome_trace(&[tracer.as_ref()]);
+    let out = std::env::temp_dir().join("service_demo_trace.json");
+    std::fs::write(&out, doc.to_string()).expect("write chrome trace");
+    println!(
+        "traced summarize job: n={} -> |V'|={} | {} spans captured -> {}",
+        traced.n,
+        traced.reduced,
+        tracer.len(),
+        out.display(),
+    );
+
+    let id = svc
+        .open_stream(
+            ObjectiveSpec::Features(Concave::Sqrt),
+            day3.feats.d,
+            // a low high-water forces a windowed re-sparsification, so the
+            // recorder has window + ss_round spans to show
+            StreamConfig::new(day3.k)
+                .with_ss(SsParams::default().with_seed(seed))
+                .with_high_water(300),
+        )
+        .expect("open traced stream");
+    svc.append(id, day3.feats.data()).expect("append to traced stream");
+    let dump = svc.submit_flight_dump(id).expect("submit dump job").wait().expect("dump job");
+    let n_events = dump.get("events").and_then(|e| e.as_arr()).map(|a| a.len()).unwrap_or(0);
+    println!(
+        "flight recorder: scope={} holds {n_events} events (ring capacity {})",
+        dump.get("scope").and_then(|s| s.as_str()).unwrap_or("?"),
+        dump.get("capacity").and_then(|c| c.as_f64()).unwrap_or(0.0),
+    );
+    assert!(n_events > 0, "a stream with appends must have flight-recorder events");
+    svc.close(id).expect("close traced stream");
+
     println!("\nservice_demo OK — full stack (Pallas kernels via PJRT under a Rust coordinator) validated");
 }

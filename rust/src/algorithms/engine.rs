@@ -57,6 +57,7 @@
 
 use crate::runtime::TiledRuntime;
 use crate::submodular::{SolState, SubmodularFn};
+use crate::trace::{EventKind, Tracer};
 use crate::util::rng::Rng;
 use crate::util::select::LazyMaxHeap;
 use crate::util::stats::Timer;
@@ -102,6 +103,9 @@ pub struct MaximizerEngine<'a> {
     route: GainRoute<'a>,
     cohort: usize,
     stats: EngineStats,
+    /// span sink for cohort dispatches — the no-op tracer by default, so an
+    /// un-instrumented engine pays one relaxed atomic load per dispatch
+    tracer: &'a Tracer,
     // ---- arena (reused across runs, allocation-free within a run) ----
     heap: LazyMaxHeap,
     versions: Vec<u64>,
@@ -127,6 +131,7 @@ impl<'a> MaximizerEngine<'a> {
             route,
             cohort: DEFAULT_COHORT,
             stats: EngineStats::default(),
+            tracer: Tracer::noop(),
             heap: LazyMaxHeap::new(),
             versions: Vec::new(),
             evaluated_epoch: Vec::new(),
@@ -143,6 +148,16 @@ impl<'a> MaximizerEngine<'a> {
     /// re-evaluation schedule exactly, batch-dispatched).
     pub fn with_cohort(mut self, cohort: usize) -> Self {
         self.cohort = cohort.max(1);
+        self
+    }
+
+    /// Record one [`EventKind::Cohort`] span per kernel dispatch on
+    /// `tracer`: payload `[cohort_size, gain_evals, dispatches, _]` (the
+    /// running totals *after* the dispatch). Spans never touch the gains,
+    /// the heap or the RNG, so a traced run's solution is bit-identical to
+    /// an untraced one.
+    pub fn with_tracer(mut self, tracer: &'a Tracer) -> Self {
+        self.tracer = tracer;
         self
     }
 
@@ -208,6 +223,7 @@ impl<'a> MaximizerEngine<'a> {
                 &mut self.gains[..n],
                 &mut self.gains32,
                 &mut self.stats,
+                self.tracer,
             );
             for (i, &g) in self.gains[..n].iter().enumerate() {
                 self.heap.push(i, g as f32, 0);
@@ -259,6 +275,7 @@ impl<'a> MaximizerEngine<'a> {
                 &mut self.gains[..c],
                 &mut self.gains32,
                 &mut self.stats,
+                self.tracer,
             );
             for (idx, &p) in self.cohort_pos.iter().enumerate() {
                 self.versions[p] += 1;
@@ -302,6 +319,7 @@ impl<'a> MaximizerEngine<'a> {
                 &mut self.gains[..m],
                 &mut self.gains32,
                 &mut self.stats,
+                self.tracer,
             );
             let mut best_i = usize::MAX;
             let mut best_gain = f64::NEG_INFINITY;
@@ -389,6 +407,7 @@ impl<'a> MaximizerEngine<'a> {
                 &mut self.gains[..m],
                 &mut self.gains32,
                 &mut self.stats,
+                self.tracer,
             );
             let mut best_pos = usize::MAX;
             let mut best_gain = f64::NEG_INFINITY;
@@ -427,7 +446,8 @@ fn commit(route: &GainRoute<'_>, state: &mut dyn SolState, v: usize) {
 }
 
 /// One cohort dispatch through the configured route. Free-standing so the
-/// engine can borrow its arena fields disjointly.
+/// engine can borrow its arena fields disjointly. The span brackets the
+/// kernel call itself; with a disabled tracer it costs one relaxed load.
 fn batch_gains(
     route: &GainRoute<'_>,
     f: &dyn SubmodularFn,
@@ -436,8 +456,10 @@ fn batch_gains(
     out: &mut [f64],
     out32: &mut Vec<f32>,
     stats: &mut EngineStats,
+    tracer: &Tracer,
 ) {
     debug_assert_eq!(cands.len(), out.len());
+    let span = tracer.start();
     match route {
         GainRoute::Direct => state.gains_into(cands, out),
         GainRoute::Backend(b) => b.gains_into(state, cands, out),
@@ -459,6 +481,14 @@ fn batch_gains(
     }
     stats.gain_evals += cands.len() as u64;
     stats.dispatches += 1;
+    tracer.record_since(
+        EventKind::Cohort,
+        span,
+        cands.len() as u64,
+        stats.gain_evals,
+        stats.dispatches,
+        0,
+    );
 }
 
 #[cfg(test)]
@@ -601,6 +631,28 @@ mod tests {
         let s_full = eng.stochastic_greedy(&all, 10, 0.2, 7);
         let s_ref = stochastic_greedy_reference(&f, &all, 10, 0.2, 7);
         assert_eq!(s_full.set, s_ref.set, "interrupted runs must not disturb reuse");
+    }
+
+    #[test]
+    fn tracing_is_inert_and_records_cohort_spans() {
+        let f = feature_instance(120, 8, 21);
+        let all: Vec<usize> = (0..120).collect();
+        let mut plain = MaximizerEngine::new(&f, GainRoute::Direct);
+        let want = plain.lazy_greedy(&all, 15);
+
+        let tracer = Tracer::disabled();
+        tracer.enable("engine-test", 256);
+        let mut traced = MaximizerEngine::new(&f, GainRoute::Direct).with_tracer(&tracer);
+        let got = traced.lazy_greedy(&all, 15);
+        assert_eq!(got.set, want.set, "a traced run must be bit-identical");
+        assert_eq!(got.value.to_bits(), want.value.to_bits());
+
+        let evs = tracer.events();
+        assert_eq!(evs.len() as u64, traced.stats().dispatches, "one span per dispatch");
+        assert!(evs.iter().all(|e| e.kind == EventKind::Cohort));
+        let last = evs.last().unwrap();
+        assert_eq!(last.b, traced.stats().gain_evals, "running totals ride in the payload");
+        assert_eq!(last.c, traced.stats().dispatches);
     }
 
     #[test]

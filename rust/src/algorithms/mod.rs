@@ -56,9 +56,9 @@ pub use sieve_streaming::{
     sieve_streaming, sieve_streaming_with_stats, SieveParams, SieveStats,
 };
 pub use ss::{
-    sparsify, sparsify_candidates, sparsify_candidates_reference, sparsify_candidates_with,
-    sparsify_with, ss_then_greedy, CpuBackend, DivergenceBackend, Interrupt, Sampling, SsParams,
-    SsResult,
+    sparsify, sparsify_candidates, sparsify_candidates_reference, sparsify_candidates_traced,
+    sparsify_candidates_with, sparsify_traced, sparsify_with, ss_then_greedy, CpuBackend,
+    DivergenceBackend, Interrupt, Sampling, SsParams, SsResult,
 };
 pub use stochastic_greedy::{stochastic_greedy, stochastic_greedy_reference};
 pub use wei_prune::wei_prune;

@@ -24,6 +24,7 @@ use std::sync::Mutex;
 use super::engine::{GainRoute, MaximizerEngine};
 use super::Solution;
 use crate::submodular::{BatchedDivergence, SolState, SubmodularFn};
+use crate::trace::{EventKind, Tracer};
 use crate::util::rng::Rng;
 use crate::util::select::{partition_smallest, prune_smallest_paired};
 use crate::util::stats::Timer;
@@ -319,6 +320,63 @@ pub fn sparsify_candidates_with(
     params: &SsParams,
     check: &mut dyn FnMut() -> Option<Interrupt>,
 ) -> Result<SsResult, Interrupt> {
+    ss_round_loop::<false>(backend, candidates, params, check, Tracer::noop())
+}
+
+/// [`sparsify_candidates_with`] recording one [`EventKind::SsRound`] span
+/// per round on `tracer`: payload `[live_before, survivors,
+/// divergence_evals, probes]` (the round's live set before sampling, the
+/// post-prune live count, the divergence evaluations it charged, and the
+/// probe count moved into `V'`). Exporters derive the observed shrink rate
+/// `survivors / live_before` from the first two fields for comparison
+/// against the paper's theoretical `1/√c` (≈ 0.354 at c = 8).
+///
+/// Tracing is **provably inert**: the traced and untraced loops are the
+/// same `ss_round_loop` monomorphized over a `const TRACED: bool`, and the
+/// `TRACED = false` instantiation contains no tracing code at all — not
+/// even a branch. Span recording happens strictly between rounds (after
+/// the prune, before the next `check()` poll), touches neither the RNG nor
+/// any loop buffer, and allocates nothing (the tracer's ring is
+/// pre-reserved), so kept sets, accounting and interrupt polling are
+/// bit-identical across all three of {untraced, traced-disabled,
+/// traced-enabled} — asserted by the `perf_trace` bench and the
+/// counting-allocator suite.
+pub fn sparsify_candidates_traced(
+    backend: &dyn DivergenceBackend,
+    candidates: &[usize],
+    params: &SsParams,
+    check: &mut dyn FnMut() -> Option<Interrupt>,
+    tracer: &Tracer,
+) -> Result<SsResult, Interrupt> {
+    ss_round_loop::<true>(backend, candidates, params, check, tracer)
+}
+
+/// Whole-ground-set form of [`sparsify_candidates_traced`] — the traced
+/// sibling of [`sparsify_with`].
+pub fn sparsify_traced(
+    backend: &dyn DivergenceBackend,
+    params: &SsParams,
+    check: &mut dyn FnMut() -> Option<Interrupt>,
+    tracer: &Tracer,
+) -> Result<SsResult, Interrupt> {
+    let all: Vec<usize> = (0..backend.n()).collect();
+    sparsify_candidates_traced(backend, &all, params, check, tracer)
+}
+
+/// The one true round loop, monomorphized over `TRACED`. Every public
+/// sparsify entry point lands here; `TRACED = false` (the default path)
+/// compiles the span recording out entirely, `TRACED = true` adds one
+/// clock pair and one ring write per round. Both instantiations are
+/// otherwise the same instruction stream operating on the same state, so
+/// bit-identity between them is structural, not tested-into-existence
+/// (though the suites assert it anyway).
+fn ss_round_loop<const TRACED: bool>(
+    backend: &dyn DivergenceBackend,
+    candidates: &[usize],
+    params: &SsParams,
+    check: &mut dyn FnMut() -> Option<Interrupt>,
+    tracer: &Tracer,
+) -> Result<SsResult, Interrupt> {
     assert!(params.c > 1.0, "c must be > 1");
     assert!(params.r >= 1);
     let timer = Timer::new();
@@ -352,6 +410,9 @@ pub fn sparsify_candidates_with(
             return Err(why);
         }
         rounds += 1;
+        let span = if TRACED { tracer.start() } else { 0 };
+        let live_before = live.len();
+        let evals_before = divergence_evals;
         // --- line 5: sample U from V ---
         match params.sampling {
             Sampling::Uniform => {
@@ -374,6 +435,16 @@ pub fn sparsify_candidates_with(
         }
         kept.extend_from_slice(&scratch.probes);
         if live.is_empty() {
+            if TRACED {
+                tracer.record_since(
+                    EventKind::SsRound,
+                    span,
+                    live_before as u64,
+                    0,
+                    0,
+                    scratch.probes.len() as u64,
+                );
+            }
             break;
         }
         // --- lines 8-10: divergences w_{U,v} for v ∈ V, written in place ---
@@ -389,6 +460,16 @@ pub fn sparsify_candidates_with(
             drop_count = total_after.saturating_sub(params.min_keep);
         }
         if drop_count == 0 {
+            if TRACED {
+                tracer.record_since(
+                    EventKind::SsRound,
+                    span,
+                    live_before as u64,
+                    live.len() as u64,
+                    divergence_evals - evals_before,
+                    scratch.probes.len() as u64,
+                );
+            }
             break; // no further progress possible (floor hit or c ≈ 1)
         }
         // the returned value is the reference loop's exact ε̂ fold over the
@@ -396,6 +477,16 @@ pub fn sparsify_candidates_with(
         let round_max =
             prune_smallest_paired(&mut scratch.w, &mut live, drop_count, &mut scratch.sel);
         pruned_max_divergence = pruned_max_divergence.max(round_max);
+        if TRACED {
+            tracer.record_since(
+                EventKind::SsRound,
+                span,
+                live_before as u64,
+                live.len() as u64,
+                divergence_evals - evals_before,
+                scratch.probes.len() as u64,
+            );
+        }
     }
     // --- line 13: V' ← V ∪ V' ---
     kept.extend_from_slice(&live);

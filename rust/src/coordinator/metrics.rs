@@ -1,8 +1,47 @@
-//! Coordinator metrics: atomic counters + latency histograms, snapshotted
-//! to JSON for the service endpoint and the bench harness.
+//! Coordinator metrics: atomic counters + latency histograms, organized
+//! into **labeled scopes** and snapshotted to JSON for the service
+//! endpoint and the bench harness.
+//!
+//! # Scoped metrics
+//!
+//! A [`Metrics`] value is one *scope*: a label, a full [`Counters`]
+//! block, the three latency histograms, and a [`Tracer`]. The service
+//! owns one scope per deployment surface — the `"service"` scope for the
+//! whole instance, plus one `"stream-{id}"` scope per open streaming
+//! session — so counters attribute to sessions instead of accumulating
+//! into one global pile (the per-tenant model ROADMAP's QoS direction
+//! builds on). Stream traffic is *mirrored* onto the service scope by
+//! delta (see `SummarizationService::append`), so dashboards still get
+//! the one-stop aggregate view.
+//!
+//! # Counters vs gauges
+//!
+//! [`Counters`] holds two families with different reset semantics:
+//!
+//! * **counters** — monotone within a metering window (`requests`,
+//!   `divergence_evals`, …); [`reset`](Counters::reset) zeroes them, the
+//!   per-window scoping long-lived sessions rely on.
+//! * **gauges** — *current-state* readings set at backend (re)bind time
+//!   (`sparse_rows`, `lsh_candidates`, `lsh_bucket_max`,
+//!   `resident_bytes`); a reset must **not** zero them, because nothing
+//!   re-stores them until the next bind — a post-reset snapshot would
+//!   misreport store residency as 0.
+//!
+//! Both families appear in [`Metrics::snapshot`]; only the counter
+//! family is cleared by [`Metrics::reset`].
+//!
+//! # Tracing
+//!
+//! Each scope's tracer collects [`TraceEvent`](crate::trace::TraceEvent)
+//! spans for the work metered under it — disabled (and free) by default,
+//! enabled per-scope (`metrics.tracer().enable(label, cap)`). Stream
+//! scopes are opened with tracing *on*: their ring doubles as the
+//! quarantine flight recorder (see [`crate::trace`]).
 
 use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Arc;
 
+use crate::trace::Tracer;
 use crate::util::json::Json;
 use crate::util::stats::LatencyHistogram;
 
@@ -46,10 +85,6 @@ pub struct Counters {
     pub deadline_exceeded: AtomicU64,
     /// Copy-on-snapshot stream jobs accepted onto the worker queue.
     pub snapshot_jobs: AtomicU64,
-    /// Ground-set rows currently backed by a sparse top-t neighbor store
-    /// (0 when the objective is dense or feature-only). Gauge-style: set
-    /// at backend construction, not accumulated.
-    pub sparse_rows: AtomicU64,
     /// Existing neighbor-list entries displaced or inserted by streaming
     /// row-border appends into a sparse similarity store — the incremental
     /// work that replaces the O(m²·d) per-window rebuild.
@@ -64,8 +99,14 @@ pub struct Counters {
     /// Torn WAL tails truncated away during recovery (at most one per
     /// recovery — a crash tears at most the final record).
     pub torn_tail_truncations: AtomicU64,
+
+    // -- gauge family (reset-exempt; see the module docs) ----------------
+    /// Ground-set rows currently backed by a sparse top-t neighbor store
+    /// (0 when the objective is dense or feature-only). Gauge: set at
+    /// backend construction, not accumulated.
+    pub sparse_rows: AtomicU64,
     /// Candidate pairs actually scored by an LSH-bucketed neighbor build
-    /// (batch build plus every incremental append since). Gauge-style like
+    /// (batch build plus every incremental append since). Gauge like
     /// `sparse_rows`: set when a backend (re)binds its objective. Compare
     /// against n·(n−1) to read the pruning ratio the hash tables bought.
     pub lsh_candidates: AtomicU64,
@@ -73,14 +114,19 @@ pub struct Counters {
     /// skew gauge: a bucket near n means the projections aren't splitting
     /// the data and the build is degenerating toward all-pairs.
     pub lsh_bucket_max: AtomicU64,
+    /// Bytes resident in the bound objective's similarity/feature store
+    /// (dense matrix or sparse neighbor lists) — the memory-footprint
+    /// gauge behind capacity planning. Set at backend (re)bind, like the
+    /// other store-shape gauges.
+    pub resident_bytes: AtomicU64,
 }
 
 impl Counters {
-    /// Every counter with its snapshot key — the single authoritative
-    /// list [`Metrics::snapshot`] and [`Self::reset`] both iterate, so a
+    /// Every true counter with its snapshot key — the authoritative list
+    /// [`Metrics::snapshot`] and [`Self::reset`] both iterate, so a
     /// counter added here is automatically snapshotted *and* reset (the
     /// two can never drift apart).
-    fn named(&self) -> [(&'static str, &AtomicU64); 24] {
+    fn named_counters(&self) -> [(&'static str, &AtomicU64); 21] {
         [
             ("requests", &self.requests),
             ("completed", &self.completed),
@@ -98,33 +144,48 @@ impl Counters {
             ("cancelled", &self.cancelled),
             ("deadline_exceeded", &self.deadline_exceeded),
             ("snapshot_jobs", &self.snapshot_jobs),
-            ("sparse_rows", &self.sparse_rows),
             ("neighbor_updates", &self.neighbor_updates),
             ("wal_appends", &self.wal_appends),
             ("checkpoints", &self.checkpoints),
             ("recoveries", &self.recoveries),
             ("torn_tail_truncations", &self.torn_tail_truncations),
-            ("lsh_candidates", &self.lsh_candidates),
-            ("lsh_bucket_max", &self.lsh_bucket_max),
         ]
     }
 
-    /// Zero every counter — the per-session / per-window metrics scope for
-    /// long-lived streaming sessions, which would otherwise conflate
-    /// windows over a process lifetime. Relaxed stores: concurrent
-    /// increments may land on either side of the reset.
+    /// The gauge family: current-state store-shape readings, snapshotted
+    /// alongside the counters but **exempt from [`reset`](Self::reset)**
+    /// — nothing re-stores a gauge until the next backend bind, so
+    /// zeroing it would misreport residency for the whole window.
+    fn named_gauges(&self) -> [(&'static str, &AtomicU64); 4] {
+        [
+            ("sparse_rows", &self.sparse_rows),
+            ("lsh_candidates", &self.lsh_candidates),
+            ("lsh_bucket_max", &self.lsh_bucket_max),
+            ("resident_bytes", &self.resident_bytes),
+        ]
+    }
+
+    /// Zero every *counter* — the per-session / per-window metrics scope
+    /// for long-lived streaming sessions, which would otherwise conflate
+    /// windows over a process lifetime. Gauges keep their values (they
+    /// describe the store as it is now, not work done this window).
+    /// Relaxed stores: concurrent increments may land on either side of
+    /// the reset.
     pub fn reset(&self) {
-        for (_, c) in self.named() {
+        for (_, c) in self.named_counters() {
             c.store(0, Ordering::Relaxed);
         }
     }
 }
 
+/// One labeled metrics scope — see the module docs.
 pub struct Metrics {
+    label: String,
     pub counters: Counters,
     pub request_latency: LatencyHistogram,
     pub queue_wait: LatencyHistogram,
     pub round_latency: LatencyHistogram,
+    tracer: Arc<Tracer>,
 }
 
 impl Default for Metrics {
@@ -134,20 +195,42 @@ impl Default for Metrics {
 }
 
 impl Metrics {
+    /// The service-wide scope (label `"service"`), tracing disabled.
     pub fn new() -> Self {
+        Self::scoped("service")
+    }
+
+    /// A fresh scope under `label` (e.g. `"stream-3"`, a tenant id).
+    /// Tracing starts disabled; enable it via
+    /// [`tracer`](Self::tracer)`.enable(label, cap)`.
+    pub fn scoped(label: &str) -> Self {
         Self {
+            label: label.to_string(),
             counters: Counters::default(),
             request_latency: LatencyHistogram::new(),
             queue_wait: LatencyHistogram::new(),
             round_latency: LatencyHistogram::new(),
+            tracer: Arc::new(Tracer::disabled()),
         }
+    }
+
+    /// The scope's label, as emitted under the snapshot's `"scope"` key.
+    pub fn label(&self) -> &str {
+        &self.label
+    }
+
+    /// The scope's span collector (shared handle — the service clones it
+    /// out as the per-stream flight recorder).
+    pub fn tracer(&self) -> &Arc<Tracer> {
+        &self.tracer
     }
 
     pub fn add(&self, c: &AtomicU64, v: u64) {
         c.fetch_add(v, Ordering::Relaxed);
     }
 
-    /// Zero all counters and histograms — see [`Counters::reset`].
+    /// Zero all counters and histograms (gauges persist — see
+    /// [`Counters::reset`]).
     pub fn reset(&self) {
         self.counters.reset();
         self.request_latency.reset();
@@ -156,23 +239,22 @@ impl Metrics {
     }
 
     pub fn snapshot(&self) -> Json {
-        let hist = |h: &LatencyHistogram| {
-            Json::obj(vec![
-                ("count", Json::Num(h.count() as f64)),
-                ("p50_s", Json::Num(h.percentile_secs(50.0))),
-                ("p95_s", Json::Num(h.percentile_secs(95.0))),
-                ("p99_s", Json::Num(h.percentile_secs(99.0))),
-            ])
-        };
-        let mut fields: Vec<(&str, Json)> = self
-            .counters
-            .named()
-            .into_iter()
-            .map(|(name, c)| (name, Json::Num(c.load(Ordering::Relaxed) as f64)))
-            .collect();
-        fields.push(("request_latency", hist(&self.request_latency)));
-        fields.push(("queue_wait", hist(&self.queue_wait)));
-        fields.push(("round_latency", hist(&self.round_latency)));
+        let mut fields: Vec<(&str, Json)> = vec![("scope", Json::Str(self.label.clone()))];
+        fields.extend(
+            self.counters
+                .named_counters()
+                .into_iter()
+                .map(|(name, c)| (name, Json::Num(c.load(Ordering::Relaxed) as f64))),
+        );
+        fields.extend(
+            self.counters
+                .named_gauges()
+                .into_iter()
+                .map(|(name, g)| (name, Json::Num(g.load(Ordering::Relaxed) as f64))),
+        );
+        fields.push(("request_latency", self.request_latency.snapshot_json()));
+        fields.push(("queue_wait", self.queue_wait.snapshot_json()));
+        fields.push(("round_latency", self.round_latency.snapshot_json()));
         Json::obj(fields)
     }
 }
@@ -187,19 +269,34 @@ mod tests {
         m.add(&m.counters.requests, 3);
         m.request_latency.record_secs(0.01);
         let s = m.snapshot();
+        assert_eq!(s.get("scope").unwrap().as_str(), Some("service"));
         assert_eq!(s.get("requests").unwrap().as_f64(), Some(3.0));
         assert!(s.get("request_latency").unwrap().get("p50_s").unwrap().as_f64().unwrap() > 0.0);
+        assert!(s.get("request_latency").unwrap().get("p99_s").is_some());
         // serializes cleanly
         let text = s.pretty();
         assert!(crate::util::json::parse(&text).is_ok());
     }
 
     #[test]
-    fn reset_zeroes_counters_and_histograms() {
+    fn scoped_metrics_carry_their_label() {
+        let m = Metrics::scoped("stream-7");
+        assert_eq!(m.label(), "stream-7");
+        assert_eq!(m.snapshot().get("scope").unwrap().as_str(), Some("stream-7"));
+        assert!(!m.tracer().is_enabled(), "scopes start with tracing off");
+    }
+
+    #[test]
+    fn reset_zeroes_counters_and_histograms_but_not_gauges() {
         let m = Metrics::new();
         m.add(&m.counters.requests, 3);
         m.add(&m.counters.stream_appends, 7);
         m.add(&m.counters.evicted_elements, 2);
+        // gauges: stored at backend bind, must survive a window reset
+        m.counters.sparse_rows.store(160, Ordering::Relaxed);
+        m.counters.lsh_candidates.store(900, Ordering::Relaxed);
+        m.counters.lsh_bucket_max.store(12, Ordering::Relaxed);
+        m.counters.resident_bytes.store(4096, Ordering::Relaxed);
         m.request_latency.record_secs(0.01);
         m.round_latency.record_secs(0.02);
         m.reset();
@@ -209,6 +306,11 @@ mod tests {
         assert_eq!(s.get("evicted_elements").unwrap().as_f64(), Some(0.0));
         assert_eq!(m.request_latency.count(), 0);
         assert_eq!(m.round_latency.count(), 0);
+        // the gauge family is reset-exempt
+        assert_eq!(s.get("sparse_rows").unwrap().as_f64(), Some(160.0));
+        assert_eq!(s.get("lsh_candidates").unwrap().as_f64(), Some(900.0));
+        assert_eq!(s.get("lsh_bucket_max").unwrap().as_f64(), Some(12.0));
+        assert_eq!(s.get("resident_bytes").unwrap().as_f64(), Some(4096.0));
         // usable again after the reset
         m.add(&m.counters.stream_admitted, 1);
         assert_eq!(m.snapshot().get("stream_admitted").unwrap().as_f64(), Some(1.0));

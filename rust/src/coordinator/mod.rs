@@ -16,7 +16,24 @@
 //!   with backpressure via blocking/shedding submits and the streaming
 //!   session front-end (`open_stream` / `append` / `submit_snapshot` /
 //!   `close` over [`crate::stream::StreamSession`]);
-//! * [`metrics`] — counters + latency histograms surfaced as JSON.
+//! * [`metrics`] — **scoped** metrics: counters, gauges and latency
+//!   histograms surfaced as JSON, one [`Metrics`] instance per scope.
+//!
+//! ## The scoped-metrics model
+//!
+//! A [`Metrics`] value is a *scope*: a label, a set of monotonic counters,
+//! a set of level gauges (reset-exempt — they describe current state, not
+//! traffic), latency histograms, and one [`crate::trace::Tracer`]. The
+//! service owns the `"service"` scope; every stream opened through it gets
+//! its own `"stream-{id}"` scope whose counters mirror into the service
+//! scope on the shared hot paths. Because every layer (sharded backend,
+//! stream session, service worker) already holds a `Metrics` handle, the
+//! tracer rides along with zero extra plumbing: enabling a scope's tracer
+//! turns on span recording for exactly that scope's work — service-wide
+//! via [`SummarizationService::metrics`], per-stream via the always-on
+//! bounded flight recorder that `submit_flight_dump` snapshots (even
+//! after quarantine; see [`service`]). Span schema and exporters (JSON
+//! Lines, Chrome trace-event) live in [`crate::trace`].
 //!
 //! The whole stack is objective-generic: backends and the service hold an
 //! `Arc<dyn BatchedDivergence>` handle, so every objective in

@@ -70,8 +70,9 @@ use std::sync::mpsc::{sync_channel, Receiver, SyncSender, TrySendError};
 use std::sync::{Arc, Mutex};
 use std::thread::JoinHandle;
 
-use crate::algorithms::{sparsify_with, GainRoute, Interrupt, MaximizerEngine, SsParams};
+use crate::algorithms::{sparsify_traced, GainRoute, Interrupt, MaximizerEngine, SsParams};
 use crate::runtime::TiledRuntime;
+use crate::trace::{EventKind, Tracer};
 use crate::stream::{
     CheckpointInfo, DurabilityConfig, DurableStore, RecoveryReport, SnapshotCore, SnapshotMode,
     StreamAppend, StreamConfig, StreamSession, StreamStats, StreamSummary,
@@ -101,6 +102,11 @@ pub type StreamId = u64;
 #[deprecated(since = "0.2.0", note = "renamed to `ServiceError`")]
 pub type SubmitError<R = SummarizeRequest> = ServiceError<R>;
 
+/// Ring capacity of each stream's flight recorder: enough for the last
+/// few windows' worth of spans (WAL flushes, SS rounds, checkpoints) at a
+/// fixed ~64 KiB per stream, old events overwritten FIFO.
+const FLIGHT_RECORDER_CAP: usize = 1024;
+
 /// Map entry for an open stream: the session plus its row width, kept
 /// outside the session lock so input validation can panic (caller bug)
 /// *before* the mutex is taken — a poisoned session lock would brick the
@@ -112,6 +118,12 @@ struct StreamEntry {
     /// (feature-based coverage); facility location accepts signed rows
     nonneg: bool,
     session: Arc<Mutex<StreamSession>>,
+    /// the session's **flight recorder**: the always-on tracer ring of its
+    /// scoped [`Metrics`], held outside the session mutex so the last
+    /// events before a failure stay dumpable *after* quarantine — a
+    /// poisoned lock (or a quarantined durable store) cannot take the
+    /// evidence down with it
+    recorder: Arc<Tracer>,
 }
 
 /// What to summarize: the objective payload of a [`SummarizeRequest`].
@@ -224,8 +236,18 @@ enum Job {
     /// keeps ticket semantics (deadline, cancel-at-dequeue) for free.
     Checkpoint {
         session: Arc<Mutex<StreamSession>>,
+        recorder: Arc<Tracer>,
         enqueued: Timer,
         responder: Responder<CheckpointInfo>,
+    },
+    /// Dump a stream's flight recorder. Deliberately touches **only** the
+    /// recorder handle — never the session mutex — so it succeeds on a
+    /// quarantined (even lock-poisoned) stream, which is exactly when the
+    /// dump matters.
+    FlightDump {
+        recorder: Arc<Tracer>,
+        enqueued: Timer,
+        responder: Responder<crate::util::json::Json>,
     },
 }
 
@@ -234,12 +256,20 @@ enum Job {
 /// instead of propagating the panic into an unrelated caller. The
 /// in-memory session behind a poisoned lock is suspect; quarantining the
 /// stream (every later call resolves `Rejected`) matches what a durable
-/// session does on a failed store.
-fn lock_session(
-    session: &Mutex<StreamSession>,
-) -> Result<std::sync::MutexGuard<'_, StreamSession>, ServiceError> {
-    session.lock().map_err(|_| ServiceError::Rejected {
-        reason: "stream quarantined: an operation panicked while holding its session lock".into(),
+/// session does on a failed store. Each poisoned acquisition drops a
+/// [`EventKind::Quarantine`] marker on the stream's flight recorder,
+/// which stays dumpable ([`SummarizationService::submit_flight_dump`])
+/// because the recorder lives outside the mutex.
+fn lock_session<'a>(
+    session: &'a Mutex<StreamSession>,
+    recorder: &Tracer,
+) -> Result<std::sync::MutexGuard<'a, StreamSession>, ServiceError> {
+    session.lock().map_err(|_| {
+        recorder.record_now(EventKind::Quarantine, 0, 0, 0, 0);
+        ServiceError::Rejected {
+            reason: "stream quarantined: an operation panicked while holding its session lock"
+                .into(),
+        }
     })
 }
 
@@ -353,12 +383,23 @@ impl SummarizationService {
         }
     }
 
+    /// Per-stream observability scope: a [`Metrics`] labeled `stream-{id}`
+    /// whose tracer is enabled from birth as the stream's flight recorder
+    /// (bounded ring, [`FLIGHT_RECORDER_CAP`] events, oldest overwritten).
+    fn stream_scope(id: StreamId) -> Arc<Metrics> {
+        let label = format!("stream-{id}");
+        let metrics = Arc::new(Metrics::scoped(&label));
+        metrics.tracer().enable(&label, FLIGHT_RECORDER_CAP);
+        metrics
+    }
+
     /// Open a streaming session: append-only ingestion with sieve
     /// admission and windowed re-sparsification (see
     /// [`crate::stream::StreamSession`]). The session runs on the
-    /// service's compute pool with its own [`Metrics`] scope; the stream
-    /// counters are mirrored onto the service-wide metrics so dashboards
-    /// see every session's traffic in one place.
+    /// service's compute pool with its own [`Metrics`] scope (labeled
+    /// `stream-{id}`, flight recorder armed); the stream counters are
+    /// mirrored onto the service-wide metrics so dashboards see every
+    /// session's traffic in one place.
     pub fn open_stream(
         &self,
         objective: ObjectiveSpec,
@@ -368,19 +409,16 @@ impl SummarizationService {
         if self.down.load(Ordering::SeqCst) {
             return Err(ServiceError::ServiceDown);
         }
-        let session = StreamSession::new(
-            objective,
-            d,
-            cfg,
-            Arc::clone(&self.pool),
-            Arc::new(Metrics::new()),
-        )?;
         let id = self.next_stream.fetch_add(1, Ordering::Relaxed);
+        let metrics = Self::stream_scope(id);
+        let recorder = Arc::clone(metrics.tracer());
+        let session =
+            StreamSession::new(objective, d, cfg, Arc::clone(&self.pool), metrics)?;
         let nonneg = objective.needs_nonneg();
-        self.streams
-            .lock()
-            .unwrap_or_else(|e| e.into_inner())
-            .insert(id, StreamEntry { d, nonneg, session: Arc::new(Mutex::new(session)) });
+        self.streams.lock().unwrap_or_else(|e| e.into_inner()).insert(
+            id,
+            StreamEntry { d, nonneg, session: Arc::new(Mutex::new(session)), recorder },
+        );
         Ok(id)
     }
 
@@ -402,22 +440,24 @@ impl SummarizationService {
         if self.down.load(Ordering::SeqCst) {
             return Err(ServiceError::ServiceDown);
         }
+        let id = self.next_stream.fetch_add(1, Ordering::Relaxed);
+        let metrics = Self::stream_scope(id);
+        let recorder = Arc::clone(metrics.tracer());
         let session = StreamSession::open_durable(
             objective,
             d,
             cfg,
             Arc::clone(&self.pool),
-            Arc::new(Metrics::new()),
+            metrics,
             store,
             dcfg,
         )?;
         self.metrics.add(&self.metrics.counters.checkpoints, 1); // the open checkpoint
-        let id = self.next_stream.fetch_add(1, Ordering::Relaxed);
         let nonneg = objective.needs_nonneg();
-        self.streams
-            .lock()
-            .unwrap_or_else(|e| e.into_inner())
-            .insert(id, StreamEntry { d, nonneg, session: Arc::new(Mutex::new(session)) });
+        self.streams.lock().unwrap_or_else(|e| e.into_inner()).insert(
+            id,
+            StreamEntry { d, nonneg, session: Arc::new(Mutex::new(session)), recorder },
+        );
         Ok(id)
     }
 
@@ -435,22 +475,20 @@ impl SummarizationService {
         if self.down.load(Ordering::SeqCst) {
             return Err(ServiceError::ServiceDown);
         }
-        let (session, report) = StreamSession::recover_with_report(
-            Arc::clone(&self.pool),
-            Arc::new(Metrics::new()),
-            store,
-            dcfg,
-        )?;
+        let id = self.next_stream.fetch_add(1, Ordering::Relaxed);
+        let metrics = Self::stream_scope(id);
+        let recorder = Arc::clone(metrics.tracer());
+        let (session, report) =
+            StreamSession::recover_with_report(Arc::clone(&self.pool), metrics, store, dcfg)?;
         self.metrics.add(&self.metrics.counters.recoveries, 1);
         self.metrics
             .add(&self.metrics.counters.torn_tail_truncations, report.torn_tail_truncations);
         let d = session.d();
         let nonneg = session.needs_nonneg();
-        let id = self.next_stream.fetch_add(1, Ordering::Relaxed);
-        self.streams
-            .lock()
-            .unwrap_or_else(|e| e.into_inner())
-            .insert(id, StreamEntry { d, nonneg, session: Arc::new(Mutex::new(session)) });
+        self.streams.lock().unwrap_or_else(|e| e.into_inner()).insert(
+            id,
+            StreamEntry { d, nonneg, session: Arc::new(Mutex::new(session)), recorder },
+        );
         Ok((id, report))
     }
 
@@ -474,7 +512,7 @@ impl SummarizationService {
         // cannot poison the session mutex, and the O(n·d) scan stays out
         // of the critical section
         StreamSession::validate_batch(rows, entry.d, entry.nonneg);
-        let mut session = lock_session(&entry.session)?;
+        let mut session = lock_session(&entry.session, &entry.recorder)?;
         // mirror the session-scoped counters service-wide by delta, so
         // work done on error paths (a forced re-sparsification before a
         // QueueFull shed evicts elements and runs SS rounds) is accounted
@@ -575,7 +613,7 @@ impl SummarizationService {
     /// similarity build happens inside the job, not here).
     fn clone_core(&self, id: StreamId) -> Result<Arc<SnapshotCore>, ServiceError> {
         let entry = self.stream(id).ok_or_else(|| self.gone::<()>(id))?;
-        let core = lock_session(&entry.session)?.snapshot_core()?;
+        let core = lock_session(&entry.session, &entry.recorder)?.snapshot_core()?;
         Ok(core)
     }
 
@@ -600,6 +638,42 @@ impl SummarizationService {
         let (ticket, responder) = job_channel(opts);
         let job = Job::Checkpoint {
             session: Arc::clone(&entry.session),
+            recorder: Arc::clone(&entry.recorder),
+            enqueued: Timer::new(),
+            responder,
+        };
+        let _ = self.tx.send(job);
+        // send failure dropped the responder → ticket reads ServiceDown
+        Ok(ticket)
+    }
+
+    /// Submit a **flight-recorder dump** job with default [`JobOptions`]:
+    /// fetch the stream's last [`FLIGHT_RECORDER_CAP`] trace events (SS
+    /// rounds with shrink accounting, WAL flushes, checkpoints, windows,
+    /// quarantine markers) as a self-describing JSON document — see
+    /// [`crate::trace::export::flight_dump`] for the shape. The job reads
+    /// only the recorder ring, **never the session lock**, so it works on
+    /// a quarantined stream — poisoned lock or failed durable store — and
+    /// that post-mortem read is the recorder's whole reason to exist.
+    /// Closing the stream discards the recorder with the map entry.
+    pub fn submit_flight_dump(
+        &self,
+        id: StreamId,
+    ) -> Result<Ticket<crate::util::json::Json>, ServiceError> {
+        self.submit_flight_dump_with(id, JobOptions::default())
+    }
+
+    /// [`submit_flight_dump`](Self::submit_flight_dump) with per-job
+    /// options (deadline).
+    pub fn submit_flight_dump_with(
+        &self,
+        id: StreamId,
+        opts: JobOptions,
+    ) -> Result<Ticket<crate::util::json::Json>, ServiceError> {
+        let entry = self.stream(id).ok_or_else(|| self.gone::<()>(id))?;
+        let (ticket, responder) = job_channel(opts);
+        let job = Job::FlightDump {
+            recorder: Arc::clone(&entry.recorder),
             enqueued: Timer::new(),
             responder,
         };
@@ -628,7 +702,7 @@ impl SummarizationService {
     /// divergence/gain evals of its windows, its stream counters).
     pub fn stream_metrics(&self, id: StreamId) -> Result<crate::util::json::Json, ServiceError> {
         let entry = self.stream(id).ok_or_else(|| self.gone::<()>(id))?;
-        let s = lock_session(&entry.session)?;
+        let s = lock_session(&entry.session, &entry.recorder)?;
         Ok(s.metrics().snapshot())
     }
 
@@ -652,7 +726,7 @@ impl SummarizationService {
             .ok_or_else(|| self.gone::<()>(id))?;
         // a quarantined (lock-poisoned) session can't deliver stats; the
         // entry is removed either way — its storage drops with the Arc
-        let stats = lock_session(&entry.session)?.close();
+        let stats = lock_session(&entry.session, &entry.recorder)?.close();
         Ok(stats)
     }
 
@@ -760,7 +834,7 @@ fn worker_main(
                 }
                 responder.resolve(result);
             }
-            Job::Checkpoint { session, enqueued, responder } => {
+            Job::Checkpoint { session, recorder, enqueued, responder } => {
                 metrics.queue_wait.record_secs(enqueued.elapsed_s());
                 if let Some(why) = responder.interrupt() {
                     let e = ServiceError::from(why);
@@ -768,7 +842,7 @@ fn worker_main(
                     responder.resolve(Err(e));
                     continue;
                 }
-                let result = match lock_session(&session) {
+                let result = match lock_session(&session, &recorder) {
                     Ok(mut s) => s.checkpoint_now(),
                     Err(e) => Err(e),
                 };
@@ -780,6 +854,19 @@ fn worker_main(
                     Err(e) => meter_error(metrics, e),
                 }
                 responder.resolve(result);
+            }
+            Job::FlightDump { recorder, enqueued, responder } => {
+                metrics.queue_wait.record_secs(enqueued.elapsed_s());
+                if let Some(why) = responder.interrupt() {
+                    let e = ServiceError::from(why);
+                    meter_error(metrics, &e);
+                    responder.resolve(Err(e));
+                    continue;
+                }
+                // reads only the recorder ring — never the session mutex
+                let dump = crate::trace::export::flight_dump(&recorder);
+                metrics.add(&metrics.counters.completed, 1);
+                responder.resolve(Ok(dump));
             }
         }
     }
@@ -805,6 +892,7 @@ fn handle(
     check: &mut dyn FnMut() -> Option<Interrupt>,
 ) -> Result<SummarizeResponse, ServiceError> {
     let timer = Timer::new();
+    let job_span = metrics.tracer().start();
     let n = req.objective.n();
     metrics.add(&metrics.counters.items_in, n as u64);
     let f: Arc<dyn BatchedDivergence> = req.objective.into_fn();
@@ -821,8 +909,10 @@ fn handle(
             .map_err(|e| ServiceError::Rejected { reason: e.to_string() })?;
     let round_timer = Timer::new();
     // the interrupt probe fires between SS rounds: a cancelled or
-    // deadline-blown request abandons the pass at the next round boundary
-    let ss = sparsify_with(&backend, &req.params, check)?;
+    // deadline-blown request abandons the pass at the next round boundary;
+    // each round records an SsRound span on the service tracer (inert
+    // while it is disabled — the default)
+    let ss = sparsify_traced(&backend, &req.params, check, metrics.tracer())?;
     if ss.rounds > 0 {
         // only real rounds produce a sample — a small-n passthrough (0
         // rounds) must not log its sparsify wall time as one fake round
@@ -839,8 +929,8 @@ fn handle(
     // dispatch instead of running the full huge-k maximization out.
     let sol = match &compute {
         Compute::Pjrt(rt) if f.as_feature_based().is_some() => {
-            let mut eng =
-                MaximizerEngine::new(f.as_submodular(), GainRoute::Pjrt(rt.as_ref()));
+            let mut eng = MaximizerEngine::new(f.as_submodular(), GainRoute::Pjrt(rt.as_ref()))
+                .with_tracer(metrics.tracer());
             let sol = eng.lazy_greedy_with(&ss.kept, req.k, check);
             // the PJRT route dispatches cohorts straight at the artifact,
             // bypassing ShardedBackend::gains_into — meter it here so
@@ -850,8 +940,19 @@ fn handle(
             sol?
         }
         _ => MaximizerEngine::new(f.as_submodular(), GainRoute::Backend(&backend))
+            .with_tracer(metrics.tracer())
             .lazy_greedy_with(&ss.kept, req.k, check)?,
     };
+    // the whole-request span closes the hierarchy: job → rounds → cohorts
+    // → kernel dispatches, payload [items_in, reduced, k, ss_rounds]
+    metrics.tracer().record_since(
+        EventKind::Job,
+        job_span,
+        n as u64,
+        ss.kept.len() as u64,
+        req.k as u64,
+        ss.rounds as u64,
+    );
     Ok(SummarizeResponse {
         summary: sol.set,
         value: sol.value,
@@ -1224,6 +1325,108 @@ mod tests {
             Err(ServiceError::UnknownStream(_)) => {}
             other => panic!("closed quarantined stream must be unknown, got {other:?}"),
         }
+    }
+
+    #[test]
+    fn flight_recorder_survives_poisoned_lock_quarantine() {
+        use crate::stream::{DurabilityConfig, MemStore, StreamConfig};
+        use crate::submodular::Concave;
+        let svc = SummarizationService::start(ServiceConfig::default(), None);
+        let id = svc
+            .open_stream_durable(
+                ObjectiveSpec::Features(Concave::Sqrt),
+                8,
+                StreamConfig::new(4)
+                    .with_ss(SsParams::default().with_seed(19))
+                    .with_high_water(60),
+                Box::new(MemStore::new()),
+                DurabilityConfig::default(),
+            )
+            .unwrap();
+        let rows = feats(150, 8, 71);
+        svc.append(id, rows.data()).unwrap();
+
+        // poison the session mutex: a thread panics while holding it
+        let session = Arc::clone(&svc.stream(id).unwrap().session);
+        let poisoner = std::thread::spawn(move || {
+            let _guard = session.lock().unwrap();
+            panic!("simulated panic while holding the session lock");
+        });
+        assert!(poisoner.join().is_err());
+        match svc.append(id, rows.data()) {
+            Err(ServiceError::Rejected { reason }) => {
+                assert!(reason.contains("quarantined"), "{reason}");
+            }
+            other => panic!("poisoned stream must reject appends typed, got {other:?}"),
+        }
+
+        // the dump job never touches the session lock, so the recorder is
+        // retrievable exactly when every session-locking path is bricked
+        let dump = svc.submit_flight_dump(id).unwrap().wait().unwrap();
+        assert_eq!(dump.get("scope").unwrap().as_str(), Some(format!("stream-{id}").as_str()));
+        let events = dump.get("events").unwrap().as_arr().unwrap();
+        assert!(!events.is_empty(), "quarantined stream must still dump its history");
+        let kinds: Vec<&str> =
+            events.iter().filter_map(|e| e.get("event").and_then(|k| k.as_str())).collect();
+        assert!(kinds.contains(&"wal_flush"), "durable appends leave WAL spans: {kinds:?}");
+        assert!(
+            kinds.contains(&"ss_round") && kinds.contains(&"window"),
+            "the high-water re-sparsification leaves round + window spans: {kinds:?}"
+        );
+        assert!(
+            kinds.contains(&"quarantine"),
+            "the poisoned acquisition drops a quarantine marker: {kinds:?}"
+        );
+
+        // close removes the entry (and the recorder with it)
+        let _ = svc.close(id);
+        match svc.submit_flight_dump(id) {
+            Err(ServiceError::UnknownStream(_)) => {}
+            other => panic!("dump after close must be UnknownStream, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn flight_recorder_captures_durable_store_quarantine() {
+        use crate::stream::{DurabilityConfig, FaultStore, MemStore, StreamConfig};
+        use crate::submodular::Concave;
+        let svc = SummarizationService::start(ServiceConfig::default(), None);
+        // generous op budget so the open checkpoint succeeds; the first
+        // over-budget store write errors and quarantines the session
+        let store = FaultStore::new(Box::new(MemStore::new())).fail_after(64).with_error_on_fault();
+        let id = svc
+            .open_stream_durable(
+                ObjectiveSpec::Features(Concave::Sqrt),
+                6,
+                StreamConfig::new(4).with_ss(SsParams::default().with_seed(23)),
+                Box::new(store),
+                DurabilityConfig::default(),
+            )
+            .unwrap();
+        let row = feats(1, 6, 81);
+        let mut quarantined = false;
+        for _ in 0..200 {
+            match svc.append(id, row.data()) {
+                Ok(_) => {}
+                Err(ServiceError::Rejected { reason }) => {
+                    assert!(reason.contains("quarantined") || !reason.is_empty());
+                    quarantined = true;
+                    break;
+                }
+                Err(other) => panic!("store fault must surface as Rejected, got {other:?}"),
+            }
+        }
+        assert!(quarantined, "the fault budget must trip within 200 single-row appends");
+
+        let dump = svc.submit_flight_dump(id).unwrap().wait().unwrap();
+        let events = dump.get("events").unwrap().as_arr().unwrap();
+        let kinds: Vec<&str> =
+            events.iter().filter_map(|e| e.get("event").and_then(|k| k.as_str())).collect();
+        assert!(kinds.contains(&"wal_flush"), "pre-fault appends left WAL spans: {kinds:?}");
+        assert!(
+            kinds.contains(&"quarantine"),
+            "the failed store write drops a quarantine marker: {kinds:?}"
+        );
     }
 
     #[test]

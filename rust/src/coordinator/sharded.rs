@@ -41,9 +41,12 @@ const GAIN_SHARD_THRESHOLD: usize = 256;
 const COMMIT_SHARD_MIN: usize = 4096;
 
 /// Refresh the store-shape gauges from the objective: `sparse_rows`,
-/// `lsh_candidates`, `lsh_bucket_max`. Stored rather than accumulated —
-/// they describe the backend's *current* objective, and every site that
-/// (re)binds one goes through here (construction, adopt, resume).
+/// `lsh_candidates`, `lsh_bucket_max`, `resident_bytes`. Stored rather
+/// than accumulated — they describe the backend's *current* objective,
+/// and every site that (re)binds one goes through here (construction,
+/// adopt, resume). The gauge family is reset-exempt in
+/// [`Metrics::reset`], so a per-window counter reset between binds
+/// cannot misreport store residency.
 fn refresh_store_gauges(metrics: &Metrics, f: &dyn BatchedDivergence) {
     use std::sync::atomic::Ordering::Relaxed;
     let c = &metrics.counters;
@@ -51,6 +54,7 @@ fn refresh_store_gauges(metrics: &Metrics, f: &dyn BatchedDivergence) {
     let (cands, bmax) = f.lsh_stats();
     c.lsh_candidates.store(cands, Relaxed);
     c.lsh_bucket_max.store(bmax, Relaxed);
+    c.resident_bytes.store(f.resident_bytes() as u64, Relaxed);
 }
 
 /// Where a shard's divergences are computed.
@@ -256,6 +260,7 @@ impl DivergenceBackend for ShardedBackend {
     /// shared by reference instead of cloned into `Arc<Vec>`s each round.
     fn divergences_into(&self, probes: &[usize], items: &[usize], out: &mut [f32]) {
         debug_assert_eq!(out.len(), items.len());
+        let span = self.metrics.tracer().start();
         // take the scratch out of the mutex so the lock is held only for
         // the swap, not across the computation — a concurrent caller on a
         // shared backend gets a fresh (cold) buffer instead of serializing
@@ -277,8 +282,16 @@ impl DivergenceBackend for ShardedBackend {
         *self.probe_sing.lock().unwrap() = ps;
         // pairwise w_{uv} evaluations — the same unit `sparsify_candidates`
         // accounts in `SsResult::divergence_evals`
-        self.metrics
-            .add(&self.metrics.counters.divergence_evals, (probes.len() * items.len()) as u64);
+        let evals = (probes.len() * items.len()) as u64;
+        self.metrics.add(&self.metrics.counters.divergence_evals, evals);
+        self.metrics.tracer().record_since(
+            crate::trace::EventKind::KernelDispatch,
+            span,
+            probes.len() as u64,
+            items.len() as u64,
+            evals,
+            0,
+        );
     }
 
     fn importance_weights(&self, items: &[usize]) -> Vec<f64> {
@@ -313,6 +326,7 @@ impl DivergenceBackend for ShardedBackend {
     /// lands on the `gain_evals` counter.
     fn gains_into(&self, state: &dyn SolState, candidates: &[usize], out: &mut [f64]) {
         debug_assert_eq!(candidates.len(), out.len());
+        let span = self.metrics.tracer().start();
         if candidates.len() >= GAIN_SHARD_THRESHOLD && self.shards > 1 {
             self.pool.parallel_ranges_into(out, self.shards, |lo, hi, chunk| {
                 state.gains_into(&candidates[lo..hi], chunk);
@@ -321,6 +335,15 @@ impl DivergenceBackend for ShardedBackend {
             state.gains_into(candidates, out);
         }
         self.metrics.add(&self.metrics.counters.gain_evals, candidates.len() as u64);
+        // a gain dispatch has no probe set: [0, cohort, evals, _]
+        self.metrics.tracer().record_since(
+            crate::trace::EventKind::KernelDispatch,
+            span,
+            0,
+            candidates.len() as u64,
+            candidates.len() as u64,
+            0,
+        );
     }
 }
 

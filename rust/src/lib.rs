@@ -35,6 +35,7 @@ pub mod data;
 pub mod runtime;
 pub mod coordinator;
 pub mod stream;
+pub mod trace;
 pub mod config;
 pub mod eval;
 pub mod bench;

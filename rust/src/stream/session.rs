@@ -85,10 +85,11 @@ use std::collections::VecDeque;
 use std::sync::Arc;
 
 use crate::algorithms::{
-    sparsify, sparsify_with, GainRoute, Interrupt, MaximizerEngine, Solution, SsParams,
+    sparsify_traced, GainRoute, Interrupt, MaximizerEngine, Solution, SsParams,
 };
 use crate::coordinator::job::ServiceError;
 use crate::coordinator::{Compute, Metrics, ShardedBackend};
+use crate::trace::{EventKind, Tracer};
 use crate::submodular::{
     BatchedDivergence, BuildStrategy, FacilityLocation, FeatureBased, ObjectiveSpec,
     SparseSimStore, SubmodularFn,
@@ -680,12 +681,23 @@ impl StreamSession {
         // reachable session state. An I/O failure quarantines: continuing
         // un-logged would silently diverge from what recovery can rebuild.
         if let Some(du) = self.durability.as_mut() {
+            let span = self.metrics.tracer().start();
+            let wal_seq = du.next_seq();
             if let Err(e) = du.log_append(rows) {
                 let reason = e.to_string();
                 du.quarantine(reason.clone());
+                self.metrics.tracer().record_now(EventKind::Quarantine, 0, 0, 0, 0);
                 return Err(ServiceError::Rejected { reason });
             }
             self.metrics.add(&self.metrics.counters.wal_appends, 1);
+            self.metrics.tracer().record_since(
+                EventKind::WalFlush,
+                span,
+                (rows.len() / self.d) as u64,
+                wal_seq,
+                0,
+                0,
+            );
         }
         debug_assert_eq!(rows.len() % self.d, 0);
         let batch_n = rows.len() / self.d;
@@ -810,6 +822,7 @@ impl StreamSession {
             self.buffer_len = 0;
             return (0, 0);
         }
+        let span = self.metrics.tracer().start();
         // Recovery replay: the WAL recorded what this window decided, so
         // apply the logged verdict instead of re-running SS — a pure
         // optimization (the live pass below recomputes the identical kept
@@ -822,6 +835,7 @@ impl StreamSession {
                 && rec.kept.last().map_or(true, |&l| l < m);
             if valid {
                 let evicted = self.apply_compaction(&rec.kept, rec.rounds);
+                self.record_window(span, m, evicted, rec.rounds);
                 return (evicted, rec.rounds);
             }
         }
@@ -829,8 +843,12 @@ impl StreamSession {
         let backend = self.resume_backend(&obj);
         let params = SsParams { seed: self.window_seed(), ..self.cfg.ss.clone() };
         // sparsify == sparsify_candidates over (0..backend.n()), and
-        // backend.n() is exactly the live set here
-        let res = sparsify(&backend, &params);
+        // backend.n() is exactly the live set here; the traced form records
+        // one SsRound span per round on this stream's recorder ring
+        let res = match sparsify_traced(&backend, &params, &mut || None, self.metrics.tracer()) {
+            Ok(res) => res,
+            Err(_) => unreachable!("a None-returning check can never interrupt"),
+        };
         // park (not drop) the backend: its objective handle and singleton
         // precompute go away — compaction invalidates both — but the pool
         // wiring and scratch carry into the next window's resume
@@ -843,11 +861,28 @@ impl StreamSession {
             if du.quarantined().is_none() {
                 if let Err(e) = du.log_compact(res.rounds, &res.kept) {
                     du.quarantine(e.to_string());
+                    self.metrics.tracer().record_now(EventKind::Quarantine, 0, 0, 0, 0);
                 }
             }
         }
         let evicted = self.apply_compaction(&res.kept, res.rounds);
+        self.record_window(span, m, evicted, res.rounds);
         (evicted, res.rounds)
+    }
+
+    /// One [`EventKind::Window`] span per re-sparsification: payload
+    /// `[live_before, retained, evicted, ss_rounds]` (replayed windows
+    /// report the logged round count with `evicted` from the recorded
+    /// verdict).
+    fn record_window(&self, span: u64, live_before: usize, evicted: usize, rounds: usize) {
+        self.metrics.tracer().record_since(
+            EventKind::Window,
+            span,
+            live_before as u64,
+            (live_before - evicted) as u64,
+            evicted as u64,
+            rounds as u64,
+        );
     }
 
     /// Compact storage, remap and accounting to a surviving `kept` set
@@ -924,6 +959,7 @@ impl StreamSession {
             &params,
             m,
             &mut || None,
+            self.metrics.tracer(),
         ) {
             Ok(done) => done,
             Err(_) => unreachable!("a None-returning check can never interrupt"),
@@ -1022,6 +1058,7 @@ impl StreamSession {
                 if du.quarantined().is_none() {
                     if let Err(e) = du.log_close() {
                         du.quarantine(e.to_string());
+                        self.metrics.tracer().record_now(EventKind::Quarantine, 0, 0, 0, 0);
                     }
                 }
             }
@@ -1068,17 +1105,28 @@ impl StreamSession {
             }
             du.next_seq()
         };
+        let span = self.metrics.tracer().start();
+        let live = self.live();
         let state = self.capture_checkpoint_state(wal_seq)?;
         let payload = super::checkpoint::encode(&state);
         let du = self.durability.as_mut().expect("checked durable above");
         match du.write_checkpoint(&payload) {
             Ok(bytes) => {
                 self.metrics.add(&self.metrics.counters.checkpoints, 1);
+                self.metrics.tracer().record_since(
+                    EventKind::Checkpoint,
+                    span,
+                    wal_seq,
+                    live as u64,
+                    bytes as u64,
+                    0,
+                );
                 Ok(CheckpointInfo { seq: wal_seq, bytes })
             }
             Err(e) => {
                 let reason = e.to_string();
                 du.quarantine(reason.clone());
+                self.metrics.tracer().record_now(EventKind::Quarantine, 0, 0, 0, 0);
                 Err(ServiceError::Rejected { reason })
             }
         }
@@ -1478,8 +1526,17 @@ impl SnapshotCore {
             }
         };
         let backend = make_backend(&obj, &self.pool, &self.metrics, self.shards);
-        let (sol, ss_rounds) =
-            summarize_live(&obj, &backend, mode, self.k, self.intermediate_eps, &self.ss, m, check)?;
+        let (sol, ss_rounds) = summarize_live(
+            &obj,
+            &backend,
+            mode,
+            self.k,
+            self.intermediate_eps,
+            &self.ss,
+            m,
+            check,
+            self.metrics.tracer(),
+        )?;
         Ok(StreamSummary {
             summary: sol.set.iter().map(|&i| self.int_to_ext[i]).collect(),
             value: sol.value,
@@ -1531,11 +1588,13 @@ fn summarize_live(
     params: &SsParams,
     m: usize,
     check: &mut dyn FnMut() -> Option<Interrupt>,
+    tracer: &Tracer,
 ) -> Result<(Solution, usize), Interrupt> {
-    let mut engine = MaximizerEngine::new(obj.as_submodular(), GainRoute::Backend(backend));
+    let mut engine = MaximizerEngine::new(obj.as_submodular(), GainRoute::Backend(backend))
+        .with_tracer(tracer);
     match mode {
         SnapshotMode::Final => {
-            let ss = sparsify_with(backend, params, check)?;
+            let ss = sparsify_traced(backend, params, check, tracer)?;
             // the probe rides into the greedy epoch loop too, so a cancel
             // landing after the SS pass sheds within one cohort
             Ok((engine.lazy_greedy_with(&ss.kept, k, check)?, ss.rounds))

@@ -638,6 +638,10 @@ impl SubmodularFn for FacilityLocation {
         }
     }
 
+    fn resident_bytes(&self) -> usize {
+        FacilityLocation::resident_bytes(self)
+    }
+
     /// Compact the store to the surviving elements, in place. Dense: the
     /// `keep × keep` principal submatrix via a forward row-major walk
     /// (with `keep` ascending every source cell sits at or after its

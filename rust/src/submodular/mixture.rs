@@ -108,6 +108,11 @@ impl SubmodularFn for Mixture {
         self.parts.iter().map(|(_, p)| p.sparse_rows()).sum()
     }
 
+    /// Sum of the components' store residency, like [`Self::sparse_rows`].
+    fn resident_bytes(&self) -> usize {
+        self.parts.iter().map(|(_, p)| p.resident_bytes()).sum()
+    }
+
     /// A mixture can compact exactly when every component can — partial
     /// compaction would desynchronize the parts' ground sets.
     fn supports_retain(&self) -> bool {

@@ -250,6 +250,15 @@ pub trait SubmodularFn: Send + Sync {
         (0, 0)
     }
 
+    /// Bytes resident in this objective's backing store (dense similarity
+    /// matrix, sparse neighbor lists, …) — introspection the backends
+    /// meter into the coordinator's `resident_bytes` gauge for capacity
+    /// planning. `0` (the default) means no accounted storage; mixtures
+    /// sum their components.
+    fn resident_bytes(&self) -> usize {
+        0
+    }
+
     /// Whether [`retain_elements`] is implemented — the streaming
     /// subsystem ([`crate::stream`]) requires it to compact the live
     /// ground set after a windowed re-sparsification. Defaults to `false`;

@@ -1,0 +1,244 @@
+//! Trace exporters: JSON Lines (one self-describing object per event) and
+//! the Chrome trace-event format (a `{"traceEvents": [...]}` document
+//! loadable in Perfetto / `chrome://tracing`), both on the crate's own
+//! [`Json`] writer — no new dependencies.
+
+use crate::util::json::Json;
+
+use super::{EventKind, TraceEvent, Tracer};
+
+/// Theoretical per-round keep fraction `1/√c` at the paper's default
+/// c = 8 — √2/4. JSON-lines SS-round records carry it next to the
+/// observed `survivors / live_before` so per-round shrink can be checked
+/// against the paper's trajectory without post-processing.
+pub const KEEP_THEORY_C8: f64 = 0.353_553_390_593_273_8;
+
+/// Stable exporter name for an event kind.
+pub fn kind_name(kind: EventKind) -> &'static str {
+    match kind {
+        EventKind::Job => "job",
+        EventKind::SsRound => "ss_round",
+        EventKind::Cohort => "cohort",
+        EventKind::KernelDispatch => "kernel_dispatch",
+        EventKind::WalFlush => "wal_flush",
+        EventKind::Checkpoint => "checkpoint",
+        EventKind::Window => "window",
+        EventKind::Quarantine => "quarantine",
+    }
+}
+
+/// Per-kind names of the four payload slots (`a..d`, in order) — the one
+/// schema table both exporters read, mirroring the [`EventKind`] docs.
+pub fn field_names(kind: EventKind) -> [&'static str; 4] {
+    match kind {
+        EventKind::Job => ["items_in", "reduced", "k", "ss_rounds"],
+        EventKind::SsRound => ["live_before", "survivors", "divergence_evals", "probes"],
+        EventKind::Cohort => ["cohort", "gain_evals", "dispatches", "_d"],
+        EventKind::KernelDispatch => ["probes", "items", "evals", "_d"],
+        EventKind::WalFlush => ["rows", "wal_seq", "_c", "_d"],
+        EventKind::Checkpoint => ["wal_seq", "live", "bytes", "_d"],
+        EventKind::Window => ["live_before", "retained", "evicted", "ss_rounds"],
+        EventKind::Quarantine => ["_a", "_b", "_c", "_d"],
+    }
+}
+
+/// One event as a self-describing JSON object (named payload fields;
+/// unused slots elided).
+fn event_obj(scope: &str, ev: &TraceEvent) -> Json {
+    let names = field_names(ev.kind);
+    let mut fields: Vec<(&str, Json)> = vec![
+        ("scope", Json::Str(scope.to_string())),
+        ("event", Json::Str(kind_name(ev.kind).to_string())),
+        ("seq", Json::Num(ev.seq as f64)),
+        ("t_ns", Json::Num(ev.t_ns as f64)),
+        ("dur_ns", Json::Num(ev.dur_ns as f64)),
+    ];
+    for (name, val) in names.iter().zip([ev.a, ev.b, ev.c, ev.d]) {
+        if !name.starts_with('_') {
+            fields.push((name, Json::Num(val as f64)));
+        }
+    }
+    if ev.kind == EventKind::SsRound && ev.a > 0 {
+        fields.push(("keep_observed", Json::Num(ev.b as f64 / ev.a as f64)));
+        fields.push(("keep_theory_c8", Json::Num(KEEP_THEORY_C8)));
+    }
+    Json::obj(fields)
+}
+
+/// Export a tracer's ring as JSON Lines: one compact object per event,
+/// oldest-first, newline-terminated — `grep`/`jq`-friendly, streamable,
+/// and the flight-recorder dump format.
+pub fn to_json_lines(tracer: &Tracer) -> String {
+    let scope = tracer.label();
+    let mut out = String::new();
+    for ev in tracer.events() {
+        out.push_str(&event_obj(&scope, &ev).to_string());
+        out.push('\n');
+    }
+    out
+}
+
+/// Export one or more tracers as a Chrome trace-event document
+/// (`{"traceEvents": [...]}`). Each tracer becomes one track (`tid` =
+/// its index, named by a `thread_name` metadata event); spans are
+/// complete `"X"` events with microsecond `ts`/`dur`, so temporal
+/// nesting (job → round → dispatch) renders as stacked slices in
+/// Perfetto. Payload slots ride in `args` under their schema names.
+pub fn to_chrome_trace(tracers: &[&Tracer]) -> Json {
+    let mut events = Vec::new();
+    for (tid, tracer) in tracers.iter().enumerate() {
+        let label = tracer.label();
+        events.push(Json::obj(vec![
+            ("name", Json::Str("thread_name".into())),
+            ("ph", Json::Str("M".into())),
+            ("pid", Json::Num(1.0)),
+            ("tid", Json::Num(tid as f64)),
+            (
+                "args",
+                Json::obj(vec![(
+                    "name",
+                    Json::Str(if label.is_empty() { format!("trace-{tid}") } else { label.clone() }),
+                )]),
+            ),
+        ]));
+        for ev in tracer.events() {
+            let names = field_names(ev.kind);
+            let mut args: Vec<(&str, Json)> = vec![("seq", Json::Num(ev.seq as f64))];
+            for (name, val) in names.iter().zip([ev.a, ev.b, ev.c, ev.d]) {
+                if !name.starts_with('_') {
+                    args.push((name, Json::Num(val as f64)));
+                }
+            }
+            events.push(Json::obj(vec![
+                ("name", Json::Str(kind_name(ev.kind).to_string())),
+                ("cat", Json::Str("ss".into())),
+                ("ph", Json::Str("X".into())),
+                ("ts", Json::Num(ev.t_ns as f64 / 1e3)),
+                ("dur", Json::Num(ev.dur_ns as f64 / 1e3)),
+                ("pid", Json::Num(1.0)),
+                ("tid", Json::Num(tid as f64)),
+                ("args", Json::obj(args)),
+            ]));
+        }
+    }
+    Json::obj(vec![("traceEvents", Json::Arr(events))])
+}
+
+/// The flight-recorder dump document (what the service's
+/// `submit_flight_dump` job resolves with): ring accounting plus every
+/// retained event as a self-describing object, oldest-first —
+///
+/// ```json
+/// {"scope": "stream-3", "capacity": 1024, "dropped": 12, "recording": true,
+///  "events": [{"event": "ss_round", ...}, ...]}
+/// ```
+///
+/// `dropped` counts events the bounded ring overwrote before the dump;
+/// a non-zero value means the `events` array is the *suffix* of the
+/// stream's history, which for a post-quarantine post-mortem is the part
+/// that matters.
+pub fn flight_dump(tracer: &Tracer) -> Json {
+    let scope = tracer.label();
+    let events: Vec<Json> = tracer.events().iter().map(|ev| event_obj(&scope, ev)).collect();
+    Json::obj(vec![
+        ("scope", Json::Str(scope)),
+        ("capacity", Json::Num(tracer.capacity() as f64)),
+        ("dropped", Json::Num(tracer.dropped() as f64)),
+        ("recording", Json::Bool(tracer.is_enabled())),
+        ("events", Json::Arr(events)),
+    ])
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::json;
+
+    fn sample_tracer() -> Tracer {
+        let t = Tracer::disabled();
+        t.enable("svc", 16);
+        let s = t.start();
+        t.record_since(EventKind::SsRound, s, 1000, 353, 250_000, 88);
+        t.record_now(EventKind::WalFlush, 64, 7, 0, 0);
+        t
+    }
+
+    #[test]
+    fn json_lines_are_parseable_and_self_describing() {
+        let t = sample_tracer();
+        let lines = to_json_lines(&t);
+        let parsed: Vec<Json> =
+            lines.lines().map(|l| json::parse(l).expect("each line parses")).collect();
+        assert_eq!(parsed.len(), 2);
+        let round = &parsed[0];
+        assert_eq!(round.get("scope").unwrap().as_str(), Some("svc"));
+        assert_eq!(round.get("event").unwrap().as_str(), Some("ss_round"));
+        assert_eq!(round.get("live_before").unwrap().as_f64(), Some(1000.0));
+        assert_eq!(round.get("survivors").unwrap().as_f64(), Some(353.0));
+        let keep = round.get("keep_observed").unwrap().as_f64().unwrap();
+        assert!((keep - 0.353).abs() < 1e-12);
+        assert_eq!(round.get("keep_theory_c8").unwrap().as_f64(), Some(KEEP_THEORY_C8));
+        assert_eq!(parsed[1].get("event").unwrap().as_str(), Some("wal_flush"));
+        assert_eq!(parsed[1].get("wal_seq").unwrap().as_f64(), Some(7.0));
+        assert!(parsed[1].get("_c").is_none(), "unused slots are elided");
+    }
+
+    #[test]
+    fn chrome_trace_shape_is_perfetto_loadable() {
+        let t = sample_tracer();
+        let other = Tracer::disabled();
+        other.enable("stream-0", 4);
+        other.record_now(EventKind::Quarantine, 0, 0, 0, 0);
+        let doc = to_chrome_trace(&[&t, &other]);
+        // round-trips through the writer/parser
+        let parsed = json::parse(&doc.to_string()).unwrap();
+        let evs = parsed.get("traceEvents").unwrap().as_arr().unwrap();
+        // 2 metadata events + 2 spans + 1 marker
+        assert_eq!(evs.len(), 5);
+        let meta = &evs[0];
+        assert_eq!(meta.get("ph").unwrap().as_str(), Some("M"));
+        assert_eq!(meta.get("args").unwrap().get("name").unwrap().as_str(), Some("svc"));
+        let span = &evs[1];
+        assert_eq!(span.get("ph").unwrap().as_str(), Some("X"));
+        assert_eq!(span.get("name").unwrap().as_str(), Some("ss_round"));
+        assert_eq!(span.get("tid").unwrap().as_f64(), Some(0.0));
+        assert!(span.get("dur").unwrap().as_f64().unwrap() >= 0.0);
+        assert_eq!(span.get("args").unwrap().get("probes").unwrap().as_f64(), Some(88.0));
+        // second tracer lands on its own track
+        let q = &evs[4];
+        assert_eq!(q.get("name").unwrap().as_str(), Some("quarantine"));
+        assert_eq!(q.get("tid").unwrap().as_f64(), Some(1.0));
+    }
+
+    #[test]
+    fn flight_dump_carries_ring_accounting_and_events() {
+        let t = sample_tracer();
+        let d = flight_dump(&t);
+        assert_eq!(d.get("scope").unwrap().as_str(), Some("svc"));
+        assert_eq!(d.get("capacity").unwrap().as_f64(), Some(16.0));
+        assert_eq!(d.get("dropped").unwrap().as_f64(), Some(0.0));
+        assert_eq!(d.get("recording").unwrap().as_bool(), Some(true));
+        let evs = d.get("events").unwrap().as_arr().unwrap();
+        assert_eq!(evs.len(), 2);
+        assert_eq!(evs[0].get("event").unwrap().as_str(), Some("ss_round"));
+        // round-trips through the writer/parser
+        json::parse(&d.to_string()).expect("dump document parses");
+    }
+
+    #[test]
+    fn every_kind_has_a_name_and_schema() {
+        for kind in [
+            EventKind::Job,
+            EventKind::SsRound,
+            EventKind::Cohort,
+            EventKind::KernelDispatch,
+            EventKind::WalFlush,
+            EventKind::Checkpoint,
+            EventKind::Window,
+            EventKind::Quarantine,
+        ] {
+            assert!(!kind_name(kind).is_empty());
+            assert_eq!(field_names(kind).len(), 4);
+        }
+    }
+}

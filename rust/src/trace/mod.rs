@@ -1,0 +1,403 @@
+//! Structured tracing: a bounded, pre-allocated ring-buffer span collector
+//! threaded through the whole stack, plus exporters ([`export`]) and the
+//! per-stream quarantine flight recorder the service builds on it.
+//!
+//! # Design constraints (in priority order)
+//!
+//! 1. **Provably inert.** Instrumentation only *reads* algorithm state —
+//!    it never feeds a value back into any computation — so traced and
+//!    untraced runs are bit-identical (kept sets, committed solutions,
+//!    f64 value bits). The SS round loop goes further: it is
+//!    monomorphized over a `const TRACED: bool`
+//!    ([`sparsify_candidates`](crate::algorithms::sparsify_candidates)
+//!    vs [`sparsify_candidates_traced`](crate::algorithms::sparsify_candidates_traced)),
+//!    so the untraced production path compiles the tracing calls out
+//!    entirely. `benches/perf_trace.rs` gates both properties.
+//! 2. **Zero heap allocations per event in steady state.** The ring is
+//!    reserved once at [`Tracer::enable`]; recording an event is a
+//!    monotonic-clock read, a short mutex hold and a slot write. Once
+//!    the ring is full, new events overwrite the oldest (`dropped`
+//!    counts the overwritten ones) — the flight-recorder semantics: the
+//!    *most recent* window of activity is always retained.
+//! 3. **Compile-out-cheap when disabled.** A disabled tracer costs one
+//!    relaxed atomic load per potential event and never touches the
+//!    clock or the ring mutex; [`Tracer::start`] returns a dummy
+//!    timestamp without reading the clock at all.
+//!
+//! # Event model
+//!
+//! Events are fixed-size PODs ([`TraceEvent`]): a sequence number, start
+//! timestamp + duration in nanoseconds against the tracer's own epoch, an
+//! [`EventKind`], and four `u64` payload slots whose meaning is per-kind
+//! (see [`EventKind`] — e.g. an SS round span carries live-before,
+//! survivors, divergence-eval delta and probe count, from which the
+//! exporters derive the observed shrink rate against the theoretical
+//! `1/√c` = √2/4 ≈ 0.3536 at the paper's c = 8). There is no string
+//! payload and no per-event scope tag: **the scope is the tracer** — each
+//! [`Metrics`](crate::coordinator::Metrics) scope (service-wide,
+//! per-stream) owns one tracer, whose label names every event in it.
+//!
+//! # Span hierarchy
+//!
+//! ```text
+//! Job (service summarize request)
+//! └── SsRound (one prune round of the SS pass)
+//!     └── KernelDispatch (one sharded divergence/gain batch)
+//! └── Cohort (one batched-gain dispatch of the maximizer engine)
+//! Window (stream re-sparsification)   WalFlush / Checkpoint (durable I/O)
+//! Quarantine (instantaneous marker — the flight recorder's tombstone)
+//! ```
+//!
+//! Parentage is temporal, not pointer-based: a child span's
+//! `[t_ns, t_ns + dur_ns]` interval nests inside its parent's, which is
+//! exactly what the Chrome trace-event exporter
+//! ([`export::to_chrome_trace`]) renders as stacked slices in Perfetto.
+//!
+//! # The flight recorder
+//!
+//! Every stream session's scoped `Metrics` owns an *enabled* tracer; the
+//! service additionally holds the same `Arc<Tracer>` outside the session
+//! lock, so when a session quarantines (poisoned lock, failed durable
+//! store) the ring of its final moments is still reachable — the
+//! `FlightDump` service job reads it without ever taking the session
+//! lock. The ring mutex itself is poison-tolerant (`into_inner`), so a
+//! panic mid-record cannot brick the dump.
+
+pub mod export;
+
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::{Mutex, OnceLock};
+use std::time::Instant;
+
+/// What a [`TraceEvent`] describes. The payload slots `a..d` are per-kind:
+///
+/// | kind | a | b | c | d |
+/// |------|---|---|---|---|
+/// | `Job` | items in (n) | reduced (\|V′\|) | budget k | SS rounds |
+/// | `SsRound` | live before | survivors after | divergence-eval delta | probes drawn |
+/// | `Cohort` | cohort size | gain-eval delta | dispatch count delta | 0 |
+/// | `KernelDispatch` | probes | items | pairwise evals | 0 |
+/// | `WalFlush` | rows logged | WAL seq | 0 | 0 |
+/// | `Checkpoint` | covered WAL seq | live elements | blob bytes | 0 |
+/// | `Window` | live before | retained after | evicted | SS rounds |
+/// | `Quarantine` | 0 | 0 | 0 | 0 (instantaneous marker) |
+///
+/// `SsRound.b / SsRound.a` is the observed per-round keep fraction; the
+/// theory value is `1/√c` (√2/4 ≈ 0.35355 at the default c = 8) — the
+/// JSON-lines exporter emits both so trajectory claims are checkable
+/// per round without post-processing.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+#[repr(u8)]
+pub enum EventKind {
+    Job = 0,
+    SsRound = 1,
+    Cohort = 2,
+    KernelDispatch = 3,
+    WalFlush = 4,
+    Checkpoint = 5,
+    Window = 6,
+    Quarantine = 7,
+}
+
+/// One recorded span: fixed-size POD, no heap references — what makes a
+/// ring slot write allocation-free and the whole ring pre-reservable.
+#[derive(Clone, Copy, Debug)]
+pub struct TraceEvent {
+    /// Monotone per-tracer sequence number (survives ring wrap — the
+    /// exporters use it to order and to report drops).
+    pub seq: u64,
+    /// Span start, nanoseconds since the tracer's epoch.
+    pub t_ns: u64,
+    /// Span duration in nanoseconds (0 for instantaneous markers).
+    pub dur_ns: u64,
+    pub kind: EventKind,
+    pub a: u64,
+    pub b: u64,
+    pub c: u64,
+    pub d: u64,
+}
+
+/// The ring storage behind one mutex hold: pre-allocated slot buffer,
+/// the next sequence number, and the scope label.
+struct Ring {
+    /// Pre-allocated at `enable`; pushed until `len == capacity`, then
+    /// overwritten at `seq % capacity` (oldest-first eviction).
+    buf: Vec<TraceEvent>,
+    cap: usize,
+    next_seq: u64,
+    label: String,
+}
+
+impl Ring {
+    fn record(&mut self, mut ev: TraceEvent) {
+        if self.cap == 0 {
+            return;
+        }
+        ev.seq = self.next_seq;
+        self.next_seq += 1;
+        if self.buf.len() < self.cap {
+            // capacity was reserved up front, so this push cannot allocate
+            self.buf.push(ev);
+        } else {
+            let i = (ev.seq % self.cap as u64) as usize;
+            self.buf[i] = ev;
+        }
+    }
+
+    /// Events oldest-first (ring order restored across wraps).
+    fn events(&self) -> Vec<TraceEvent> {
+        let len = self.buf.len() as u64;
+        let first = self.next_seq - len;
+        (first..self.next_seq)
+            .map(|s| self.buf[(s % self.cap.max(1) as u64) as usize])
+            .collect()
+    }
+}
+
+/// A bounded, pre-allocated span collector — one per [`Metrics`] scope.
+///
+/// All methods take `&self`; recording is safe from any thread (one short
+/// mutex hold per event). See the module docs for the cost model; the
+/// summary: disabled ⇒ one relaxed load, enabled ⇒ clock read + lock +
+/// slot write, never an allocation after [`enable`](Self::enable).
+///
+/// [`Metrics`]: crate::coordinator::Metrics
+pub struct Tracer {
+    enabled: AtomicBool,
+    /// Per-tracer time origin — event timestamps are offsets from it, so
+    /// they fit u64 nanoseconds and need no wall-clock at record time.
+    epoch: Instant,
+    ring: Mutex<Ring>,
+}
+
+impl Tracer {
+    /// A disabled tracer with an empty (capacity-0) ring — the default a
+    /// [`Metrics`](crate::coordinator::Metrics) scope starts with.
+    pub fn disabled() -> Self {
+        Self {
+            enabled: AtomicBool::new(false),
+            epoch: Instant::now(),
+            ring: Mutex::new(Ring {
+                buf: Vec::new(),
+                cap: 0,
+                next_seq: 0,
+                label: String::new(),
+            }),
+        }
+    }
+
+    /// The shared always-disabled tracer — for call sites that need *a*
+    /// tracer reference but have none threaded in (e.g. a bare
+    /// [`MaximizerEngine`](crate::algorithms::MaximizerEngine)).
+    pub fn noop() -> &'static Tracer {
+        static NOOP: OnceLock<Tracer> = OnceLock::new();
+        NOOP.get_or_init(Tracer::disabled)
+    }
+
+    /// Turn recording on with a freshly reserved ring of `capacity`
+    /// events under `label` (the scope name the exporters attach).
+    /// Discards anything previously recorded. This is the *only* method
+    /// that allocates.
+    pub fn enable(&self, label: &str, capacity: usize) {
+        let mut ring = self.lock();
+        ring.buf = Vec::with_capacity(capacity);
+        ring.cap = capacity;
+        ring.next_seq = 0;
+        ring.label = label.to_string();
+        drop(ring);
+        self.enabled.store(true, Ordering::Release);
+    }
+
+    /// Stop recording; the ring's contents stay readable (dumpable).
+    pub fn disable(&self) {
+        self.enabled.store(false, Ordering::Release);
+    }
+
+    pub fn is_enabled(&self) -> bool {
+        self.enabled.load(Ordering::Relaxed)
+    }
+
+    /// Span-start timestamp for a later
+    /// [`record_since`](Self::record_since). Disabled ⇒ returns 0 without
+    /// reading the clock (the matching `record_since` will discard it).
+    #[inline]
+    pub fn start(&self) -> u64 {
+        if !self.is_enabled() {
+            return 0;
+        }
+        self.now_ns()
+    }
+
+    /// Record a span that started at `start_ns` (from [`start`](Self::start))
+    /// and ends now. No-op when disabled.
+    #[inline]
+    pub fn record_since(&self, kind: EventKind, start_ns: u64, a: u64, b: u64, c: u64, d: u64) {
+        if !self.is_enabled() {
+            return;
+        }
+        let end = self.now_ns();
+        self.push(TraceEvent {
+            seq: 0,
+            t_ns: start_ns,
+            dur_ns: end.saturating_sub(start_ns),
+            kind,
+            a,
+            b,
+            c,
+            d,
+        });
+    }
+
+    /// Record an instantaneous marker (e.g. [`EventKind::Quarantine`]).
+    /// No-op when disabled.
+    #[inline]
+    pub fn record_now(&self, kind: EventKind, a: u64, b: u64, c: u64, d: u64) {
+        if !self.is_enabled() {
+            return;
+        }
+        let t = self.now_ns();
+        self.push(TraceEvent { seq: 0, t_ns: t, dur_ns: 0, kind, a, b, c, d });
+    }
+
+    /// Events currently held, oldest-first. Allocates the return vector
+    /// (export path, not the hot path).
+    pub fn events(&self) -> Vec<TraceEvent> {
+        self.lock().events()
+    }
+
+    /// Events currently held in the ring.
+    pub fn len(&self) -> usize {
+        self.lock().buf.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Ring capacity (0 until [`enable`](Self::enable)).
+    pub fn capacity(&self) -> usize {
+        self.lock().cap
+    }
+
+    /// Events overwritten after the ring filled (flight-recorder drops).
+    pub fn dropped(&self) -> u64 {
+        let ring = self.lock();
+        ring.next_seq - ring.buf.len() as u64
+    }
+
+    /// The scope label [`enable`](Self::enable) was called with.
+    pub fn label(&self) -> String {
+        self.lock().label.clone()
+    }
+
+    /// Discard recorded events, keeping the reserved ring and label.
+    pub fn clear(&self) {
+        let mut ring = self.lock();
+        ring.buf.clear();
+        ring.next_seq = 0;
+    }
+
+    #[inline]
+    fn now_ns(&self) -> u64 {
+        self.epoch.elapsed().as_nanos() as u64
+    }
+
+    fn push(&self, ev: TraceEvent) {
+        self.lock().record(ev);
+    }
+
+    /// Poison-tolerant lock: a recorder that panicked mid-hold left at
+    /// worst one half-written POD slot — the flight recorder must stay
+    /// dumpable after exactly such a panic, so recover the guard.
+    fn lock(&self) -> std::sync::MutexGuard<'_, Ring> {
+        self.ring.lock().unwrap_or_else(|e| e.into_inner())
+    }
+}
+
+impl Default for Tracer {
+    fn default() -> Self {
+        Self::disabled()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn disabled_tracer_records_nothing_and_skips_the_clock() {
+        let t = Tracer::disabled();
+        assert!(!t.is_enabled());
+        assert_eq!(t.start(), 0, "disabled start must not read the clock");
+        t.record_since(EventKind::SsRound, 0, 1, 2, 3, 4);
+        t.record_now(EventKind::Quarantine, 0, 0, 0, 0);
+        assert_eq!(t.len(), 0);
+        assert_eq!(t.capacity(), 0);
+        assert!(Tracer::noop().events().is_empty());
+    }
+
+    #[test]
+    fn enable_record_export_roundtrip() {
+        let t = Tracer::disabled();
+        t.enable("svc", 8);
+        assert!(t.is_enabled());
+        assert_eq!(t.capacity(), 8);
+        assert_eq!(t.label(), "svc");
+        let s = t.start();
+        t.record_since(EventKind::SsRound, s, 100, 35, 6500, 10);
+        t.record_now(EventKind::Quarantine, 0, 0, 0, 0);
+        let evs = t.events();
+        assert_eq!(evs.len(), 2);
+        assert_eq!(evs[0].kind, EventKind::SsRound);
+        assert_eq!(evs[0].seq, 0);
+        assert_eq!((evs[0].a, evs[0].b), (100, 35));
+        assert_eq!(evs[1].kind, EventKind::Quarantine);
+        assert_eq!(evs[1].dur_ns, 0);
+        assert!(evs[1].t_ns >= evs[0].t_ns, "events carry monotone timestamps");
+        assert_eq!(t.dropped(), 0);
+    }
+
+    #[test]
+    fn ring_overwrites_oldest_and_counts_drops() {
+        let t = Tracer::disabled();
+        t.enable("ring", 4);
+        for i in 0..10u64 {
+            t.record_now(EventKind::Cohort, i, 0, 0, 0);
+        }
+        assert_eq!(t.len(), 4);
+        assert_eq!(t.dropped(), 6);
+        let evs = t.events();
+        // oldest-first, the final window of activity: payloads 6..=9
+        let got: Vec<u64> = evs.iter().map(|e| e.a).collect();
+        assert_eq!(got, vec![6, 7, 8, 9]);
+        let seqs: Vec<u64> = evs.iter().map(|e| e.seq).collect();
+        assert_eq!(seqs, vec![6, 7, 8, 9], "seq numbers survive the wrap");
+    }
+
+    #[test]
+    fn disable_retains_ring_and_clear_resets_it() {
+        let t = Tracer::disabled();
+        t.enable("fr", 4);
+        t.record_now(EventKind::WalFlush, 64, 3, 0, 0);
+        t.disable();
+        assert!(!t.is_enabled());
+        t.record_now(EventKind::WalFlush, 1, 4, 0, 0);
+        assert_eq!(t.len(), 1, "disabled tracer must stop recording but keep the ring");
+        assert_eq!(t.events()[0].a, 64);
+        t.clear();
+        assert_eq!(t.len(), 0);
+        assert_eq!(t.capacity(), 4, "clear keeps the reservation");
+    }
+
+    #[test]
+    fn re_enable_resets_sequence_and_label() {
+        let t = Tracer::disabled();
+        t.enable("first", 2);
+        t.record_now(EventKind::Job, 1, 0, 0, 0);
+        t.enable("second", 3);
+        assert_eq!(t.label(), "second");
+        assert_eq!(t.len(), 0);
+        t.record_now(EventKind::Job, 2, 0, 0, 0);
+        assert_eq!(t.events()[0].seq, 0, "enable restarts the sequence");
+    }
+}

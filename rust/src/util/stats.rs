@@ -210,6 +210,20 @@ impl LatencyHistogram {
         }
     }
 
+    /// JSON summary — count plus p50/p95/p99 in seconds — so service
+    /// metrics are readable without post-processing raw bucket arrays.
+    /// The one shape every [`Metrics`](crate::coordinator::Metrics)
+    /// snapshot embeds per histogram.
+    pub fn snapshot_json(&self) -> crate::util::json::Json {
+        use crate::util::json::Json;
+        Json::obj(vec![
+            ("count", Json::Num(self.count() as f64)),
+            ("p50_s", Json::Num(self.percentile_secs(50.0))),
+            ("p95_s", Json::Num(self.percentile_secs(95.0))),
+            ("p99_s", Json::Num(self.percentile_secs(99.0))),
+        ])
+    }
+
     /// Approximate percentile in seconds.
     pub fn percentile_secs(&self, p: f64) -> f64 {
         let total = self.count();
@@ -297,6 +311,20 @@ mod tests {
         // ~5% bucket resolution around the true values
         assert!((p50 / 5e-3 - 1.0).abs() < 0.15, "p50={p50}");
         assert!((p99 / 9.9e-3 - 1.0).abs() < 0.15, "p99={p99}");
+    }
+
+    #[test]
+    fn histogram_json_snapshot_names_percentiles() {
+        let h = LatencyHistogram::new();
+        for i in 1..=100 {
+            h.record_secs(i as f64 * 1e-4);
+        }
+        let s = h.snapshot_json();
+        assert_eq!(s.get("count").unwrap().as_f64(), Some(100.0));
+        let p50 = s.get("p50_s").unwrap().as_f64().unwrap();
+        let p95 = s.get("p95_s").unwrap().as_f64().unwrap();
+        let p99 = s.get("p99_s").unwrap().as_f64().unwrap();
+        assert!(p50 > 0.0 && p50 <= p95 && p95 <= p99);
     }
 
     #[test]

@@ -20,9 +20,10 @@ use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::{Arc, Mutex};
 
 use submodular_ss::algorithms::{
-    sparsify, sparsify_candidates_reference, CpuBackend, DivergenceBackend, GainRoute,
-    MaximizerEngine, SsParams,
+    sparsify, sparsify_candidates, sparsify_candidates_reference, sparsify_candidates_traced,
+    CpuBackend, DivergenceBackend, GainRoute, MaximizerEngine, SsParams,
 };
+use submodular_ss::trace::Tracer;
 use submodular_ss::coordinator::{Compute, Metrics, ShardedBackend};
 use submodular_ss::stream::{ObjectiveSpec, StreamConfig, StreamSession};
 use submodular_ss::submodular::{Concave, FeatureBased, SolState, SubmodularFn};
@@ -193,6 +194,54 @@ fn steady_state_rounds_allocate_zero_on_cpu_and_o_shards_on_pool() {
     // sanity: the probed run is still the canonical result
     let want = sparsify_candidates_reference(&cpu, &(0..4000).collect::<Vec<_>>(), &params);
     assert_eq!(res.kept, want.kept);
+
+    // --- traced SS rounds: recording is zero-alloc once the ring exists ---
+    // The tracer pre-reserves its ring at enable(); after that, every
+    // record_since is a mutex lock + slot overwrite. The traced run must
+    // stay on the zero-alloc budget AND reproduce the untraced kept set
+    // bit-for-bit (instrumentation is provably inert).
+    let tracer = Tracer::disabled();
+    tracer.enable("alloc-test", 4096);
+    let all: Vec<usize> = (0..4000).collect();
+    let probe = RoundProbe::new(&cpu);
+    let traced =
+        sparsify_candidates_traced(&probe, &all, &params, &mut || None, &tracer).unwrap();
+    assert_eq!(traced.kept, res.kept, "tracing must not perturb the kept set");
+    let marks = probe.marks();
+    assert!(marks.len() >= 4, "need ≥4 traced rounds, got {}", marks.len());
+    let steady = marks[marks.len() - 1] - marks[2];
+    assert_eq!(
+        steady, 0,
+        "steady-state traced rounds allocated {steady} times (marks: {marks:?})"
+    );
+    assert!(!tracer.is_empty(), "the enabled tracer must have recorded round spans");
+    assert_eq!(tracer.dropped(), 0, "4096 slots must hold every span of this run");
+
+    // --- disabled tracer: the traced entry point adds zero allocations ---
+    // Measured two ways: the steady-state window is zero, and the *whole*
+    // disabled traced run costs exactly as many allocations as the plain
+    // untraced run over the same inputs — no drift anywhere, not even in
+    // setup, because a disabled tracer never builds its ring.
+    let off = Tracer::disabled();
+    let probe = RoundProbe::new(&cpu);
+    let before = ALLOCS.load(Ordering::Relaxed);
+    let quiet =
+        sparsify_candidates_traced(&probe, &all, &params, &mut || None, &off).unwrap();
+    let spent_off = ALLOCS.load(Ordering::Relaxed) - before;
+    let marks = probe.marks();
+    let steady = marks[marks.len() - 1] - marks[2];
+    assert_eq!(steady, 0, "disabled tracing must stay zero-alloc (marks: {marks:?})");
+    assert_eq!(quiet.kept, res.kept);
+    assert!(off.is_empty(), "a disabled tracer must record nothing");
+    let probe = RoundProbe::new(&cpu);
+    let before = ALLOCS.load(Ordering::Relaxed);
+    let plain = sparsify_candidates(&probe, &all, &params);
+    let spent_plain = ALLOCS.load(Ordering::Relaxed) - before;
+    assert_eq!(plain.kept, res.kept);
+    assert_eq!(
+        spent_off, spent_plain,
+        "disabled tracing drifted: {spent_off} allocs traced-off vs {spent_plain} plain"
+    );
 
     // --- sharded pool backend: bounded by job dispatch, independent of n ---
     let f2 = Arc::new(feature_instance(6000, 12, 4));
