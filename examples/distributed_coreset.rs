@@ -1,17 +1,26 @@
 //! Distributed composable-coreset flavor (paper §1.2, Mirrokni &
 //! Zadimoghaddam [21]): partition the ground set across m "machines", run
-//! SS per partition (in parallel on the worker pool), union the reduced
-//! sets, and run lazy greedy on the union. The paper notes SS composes with
-//! distributed greedy by replacing the per-machine greedy with SS — this
-//! example demonstrates exactly that composition.
+//! SS per partition, union the reduced sets, and finish centrally.
+//!
+//! Two renditions of the same composition, printed side by side:
+//!
+//! 1. **in-process** (the original demo, kept as the quality reference):
+//!    partitions pruned on a thread pool, union + lazy greedy inline;
+//! 2. **cluster**: the same ground set driven through the real
+//!    [`ClusterCoordinator`] / [`WorkerRuntime`] pair over the loopback
+//!    transport — framed wire protocol, worker-embedded services,
+//!    fan-out, survivor-core merge — i.e. what a multi-process
+//!    deployment runs, minus the sockets.
 //!
 //! Run: `cargo run --release --example distributed_coreset`
 
 use std::sync::Arc;
 
 use submodular_ss::algorithms::{lazy_greedy, sparsify_candidates, CpuBackend, SsParams};
+use submodular_ss::cluster::{ClusterConfig, ClusterCoordinator, WorkerConfig, WorkerRuntime};
 use submodular_ss::data::{CorpusParams, NewsGenerator};
-use submodular_ss::submodular::FeatureBased;
+use submodular_ss::net::{loopback_pair, Transport};
+use submodular_ss::submodular::{Concave, FeatureBased, ObjectiveSpec};
 use submodular_ss::util::pool::ThreadPool;
 use submodular_ss::util::rng::Rng;
 use submodular_ss::util::stats::Timer;
@@ -30,7 +39,7 @@ fn main() {
     let central_s = t.elapsed_s();
     println!("central lazy greedy:  f = {:.3}  ({central_s:.3}s)", central.value);
 
-    // random partition across machines
+    // ---- rendition 1: in-process composition (the quality reference) ----
     let mut rng = Rng::new(seed);
     let mut perm: Vec<usize> = (0..n).collect();
     rng.shuffle(&mut perm);
@@ -61,12 +70,54 @@ fn main() {
     let dist_s = t.elapsed_s();
 
     println!(
-        "distributed SS ({machines} machines): coreset {} -> union {} -> f = {:.3}  ({dist_s:.3}s)",
+        "in-process SS ({machines} machines): coreset {} -> union {} -> f = {:.3}  ({dist_s:.3}s)",
         reduced.iter().map(|r| r.len()).sum::<usize>(),
         union.len(),
         combine.value
     );
     println!("relative utility vs central: {:.4}", combine.value / central.value);
     assert!(combine.value / central.value > 0.9, "composable-coreset quality floor");
+
+    // ---- rendition 2: the real coordinator/worker pair over loopback ----
+    // each "machine" is a WorkerRuntime serving its embedded service on
+    // one end of an in-memory duplex pipe; the coordinator fans logical
+    // shards out over the framed wire protocol and merges the cores
+    let mut transports: Vec<Box<dyn Transport>> = Vec::new();
+    let mut worker_threads = Vec::new();
+    for w in 0..machines {
+        let (coord_end, worker_end, _kill) = loopback_pair();
+        transports.push(Box::new(coord_end));
+        worker_threads.push(std::thread::spawn(move || {
+            WorkerRuntime::new(WorkerConfig {
+                worker_id: w as u64,
+                ..WorkerConfig::default()
+            })
+            .serve(Box::new(worker_end))
+        }));
+    }
+    let cfg = ClusterConfig { shards: machines as u32, seed, ..ClusterConfig::default() };
+    let coordinator = ClusterCoordinator::connect(transports, cfg).expect("handshake");
+    let t = Timer::new();
+    let resp = coordinator
+        .summarize(
+            ObjectiveSpec::Features(Concave::Sqrt),
+            &day.feats,
+            k,
+            &SsParams::default().with_seed(99),
+        )
+        .expect("cluster summarize");
+    let cluster_s = t.elapsed_s();
+    println!(
+        "cluster SS ({machines} workers): union {} -> final {} -> f = {:.3}  ({cluster_s:.3}s, {} shard rounds)",
+        resp.union, resp.final_reduced, resp.value, resp.shard_rounds
+    );
+    println!("relative utility vs central: {:.4}", resp.value / central.value);
+    assert!(resp.value / central.value > 0.9, "cluster composition quality floor");
+
+    drop(coordinator); // sends Shutdown, closes connections
+    for h in worker_threads {
+        let report = h.join().expect("worker thread").expect("worker serve");
+        assert!(report.saw_shutdown, "workers end via explicit shutdown");
+    }
     println!("distributed_coreset OK");
 }

@@ -1,0 +1,184 @@
+//! Perf: distributed fan-out — the coordinator/worker cluster vs a
+//! single-process run of the same two-round pipeline.
+//!
+//! For each ground-set size the bench runs (a) a single-process
+//! baseline — SS over the full set, then lazy greedy — and (b) the
+//! cluster at 1, 2 and 4 loopback workers (full wire protocol, real
+//! worker runtimes, one thread each). Two gates:
+//!
+//! * **relative utility ≥ 0.95, always on** — shard-pruned-then-merged
+//!   summaries must stay within 5% of the single-process objective
+//!   value at every worker count (the paper's two-round quality claim,
+//!   §1.2, measured at bench scale);
+//! * **≥ 2× wall-clock at 4 workers vs 1, `SS_STRICT=1` only** — the
+//!   scaling claim, opt-in because it depends on the host actually
+//!   having spare cores.
+//!
+//! Machine-readable `BENCH_cluster.json` lands at the repository root.
+//!
+//! Run: `cargo bench --bench perf_cluster` (SS_FULL=1 for paper scale,
+//! SS_SMOKE=1 for the CI smoke, SS_STRICT=1 to enforce the wall gate).
+
+use std::thread;
+
+use submodular_ss::algorithms::{lazy_greedy, sparsify, CpuBackend, SsParams};
+use submodular_ss::bench::Table;
+use submodular_ss::cluster::{
+    ClusterConfig, ClusterCoordinator, ClusterResponse, WorkerConfig, WorkerRuntime,
+};
+use submodular_ss::coordinator::ServiceConfig;
+use submodular_ss::net::{loopback_pair, Transport};
+use submodular_ss::submodular::{Concave, FeatureBased, ObjectiveSpec};
+use submodular_ss::util::json::Json;
+use submodular_ss::util::rng::Rng;
+use submodular_ss::util::stats::Timer;
+use submodular_ss::util::vecmath::FeatureMatrix;
+
+fn clustered_rows(n: usize, clusters: usize, d: usize, seed: u64) -> FeatureMatrix {
+    let mut rng = Rng::new(seed);
+    let centers: Vec<Vec<f32>> = (0..clusters)
+        .map(|_| (0..d).map(|_| if rng.bool(0.4) { rng.f32() * 3.0 } else { 0.0 }).collect())
+        .collect();
+    let mut m = FeatureMatrix::zeros(n, d);
+    for i in 0..n {
+        let c = &centers[rng.below(clusters)];
+        for j in 0..d {
+            m.row_mut(i)[j] = (c[j] + 0.05 * rng.f32()).max(0.0);
+        }
+    }
+    m
+}
+
+/// One cluster run: `workers` loopback worker runtimes, summarize once,
+/// clean shutdown. Returns the response (which carries its own wall).
+fn run_cluster(
+    workers: usize,
+    rows: &FeatureMatrix,
+    k: usize,
+    params: &SsParams,
+    seed: u64,
+) -> ClusterResponse {
+    let mut transports: Vec<Box<dyn Transport>> = Vec::with_capacity(workers);
+    let mut threads = Vec::with_capacity(workers);
+    for id in 0..workers {
+        let (coord_end, worker_end, _kill) = loopback_pair();
+        transports.push(Box::new(coord_end));
+        threads.push(thread::spawn(move || {
+            let config = WorkerConfig {
+                worker_id: id as u64,
+                service: ServiceConfig { workers: 2, compute_threads: 2, ..Default::default() },
+            };
+            WorkerRuntime::new(config).serve(Box::new(worker_end))
+        }));
+    }
+    let cfg = ClusterConfig { shards: 8, seed, ..Default::default() };
+    let coordinator = ClusterCoordinator::connect(transports, cfg).expect("cluster connect");
+    let resp = coordinator
+        .summarize(ObjectiveSpec::Features(Concave::Sqrt), rows, k, params)
+        .expect("cluster summarize");
+    drop(coordinator); // shutdown flows to every worker
+    for t in threads {
+        t.join().unwrap().expect("worker wire error");
+    }
+    resp
+}
+
+fn main() {
+    let smoke = std::env::var("SS_SMOKE").map(|v| v == "1").unwrap_or(false);
+    let strict = std::env::var("SS_STRICT").map(|v| v == "1").unwrap_or(false);
+    let sizes: Vec<usize> = if smoke { vec![1_500, 4_000] } else { vec![20_000, 80_000] };
+    let d = 16;
+    let k = 16;
+    let seed = 13u64;
+    let params = SsParams::default().with_seed(seed);
+    let worker_counts = [1usize, 2, 4];
+
+    let mut table = Table::new(
+        "Distributed SS: loopback cluster vs single process (Features/sqrt, shards=8)",
+        &["n", "topology", "wall_s", "speedup", "f(S)", "rel_utility", "|union|", "retries"],
+    );
+    let mut entries = Vec::new();
+
+    for &n in &sizes {
+        let rows = clustered_rows(n, 25, d, seed);
+
+        // single-process baseline: SS over the full ground set + greedy
+        let f = FeatureBased::new(rows.clone(), Concave::Sqrt);
+        let t = Timer::new();
+        let backend = CpuBackend::new(&f);
+        let ss = sparsify(&backend, &params);
+        let s = lazy_greedy(&f, &ss.kept, k);
+        let base_wall = t.elapsed_s();
+        table.row(vec![
+            n.to_string(),
+            "1 process".into(),
+            format!("{base_wall:.3}"),
+            "-".into(),
+            format!("{:.3}", s.value),
+            "1.000".into(),
+            ss.kept.len().to_string(),
+            "-".into(),
+        ]);
+
+        let mut wall_1w = 0.0f64;
+        for &w in &worker_counts {
+            let resp = run_cluster(w, &rows, k, &params, seed);
+            if w == 1 {
+                wall_1w = resp.wall_s;
+            }
+            let rel = resp.value / s.value;
+            let speedup = wall_1w / resp.wall_s;
+            table.row(vec![
+                n.to_string(),
+                format!("{w} worker{}", if w == 1 { "" } else { "s" }),
+                format!("{:.3}", resp.wall_s),
+                format!("{speedup:.2}x"),
+                format!("{:.3}", resp.value),
+                format!("{rel:.3}"),
+                resp.union.to_string(),
+                resp.retries.to_string(),
+            ]);
+
+            // quality gate is unconditional: the two-round merge must not
+            // cost more than 5% of the single-process objective value
+            assert!(
+                rel >= 0.95,
+                "n={n} workers={w}: relative utility {rel:.3} below the 0.95 gate"
+            );
+            if strict && w == 4 {
+                assert!(
+                    speedup >= 2.0,
+                    "n={n}: 4-worker speedup {speedup:.2}x below the strict 2x gate"
+                );
+            }
+
+            entries.push(Json::obj(vec![
+                ("n", Json::Num(n as f64)),
+                ("workers", Json::Num(w as f64)),
+                ("wall_s", Json::Num(resp.wall_s)),
+                ("speedup_vs_1_worker", Json::Num(speedup)),
+                ("value", Json::Num(resp.value)),
+                ("rel_utility", Json::Num(rel)),
+                ("union", Json::Num(resp.union as f64)),
+                ("final_reduced", Json::Num(resp.final_reduced as f64)),
+                ("shard_rounds", Json::Num(resp.shard_rounds as f64)),
+                ("retries", Json::Num(resp.retries as f64)),
+                ("baseline_wall_s", Json::Num(base_wall)),
+            ]));
+        }
+    }
+    table.print();
+
+    let report = Json::obj(vec![
+        ("bench", Json::Str("perf_cluster".to_string())),
+        ("smoke", Json::Num(if smoke { 1.0 } else { 0.0 })),
+        ("strict", Json::Num(if strict { 1.0 } else { 0.0 })),
+        ("shards", Json::Num(8.0)),
+        ("k", Json::Num(k as f64)),
+        ("d", Json::Num(d as f64)),
+        ("runs", Json::Arr(entries)),
+    ]);
+    let out = format!("{}/../BENCH_cluster.json", env!("CARGO_MANIFEST_DIR"));
+    std::fs::write(&out, report.pretty()).expect("write BENCH_cluster.json");
+    println!("(saved to {out})");
+}

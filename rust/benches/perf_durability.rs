@@ -26,7 +26,8 @@ use submodular_ss::algorithms::SsParams;
 use submodular_ss::bench::{full_scale, Table};
 use submodular_ss::coordinator::Metrics;
 use submodular_ss::stream::{
-    DurabilityConfig, FileStore, ObjectiveSpec, SnapshotMode, StreamConfig, StreamSession,
+    DurabilityConfig, FileStore, FlushPolicy, ObjectiveSpec, SnapshotMode, StreamConfig,
+    StreamSession,
 };
 use submodular_ss::submodular::Concave;
 use submodular_ss::util::json::Json;
@@ -91,15 +92,16 @@ fn main() {
 
     let dir = std::env::temp_dir().join(format!("ss_perf_durability_{}", std::process::id()));
     let mut table = Table::new(
-        "Durable streams: append tax (file WAL, fsync/record) and recovery vs checkpoint interval",
+        "Durable streams: append tax (file WAL) and recovery vs checkpoint interval / flush policy",
         &[
-            "leg", "ckpt_every", "append_s", "elems/s", "overhead", "recover_s", "replayed",
-            "ckpt_seq",
+            "leg", "ckpt_every", "flush", "append_s", "elems/s", "overhead", "recover_s",
+            "replayed", "ckpt_seq",
         ],
     );
     let plain_tput = n_total as f64 / plain_append_s;
     table.row(vec![
         "plain".into(),
+        "-".into(),
         "-".into(),
         format!("{plain_append_s:.3}"),
         format!("{plain_tput:.0}"),
@@ -109,12 +111,24 @@ fn main() {
         "-".into(),
     ]);
 
-    // --- durable legs: same feed, crash, recover ---
-    let intervals: &[u64] = &[0, 4, 16];
+    // --- durable legs: same feed, crash, recover. The first three vary
+    // the checkpoint interval at fsync-per-record; the last two hold the
+    // interval and relax the flush policy to group commit, pricing the
+    // fsync itself (drop-as-crash is a *process* crash, so the written-
+    // but-unflushed tail survives and bit-identity still must hold) ---
+    let leg_specs: &[(u64, FlushPolicy, &str)] = &[
+        (0, FlushPolicy::EveryRecord, "record"),
+        (4, FlushPolicy::EveryRecord, "record"),
+        (16, FlushPolicy::EveryRecord, "record"),
+        (16, FlushPolicy::EveryN(8), "every8"),
+        (16, FlushPolicy::EveryN(64), "every64"),
+    ];
     let mut legs = Vec::new();
-    for &interval in intervals {
-        let leg_dir = dir.join(format!("interval_{interval}"));
-        let dcfg = DurabilityConfig::default().with_checkpoint_interval(interval);
+    for &(interval, policy, flush_label) in leg_specs {
+        let leg_dir = dir.join(format!("interval_{interval}_{flush_label}"));
+        let dcfg = DurabilityConfig::default()
+            .with_checkpoint_interval(interval)
+            .with_flush_policy(policy);
         let mut sess = StreamSession::open_durable(
             kind,
             d,
@@ -157,6 +171,7 @@ fn main() {
         table.row(vec![
             "durable".into(),
             interval.to_string(),
+            flush_label.into(),
             format!("{append_s:.3}"),
             format!("{:.0}", n_total as f64 / append_s),
             format!("{overhead:.2}x"),
@@ -166,6 +181,7 @@ fn main() {
         ]);
         legs.push(Json::obj(vec![
             ("checkpoint_interval", Json::Num(interval as f64)),
+            ("flush_policy", Json::Str(flush_label.to_string())),
             ("append_s", Json::Num(append_s)),
             ("append_elems_per_s", Json::Num(n_total as f64 / append_s)),
             ("overhead_vs_plain", Json::Num(overhead)),

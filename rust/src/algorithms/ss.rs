@@ -53,7 +53,7 @@ pub enum Sampling {
     Importance,
 }
 
-#[derive(Clone, Debug)]
+#[derive(Clone, Debug, PartialEq)]
 pub struct SsParams {
     /// probe multiplier r (paper: r = O(cK); r = 8 empirically)
     pub r: usize,

@@ -1,0 +1,719 @@
+//! The fan-out coordinator: the paper's two-round distributed scheme
+//! (§1.2) over real connections.
+//!
+//! # Partition invariance
+//!
+//! The ground set is cut into `M` **logical shards** fixed by
+//! [`ClusterConfig::shards`] — *not* by the worker count. The partition
+//! permutation is drawn from [`ClusterConfig::seed`], each shard's SS
+//! pass runs under a seed derived from the request seed and the *shard
+//! index*, and the final merge depends only on the (sorted) union of
+//! shard survivors. Workers are merely where shards happen to execute:
+//! 1 worker or N workers, healthy run or mid-run death-and-reshard, the
+//! survivor union — and therefore the final summary — is **bit
+//! identical**. That is the invariant `tests/cluster_e2e.rs` pins.
+//!
+//! # Failure handling
+//!
+//! Every shard dispatch is a service [`Ticket`](crate::coordinator::Ticket)
+//! resolved by the connection's reader thread. A worker dying (transport
+//! error, EOF, corrupt stream) drops that connection's pending responders,
+//! so outstanding tickets resolve `ServiceDown` and their shards reshard
+//! onto surviving workers — bounded by [`ClusterConfig::max_retries`]
+//! attempts per shard. A straggler past
+//! [`ClusterConfig::shard_timeout`] is cancelled on its worker and
+//! resharded the same way. A blown request deadline cancels every
+//! in-flight shard and surfaces as the same typed
+//! [`ServiceError::DeadlineExceeded`] the local service returns.
+//!
+//! # Observability
+//!
+//! The coordinator owns a `"cluster"` scope (merge-pass compute, wire
+//! totals) plus one `"cluster-worker-{i}"` scope per connection
+//! (per-worker frames/bytes, `RpcSend`/`RpcRecv` spans, a `ShardPrune`
+//! span per shard completion as observed from the coordinator). The
+//! merge pass closes with an [`EventKind::Merge`] span, so one trace
+//! export shows the whole run: fan-out, per-shard prunes, merge.
+
+use std::collections::{HashMap, VecDeque};
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
+use std::thread::JoinHandle;
+use std::time::{Duration, Instant};
+
+use crate::algorithms::{
+    sparsify_candidates_traced, GainRoute, Interrupt, MaximizerEngine, SsParams,
+};
+use crate::coordinator::job::{job_channel, JobOptions, Responder};
+use crate::coordinator::{Compute, Metrics, ServiceError, ShardedBackend, Ticket};
+use crate::net::{FrameReader, FrameWriter, Message, Transport, WireError, PROTO_VERSION};
+use crate::submodular::ObjectiveSpec;
+use crate::trace::EventKind;
+use crate::util::pool::ThreadPool;
+use crate::util::rng::Rng;
+use crate::util::stats::Timer;
+use crate::util::vecmath::FeatureMatrix;
+
+/// How the coordinator partitions, retries and times out. `shards` is
+/// the *logical* partition arity — results are invariant to the worker
+/// count precisely because this number is configuration, not topology.
+#[derive(Clone, Debug)]
+pub struct ClusterConfig {
+    /// Logical shard count `M` (the unit of dispatch and retry).
+    pub shards: u32,
+    /// Seed for the partition permutation.
+    pub seed: u64,
+    /// Per-attempt straggler timeout; `None` waits indefinitely.
+    pub shard_timeout: Option<Duration>,
+    /// Re-dispatch attempts per shard after the first (death/straggle).
+    pub max_retries: u32,
+    /// Compute threads for the coordinator's own merge pass.
+    pub merge_threads: usize,
+}
+
+impl Default for ClusterConfig {
+    fn default() -> Self {
+        Self { shards: 8, seed: 0, shard_timeout: None, max_retries: 2, merge_threads: 2 }
+    }
+}
+
+/// What a cluster summarize run returns — the same summary the local
+/// single-process pipeline would produce, plus fan-out accounting.
+#[derive(Debug, Clone)]
+pub struct ClusterResponse {
+    /// Selected elements (global indices, selection order).
+    pub summary: Vec<usize>,
+    pub value: f64,
+    /// Ground-set size in.
+    pub n: usize,
+    /// Survivor-union size after the per-shard prunes.
+    pub union: usize,
+    /// Survivors of the coordinator's final SS pass over the union.
+    pub final_reduced: usize,
+    /// Total SS rounds across all shard prunes.
+    pub shard_rounds: u64,
+    /// SS rounds of the final merge pass.
+    pub merge_rounds: usize,
+    /// Shard attempts re-dispatched (death + straggler).
+    pub retries: u64,
+    pub wall_s: f64,
+}
+
+/// One worker's health snapshot, as reported over the wire.
+#[derive(Debug, Clone)]
+pub struct WorkerHealth {
+    pub worker: usize,
+    pub jobs_done: u64,
+    pub busy: u32,
+    pub metrics_json: String,
+}
+
+/// Coordinator-side state for one worker connection. The reader thread
+/// resolves `pending` responders; everything else only writes frames.
+struct WorkerHandle {
+    writer: Mutex<FrameWriter>,
+    pending: Arc<Mutex<HashMap<u64, Responder<Message>>>>,
+    alive: Arc<AtomicBool>,
+    scope: Arc<Metrics>,
+    reader: Option<JoinHandle<()>>,
+}
+
+pub struct ClusterCoordinator {
+    cfg: ClusterConfig,
+    workers: Vec<WorkerHandle>,
+    next_id: AtomicU64,
+    metrics: Arc<Metrics>,
+    pool: Arc<ThreadPool>,
+}
+
+/// Per-shard SS seed: mixes the request seed with the *logical* shard
+/// index (splitmix-style odd constant), so shard pruning is independent
+/// of which worker runs the shard — or how many workers exist.
+fn shard_seed(base: u64, shard: u32) -> u64 {
+    base ^ (shard as u64 + 1).wrapping_mul(0x9e37_79b9_7f4a_7c15)
+}
+
+impl From<WireError> for ServiceError {
+    fn from(e: WireError) -> Self {
+        ServiceError::Rejected { reason: format!("wire: {e}") }
+    }
+}
+
+impl ClusterCoordinator {
+    /// Handshake every transport (`Hello` → `HelloAck`) and spawn its
+    /// reader thread. Transport order defines worker indices.
+    pub fn connect(
+        transports: Vec<Box<dyn Transport>>,
+        cfg: ClusterConfig,
+    ) -> Result<Self, WireError> {
+        if transports.is_empty() {
+            return Err(WireError::Io("a cluster needs at least one worker".into()));
+        }
+        let metrics = Arc::new(Metrics::scoped("cluster"));
+        let pool = Arc::new(ThreadPool::new(cfg.merge_threads.max(1), 64));
+        let mut workers = Vec::with_capacity(transports.len());
+        for (i, t) in transports.into_iter().enumerate() {
+            workers.push(Self::handshake(i, t)?);
+        }
+        Ok(Self { cfg, workers, next_id: AtomicU64::new(1), metrics, pool })
+    }
+
+    fn handshake(index: usize, transport: Box<dyn Transport>) -> Result<WorkerHandle, WireError> {
+        let scope = Arc::new(Metrics::scoped(&format!("cluster-worker-{index}")));
+        let (r, w) = transport.split();
+        let mut writer = FrameWriter::new(w);
+        let mut reader = FrameReader::new(r);
+        let bytes =
+            writer.send(&Message::Hello { version: PROTO_VERSION, peer_id: index as u64 })?;
+        scope.add(&scope.counters.rpc_frames_sent, 1);
+        scope.add(&scope.counters.rpc_bytes_sent, bytes as u64);
+        match reader.recv()? {
+            Some((Message::HelloAck { version, .. }, bytes)) => {
+                scope.add(&scope.counters.rpc_frames_recv, 1);
+                scope.add(&scope.counters.rpc_bytes_recv, bytes as u64);
+                if version != PROTO_VERSION {
+                    return Err(WireError::Version { ours: PROTO_VERSION, theirs: version });
+                }
+            }
+            Some((Message::ErrorMsg { err, .. }, _)) => {
+                return Err(WireError::Io(format!("worker {index} refused handshake: {err}")))
+            }
+            Some((other, _)) => {
+                return Err(WireError::Corrupt(format!(
+                    "expected HelloAck, got tag {}",
+                    other.tag()
+                )))
+            }
+            None => return Err(WireError::Closed),
+        }
+
+        let pending: Arc<Mutex<HashMap<u64, Responder<Message>>>> =
+            Arc::new(Mutex::new(HashMap::new()));
+        let alive = Arc::new(AtomicBool::new(true));
+        let reader_handle = {
+            let pending = Arc::clone(&pending);
+            let alive = Arc::clone(&alive);
+            let scope = Arc::clone(&scope);
+            std::thread::Builder::new()
+                .name(format!("ss-cluster-rd-{index}"))
+                .spawn(move || reader_main(reader, &pending, &alive, &scope))
+                .expect("spawn cluster reader")
+        };
+        Ok(WorkerHandle {
+            writer: Mutex::new(writer),
+            pending,
+            alive,
+            scope,
+            reader: Some(reader_handle),
+        })
+    }
+
+    /// The `"cluster"` scope: merge-pass compute and request totals.
+    pub fn metrics(&self) -> &Arc<Metrics> {
+        &self.metrics
+    }
+
+    /// Per-connection scopes, indexed like the transports passed to
+    /// [`connect`](Self::connect).
+    pub fn worker_scopes(&self) -> Vec<Arc<Metrics>> {
+        self.workers.iter().map(|w| Arc::clone(&w.scope)).collect()
+    }
+
+    /// Workers still considered live.
+    pub fn live_workers(&self) -> usize {
+        self.workers.iter().filter(|w| w.alive.load(Ordering::SeqCst)).count()
+    }
+
+    /// Distributed summarize with default [`JobOptions`].
+    pub fn summarize(
+        &self,
+        spec: ObjectiveSpec,
+        rows: &FeatureMatrix,
+        k: usize,
+        params: &SsParams,
+    ) -> Result<ClusterResponse, ServiceError> {
+        self.summarize_with(spec, rows, k, params, JobOptions::default())
+    }
+
+    /// Distributed summarize: logical-shard fan-out, survivor union, one
+    /// final SS + maximizer pass. See the module docs for the
+    /// determinism and failure contracts.
+    pub fn summarize_with(
+        &self,
+        spec: ObjectiveSpec,
+        rows: &FeatureMatrix,
+        k: usize,
+        params: &SsParams,
+        opts: JobOptions,
+    ) -> Result<ClusterResponse, ServiceError> {
+        let timer = Timer::new();
+        let n = rows.n();
+        let m = self.cfg.shards.max(1) as usize;
+        self.metrics.add(&self.metrics.counters.requests, 1);
+        self.metrics.add(&self.metrics.counters.items_in, n as u64);
+
+        // seed-deterministic logical partition (matches the in-process
+        // reference in examples/distributed_coreset.rs): shuffle, stride,
+        // sort each shard ascending
+        let mut perm: Vec<usize> = (0..n).collect();
+        Rng::new(self.cfg.seed).shuffle(&mut perm);
+        let shards: Vec<Vec<usize>> = (0..m)
+            .map(|s| {
+                let mut part: Vec<usize> = perm.iter().copied().skip(s).step_by(m).collect();
+                part.sort_unstable();
+                part
+            })
+            .collect();
+
+        let survivors = self.fan_out(rows, &shards, spec, params, &opts)?;
+        let shard_rounds: u64 = survivors.iter().map(|s| s.rounds as u64).sum();
+        let retries = survivors.iter().map(|s| s.retries).sum();
+
+        // union of disjoint shard cores, ascending — independent of
+        // dispatch order, worker count, and retry history
+        let mut union: Vec<usize> =
+            survivors.iter().flat_map(|s| s.kept.iter().map(|&id| id as usize)).collect();
+        union.sort_unstable();
+
+        // final SS + maximizer over the union, under the request seed
+        let merge_span = self.metrics.tracer().start();
+        let f = spec.build(rows.clone());
+        let backend = ShardedBackend::new(
+            Arc::clone(&f),
+            Arc::clone(&self.pool),
+            Compute::Cpu,
+            Arc::clone(&self.metrics),
+        )
+        .map_err(|e| ServiceError::Rejected { reason: e.to_string() })?;
+        let deadline = opts.deadline;
+        let mut check = move || match deadline {
+            Some(d) if Instant::now() >= d => Some(Interrupt::DeadlineExceeded),
+            _ => None,
+        };
+        let ss = sparsify_candidates_traced(
+            &backend,
+            &union,
+            params,
+            &mut check,
+            self.metrics.tracer(),
+        )
+        .map_err(|e| self.fail(ServiceError::from(e)))?;
+        let sol = MaximizerEngine::new(f.as_submodular(), GainRoute::Backend(&backend))
+            .with_tracer(self.metrics.tracer())
+            .lazy_greedy_with(&ss.kept, k, &mut check)
+            .map_err(|e| self.fail(ServiceError::from(e)))?;
+        self.metrics.tracer().record_since(
+            EventKind::Merge,
+            merge_span,
+            union.len() as u64,
+            ss.kept.len() as u64,
+            k as u64,
+            ss.rounds as u64,
+        );
+        self.metrics
+            .add(&self.metrics.counters.items_pruned, (n - ss.kept.len()) as u64);
+        self.metrics.add(&self.metrics.counters.completed, 1);
+
+        Ok(ClusterResponse {
+            summary: sol.set,
+            value: sol.value,
+            n,
+            union: union.len(),
+            final_reduced: ss.kept.len(),
+            shard_rounds,
+            merge_rounds: ss.rounds,
+            retries,
+            wall_s: timer.elapsed_s(),
+        })
+    }
+
+    fn fail(&self, e: ServiceError) -> ServiceError {
+        match &e {
+            ServiceError::Cancelled => self.metrics.add(&self.metrics.counters.cancelled, 1),
+            ServiceError::DeadlineExceeded => {
+                self.metrics.add(&self.metrics.counters.deadline_exceeded, 1)
+            }
+            _ => self.metrics.add(&self.metrics.counters.failed, 1),
+        }
+        e
+    }
+
+    /// Dispatch every logical shard, resharding failures and stragglers
+    /// onto surviving workers, until all shard cores are in.
+    fn fan_out(
+        &self,
+        rows: &FeatureMatrix,
+        shards: &[Vec<usize>],
+        spec: ObjectiveSpec,
+        params: &SsParams,
+        opts: &JobOptions,
+    ) -> Result<Vec<ShardOutcome>, ServiceError> {
+        struct InFlight {
+            shard: usize,
+            worker: usize,
+            ticket: Ticket<Message>,
+            attempt: u32,
+            started: Instant,
+            job: u64,
+            dispatch_span: u64,
+        }
+
+        let m = shards.len();
+        let mut results: Vec<Option<ShardOutcome>> = (0..m).map(|_| None).collect();
+        let mut queue: VecDeque<(usize, u32)> = (0..m).map(|s| (s, 0)).collect();
+        let mut inflight: Vec<InFlight> = Vec::new();
+        let mut done = 0usize;
+        let mut rr = 0usize; // round-robin cursor over live workers
+
+        while done < m {
+            // check the request deadline before dispatching more work
+            if let Some(d) = opts.deadline {
+                if Instant::now() >= d {
+                    for fl in &inflight {
+                        self.send_best_effort(fl.worker, &Message::Cancel { job: fl.job });
+                    }
+                    return Err(self.fail(ServiceError::DeadlineExceeded));
+                }
+            }
+
+            // dispatch everything queued onto live workers, round-robin
+            while let Some((shard, attempt)) = queue.pop_front() {
+                let Some(worker) = self.next_live(&mut rr) else {
+                    queue.push_front((shard, attempt));
+                    return Err(self.fail(ServiceError::Rejected {
+                        reason: format!(
+                            "no live workers left ({} shards unfinished)",
+                            m - done
+                        ),
+                    }));
+                };
+                let job = self.next_id.fetch_add(1, Ordering::SeqCst);
+                let ids: Vec<u64> = shards[shard].iter().map(|&i| i as u64).collect();
+                let assign = Message::ShardAssign {
+                    job,
+                    shard: shard as u32,
+                    spec,
+                    params: SsParams {
+                        seed: shard_seed(params.seed, shard as u32),
+                        ..params.clone()
+                    },
+                    ids,
+                    rows: rows.gather(&shards[shard]),
+                };
+                let (ticket, responder) = job_channel(JobOptions::default());
+                self.workers[worker]
+                    .pending
+                    .lock()
+                    .unwrap_or_else(|p| p.into_inner())
+                    .insert(job, responder);
+                let dispatch_span = self.workers[worker].scope.tracer().start();
+                match self.send_frame(worker, &assign) {
+                    Ok(()) => {
+                        self.metrics.add(&self.metrics.counters.shards_dispatched, 1);
+                        inflight.push(InFlight {
+                            shard,
+                            worker,
+                            ticket,
+                            attempt,
+                            started: Instant::now(),
+                            job,
+                            dispatch_span,
+                        });
+                    }
+                    Err(_) => {
+                        // send failure = worker death; responder drop
+                        // resolves the ticket, we just requeue directly
+                        self.workers[worker]
+                            .pending
+                            .lock()
+                            .unwrap_or_else(|p| p.into_inner())
+                            .remove(&job);
+                        queue.push_front((shard, attempt));
+                    }
+                }
+            }
+
+            // poll in-flight shards without blocking the dispatch loop
+            let mut progressed = false;
+            let mut still: Vec<InFlight> = Vec::with_capacity(inflight.len());
+            for mut fl in inflight {
+                match fl.ticket.try_wait() {
+                    Some(Ok(Message::ShardCore { kept, rounds, .. })) => {
+                        progressed = true;
+                        done += 1;
+                        let scope = &self.workers[fl.worker].scope;
+                        scope.tracer().record_since(
+                            EventKind::ShardPrune,
+                            fl.dispatch_span,
+                            fl.shard as u64,
+                            shards[fl.shard].len() as u64,
+                            kept.len() as u64,
+                            rounds as u64,
+                        );
+                        results[fl.shard] = Some(ShardOutcome {
+                            kept,
+                            rounds,
+                            retries: fl.attempt as u64,
+                        });
+                    }
+                    Some(Ok(other)) => {
+                        // a worker answering a shard with anything else is
+                        // protocol corruption: drop it, reshard
+                        progressed = true;
+                        self.kill_worker(fl.worker, &format!(
+                            "unexpected reply tag {} for a shard",
+                            other.tag()
+                        ));
+                        self.requeue(&mut queue, fl.shard, fl.attempt)?;
+                    }
+                    Some(Err(e)) => {
+                        progressed = true;
+                        // worker death resolves ServiceDown (dropped
+                        // responder); worker-side typed errors arrive as
+                        // themselves. Non-retryable service answers
+                        // (Rejected) fail fast; transport-ish ones reshard.
+                        if matches!(e, ServiceError::Rejected { .. }) {
+                            return Err(self.fail(e));
+                        }
+                        self.requeue(&mut queue, fl.shard, fl.attempt)?;
+                    }
+                    None => {
+                        // straggler check
+                        if let Some(t) = self.cfg.shard_timeout {
+                            if fl.started.elapsed() > t {
+                                progressed = true;
+                                self.send_best_effort(fl.worker, &Message::Cancel { job: fl.job });
+                                self.workers[fl.worker]
+                                    .pending
+                                    .lock()
+                                    .unwrap_or_else(|p| p.into_inner())
+                                    .remove(&fl.job);
+                                self.requeue(&mut queue, fl.shard, fl.attempt)?;
+                                continue;
+                            }
+                        }
+                        still.push(fl);
+                    }
+                }
+            }
+            inflight = still;
+            if !progressed && queue.is_empty() && done < m {
+                std::thread::sleep(Duration::from_millis(2));
+            }
+        }
+        Ok(results.into_iter().map(|r| r.expect("all shards resolved")).collect())
+    }
+
+    /// Requeue a failed shard attempt, enforcing the retry bound.
+    fn requeue(
+        &self,
+        queue: &mut VecDeque<(usize, u32)>,
+        shard: usize,
+        attempt: u32,
+    ) -> Result<(), ServiceError> {
+        if attempt >= self.cfg.max_retries {
+            return Err(self.fail(ServiceError::Rejected {
+                reason: format!(
+                    "shard {shard} failed after {} attempts",
+                    attempt as u64 + 1
+                ),
+            }));
+        }
+        self.metrics.add(&self.metrics.counters.shard_retries, 1);
+        queue.push_back((shard, attempt + 1));
+        Ok(())
+    }
+
+    /// Next live worker after the round-robin cursor, if any.
+    fn next_live(&self, rr: &mut usize) -> Option<usize> {
+        for _ in 0..self.workers.len() {
+            let idx = *rr % self.workers.len();
+            *rr += 1;
+            if self.workers[idx].alive.load(Ordering::SeqCst) {
+                return Some(idx);
+            }
+        }
+        None
+    }
+
+    fn send_frame(&self, worker: usize, msg: &Message) -> Result<(), WireError> {
+        let w = &self.workers[worker];
+        let mut fw = w.writer.lock().unwrap_or_else(|p| p.into_inner());
+        match fw.send(msg) {
+            Ok(bytes) => {
+                w.scope.add(&w.scope.counters.rpc_frames_sent, 1);
+                w.scope.add(&w.scope.counters.rpc_bytes_sent, bytes as u64);
+                w.scope.tracer().record_now(
+                    EventKind::RpcSend,
+                    msg.tag() as u64,
+                    bytes as u64,
+                    0,
+                    0,
+                );
+                Ok(())
+            }
+            Err(e) => {
+                drop(fw);
+                self.kill_worker(worker, &e.to_string());
+                Err(e)
+            }
+        }
+    }
+
+    fn send_best_effort(&self, worker: usize, msg: &Message) {
+        let _ = self.send_frame(worker, msg);
+    }
+
+    /// Mark a worker dead and fail its pending jobs (dropping the
+    /// responders resolves their tickets `ServiceDown`).
+    fn kill_worker(&self, worker: usize, _why: &str) {
+        let w = &self.workers[worker];
+        if w.alive.swap(false, Ordering::SeqCst) {
+            self.metrics.add(&self.metrics.counters.worker_deaths, 1);
+        }
+        w.pending.lock().unwrap_or_else(|p| p.into_inner()).clear();
+    }
+
+    /// Probe every live worker; `None` for workers that are dead or
+    /// don't answer within `timeout`.
+    pub fn health(&self, timeout: Duration) -> Vec<Option<WorkerHealth>> {
+        let mut out = Vec::with_capacity(self.workers.len());
+        for i in 0..self.workers.len() {
+            if !self.workers[i].alive.load(Ordering::SeqCst) {
+                out.push(None);
+                continue;
+            }
+            let nonce = self.next_id.fetch_add(1, Ordering::SeqCst);
+            let (mut ticket, responder) = job_channel::<Message>(JobOptions::default());
+            self.workers[i]
+                .pending
+                .lock()
+                .unwrap_or_else(|p| p.into_inner())
+                .insert(nonce, responder);
+            if self.send_frame(i, &Message::HealthProbe { nonce }).is_err() {
+                out.push(None);
+                continue;
+            }
+            match ticket.wait_timeout(timeout) {
+                Some(Ok(Message::HealthSnap { jobs_done, busy, metrics_json, .. })) => {
+                    out.push(Some(WorkerHealth { worker: i, jobs_done, busy, metrics_json }));
+                }
+                _ => {
+                    self.workers[i]
+                        .pending
+                        .lock()
+                        .unwrap_or_else(|p| p.into_inner())
+                        .remove(&nonce);
+                    out.push(None);
+                }
+            }
+        }
+        out
+    }
+
+}
+
+/// What one logical shard contributed once its prune (finally) landed.
+struct ShardOutcome {
+    kept: Vec<u64>,
+    rounds: u32,
+    retries: u64,
+}
+
+impl Drop for ClusterCoordinator {
+    fn drop(&mut self) {
+        for i in 0..self.workers.len() {
+            if self.workers[i].alive.load(Ordering::SeqCst) {
+                self.send_best_effort(i, &Message::Shutdown);
+            }
+        }
+        // the worker answers Shutdown by closing its half of the
+        // connection, which ends each reader thread at EOF
+        for w in &mut self.workers {
+            if let Some(h) = w.reader.take() {
+                let _ = h.join();
+            }
+        }
+    }
+}
+
+/// Reader loop for one worker connection: resolve pending tickets, meter
+/// traffic, and on any stream failure mark the worker dead and fail its
+/// pending jobs (dropping responders → `ServiceDown` → reshard).
+fn reader_main(
+    mut reader: FrameReader,
+    pending: &Mutex<HashMap<u64, Responder<Message>>>,
+    alive: &AtomicBool,
+    scope: &Metrics,
+) {
+    loop {
+        match reader.recv() {
+            Ok(Some((msg, bytes))) => {
+                scope.add(&scope.counters.rpc_frames_recv, 1);
+                scope.add(&scope.counters.rpc_bytes_recv, bytes as u64);
+                let (job, shard) = match &msg {
+                    Message::ShardCore { job, shard, .. } => (*job, *shard as u64),
+                    Message::SummarizeResp { job, .. } | Message::ErrorMsg { job, .. } => {
+                        (*job, 0)
+                    }
+                    Message::HealthSnap { nonce, .. } => (*nonce, 0),
+                    _ => (0, 0),
+                };
+                scope.tracer().record_now(
+                    EventKind::RpcRecv,
+                    msg.tag() as u64,
+                    bytes as u64,
+                    job,
+                    shard,
+                );
+                match msg {
+                    Message::ShardCore { .. }
+                    | Message::SummarizeResp { .. }
+                    | Message::HealthSnap { .. } => {
+                        if let Some(r) =
+                            pending.lock().unwrap_or_else(|p| p.into_inner()).remove(&job)
+                        {
+                            r.resolve(Ok(msg));
+                        }
+                    }
+                    Message::ErrorMsg { job: j, err } => {
+                        if j == 0 {
+                            // connection-level error: the worker is telling
+                            // us its end is being torn down
+                            mark_dead(alive, scope);
+                            pending.lock().unwrap_or_else(|p| p.into_inner()).clear();
+                            return;
+                        }
+                        if let Some(r) =
+                            pending.lock().unwrap_or_else(|p| p.into_inner()).remove(&j)
+                        {
+                            r.resolve(Err(err));
+                        }
+                    }
+                    _ => { /* protocol chatter we don't track */ }
+                }
+            }
+            Ok(None) => {
+                mark_dead(alive, scope);
+                pending.lock().unwrap_or_else(|p| p.into_inner()).clear();
+                return;
+            }
+            Err(_) => {
+                scope.add(&scope.counters.wire_decode_errors, 1);
+                mark_dead(alive, scope);
+                pending.lock().unwrap_or_else(|p| p.into_inner()).clear();
+                return;
+            }
+        }
+    }
+}
+
+/// Reader-side death: count it on the connection's scope, but only if the
+/// send path ([`ClusterCoordinator::kill_worker`]) didn't get there first —
+/// both guard on the same `alive` swap, so every death is counted exactly
+/// once across the two scopes.
+fn mark_dead(alive: &AtomicBool, scope: &Metrics) {
+    if alive.swap(false, Ordering::SeqCst) {
+        scope.add(&scope.counters.worker_deaths, 1);
+    }
+}

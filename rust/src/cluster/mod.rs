@@ -1,0 +1,26 @@
+//! The distributed SS cluster: worker runtime + fan-out coordinator.
+//!
+//! This is the paper's §1.2 composition — SS commutes with two-round
+//! distributed maximization — promoted from the in-process demo
+//! (`examples/distributed_coreset.rs`) to real processes over the
+//! [`crate::net`] wire protocol:
+//!
+//! 1. the [`ClusterCoordinator`] partitions the ground set into logical
+//!    shards (seed-deterministic, worker-count-independent) and fans
+//!    `ShardAssign` frames out over its connections;
+//! 2. each [`WorkerRuntime`] runs the shard's SS pass on its embedded
+//!    [`SummarizationService`](crate::coordinator::SummarizationService)
+//!    and streams the survivor core back;
+//! 3. the coordinator unions the cores and finishes with one central
+//!    SS + maximizer pass.
+//!
+//! Worker death, stragglers and corrupt streams surface as typed
+//! [`ServiceError`](crate::coordinator::ServiceError)s and bounded
+//! reshard-and-retry — see [`coordinator`] for the invariants and
+//! [`worker`] for the connection protocol.
+
+pub mod coordinator;
+pub mod worker;
+
+pub use coordinator::{ClusterConfig, ClusterCoordinator, ClusterResponse, WorkerHealth};
+pub use worker::{WorkerConfig, WorkerReport, WorkerRuntime};

@@ -1,0 +1,415 @@
+//! The worker runtime: one process (or thread) that serves the existing
+//! job-oriented [`SummarizationService`] over a [`Transport`].
+//!
+//! A connection is a conversation: the coordinator opens with `Hello`,
+//! the worker answers `HelloAck` (or a typed version-mismatch error),
+//! and from then on the worker turns `ShardAssign` / `SummarizeReq`
+//! frames into service jobs and streams the results back as
+//! `ShardCore` / `SummarizeResp` / `ErrorMsg` frames. The protocol is
+//! fully pipelined — the reader loop never blocks on compute:
+//!
+//! * the **reader** (the caller's thread) decodes frames and submits
+//!   jobs to the service, which runs them on its own worker pool;
+//! * one **waiter thread per in-flight job** blocks on the service
+//!   [`Ticket`](crate::coordinator::Ticket) and pushes the completion
+//!   message into an outbound channel — slow shards don't head-of-line
+//!   block fast ones;
+//! * one **writer thread** owns the [`FrameWriter`] (and therefore the
+//!   outbound sequence numbers) and drains that channel.
+//!
+//! `Cancel{job}` flips a per-job flag the waiter polls, which cancels
+//! the underlying ticket — the service sheds the job at dequeue or at
+//! the next SS round boundary, and the coordinator gets a typed
+//! `Cancelled` error frame. A corrupt or reordered inbound stream is
+//! answered with a typed error frame and connection teardown (never a
+//! panic, never partial state: jobs already running complete or cancel,
+//! nothing half-decoded is acted on).
+
+use std::collections::HashMap;
+use std::net::{TcpListener, ToSocketAddrs};
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::mpsc::{channel, Sender};
+use std::sync::{Arc, Mutex};
+use std::thread::JoinHandle;
+use std::time::Duration;
+
+use crate::coordinator::{
+    Metrics, PruneRequest, ServiceConfig, ServiceError, SummarizationService, SummarizeRequest,
+};
+use crate::net::{
+    stdio_transport, tcp_transport, FrameReader, FrameWriter, Message, Transport, WireError,
+    PROTO_VERSION,
+};
+use crate::trace::EventKind;
+
+/// How long a job waiter sleeps between cancel-flag polls. Small enough
+/// that cancel propagation is prompt, large enough to cost nothing.
+const WAITER_POLL: Duration = Duration::from_millis(10);
+
+#[derive(Clone)]
+pub struct WorkerConfig {
+    /// The embedded service's sizing (request workers, queue, compute).
+    pub service: ServiceConfig,
+    /// Identity reported in the handshake and the metrics scope label.
+    pub worker_id: u64,
+}
+
+impl Default for WorkerConfig {
+    fn default() -> Self {
+        Self { service: ServiceConfig::default(), worker_id: 0 }
+    }
+}
+
+/// What one connection did, returned when it ends.
+#[derive(Debug, Clone, Default)]
+pub struct WorkerReport {
+    /// Jobs that resolved successfully and were answered with a result.
+    pub jobs_done: u64,
+    /// Jobs that resolved with a typed error (answered with `ErrorMsg`).
+    pub job_errors: u64,
+    /// Whether the peer ended the conversation with an explicit
+    /// `Shutdown` (vs just closing its end).
+    pub saw_shutdown: bool,
+}
+
+/// Serves a [`SummarizationService`] to one coordinator at a time. See
+/// the module docs for the threading model.
+pub struct WorkerRuntime {
+    config: WorkerConfig,
+    metrics: Arc<Metrics>,
+}
+
+/// Everything a waiter thread needs to turn a finished job into an
+/// outbound frame.
+struct JobCtx {
+    job: u64,
+    out: Sender<Message>,
+    cancel: Arc<AtomicBool>,
+    registry: Arc<Mutex<HashMap<u64, Arc<AtomicBool>>>>,
+    done: Arc<AtomicU64>,
+    errored: Arc<AtomicU64>,
+}
+
+impl WorkerRuntime {
+    pub fn new(config: WorkerConfig) -> Self {
+        let metrics = Arc::new(Metrics::scoped(&format!("worker-{}", config.worker_id)));
+        Self { config, metrics }
+    }
+
+    /// The runtime's own metrics scope (`worker-{id}`): wire counters
+    /// plus everything the embedded service meters per connection.
+    pub fn metrics(&self) -> &Arc<Metrics> {
+        &self.metrics
+    }
+
+    /// Serve one connection until `Shutdown`, peer EOF, or a wire error.
+    pub fn serve(&self, transport: Box<dyn Transport>) -> Result<WorkerReport, WireError> {
+        let (r, w) = transport.split();
+        let mut reader = FrameReader::new(r);
+
+        // the writer thread owns the FrameWriter, and with it the
+        // outbound seq counter — every other thread sends through `out`
+        let (out, out_rx) = channel::<Message>();
+        let writer_metrics = Arc::clone(&self.metrics);
+        let writer: JoinHandle<Result<(), WireError>> = std::thread::Builder::new()
+            .name("ss-net-writer".into())
+            .spawn(move || {
+                let mut fw = FrameWriter::new(w);
+                while let Ok(msg) = out_rx.recv() {
+                    let (job, shard) = msg_job_shard(&msg);
+                    let tag = msg.tag();
+                    let bytes = fw.send(&msg)?;
+                    writer_metrics.add(&writer_metrics.counters.rpc_frames_sent, 1);
+                    writer_metrics.add(&writer_metrics.counters.rpc_bytes_sent, bytes as u64);
+                    writer_metrics.tracer().record_now(
+                        EventKind::RpcSend,
+                        tag as u64,
+                        bytes as u64,
+                        job,
+                        shard,
+                    );
+                }
+                Ok(())
+            })
+            .expect("spawn net writer");
+
+        let result = self.serve_reader(&mut reader, &out);
+
+        // release the writer: drop our sender, join the waiters (they
+        // hold clones and flush their completions first), then reap
+        drop(out);
+        let (report, waiters) = match result {
+            Ok(v) => v,
+            Err(e) => {
+                let _ = writer.join();
+                return Err(e);
+            }
+        };
+        for h in waiters {
+            let _ = h.join();
+        }
+        let _ = writer.join();
+        Ok(report)
+    }
+
+    /// The reader loop. Returns the report and the waiter handles still
+    /// to be joined; wire errors have already been answered with a typed
+    /// error frame by the time they propagate out of here.
+    #[allow(clippy::type_complexity)]
+    fn serve_reader(
+        &self,
+        reader: &mut FrameReader,
+        out: &Sender<Message>,
+    ) -> Result<(WorkerReport, Vec<JoinHandle<()>>), WireError> {
+        let metrics = &self.metrics;
+
+        // handshake: the coordinator speaks first
+        match self.recv_metered(reader)? {
+            Some(Message::Hello { version, peer_id: _ }) => {
+                if version != PROTO_VERSION {
+                    let err = WireError::Version { ours: PROTO_VERSION, theirs: version };
+                    let _ = out.send(Message::ErrorMsg {
+                        job: 0,
+                        err: ServiceError::Rejected { reason: err.to_string() },
+                    });
+                    return Err(err);
+                }
+                let _ = out.send(Message::HelloAck {
+                    version: PROTO_VERSION,
+                    peer_id: self.config.worker_id,
+                });
+            }
+            Some(other) => {
+                let err =
+                    WireError::Corrupt(format!("expected Hello, got tag {}", other.tag()));
+                let _ = out.send(Message::ErrorMsg {
+                    job: 0,
+                    err: ServiceError::Rejected { reason: err.to_string() },
+                });
+                return Err(err);
+            }
+            None => return Ok((WorkerReport::default(), Vec::new())),
+        }
+
+        let svc = SummarizationService::start(self.config.service.clone(), None);
+        let registry: Arc<Mutex<HashMap<u64, Arc<AtomicBool>>>> =
+            Arc::new(Mutex::new(HashMap::new()));
+        let done = Arc::new(AtomicU64::new(0));
+        let errored = Arc::new(AtomicU64::new(0));
+        let mut waiters: Vec<JoinHandle<()>> = Vec::new();
+        let mut saw_shutdown = false;
+
+        loop {
+            let msg = match self.recv_metered(reader) {
+                Ok(Some(m)) => m,
+                Ok(None) => break, // peer closed cleanly
+                Err(e) => {
+                    // answer corruption with a typed error, then tear down
+                    metrics.add(&metrics.counters.wire_decode_errors, 1);
+                    let _ = out.send(Message::ErrorMsg {
+                        job: 0,
+                        err: ServiceError::Rejected { reason: format!("wire: {e}") },
+                    });
+                    // the queued error frame still flushes: waiters and the
+                    // writer drain after this returns
+                    for h in waiters {
+                        let _ = h.join();
+                    }
+                    return Err(e);
+                }
+            };
+            match msg {
+                Message::ShardAssign { job, shard, spec, params, ids, rows } => {
+                    let cancel = self.register(&registry, job);
+                    let ticket = svc.submit_prune(PruneRequest {
+                        spec,
+                        rows,
+                        params,
+                        shard: shard as u64,
+                    });
+                    let ctx = self.job_ctx(job, out, cancel, &registry, &done, &errored);
+                    waiters.push(spawn_waiter(ticket, ctx, move |resp| Message::ShardCore {
+                        job,
+                        shard,
+                        kept: resp.kept.iter().map(|&i| ids[i]).collect(),
+                        rounds: resp.rounds as u32,
+                    }));
+                }
+                Message::SummarizeReq { job, spec, rows, k, params } => {
+                    let cancel = self.register(&registry, job);
+                    let ticket =
+                        svc.submit(SummarizeRequest::from_rows(spec, rows, k as usize, params));
+                    let ctx = self.job_ctx(job, out, cancel, &registry, &done, &errored);
+                    waiters.push(spawn_waiter(ticket, ctx, move |resp| Message::SummarizeResp {
+                        job,
+                        summary: resp.summary.iter().map(|&i| i as u64).collect(),
+                        value: resp.value,
+                        n: resp.n as u64,
+                        reduced: resp.reduced as u64,
+                        ss_rounds: resp.ss_rounds as u32,
+                    }));
+                }
+                Message::Cancel { job } => {
+                    if let Some(flag) =
+                        registry.lock().unwrap_or_else(|p| p.into_inner()).get(&job)
+                    {
+                        flag.store(true, Ordering::SeqCst);
+                    }
+                }
+                Message::HealthProbe { nonce } => {
+                    let busy =
+                        registry.lock().unwrap_or_else(|p| p.into_inner()).len() as u32;
+                    let _ = out.send(Message::HealthSnap {
+                        nonce,
+                        jobs_done: done.load(Ordering::SeqCst),
+                        busy,
+                        metrics_json: svc.metrics_json(),
+                    });
+                }
+                Message::Shutdown => {
+                    saw_shutdown = true;
+                    break;
+                }
+                other => {
+                    let err = WireError::Corrupt(format!(
+                        "unexpected message tag {} on the worker side",
+                        other.tag()
+                    ));
+                    metrics.add(&metrics.counters.wire_decode_errors, 1);
+                    let _ = out.send(Message::ErrorMsg {
+                        job: 0,
+                        err: ServiceError::Rejected { reason: err.to_string() },
+                    });
+                    for h in waiters {
+                        let _ = h.join();
+                    }
+                    return Err(err);
+                }
+            }
+        }
+
+        let report = WorkerReport {
+            jobs_done: done.load(Ordering::SeqCst),
+            job_errors: errored.load(Ordering::SeqCst),
+            saw_shutdown,
+        };
+        Ok((report, waiters))
+    }
+
+    fn recv_metered(&self, reader: &mut FrameReader) -> Result<Option<Message>, WireError> {
+        match reader.recv()? {
+            Some((msg, bytes)) => {
+                let m = &self.metrics;
+                m.add(&m.counters.rpc_frames_recv, 1);
+                m.add(&m.counters.rpc_bytes_recv, bytes as u64);
+                let (job, shard) = msg_job_shard(&msg);
+                m.tracer().record_now(EventKind::RpcRecv, msg.tag() as u64, bytes as u64, job, shard);
+                Ok(Some(msg))
+            }
+            None => Ok(None),
+        }
+    }
+
+    fn register(
+        &self,
+        registry: &Arc<Mutex<HashMap<u64, Arc<AtomicBool>>>>,
+        job: u64,
+    ) -> Arc<AtomicBool> {
+        let flag = Arc::new(AtomicBool::new(false));
+        registry
+            .lock()
+            .unwrap_or_else(|p| p.into_inner())
+            .insert(job, Arc::clone(&flag));
+        flag
+    }
+
+    fn job_ctx(
+        &self,
+        job: u64,
+        out: &Sender<Message>,
+        cancel: Arc<AtomicBool>,
+        registry: &Arc<Mutex<HashMap<u64, Arc<AtomicBool>>>>,
+        done: &Arc<AtomicU64>,
+        errored: &Arc<AtomicU64>,
+    ) -> JobCtx {
+        JobCtx {
+            job,
+            out: out.clone(),
+            cancel,
+            registry: Arc::clone(registry),
+            done: Arc::clone(done),
+            errored: Arc::clone(errored),
+        }
+    }
+
+    /// Serve the process's stdio — the `ssctl worker --stdio` deployment.
+    /// stdout is the protocol channel; anything logged must go to stderr.
+    pub fn serve_stdio(&self) -> Result<WorkerReport, WireError> {
+        self.serve(Box::new(stdio_transport()))
+    }
+
+    /// Bind `addr` and serve connections sequentially until one of them
+    /// ends with an explicit `Shutdown`.
+    pub fn serve_tcp<A: ToSocketAddrs>(&self, addr: A) -> Result<WorkerReport, WireError> {
+        let listener = TcpListener::bind(addr).map_err(|e| WireError::Io(e.to_string()))?;
+        loop {
+            let (stream, _) = listener.accept().map_err(|e| WireError::Io(e.to_string()))?;
+            let conn = tcp_transport(stream).map_err(|e| WireError::Io(e.to_string()))?;
+            let report = self.serve(Box::new(conn))?;
+            if report.saw_shutdown {
+                return Ok(report);
+            }
+        }
+    }
+}
+
+/// The `job`/`shard` pair a message is about, for trace payloads
+/// (0 where the message has no such notion).
+fn msg_job_shard(msg: &Message) -> (u64, u64) {
+    match msg {
+        Message::SummarizeReq { job, .. }
+        | Message::SummarizeResp { job, .. }
+        | Message::ErrorMsg { job, .. }
+        | Message::Cancel { job } => (*job, 0),
+        Message::ShardAssign { job, shard, .. } | Message::ShardCore { job, shard, .. } => {
+            (*job, *shard as u64)
+        }
+        _ => (0, 0),
+    }
+}
+
+/// One thread per in-flight job: poll the ticket (and the cancel flag),
+/// then turn the outcome into the completion frame. `render` maps the
+/// success payload; errors become typed `ErrorMsg` frames verbatim.
+fn spawn_waiter<T: Send + 'static>(
+    mut ticket: crate::coordinator::Ticket<T>,
+    ctx: JobCtx,
+    render: impl FnOnce(T) -> Message + Send + 'static,
+) -> JoinHandle<()> {
+    std::thread::Builder::new()
+        .name(format!("ss-job-{}", ctx.job))
+        .spawn(move || {
+            let result = loop {
+                if ctx.cancel.load(Ordering::SeqCst) {
+                    ticket.cancel();
+                }
+                if let Some(r) = ticket.wait_timeout(WAITER_POLL) {
+                    break r;
+                }
+            };
+            ctx.registry.lock().unwrap_or_else(|p| p.into_inner()).remove(&ctx.job);
+            let msg = match result {
+                Ok(v) => {
+                    ctx.done.fetch_add(1, Ordering::SeqCst);
+                    render(v)
+                }
+                Err(e) => {
+                    ctx.errored.fetch_add(1, Ordering::SeqCst);
+                    Message::ErrorMsg { job: ctx.job, err: e }
+                }
+            };
+            // a send failure just means the connection is already gone
+            let _ = ctx.out.send(msg);
+        })
+        .expect("spawn job waiter")
+}

@@ -35,6 +35,7 @@ use super::service::StreamId;
 /// whole `SummarizeRequest` so shed load is never lost, the streaming
 /// `append` path returns `ServiceError<()>` (the caller still owns its
 /// rows). Only [`QueueFull`](Self::QueueFull) is worth retrying.
+#[derive(Clone, PartialEq)]
 pub enum ServiceError<R = ()> {
     /// Bounded queue (or session live-set cap) is full — backpressure; the
     /// rejected payload is handed back and retrying later can succeed.

@@ -100,6 +100,27 @@ pub struct Counters {
     /// recovery — a crash tears at most the final record).
     pub torn_tail_truncations: AtomicU64,
 
+    // -- cluster family: the wire + fan-out path (coordinator and worker
+    // -- runtimes meter into their own scopes) ---------------------------
+    /// Framed protocol messages written to peers.
+    pub rpc_frames_sent: AtomicU64,
+    /// Framed protocol messages read from peers.
+    pub rpc_frames_recv: AtomicU64,
+    /// Wire bytes written (frame envelope included).
+    pub rpc_bytes_sent: AtomicU64,
+    /// Wire bytes read (frame envelope included).
+    pub rpc_bytes_recv: AtomicU64,
+    /// Shard assignments dispatched to workers, retries included.
+    pub shards_dispatched: AtomicU64,
+    /// Shard attempts re-dispatched after a failure or straggler timeout.
+    pub shard_retries: AtomicU64,
+    /// Worker connections declared dead (transport failure or corrupt
+    /// stream) and excluded from further dispatch.
+    pub worker_deaths: AtomicU64,
+    /// Frames that failed to decode (corrupt / truncated / reordered) —
+    /// every one of these also surfaced as a typed error to the caller.
+    pub wire_decode_errors: AtomicU64,
+
     // -- gauge family (reset-exempt; see the module docs) ----------------
     /// Ground-set rows currently backed by a sparse top-t neighbor store
     /// (0 when the objective is dense or feature-only). Gauge: set at
@@ -126,7 +147,7 @@ impl Counters {
     /// [`Metrics::snapshot`] and [`Self::reset`] both iterate, so a
     /// counter added here is automatically snapshotted *and* reset (the
     /// two can never drift apart).
-    fn named_counters(&self) -> [(&'static str, &AtomicU64); 21] {
+    fn named_counters(&self) -> [(&'static str, &AtomicU64); 29] {
         [
             ("requests", &self.requests),
             ("completed", &self.completed),
@@ -149,6 +170,14 @@ impl Counters {
             ("checkpoints", &self.checkpoints),
             ("recoveries", &self.recoveries),
             ("torn_tail_truncations", &self.torn_tail_truncations),
+            ("rpc_frames_sent", &self.rpc_frames_sent),
+            ("rpc_frames_recv", &self.rpc_frames_recv),
+            ("rpc_bytes_sent", &self.rpc_bytes_sent),
+            ("rpc_bytes_recv", &self.rpc_bytes_recv),
+            ("shards_dispatched", &self.shards_dispatched),
+            ("shard_retries", &self.shard_retries),
+            ("worker_deaths", &self.worker_deaths),
+            ("wire_decode_errors", &self.wire_decode_errors),
         ]
     }
 

@@ -51,7 +51,8 @@ pub mod sharded;
 pub use job::{JobOptions, ServiceError, Ticket};
 pub use metrics::Metrics;
 pub use service::{
-    Objective, ServiceConfig, StreamId, SummarizationService, SummarizeRequest, SummarizeResponse,
+    Objective, PruneRequest, PruneResponse, ServiceConfig, StreamId, SummarizationService,
+    SummarizeRequest, SummarizeResponse,
 };
 pub use sharded::{Compute, ParkedBackend, ShardedBackend};
 

@@ -216,6 +216,28 @@ pub struct SummarizeResponse {
     pub queue_s: f64,
 }
 
+/// A shard-local SS pass: prune `rows` under `spec` and return the
+/// surviving *local* indices — no maximizer. This is the worker half of
+/// the cluster's two-round scheme (shard → prune → union survivors →
+/// finish centrally); the coordinator maps the survivors back to global
+/// ids and runs the final SS + maximizer itself.
+pub struct PruneRequest {
+    pub spec: ObjectiveSpec,
+    pub rows: FeatureMatrix,
+    pub params: SsParams,
+    /// Shard index, carried only for the `ShardPrune` trace span.
+    pub shard: u64,
+}
+
+#[derive(Clone, Debug)]
+pub struct PruneResponse {
+    /// Surviving indices, local to the request's rows, ascending.
+    pub kept: Vec<usize>,
+    pub rounds: usize,
+    /// Shard size in.
+    pub n: usize,
+}
+
 /// One queued unit of work. Both kinds carry their enqueue timestamp (for
 /// `queue_wait`) and the responder whose `Drop` guarantees the ticket
 /// resolves even if the job never runs (shutdown tear-down, worker panic).
@@ -224,6 +246,12 @@ enum Job {
         req: SummarizeRequest,
         enqueued: Timer,
         responder: Responder<SummarizeResponse>,
+    },
+    /// Shard prune for the cluster path — SS only, no maximizer.
+    Prune {
+        req: PruneRequest,
+        enqueued: Timer,
+        responder: Responder<PruneResponse>,
     },
     Snapshot {
         core: Arc<SnapshotCore>,
@@ -273,6 +301,7 @@ fn lock_session<'a>(
     })
 }
 
+#[derive(Clone)]
 pub struct ServiceConfig {
     /// request-worker threads
     pub workers: usize,
@@ -381,6 +410,22 @@ impl SummarizationService {
                 unreachable!("a rejected summarize send returns the summarize job")
             }
         }
+    }
+
+    /// Submit a shard-local SS prune (see [`PruneRequest`]) with default
+    /// options. Same ticket semantics as [`submit`](Self::submit).
+    pub fn submit_prune(&self, req: PruneRequest) -> Ticket<PruneResponse> {
+        self.submit_prune_with(req, JobOptions::default())
+    }
+
+    /// [`submit_prune`](Self::submit_prune) with per-job options.
+    pub fn submit_prune_with(&self, req: PruneRequest, opts: JobOptions) -> Ticket<PruneResponse> {
+        let (ticket, responder) = job_channel(opts);
+        let job = Job::Prune { req, enqueued: Timer::new(), responder };
+        if self.tx.send(job).is_ok() {
+            self.metrics.add(&self.metrics.counters.requests, 1);
+        }
+        ticket
     }
 
     /// Per-stream observability scope: a [`Metrics`] labeled `stream-{id}`
@@ -817,6 +862,21 @@ fn worker_main(
                 }
                 responder.resolve(result);
             }
+            Job::Prune { req, enqueued, responder } => {
+                metrics.queue_wait.record_secs(enqueued.elapsed_s());
+                if let Some(why) = responder.interrupt() {
+                    let e = ServiceError::from(why);
+                    meter_error(metrics, &e);
+                    responder.resolve(Err(e));
+                    continue;
+                }
+                let result = handle_prune(req, metrics, pool, &mut || responder.interrupt());
+                match &result {
+                    Ok(_) => metrics.add(&metrics.counters.completed, 1),
+                    Err(e) => meter_error(metrics, e),
+                }
+                responder.resolve(result);
+            }
             Job::Snapshot { core, mode, enqueued, responder } => {
                 metrics.queue_wait.record_secs(enqueued.elapsed_s());
                 if let Some(why) = responder.interrupt() {
@@ -962,6 +1022,40 @@ fn handle(
         latency_s: timer.elapsed_s() + queue_s,
         queue_s,
     })
+}
+
+/// The worker half of the cluster's two-round scheme: one SS pass over a
+/// shard, no maximizer. Mirrors [`handle`]'s metering (items in/pruned,
+/// per-round latency) and closes a [`EventKind::ShardPrune`] span —
+/// payload `[shard, items_in, kept, ss_rounds]`.
+fn handle_prune(
+    req: PruneRequest,
+    metrics: &Arc<Metrics>,
+    pool: &Arc<ThreadPool>,
+    check: &mut dyn FnMut() -> Option<Interrupt>,
+) -> Result<PruneResponse, ServiceError> {
+    let span = metrics.tracer().start();
+    let n = req.rows.n();
+    metrics.add(&metrics.counters.items_in, n as u64);
+    let f = req.spec.build(req.rows);
+    let backend =
+        ShardedBackend::new(f, Arc::clone(pool), Compute::Cpu, Arc::clone(metrics))
+            .map_err(|e| ServiceError::Rejected { reason: e.to_string() })?;
+    let round_timer = Timer::new();
+    let ss = sparsify_traced(&backend, &req.params, check, metrics.tracer())?;
+    if ss.rounds > 0 {
+        metrics.round_latency.record_secs(round_timer.elapsed_s() / ss.rounds as f64);
+    }
+    metrics.add(&metrics.counters.items_pruned, (n - ss.kept.len()) as u64);
+    metrics.tracer().record_since(
+        EventKind::ShardPrune,
+        span,
+        req.shard,
+        n as u64,
+        ss.kept.len() as u64,
+        ss.rounds as u64,
+    );
+    Ok(PruneResponse { kept: ss.kept, rounds: ss.rounds, n })
 }
 
 #[cfg(test)]

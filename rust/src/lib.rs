@@ -34,6 +34,8 @@ pub mod algorithms;
 pub mod data;
 pub mod runtime;
 pub mod coordinator;
+pub mod net;
+pub mod cluster;
 pub mod stream;
 pub mod trace;
 pub mod config;

@@ -10,6 +10,7 @@ use anyhow::{anyhow, Result};
 
 use submodular_ss::algorithms::{lazy_greedy, sparsify, CpuBackend, Sampling, SsParams};
 use submodular_ss::bench::full_scale;
+use submodular_ss::cluster::{WorkerConfig, WorkerRuntime};
 use submodular_ss::coordinator::{
     Compute, Metrics, ServiceConfig, ShardedBackend, SummarizationService, SummarizeRequest,
 };
@@ -62,6 +63,13 @@ fn app() -> App {
                 .opt("seed", "0", "rng seed"),
         )
         .command(Command::new("inspect", "validate the artifacts directory and PJRT runtime"))
+        .command(
+            Command::new("worker", "serve the summarization service to a cluster coordinator")
+                .opt("tcp", "", "bind address (e.g. 127.0.0.1:7077); empty = stdio")
+                .opt("id", "0", "worker identity (handshake + metrics scope)")
+                .opt("workers", "2", "service request workers")
+                .opt("threads", "2", "compute threads"),
+        )
 }
 
 fn main() {
@@ -80,6 +88,7 @@ fn main() {
                 "experiment" => cmd_experiment(&args),
                 "gen-data" => cmd_gen_data(&args),
                 "inspect" => cmd_inspect(),
+                "worker" => cmd_worker(&args),
                 _ => unreachable!(),
             };
             if let Err(e) = r {
@@ -296,6 +305,37 @@ fn cmd_gen_data(args: &Args) -> Result<()> {
         }
         k => return Err(anyhow!("unknown kind '{k}'")),
     }
+    Ok(())
+}
+
+fn cmd_worker(args: &Args) -> Result<()> {
+    // stdout may be the protocol channel (stdio transport), so all
+    // operator-facing output goes to stderr.
+    let config = WorkerConfig {
+        worker_id: args.u64("id"),
+        service: ServiceConfig {
+            workers: args.usize("workers"),
+            compute_threads: args.usize("threads"),
+            ..Default::default()
+        },
+    };
+    let runtime = WorkerRuntime::new(config);
+    let addr = args.str("tcp");
+    let report = if addr.is_empty() {
+        eprintln!("ssctl worker {}: serving stdio", args.u64("id"));
+        runtime.serve_stdio()
+    } else {
+        eprintln!("ssctl worker {}: listening on {addr}", args.u64("id"));
+        runtime.serve_tcp(addr.as_str())
+    }
+    .map_err(|e| anyhow!("worker connection failed: {e}"))?;
+    eprintln!(
+        "ssctl worker {}: connection ended (jobs={} errors={} shutdown={})",
+        args.u64("id"),
+        report.jobs_done,
+        report.job_errors,
+        report.saw_shutdown
+    );
     Ok(())
 }
 

@@ -1,0 +1,275 @@
+//! Framing: the length-prefixed, checksummed envelope every cluster
+//! message travels in, plus the incremental decoder that reassembles
+//! frames from an arbitrary byte stream.
+//!
+//! Layout (all integers little-endian, same discipline as the WAL):
+//!
+//! ```text
+//! [len u32][tag u8][seq u64][payload ...][fnv64 u64]
+//!          |<------- body: len bytes ------->|
+//! ```
+//!
+//! `len` counts the body (tag + seq + payload); the trailing checksum is
+//! [`fnv1a64`](crate::stream::wal) over the body, the same function the
+//! write-ahead log uses — one integrity primitive for the whole crate.
+//! `seq` is assigned per *direction* of a connection, strictly
+//! monotonically from 0; the decoder enforces it, so a reordered or
+//! replayed frame surfaces as a typed [`WireError::Reorder`] instead of
+//! silently corrupting protocol state.
+//!
+//! Decoding is incremental and never panics: bytes arrive in whatever
+//! chunks the transport produces, [`FrameDecoder::next_frame`] returns
+//! `Ok(None)` while a frame is incomplete, and every malformed input —
+//! oversized length, checksum mismatch, truncated stream at EOF — maps to
+//! a typed [`WireError`]. A decoder that has reported `Corrupt` or
+//! `Reorder` is dead: resynchronizing inside a corrupt byte stream is
+//! guesswork, so the connection is torn down instead.
+
+use crate::stream::wal::{fnv1a64, put_u32, put_u64, put_u8};
+
+/// Protocol version carried in the `Hello`/`HelloAck` handshake. Bump on
+/// any frame- or message-layout change.
+pub const PROTO_VERSION: u8 = 1;
+
+/// Hard cap on a frame body. Shard payloads are row matrices (tens of MB
+/// at production scale); anything past this is a corrupt length prefix,
+/// not a real message — reject before allocating.
+pub const MAX_FRAME: usize = 512 << 20;
+
+/// Body bytes before the payload: tag (1) + seq (8).
+const HEADER: usize = 9;
+
+/// Typed failure of the wire layer. Everything the protocol can mismatch
+/// on has its own variant so peers and tests can branch on the cause;
+/// nothing here ever panics the process.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum WireError {
+    /// Structurally invalid bytes: impossible length, checksum mismatch,
+    /// unknown tag, payload that under- or over-runs its message schema.
+    Corrupt(String),
+    /// Frame sequence violation — a reordered, replayed or dropped frame.
+    Reorder { expected: u64, got: u64 },
+    /// Handshake version mismatch.
+    Version { ours: u8, theirs: u8 },
+    /// Transport failure (socket error, killed pipe).
+    Io(String),
+    /// The peer closed the connection (cleanly, or mid-frame — the
+    /// decoder distinguishes via [`FrameDecoder::finish`]).
+    Closed,
+}
+
+impl std::fmt::Display for WireError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            WireError::Corrupt(why) => write!(f, "corrupt frame: {why}"),
+            WireError::Reorder { expected, got } => {
+                write!(f, "frame reorder: expected seq {expected}, got {got}")
+            }
+            WireError::Version { ours, theirs } => {
+                write!(f, "protocol version mismatch: ours {ours}, theirs {theirs}")
+            }
+            WireError::Io(why) => write!(f, "transport error: {why}"),
+            WireError::Closed => f.write_str("connection closed"),
+        }
+    }
+}
+
+impl std::error::Error for WireError {}
+
+/// A decoded frame: tag, per-direction sequence number, payload bytes.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct Frame {
+    pub tag: u8,
+    pub seq: u64,
+    pub payload: Vec<u8>,
+}
+
+/// Encode one frame: `[len u32][tag u8][seq u64][payload][fnv64]`.
+pub fn encode_frame(tag: u8, seq: u64, payload: &[u8]) -> Vec<u8> {
+    let mut body = Vec::with_capacity(HEADER + payload.len());
+    put_u8(&mut body, tag);
+    put_u64(&mut body, seq);
+    body.extend_from_slice(payload);
+    let mut out = Vec::with_capacity(4 + body.len() + 8);
+    put_u32(&mut out, body.len() as u32);
+    out.extend_from_slice(&body);
+    put_u64(&mut out, fnv1a64(&body));
+    out
+}
+
+/// Incremental frame reassembler for one direction of a connection.
+///
+/// Feed transport bytes with [`push`](Self::push), drain complete frames
+/// with [`next_frame`](Self::next_frame) (`Ok(None)` = incomplete, wait
+/// for more bytes). The decoder verifies the length bound, the body
+/// checksum and the strict seq order; any violation returns a typed
+/// [`WireError`] and poisons the decoder (further calls keep failing) —
+/// a corrupt stream has no trustworthy resynchronization point.
+pub struct FrameDecoder {
+    buf: Vec<u8>,
+    /// Consumed prefix of `buf` (compacted opportunistically).
+    pos: usize,
+    next_seq: u64,
+    dead: Option<WireError>,
+}
+
+impl Default for FrameDecoder {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl FrameDecoder {
+    pub fn new() -> Self {
+        Self { buf: Vec::new(), pos: 0, next_seq: 0, dead: None }
+    }
+
+    /// Append transport bytes (any chunking, including one byte at a time).
+    pub fn push(&mut self, bytes: &[u8]) {
+        // compact the consumed prefix before growing, so a long-lived
+        // connection doesn't accrete every frame it ever saw
+        if self.pos > 0 && (self.pos >= self.buf.len() || self.pos > 64 * 1024) {
+            self.buf.drain(..self.pos);
+            self.pos = 0;
+        }
+        self.buf.extend_from_slice(bytes);
+    }
+
+    /// Next complete frame, `Ok(None)` while more bytes are needed.
+    pub fn next_frame(&mut self) -> Result<Option<Frame>, WireError> {
+        if let Some(e) = &self.dead {
+            return Err(e.clone());
+        }
+        match self.parse() {
+            Ok(v) => Ok(v),
+            Err(e) => {
+                self.dead = Some(e.clone());
+                Err(e)
+            }
+        }
+    }
+
+    fn parse(&mut self) -> Result<Option<Frame>, WireError> {
+        let avail = &self.buf[self.pos..];
+        if avail.len() < 4 {
+            return Ok(None);
+        }
+        let len = u32::from_le_bytes([avail[0], avail[1], avail[2], avail[3]]) as usize;
+        if len < HEADER {
+            return Err(WireError::Corrupt(format!("impossible body length {len}")));
+        }
+        if len > MAX_FRAME {
+            return Err(WireError::Corrupt(format!(
+                "body length {len} exceeds the {MAX_FRAME}-byte frame cap"
+            )));
+        }
+        if avail.len() < 4 + len + 8 {
+            return Ok(None);
+        }
+        let body = &avail[4..4 + len];
+        let sum = u64::from_le_bytes(avail[4 + len..4 + len + 8].try_into().unwrap());
+        if sum != fnv1a64(body) {
+            return Err(WireError::Corrupt("body checksum mismatch".into()));
+        }
+        let tag = body[0];
+        let seq = u64::from_le_bytes(body[1..9].try_into().unwrap());
+        if seq != self.next_seq {
+            return Err(WireError::Reorder { expected: self.next_seq, got: seq });
+        }
+        let payload = body[HEADER..].to_vec();
+        self.next_seq += 1;
+        self.pos += 4 + len + 8;
+        Ok(Some(Frame { tag, seq, payload }))
+    }
+
+    /// Bytes buffered but not yet consumed by a complete frame.
+    pub fn pending_bytes(&self) -> usize {
+        self.buf.len() - self.pos
+    }
+
+    /// Call at EOF: a connection that closed with a partial frame in the
+    /// buffer was truncated mid-message — typed, not silently dropped.
+    pub fn finish(&self) -> Result<(), WireError> {
+        if let Some(e) = &self.dead {
+            return Err(e.clone());
+        }
+        if self.pending_bytes() > 0 {
+            return Err(WireError::Corrupt(format!(
+                "stream truncated mid-frame ({} residual bytes)",
+                self.pending_bytes()
+            )));
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn frame_roundtrip_whole_and_byte_at_a_time() {
+        let payload = b"shard bytes".to_vec();
+        let wire = encode_frame(7, 0, &payload);
+        // whole
+        let mut d = FrameDecoder::new();
+        d.push(&wire);
+        let f = d.next_frame().unwrap().unwrap();
+        assert_eq!((f.tag, f.seq, &f.payload), (7, 0, &payload));
+        assert!(d.next_frame().unwrap().is_none());
+        d.finish().unwrap();
+        // byte at a time
+        let mut d = FrameDecoder::new();
+        for &b in &wire {
+            d.push(&[b]);
+        }
+        let f = d.next_frame().unwrap().unwrap();
+        assert_eq!(f.payload, payload);
+    }
+
+    #[test]
+    fn seq_enforced_and_reorder_is_typed() {
+        let a = encode_frame(1, 0, b"a");
+        let b = encode_frame(1, 1, b"b");
+        let mut d = FrameDecoder::new();
+        d.push(&b);
+        d.push(&a);
+        match d.next_frame() {
+            Err(WireError::Reorder { expected: 0, got: 1 }) => {}
+            other => panic!("expected Reorder, got {other:?}"),
+        }
+        // the decoder is poisoned afterwards
+        assert!(d.next_frame().is_err());
+    }
+
+    #[test]
+    fn checksum_and_length_violations_are_typed() {
+        let mut wire = encode_frame(3, 0, b"payload");
+        // flip one payload byte — checksum catches it
+        wire[8] ^= 0x40;
+        let mut d = FrameDecoder::new();
+        d.push(&wire);
+        assert!(matches!(d.next_frame(), Err(WireError::Corrupt(_))));
+
+        // impossible length prefix
+        let mut d = FrameDecoder::new();
+        d.push(&[3, 0, 0, 0, 9, 9, 9, 9, 9, 9, 9, 9, 9, 9, 9, 9, 9]);
+        assert!(matches!(d.next_frame(), Err(WireError::Corrupt(_))));
+
+        // over-cap length prefix rejected before buffering the body
+        let mut d = FrameDecoder::new();
+        d.push(&u32::MAX.to_le_bytes());
+        assert!(matches!(d.next_frame(), Err(WireError::Corrupt(_))));
+    }
+
+    #[test]
+    fn truncated_stream_is_incomplete_then_typed_at_eof() {
+        let wire = encode_frame(2, 0, b"0123456789");
+        for cut in 1..wire.len() {
+            let mut d = FrameDecoder::new();
+            d.push(&wire[..cut]);
+            assert_eq!(d.next_frame().unwrap(), None, "prefix of {cut} bytes must be incomplete");
+            assert!(matches!(d.finish(), Err(WireError::Corrupt(_))));
+        }
+    }
+}

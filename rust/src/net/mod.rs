@@ -1,0 +1,29 @@
+//! Zero-dependency wire layer for the distributed SS cluster.
+//!
+//! Three stacked pieces, bottom-up:
+//!
+//! * [`frame`] — the `[len u32][tag u8][seq u64][payload][fnv64]`
+//!   envelope and its incremental, never-panicking decoder; integrity
+//!   rides on the same fnv1a64 the write-ahead log uses.
+//! * [`msg`] — typed codecs for every protocol message (handshake,
+//!   summarize jobs, shard assignments, survivor cores, health/metrics
+//!   snapshots, the [`ServiceError`](crate::coordinator::ServiceError)
+//!   family, cancel/shutdown).
+//! * [`transport`] — the byte-stream trait pair plus loopback, TCP and
+//!   stdio implementations, and the [`FrameReader`]/[`FrameWriter`]
+//!   endpoints that move [`Message`]s over any of them.
+//!
+//! The cluster runtimes (`crate::cluster`) sit on top; nothing in this
+//! module knows about jobs, shards or submodularity beyond their
+//! serialized shapes.
+
+pub mod frame;
+pub mod msg;
+pub mod transport;
+
+pub use frame::{encode_frame, Frame, FrameDecoder, WireError, MAX_FRAME, PROTO_VERSION};
+pub use msg::{tag, Message};
+pub use transport::{
+    loopback_pair, loopback_pair_chunked, stdio_transport, tcp_transport, FrameReader,
+    FrameWriter, IoConn, KillSwitch, LoopbackEnd, Transport, WireRead, WireWrite,
+};

@@ -1,0 +1,481 @@
+//! Message codecs: every payload the cluster speaks, hand-encoded on the
+//! WAL's little-endian primitives ([`put_u32`]/[`Cursor`]) — zero
+//! dependencies, and the same bounds-checked reader discipline, so a
+//! malformed payload surfaces as [`WireError::Corrupt`] instead of a
+//! panic or a partially-applied message.
+//!
+//! The vocabulary (one tag per variant, see [`Message::tag`]):
+//!
+//! * `Hello` / `HelloAck` — version handshake (coordinator speaks first);
+//! * `SummarizeReq` / `SummarizeResp` — a whole summarize job shipped to
+//!   one worker (the single-worker degenerate of the cluster path);
+//! * `ShardAssign` / `ShardCore` — one logical shard out (global ids +
+//!   gathered rows + per-shard SS params), its surviving core back;
+//! * `HealthProbe` / `HealthSnap` — liveness + the worker's scoped
+//!   metrics snapshot, JSON-encoded;
+//! * `ErrorMsg` — the typed [`ServiceError`] family, encoded variant by
+//!   variant so a worker-side failure arrives as the same type the local
+//!   service would have returned;
+//! * `Cancel` / `Shutdown` — cooperative job cancellation and clean
+//!   worker teardown.
+//!
+//! Every decoder consumes its payload exactly ([`Cursor::done`]):
+//! trailing bytes are corruption, not extensibility — extensibility is
+//! what the handshake version is for.
+
+use crate::algorithms::{Sampling, SsParams};
+use crate::coordinator::ServiceError;
+use crate::stream::wal::{put_f32, put_f64, put_u32, put_u64, put_u8, Cursor, WalError};
+use crate::submodular::{BuildStrategy, Concave, ObjectiveSpec};
+use crate::util::vecmath::FeatureMatrix;
+
+use super::frame::WireError;
+
+/// Frame tags, one per message kind.
+pub mod tag {
+    pub const HELLO: u8 = 1;
+    pub const HELLO_ACK: u8 = 2;
+    pub const SUMMARIZE_REQ: u8 = 3;
+    pub const SUMMARIZE_RESP: u8 = 4;
+    pub const SHARD_ASSIGN: u8 = 5;
+    pub const SHARD_CORE: u8 = 6;
+    pub const HEALTH_PROBE: u8 = 7;
+    pub const HEALTH_SNAP: u8 = 8;
+    pub const ERROR: u8 = 9;
+    pub const CANCEL: u8 = 10;
+    pub const SHUTDOWN: u8 = 11;
+}
+
+/// One decoded protocol message. See the module docs for the vocabulary.
+#[derive(Debug, Clone, PartialEq)]
+pub enum Message {
+    Hello { version: u8, peer_id: u64 },
+    HelloAck { version: u8, peer_id: u64 },
+    SummarizeReq { job: u64, spec: ObjectiveSpec, rows: FeatureMatrix, k: u32, params: SsParams },
+    SummarizeResp { job: u64, summary: Vec<u64>, value: f64, n: u64, reduced: u64, ss_rounds: u32 },
+    /// One logical shard: ascending global ids plus their gathered rows.
+    ShardAssign {
+        job: u64,
+        shard: u32,
+        spec: ObjectiveSpec,
+        params: SsParams,
+        ids: Vec<u64>,
+        rows: FeatureMatrix,
+    },
+    /// The shard's SS survivors, as ascending global ids.
+    ShardCore { job: u64, shard: u32, kept: Vec<u64>, rounds: u32 },
+    HealthProbe { nonce: u64 },
+    HealthSnap { nonce: u64, jobs_done: u64, busy: u32, metrics_json: String },
+    /// A typed service failure for `job` (`job` 0 = connection-level).
+    ErrorMsg { job: u64, err: ServiceError },
+    Cancel { job: u64 },
+    Shutdown,
+}
+
+fn put_str(out: &mut Vec<u8>, s: &str) {
+    put_u32(out, s.len() as u32);
+    out.extend_from_slice(s.as_bytes());
+}
+
+fn get_str(c: &mut Cursor<'_>) -> Result<String, WalError> {
+    let len = c.u32()? as usize;
+    let bytes = c.take(len)?;
+    String::from_utf8(bytes.to_vec())
+        .map_err(|_| WalError::Corrupt("string payload is not valid UTF-8".into()))
+}
+
+fn put_spec(out: &mut Vec<u8>, spec: ObjectiveSpec) {
+    match spec {
+        ObjectiveSpec::Features(g) => {
+            put_u8(out, 0);
+            match g {
+                Concave::Sqrt => put_u8(out, 0),
+                Concave::Log1p => put_u8(out, 1),
+                Concave::Pow(p) => {
+                    put_u8(out, 2);
+                    put_u32(out, p as u32);
+                }
+            }
+        }
+        ObjectiveSpec::FacilityLocation => put_u8(out, 1),
+        ObjectiveSpec::FacilityLocationSparse { t, crossover, build } => {
+            put_u8(out, 2);
+            put_u32(out, t);
+            put_u32(out, crossover);
+            match build {
+                BuildStrategy::Exact => put_u8(out, 0),
+                BuildStrategy::Lsh { tables, bits } => {
+                    put_u8(out, 1);
+                    put_u32(out, tables);
+                    put_u32(out, bits);
+                }
+                BuildStrategy::Auto => put_u8(out, 2),
+            }
+        }
+    }
+}
+
+fn get_spec(c: &mut Cursor<'_>) -> Result<ObjectiveSpec, WalError> {
+    match c.u8()? {
+        0 => {
+            let g = match c.u8()? {
+                0 => Concave::Sqrt,
+                1 => Concave::Log1p,
+                2 => Concave::Pow(c.u32()? as u16),
+                other => {
+                    return Err(WalError::Corrupt(format!("unknown concave scalarizer {other}")))
+                }
+            };
+            Ok(ObjectiveSpec::Features(g))
+        }
+        1 => Ok(ObjectiveSpec::FacilityLocation),
+        2 => {
+            let t = c.u32()?;
+            let crossover = c.u32()?;
+            let build = match c.u8()? {
+                0 => BuildStrategy::Exact,
+                1 => BuildStrategy::Lsh { tables: c.u32()?, bits: c.u32()? },
+                2 => BuildStrategy::Auto,
+                other => {
+                    return Err(WalError::Corrupt(format!("unknown build strategy {other}")))
+                }
+            };
+            Ok(ObjectiveSpec::FacilityLocationSparse { t, crossover, build })
+        }
+        other => Err(WalError::Corrupt(format!("unknown objective spec {other}"))),
+    }
+}
+
+fn put_params(out: &mut Vec<u8>, p: &SsParams) {
+    put_u32(out, p.r as u32);
+    put_f64(out, p.c);
+    put_u64(out, p.seed);
+    put_u8(out, match p.sampling {
+        Sampling::Uniform => 0,
+        Sampling::Importance => 1,
+    });
+    put_u32(out, p.min_keep as u32);
+}
+
+fn get_params(c: &mut Cursor<'_>) -> Result<SsParams, WalError> {
+    let r = c.u32()? as usize;
+    let cc = c.f64()?;
+    let seed = c.u64()?;
+    let sampling = match c.u8()? {
+        0 => Sampling::Uniform,
+        1 => Sampling::Importance,
+        other => return Err(WalError::Corrupt(format!("unknown sampling mode {other}"))),
+    };
+    let min_keep = c.u32()? as usize;
+    Ok(SsParams { r, c: cc, seed, sampling, min_keep })
+}
+
+fn put_rows(out: &mut Vec<u8>, rows: &FeatureMatrix) {
+    put_u32(out, rows.n() as u32);
+    put_u32(out, rows.d as u32);
+    for &v in rows.data() {
+        put_f32(out, v);
+    }
+}
+
+fn get_rows(c: &mut Cursor<'_>) -> Result<FeatureMatrix, WalError> {
+    let n = c.u32()? as usize;
+    let d = c.u32()? as usize;
+    let total = n
+        .checked_mul(d)
+        .ok_or_else(|| WalError::Corrupt("row matrix dims overflow".into()))?;
+    // bound the allocation by what the payload can actually hold — a
+    // corrupt dim pair must not reserve gigabytes before the short read
+    if total * 4 > c.remaining() {
+        return Err(WalError::Corrupt(format!(
+            "row matrix {n}x{d} overruns its payload ({} bytes left)",
+            c.remaining()
+        )));
+    }
+    let mut m = FeatureMatrix::zeros(n, d);
+    for i in 0..n {
+        for j in 0..d {
+            m.row_mut(i)[j] = c.f32()?;
+        }
+    }
+    Ok(m)
+}
+
+fn put_ids(out: &mut Vec<u8>, ids: &[u64]) {
+    put_u32(out, ids.len() as u32);
+    for &id in ids {
+        put_u64(out, id);
+    }
+}
+
+fn get_ids(c: &mut Cursor<'_>) -> Result<Vec<u64>, WalError> {
+    let n = c.u32()? as usize;
+    if n * 8 > c.remaining() {
+        return Err(WalError::Corrupt(format!(
+            "id list of {n} overruns its payload ({} bytes left)",
+            c.remaining()
+        )));
+    }
+    let mut ids = Vec::with_capacity(n);
+    for _ in 0..n {
+        ids.push(c.u64()?);
+    }
+    Ok(ids)
+}
+
+fn put_service_error<R>(out: &mut Vec<u8>, err: &ServiceError<R>) {
+    match err {
+        // the payload (if any) stays with the sender; backpressure over
+        // the wire is a retry signal, not a payload hand-back
+        ServiceError::QueueFull(_) => put_u8(out, 0),
+        ServiceError::ServiceDown => put_u8(out, 1),
+        ServiceError::UnknownStream(id) => {
+            put_u8(out, 2);
+            put_u64(out, *id);
+        }
+        ServiceError::Rejected { reason } => {
+            put_u8(out, 3);
+            put_str(out, reason);
+        }
+        ServiceError::Cancelled => put_u8(out, 4),
+        ServiceError::DeadlineExceeded => put_u8(out, 5),
+    }
+}
+
+fn get_service_error(c: &mut Cursor<'_>) -> Result<ServiceError, WalError> {
+    Ok(match c.u8()? {
+        0 => ServiceError::QueueFull(()),
+        1 => ServiceError::ServiceDown,
+        2 => ServiceError::UnknownStream(c.u64()?),
+        3 => ServiceError::Rejected { reason: get_str(c)? },
+        4 => ServiceError::Cancelled,
+        5 => ServiceError::DeadlineExceeded,
+        other => return Err(WalError::Corrupt(format!("unknown service error variant {other}"))),
+    })
+}
+
+impl Message {
+    /// The frame tag this message travels under.
+    pub fn tag(&self) -> u8 {
+        match self {
+            Message::Hello { .. } => tag::HELLO,
+            Message::HelloAck { .. } => tag::HELLO_ACK,
+            Message::SummarizeReq { .. } => tag::SUMMARIZE_REQ,
+            Message::SummarizeResp { .. } => tag::SUMMARIZE_RESP,
+            Message::ShardAssign { .. } => tag::SHARD_ASSIGN,
+            Message::ShardCore { .. } => tag::SHARD_CORE,
+            Message::HealthProbe { .. } => tag::HEALTH_PROBE,
+            Message::HealthSnap { .. } => tag::HEALTH_SNAP,
+            Message::ErrorMsg { .. } => tag::ERROR,
+            Message::Cancel { .. } => tag::CANCEL,
+            Message::Shutdown => tag::SHUTDOWN,
+        }
+    }
+
+    /// Encode the payload bytes (framing is [`encode_frame`]'s job).
+    ///
+    /// [`encode_frame`]: super::frame::encode_frame
+    pub fn encode(&self) -> Vec<u8> {
+        let mut out = Vec::new();
+        match self {
+            Message::Hello { version, peer_id } | Message::HelloAck { version, peer_id } => {
+                put_u8(&mut out, *version);
+                put_u64(&mut out, *peer_id);
+            }
+            Message::SummarizeReq { job, spec, rows, k, params } => {
+                put_u64(&mut out, *job);
+                put_spec(&mut out, *spec);
+                put_u32(&mut out, *k);
+                put_params(&mut out, params);
+                put_rows(&mut out, rows);
+            }
+            Message::SummarizeResp { job, summary, value, n, reduced, ss_rounds } => {
+                put_u64(&mut out, *job);
+                put_ids(&mut out, summary);
+                put_f64(&mut out, *value);
+                put_u64(&mut out, *n);
+                put_u64(&mut out, *reduced);
+                put_u32(&mut out, *ss_rounds);
+            }
+            Message::ShardAssign { job, shard, spec, params, ids, rows } => {
+                put_u64(&mut out, *job);
+                put_u32(&mut out, *shard);
+                put_spec(&mut out, *spec);
+                put_params(&mut out, params);
+                put_ids(&mut out, ids);
+                put_rows(&mut out, rows);
+            }
+            Message::ShardCore { job, shard, kept, rounds } => {
+                put_u64(&mut out, *job);
+                put_u32(&mut out, *shard);
+                put_ids(&mut out, kept);
+                put_u32(&mut out, *rounds);
+            }
+            Message::HealthProbe { nonce } => put_u64(&mut out, *nonce),
+            Message::HealthSnap { nonce, jobs_done, busy, metrics_json } => {
+                put_u64(&mut out, *nonce);
+                put_u64(&mut out, *jobs_done);
+                put_u32(&mut out, *busy);
+                put_str(&mut out, metrics_json);
+            }
+            Message::ErrorMsg { job, err } => {
+                put_u64(&mut out, *job);
+                put_service_error(&mut out, err);
+            }
+            Message::Cancel { job } => put_u64(&mut out, *job),
+            Message::Shutdown => {}
+        }
+        out
+    }
+
+    /// Decode a frame's payload. Unknown tags, short payloads, trailing
+    /// bytes and invalid enum discriminants all surface as
+    /// [`WireError::Corrupt`] — never a panic, never a partial message.
+    pub fn decode(frame_tag: u8, payload: &[u8]) -> Result<Message, WireError> {
+        let mut c = Cursor::new(payload);
+        let msg = match frame_tag {
+            tag::HELLO => Message::Hello { version: c.u8()?, peer_id: c.u64()? },
+            tag::HELLO_ACK => Message::HelloAck { version: c.u8()?, peer_id: c.u64()? },
+            tag::SUMMARIZE_REQ => {
+                let job = c.u64()?;
+                let spec = get_spec(&mut c)?;
+                let k = c.u32()?;
+                let params = get_params(&mut c)?;
+                let rows = get_rows(&mut c)?;
+                Message::SummarizeReq { job, spec, rows, k, params }
+            }
+            tag::SUMMARIZE_RESP => Message::SummarizeResp {
+                job: c.u64()?,
+                summary: get_ids(&mut c)?,
+                value: c.f64()?,
+                n: c.u64()?,
+                reduced: c.u64()?,
+                ss_rounds: c.u32()?,
+            },
+            tag::SHARD_ASSIGN => {
+                let job = c.u64()?;
+                let shard = c.u32()?;
+                let spec = get_spec(&mut c)?;
+                let params = get_params(&mut c)?;
+                let ids = get_ids(&mut c)?;
+                let rows = get_rows(&mut c)?;
+                if ids.len() != rows.n() {
+                    return Err(WireError::Corrupt(format!(
+                        "shard carries {} ids but {} rows",
+                        ids.len(),
+                        rows.n()
+                    )));
+                }
+                Message::ShardAssign { job, shard, spec, params, ids, rows }
+            }
+            tag::SHARD_CORE => Message::ShardCore {
+                job: c.u64()?,
+                shard: c.u32()?,
+                kept: get_ids(&mut c)?,
+                rounds: c.u32()?,
+            },
+            tag::HEALTH_PROBE => Message::HealthProbe { nonce: c.u64()? },
+            tag::HEALTH_SNAP => Message::HealthSnap {
+                nonce: c.u64()?,
+                jobs_done: c.u64()?,
+                busy: c.u32()?,
+                metrics_json: get_str(&mut c)?,
+            },
+            tag::ERROR => Message::ErrorMsg { job: c.u64()?, err: get_service_error(&mut c)? },
+            tag::CANCEL => Message::Cancel { job: c.u64()? },
+            tag::SHUTDOWN => Message::Shutdown,
+            other => return Err(WireError::Corrupt(format!("unknown message tag {other}"))),
+        };
+        c.done()?;
+        Ok(msg)
+    }
+}
+
+// WAL reader errors (short reads, trailing bytes) are wire corruption
+// when they happen inside a frame payload.
+impl From<WalError> for WireError {
+    fn from(e: WalError) -> Self {
+        WireError::Corrupt(e.to_string())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn shard_messages_roundtrip() {
+        let mut rows = FeatureMatrix::zeros(3, 2);
+        rows.row_mut(1)[0] = 0.5;
+        rows.row_mut(2)[1] = -2.25;
+        let msg = Message::ShardAssign {
+            job: 9,
+            shard: 2,
+            spec: ObjectiveSpec::Features(Concave::Log1p),
+            params: SsParams::default().with_seed(41),
+            ids: vec![4, 17, 900],
+            rows,
+        };
+        let back = Message::decode(msg.tag(), &msg.encode()).unwrap();
+        assert_eq!(back, msg);
+
+        let core = Message::ShardCore { job: 9, shard: 2, kept: vec![4, 900], rounds: 3 };
+        assert_eq!(Message::decode(core.tag(), &core.encode()).unwrap(), core);
+    }
+
+    #[test]
+    fn error_family_roundtrips_typed() {
+        for err in [
+            ServiceError::QueueFull(()),
+            ServiceError::ServiceDown,
+            ServiceError::UnknownStream(7),
+            ServiceError::Rejected { reason: "no runtime".into() },
+            ServiceError::Cancelled,
+            ServiceError::DeadlineExceeded,
+        ] {
+            let msg = Message::ErrorMsg { job: 3, err };
+            let back = Message::decode(msg.tag(), &msg.encode()).unwrap();
+            match (&msg, &back) {
+                (
+                    Message::ErrorMsg { err: a, .. },
+                    Message::ErrorMsg { err: b, .. },
+                ) => assert_eq!(a.to_string(), b.to_string()),
+                _ => unreachable!(),
+            }
+        }
+    }
+
+    #[test]
+    fn trailing_bytes_and_bad_discriminants_are_corrupt() {
+        let msg = Message::Cancel { job: 5 };
+        let mut payload = msg.encode();
+        payload.push(0xff);
+        assert!(matches!(Message::decode(msg.tag(), &payload), Err(WireError::Corrupt(_))));
+        // truncated payload
+        assert!(matches!(Message::decode(msg.tag(), &[1, 2]), Err(WireError::Corrupt(_))));
+        // unknown tag
+        assert!(matches!(Message::decode(0xEE, &[]), Err(WireError::Corrupt(_))));
+        // bad enum discriminant inside an error message
+        assert!(matches!(
+            Message::decode(tag::ERROR, &{
+                let mut p = Vec::new();
+                put_u64(&mut p, 1);
+                put_u8(&mut p, 99);
+                p
+            }),
+            Err(WireError::Corrupt(_))
+        ));
+    }
+
+    #[test]
+    fn oversized_dims_reject_before_allocating() {
+        // SummarizeResp whose id count claims more than the payload holds
+        let mut p = Vec::new();
+        put_u64(&mut p, 1); // job
+        put_u32(&mut p, u32::MAX); // summary len
+        assert!(matches!(
+            Message::decode(tag::SUMMARIZE_RESP, &p),
+            Err(WireError::Corrupt(_))
+        ));
+    }
+}

@@ -1,0 +1,387 @@
+//! Transports: the byte-stream abstraction frames travel over, with
+//! three implementations — an in-memory loopback pipe (deterministic
+//! tests, multi-worker clusters inside one process), a generic adapter
+//! over any `std::io::Read`/`Write` pair (TCP sockets, child-process
+//! stdio), and the [`FrameReader`]/[`FrameWriter`] pair that layers the
+//! framed protocol on top of either.
+//!
+//! The loopback pipe deliberately supports two failure-injection knobs
+//! the tests lean on: a *kill switch* that makes both directions fail
+//! with [`WireError::Io`] mid-conversation (worker death), and a write
+//! *chunk size* that splinters every write into tiny transport reads so
+//! the decoder's reassembly path is exercised on every test run.
+
+use std::collections::VecDeque;
+use std::io::{Read, Write};
+use std::net::TcpStream;
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::{Arc, Condvar, Mutex};
+
+use super::frame::{encode_frame, Frame, FrameDecoder, WireError};
+use super::msg::Message;
+
+/// Blocking byte source for one direction of a connection. `Ok(0)` means
+/// a clean EOF; transport failures map to [`WireError::Io`].
+pub trait WireRead: Send {
+    fn read_some(&mut self, buf: &mut [u8]) -> Result<usize, WireError>;
+}
+
+/// Blocking byte sink for one direction of a connection.
+pub trait WireWrite: Send {
+    fn write_all_bytes(&mut self, buf: &[u8]) -> Result<(), WireError>;
+    fn flush_bytes(&mut self) -> Result<(), WireError>;
+}
+
+/// A full-duplex connection that can be split into its two directions so
+/// a reader thread and a writer thread can own them independently.
+pub trait Transport: Send {
+    fn split(self: Box<Self>) -> (Box<dyn WireRead>, Box<dyn WireWrite>);
+}
+
+// ---------------------------------------------------------------------------
+// Loopback: two in-memory pipes + a kill switch.
+// ---------------------------------------------------------------------------
+
+struct PipeState {
+    buf: VecDeque<u8>,
+    closed: bool,
+}
+
+/// One direction of the loopback: a bounded-by-nothing byte queue with
+/// blocking reads. Closing (writer drop) wakes readers for EOF.
+struct Pipe {
+    state: Mutex<PipeState>,
+    cv: Condvar,
+}
+
+impl Pipe {
+    fn new() -> Arc<Self> {
+        Arc::new(Self {
+            state: Mutex::new(PipeState { buf: VecDeque::new(), closed: false }),
+            cv: Condvar::new(),
+        })
+    }
+
+    fn close(&self) {
+        let mut s = self.state.lock().unwrap_or_else(|p| p.into_inner());
+        s.closed = true;
+        self.cv.notify_all();
+    }
+}
+
+/// Shared failure injector for a loopback pair: once [`kill`](Self::kill)
+/// fires, every read and write on either end fails with
+/// [`WireError::Io`] — the in-process stand-in for a worker process
+/// dying with its sockets.
+#[derive(Clone)]
+pub struct KillSwitch {
+    dead: Arc<AtomicBool>,
+    pipes: [Arc<Pipe>; 2],
+}
+
+impl KillSwitch {
+    pub fn kill(&self) {
+        self.dead.store(true, Ordering::SeqCst);
+        for p in &self.pipes {
+            p.cv.notify_all();
+        }
+    }
+
+    pub fn is_dead(&self) -> bool {
+        self.dead.load(Ordering::SeqCst)
+    }
+}
+
+struct LoopbackRead {
+    pipe: Arc<Pipe>,
+    dead: Arc<AtomicBool>,
+}
+
+impl WireRead for LoopbackRead {
+    fn read_some(&mut self, buf: &mut [u8]) -> Result<usize, WireError> {
+        let mut s = self.pipe.state.lock().unwrap_or_else(|p| p.into_inner());
+        loop {
+            if self.dead.load(Ordering::SeqCst) {
+                return Err(WireError::Io("loopback killed".into()));
+            }
+            if !s.buf.is_empty() {
+                let n = buf.len().min(s.buf.len());
+                for slot in buf.iter_mut().take(n) {
+                    *slot = s.buf.pop_front().expect("len checked");
+                }
+                return Ok(n);
+            }
+            if s.closed {
+                return Ok(0);
+            }
+            s = self.pipe.cv.wait(s).unwrap_or_else(|p| p.into_inner());
+        }
+    }
+}
+
+struct LoopbackWrite {
+    pipe: Arc<Pipe>,
+    dead: Arc<AtomicBool>,
+    /// Bytes appended (and readers woken) per chunk — small values force
+    /// the peer's decoder through its partial-frame reassembly path.
+    chunk: usize,
+}
+
+impl WireWrite for LoopbackWrite {
+    fn write_all_bytes(&mut self, buf: &[u8]) -> Result<(), WireError> {
+        for piece in buf.chunks(self.chunk.max(1)) {
+            let mut s = self.pipe.state.lock().unwrap_or_else(|p| p.into_inner());
+            if self.dead.load(Ordering::SeqCst) {
+                return Err(WireError::Io("loopback killed".into()));
+            }
+            if s.closed {
+                return Err(WireError::Closed);
+            }
+            s.buf.extend(piece.iter().copied());
+            self.pipe.cv.notify_all();
+        }
+        Ok(())
+    }
+
+    fn flush_bytes(&mut self) -> Result<(), WireError> {
+        Ok(())
+    }
+}
+
+impl Drop for LoopbackWrite {
+    fn drop(&mut self) {
+        self.pipe.close();
+    }
+}
+
+/// One end of an in-memory duplex connection.
+pub struct LoopbackEnd {
+    read_from: Arc<Pipe>,
+    write_to: Arc<Pipe>,
+    dead: Arc<AtomicBool>,
+    chunk: usize,
+}
+
+impl Transport for LoopbackEnd {
+    fn split(self: Box<Self>) -> (Box<dyn WireRead>, Box<dyn WireWrite>) {
+        (
+            Box::new(LoopbackRead { pipe: self.read_from, dead: self.dead.clone() }),
+            Box::new(LoopbackWrite { pipe: self.write_to, dead: self.dead, chunk: self.chunk }),
+        )
+    }
+}
+
+/// An in-memory duplex pair (plus its kill switch) with writes splintered
+/// into `chunk`-byte pieces. `chunk = usize::MAX` writes whole buffers.
+pub fn loopback_pair_chunked(chunk: usize) -> (LoopbackEnd, LoopbackEnd, KillSwitch) {
+    let a_to_b = Pipe::new();
+    let b_to_a = Pipe::new();
+    let dead = Arc::new(AtomicBool::new(false));
+    let a = LoopbackEnd {
+        read_from: b_to_a.clone(),
+        write_to: a_to_b.clone(),
+        dead: dead.clone(),
+        chunk,
+    };
+    let b = LoopbackEnd {
+        read_from: a_to_b.clone(),
+        write_to: b_to_a.clone(),
+        dead: dead.clone(),
+        chunk,
+    };
+    (a, b, KillSwitch { dead, pipes: [a_to_b, b_to_a] })
+}
+
+/// An in-memory duplex pair with unsplintered writes.
+pub fn loopback_pair() -> (LoopbackEnd, LoopbackEnd, KillSwitch) {
+    loopback_pair_chunked(usize::MAX)
+}
+
+// ---------------------------------------------------------------------------
+// std::io adapter: TCP sockets, stdio, child-process pipes.
+// ---------------------------------------------------------------------------
+
+struct IoRead<R: Read + Send>(R);
+
+impl<R: Read + Send> WireRead for IoRead<R> {
+    fn read_some(&mut self, buf: &mut [u8]) -> Result<usize, WireError> {
+        loop {
+            match self.0.read(buf) {
+                Ok(n) => return Ok(n),
+                Err(e) if e.kind() == std::io::ErrorKind::Interrupted => continue,
+                Err(e) => return Err(WireError::Io(e.to_string())),
+            }
+        }
+    }
+}
+
+struct IoWrite<W: Write + Send>(W);
+
+impl<W: Write + Send> WireWrite for IoWrite<W> {
+    fn write_all_bytes(&mut self, buf: &[u8]) -> Result<(), WireError> {
+        self.0.write_all(buf).map_err(|e| WireError::Io(e.to_string()))
+    }
+
+    fn flush_bytes(&mut self) -> Result<(), WireError> {
+        self.0.flush().map_err(|e| WireError::Io(e.to_string()))
+    }
+}
+
+/// [`Transport`] over any `Read`/`Write` pair: a TCP stream and its
+/// clone, a child's stdout/stdin, or the process's own stdio.
+pub struct IoConn<R: Read + Send + 'static, W: Write + Send + 'static> {
+    r: R,
+    w: W,
+}
+
+impl<R: Read + Send + 'static, W: Write + Send + 'static> IoConn<R, W> {
+    pub fn new(r: R, w: W) -> Self {
+        Self { r, w }
+    }
+}
+
+impl<R: Read + Send + 'static, W: Write + Send + 'static> Transport for IoConn<R, W> {
+    fn split(self: Box<Self>) -> (Box<dyn WireRead>, Box<dyn WireWrite>) {
+        (Box::new(IoRead(self.r)), Box::new(IoWrite(self.w)))
+    }
+}
+
+/// A TCP stream as a [`Transport`] (the stream is cloned for the read
+/// half, as `std::net` requires for full duplex).
+pub fn tcp_transport(stream: TcpStream) -> std::io::Result<IoConn<TcpStream, TcpStream>> {
+    let read_half = stream.try_clone()?;
+    Ok(IoConn::new(read_half, stream))
+}
+
+/// The process's own stdio as a [`Transport`] — the worker side of an
+/// `ssctl worker --stdio` deployment. Anything the process logs must go
+/// to stderr; stdout is the protocol channel.
+pub fn stdio_transport() -> IoConn<std::io::Stdin, std::io::Stdout> {
+    IoConn::new(std::io::stdin(), std::io::stdout())
+}
+
+// ---------------------------------------------------------------------------
+// Framed endpoints: messages in/out of a transport half.
+// ---------------------------------------------------------------------------
+
+/// Writing half of a framed connection: owns the per-direction sequence
+/// counter, so every message sent through it is framed in order.
+pub struct FrameWriter {
+    w: Box<dyn WireWrite>,
+    next_seq: u64,
+}
+
+impl FrameWriter {
+    pub fn new(w: Box<dyn WireWrite>) -> Self {
+        Self { w, next_seq: 0 }
+    }
+
+    /// Frame, checksum and send one message; returns the wire size in
+    /// bytes (for `rpc_bytes_*` accounting).
+    pub fn send(&mut self, msg: &Message) -> Result<usize, WireError> {
+        let payload = msg.encode();
+        let wire = encode_frame(msg.tag(), self.next_seq, &payload);
+        self.w.write_all_bytes(&wire)?;
+        self.w.flush_bytes()?;
+        self.next_seq += 1;
+        Ok(wire.len())
+    }
+}
+
+/// Reading half of a framed connection: blocking
+/// [`recv`](Self::recv) drives the transport through the incremental
+/// [`FrameDecoder`] and decodes complete frames into [`Message`]s.
+pub struct FrameReader {
+    r: Box<dyn WireRead>,
+    dec: FrameDecoder,
+}
+
+impl FrameReader {
+    pub fn new(r: Box<dyn WireRead>) -> Self {
+        Self { r, dec: FrameDecoder::new() }
+    }
+
+    /// Next message and its wire size; `Ok(None)` on clean EOF. Corrupt,
+    /// reordered or truncated input returns the typed [`WireError`]
+    /// (and the underlying decoder stays poisoned — tear the
+    /// connection down).
+    pub fn recv(&mut self) -> Result<Option<(Message, usize)>, WireError> {
+        let mut scratch = [0u8; 16 * 1024];
+        loop {
+            if let Some(Frame { tag, payload, .. }) = self.dec.next_frame()? {
+                // len u32 + tag + seq + payload + fnv64
+                let wire_len = 4 + 9 + payload.len() + 8;
+                let msg = Message::decode(tag, &payload)?;
+                return Ok(Some((msg, wire_len)));
+            }
+            let n = self.r.read_some(&mut scratch)?;
+            if n == 0 {
+                self.dec.finish()?;
+                return Ok(None);
+            }
+            self.dec.push(&scratch[..n]);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn loopback_carries_framed_messages_both_ways() {
+        let (a, b, _kill) = loopback_pair_chunked(3);
+        let (ar, aw) = Box::new(a).split();
+        let (br, bw) = Box::new(b).split();
+        let (mut aw, mut bw) = (FrameWriter::new(aw), FrameWriter::new(bw));
+        let (mut ar, mut br) = (FrameReader::new(ar), FrameReader::new(br));
+
+        let ping = Message::HealthProbe { nonce: 77 };
+        aw.send(&ping).unwrap();
+        let t = std::thread::spawn(move || {
+            let (got, _) = br.recv().unwrap().unwrap();
+            assert_eq!(got, Message::HealthProbe { nonce: 77 });
+            bw.send(&Message::HealthSnap {
+                nonce: 77,
+                jobs_done: 1,
+                busy: 0,
+                metrics_json: "{}".into(),
+            })
+            .unwrap();
+        });
+        let (snap, _) = ar.recv().unwrap().unwrap();
+        assert!(matches!(snap, Message::HealthSnap { nonce: 77, .. }));
+        t.join().unwrap();
+        drop(aw);
+        // writer drop closes the pipe: the peer sees clean EOF
+        // (new reader for the now-closed a→b direction)
+    }
+
+    #[test]
+    fn writer_drop_is_clean_eof_for_the_peer() {
+        let (a, b, _kill) = loopback_pair();
+        let (_ar, aw) = Box::new(a).split();
+        let (br, _bw) = Box::new(b).split();
+        let mut aw = FrameWriter::new(aw);
+        aw.send(&Message::Shutdown).unwrap();
+        drop(aw);
+        let mut br = FrameReader::new(br);
+        assert!(matches!(br.recv().unwrap(), Some((Message::Shutdown, _))));
+        assert!(br.recv().unwrap().is_none(), "closed pipe is clean EOF");
+    }
+
+    #[test]
+    fn kill_switch_fails_both_directions_typed() {
+        let (a, b, kill) = loopback_pair();
+        let (_ar, aw) = Box::new(a).split();
+        let (br, _bw) = Box::new(b).split();
+        let mut aw = FrameWriter::new(aw);
+        let mut br = FrameReader::new(br);
+        // reader blocked on an empty pipe wakes with Io when killed
+        let t = std::thread::spawn(move || br.recv());
+        std::thread::sleep(std::time::Duration::from_millis(20));
+        kill.kill();
+        assert!(matches!(t.join().unwrap(), Err(WireError::Io(_))));
+        assert!(matches!(aw.send(&Message::Shutdown), Err(WireError::Io(_))));
+    }
+}

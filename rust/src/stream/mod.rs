@@ -54,7 +54,9 @@ pub use session::{
     CheckpointInfo, RecoveryReport, SnapshotCore, SnapshotMode, StreamAppend, StreamConfig,
     StreamSession, StreamStats, StreamSummary,
 };
-pub use wal::{DurabilityConfig, DurableStore, FaultStore, FileStore, MemStore, WalError};
+pub use wal::{
+    DurabilityConfig, DurableStore, FaultStore, FileStore, FlushPolicy, MemStore, WalError,
+};
 
 /// Former name of the unified [`ObjectiveSpec`] — kept one release so
 /// existing call sites migrate mechanically (`StreamObjective::Features`

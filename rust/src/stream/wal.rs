@@ -697,6 +697,25 @@ pub(crate) fn load(store: &mut dyn DurableStore) -> Result<LoadedLog, WalError> 
 // Durability: the session-side write path
 // ---------------------------------------------------------------------------
 
+/// When WAL records are flushed (fsync'd) to the store — the
+/// group-commit knob. Records are always *appended* immediately, in
+/// order; the policy governs only how many appends share one flush.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum FlushPolicy {
+    /// Flush after every record: zero data-loss window on a machine
+    /// crash, one fsync per record. The default, and what the
+    /// crash-exactness tests assume.
+    #[default]
+    EveryRecord,
+    /// Group commit: flush once per `N` records (`0` behaves as `1`).
+    /// A *process* crash loses nothing — the records were written, the
+    /// OS page cache survives the process — but a *machine* crash can
+    /// lose up to `N − 1` unflushed records. Recovery semantics are
+    /// unchanged either way: the WAL parser stops at the first torn or
+    /// missing record, exactly as with a torn single flush.
+    EveryN(u32),
+}
+
 /// Tuning for a durable session.
 #[derive(Debug, Clone, Copy)]
 pub struct DurabilityConfig {
@@ -705,12 +724,16 @@ pub struct DurabilityConfig {
     /// (explicit `checkpoint_now` / `submit_checkpoint` only). The
     /// replayed-on-recovery WAL tail is bounded by this interval.
     pub checkpoint_interval: u64,
+    /// Group-commit flush policy (see [`FlushPolicy`]); priced in
+    /// `perf_durability`'s overhead column.
+    pub flush_policy: FlushPolicy,
 }
 
 impl Default for DurabilityConfig {
     fn default() -> Self {
         Self {
             checkpoint_interval: 64,
+            flush_policy: FlushPolicy::EveryRecord,
         }
     }
 }
@@ -718,6 +741,11 @@ impl Default for DurabilityConfig {
 impl DurabilityConfig {
     pub fn with_checkpoint_interval(mut self, every: u64) -> Self {
         self.checkpoint_interval = every;
+        self
+    }
+
+    pub fn with_flush_policy(mut self, policy: FlushPolicy) -> Self {
+        self.flush_policy = policy;
         self
     }
 }
@@ -731,6 +759,8 @@ pub(crate) struct Durability {
     cfg: DurabilityConfig,
     next_seq: u64,
     since_checkpoint: u64,
+    /// Records appended since the last flush (group commit accounting).
+    unflushed: u64,
     quarantined: Option<String>,
 }
 
@@ -741,6 +771,7 @@ impl Durability {
             cfg,
             next_seq: 0,
             since_checkpoint: 0,
+            unflushed: 0,
             quarantined: None,
         }
     }
@@ -758,6 +789,7 @@ impl Durability {
             cfg,
             next_seq,
             since_checkpoint,
+            unflushed: 0,
             quarantined: None,
         }
     }
@@ -779,9 +811,17 @@ impl Durability {
     fn log(&mut self, kind: u8, payload: &[u8]) -> Result<(), WalError> {
         let framed = frame(kind, self.next_seq, payload);
         self.store.append(WAL, &framed)?;
-        self.store.flush(WAL)?;
         self.next_seq += 1;
         self.since_checkpoint += 1;
+        self.unflushed += 1;
+        let due = match self.cfg.flush_policy {
+            FlushPolicy::EveryRecord => true,
+            FlushPolicy::EveryN(n) => self.unflushed >= n.max(1) as u64,
+        };
+        if due {
+            self.store.flush(WAL)?;
+            self.unflushed = 0;
+        }
         Ok(())
     }
 
@@ -808,9 +848,15 @@ impl Durability {
         self.log(KIND_COMPACT, &payload)
     }
 
-    /// Log a clean close.
+    /// Log a clean close. Force-flushes regardless of policy: a close
+    /// record exists to make the shutdown durable.
     pub(crate) fn log_close(&mut self) -> Result<(), WalError> {
-        self.log(KIND_CLOSE, &[])
+        self.log(KIND_CLOSE, &[])?;
+        if self.unflushed > 0 {
+            self.store.flush(WAL)?;
+            self.unflushed = 0;
+        }
+        Ok(())
     }
 
     /// True when the auto-checkpoint interval has elapsed.
@@ -830,6 +876,8 @@ impl Durability {
         self.store.truncate(WAL, 0)?;
         self.store.flush(WAL)?;
         self.since_checkpoint = 0;
+        // the WAL was just truncated — nothing unflushed remains
+        self.unflushed = 0;
         Ok(bytes)
     }
 
@@ -1051,5 +1099,66 @@ mod tests {
             assert_eq!(loaded.records[0].seq, 1);
         }
         std::fs::remove_dir_all(&dir).unwrap();
+    }
+
+    /// Pass-through store that counts `flush` calls on the WAL blob.
+    struct FlushCounter {
+        inner: MemStore,
+        flushes: Arc<AtomicU64>,
+    }
+
+    impl DurableStore for FlushCounter {
+        fn read_all(&mut self, name: &str) -> Result<Option<Vec<u8>>, WalError> {
+            self.inner.read_all(name)
+        }
+        fn append(&mut self, name: &str, bytes: &[u8]) -> Result<(), WalError> {
+            self.inner.append(name, bytes)
+        }
+        fn write_atomic(&mut self, name: &str, bytes: &[u8]) -> Result<(), WalError> {
+            self.inner.write_atomic(name, bytes)
+        }
+        fn truncate(&mut self, name: &str, len: u64) -> Result<(), WalError> {
+            self.inner.truncate(name, len)
+        }
+        fn flush(&mut self, name: &str) -> Result<(), WalError> {
+            if name == WAL {
+                self.flushes.fetch_add(1, Ordering::SeqCst);
+            }
+            self.inner.flush(name)
+        }
+    }
+
+    #[test]
+    fn group_commit_batches_flushes_and_close_forces_one() {
+        let flushes = Arc::new(AtomicU64::new(0));
+        let store = FlushCounter { inner: mem(), flushes: Arc::clone(&flushes) };
+        let cfg = DurabilityConfig::default()
+            .with_checkpoint_interval(0)
+            .with_flush_policy(FlushPolicy::EveryN(4));
+        let mut d = Durability::new(Box::new(store), cfg);
+        for i in 0..10 {
+            d.log_append(&[i as f32]).unwrap();
+        }
+        // 10 appends at N=4 → flushes after records 4 and 8 only
+        assert_eq!(flushes.load(Ordering::SeqCst), 2);
+        // close flushes the 2-record remainder (close record included)
+        d.log_close().unwrap();
+        assert_eq!(flushes.load(Ordering::SeqCst), 3);
+        // every record is on the store regardless of flush cadence
+        let mut store = d.into_store();
+        let loaded = load(&mut store).unwrap();
+        assert_eq!(loaded.records.len(), 11);
+    }
+
+    #[test]
+    fn every_record_policy_flushes_each_append() {
+        let flushes = Arc::new(AtomicU64::new(0));
+        let store = FlushCounter { inner: mem(), flushes: Arc::clone(&flushes) };
+        let cfg = DurabilityConfig::default().with_checkpoint_interval(0);
+        let mut d = Durability::new(Box::new(store), cfg);
+        for i in 0..5 {
+            d.log_append(&[i as f32]).unwrap();
+        }
+        assert_eq!(flushes.load(Ordering::SeqCst), 5);
     }
 }

@@ -24,6 +24,10 @@ pub fn kind_name(kind: EventKind) -> &'static str {
         EventKind::Checkpoint => "checkpoint",
         EventKind::Window => "window",
         EventKind::Quarantine => "quarantine",
+        EventKind::RpcSend => "rpc_send",
+        EventKind::RpcRecv => "rpc_recv",
+        EventKind::ShardPrune => "shard_prune",
+        EventKind::Merge => "merge",
     }
 }
 
@@ -39,6 +43,10 @@ pub fn field_names(kind: EventKind) -> [&'static str; 4] {
         EventKind::Checkpoint => ["wal_seq", "live", "bytes", "_d"],
         EventKind::Window => ["live_before", "retained", "evicted", "ss_rounds"],
         EventKind::Quarantine => ["_a", "_b", "_c", "_d"],
+        EventKind::RpcSend => ["tag", "bytes", "job", "shard"],
+        EventKind::RpcRecv => ["tag", "bytes", "job", "shard"],
+        EventKind::ShardPrune => ["shard", "items_in", "kept", "ss_rounds"],
+        EventKind::Merge => ["union", "final_kept", "k", "ss_rounds"],
     }
 }
 
@@ -236,6 +244,10 @@ mod tests {
             EventKind::Checkpoint,
             EventKind::Window,
             EventKind::Quarantine,
+            EventKind::RpcSend,
+            EventKind::RpcRecv,
+            EventKind::ShardPrune,
+            EventKind::Merge,
         ] {
             assert!(!kind_name(kind).is_empty());
             assert_eq!(field_names(kind).len(), 4);

@@ -81,6 +81,10 @@ use std::time::Instant;
 /// | `Checkpoint` | covered WAL seq | live elements | blob bytes | 0 |
 /// | `Window` | live before | retained after | evicted | SS rounds |
 /// | `Quarantine` | 0 | 0 | 0 | 0 (instantaneous marker) |
+/// | `RpcSend` | frame tag | frame bytes | job id | shard |
+/// | `RpcRecv` | frame tag | frame bytes | job id | shard |
+/// | `ShardPrune` | shard | items in | kept | SS rounds |
+/// | `Merge` | union size | final kept | budget k | merge SS rounds |
 ///
 /// `SsRound.b / SsRound.a` is the observed per-round keep fraction; the
 /// theory value is `1/√c` (√2/4 ≈ 0.35355 at the default c = 8) — the
@@ -97,6 +101,14 @@ pub enum EventKind {
     Checkpoint = 5,
     Window = 6,
     Quarantine = 7,
+    /// One framed message written to a cluster peer (coordinator → worker).
+    RpcSend = 8,
+    /// One framed message read from a cluster peer (worker → coordinator).
+    RpcRecv = 9,
+    /// One worker-local shard SS pass, as observed by the coordinator.
+    ShardPrune = 10,
+    /// The coordinator's final union → SS → maximizer merge pass.
+    Merge = 11,
 }
 
 /// One recorded span: fixed-size POD, no heap references — what makes a

@@ -1,0 +1,337 @@
+//! End-to-end cluster acceptance (ISSUE 10): the coordinator fanning SS
+//! out over N loopback workers returns summaries **bit-identical** across
+//! worker counts under fixed seeds, survives worker death mid-run via
+//! reshard + bounded retry, and every wire decode failure surfaces as a
+//! typed [`ServiceError`] — never a panic.
+//!
+//! The invariance hinges on logical shards: `ClusterConfig::shards` fixes
+//! the partition (seeded permutation) and the per-shard SS seeds, and the
+//! survivor union is order-normalized, so *which worker* ran a shard —
+//! first try or after a reshard — cannot show up in the result.
+
+use std::sync::atomic::Ordering;
+use std::thread::JoinHandle;
+use std::time::Duration;
+
+use submodular_ss::algorithms::SsParams;
+use submodular_ss::cluster::{
+    ClusterConfig, ClusterCoordinator, ClusterResponse, WorkerConfig, WorkerRuntime,
+};
+use submodular_ss::coordinator::{JobOptions, ServiceError};
+use submodular_ss::data::{CorpusParams, NewsGenerator};
+use submodular_ss::net::{
+    encode_frame, loopback_pair, tag, FrameDecoder, KillSwitch, Message, Transport, WireError,
+    WireRead, WireWrite, PROTO_VERSION,
+};
+use submodular_ss::submodular::{BuildStrategy, Concave, ObjectiveSpec};
+use submodular_ss::util::vecmath::FeatureMatrix;
+
+fn corpus(n: usize) -> (FeatureMatrix, usize) {
+    let generator = NewsGenerator::new(CorpusParams::default(), 5);
+    let day = generator.day(n, 0, 5);
+    (day.feats, day.k.min(12))
+}
+
+struct Cluster {
+    coordinator: ClusterCoordinator,
+    threads: Vec<JoinHandle<Result<submodular_ss::cluster::WorkerReport, WireError>>>,
+    kills: Vec<KillSwitch>,
+}
+
+fn spawn_cluster(workers: usize, cfg: ClusterConfig) -> Cluster {
+    let mut transports: Vec<Box<dyn Transport>> = Vec::new();
+    let mut threads = Vec::new();
+    let mut kills = Vec::new();
+    for w in 0..workers {
+        let (coord_end, worker_end, kill) = loopback_pair();
+        transports.push(Box::new(coord_end));
+        kills.push(kill);
+        threads.push(std::thread::spawn(move || {
+            WorkerRuntime::new(WorkerConfig { worker_id: w as u64, ..WorkerConfig::default() })
+                .serve(Box::new(worker_end))
+        }));
+    }
+    let coordinator = ClusterCoordinator::connect(transports, cfg).expect("handshake");
+    Cluster { coordinator, threads, kills }
+}
+
+impl Cluster {
+    /// Shut down and join; killed workers are allowed to report a wire
+    /// error, survivors must have seen the explicit `Shutdown`.
+    fn finish(self, killed: &[usize]) {
+        drop(self.coordinator);
+        for (i, h) in self.threads.into_iter().enumerate() {
+            let out = h.join().expect("worker thread");
+            if killed.contains(&i) {
+                assert!(out.is_err(), "killed worker {i} should report a transport error");
+            } else {
+                let report = out.expect("surviving worker serve");
+                assert!(report.saw_shutdown, "surviving worker {i} ends via explicit shutdown");
+            }
+        }
+    }
+}
+
+fn run(
+    workers: usize,
+    cfg: ClusterConfig,
+    spec: ObjectiveSpec,
+    rows: &FeatureMatrix,
+    k: usize,
+    params: &SsParams,
+) -> ClusterResponse {
+    let cluster = spawn_cluster(workers, cfg);
+    let resp = cluster.coordinator.summarize(spec, rows, k, params).expect("cluster summarize");
+    cluster.finish(&[]);
+    resp
+}
+
+#[test]
+fn summaries_are_bit_identical_across_worker_counts() {
+    let (rows, k) = corpus(500);
+    let params = SsParams::default().with_seed(7);
+    let specs = [
+        ObjectiveSpec::Features(Concave::Sqrt),
+        ObjectiveSpec::FacilityLocation,
+        ObjectiveSpec::FacilityLocationSparse {
+            t: 8,
+            crossover: 64,
+            build: BuildStrategy::Auto,
+        },
+    ];
+    for spec in specs {
+        for shards in [1u32, 5, 8] {
+            let cfg = ClusterConfig { shards, seed: 11, ..ClusterConfig::default() };
+            let reference = run(1, cfg.clone(), spec, &rows, k, &params);
+            for workers in [2usize, 4] {
+                let got = run(workers, cfg.clone(), spec, &rows, k, &params);
+                assert_eq!(
+                    got.summary, reference.summary,
+                    "{spec:?} shards={shards} workers={workers}: summary diverged"
+                );
+                assert_eq!(
+                    got.value.to_bits(),
+                    reference.value.to_bits(),
+                    "{spec:?} shards={shards} workers={workers}: value diverged"
+                );
+                assert_eq!(got.union, reference.union, "survivor union diverged");
+                assert_eq!(got.shard_rounds, reference.shard_rounds, "shard rounds diverged");
+            }
+        }
+    }
+}
+
+/// A worker that handshakes honestly, accepts its first `ShardAssign`,
+/// then dies without answering — the deterministic stand-in for a worker
+/// process crashing with work in flight.
+fn accept_one_then_die(end: submodular_ss::net::LoopbackEnd) -> JoinHandle<()> {
+    std::thread::spawn(move || {
+        let (mut r, mut w) = (Box::new(end) as Box<dyn Transport>).split();
+        let mut dec = FrameDecoder::new();
+        let mut buf = [0u8; 1 << 16];
+        let mut next = || loop {
+            if let Some(f) = dec.next_frame().unwrap() {
+                break f;
+            }
+            let got = r.read_some(&mut buf).unwrap();
+            assert!(got > 0, "peer hung up early");
+            dec.push(&buf[..got]);
+        };
+        let hello = next();
+        assert_eq!(hello.tag, tag::HELLO);
+        let ack = Message::HelloAck { version: PROTO_VERSION, peer_id: 99 };
+        w.write_all_bytes(&encode_frame(tag::HELLO_ACK, 0, &ack.encode())).unwrap();
+        w.flush_bytes().unwrap();
+        loop {
+            let f = next();
+            if f.tag == tag::SHARD_ASSIGN {
+                Message::decode(f.tag, &f.payload).expect("assignment decodes");
+                return; // drop both halves: connection closes, core never comes
+            }
+        }
+    })
+}
+
+#[test]
+fn worker_death_reshards_onto_survivors_without_changing_the_answer() {
+    let (rows, k) = corpus(400);
+    let params = SsParams::default().with_seed(3);
+    let spec = ObjectiveSpec::Features(Concave::Sqrt);
+    let cfg = ClusterConfig { shards: 6, seed: 2, max_retries: 4, ..ClusterConfig::default() };
+
+    let reference = run(1, cfg.clone(), spec, &rows, k, &params);
+
+    // worker 0 is real; worker 1 takes a shard to its grave. Round-robin
+    // dispatch guarantees it receives one, so the reshard path always runs.
+    let (coord0, worker0, _k0) = loopback_pair();
+    let (coord1, worker1, _k1) = loopback_pair();
+    let real = std::thread::spawn(move || {
+        WorkerRuntime::new(WorkerConfig { worker_id: 0, ..WorkerConfig::default() })
+            .serve(Box::new(worker0))
+    });
+    let doomed = accept_one_then_die(worker1);
+    let coordinator = ClusterCoordinator::connect(
+        vec![Box::new(coord0), Box::new(coord1)],
+        cfg,
+    )
+    .expect("handshake");
+
+    let got = coordinator.summarize(spec, &rows, k, &params).expect("summarize survives");
+    assert_eq!(got.summary, reference.summary, "reshard changed the summary");
+    assert_eq!(got.value.to_bits(), reference.value.to_bits(), "reshard changed the value");
+    assert!(got.retries >= 1, "the doomed worker's shard must have been retried");
+
+    let c = &coordinator.metrics().counters;
+    assert!(c.shard_retries.load(Ordering::Relaxed) >= 1, "retry must be metered");
+    assert!(c.shards_dispatched.load(Ordering::Relaxed) >= 7, "6 shards + >=1 re-dispatch");
+    let deaths: u64 = std::iter::once(c.worker_deaths.load(Ordering::Relaxed))
+        .chain(
+            coordinator
+                .worker_scopes()
+                .iter()
+                .map(|s| s.counters.worker_deaths.load(Ordering::Relaxed)),
+        )
+        .sum();
+    assert_eq!(deaths, 1, "one death, counted exactly once across scopes");
+    assert_eq!(coordinator.live_workers(), 1);
+
+    drop(coordinator);
+    doomed.join().unwrap();
+    let report = real.join().unwrap().expect("surviving worker serve");
+    assert!(report.saw_shutdown);
+}
+
+#[test]
+fn mid_run_worker_kill_recovers_deterministically() {
+    let (rows, k) = corpus(600);
+    let params = SsParams::default().with_seed(13);
+    let spec = ObjectiveSpec::Features(Concave::Sqrt);
+    let cfg = ClusterConfig {
+        shards: 8,
+        seed: 4,
+        max_retries: 6,
+        shard_timeout: Some(Duration::from_secs(2)),
+        ..ClusterConfig::default()
+    };
+
+    let reference = run(1, cfg.clone(), spec, &rows, k, &params);
+
+    let cluster = spawn_cluster(4, cfg);
+    let kill = cluster.kills[0].clone();
+    let killer = std::thread::spawn(move || {
+        // land somewhere inside the fan-out (or harmlessly after it)
+        std::thread::sleep(Duration::from_millis(15));
+        kill.kill();
+    });
+    let got = cluster.coordinator.summarize(spec, &rows, k, &params).expect("summarize survives");
+    killer.join().unwrap();
+    assert_eq!(got.summary, reference.summary, "mid-run kill changed the summary");
+    assert_eq!(got.value.to_bits(), reference.value.to_bits(), "mid-run kill changed the value");
+    cluster.finish(&[0]);
+}
+
+#[test]
+fn corrupt_worker_stream_is_a_typed_error_never_a_panic() {
+    // an "evil worker": completes the handshake honestly, then spews
+    // garbage. The coordinator must declare the connection dead with a
+    // typed decode error and fail the request with a typed ServiceError.
+    let (coord_end, worker_end, _kill) = loopback_pair();
+    let evil = std::thread::spawn(move || {
+        let (mut r, mut w) = (Box::new(worker_end) as Box<dyn Transport>).split();
+        let mut dec = FrameDecoder::new();
+        let mut buf = [0u8; 4096];
+        let hello = loop {
+            if let Some(f) = dec.next_frame().unwrap() {
+                break f;
+            }
+            let got = r.read_some(&mut buf).unwrap();
+            assert!(got > 0, "peer hung up mid-handshake");
+            dec.push(&buf[..got]);
+        };
+        let msg = Message::decode(hello.tag, &hello.payload).unwrap();
+        assert!(matches!(msg, Message::Hello { .. }));
+        let ack = Message::HelloAck { version: PROTO_VERSION, peer_id: 666 };
+        w.write_all_bytes(&encode_frame(tag::HELLO_ACK, 0, &ack.encode())).unwrap();
+        w.write_all_bytes(&[0xAB; 64]).unwrap(); // not a frame
+        w.flush_bytes().unwrap();
+        // keep the connection open so the coordinator's verdict comes
+        // from the corrupt bytes, not an EOF
+        std::thread::sleep(Duration::from_millis(300));
+    });
+
+    let (rows, k) = corpus(200);
+    let cfg = ClusterConfig { shards: 2, seed: 1, max_retries: 1, ..ClusterConfig::default() };
+    let coordinator = ClusterCoordinator::connect(vec![Box::new(coord_end)], cfg)
+        .expect("handshake itself is clean");
+    let err = coordinator
+        .summarize(
+            ObjectiveSpec::Features(Concave::Sqrt),
+            &rows,
+            k,
+            &SsParams::default(),
+        )
+        .expect_err("a corrupt-only cluster cannot serve");
+    assert!(
+        matches!(err, ServiceError::Rejected { .. } | ServiceError::ServiceDown),
+        "unexpected error class: {err:?}"
+    );
+    assert!(
+        coordinator.worker_scopes()[0]
+            .counters
+            .wire_decode_errors
+            .load(Ordering::Relaxed)
+            >= 1,
+        "the decode failure must be metered on the connection's scope"
+    );
+    assert_eq!(coordinator.live_workers(), 0);
+    drop(coordinator);
+    evil.join().unwrap();
+}
+
+#[test]
+fn expired_deadline_propagates_as_deadline_exceeded() {
+    let (rows, k) = corpus(200);
+    let cluster = spawn_cluster(2, ClusterConfig { shards: 4, ..ClusterConfig::default() });
+    let err = cluster
+        .coordinator
+        .summarize_with(
+            ObjectiveSpec::Features(Concave::Sqrt),
+            &rows,
+            k,
+            &SsParams::default(),
+            JobOptions::default().with_timeout(Duration::ZERO),
+        )
+        .expect_err("an already-expired deadline cannot succeed");
+    assert!(matches!(err, ServiceError::DeadlineExceeded), "got {err:?}");
+    // the cluster is still healthy for the next request
+    let ok = cluster
+        .coordinator
+        .summarize(ObjectiveSpec::Features(Concave::Sqrt), &rows, k, &SsParams::default())
+        .expect("cluster still serves after a shed request");
+    assert!(!ok.summary.is_empty());
+    cluster.finish(&[]);
+}
+
+#[test]
+fn health_probes_report_per_worker_progress() {
+    let (rows, k) = corpus(200);
+    let cluster = spawn_cluster(2, ClusterConfig { shards: 4, ..ClusterConfig::default() });
+    let before = cluster.coordinator.health(Duration::from_secs(5));
+    assert_eq!(before.len(), 2);
+    for h in before.iter() {
+        let h = h.as_ref().expect("live worker answers probes");
+        assert_eq!(h.jobs_done, 0);
+        assert_eq!(h.busy, 0);
+    }
+    cluster
+        .coordinator
+        .summarize(ObjectiveSpec::Features(Concave::Sqrt), &rows, k, &SsParams::default())
+        .expect("summarize");
+    let after = cluster.coordinator.health(Duration::from_secs(5));
+    let done: u64 = after.iter().flatten().map(|h| h.jobs_done).sum();
+    assert!(done >= 4, "4 logical shards completed somewhere, saw {done}");
+    for h in after.iter().flatten() {
+        assert!(h.metrics_json.contains("\"scope\""), "snapshot carries the metrics scope");
+    }
+    cluster.finish(&[]);
+}

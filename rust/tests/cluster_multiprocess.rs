@@ -1,0 +1,81 @@
+//! Multi-process cluster leg: the coordinator drives real `ssctl
+//! worker --stdio` child processes over their pipes, and the answer is
+//! bit-identical to an in-process loopback cluster. This is the
+//! closest the test suite gets to production topology — separate
+//! address spaces, the protocol on real OS pipes, process exit as the
+//! failure domain.
+
+use std::process::{Child, Command, Stdio};
+use std::thread;
+
+use submodular_ss::algorithms::SsParams;
+use submodular_ss::cluster::{
+    ClusterConfig, ClusterCoordinator, WorkerConfig, WorkerRuntime,
+};
+use submodular_ss::data::{CorpusParams, NewsGenerator};
+use submodular_ss::net::{loopback_pair, IoConn, Transport};
+use submodular_ss::submodular::ObjectiveSpec;
+use submodular_ss::util::vecmath::FeatureMatrix;
+
+fn corpus(n: usize) -> (FeatureMatrix, usize) {
+    let g = NewsGenerator::new(CorpusParams::default(), 5);
+    let day = g.day(n, 0, 5);
+    (day.feats, day.k.min(12))
+}
+
+fn cluster_cfg() -> ClusterConfig {
+    ClusterConfig { shards: 6, seed: 11, ..Default::default() }
+}
+
+/// Spawn one worker child serving its stdio; its pipes become the
+/// coordinator-side transport (we read its stdout, write its stdin).
+fn spawn_worker_process(id: u64) -> (Child, Box<dyn Transport>) {
+    let mut child = Command::new(env!("CARGO_BIN_EXE_ssctl"))
+        .args(["worker", "--id", &id.to_string(), "--workers", "2", "--threads", "2"])
+        .stdin(Stdio::piped())
+        .stdout(Stdio::piped())
+        .stderr(Stdio::inherit())
+        .spawn()
+        .expect("spawn ssctl worker");
+    let stdin = child.stdin.take().expect("child stdin");
+    let stdout = child.stdout.take().expect("child stdout");
+    (child, Box::new(IoConn::new(stdout, stdin)))
+}
+
+#[test]
+fn child_process_workers_match_the_in_process_answer() {
+    let (rows, k) = corpus(400);
+    let spec = ObjectiveSpec::FacilityLocation;
+    let params = SsParams::default().with_seed(7);
+
+    // In-process loopback reference (single worker).
+    let reference = {
+        let (coord_end, worker_end, _kill) = loopback_pair();
+        let w = thread::spawn(move || {
+            WorkerRuntime::new(WorkerConfig::default()).serve(Box::new(worker_end))
+        });
+        let coordinator =
+            ClusterCoordinator::connect(vec![Box::new(coord_end)], cluster_cfg()).unwrap();
+        let resp = coordinator.summarize(spec.clone(), &rows, k, &params).unwrap();
+        drop(coordinator);
+        assert!(w.join().unwrap().unwrap().saw_shutdown);
+        resp
+    };
+
+    // Two real child processes, same logical shards.
+    let (children, transports): (Vec<Child>, Vec<Box<dyn Transport>>) =
+        (0..2u64).map(spawn_worker_process).unzip();
+    let coordinator = ClusterCoordinator::connect(transports, cluster_cfg()).unwrap();
+    let got = coordinator.summarize(spec, &rows, k, &params).unwrap();
+
+    assert_eq!(got.summary, reference.summary, "summary differs across process boundary");
+    assert_eq!(got.value.to_bits(), reference.value.to_bits(), "value not bit-identical");
+    assert_eq!(got.union, reference.union, "survivor union differs");
+
+    // Shutdown flows out over the pipes; each child must exit cleanly.
+    drop(coordinator);
+    for mut child in children {
+        let status = child.wait().expect("wait on worker child");
+        assert!(status.success(), "worker exited with {status:?}");
+    }
+}
